@@ -1,0 +1,71 @@
+//! Edge-device scenario (paper Table 2): fine-tune on a memory-capped
+//! "consumer GPU" through the coordinator's server–client flow — the server
+//! preprocesses and distributes the quantized bundle; the client runs a
+//! wall-clock-budgeted LoRA fine-tune at batch 1 with gradient
+//! accumulation, as on the RTX 2080 Super.
+//!
+//!     cargo run --release --example edge_device -- [budget-secs]
+
+use quaff::coordinator::{checkpoint, PreprocessServer, ServerConfig};
+use quaff::data::{Sample, SynthTask};
+use quaff::methods::MethodKind;
+use quaff::metrics::MemoryAccountant;
+use quaff::peft::PeftKind;
+use quaff::train::{eval as teval, run_budgeted, Trainer};
+use quaff::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let budget: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20.0);
+
+    // ---- server side -----------------------------------------------------
+    let mut cfg = ServerConfig::default();
+    cfg.preset = "phi-mini".to_string();
+    let server = PreprocessServer::new(cfg);
+    eprintln!("[server] calibrating + quantizing (Quaff bundle) …");
+    let mut bundle = server.prepare(MethodKind::Quaff, PeftKind::Lora);
+    println!(
+        "[server] bundle ready: payload {} (outlier overhead {:.2}%)",
+        quaff::util::fmt_bytes(bundle.payload_bytes),
+        bundle.outlier_overhead * 100.0
+    );
+
+    // ---- client side -----------------------------------------------------
+    let mem = MemoryAccountant::account(&mut bundle.model, MethodKind::Quaff, 1, 160);
+    println!(
+        "[client] working set: {} (frozen {} + activations {} + optimizer {})",
+        quaff::util::fmt_bytes(mem.total()),
+        quaff::util::fmt_bytes(mem.frozen),
+        quaff::util::fmt_bytes(mem.activations),
+        quaff::util::fmt_bytes(mem.optimizer),
+    );
+    let task = SynthTask::by_name("oig-chip2").unwrap();
+    let mut eval_rng = Rng::new(5);
+    let test: Vec<Sample> = (0..6).map(|_| task.sample(&mut eval_rng)).collect();
+    let mut trainer = Trainer::new(2e-3, 160, 4); // batch 1 × grad-accum 4
+    let mut gen_rng = Rng::new(6);
+    println!("[client] fine-tuning for {budget:.0}s (batch 1, grad-accum 4) …");
+    let curve = run_budgeted(
+        &mut bundle.model,
+        &mut trainer,
+        || (0..4).map(|_| vec![task.sample(&mut gen_rng)]).collect(),
+        budget,
+        5,
+        |m| teval::eval_rouge(m, &test, 32),
+    );
+    println!("\n  elapsed   steps   ROUGE-L");
+    for p in &curve {
+        println!("  {:>6.1}s  {:>6}   {:.3}", p.seconds, p.steps, p.metric);
+    }
+    // persist only the adapters — the client never held full-precision W
+    let path = std::env::temp_dir().join("quaff_edge_adapters.ckpt");
+    let saved = checkpoint::save_adapters(&mut bundle.model, &path)?;
+    println!(
+        "\n[client] saved {} adapter params to {} — base weights stayed quantized",
+        saved,
+        path.display()
+    );
+    Ok(())
+}

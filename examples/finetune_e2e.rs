@@ -1,0 +1,75 @@
+//! End-to-end three-layer validation: the Rust coordinator drives the
+//! AOT-compiled JAX train step (which embeds the L1 Pallas Quaff kernel)
+//! through PJRT, fine-tuning LoRA adapters of the quantized transformer on
+//! the embedded real text corpus, and logs the loss curve.
+//!
+//! Prerequisite: `make artifacts` (python runs once, never again).
+//!
+//!     cargo run --release --example finetune_e2e -- [steps] [artifacts-dir]
+//!
+//! The loss curve is appended to EXPERIMENTS.md by the Makefile target
+//! `make e2e` (here it's just printed).
+
+use quaff::data::{corpus_samples, Tokenizer};
+use quaff::runtime::{Engine, TrainSession};
+use quaff::util::prng::Rng;
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let steps: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(200);
+    let dir = PathBuf::from(args.get(2).map(|s| s.as_str()).unwrap_or("artifacts"));
+
+    eprintln!("[e2e] loading + compiling artifacts from {} …", dir.display());
+    let t0 = std::time::Instant::now();
+    let engine = Engine::load(&dir)?;
+    eprintln!(
+        "[e2e] platform={} preset={} compiled in {:.1}s",
+        engine.platform(),
+        engine.manifest.preset,
+        t0.elapsed().as_secs_f64()
+    );
+    let m = engine.manifest.clone();
+    let mut session = TrainSession::new(&engine)?;
+
+    // real tiny corpus, chunked to the artifact's fixed (B, S)
+    let tok = Tokenizer::new();
+    let samples = corpus_samples(&tok, m.seq);
+    eprintln!(
+        "[e2e] corpus: {} chunks of {} tokens; training B={} for {} steps",
+        samples.len(),
+        m.seq,
+        m.batch,
+        steps
+    );
+    let mut rng = Rng::new(7);
+    let n = m.batch * m.seq;
+    let t_train = std::time::Instant::now();
+    for step in 0..steps {
+        let mut tokens = Vec::with_capacity(n);
+        for _ in 0..m.batch {
+            let s = &samples[rng.below(samples.len())];
+            tokens.extend(s.target.iter().map(|&t| t as i32));
+        }
+        let mask = vec![1.0f32; n];
+        let loss = session.step(&tokens, &mask)?;
+        if step < 5 || step % 10 == 0 || step == steps - 1 {
+            println!("step {step:>5}  loss {loss:.4}");
+        }
+    }
+    let secs = t_train.elapsed().as_secs_f64();
+    let first = session.losses.first().copied().unwrap_or(f64::NAN);
+    let last = session.losses.last().copied().unwrap_or(f64::NAN);
+    let min = session.losses.iter().copied().fold(f64::INFINITY, f64::min);
+    println!("\n[e2e] {} steps in {:.1}s ({:.3}s/step, {:.0} tok/s)", steps, secs, secs / steps as f64, steps as f64 * n as f64 / secs);
+    println!("[e2e] loss: first {first:.4} → last {last:.4} (min {min:.4})");
+    let max_scale = session
+        .scales()
+        .iter()
+        .flat_map(|hv| hv.as_f32().unwrap().iter().copied())
+        .fold(0.0f32, f32::max);
+    println!("[e2e] max momentum scale factor s_O = {max_scale:.2} (outlier suppression engaged)");
+    anyhow::ensure!(last < first, "loss did not decrease: {first} → {last}");
+    println!("[e2e] OK — all three layers compose: Rust coordinator → PJRT → JAX model → Pallas kernel");
+    Ok(())
+}

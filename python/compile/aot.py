@@ -1,0 +1,239 @@
+"""AOT lowering: JAX (L2 + L1) → HLO **text** artifacts for the Rust runtime.
+
+Run once by ``make artifacts``; Python never appears on the request path.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Emits into --out-dir (default ../artifacts):
+  train_step.hlo.txt   — one fused LoRA fine-tuning step (fwd+bwd+Adam+Eq.7)
+  eval_step.hlo.txt    — loss + greedy predictions
+  quaff_linear.hlo.txt — the standalone fused L1 kernel (micro-bench)
+  manifest.json        — flattened input/output specs the runtime marshals by
+  goldens.json         — seeded python-side loss trajectory for numeric
+                         cross-checking from Rust integration tests
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.quaff_linear import (
+    mxu_utilization_estimate,
+    quaff_linear,
+    vmem_bytes,
+)
+
+BATCH = {"small": 4, "e2e": 8}
+SEQ = {"small": 64, "e2e": 128}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default ELIDES big constants as
+    # `{...}`, which the HLO text parser silently reads back as ZEROS —
+    # the baked quantized weights would vanish. (Found the hard way; the
+    # zeroed model's uniform loss ln(vocab)=5.663 was the tell.)
+    return comp.as_hlo_text(True)
+
+
+def spec(name, arr):
+    return {"name": name, "dtype": str(arr.dtype), "shape": list(arr.shape)}
+
+
+def build(preset: str, seed: int, lr: float):
+    cfg = M.PRESETS[preset]
+    frozen = M.init_frozen(cfg, seed)
+    qweights, scales = M.calibrate_and_quantize(cfg, frozen, seed)
+    lora = M.init_lora(cfg, seed)
+    train_step, eval_step = M.make_steps(cfg, frozen, qweights, lr=lr)
+    lora_keys = sorted(lora)
+    scale_keys = sorted(scales)
+    n = len(lora_keys)
+
+    def train_flat(tokens, mask, t, *flat):
+        lo = dict(zip(lora_keys, flat[:n]))
+        m = dict(zip(lora_keys, flat[n : 2 * n]))
+        v = dict(zip(lora_keys, flat[2 * n : 3 * n]))
+        sc = dict(zip(scale_keys, flat[3 * n :]))
+        loss, nl, nm, nv, nt, ns = train_step(tokens, mask, lo, m, v, t, sc)
+        outs = [loss, nt]
+        outs += [nl[k] for k in lora_keys]
+        outs += [nm[k] for k in lora_keys]
+        outs += [nv[k] for k in lora_keys]
+        outs += [ns[k] for k in scale_keys]
+        return tuple(outs)
+
+    def eval_flat(tokens, mask, *flat):
+        lo = dict(zip(lora_keys, flat[:n]))
+        sc = dict(zip(scale_keys, flat[n:]))
+        loss, preds = eval_step(tokens, mask, lo, sc)
+        return loss, preds
+
+    return cfg, frozen, qweights, scales, lora, lora_keys, scale_keys, train_flat, eval_flat
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--preset", default="small", choices=sorted(M.PRESETS))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=2e-4)
+    ap.add_argument("--report-vmem", action="store_true")
+    args = ap.parse_args()
+    out = os.path.abspath(args.out_dir)
+    os.makedirs(out, exist_ok=True)
+
+    (cfg, _frozen, qweights, scales, lora, lora_keys, scale_keys, train_flat, eval_flat) = build(
+        args.preset, args.seed, args.lr
+    )
+    b, s = BATCH[args.preset], SEQ[args.preset]
+
+    tokens = jnp.zeros((b, s), jnp.int32)
+    mask = jnp.ones((b, s), jnp.float32)
+    t0 = jnp.zeros((), jnp.float32)
+    m0 = [jnp.zeros_like(lora[k]) for k in lora_keys]
+    v0 = [jnp.zeros_like(lora[k]) for k in lora_keys]
+    l0 = [lora[k] for k in lora_keys]
+    s0 = [scales[k] for k in scale_keys]
+    train_args = [tokens, mask, t0, *l0, *m0, *v0, *s0]
+    eval_args = [tokens, mask, *l0, *s0]
+
+    manifest = {
+        "preset": args.preset,
+        "config": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "batch": b,
+            "seq": s,
+            "gamma": M.GAMMA,
+            "lr": args.lr,
+            "lora_keys": lora_keys,
+            "scale_keys": scale_keys,
+        },
+        "artifacts": {},
+    }
+
+    # --- train step -------------------------------------------------------
+    lowered = jax.jit(train_flat).lower(*train_args)
+    path = os.path.join(out, "train_step.hlo.txt")
+    text = to_hlo_text(lowered)
+    open(path, "w").write(text)
+    names_in = (
+        ["tokens", "mask", "t"]
+        + [f"lora.{k}" for k in lora_keys]
+        + [f"m.{k}" for k in lora_keys]
+        + [f"v.{k}" for k in lora_keys]
+        + [f"scales.{k}" for k in scale_keys]
+    )
+    names_out = (
+        ["loss", "t"]
+        + [f"lora.{k}" for k in lora_keys]
+        + [f"m.{k}" for k in lora_keys]
+        + [f"v.{k}" for k in lora_keys]
+        + [f"scales.{k}" for k in scale_keys]
+    )
+    outs = jax.eval_shape(train_flat, *train_args)
+    manifest["artifacts"]["train_step"] = {
+        "path": "train_step.hlo.txt",
+        "inputs": [spec(nm, a) for nm, a in zip(names_in, train_args)],
+        "outputs": [spec(nm, o) for nm, o in zip(names_out, outs)],
+    }
+    print(f"wrote {path} ({len(text)} chars)")
+
+    # --- eval step ----------------------------------------------------------
+    lowered = jax.jit(eval_flat).lower(*eval_args)
+    path = os.path.join(out, "eval_step.hlo.txt")
+    text = to_hlo_text(lowered)
+    open(path, "w").write(text)
+    outs = jax.eval_shape(eval_flat, *eval_args)
+    manifest["artifacts"]["eval_step"] = {
+        "path": "eval_step.hlo.txt",
+        "inputs": [
+            spec(nm, a)
+            for nm, a in zip(
+                ["tokens", "mask"]
+                + [f"lora.{k}" for k in lora_keys]
+                + [f"scales.{k}" for k in scale_keys],
+                eval_args,
+            )
+        ],
+        "outputs": [spec("loss", outs[0]), spec("preds", outs[1])],
+    }
+    print(f"wrote {path} ({len(text)} chars)")
+
+    # --- standalone L1 kernel (micro-benchmark) ----------------------------
+    key0 = sorted(qweights)[0]
+    qw = qweights[key0]
+    cin, cout = qw["w_int"].shape
+    no = qw["o_idx"].shape[0]
+    tt = 128
+    xk = jnp.zeros((tt, cin), jnp.float32)
+    wh = jnp.zeros((no, cout), jnp.float32)
+
+    def kernel_flat(x_hat, w_hat):
+        return (quaff_linear(x_hat, qw["w_int"], qw["w_delta"], w_hat, qw["o_idx"]),)
+
+    lowered = jax.jit(kernel_flat).lower(xk, wh)
+    path = os.path.join(out, "quaff_linear.hlo.txt")
+    text = to_hlo_text(lowered)
+    open(path, "w").write(text)
+    manifest["artifacts"]["quaff_linear"] = {
+        "path": "quaff_linear.hlo.txt",
+        "inputs": [spec("x_hat", xk), spec("w_hat", wh)],
+        "outputs": [spec("y", jax.eval_shape(kernel_flat, xk, wh)[0])],
+        "layer": key0,
+    }
+    print(f"wrote {path} ({len(text)} chars)")
+
+    # --- goldens: seeded python-side trajectory for Rust cross-checks ------
+    rng = np.random.default_rng(42)
+    g_tokens = rng.integers(0, cfg.vocab, (b, s)).astype(np.int32)
+    g_mask = np.ones((b, s), np.float32)
+    jit_train = jax.jit(train_flat)
+    state = [jnp.asarray(g_tokens), jnp.asarray(g_mask), t0, *l0, *m0, *v0, *s0]
+    losses = []
+    for _ in range(3):
+        res = jit_train(*state)
+        losses.append(float(res[0]))
+        state = [jnp.asarray(g_tokens), jnp.asarray(g_mask), res[1], *res[2:]]
+    goldens = {
+        "tokens": g_tokens.tolist(),
+        "losses": losses,
+        "final_max_scale": float(max(np.max(np.asarray(x)) for x in res[-len(scale_keys):])),
+    }
+    json.dump(goldens, open(os.path.join(out, "goldens.json"), "w"))
+    print(f"goldens: losses={losses}")
+
+    json.dump(manifest, open(os.path.join(out, "manifest.json"), "w"), indent=1)
+    print(f"wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+    if args.report_vmem:
+        for bm in (32, 64, 128, 256):
+            for bn in (64, 128, 256):
+                vb = vmem_bytes(tt, cin, cout, no, bm, bn)
+                mx = mxu_utilization_estimate(tt, cin, cout, no, bm, bn)
+                print(
+                    f"block ({bm:3d},{bn:3d}): VMEM {vb['total']/1024:8.1f} KiB  "
+                    f"MXU util {mx:.3f}"
+                )
+
+
+if __name__ == "__main__":
+    main()

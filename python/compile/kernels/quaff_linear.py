@@ -1,0 +1,181 @@
+"""L1 Pallas kernel: Quaff's fused quantized linear (paper Eq. 9).
+
+Fuses, in one kernel:
+  1. per-token symmetric INT8 quantization of the (already targeted-scaled)
+     activations X̂,
+  2. the main INT8 matmul  X̂_int · W_int  (MXU int8 systolic mode on TPU:
+     ``dot_general`` with ``preferred_element_type=int32``),
+  3. per-output-channel quantization of the tiny outlier correction weights
+     ŵ = (s_O − 1)·W_O,
+  4. the outlier correction matmul  x̂_int · ŵ_int  where x̂_int is gathered
+     from X̂_int (inheriting Δ_X̂ with zero overhead — Eq. 9),
+  5. the dequantizing epilogue  Δ_X̂·(acc·Δ_W + acc_o·Δ_ŵ).
+
+HBM↔VMEM schedule (TPU adaptation, DESIGN.md §3): the grid is
+``(T/TM, C_out/TN)``; each step holds a (TM × C_in) activation tile, a
+(C_in × TN) int8 weight tile, the full (N_O × TN) outlier slice and the
+N_O-entry index list in VMEM. C_in is kept un-tiled because the per-token
+step size Δ_X̂ is a full-row reduction — re-deriving it per K-tile would
+change numerics; for the paper's layer sizes (c_in ≤ 11k) the int8 tiles
+fit VMEM comfortably (§Perf records the footprint).
+
+CPU execution uses ``interpret=True`` (Mosaic custom-calls cannot run on the
+CPU PJRT plugin); numerics are identical.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QMAX = 127.0
+
+
+def _quaff_kernel(x_ref, w_ref, wd_ref, wo_ref, oidx_ref, o_ref):
+    x = x_ref[...]  # (TM, CIN) f32, targeted-scaled X̂
+    w = w_ref[...]  # (CIN, TN) i8
+    wd = wd_ref[...]  # (TN,)   f32, Δ_W per output channel
+    wo = wo_ref[...]  # (NO, TN) f32, ŵ = (s_O − 1)·W_O
+    oidx = oidx_ref[...]  # (NO,)  i32, outlier channel indices
+
+    # 1. per-token quantization (VPU row reduction)
+    absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    d = absmax / QMAX
+    safe = jnp.where(d > 0.0, d, 1.0)
+    xq = jnp.clip(jnp.round(x / safe), -QMAX, QMAX).astype(jnp.int8)
+
+    # 2. main INT8 matmul, i32 accumulation (MXU int8 mode)
+    acc = jax.lax.dot_general(
+        xq, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+    # 3. quantize the tiny correction slice per output channel
+    dw = jnp.max(jnp.abs(wo), axis=0) / QMAX  # (TN,)
+    dw_safe = jnp.where(dw > 0.0, dw, 1.0)
+    wq = jnp.clip(jnp.round(wo / dw_safe[None, :]), -QMAX, QMAX).astype(jnp.int8)
+
+    # 4. gather x̂_int at outlier channels — inherits Δ_X̂ (Eq. 9)
+    xo = jnp.take(xq, oidx, axis=1)
+
+    acc_o = jax.lax.dot_general(
+        xo, wq, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+    # 5. dequantizing epilogue
+    out = d * (
+        acc.astype(jnp.float32) * wd[None, :]
+        + acc_o.astype(jnp.float32) * dw[None, :]
+    )
+    o_ref[...] = out
+
+
+def _pick_tile(n: int, target: int) -> int:
+    """Largest divisor of `n` that is ≤ target (grid sizes must divide)."""
+    t = min(n, target)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def quaff_linear(
+    x_hat: jax.Array,  # (T, CIN) f32 — targeted-scaled activations X̂
+    w_int: jax.Array,  # (CIN, COUT) i8 — frozen main weights
+    w_delta: jax.Array,  # (COUT,) f32 — Δ_W
+    w_hat: jax.Array,  # (NO, COUT) f32 — (s_O − 1)·W_O
+    o_idx: jax.Array,  # (NO,) i32 — outlier channel indices
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused Quaff quantized linear, Y ≈ X̂·W + x̂·ŵ (Eq. 5/9)."""
+    t, cin = x_hat.shape
+    cout = w_int.shape[1]
+    no = w_hat.shape[0]
+    tm = _pick_tile(t, block_m)
+    tn = _pick_tile(cout, block_n)
+    grid = (t // tm, cout // tn)
+    return pl.pallas_call(
+        _quaff_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, cin), lambda i, j: (i, 0)),
+            pl.BlockSpec((cin, tn), lambda i, j: (0, j)),
+            pl.BlockSpec((tn,), lambda i, j: (j,)),
+            pl.BlockSpec((no, tn), lambda i, j: (0, j)),
+            pl.BlockSpec((no,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, cout), jnp.float32),
+        interpret=interpret,
+    )(x_hat, w_int, w_delta, w_hat, o_idx)
+
+
+def vmem_bytes(t, cin, cout, no, block_m=128, block_n=128):
+    """Estimated VMEM footprint per grid step (perf instrumentation).
+
+    int8 tiles dominate; the f32 activation tile and the outlier slice are
+    the rest. Used by ``aot.py --report-vmem`` and EXPERIMENTS.md §Perf.
+    """
+    tm = _pick_tile(t, block_m)
+    tn = _pick_tile(cout, block_n)
+    return {
+        "x_tile_f32": tm * cin * 4,
+        "xq_tile_i8": tm * cin,
+        "w_tile_i8": cin * tn,
+        "w_hat_f32": no * tn * 4,
+        "acc_i32": tm * tn * 4,
+        "out_f32": tm * tn * 4,
+        "total": tm * cin * 5 + cin * tn + no * tn * 4 + tm * tn * 8 + tn * 8 + no * 4,
+    }
+
+
+def mxu_utilization_estimate(t, cin, cout, no, block_m=128, block_n=128):
+    """Fraction of MXU-issue slots doing useful int8 MACs, assuming a
+    128×128 systolic array: utilization = useful MACs / (padded-tile MACs).
+    """
+    tm = _pick_tile(t, block_m)
+    tn = _pick_tile(cout, block_n)
+    pad = lambda v: -(-v // 128) * 128  # noqa: E731
+    useful = t * cin * cout + t * no * cout
+    padded = (t // tm) * (cout // tn) * (pad(tm) * pad(cin) * pad(tn)) + (
+        t // tm
+    ) * (cout // tn) * (pad(tm) * pad(no) * pad(tn))
+    return useful / padded
+
+
+# ---------------------------------------------------------------------------
+# Straight-through-estimator wrapper used by the L2 model: forward is the
+# Pallas kernel; backward treats the quantized linear as the exact linear
+# X̂·W + x̂·ŵ (the Eq. 5 identity): dX̂ = dY·Wᵀ (dequantized) with the ŵ
+# path's contribution scattered onto the outlier columns, and
+# dŵ = x̂ᵀ·dY. The static int8 weights / Δ_W / index list are
+# non-differentiable (they are baked constants at lowering time).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def quaff_linear_ste(x_hat, w_hat, w_int, w_delta, o_idx):
+    return quaff_linear(x_hat, w_int, w_delta, w_hat, o_idx)
+
+
+def _ste_fwd(x_hat, w_hat, w_int, w_delta, o_idx):
+    y = quaff_linear_ste(x_hat, w_hat, w_int, w_delta, o_idx)
+    return y, (x_hat, w_hat)
+
+
+def _ste_bwd(w_int, w_delta, o_idx, res, dy):
+    x_hat, w_hat = res
+    w_dq = w_int.astype(jnp.float32) * w_delta[None, :]
+    dx = dy @ w_dq.T
+    # correction path: y += x̂_:,O · ŵ  ⇒  dx_:,O += dy·ŵᵀ, dŵ = x̂_:,Oᵀ·dy
+    dx_o = dy @ w_hat.T
+    dx = dx.at[:, o_idx].add(dx_o)
+    dw_hat = x_hat[:, o_idx].T @ dy
+    return dx, dw_hat
+
+
+quaff_linear_ste.defvjp(_ste_fwd, _ste_bwd)

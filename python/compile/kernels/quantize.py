@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: standalone per-token symmetric INT8 quantizer (Eq. 1).
+
+Used on its own for the quantization micro-benchmarks and as the reference
+building block the fused kernel embeds. Two outputs (int8 values + per-token
+step sizes), tiled over token rows only — the row reduction needs the full
+channel axis resident.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QMAX = 127.0
+
+
+def _quantize_kernel(x_ref, q_ref, d_ref):
+    x = x_ref[...]
+    absmax = jnp.max(jnp.abs(x), axis=1)
+    d = absmax / QMAX
+    safe = jnp.where(d > 0.0, d, 1.0)[:, None]
+    q_ref[...] = jnp.clip(jnp.round(x / safe), -QMAX, QMAX).astype(jnp.int8)
+    d_ref[...] = d
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def quantize_per_token(x, block_m: int = 256, interpret: bool = True):
+    """(T, C) f32 → ((T, C) i8, (T,) f32 step sizes)."""
+    t, c = x.shape
+    tm = min(t, block_m)
+    while t % tm != 0:
+        tm -= 1
+    return pl.pallas_call(
+        _quantize_kernel,
+        grid=(t // tm,),
+        in_specs=[pl.BlockSpec((tm, c), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((tm, c), lambda i: (i, 0)),
+            pl.BlockSpec((tm,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, c), jnp.int8),
+            jax.ShapeDtypeStruct((t,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)

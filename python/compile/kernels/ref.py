@@ -1,0 +1,67 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+These implement the same math as ``quaff_linear.py`` / ``quantize.py`` with
+plain jnp ops (no Pallas), and serve as the pytest ground truth. They also
+provide the exact-f32 reference ``linear_f32`` the quantization error is
+measured against (paper's FP32 baseline at the single-layer level).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+QMAX = 127.0
+
+
+def quantize_per_token_ref(x):
+    """(T, C) f32 → ((T, C) i8, (T,) f32) — Eq. 1 per-token."""
+    absmax = jnp.max(jnp.abs(x), axis=1)
+    d = absmax / QMAX
+    safe = jnp.where(d > 0.0, d, 1.0)[:, None]
+    q = jnp.clip(jnp.round(x / safe), -QMAX, QMAX).astype(jnp.int8)
+    return q, d
+
+
+def quantize_per_oc_ref(w):
+    """(K, N) f32 → ((K, N) i8, (N,) f32) — Eq. 1 per-output-channel."""
+    absmax = jnp.max(jnp.abs(w), axis=0)
+    d = absmax / QMAX
+    safe = jnp.where(d > 0.0, d, 1.0)[None, :]
+    q = jnp.clip(jnp.round(w / safe), -QMAX, QMAX).astype(jnp.int8)
+    return q, d
+
+
+def quaff_linear_ref(x_hat, w_int, w_delta, w_hat, o_idx):
+    """Eq. 9 in plain jnp: Δ_X̂·(X̂_int·W_int·Δ_W + x̂_int·ŵ_int·Δ_ŵ)."""
+    xq, d = quantize_per_token_ref(x_hat)
+    acc = xq.astype(jnp.int32) @ w_int.astype(jnp.int32)
+    main = d[:, None] * acc.astype(jnp.float32) * w_delta[None, :]
+    wq, dw = quantize_per_oc_ref(w_hat)
+    xo = jnp.take(xq, o_idx, axis=1)
+    acc_o = xo.astype(jnp.int32) @ wq.astype(jnp.int32)
+    corr = d[:, None] * acc_o.astype(jnp.float32) * dw[None, :]
+    return main + corr
+
+
+def naive_w8a8_ref(x, w_int, w_delta):
+    """Eq. 2 naive W8A8 (no outlier handling) — baseline oracle."""
+    xq, d = quantize_per_token_ref(x)
+    acc = xq.astype(jnp.int32) @ w_int.astype(jnp.int32)
+    return d[:, None] * acc.astype(jnp.float32) * w_delta[None, :]
+
+
+def linear_f32(x, w):
+    """Exact FP32 linear — the quantization-error reference."""
+    return x @ w
+
+
+def targeted_scale_ref(x, o_idx, s_o):
+    """X̂ = X with outlier columns divided by s_O (targeted inverse scaling)."""
+    inv = jnp.ones(x.shape[1], x.dtype).at[o_idx].set(1.0 / s_o)
+    return x * inv[None, :]
+
+
+def momentum_update_ref(s, x_col_max_o, w_row_max_o, gamma):
+    """Eqs. 7–8: β = max(1, sqrt(max|X_:,i| / max|W_i|)); s' = γ·s + (1−γ)·β."""
+    beta = jnp.maximum(1.0, jnp.sqrt(x_col_max_o / jnp.maximum(w_row_max_o, 1e-12)))
+    return gamma * s + (1.0 - gamma) * beta

@@ -1,0 +1,143 @@
+"""L1 kernel correctness: Pallas (interpret mode) vs the pure-jnp oracle.
+
+The CORE correctness signal of the build path — hypothesis sweeps shapes,
+outlier counts and scale magnitudes; every case must match the oracle to
+float tolerance and track the exact FP32 linear closely.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.quaff_linear import (
+    mxu_utilization_estimate,
+    quaff_linear,
+    quaff_linear_ste,
+    vmem_bytes,
+)
+from compile.kernels.quantize import quantize_per_token
+
+
+def make_case(seed, t, cin, cout, no, gain):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(t, cin)).astype(np.float32)
+    hot = rng.choice(cin, no, replace=False)
+    x[:, hot] *= gain
+    w = (rng.normal(size=(cin, cout)) * 0.3).astype(np.float32)
+    w_int, wd = ref.quantize_per_oc_ref(jnp.array(w))
+    o_idx = jnp.sort(jnp.array(hot, dtype=jnp.int32))
+    s = jnp.array(rng.uniform(1.0, np.sqrt(gain) * 1.5, no).astype(np.float32))
+    x_hat = ref.targeted_scale_ref(jnp.array(x), o_idx, s)
+    w_hat = (s - 1.0)[:, None] * jnp.array(w)[o_idx, :]
+    return jnp.array(x), x_hat, jnp.array(w), w_int, wd, w_hat, o_idx
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    t=st.integers(1, 33),
+    cin=st.integers(8, 96),
+    cout=st.integers(4, 80),
+    no=st.integers(1, 4),
+    gain=st.floats(10.0, 300.0),
+)
+def test_pallas_matches_oracle(seed, t, cin, cout, no, gain):
+    no = min(no, cin)
+    x, x_hat, w, w_int, wd, w_hat, o_idx = make_case(seed, t, cin, cout, no, gain)
+    y_k = quaff_linear(x_hat, w_int, wd, w_hat, o_idx)
+    y_r = ref.quaff_linear_ref(x_hat, w_int, wd, w_hat, o_idx)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    t=st.integers(1, 64),
+    c=st.integers(1, 128),
+)
+def test_quantize_kernel_matches_oracle(seed, t, c):
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.normal(size=(t, c)).astype(np.float32) * rng.uniform(0.1, 50))
+    qk, dk = quantize_per_token(x)
+    qr, dr = ref.quantize_per_token_ref(x)
+    assert jnp.all(qk == qr)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dr), rtol=1e-6)
+
+
+def test_quantize_zero_rows():
+    x = jnp.zeros((4, 16), jnp.float32)
+    q, d = quantize_per_token(x)
+    assert jnp.all(q == 0) and jnp.all(d == 0.0)
+
+
+@pytest.mark.parametrize("block_m,block_n", [(8, 16), (128, 128), (7, 13)])
+def test_tiling_invariance(block_m, block_n):
+    """Different block shapes must not change numerics."""
+    _, x_hat, _, w_int, wd, w_hat, o_idx = make_case(3, 24, 48, 52, 3, 100.0)
+    y_ref = quaff_linear(x_hat, w_int, wd, w_hat, o_idx, block_m=24, block_n=52)
+    y = quaff_linear(x_hat, w_int, wd, w_hat, o_idx, block_m=block_m, block_n=block_n)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-5, atol=1e-5)
+
+
+def test_quaff_beats_naive_on_outliers():
+    """Paper headline at layer level: targeted scaling reduces quant error."""
+    x, x_hat, w, w_int, wd, w_hat, o_idx = make_case(5, 32, 128, 96, 3, 100.0)
+    exact = ref.linear_f32(x, w)
+    y_quaff = quaff_linear(x_hat, w_int, wd, w_hat, o_idx)
+    y_naive = ref.naive_w8a8_ref(x, w_int, wd)
+    e_q = float(jnp.linalg.norm(y_quaff - exact))
+    e_n = float(jnp.linalg.norm(y_naive - exact))
+    assert e_q < 0.5 * e_n, f"quaff err {e_q} vs naive {e_n}"
+
+
+def test_identity_scales_equal_naive():
+    """With s = 1 the correction term vanishes: Quaff == naive W8A8."""
+    x, _, w, w_int, wd, _, o_idx = make_case(7, 16, 32, 24, 2, 50.0)
+    s1 = jnp.ones(2)
+    x_hat = ref.targeted_scale_ref(x, o_idx, s1)  # no-op
+    w_hat = (s1 - 1.0)[:, None] * w[np.asarray(o_idx), :]  # zeros
+    y = quaff_linear(x_hat, w_int, wd, w_hat, o_idx)
+    y_naive = ref.naive_w8a8_ref(x, w_int, wd)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_naive), rtol=1e-5, atol=1e-5)
+
+
+def test_ste_gradients_match_exact_linear():
+    """STE backward ≈ gradient of the exact decomposition X̂·W_dq + x̂·ŵ."""
+    _, x_hat, _, w_int, wd, w_hat, o_idx = make_case(11, 8, 24, 16, 2, 60.0)
+
+    # a *linear* functional ⟨Y, G⟩ makes the STE cotangent independent of the
+    # forward's quantization noise, so the comparison is exact
+    g = jnp.array(np.random.default_rng(0).normal(size=(8, 16)).astype(np.float32))
+
+    def loss_ste(xh, wh):
+        return jnp.sum(quaff_linear_ste(xh, wh, w_int, wd, o_idx) * g)
+
+    def loss_exact(xh, wh):
+        w_dq = w_int.astype(jnp.float32) * wd[None, :]
+        y = xh @ w_dq + xh[:, o_idx] @ wh
+        return jnp.sum(y * g)
+
+    gx_s, gw_s = jax.grad(loss_ste, argnums=(0, 1))(x_hat, w_hat)
+    gx_e, gw_e = jax.grad(loss_exact, argnums=(0, 1))(x_hat, w_hat)
+    np.testing.assert_allclose(np.asarray(gx_s), np.asarray(gx_e), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gw_s), np.asarray(gw_e), rtol=1e-4, atol=1e-4)
+
+
+def test_momentum_update_ref_fixed_point():
+    s = jnp.ones(3)
+    xm = jnp.array([100.0, 4.0, 0.01])
+    wm = jnp.array([1.0, 1.0, 1.0])
+    for _ in range(200):
+        s = ref.momentum_update_ref(s, xm, wm, 0.2)
+    np.testing.assert_allclose(np.asarray(s), [10.0, 2.0, 1.0], rtol=1e-3)
+
+
+def test_vmem_report_sane():
+    vb = vmem_bytes(128, 512, 512, 16, 128, 128)
+    assert vb["total"] < 16 * 1024 * 1024, "tile set must fit VMEM"
+    assert vb["w_tile_i8"] == 512 * 128
+    mx = mxu_utilization_estimate(128, 512, 512, 16)
+    assert 0.0 < mx <= 1.0

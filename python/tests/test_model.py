@@ -1,0 +1,158 @@
+"""L2 model tests: shapes, quantized-vs-FP32 agreement, training dynamics,
+momentum state semantics, and AOT flattening round-trips."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = M.Config(d_model=64, n_layers=2, n_heads=2, d_ff=128, max_seq=32)
+    frozen = M.init_frozen(cfg, 0)
+    qweights, scales = M.calibrate_and_quantize(cfg, frozen, 0)
+    lora = M.init_lora(cfg, 0)
+    return cfg, frozen, qweights, scales, lora
+
+
+def toks(cfg, b=2, s=16, seed=1):
+    return jax.random.randint(jax.random.PRNGKey(seed), (b, s), 0, cfg.vocab)
+
+
+def test_forward_shapes(setup):
+    cfg, frozen, qw, scales, lora = setup
+    t = toks(cfg)
+    logits, betas = M.quaff_forward(cfg, frozen, qw, lora, scales, t)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert len(betas) == cfg.n_layers * 6
+    for k, b in betas.items():
+        assert b.shape == scales[k].shape
+        assert bool(jnp.all(b >= 1.0)), f"beta floor violated at {k}"
+
+
+def test_quantized_tracks_fp32(setup):
+    cfg, frozen, qw, scales, lora = setup
+    t = toks(cfg)
+    ref_logits = M._f32_forward(cfg, frozen, t)
+    q_logits, _ = M.quaff_forward(cfg, frozen, qw, lora, scales, t)
+    a = np.asarray(ref_logits).ravel()
+    b = np.asarray(q_logits).ravel()
+    corr = np.corrcoef(a, b)[0, 1]
+    assert corr > 0.98, f"quantized forward decorrelated from FP32: r={corr}"
+
+
+def test_outlier_budgets_respected(setup):
+    cfg, frozen, qw, scales, lora = setup
+    for l in range(cfg.n_layers):
+        for name, budget in zip(M.PROJ_NAMES, cfg.budgets):
+            key = f"l{l}.{name}"
+            cin = frozen[key + ".w"].shape[0]
+            n_o = qw[key]["o_idx"].shape[0]
+            assert n_o == max(1, int(round(cin * budget))), key
+            # indices sorted + in range
+            oi = np.asarray(qw[key]["o_idx"])
+            assert np.all(np.diff(oi) > 0) and oi.max() < cin
+
+
+def test_down_proj_gets_biggest_budget(setup):
+    cfg, _, qw, _, _ = setup
+    n_down = qw["l0.down_proj"]["o_idx"].shape[0]
+    n_q = qw["l0.q_proj"]["o_idx"].shape[0]
+    assert n_down > n_q
+
+
+def test_train_step_updates_lora_and_scales(setup):
+    cfg, frozen, qw, scales, lora = setup
+    train_step, _ = M.make_steps(cfg, frozen, qw, lr=1e-2)
+    t = toks(cfg)
+    mask = jnp.ones(t.shape, jnp.float32)
+    m = {k: jnp.zeros_like(v) for k, v in lora.items()}
+    v = {k: jnp.zeros_like(x) for k, x in lora.items()}
+    loss, nl, nm, nv, nt, ns = jax.jit(train_step)(t, mask, lora, m, v, jnp.zeros(()), scales)
+    assert float(loss) > 0
+    assert float(nt) == 1.0
+    # LoRA B starts at zero but must move after one step
+    moved = any(
+        float(jnp.max(jnp.abs(nl[k] - lora[k]))) > 0 for k in lora if k.endswith("lora_b")
+    )
+    assert moved
+    # scales obey Eq. 7 with γ=0.2 starting from s=1: s' = 0.2 + 0.8 β ≥ 1
+    for k in ns:
+        assert bool(jnp.all(ns[k] >= 1.0 - 1e-6))
+
+
+def test_loss_decreases_over_steps(setup):
+    cfg, frozen, qw, scales, lora = setup
+    train_step, _ = M.make_steps(cfg, frozen, qw, lr=2e-2)
+    jit_train = jax.jit(train_step)
+    t = toks(cfg, b=2, s=16, seed=3)
+    mask = jnp.ones(t.shape, jnp.float32)
+    m = {k: jnp.zeros_like(v) for k, v in lora.items()}
+    v = {k: jnp.zeros_like(x) for k, x in lora.items()}
+    st = jnp.zeros(())
+    first = None
+    lo = lora
+    sc = scales
+    for i in range(12):
+        loss, lo, m, v, st, sc = jit_train(t, mask, lo, m, v, st, sc)
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first, f"{first} → {float(loss)}"
+
+
+def test_eval_step_outputs(setup):
+    cfg, frozen, qw, scales, lora = setup
+    _, eval_step = M.make_steps(cfg, frozen, qw)
+    t = toks(cfg)
+    mask = jnp.ones(t.shape, jnp.float32)
+    loss, preds = jax.jit(eval_step)(t, mask, lora, scales)
+    assert preds.shape == t.shape
+    assert preds.dtype == jnp.int32 or preds.dtype == jnp.int64
+    assert float(loss) > 0
+
+
+def test_masked_ce_ignores_unmasked(setup):
+    cfg, frozen, qw, scales, lora = setup
+    t = toks(cfg)
+    logits, _ = M.quaff_forward(cfg, frozen, qw, lora, scales, t)
+    full = M.masked_ce(logits, t, jnp.ones(t.shape, jnp.float32))
+    half_mask = jnp.concatenate(
+        [jnp.ones((2, 8), jnp.float32), jnp.zeros((2, 8), jnp.float32)], axis=1
+    )
+    half = M.masked_ce(logits, t, half_mask)
+    assert float(full) != float(half)
+    zero = M.masked_ce(logits, t, jnp.zeros(t.shape, jnp.float32))
+    assert float(zero) == 0.0
+
+
+def test_flat_wrappers_roundtrip():
+    """aot.build's flattened signatures must reproduce the dict-based step."""
+    from compile import aot
+
+    (cfg, frozen, qw, scales, lora, lora_keys, scale_keys, train_flat, _eval_flat) = aot.build(
+        "small", 0, 2e-4
+    )
+    b, s = 2, 16
+    t = jax.random.randint(jax.random.PRNGKey(5), (b, s), 0, cfg.vocab)
+    mask = jnp.ones((b, s), jnp.float32)
+    l0 = [lora[k] for k in lora_keys]
+    m0 = [jnp.zeros_like(x) for x in l0]
+    v0 = [jnp.zeros_like(x) for x in l0]
+    s0 = [scales[k] for k in scale_keys]
+    res = train_flat(t, mask, jnp.zeros(()), *l0, *m0, *v0, *s0)
+    train_step, _ = M.make_steps(cfg, frozen, qw, lr=2e-4)
+    loss_ref, *_ = train_step(
+        t,
+        mask,
+        lora,
+        {k: jnp.zeros_like(v) for k, v in lora.items()},
+        {k: jnp.zeros_like(v) for k, v in lora.items()},
+        jnp.zeros(()),
+        scales,
+    )
+    np.testing.assert_allclose(float(res[0]), float(loss_ref), rtol=1e-5)
+    # output arity: loss + t + 3·lora + scales
+    assert len(res) == 2 + 3 * len(lora_keys) + len(scale_keys)

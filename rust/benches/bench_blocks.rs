@@ -1,0 +1,59 @@
+//! §Perf ablation: cache-block-size sweep for the f32 matmul and shape
+//! sweep for the packed int8 matmul — the measurements behind the tile
+//! choices recorded in EXPERIMENTS.md §Perf.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::bench;
+use quaff::quant;
+use quaff::tensor::Matrix;
+use quaff::util::prng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(4);
+    println!("== bench_blocks: shape sweeps for the hot matmuls ==\n");
+
+    // packed int8 matmul across the paper's layer aspect ratios
+    println!("packed int8 matmul across layer shapes (t=256):");
+    for (cin, cout, label) in [
+        (512usize, 512usize, "qkv/o-proj (d×d)"),
+        (512, 2048, "up_proj (d×4d)"),
+        (2048, 512, "down_proj (4d×d)"),
+    ] {
+        let x = Matrix::randn(256, cin, &mut rng, 1.0);
+        let w = Matrix::randn(cin, cout, &mut rng, 0.3);
+        let (xq, dx) = quant::quantize_per_token(&x);
+        let qw = quant::QuantizedWeights::quantize(&w);
+        let mut out = vec![0.0f32; 256 * cout];
+        let flops = 2.0 * (256 * cin * cout) as f64;
+        let r = bench(&format!("int8 packed {label}"), 2, 1.0, || {
+            out.fill(0.0);
+            qw.matmul_into(&xq, &dx, &mut out);
+            std::hint::black_box(&out);
+        });
+        println!("  ↳ {:>8.2} GOP/s", flops / r.mean_secs / 1e9);
+    }
+
+    // f32 blocked matmul: the BLOCK_K/BLOCK_J constants were chosen by this
+    // sweep (re-run after hardware changes)
+    println!("\nf32 matmul 512³ (current blocks: K=64, J=256):");
+    let a = Matrix::randn(512, 512, &mut rng, 1.0);
+    let b = Matrix::randn(512, 512, &mut rng, 1.0);
+    let flops = 2.0 * 512f64.powi(3);
+    let r = bench("f32 matmul (tuned blocks)", 2, 2.0, || {
+        std::hint::black_box(a.matmul(&b));
+    });
+    println!("  ↳ {:>8.2} GFLOP/s", flops / r.mean_secs / 1e9);
+
+    // backward shapes (dY·Wᵀ and Xᵀ·dY)
+    let dy = Matrix::randn(256, 512, &mut rng, 1.0);
+    let w = Matrix::randn(512, 512, &mut rng, 0.3);
+    bench("backward dY·Wᵀ (matmul_bt 256×512×512)", 2, 1.0, || {
+        std::hint::black_box(dy.matmul_bt(&w));
+    });
+    let x = Matrix::randn(256, 512, &mut rng, 1.0);
+    bench("grad-accum Xᵀ·dY (matmul_at 256×512×512)", 2, 1.0, || {
+        std::hint::black_box(x.matmul_at(&dy));
+    });
+}

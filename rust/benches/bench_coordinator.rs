@@ -1,0 +1,48 @@
+//! Coordinator benchmarks: preprocessing (calibrate→detect→quantize→bundle)
+//! latency per method — the server side of the paper's deployment story —
+//! and job throughput through the queue.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::bench;
+use quaff::coordinator::{Coordinator, FinetuneJob, PreprocessServer, ServerConfig};
+use quaff::methods::MethodKind;
+use quaff::peft::PeftKind;
+
+fn main() {
+    println!("== bench_coordinator: preprocess + job throughput ==\n");
+    let mut cfg = ServerConfig::default();
+    cfg.preset = "opt-tiny".to_string();
+    cfg.calib_samples = 16;
+    cfg.calib_batch = 4;
+    let server = PreprocessServer::new(cfg.clone());
+    for method in [MethodKind::Naive, MethodKind::Quaff, MethodKind::SmoothDynamic] {
+        bench(&format!("prepare bundle {}", method.label()), 1, 2.0, || {
+            std::hint::black_box(server.prepare(method, PeftKind::Lora));
+        });
+    }
+
+    // queue throughput: N tiny jobs end-to-end
+    let t0 = std::time::Instant::now();
+    let mut coord = Coordinator::new(cfg, 1);
+    let jobs: Vec<FinetuneJob> = (0..4)
+        .map(|i| {
+            let mut j = FinetuneJob::new(i, "gpqa", MethodKind::Quaff, PeftKind::Lora);
+            j.steps = 2;
+            j.batch_size = 2;
+            j.train_pool = 8;
+            j.eval_samples = 4;
+            j
+        })
+        .collect();
+    let reports = coord.run_all(jobs);
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "\n4 jobs end-to-end: {:.2}s total, {:.2}s/job, all complete: {}",
+        secs,
+        secs / 4.0,
+        reports.len() == 4
+    );
+    coord.shutdown();
+}

@@ -1,0 +1,70 @@
+//! Per-method single-layer forward latency — the microscopic source of the
+//! latency columns in Fig. 4 / Tables 1, 2, 4: what each WAQ method
+//! actually recomputes per step at one linear layer.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::bench;
+use quaff::methods::{build_method, MethodConfig, MethodKind};
+use quaff::outlier::{ChannelStats, OutlierDetector};
+use quaff::tensor::Matrix;
+use quaff::util::prng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(2);
+    println!("== bench_methods: per-step forward latency per WAQ method ==\n");
+    let (t, cin, cout) = (256, 512, 512);
+    let hot: Vec<usize> = vec![7, 100, 333, 400];
+    let mk_x = |rng: &mut Rng| {
+        let mut x = Matrix::randn(t, cin, rng, 1.0);
+        for &c in &hot {
+            for ti in 0..t {
+                let v = x.get(ti, c);
+                x.set(ti, c, v * 80.0);
+            }
+        }
+        x
+    };
+    // calibration
+    let mut stats = ChannelStats::new(cin);
+    for _ in 0..8 {
+        stats.observe(&mk_x(&mut rng), 20.0);
+    }
+    let det = OutlierDetector::new(20.0);
+    let oset = det.select(&stats, 8);
+    let w = Matrix::randn(cin, cout, &mut rng, 0.3);
+    let cfg = MethodConfig::default();
+    let x = mk_x(&mut rng);
+
+    let mut results = Vec::new();
+    for kind in MethodKind::ALL {
+        let mut m = build_method(kind, w.clone(), &stats, &oset, &cfg);
+        let r = bench(&format!("forward {} ({t}x{cin}x{cout})", kind.label()), 2, 1.5, || {
+            std::hint::black_box(m.forward(&x));
+        });
+        results.push((kind, r.mean_secs, m.weight_bytes()));
+    }
+    println!("\nmethod                  latency-vs-FP32   weight bytes");
+    let fp32 = results
+        .iter()
+        .find(|(k, _, _)| *k == MethodKind::Fp32)
+        .map(|&(_, s, _)| s)
+        .unwrap();
+    for (kind, secs, bytes) in &results {
+        println!(
+            "{:<22} {:>10.2}x {:>16}",
+            kind.label(),
+            secs / fp32,
+            quaff::util::fmt_bytes(*bytes)
+        );
+    }
+    // the paper's shape: Quaff ≈ Naive ≪ Smooth_D; LLM.int8 pays dequant
+    let get = |k: MethodKind| results.iter().find(|(kk, _, _)| *kk == k).unwrap().1;
+    println!(
+        "\nquaff/naive = {:.2}x   smooth_d/naive = {:.2}x   llm.int8/naive = {:.2}x",
+        get(MethodKind::Quaff) / get(MethodKind::Naive),
+        get(MethodKind::SmoothDynamic) / get(MethodKind::Naive),
+        get(MethodKind::LlmInt8) / get(MethodKind::Naive),
+    );
+}

@@ -1,0 +1,107 @@
+//! L3 kernel micro-benchmarks: Eq. 1 quantizers, the INT8 matmul vs f32
+//! matmul (the "4× integer kernel" claim, CPU-scaled), and the Quaff
+//! per-step overhead decomposition (targeted stats / tiny ŵ quantization /
+//! correction matmul).
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, throughput};
+use quaff::outlier::OutlierSet;
+use quaff::quant;
+use quaff::scaling;
+use quaff::tensor::{I8Matrix, Matrix};
+use quaff::util::prng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    println!("== bench_quant: quantizers + integer matmul ==\n");
+
+    // Eq. 1 quantizers at a phi-mini-like layer shape
+    let (t, cin, cout) = (512, 512, 512);
+    let x = Matrix::randn(t, cin, &mut rng, 1.0);
+    let w = Matrix::randn(cin, cout, &mut rng, 0.3);
+
+    let r = bench("quantize_per_token 512x512", 3, 1.0, || {
+        std::hint::black_box(quant::quantize_per_token(&x));
+    });
+    throughput("bytes", &r, (t * cin * 5) as f64, "GiB/s");
+    bench("quantize_per_oc 512x512", 3, 1.0, || {
+        std::hint::black_box(quant::quantize_per_oc(&w));
+    });
+
+    // f32 vs int8 matmul — the core speedup the paper leverages
+    let (xq, dx) = quant::quantize_per_token(&x);
+    let (wq, dw) = quant::quantize_per_oc(&w);
+    let flops = 2.0 * (t * cin * cout) as f64;
+    let rf = bench("matmul f32 512x512x512", 2, 2.0, || {
+        std::hint::black_box(x.matmul(&w));
+    });
+    throughput("GFLOP/s", &rf, flops, "GFLOP/s");
+    let ri = bench("matmul int8->i32 512x512x512", 2, 2.0, || {
+        std::hint::black_box(xq.matmul_i32(&wq));
+    });
+    throughput("GOP/s", &ri, flops, "GOP/s");
+    let mut out = vec![0.0f32; t * cout];
+    let rd = bench("matmul int8 fused dequant 512^3", 2, 2.0, || {
+        out.fill(0.0);
+        xq.matmul_dequant_into(&wq, &dx, &dw, &mut out);
+        std::hint::black_box(&out);
+    });
+    throughput("GOP/s", &rd, flops, "GOP/s");
+    // packed path (§Perf optimization: transposed i16 weights)
+    let packed = wq.pack_transposed();
+    let rp = bench("matmul int8 PACKED dequant 512^3", 2, 2.0, || {
+        out.fill(0.0);
+        xq.matmul_dequant_packed_into(&packed, &dx, &dw, &mut out);
+        std::hint::black_box(&out);
+    });
+    throughput("GOP/s", &rp, flops, "GOP/s");
+    println!(
+        "\nint8 speedup over f32: {:.2}x (fused dequant: {:.2}x, packed: {:.2}x)\n",
+        rf.mean_secs / ri.mean_secs,
+        rf.mean_secs / rd.mean_secs,
+        rf.mean_secs / rp.mean_secs
+    );
+
+    // Quaff per-step overhead pieces (|O| = 5% of cin)
+    let o = OutlierSet::new((0..cin / 20).map(|i| i * 20).collect());
+    let s: Vec<f32> = (0..o.len()).map(|_| rng.range(1.0, 12.0)).collect();
+    bench("targeted col-max (|O|=5%)", 3, 0.5, || {
+        let mut m = vec![0.0f32; o.len()];
+        for (k, &c) in o.channels.iter().enumerate() {
+            let mut mx = 0.0f32;
+            for ti in 0..t {
+                mx = mx.max(x.get(ti, c).abs());
+            }
+            m[k] = mx;
+        }
+        std::hint::black_box(m);
+    });
+    let w_o = w.select_rows(&o.channels);
+    bench("build + quantize ŵ (|O|=5%)", 3, 0.5, || {
+        let w_hat = scaling::build_outlier_correction_from_slice(&w_o, &s);
+        std::hint::black_box(quant::quantize_per_oc(&w_hat));
+    });
+    let x_o = {
+        let mut data = Vec::with_capacity(t * o.len());
+        for ti in 0..t {
+            let row = xq.row(ti);
+            data.extend(o.channels.iter().map(|&j| row[j]));
+        }
+        I8Matrix::from_vec(t, o.len(), data)
+    };
+    let (w_hat_q, dwh) = {
+        let w_hat = scaling::build_outlier_correction_from_slice(&w_o, &s);
+        quant::quantize_per_oc(&w_hat)
+    };
+    let rc = bench("correction matmul x̂·ŵ (|O|=5%)", 3, 0.5, || {
+        let mut o2 = vec![0.0f32; t * cout];
+        x_o.matmul_dequant_into(&w_hat_q, &dx, &dwh, &mut o2);
+        std::hint::black_box(o2);
+    });
+    println!(
+        "\ncorrection-term cost vs main matmul: {:.1}% (paper target: <5% overall)\n",
+        100.0 * rc.mean_secs / rd.mean_secs
+    );
+}

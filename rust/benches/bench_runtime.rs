@@ -1,0 +1,53 @@
+//! PJRT runtime benchmarks: compile-once cost, per-call execute latency of
+//! the AOT train step and of the standalone L1 kernel. Skips gracefully if
+//! `make artifacts` hasn't been run.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::bench;
+use quaff::runtime::{Engine, HostValue, TrainSession};
+use std::path::PathBuf;
+
+fn main() {
+    println!("== bench_runtime: PJRT execute latency ==\n");
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("skipped: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let t0 = std::time::Instant::now();
+    let engine = Engine::load(&dir).expect("engine load");
+    println!("engine load+compile: {:.2}s", t0.elapsed().as_secs_f64());
+    for (name, secs) in &engine.compile_secs {
+        println!("  {name:<16} compile {secs:.2}s");
+    }
+    let m = engine.manifest.clone();
+
+    // standalone kernel execute
+    let entry = &m.artifacts["quaff_linear"];
+    let x = HostValue::F32(
+        entry.inputs[0].shape.clone(),
+        (0..entry.inputs[0].numel()).map(|i| (i % 7) as f32 * 0.1).collect(),
+    );
+    let wh = HostValue::F32(entry.inputs[1].shape.clone(), vec![0.01; entry.inputs[1].numel()]);
+    bench("execute quaff_linear kernel", 3, 2.0, || {
+        std::hint::black_box(engine.execute("quaff_linear", &[x.clone(), wh.clone()]).unwrap());
+    });
+
+    // full train step through PJRT
+    let mut session = TrainSession::new(&engine).unwrap();
+    let tokens: Vec<i32> = (0..m.batch * m.seq).map(|i| (i % m.vocab) as i32).collect();
+    let mask = vec![1.0f32; tokens.len()];
+    bench(
+        &format!("execute train_step (B={} S={})", m.batch, m.seq),
+        1,
+        5.0,
+        || {
+            std::hint::black_box(session.step(&tokens, &mask).unwrap());
+        },
+    );
+    let tok_per_step = (m.batch * m.seq) as f64;
+    let last = session.losses.last().copied().unwrap_or(f64::NAN);
+    println!("\nsteps run: {}  last loss: {last:.4}  tokens/step: {tok_per_step}", session.steps);
+}

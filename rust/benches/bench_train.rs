@@ -1,0 +1,45 @@
+//! End-to-end train-step latency per method — the macro version of the
+//! paper's "average latency per step" columns (Fig. 4, Tables 1/2/4),
+//! including forward, backward, Adam and the outlier-drift tick.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::bench;
+use quaff::coordinator::{PreprocessServer, ServerConfig};
+use quaff::data::{Sample, SynthTask};
+use quaff::methods::MethodKind;
+use quaff::peft::PeftKind;
+use quaff::train::Trainer;
+use quaff::util::prng::Rng;
+
+fn main() {
+    println!("== bench_train: full train-step latency per method (phi-mini, LoRA) ==\n");
+    let mut cfg = ServerConfig::default();
+    cfg.preset = "phi-mini".to_string();
+    cfg.calib_samples = 16;
+    cfg.calib_batch = 4;
+    let server = PreprocessServer::new(cfg);
+    let task = SynthTask::by_name("oasst1").unwrap();
+    let mut results = Vec::new();
+    for method in MethodKind::ALL {
+        let mut bundle = server.prepare(method, PeftKind::Lora);
+        let mut trainer = Trainer::new(2e-3, 128, 1);
+        let mut rng = Rng::new(3);
+        let samples: Vec<Sample> = (0..8).map(|_| task.sample(&mut rng)).collect();
+        let refs: Vec<&Sample> = samples.iter().collect();
+        let r = bench(&format!("train_step {} (B=8)", method.label()), 1, 3.0, || {
+            std::hint::black_box(trainer.step(&mut bundle.model, &[refs.clone()]));
+        });
+        results.push((method, r.mean_secs));
+    }
+    let fp32 = results
+        .iter()
+        .find(|(k, _)| *k == MethodKind::Fp32)
+        .map(|&(_, s)| s)
+        .unwrap();
+    println!("\nmethod                  step latency    vs FP32");
+    for (kind, secs) in &results {
+        println!("{:<22} {:>10.1} ms {:>9.2}x", kind.label(), secs * 1e3, secs / fp32);
+    }
+}

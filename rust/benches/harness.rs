@@ -1,0 +1,58 @@
+//! Minimal benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Warms up, runs timed iterations until a time budget, prints
+//! mean ± std and throughput. Shared by all `[[bench]]` targets via
+//! `#[path]` include.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub mean_secs: f64,
+    pub std_secs: f64,
+    pub iters: u64,
+}
+
+/// Run `f` repeatedly for ~`budget_secs` (after `warmup` calls); report stats.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, budget_secs: f64, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::new();
+    let t0 = Instant::now();
+    while t0.elapsed().as_secs_f64() < budget_secs || times.len() < 3 {
+        let s = Instant::now();
+        f();
+        times.push(s.elapsed().as_secs_f64());
+        if times.len() > 10_000 {
+            break;
+        }
+    }
+    let n = times.len() as f64;
+    let mean = times.iter().sum::<f64>() / n;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n;
+    let r = BenchResult {
+        name: name.to_string(),
+        mean_secs: mean,
+        std_secs: var.sqrt(),
+        iters: times.len() as u64,
+    };
+    println!(
+        "{:<44} {:>12.3} µs/iter  (±{:>8.3} µs, n={})",
+        r.name,
+        r.mean_secs * 1e6,
+        r.std_secs * 1e6,
+        r.iters
+    );
+    r
+}
+
+/// Report a derived throughput line (e.g. GFLOP/s, GiB/s).
+#[allow(dead_code)] // shared via #[path] include; not every bench uses it
+pub fn throughput(name: &str, result: &BenchResult, work_per_iter: f64, unit: &str) {
+    println!(
+        "{:<44} {:>12.3} {unit}",
+        format!("  ↳ {name}"),
+        work_per_iter / result.mean_secs / 1e9
+    );
+}

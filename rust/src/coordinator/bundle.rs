@@ -1,0 +1,188 @@
+//! The server side of the paper's deployment paradigm (§3.3):
+//! "public servers preprocess and distribute quantized model weights
+//! `W_int` and outlier weights `W_O`, while clients perform personalized
+//! quantized fine-tuning without needing full-precision weights."
+//!
+//! [`PreprocessServer`] owns the full-precision base checkpoint (here:
+//! deterministic from a seed), runs calibration on a public corpus,
+//! identifies outlier channels under the non-uniform budget, quantizes,
+//! and hands clients a [`DistributionBundle`] — a ready-to-fine-tune model
+//! whose linear layers hold only the quantized representation.
+
+use crate::data::{calibration_batches, SynthTask};
+use crate::methods::{MethodConfig, MethodKind};
+use crate::model::{Model, ModelConfig};
+use crate::outlier::{BudgetAllocator, BudgetPolicy, OutlierDetector, OutlierRegistry};
+use crate::peft::PeftKind;
+use crate::util::prng::Rng;
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Base-model preset name.
+    pub preset: String,
+    /// Base checkpoint seed (stands in for the pretrained weights).
+    pub base_seed: u64,
+    /// Calibration corpus (paper: OIG/Chip2) and sample count (paper: 512).
+    pub calib_task: String,
+    pub calib_samples: usize,
+    pub calib_batch: usize,
+    pub budget: BudgetPolicy,
+    pub detector_tau: f32,
+    pub method_cfg: MethodConfig,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            preset: "phi-mini".to_string(),
+            base_seed: 0xBA5E,
+            calib_task: "oig-chip2".to_string(),
+            calib_samples: 64,
+            calib_batch: 8,
+            budget: BudgetPolicy::PaperNonUniform,
+            detector_tau: 20.0,
+            method_cfg: MethodConfig::default(),
+        }
+    }
+}
+
+/// What the server distributes: a quantized, adapter-ready model plus the
+/// outlier registry and provenance metadata.
+pub struct DistributionBundle {
+    pub model: Model,
+    pub registry: OutlierRegistry,
+    pub method: MethodKind,
+    pub preset: String,
+    /// Bytes a client must download (quantized weights + common fp32 parts).
+    pub payload_bytes: usize,
+    /// Outlier overhead fraction actually achieved (≤5 % check).
+    pub outlier_overhead: f64,
+}
+
+/// The preprocessing server.
+pub struct PreprocessServer {
+    pub cfg: ServerConfig,
+}
+
+impl PreprocessServer {
+    pub fn new(cfg: ServerConfig) -> PreprocessServer {
+        PreprocessServer { cfg }
+    }
+
+    /// Build the base FP32 model (the "pretrained checkpoint").
+    fn base_model(&self) -> Model {
+        let mc =
+            ModelConfig::preset(&self.cfg.preset).unwrap_or_else(|| {
+                panic!("unknown preset {}", self.cfg.preset)
+            });
+        Model::new(mc, self.cfg.base_seed)
+    }
+
+    /// Calibrate + quantize a fresh bundle for `method`, with `peft`
+    /// adapters attached (clients receive a ready-to-train package).
+    pub fn prepare(&self, method: MethodKind, peft: PeftKind) -> DistributionBundle {
+        let mut model = self.base_model();
+        // 1. calibration pass on the public corpus
+        let task = SynthTask::by_name(&self.cfg.calib_task)
+            .unwrap_or_else(|| panic!("unknown calibration task {}", self.cfg.calib_task));
+        let mut rng = Rng::new(self.cfg.base_seed ^ 0xCA11B);
+        let max_len = model.cfg.max_seq - model.cfg.n_virtual;
+        let batches = calibration_batches(
+            &task,
+            self.cfg.calib_samples,
+            self.cfg.calib_batch,
+            max_len,
+            &mut rng,
+        );
+        model.start_calibration();
+        for batch in &batches {
+            let _ = model.forward(batch, false);
+        }
+        let calib = model.finish_calibration();
+        // 2. outlier identification + quantization
+        let allocator = BudgetAllocator::new(self.cfg.budget);
+        let detector = OutlierDetector::new(self.cfg.detector_tau);
+        let registry =
+            model.apply_method(method, &calib, &allocator, &self.cfg.method_cfg, &detector);
+        // 3. adapters
+        model.attach_peft(peft);
+        let total_cin: usize = model.layer_shapes().iter().map(|&(_, c)| c).sum();
+        let overhead = registry.overhead_fraction(total_cin);
+        let payload = model.frozen_linear_bytes();
+        DistributionBundle {
+            model,
+            registry,
+            method,
+            preset: self.cfg.preset.clone(),
+            payload_bytes: payload,
+            outlier_overhead: overhead,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_server() -> PreprocessServer {
+        let mut cfg = ServerConfig::default();
+        cfg.preset = "opt-tiny".to_string();
+        cfg.calib_samples = 16;
+        cfg.calib_batch = 4;
+        PreprocessServer::new(cfg)
+    }
+
+    #[test]
+    fn bundle_has_quantized_layers_and_adapters() {
+        let server = small_server();
+        let mut bundle = server.prepare(MethodKind::Quaff, PeftKind::Lora);
+        assert_eq!(bundle.method, MethodKind::Quaff);
+        for b in &mut bundle.model.blocks {
+            for l in b.linears() {
+                assert!(l.is_quantized());
+                assert_eq!(l.method_name(), "Quaff");
+            }
+        }
+        assert!(bundle.model.trainable_params() > 0);
+        assert!(bundle.payload_bytes > 0);
+    }
+
+    #[test]
+    fn outlier_overhead_within_budget_envelope() {
+        let server = small_server();
+        let bundle = server.prepare(MethodKind::Quaff, PeftKind::Lora);
+        // ≤ 5% paper envelope, with slack for min-1-channel rounding on
+        // tiny layers
+        assert!(
+            bundle.outlier_overhead < 0.08,
+            "overhead {}",
+            bundle.outlier_overhead
+        );
+    }
+
+    #[test]
+    fn bundles_are_deterministic_per_seed() {
+        let server = small_server();
+        let a = server.prepare(MethodKind::Quaff, PeftKind::Lora);
+        let b = server.prepare(MethodKind::Quaff, PeftKind::Lora);
+        // same registry, same payload
+        assert_eq!(a.payload_bytes, b.payload_bytes);
+        let ra: Vec<_> = a.registry.layers().collect();
+        let rb: Vec<_> = b.registry.layers().collect();
+        assert_eq!(ra, rb);
+    }
+
+    #[test]
+    fn quantized_bundle_smaller_than_fp32() {
+        let server = small_server();
+        let q = server.prepare(MethodKind::Quaff, PeftKind::Lora);
+        let f = server.prepare(MethodKind::Fp32, PeftKind::Lora);
+        assert!(
+            q.payload_bytes < f.payload_bytes / 2,
+            "quantized payload {} vs fp32 {}",
+            q.payload_bytes,
+            f.payload_bytes
+        );
+    }
+}

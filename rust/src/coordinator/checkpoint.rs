@@ -1,0 +1,167 @@
+//! Adapter checkpointing: clients persist only their PEFT state (the point
+//! of the server–client split — base weights never leave the bundle).
+//!
+//! Format: a tiny self-describing binary — magic, count, then per-param
+//! (name-len, name, rows, cols, f32 data). No serde in the vendor set.
+
+use crate::model::Model;
+use anyhow::{anyhow, bail, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"QUAFFCK1";
+
+/// Serialize all trainable parameters of `model` to `path`.
+pub fn save_adapters(model: &mut Model, path: &Path) -> Result<usize> {
+    let mut entries: Vec<(String, usize, usize, Vec<f32>)> = Vec::new();
+    model.visit_params(&mut |name, p| {
+        entries.push((
+            name.to_string(),
+            p.value.rows(),
+            p.value.cols(),
+            p.value.data().to_vec(),
+        ));
+    });
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(entries.len() as u32).to_le_bytes())?;
+    let mut total = 0usize;
+    for (name, rows, cols, data) in &entries {
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        f.write_all(&(*rows as u32).to_le_bytes())?;
+        f.write_all(&(*cols as u32).to_le_bytes())?;
+        for v in data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        total += data.len();
+    }
+    Ok(total)
+}
+
+/// Load adapter parameters into `model`. Every parameter in the checkpoint
+/// must exist in the model with a matching shape; model params missing from
+/// the file are left untouched.
+pub fn load_adapters(model: &mut Model, path: &Path) -> Result<usize> {
+    let mut f = std::fs::File::open(path)?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a quaff checkpoint: bad magic");
+    }
+    let mut u32buf = [0u8; 4];
+    f.read_exact(&mut u32buf)?;
+    let count = u32::from_le_bytes(u32buf) as usize;
+    let mut loaded: std::collections::BTreeMap<String, (usize, usize, Vec<f32>)> =
+        std::collections::BTreeMap::new();
+    for _ in 0..count {
+        f.read_exact(&mut u32buf)?;
+        let name_len = u32::from_le_bytes(u32buf) as usize;
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name).map_err(|_| anyhow!("bad param name"))?;
+        f.read_exact(&mut u32buf)?;
+        let rows = u32::from_le_bytes(u32buf) as usize;
+        f.read_exact(&mut u32buf)?;
+        let cols = u32::from_le_bytes(u32buf) as usize;
+        let mut data = vec![0f32; rows * cols];
+        let mut fbuf = [0u8; 4];
+        for v in data.iter_mut() {
+            f.read_exact(&mut fbuf)?;
+            *v = f32::from_le_bytes(fbuf);
+        }
+        loaded.insert(name, (rows, cols, data));
+    }
+    let mut applied = 0usize;
+    let mut err: Option<String> = None;
+    model.visit_params(&mut |name, p| {
+        if let Some((rows, cols, data)) = loaded.remove(name) {
+            if (rows, cols) != (p.value.rows(), p.value.cols()) {
+                err = Some(format!(
+                    "shape mismatch for {name}: file ({rows},{cols}) vs model ({},{})",
+                    p.value.rows(),
+                    p.value.cols()
+                ));
+                return;
+            }
+            p.value.data_mut().copy_from_slice(&data);
+            applied += data.len();
+        }
+    });
+    if let Some(e) = err {
+        bail!("{e}");
+    }
+    if !loaded.is_empty() {
+        bail!(
+            "checkpoint params not present in model: {:?}",
+            loaded.keys().collect::<Vec<_>>()
+        );
+    }
+    Ok(applied)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::peft::PeftKind;
+
+    fn model(peft: PeftKind) -> Model {
+        let mut cfg = ModelConfig::preset("opt-tiny").unwrap();
+        cfg.n_layers = 2;
+        let mut m = Model::new(cfg, 5);
+        m.attach_peft(peft);
+        m
+    }
+
+    #[test]
+    fn roundtrip_preserves_values() {
+        let dir = std::env::temp_dir().join("quaff_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.ckpt");
+        let mut m = model(PeftKind::Lora);
+        // perturb params so they're nontrivial
+        m.visit_params(&mut |_, p| {
+            for (i, v) in p.value.data_mut().iter_mut().enumerate() {
+                *v = (i % 7) as f32 * 0.1 - 0.3;
+            }
+        });
+        let saved = save_adapters(&mut m, &path).unwrap();
+        assert!(saved > 0);
+        let mut m2 = model(PeftKind::Lora);
+        let loaded = load_adapters(&mut m2, &path).unwrap();
+        assert_eq!(saved, loaded);
+        let mut ok = true;
+        let mut vals = Vec::new();
+        m.visit_params(&mut |_, p| vals.push(p.value.clone()));
+        let mut i = 0;
+        m2.visit_params(&mut |_, p| {
+            if p.value.data() != vals[i].data() {
+                ok = false;
+            }
+            i += 1;
+        });
+        assert!(ok);
+    }
+
+    #[test]
+    fn rejects_peft_mismatch() {
+        let dir = std::env::temp_dir().join("quaff_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("b.ckpt");
+        let mut m = model(PeftKind::Lora);
+        save_adapters(&mut m, &path).unwrap();
+        let mut other = model(PeftKind::Ia3);
+        assert!(load_adapters(&mut other, &path).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let dir = std::env::temp_dir().join("quaff_ckpt_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        let mut m = model(PeftKind::Lora);
+        assert!(load_adapters(&mut m, &path).is_err());
+    }
+}

@@ -1,0 +1,312 @@
+//! L3 coordinator: the server–client fine-tuning service.
+//!
+//! A [`PreprocessServer`] (bundle.rs) plays the paper's "public server":
+//! calibrate → identify outlier channels → quantize → distribute. The
+//! [`Coordinator`] runs a thread-based event loop accepting
+//! [`FinetuneJob`]s ("clients"), executes each against a freshly prepared
+//! [`DistributionBundle`], and returns [`JobReport`]s with task metrics,
+//! per-step latency and the memory breakdown — the measurement engine
+//! behind every table and figure in `report`.
+
+pub mod bundle;
+pub mod checkpoint;
+
+pub use bundle::{DistributionBundle, PreprocessServer, ServerConfig};
+
+use crate::data::{Dataset, Sample, SynthTask, TaskFamily};
+use crate::methods::MethodKind;
+use crate::metrics::{LatencyTimer, MemoryAccountant, MemoryBreakdown};
+use crate::peft::PeftKind;
+use crate::train::{eval as teval, Trainer};
+use crate::util::prng::Rng;
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// One fine-tuning request.
+#[derive(Clone, Debug)]
+pub struct FinetuneJob {
+    pub id: u64,
+    /// Benchmark name (see `data::synth::SynthTask::by_name`).
+    pub dataset: String,
+    pub method: MethodKind,
+    pub peft: PeftKind,
+    pub steps: u64,
+    pub batch_size: usize,
+    pub grad_accum: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub train_pool: usize,
+    pub eval_samples: usize,
+    pub max_len: usize,
+}
+
+impl FinetuneJob {
+    /// Paper-default job: LoRA fine-tuning, batch 16 scaled down to the
+    /// simulator (batch 8), Adam lr 2e-4.
+    pub fn new(id: u64, dataset: &str, method: MethodKind, peft: PeftKind) -> FinetuneJob {
+        FinetuneJob {
+            id,
+            dataset: dataset.to_string(),
+            method,
+            peft,
+            steps: 30,
+            batch_size: 8,
+            grad_accum: 1,
+            lr: 2e-3,
+            seed: 7,
+            train_pool: 64,
+            eval_samples: 24,
+            max_len: 160,
+        }
+    }
+}
+
+/// Completed-job metrics.
+#[derive(Clone, Debug)]
+pub struct JobReport {
+    pub id: u64,
+    pub dataset: String,
+    pub method: MethodKind,
+    pub peft: PeftKind,
+    pub steps: u64,
+    pub final_loss: f64,
+    /// Task metrics: keys among {"ppl", "acc", "rouge_l", "exact"}.
+    pub metrics: BTreeMap<String, f64>,
+    pub mean_step_secs: f64,
+    pub memory: MemoryBreakdown,
+    pub payload_bytes: usize,
+}
+
+impl JobReport {
+    pub fn metric(&self, key: &str) -> f64 {
+        self.metrics.get(key).copied().unwrap_or(f64::NAN)
+    }
+}
+
+/// Execute one job against a prepared bundle (the worker body; exposed so
+/// reports/benches can run cells synchronously without the queue).
+pub fn run_job(server: &PreprocessServer, job: &FinetuneJob) -> JobReport {
+    let task = SynthTask::by_name(&job.dataset)
+        .unwrap_or_else(|| panic!("unknown dataset {}", job.dataset));
+    let mut rng = Rng::new(job.seed);
+    let samples: Vec<Sample> = (0..job.train_pool + job.eval_samples)
+        .map(|_| task.sample(&mut rng))
+        .collect();
+    let ds = Dataset::from_samples(&job.dataset, samples, &mut rng);
+
+    let mut bundle = server.prepare(job.method, job.peft);
+    let model = &mut bundle.model;
+    let mut trainer = Trainer::new(job.lr, job.max_len, job.grad_accum);
+    let mut timer = LatencyTimer::new();
+    let mut iter = ds.batches(job.batch_size);
+    let mut final_loss = f64::NAN;
+    for _ in 0..job.steps {
+        let mut micro = Vec::with_capacity(job.grad_accum);
+        for _ in 0..job.grad_accum {
+            micro.push(iter.next_batch());
+        }
+        let stats = trainer.step(model, &micro);
+        timer.record(stats.seconds);
+        final_loss = stats.loss;
+    }
+    // evaluation by task family
+    let test: Vec<Sample> = ds.test.iter().take(job.eval_samples).cloned().collect();
+    let mut metrics = BTreeMap::new();
+    let (_nll, ppl) = teval::eval_ppl(model, &test, job.batch_size, job.max_len);
+    metrics.insert("ppl".to_string(), ppl);
+    match task.family {
+        TaskFamily::Mcq => {
+            metrics.insert(
+                "acc".to_string(),
+                teval::eval_mcq_accuracy(model, &test, job.max_len),
+            );
+        }
+        TaskFamily::Lambada => {
+            metrics.insert(
+                "acc".to_string(),
+                teval::eval_token_accuracy(model, &test, job.max_len),
+            );
+            metrics.insert(
+                "exact".to_string(),
+                teval::eval_exact_match(model, &test, job.max_len),
+            );
+        }
+        TaskFamily::Instruction | TaskFamily::LongForm => {
+            metrics.insert(
+                "acc".to_string(),
+                teval::eval_token_accuracy(model, &test, job.max_len),
+            );
+            let n_rouge = test.len().min(6);
+            metrics.insert(
+                "rouge_l".to_string(),
+                teval::eval_rouge(model, &test[..n_rouge], 48),
+            );
+        }
+    }
+    let memory = MemoryAccountant::account(model, job.method, job.batch_size, job.max_len);
+    JobReport {
+        id: job.id,
+        dataset: job.dataset.clone(),
+        method: job.method,
+        peft: job.peft,
+        steps: trainer.step_count,
+        final_loss,
+        metrics,
+        mean_step_secs: timer.mean(),
+        memory,
+        payload_bytes: bundle.payload_bytes,
+    }
+}
+
+enum Msg {
+    Submit(FinetuneJob, mpsc::Sender<JobReport>),
+    Shutdown,
+}
+
+/// The coordinator service: a job queue drained by worker threads, each
+/// holding a reference to the shared preprocessing server.
+pub struct Coordinator {
+    tx: mpsc::Sender<Msg>,
+    workers: Vec<thread::JoinHandle<()>>,
+    submitted: u64,
+}
+
+impl Coordinator {
+    pub fn new(server_cfg: ServerConfig, n_workers: usize) -> Coordinator {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let server = Arc::new(PreprocessServer::new(server_cfg));
+        let mut workers = Vec::new();
+        for _ in 0..n_workers.max(1) {
+            let rx = Arc::clone(&rx);
+            let server = Arc::clone(&server);
+            workers.push(thread::spawn(move || loop {
+                let msg = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                match msg {
+                    Ok(Msg::Submit(job, reply)) => {
+                        let report = run_job(&server, &job);
+                        let _ = reply.send(report);
+                    }
+                    Ok(Msg::Shutdown) | Err(_) => break,
+                }
+            }));
+        }
+        Coordinator {
+            tx,
+            workers,
+            submitted: 0,
+        }
+    }
+
+    /// Submit a job; returns a receiver for its report.
+    pub fn submit(&mut self, job: FinetuneJob) -> mpsc::Receiver<JobReport> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.submitted += 1;
+        self.tx
+            .send(Msg::Submit(job, reply_tx))
+            .expect("coordinator workers gone");
+        reply_rx
+    }
+
+    /// Submit a batch and wait for all reports (returned in submit order).
+    pub fn run_all(&mut self, jobs: Vec<FinetuneJob>) -> Vec<JobReport> {
+        let receivers: Vec<_> = jobs.into_iter().map(|j| self.submit(j)).collect();
+        receivers
+            .into_iter()
+            .map(|rx| rx.recv().expect("worker dropped reply"))
+            .collect()
+    }
+
+    pub fn submitted(&self) -> u64 {
+        self.submitted
+    }
+
+    /// Graceful shutdown.
+    pub fn shutdown(mut self) {
+        for _ in 0..self.workers.len() {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        for _ in 0..self.workers.len() {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_server_cfg() -> ServerConfig {
+        let mut cfg = ServerConfig::default();
+        cfg.preset = "opt-tiny".to_string();
+        cfg.calib_samples = 8;
+        cfg.calib_batch = 4;
+        cfg
+    }
+
+    fn tiny_job(id: u64, method: MethodKind) -> FinetuneJob {
+        let mut j = FinetuneJob::new(id, "gpqa", method, PeftKind::Lora);
+        j.steps = 2;
+        j.batch_size = 2;
+        j.train_pool = 8;
+        j.eval_samples = 4;
+        j.max_len = 128;
+        j
+    }
+
+    #[test]
+    fn run_job_produces_complete_report() {
+        let server = PreprocessServer::new(tiny_server_cfg());
+        let report = run_job(&server, &tiny_job(1, MethodKind::Quaff));
+        assert_eq!(report.id, 1);
+        assert_eq!(report.steps, 2);
+        assert!(report.final_loss.is_finite());
+        assert!(report.metric("ppl") > 1.0);
+        assert!((0.0..=1.0).contains(&report.metric("acc")));
+        assert!(report.mean_step_secs > 0.0);
+        assert!(report.memory.total() > 0);
+    }
+
+    #[test]
+    fn coordinator_returns_reports_in_submit_order() {
+        let mut coord = Coordinator::new(tiny_server_cfg(), 1);
+        let jobs = vec![
+            tiny_job(10, MethodKind::Naive),
+            tiny_job(11, MethodKind::Quaff),
+            tiny_job(12, MethodKind::Fp32),
+        ];
+        let reports = coord.run_all(jobs);
+        assert_eq!(
+            reports.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![10, 11, 12]
+        );
+        assert_eq!(coord.submitted(), 3);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn memory_report_orders_methods_correctly() {
+        let server = PreprocessServer::new(tiny_server_cfg());
+        let fp32 = run_job(&server, &tiny_job(1, MethodKind::Fp32));
+        let quaff = run_job(&server, &tiny_job(2, MethodKind::Quaff));
+        let smooth_d = run_job(&server, &tiny_job(3, MethodKind::SmoothDynamic));
+        assert!(quaff.memory.total() < fp32.memory.total());
+        assert!(smooth_d.memory.total() >= fp32.memory.total());
+    }
+}

@@ -1,0 +1,261 @@
+//! Data pipeline: byte-level tokenizer, the synthetic benchmark-family
+//! generators standing in for the paper's ten datasets (DESIGN.md §2), the
+//! embedded tiny corpus for the end-to-end run, and batching/calibration
+//! sampling utilities.
+
+mod synth;
+mod tokenizer;
+
+pub use synth::{SynthTask, TaskFamily, INSTRUCTION_SETS, LONGTEXT_SETS, REASONING_SETS};
+pub use tokenizer::{Tokenizer, BOS, EOS, PAD, VOCAB_SIZE};
+
+use crate::util::prng::Rng;
+
+/// One supervised sample: `prompt` tokens conditioned on, `target` tokens
+/// carrying the loss (instruction-tuning style).
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub prompt: Vec<u32>,
+    pub target: Vec<u32>,
+}
+
+impl Sample {
+    /// Total sequence length once packed (prompt + target + EOS).
+    pub fn packed_len(&self) -> usize {
+        self.prompt.len() + self.target.len() + 1
+    }
+}
+
+/// A train/test split of samples.
+#[derive(Clone, Debug, Default)]
+pub struct Dataset {
+    pub name: String,
+    pub train: Vec<Sample>,
+    pub test: Vec<Sample>,
+}
+
+impl Dataset {
+    /// Random 80/20 split (the paper's protocol for datasets without a
+    /// predefined split).
+    pub fn from_samples(name: &str, mut samples: Vec<Sample>, rng: &mut Rng) -> Dataset {
+        rng.shuffle(&mut samples);
+        let n_train = samples.len() * 4 / 5;
+        let test = samples.split_off(n_train);
+        Dataset {
+            name: name.to_string(),
+            train: samples,
+            test,
+        }
+    }
+
+    /// Cyclic mini-batch iterator state.
+    pub fn batches(&self, batch_size: usize) -> BatchIter<'_> {
+        BatchIter {
+            samples: &self.train,
+            batch_size,
+            cursor: 0,
+        }
+    }
+}
+
+/// Cycles through training samples in fixed-size batches.
+pub struct BatchIter<'a> {
+    samples: &'a [Sample],
+    batch_size: usize,
+    cursor: usize,
+}
+
+impl<'a> BatchIter<'a> {
+    pub fn next_batch(&mut self) -> Vec<&'a Sample> {
+        let mut out = Vec::with_capacity(self.batch_size);
+        for _ in 0..self.batch_size {
+            out.push(&self.samples[self.cursor]);
+            self.cursor = (self.cursor + 1) % self.samples.len();
+        }
+        out
+    }
+}
+
+/// Pack a batch of samples into padded token rows + loss masks.
+/// Row layout: `BOS prompt… target… EOS PAD…`; the mask is true exactly on
+/// positions whose *next-token prediction target* is a target token or the
+/// EOS closing it.
+pub fn pack_batch(samples: &[&Sample], max_len: usize) -> (Vec<Vec<u32>>, Vec<Vec<bool>>) {
+    let longest = samples
+        .iter()
+        .map(|s| s.packed_len() + 1) // + BOS
+        .max()
+        .unwrap_or(1)
+        .min(max_len);
+    let mut tokens = Vec::with_capacity(samples.len());
+    let mut masks = Vec::with_capacity(samples.len());
+    for s in samples {
+        let mut row = Vec::with_capacity(longest);
+        row.push(BOS);
+        row.extend_from_slice(&s.prompt);
+        let target_start = row.len(); // first target position
+        row.extend_from_slice(&s.target);
+        row.push(EOS);
+        row.truncate(longest);
+        // mask[i] == true ⇔ position i's next token (i+1) is target/EOS
+        let mut mask = vec![false; longest];
+        for i in 0..longest.saturating_sub(1) {
+            let next = i + 1;
+            if next >= target_start && next < row.len() {
+                mask[i] = true;
+            }
+        }
+        while row.len() < longest {
+            row.push(PAD);
+        }
+        tokens.push(row);
+        masks.push(mask);
+    }
+    (tokens, masks)
+}
+
+/// The calibration sampler: `n` prompts drawn from a task family
+/// (paper: 512 samples of OIG/Chip2).
+pub fn calibration_batches(
+    task: &SynthTask,
+    n_samples: usize,
+    batch_size: usize,
+    max_len: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<Vec<u32>>> {
+    let samples: Vec<Sample> = (0..n_samples).map(|_| task.sample(rng)).collect();
+    samples
+        .chunks(batch_size)
+        .map(|chunk| {
+            let refs: Vec<&Sample> = chunk.iter().collect();
+            pack_batch(&refs, max_len).0
+        })
+        .collect()
+}
+
+/// Embedded tiny plain-text corpus for the end-to-end language-modeling
+/// example (public-domain-style prose, a few KB).
+pub const TINY_CORPUS: &str = include_str!("tiny_corpus.txt");
+
+/// Chunk the embedded corpus into LM samples of `seq_len` bytes.
+pub fn corpus_samples(tok: &Tokenizer, seq_len: usize) -> Vec<Sample> {
+    let ids = tok.encode(TINY_CORPUS);
+    ids.chunks(seq_len)
+        .filter(|c| c.len() == seq_len)
+        .map(|c| Sample {
+            prompt: Vec::new(),
+            target: c.to_vec(),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_masks_target_positions_only() {
+        let s = Sample {
+            prompt: vec![10, 11],
+            target: vec![20, 21],
+        };
+        let (toks, masks) = pack_batch(&[&s], 32);
+        let row = &toks[0];
+        let mask = &masks[0];
+        assert_eq!(row[0], BOS);
+        assert_eq!(&row[1..3], &[10, 11]);
+        assert_eq!(&row[3..5], &[20, 21]);
+        assert_eq!(row[5], EOS);
+        // row: BOS 10 11 20 21 EOS → target_start = 3
+        // mask[i] ⇔ next position (i+1) ∈ {3,4,5} (targets + EOS)
+        assert_eq!(&mask[..6], &[false, false, true, true, true, false]);
+    }
+
+    #[test]
+    fn pack_mask_semantics() {
+        let s = Sample {
+            prompt: vec![10],
+            target: vec![20],
+        };
+        let (toks, masks) = pack_batch(&[&s], 8);
+        // row: BOS 10 20 EOS → target_start = 2
+        // mask[1] (predicting row[2]=20) and mask[2] (predicting EOS) true
+        assert_eq!(toks[0][..4], [BOS, 10, 20, EOS]);
+        assert_eq!(&masks[0][..4], &[false, true, true, false]);
+    }
+
+    #[test]
+    fn pack_pads_to_longest() {
+        let a = Sample {
+            prompt: vec![1],
+            target: vec![2],
+        };
+        let b = Sample {
+            prompt: vec![1, 2, 3, 4],
+            target: vec![5, 6],
+        };
+        let (toks, _) = pack_batch(&[&a, &b], 64);
+        assert_eq!(toks[0].len(), toks[1].len());
+        assert!(toks[0].iter().rev().take(3).all(|&t| t == PAD));
+    }
+
+    #[test]
+    fn pack_truncates_at_max_len() {
+        let s = Sample {
+            prompt: (0..100).collect(),
+            target: (0..100).collect(),
+        };
+        let (toks, masks) = pack_batch(&[&s], 32);
+        assert_eq!(toks[0].len(), 32);
+        assert_eq!(masks[0].len(), 32);
+    }
+
+    #[test]
+    fn split_is_80_20_and_disjoint() {
+        let mut rng = Rng::new(1);
+        let samples: Vec<Sample> = (0..100)
+            .map(|i| Sample {
+                prompt: vec![i],
+                target: vec![i + 1000],
+            })
+            .collect();
+        let ds = Dataset::from_samples("t", samples, &mut rng);
+        assert_eq!(ds.train.len(), 80);
+        assert_eq!(ds.test.len(), 20);
+        let train_ids: std::collections::HashSet<u32> =
+            ds.train.iter().map(|s| s.prompt[0]).collect();
+        assert!(ds.test.iter().all(|s| !train_ids.contains(&s.prompt[0])));
+    }
+
+    #[test]
+    fn batch_iter_cycles() {
+        let rng = Rng::new(2);
+        let samples: Vec<Sample> = (0..5)
+            .map(|i| Sample {
+                prompt: vec![i],
+                target: vec![0],
+            })
+            .collect();
+        let ds = Dataset {
+            name: "t".into(),
+            train: samples,
+            test: vec![],
+        };
+        let mut it = ds.batches(3);
+        let b1 = it.next_batch();
+        let b2 = it.next_batch();
+        assert_eq!(b1.len(), 3);
+        assert_eq!(b2[0].prompt[0], 3);
+        assert_eq!(b2[2].prompt[0], 0); // wrapped
+        let _ = rng;
+    }
+
+    #[test]
+    fn corpus_nonempty_and_chunks() {
+        let tok = Tokenizer::new();
+        assert!(TINY_CORPUS.len() > 2000, "corpus too small");
+        let samples = corpus_samples(&tok, 64);
+        assert!(samples.len() > 10);
+        assert!(samples.iter().all(|s| s.target.len() == 64));
+    }
+}

@@ -1,0 +1,323 @@
+//! Synthetic benchmark families standing in for the paper's ten datasets.
+//!
+//! Each family generates a *learnable* supervised mapping whose difficulty
+//! and sequence profile mirrors the benchmark it substitutes (DESIGN.md §2):
+//!
+//! * [`TaskFamily::Instruction`] — Oasst1 / Self-Instruct / Finance-Alpaca /
+//!   HH-RLHF / OIG-Chip2 analogues: "Q: … A: …" pairs where the answer is a
+//!   domain-specific lexical transformation of the question words. Domains
+//!   differ by seed (vocabulary + substitution table), giving four/five
+//!   distinct distributions like Table 1's columns.
+//! * [`TaskFamily::Mcq`] — GPQA / MathQA / MMLU-Pro analogues: a stem plus
+//!   four options in the paper's prompt format; the correct option is the
+//!   domain transform of the stem keyword; the reference text is
+//!   "The answer is X" so accuracy is measured at the letter position.
+//! * [`TaskFamily::Lambada`] — long-context last-word prediction: the final
+//!   word repeats a word introduced early in a long filler context.
+//! * [`TaskFamily::LongForm`] — instruction → long structured generation
+//!   (pattern expansion), for the 4K-generation table.
+
+use super::tokenizer::Tokenizer;
+use super::Sample;
+use crate::util::prng::Rng;
+
+/// Which benchmark family to generate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskFamily {
+    Instruction,
+    Mcq,
+    Lambada,
+    LongForm,
+}
+
+/// A synthetic benchmark: family + domain seed + size profile.
+#[derive(Clone, Debug)]
+pub struct SynthTask {
+    pub name: String,
+    pub family: TaskFamily,
+    /// Domain seed: different seeds → different vocab/mapping (different
+    /// "datasets" of the same family).
+    pub domain_seed: u64,
+    /// Approximate context length in tokens (Lambada/LongForm use this).
+    pub context_len: usize,
+    tok: Tokenizer,
+    /// Domain word list.
+    words: Vec<String>,
+    /// Lexical substitution table: words[i] → words[sub[i]].
+    sub: Vec<usize>,
+}
+
+/// Named dataset analogues (paper §4.1).
+pub const INSTRUCTION_SETS: [&str; 5] =
+    ["oasst1", "self-instruct", "finance-alpaca", "hh-rlhf", "oig-chip2"];
+pub const REASONING_SETS: [&str; 3] = ["gpqa", "mathqa", "mmlu-pro"];
+pub const LONGTEXT_SETS: [&str; 2] = ["longform", "lambada"];
+
+impl SynthTask {
+    pub fn new(name: &str, family: TaskFamily, domain_seed: u64, context_len: usize) -> SynthTask {
+        let mut rng = Rng::new(domain_seed ^ 0x5EED_F00D);
+        // Domain vocabulary: short pronounceable words, domain-specific.
+        let consonants = ["b", "d", "f", "g", "k", "l", "m", "n", "p", "r", "s", "t", "v", "z"];
+        let vowels = ["a", "e", "i", "o", "u"];
+        let mut words = Vec::with_capacity(24);
+        while words.len() < 24 {
+            let w = format!(
+                "{}{}{}{}",
+                rng.pick(&consonants),
+                rng.pick(&vowels),
+                rng.pick(&consonants),
+                rng.pick(&vowels)
+            );
+            if !words.contains(&w) {
+                words.push(w);
+            }
+        }
+        // Substitution table: a random derangement-ish permutation.
+        let mut sub: Vec<usize> = (0..words.len()).collect();
+        rng.shuffle(&mut sub);
+        SynthTask {
+            name: name.to_string(),
+            family,
+            domain_seed,
+            context_len,
+            tok: Tokenizer::new(),
+            words,
+            sub,
+        }
+    }
+
+    /// Standard instances by dataset name (maps the paper's ten benchmarks).
+    pub fn by_name(name: &str) -> Option<SynthTask> {
+        let inst = |n: &str, seed| Some(SynthTask::new(n, TaskFamily::Instruction, seed, 64));
+        match name {
+            "oasst1" => inst(name, 101),
+            "self-instruct" => inst(name, 102),
+            "finance-alpaca" => inst(name, 103),
+            "hh-rlhf" => inst(name, 104),
+            "oig-chip2" => inst(name, 105),
+            "gpqa" => Some(SynthTask::new(name, TaskFamily::Mcq, 201, 96)),
+            "mathqa" => Some(SynthTask::new(name, TaskFamily::Mcq, 202, 96)),
+            "mmlu-pro" => Some(SynthTask::new(name, TaskFamily::Mcq, 203, 96)),
+            "lambada" => Some(SynthTask::new(name, TaskFamily::Lambada, 301, 192)),
+            "longform" => Some(SynthTask::new(name, TaskFamily::LongForm, 302, 192)),
+            _ => None,
+        }
+    }
+
+    fn word(&self, i: usize) -> &str {
+        &self.words[i % self.words.len()]
+    }
+
+    /// The learnable transform: word i → word sub[i].
+    fn transform(&self, i: usize) -> &str {
+        &self.words[self.sub[i % self.words.len()]]
+    }
+
+    /// Generate one sample.
+    pub fn sample(&self, rng: &mut Rng) -> Sample {
+        match self.family {
+            TaskFamily::Instruction => self.gen_instruction(rng),
+            TaskFamily::Mcq => self.gen_mcq(rng),
+            TaskFamily::Lambada => self.gen_lambada(rng),
+            TaskFamily::LongForm => self.gen_longform(rng),
+        }
+    }
+
+    fn gen_instruction(&self, rng: &mut Rng) -> Sample {
+        let n = 2 + rng.below(4);
+        let idxs: Vec<usize> = (0..n).map(|_| rng.below(self.words.len())).collect();
+        let q: Vec<&str> = idxs.iter().map(|&i| self.word(i)).collect();
+        let a: Vec<&str> = idxs.iter().map(|&i| self.transform(i)).collect();
+        Sample {
+            prompt: self.tok.encode(&format!("Q: {} A:", q.join(" "))),
+            target: self.tok.encode(&format!(" {}", a.join(" "))),
+        }
+    }
+
+    /// Paper's reasoning prompt format:
+    /// "#Input Please select one of the following options: (A)… (D)…"
+    /// reference: "The answer is #Correct."
+    fn gen_mcq(&self, rng: &mut Rng) -> Sample {
+        let stem_i = rng.below(self.words.len());
+        let correct = self.transform(stem_i).to_string();
+        // distractors: three other words
+        let mut opts: Vec<String> = vec![correct.clone()];
+        while opts.len() < 4 {
+            let w = self.word(rng.below(self.words.len())).to_string();
+            if !opts.contains(&w) {
+                opts.push(w);
+            }
+        }
+        rng.shuffle(&mut opts);
+        let correct_pos = opts.iter().position(|w| *w == correct).unwrap();
+        let letter = ["A", "B", "C", "D"][correct_pos];
+        let prompt = format!(
+            "#{} Please select one of the following options: (A) {}. (B) {}. (C) {}. (D) {}.",
+            self.word(stem_i),
+            opts[0],
+            opts[1],
+            opts[2],
+            opts[3]
+        );
+        Sample {
+            prompt: self.tok.encode(&prompt),
+            target: self.tok.encode(&format!(" The answer is {letter}.")),
+        }
+    }
+
+    fn gen_lambada(&self, rng: &mut Rng) -> Sample {
+        // a "story" of filler words; one keyword planted early; the final
+        // word must repeat the keyword (long-range retrieval).
+        let key_i = rng.below(self.words.len());
+        let key = self.word(key_i).to_string();
+        let filler_n = (self.context_len / 5).max(8);
+        let mut parts: Vec<String> = Vec::with_capacity(filler_n + 2);
+        parts.push(format!("the {key} said"));
+        for _ in 0..filler_n {
+            parts.push(self.word(rng.below(self.words.len())).to_string());
+        }
+        let ctx = parts.join(" ");
+        Sample {
+            prompt: self.tok.encode(&format!("{ctx} . so spoke the")),
+            target: self.tok.encode(&format!(" {key}")),
+        }
+    }
+
+    fn gen_longform(&self, rng: &mut Rng) -> Sample {
+        // "expand <w> x<n>" → the transform of w repeated n times with
+        // separators: long, fully-determined output.
+        let i = rng.below(self.words.len());
+        let reps = (self.context_len / (self.words[0].len() + 2)).clamp(4, 64);
+        let out: Vec<&str> = (0..reps).map(|_| self.transform(i)).collect();
+        Sample {
+            prompt: self.tok.encode(&format!("expand {} x{} :", self.word(i), reps)),
+            target: self.tok.encode(&format!(" {}", out.join(", "))),
+        }
+    }
+
+    /// For MCQ eval: the four option-letter token ids (byte tokens).
+    pub fn option_letter_tokens() -> [u32; 4] {
+        [b'A' as u32, b'B' as u32, b'C' as u32, b'D' as u32]
+    }
+
+    /// For MCQ eval: position offset of the letter within the target
+    /// (" The answer is X." → index of X).
+    pub fn mcq_letter_offset() -> usize {
+        " The answer is ".len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_domain_seed() {
+        let a = SynthTask::new("x", TaskFamily::Instruction, 7, 64);
+        let b = SynthTask::new("x", TaskFamily::Instruction, 7, 64);
+        let c = SynthTask::new("x", TaskFamily::Instruction, 8, 64);
+        assert_eq!(a.words, b.words);
+        assert_ne!(a.words, c.words);
+    }
+
+    #[test]
+    fn instruction_mapping_consistent() {
+        let t = SynthTask::by_name("oasst1").unwrap();
+        let mut rng = Rng::new(1);
+        // same question words always map to the same answer words
+        let tok = Tokenizer::new();
+        let s1 = t.sample(&mut rng);
+        let q = tok.decode(&s1.prompt);
+        let a = tok.decode(&s1.target);
+        assert!(q.starts_with("Q: ") && q.ends_with(" A:"), "{q}");
+        assert!(!a.is_empty());
+        // transform is a function: generate many, build map, check consistency
+        let mut map = std::collections::HashMap::new();
+        for _ in 0..200 {
+            let s = t.sample(&mut rng);
+            let qs = tok.decode(&s.prompt);
+            let as_ = tok.decode(&s.target);
+            let qw: Vec<&str> = qs[3..qs.len() - 3].split(' ').collect();
+            let aw: Vec<&str> = as_.trim().split(' ').collect();
+            assert_eq!(qw.len(), aw.len());
+            for (q, a) in qw.iter().zip(&aw) {
+                let prev = map.insert(q.to_string(), a.to_string());
+                if let Some(p) = prev {
+                    assert_eq!(&p, a, "mapping must be a function: {q}");
+                }
+            }
+        }
+        assert!(map.len() > 10);
+    }
+
+    #[test]
+    fn mcq_has_exactly_one_correct_letter() {
+        let t = SynthTask::by_name("gpqa").unwrap();
+        let tok = Tokenizer::new();
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let s = t.sample(&mut rng);
+            let target = tok.decode(&s.target);
+            assert!(target.starts_with(" The answer is "));
+            let letter = target.as_bytes()[SynthTask::mcq_letter_offset()] as char;
+            assert!(('A'..='D').contains(&letter), "{target}");
+            let prompt = tok.decode(&s.prompt);
+            assert!(prompt.contains("(A)") && prompt.contains("(D)"));
+        }
+    }
+
+    #[test]
+    fn mcq_answer_follows_transform_rule() {
+        let t = SynthTask::by_name("gpqa").unwrap();
+        let tok = Tokenizer::new();
+        let mut rng = Rng::new(3);
+        let s = t.sample(&mut rng);
+        let prompt = tok.decode(&s.prompt);
+        let target = tok.decode(&s.target);
+        // stem word
+        let stem = prompt[1..].split(' ').next().unwrap();
+        let stem_idx = t.words.iter().position(|w| w == stem).unwrap();
+        let expect = t.transform(stem_idx);
+        // the lettered option equals the transform
+        let letter = target.as_bytes()[SynthTask::mcq_letter_offset()] as char;
+        let marker = format!("({letter}) {expect}.");
+        assert!(prompt.contains(&marker), "{prompt} :: {marker}");
+    }
+
+    #[test]
+    fn lambada_key_planted_early_and_answer_matches() {
+        let t = SynthTask::by_name("lambada").unwrap();
+        let tok = Tokenizer::new();
+        let mut rng = Rng::new(4);
+        for _ in 0..20 {
+            let s = t.sample(&mut rng);
+            let prompt = tok.decode(&s.prompt);
+            let key = tok.decode(&s.target);
+            let key = key.trim();
+            assert!(prompt.starts_with(&format!("the {key} said")), "{prompt}");
+            assert!(prompt.ends_with("so spoke the"));
+            assert!(s.prompt.len() > 100, "long context expected");
+        }
+    }
+
+    #[test]
+    fn longform_output_is_long_and_regular() {
+        let t = SynthTask::by_name("longform").unwrap();
+        let mut rng = Rng::new(5);
+        let s = t.sample(&mut rng);
+        assert!(s.target.len() > 100);
+        let tok = Tokenizer::new();
+        let out = tok.decode(&s.target);
+        let parts: Vec<&str> = out.trim().split(", ").collect();
+        assert!(parts.len() >= 4);
+        assert!(parts.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn all_named_benchmarks_resolve() {
+        for n in INSTRUCTION_SETS.iter().chain(&REASONING_SETS).chain(&LONGTEXT_SETS) {
+            assert!(SynthTask::by_name(n).is_some(), "{n}");
+        }
+        assert!(SynthTask::by_name("imagenet").is_none());
+    }
+}

@@ -1,0 +1,79 @@
+//! Byte-level tokenizer with special tokens.
+//!
+//! Token ids 0–255 are raw bytes; PAD/BOS/EOS live above. The model vocab
+//! (288) leaves headroom for future specials. Byte-level keeps the
+//! tokenizer dependency-free and exactly reversible — dataset difficulty is
+//! controlled by the synthetic generators, not the vocabulary.
+
+/// Raw byte range size.
+pub const BYTE_TOKENS: u32 = 256;
+pub const PAD: u32 = 256;
+pub const BOS: u32 = 257;
+pub const EOS: u32 = 258;
+/// Model vocabulary size (power-of-two-ish headroom above specials).
+pub const VOCAB_SIZE: usize = 288;
+
+/// Byte-level tokenizer.
+#[derive(Clone, Debug, Default)]
+pub struct Tokenizer;
+
+impl Tokenizer {
+    pub fn new() -> Tokenizer {
+        Tokenizer
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        VOCAB_SIZE
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.bytes().map(|b| b as u32).collect()
+    }
+
+    /// Decode ids back to text; specials and out-of-range ids are dropped,
+    /// invalid UTF-8 is replaced.
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let bytes: Vec<u8> = ids
+            .iter()
+            .filter(|&&t| t < BYTE_TOKENS)
+            .map(|&t| t as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = Tokenizer::new();
+        let s = "Q: what is 2+2? A: four.";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let t = Tokenizer::new();
+        let s = "héllo — ∑";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn specials_dropped_on_decode() {
+        let t = Tokenizer::new();
+        let mut ids = t.encode("ab");
+        ids.insert(0, BOS);
+        ids.push(EOS);
+        ids.push(PAD);
+        assert_eq!(t.decode(&ids), "ab");
+    }
+
+    #[test]
+    fn specials_fit_vocab() {
+        assert!((PAD as usize) < VOCAB_SIZE);
+        assert!((BOS as usize) < VOCAB_SIZE);
+        assert!((EOS as usize) < VOCAB_SIZE);
+    }
+}

@@ -1,0 +1,34 @@
+//! # Quaff — Quantized Parameter-Efficient Fine-Tuning under OSSH
+//!
+//! A full-system reproduction of *"Quaff: Quantized Parameter-Efficient
+//! Fine-Tuning under Outlier Spatial Stability Hypothesis"* (ACL 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the runtime: INT8 quantization substrate, the six
+//!   WAQ methods (FP32 / Naive / LLM.int8 / Smooth_S / Smooth_D / Quaff), a
+//!   trainable decoder-only transformer with PEFT adapters, the calibration +
+//!   server–client coordinator, the PJRT runtime that executes AOT-compiled
+//!   JAX artifacts, and the report harness regenerating every paper table
+//!   and figure.
+//! * **L2 (`python/compile/model.py`)** — the JAX model + LoRA train step,
+//!   lowered once to HLO text by `python/compile/aot.py`.
+//! * **L1 (`python/compile/kernels/`)** — the fused Pallas quantized-linear
+//!   kernel (interpret mode on CPU; MXU-shaped block specs for TPU).
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod coordinator;
+pub mod data;
+pub mod methods;
+pub mod metrics;
+pub mod model;
+pub mod outlier;
+pub mod peft;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod scaling;
+pub mod tensor;
+pub mod train;
+pub mod util;

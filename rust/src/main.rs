@@ -1,0 +1,181 @@
+//! `quaff` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   report <id|all>   regenerate a paper table/figure (see DESIGN.md §6)
+//!   finetune          run one fine-tuning job through the coordinator
+//!   calibrate         run calibration only; print the outlier registry
+//!   runtime           drive the AOT JAX artifacts through PJRT
+//!   info              presets and environment
+//!
+//! Examples:
+//!   quaff report fig1 --steps 12
+//!   quaff finetune --dataset gpqa --method quaff --peft lora --steps 30
+//!   quaff runtime --artifacts artifacts --steps 20
+
+use anyhow::{anyhow, bail, Result};
+use quaff::coordinator::{run_job, FinetuneJob, PreprocessServer, ServerConfig};
+use quaff::data::{corpus_samples, Tokenizer};
+use quaff::methods::MethodKind;
+use quaff::model::ModelConfig;
+use quaff::peft::PeftKind;
+use quaff::report::{self, ReportOpts};
+use quaff::runtime::{Engine, TrainSession};
+use quaff::util::cli::Args;
+use quaff::util::prng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.command() {
+        Some("report") => cmd_report(&args),
+        Some("finetune") => cmd_finetune(&args),
+        Some("calibrate") => cmd_calibrate(&args),
+        Some("runtime") => cmd_runtime(&args),
+        Some("info") | None => cmd_info(),
+        Some(other) => {
+            bail!("unknown command '{other}'; try: report, finetune, calibrate, runtime, info")
+        }
+    }
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: quaff report <id|all>"))?;
+    let opts = ReportOpts::from_args(args);
+    let ids: Vec<&str> = if id == "all" {
+        report::ALL_REPORTS.to_vec()
+    } else {
+        vec![id.as_str()]
+    };
+    let mut all = String::new();
+    for id in ids {
+        eprintln!("[report] generating {id} …");
+        let (md, secs) = quaff::util::timed(|| report::generate(id, &opts));
+        eprintln!("[report] {id} done in {secs:.1}s");
+        print!("{md}");
+        all.push_str(&md);
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, &all)?;
+        eprintln!("[report] written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_finetune(args: &Args) -> Result<()> {
+    let dataset = args.get_or("dataset", "gpqa").to_string();
+    let method = MethodKind::parse(args.get_or("method", "quaff"))
+        .ok_or_else(|| anyhow!("bad --method"))?;
+    let peft = PeftKind::parse(args.get_or("peft", "lora")).ok_or_else(|| anyhow!("bad --peft"))?;
+    let mut server_cfg = ServerConfig::default();
+    server_cfg.preset = args.get_or("preset", "phi-mini").to_string();
+    server_cfg.calib_task = args.get_or("calib-task", "oig-chip2").to_string();
+    let server = PreprocessServer::new(server_cfg);
+    let mut job = FinetuneJob::new(0, &dataset, method, peft);
+    job.steps = args.get_parse("steps", 30);
+    job.batch_size = args.get_parse("batch", 8);
+    job.lr = args.get_parse("lr", 2e-3);
+    job.seed = args.get_parse("seed", 7);
+    eprintln!(
+        "[finetune] {dataset} with {} + {} for {} steps …",
+        method.label(),
+        peft.label(),
+        job.steps
+    );
+    let r = run_job(&server, &job);
+    println!("dataset        : {}", r.dataset);
+    println!("method / peft  : {} / {}", r.method.label(), r.peft.label());
+    println!("steps          : {}", r.steps);
+    println!("final loss     : {:.4}", r.final_loss);
+    for (k, v) in &r.metrics {
+        println!("{k:<15}: {v:.4}");
+    }
+    println!("latency/step   : {:.3}s", r.mean_step_secs);
+    println!("memory total   : {}", quaff::util::fmt_bytes(r.memory.total()));
+    println!("bundle payload : {}", quaff::util::fmt_bytes(r.payload_bytes));
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let mut cfg = ServerConfig::default();
+    cfg.preset = args.get_or("preset", "phi-mini").to_string();
+    cfg.calib_task = args.get_or("calib-task", "oig-chip2").to_string();
+    cfg.calib_samples = args.get_parse("samples", 64);
+    let server = PreprocessServer::new(cfg);
+    let bundle = server.prepare(MethodKind::Quaff, PeftKind::Lora);
+    println!("preset           : {}", bundle.preset);
+    println!(
+        "payload bytes    : {}",
+        quaff::util::fmt_bytes(bundle.payload_bytes)
+    );
+    println!("outlier overhead : {:.3}%", bundle.outlier_overhead * 100.0);
+    println!("layers:");
+    for (name, set) in bundle.registry.layers() {
+        println!("  {name:<32} |O| = {:<3} {:?}", set.len(), set.channels);
+    }
+    Ok(())
+}
+
+fn cmd_runtime(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let steps: u64 = args.get_parse("steps", 10);
+    eprintln!("[runtime] loading artifacts from {} …", dir.display());
+    let engine = Engine::load(&dir)?;
+    println!("platform : {}", engine.platform());
+    println!("preset   : {}", engine.manifest.preset);
+    for (name, secs) in &engine.compile_secs {
+        println!("compiled {name:<14} in {secs:.2}s");
+    }
+    let m = engine.manifest.clone();
+    let mut session = TrainSession::new(&engine)?;
+    // batches from the embedded tiny corpus (real text), padded to B×S
+    let tok = Tokenizer::new();
+    let samples = corpus_samples(&tok, m.seq);
+    let mut rng = Rng::new(1);
+    let n = m.batch * m.seq;
+    println!(
+        "training {} steps on the embedded corpus (B={} S={}) …",
+        steps, m.batch, m.seq
+    );
+    for step in 0..steps {
+        let mut tokens = Vec::with_capacity(n);
+        for _ in 0..m.batch {
+            let s = &samples[rng.below(samples.len())];
+            tokens.extend(s.target.iter().map(|&t| t as i32));
+        }
+        let mask = vec![1.0f32; n];
+        let loss = session.step(&tokens, &mask)?;
+        println!("step {step:>4}  loss {loss:.4}");
+    }
+    let eval_tokens: Vec<i32> = samples[0]
+        .target
+        .iter()
+        .map(|&t| t as i32)
+        .cycle()
+        .take(n)
+        .collect();
+    let (eval_loss, _) = session.eval(&eval_tokens, &vec![1.0; n])?;
+    println!("eval loss: {eval_loss:.4}");
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("quaff — Quantized PEFT under OSSH (ACL 2025 reproduction)");
+    println!("\nmodel presets:");
+    for name in ["opt-tiny", "phi-mini", "llama-tiny", "e2e-small"] {
+        let cfg = ModelConfig::preset(name).unwrap();
+        println!(
+            "  {name:<12} d={:<4} L={:<2} h={:<2} ff={:<5} ≈{} params",
+            cfg.d_model,
+            cfg.n_layers,
+            cfg.n_heads,
+            cfg.d_ff,
+            cfg.base_params()
+        );
+    }
+    println!("\nmethods: fp32 naive llmint8 smooth_s smooth_d quaff quaff-nomom");
+    println!("peft   : lora prompt ptuning ia3");
+    println!("reports: {}", report::ALL_REPORTS.join(" "));
+    Ok(())
+}

@@ -1,0 +1,419 @@
+//! Baseline WAQ methods: FP32, Naive W8A8, LLM.int8, SmoothQuant
+//! static/dynamic — each performing exactly the per-step work the paper
+//! attributes to it (§2.3, Appendix A).
+
+use super::{ste_backward, QuantMethod};
+use crate::outlier::ChannelStats;
+use crate::quant::{self, QuantizedWeights};
+use crate::scaling;
+use crate::tensor::Matrix;
+
+/// Full-precision reference: `Y = X · W` in f32.
+pub struct Fp32Linear {
+    w: Matrix,
+}
+
+impl Fp32Linear {
+    pub fn new(w: Matrix) -> Self {
+        Fp32Linear { w }
+    }
+}
+
+impl QuantMethod for Fp32Linear {
+    fn name(&self) -> &'static str {
+        "FP32"
+    }
+
+    fn forward(&mut self, x: &Matrix) -> Matrix {
+        x.matmul(&self.w)
+    }
+
+    fn backward_input(&self, dy: &Matrix) -> Matrix {
+        dy.matmul_bt(&self.w)
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.w.data().len() * 4
+    }
+
+    fn cin(&self) -> usize {
+        self.w.rows()
+    }
+
+    fn cout(&self) -> usize {
+        self.w.cols()
+    }
+}
+
+/// Naive W8A8 (Eq. 2): per-OC weight quant once, per-token activation quant
+/// each step, integer matmul. Fast and small, but outliers inflate Δ_X.
+pub struct NaiveW8A8Linear {
+    qw: QuantizedWeights,
+}
+
+impl NaiveW8A8Linear {
+    pub fn new(w: Matrix) -> Self {
+        NaiveW8A8Linear {
+            qw: QuantizedWeights::quantize(&w),
+        }
+    }
+}
+
+impl QuantMethod for NaiveW8A8Linear {
+    fn name(&self) -> &'static str {
+        "Naive"
+    }
+
+    fn forward(&mut self, x: &Matrix) -> Matrix {
+        let (x_int, dx) = quant::quantize_per_token(x);
+        let mut out = vec![0.0f32; x.rows() * self.qw.w_int.cols()];
+        self.qw.matmul_into(&x_int, &dx, &mut out);
+        Matrix::from_vec(x.rows(), self.qw.w_int.cols(), out)
+    }
+
+    fn backward_input(&self, dy: &Matrix) -> Matrix {
+        ste_backward(dy, &self.qw.w_int, &self.qw.deltas)
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.qw.nbytes()
+    }
+
+    fn cin(&self) -> usize {
+        self.qw.w_int.rows()
+    }
+
+    fn cout(&self) -> usize {
+        self.qw.w_int.cols()
+    }
+}
+
+/// LLM.int8 (Eq. 10/11): per-step *dynamic* outlier detection by absolute
+/// threshold σ; outlier columns run in f32 against weight rows **dequantized
+/// from the int8 store on every step** (the latency cost the paper calls
+/// out); the rest runs int8.
+pub struct LlmInt8Linear {
+    qw: QuantizedWeights,
+    sigma: f32,
+    /// Running count of dequantized rows (diagnostics: card(O) growth).
+    pub dequant_rows_total: u64,
+    pub steps: u64,
+}
+
+impl LlmInt8Linear {
+    pub fn new(w: Matrix, sigma: f32) -> Self {
+        LlmInt8Linear {
+            qw: QuantizedWeights::quantize(&w),
+            sigma,
+            dequant_rows_total: 0,
+            steps: 0,
+        }
+    }
+
+    /// Mean detected-outlier count per step.
+    pub fn mean_outlier_cols(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.dequant_rows_total as f64 / self.steps as f64
+        }
+    }
+}
+
+impl QuantMethod for LlmInt8Linear {
+    fn name(&self) -> &'static str {
+        "LLM.int8"
+    }
+
+    fn forward(&mut self, x: &Matrix) -> Matrix {
+        let t = x.rows();
+        let cout = self.qw.w_int.cols();
+        // 1. dynamic detection: columns whose |max| exceeds σ
+        let col_max = x.col_abs_max();
+        let outlier_cols: Vec<usize> = (0..x.cols())
+            .filter(|&c| col_max[c] > self.sigma)
+            .collect();
+        self.dequant_rows_total += outlier_cols.len() as u64;
+        self.steps += 1;
+        // 2. regular part: zero outlier columns, int8 path
+        let mut x_reg = x.clone();
+        for ti in 0..t {
+            let row = x_reg.row_mut(ti);
+            for &c in &outlier_cols {
+                row[c] = 0.0;
+            }
+        }
+        let (x_int, dx) = quant::quantize_per_token(&x_reg);
+        let mut out = vec![0.0f32; t * cout];
+        self.qw.matmul_into(&x_int, &dx, &mut out);
+        let mut y = Matrix::from_vec(t, cout, out);
+        // 3. outlier part in f32 — requires dequantizing W rows *every step*
+        if !outlier_cols.is_empty() {
+            let x_o = x.select_cols(&outlier_cols);
+            let w_o = quant::dequantize_rows_per_oc(&self.qw.w_int, &self.qw.deltas, &outlier_cols);
+            let corr = x_o.matmul(&w_o);
+            y.add_assign(&corr);
+        }
+        y
+    }
+
+    fn backward_input(&self, dy: &Matrix) -> Matrix {
+        ste_backward(dy, &self.qw.w_int, &self.qw.deltas)
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.qw.nbytes()
+    }
+
+    fn cin(&self) -> usize {
+        self.qw.w_int.rows()
+    }
+
+    fn cout(&self) -> usize {
+        self.qw.w_int.cols()
+    }
+}
+
+/// SmoothQuant **static** (Smooth_S): factors fixed from calibration data;
+/// `Ŵ = s·W` quantized once; activations rescaled by `s^{-1}` every step.
+/// Cheap, but mismatched once the activation distribution shifts (Fig. 11).
+pub struct SmoothStaticLinear {
+    qw_scaled: QuantizedWeights,
+    s: Vec<f32>,
+}
+
+impl SmoothStaticLinear {
+    pub fn new(w: Matrix, calib: &ChannelStats, alpha: f32) -> Self {
+        // per-input-channel weight max = max over row i of |W|
+        let w_row_max: Vec<f32> = (0..w.rows())
+            .map(|i| w.row(i).iter().fold(0.0f32, |m, &v| m.max(v.abs())))
+            .collect();
+        let s = scaling::smoothquant_factors(&calib.abs_max, &w_row_max, alpha);
+        let mut w_scaled = w;
+        scaling::apply_row_scale(&mut w_scaled, &s);
+        SmoothStaticLinear {
+            qw_scaled: QuantizedWeights::quantize(&w_scaled),
+            s,
+        }
+    }
+}
+
+impl QuantMethod for SmoothStaticLinear {
+    fn name(&self) -> &'static str {
+        "Smooth_S"
+    }
+
+    fn forward(&mut self, x: &Matrix) -> Matrix {
+        let mut x_hat = x.clone();
+        scaling::apply_full_inverse_scale(&mut x_hat, &self.s);
+        let (x_int, dx) = quant::quantize_per_token(&x_hat);
+        let mut out = vec![0.0f32; x.rows() * self.qw_scaled.w_int.cols()];
+        self.qw_scaled.matmul_into(&x_int, &dx, &mut out);
+        Matrix::from_vec(x.rows(), self.qw_scaled.w_int.cols(), out)
+    }
+
+    fn backward_input(&self, dy: &Matrix) -> Matrix {
+        // d(X)= dY·Ŵᵀ ∘ s^{-1}  (chain rule through X̂ = X·s^{-1}, Y = X̂Ŵ)
+        let mut dx = ste_backward(dy, &self.qw_scaled.w_int, &self.qw_scaled.deltas);
+        let inv: Vec<f32> = self.s.iter().map(|&v| 1.0 / v).collect();
+        dx.scale_cols(&inv);
+        dx
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.qw_scaled.nbytes() + self.s.len() * 4
+    }
+
+    fn cin(&self) -> usize {
+        self.qw_scaled.w_int.rows()
+    }
+
+    fn cout(&self) -> usize {
+        self.qw_scaled.w_int.cols()
+    }
+
+    fn scaling_factors(&self) -> Option<Vec<f32>> {
+        Some(self.s.clone())
+    }
+}
+
+/// SmoothQuant **dynamic** (Smooth_D): recompute `s` from the *current*
+/// batch, rescale and **requantize the full weight matrix every step** —
+/// which forces keeping W in f32 (the memory cost) and paying a full
+/// quantization pass per step (the latency cost).
+pub struct SmoothDynamicLinear {
+    w_full: Matrix,
+    w_row_max: Vec<f32>,
+    alpha: f32,
+    last_s: Vec<f32>,
+}
+
+impl SmoothDynamicLinear {
+    pub fn new(w: Matrix, alpha: f32) -> Self {
+        let w_row_max: Vec<f32> = (0..w.rows())
+            .map(|i| w.row(i).iter().fold(0.0f32, |m, &v| m.max(v.abs())))
+            .collect();
+        let cin = w.rows();
+        SmoothDynamicLinear {
+            w_full: w,
+            w_row_max,
+            alpha,
+            last_s: vec![1.0; cin],
+        }
+    }
+}
+
+impl QuantMethod for SmoothDynamicLinear {
+    fn name(&self) -> &'static str {
+        "Smooth_D"
+    }
+
+    fn forward(&mut self, x: &Matrix) -> Matrix {
+        // 1. dynamic factors from the live batch
+        let s = scaling::smoothquant_factors(&x.col_abs_max(), &self.w_row_max, self.alpha);
+        // 2. the coupling bottleneck: rescale + requantize the FULL weight
+        let mut w_scaled = self.w_full.clone();
+        scaling::apply_row_scale(&mut w_scaled, &s);
+        let qw = QuantizedWeights::quantize(&w_scaled);
+        // 3. scaled activation path
+        let mut x_hat = x.clone();
+        scaling::apply_full_inverse_scale(&mut x_hat, &s);
+        let (x_int, dx) = quant::quantize_per_token(&x_hat);
+        let mut out = vec![0.0f32; x.rows() * qw.w_int.cols()];
+        qw.matmul_into(&x_int, &dx, &mut out);
+        self.last_s = s;
+        Matrix::from_vec(x.rows(), qw.w_int.cols(), out)
+    }
+
+    fn backward_input(&self, dy: &Matrix) -> Matrix {
+        // keeps full-precision W anyway, so the backward is exact
+        dy.matmul_bt(&self.w_full)
+    }
+
+    fn weight_bytes(&self) -> usize {
+        // full-precision master + the transient scaled/quantized copies
+        self.w_full.data().len() * 4
+    }
+
+    fn cin(&self) -> usize {
+        self.w_full.rows()
+    }
+
+    fn cout(&self) -> usize {
+        self.w_full.cols()
+    }
+
+    fn scaling_factors(&self) -> Option<Vec<f32>> {
+        Some(self.last_s.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::error_between;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn fp32_is_exact() {
+        let mut r = Rng::new(31);
+        let w = Matrix::randn(16, 8, &mut r, 0.5);
+        let x = Matrix::randn(4, 16, &mut r, 1.0);
+        let mut m = Fp32Linear::new(w.clone());
+        let y = m.forward(&x);
+        assert_eq!(y.data(), x.matmul(&w).data());
+        assert_eq!(m.weight_bytes(), 16 * 8 * 4);
+    }
+
+    #[test]
+    fn llmint8_detects_and_corrects_outliers() {
+        let mut r = Rng::new(32);
+        let w = Matrix::randn(32, 16, &mut r, 0.3);
+        let mut x = Matrix::randn(8, 32, &mut r, 1.0);
+        // plant a hot column above sigma
+        for t in 0..8 {
+            x.set(t, 5, 80.0 + t as f32);
+        }
+        let want = x.matmul(&w);
+        let mut m = LlmInt8Linear::new(w, 6.0);
+        let y = m.forward(&x);
+        assert_eq!(m.dequant_rows_total, 1);
+        let err = error_between(&want, &y);
+        assert!(err.sqnr_db > 25.0, "sqnr {}", err.sqnr_db);
+    }
+
+    #[test]
+    fn llmint8_outlier_count_grows_with_hot_columns() {
+        let mut r = Rng::new(33);
+        let w = Matrix::randn(64, 16, &mut r, 0.3);
+        let mut m = LlmInt8Linear::new(w, 6.0);
+        for hot_n in [0usize, 4, 16] {
+            let mut x = Matrix::randn(4, 64, &mut r, 1.0);
+            for c in 0..hot_n {
+                for t in 0..4 {
+                    x.set(t, c * 3, 50.0);
+                }
+            }
+            let _ = m.forward(&x);
+        }
+        assert!(m.dequant_rows_total >= 4 + 16);
+        assert_eq!(m.steps, 3);
+    }
+
+    #[test]
+    fn smooth_dynamic_tracks_current_batch() {
+        let mut r = Rng::new(34);
+        let w = Matrix::randn(32, 16, &mut r, 0.3);
+        let mut m = SmoothDynamicLinear::new(w, 0.5);
+        let mut x = Matrix::randn(4, 32, &mut r, 1.0);
+        for t in 0..4 {
+            x.set(t, 7, 100.0);
+        }
+        let _ = m.forward(&x);
+        let s = m.scaling_factors().unwrap();
+        // channel 7's factor should dominate all others
+        let max_other = (0..32)
+            .filter(|&c| c != 7)
+            .map(|c| s[c])
+            .fold(0.0f32, f32::max);
+        assert!(s[7] > 2.0 * max_other, "s7={} max_other={}", s[7], max_other);
+    }
+
+    #[test]
+    fn smooth_static_factors_fixed_across_steps() {
+        let mut r = Rng::new(35);
+        let w = Matrix::randn(32, 16, &mut r, 0.3);
+        let mut calib = ChannelStats::new(32);
+        for _ in 0..4 {
+            calib.observe(&Matrix::randn(8, 32, &mut r, 1.0), 100.0);
+        }
+        let mut m = SmoothStaticLinear::new(w, &calib, 0.5);
+        let s0 = m.scaling_factors().unwrap();
+        let _ = m.forward(&Matrix::randn(4, 32, &mut r, 5.0));
+        let s1 = m.scaling_factors().unwrap();
+        assert_eq!(s0, s1);
+    }
+
+    #[test]
+    fn backward_shapes() {
+        let mut r = Rng::new(36);
+        let w = Matrix::randn(24, 10, &mut r, 0.3);
+        let dy = Matrix::randn(3, 10, &mut r, 1.0);
+        let calib = {
+            let mut c = ChannelStats::new(24);
+            c.observe(&Matrix::randn(4, 24, &mut r, 1.0), 100.0);
+            c
+        };
+        let methods: Vec<Box<dyn QuantMethod>> = vec![
+            Box::new(Fp32Linear::new(w.clone())),
+            Box::new(NaiveW8A8Linear::new(w.clone())),
+            Box::new(LlmInt8Linear::new(w.clone(), 6.0)),
+            Box::new(SmoothStaticLinear::new(w.clone(), &calib, 0.5)),
+            Box::new(SmoothDynamicLinear::new(w.clone(), 0.5)),
+        ];
+        for m in &methods {
+            let dx = m.backward_input(&dy);
+            assert_eq!((dx.rows(), dx.cols()), (3, 24), "{}", m.name());
+        }
+    }
+}

@@ -1,0 +1,341 @@
+//! Weight–activation quantization methods for a frozen linear layer —
+//! the paper's comparison set (§4.1 baselines + Quaff itself).
+//!
+//! Every method implements [`QuantMethod`]: it owns the frozen weight in
+//! whatever representation the method prescribes, and its `forward`
+//! faithfully performs the *work the paper attributes to the method*:
+//!
+//! | method      | weights stored        | per-step extra work              |
+//! |-------------|-----------------------|----------------------------------|
+//! | `Fp32`      | f32                   | —                                |
+//! | `Naive`     | int8 + Δ              | per-token act quant              |
+//! | `LLM.int8`  | int8 + Δ              | realtime outlier detect + row **dequant** (Eq. 10/11) |
+//! | `Smooth_S`  | int8(sW) + Δ, static s| full-axis activation rescale     |
+//! | `Smooth_D`  | **f32** (must keep!)  | recompute s, rescale + **requantize W** |
+//! | `Quaff`     | int8 + Δ + f32 `W_O`  | momentum s_O, quantize tiny ŵ, fused correction (Eq. 9) |
+//!
+//! Backward passes use the straight-through estimator: `dX = dY · Wᵀ` with
+//! the stored (de)quantized weights, frozen weights get no gradient — the
+//! PEFT adapters around the layer (see `peft`) carry all trainable state.
+
+mod baselines;
+mod quaff;
+
+pub use baselines::{Fp32Linear, LlmInt8Linear, NaiveW8A8Linear, SmoothDynamicLinear, SmoothStaticLinear};
+pub use quaff::QuaffLinear;
+
+use crate::outlier::{ChannelStats, OutlierSet};
+use crate::tensor::{I8Matrix, Matrix};
+
+/// A frozen-weight linear operator under some quantization scheme.
+pub trait QuantMethod: Send {
+    /// Display name matching the paper's tables.
+    fn name(&self) -> &'static str;
+
+    /// `Y ≈ X · W` under the method's quantization scheme.
+    /// `&mut self` because dynamic methods update per-step state (scaling
+    /// factors, requantized weights).
+    fn forward(&mut self, x: &Matrix) -> Matrix;
+
+    /// Straight-through `dX = dY · Wᵀ` using the stored representation.
+    fn backward_input(&self, dy: &Matrix) -> Matrix;
+
+    /// Bytes of device memory held for the frozen weight + method state.
+    fn weight_bytes(&self) -> usize;
+
+    /// Input-channel count.
+    fn cin(&self) -> usize;
+
+    /// Output-channel count.
+    fn cout(&self) -> usize;
+
+    /// Current full-axis scaling factors (1.0 where unscaled), if the
+    /// method scales activations — used by the OSSH instruments.
+    fn scaling_factors(&self) -> Option<Vec<f32>> {
+        None
+    }
+}
+
+/// Method selector (CLI + reports).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MethodKind {
+    Fp32,
+    Naive,
+    LlmInt8,
+    SmoothStatic,
+    SmoothDynamic,
+    Quaff,
+    /// Table 3 ablation: Quaff with the momentum mechanism disabled.
+    QuaffNoMomentum,
+}
+
+impl MethodKind {
+    pub const ALL: [MethodKind; 6] = [
+        MethodKind::Fp32,
+        MethodKind::LlmInt8,
+        MethodKind::SmoothDynamic,
+        MethodKind::Naive,
+        MethodKind::SmoothStatic,
+        MethodKind::Quaff,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            MethodKind::Fp32 => "FP32",
+            MethodKind::Naive => "Naive",
+            MethodKind::LlmInt8 => "LLM.int8",
+            MethodKind::SmoothStatic => "Smooth_S",
+            MethodKind::SmoothDynamic => "Smooth_D",
+            MethodKind::Quaff => "Quaff",
+            MethodKind::QuaffNoMomentum => "Quaff w/o Mo",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<MethodKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "fp32" => Some(MethodKind::Fp32),
+            "naive" => Some(MethodKind::Naive),
+            "llmint8" | "llm.int8" | "llm_int8" => Some(MethodKind::LlmInt8),
+            "smooth_s" | "smooths" | "smooth-static" => Some(MethodKind::SmoothStatic),
+            "smooth_d" | "smoothd" | "smooth-dynamic" => Some(MethodKind::SmoothDynamic),
+            "quaff" => Some(MethodKind::Quaff),
+            "quaff-nomom" | "quaff_no_momentum" => Some(MethodKind::QuaffNoMomentum),
+            _ => None,
+        }
+    }
+
+    /// Is this one of the paper's "efficient" (pink-background) methods?
+    pub fn is_efficient(&self) -> bool {
+        !matches!(self, MethodKind::Fp32 | MethodKind::SmoothDynamic | MethodKind::LlmInt8)
+    }
+}
+
+/// Configuration shared by method construction.
+#[derive(Clone, Debug)]
+pub struct MethodConfig {
+    /// Quaff momentum γ (paper: 0.2).
+    pub gamma: f32,
+    /// SmoothQuant α (paper baselines: 0.5).
+    pub alpha: f32,
+    /// LLM.int8 outlier threshold σ on activation magnitude.
+    pub llmint8_sigma: f32,
+}
+
+impl Default for MethodConfig {
+    fn default() -> Self {
+        MethodConfig {
+            gamma: 0.2,
+            alpha: 0.5,
+            llmint8_sigma: 6.0,
+        }
+    }
+}
+
+/// Build a method instance for a layer with frozen weights `w`
+/// (c_in × c_out), given calibration statistics and the pre-identified
+/// outlier set (used by Smooth_S for its static factors and by Quaff for O).
+pub fn build_method(
+    kind: MethodKind,
+    w: Matrix,
+    calib: &ChannelStats,
+    outliers: &OutlierSet,
+    cfg: &MethodConfig,
+) -> Box<dyn QuantMethod> {
+    match kind {
+        MethodKind::Fp32 => Box::new(Fp32Linear::new(w)),
+        MethodKind::Naive => Box::new(NaiveW8A8Linear::new(w)),
+        MethodKind::LlmInt8 => Box::new(LlmInt8Linear::new(w, cfg.llmint8_sigma)),
+        MethodKind::SmoothStatic => Box::new(SmoothStaticLinear::new(w, calib, cfg.alpha)),
+        MethodKind::SmoothDynamic => Box::new(SmoothDynamicLinear::new(w, cfg.alpha)),
+        MethodKind::Quaff => Box::new(QuaffLinear::new(w, outliers.clone(), cfg.gamma, true)),
+        MethodKind::QuaffNoMomentum => {
+            Box::new(QuaffLinear::new(w, outliers.clone(), cfg.gamma, false))
+        }
+    }
+}
+
+/// `dX = (dY ∘ Δ_w) · W_intᵀ` — shared STE backward for all int8-weight
+/// methods. Reads the int8 weights row-wise, never materializing an f32 W.
+pub(crate) fn ste_backward(dy: &Matrix, w_int: &I8Matrix, w_deltas: &[f32]) -> Matrix {
+    let (t, cout) = (dy.rows(), dy.cols());
+    let cin = w_int.rows();
+    assert_eq!(w_int.cols(), cout);
+    assert_eq!(w_deltas.len(), cout);
+    // scale dY columns by Δ_w once
+    let mut dys = dy.clone();
+    dys.scale_cols(w_deltas);
+    let mut out = Matrix::zeros(t, cin);
+    for ti in 0..t {
+        let drow = dys.row(ti);
+        let orow = out.row_mut(ti);
+        for i in 0..cin {
+            let wrow = w_int.row(i);
+            let mut acc = 0.0f32;
+            for (&d, &q) in drow.iter().zip(wrow) {
+                acc += d * q as f32;
+            }
+            orow[i] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant;
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
+    pub(crate) fn make_calib(
+        rng: &mut Rng,
+        cin: usize,
+        hot: &[usize],
+        gain: f32,
+        samples: usize,
+    ) -> (ChannelStats, OutlierSet) {
+        let mut stats = ChannelStats::new(cin);
+        for _ in 0..samples {
+            let mut x = Matrix::randn(16, cin, rng, 1.0);
+            for &c in hot {
+                for t in 0..16 {
+                    let v = x.get(t, c);
+                    x.set(t, c, v * gain);
+                }
+            }
+            stats.observe(&x, 50.0);
+        }
+        let det = crate::outlier::OutlierDetector::new(50.0);
+        let set = det.select(&stats, hot.len());
+        (stats, set)
+    }
+
+    /// Activations with the same planted outlier channels as calibration.
+    fn make_acts(rng: &mut Rng, t: usize, cin: usize, hot: &[usize], gain: f32) -> Matrix {
+        let mut x = Matrix::randn(t, cin, rng, 1.0);
+        for &c in hot {
+            for ti in 0..t {
+                let v = x.get(ti, c);
+                x.set(ti, c, v * gain);
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn all_methods_approximate_fp32() {
+        let mut rng = Rng::new(21);
+        let cin = 64;
+        let cout = 48;
+        let hot = vec![5, 33];
+        let (calib, oset) = make_calib(&mut rng, cin, &hot, 120.0, 8);
+        assert_eq!(oset.channels, hot);
+        let w = Matrix::randn(cin, cout, &mut rng, 0.3);
+        let x = make_acts(&mut rng, 12, cin, &hot, 120.0);
+        let want = x.matmul(&w);
+        let cfg = MethodConfig::default();
+        for kind in [
+            MethodKind::Naive,
+            MethodKind::LlmInt8,
+            MethodKind::SmoothStatic,
+            MethodKind::SmoothDynamic,
+            MethodKind::Quaff,
+            MethodKind::QuaffNoMomentum,
+        ] {
+            let mut m = build_method(kind, w.clone(), &calib, &oset, &cfg);
+            let got = m.forward(&x);
+            let err = quant::error_between(&want, &got);
+            assert!(
+                err.sqnr_db > 15.0,
+                "{}: SQNR {:.1} dB too low (mse {})",
+                m.name(),
+                err.sqnr_db,
+                err.mse
+            );
+        }
+    }
+
+    #[test]
+    fn quaff_beats_naive_on_outlier_activations() {
+        // The headline claim: with outlier channels present, Quaff's targeted
+        // scaling yields lower quantization error than naive W8A8.
+        let mut rng = Rng::new(22);
+        let cin = 128;
+        let cout = 96;
+        let hot = vec![9, 70, 100];
+        let (calib, oset) = make_calib(&mut rng, cin, &hot, 100.0, 8);
+        let w = Matrix::randn(cin, cout, &mut rng, 0.3);
+        let cfg = MethodConfig::default();
+        let mut quaff = build_method(MethodKind::Quaff, w.clone(), &calib, &oset, &cfg);
+        let mut naive = build_method(MethodKind::Naive, w.clone(), &calib, &oset, &cfg);
+        let mut q_mse = 0.0;
+        let mut n_mse = 0.0;
+        for _ in 0..6 {
+            let x = make_acts(&mut rng, 16, cin, &hot, 100.0);
+            let want = x.matmul(&w);
+            q_mse += quant::error_between(&want, &quaff.forward(&x)).mse;
+            n_mse += quant::error_between(&want, &naive.forward(&x)).mse;
+        }
+        assert!(
+            q_mse < n_mse * 0.25,
+            "quaff mse {q_mse} should be well below naive {n_mse}"
+        );
+    }
+
+    #[test]
+    fn memory_ordering_matches_paper() {
+        // Smooth_D and FP32 hold f32 weights; int8 methods hold ~1/4;
+        // Quaff adds only the small W_O slice on top of Naive.
+        let mut rng = Rng::new(23);
+        let cin = 256;
+        let cout = 256;
+        let hot = vec![3, 100, 200];
+        let (calib, oset) = make_calib(&mut rng, cin, &hot, 100.0, 4);
+        let w = Matrix::randn(cin, cout, &mut rng, 0.3);
+        let cfg = MethodConfig::default();
+        let bytes = |k| build_method(k, w.clone(), &calib, &oset, &cfg).weight_bytes();
+        let fp32 = bytes(MethodKind::Fp32);
+        let naive = bytes(MethodKind::Naive);
+        let quaff = bytes(MethodKind::Quaff);
+        let smooth_d = bytes(MethodKind::SmoothDynamic);
+        assert!(naive < fp32 / 3, "naive {naive} vs fp32 {fp32}");
+        assert!(quaff >= naive && quaff < naive + naive / 4, "quaff {quaff} naive {naive}");
+        assert!(smooth_d >= fp32, "smooth_d must keep f32 weights");
+    }
+
+    #[test]
+    fn ste_backward_matches_dequant_matmul() {
+        prop::check("ste-bwd", 0xE1, 16, |r| {
+            let t = 1 + r.below(8);
+            let cin = 2 + r.below(24);
+            let cout = 2 + r.below(24);
+            let w = Matrix::randn(cin, cout, r, 0.5);
+            let dy = Matrix::randn(t, cout, r, 1.0);
+            (w, dy)
+        }, |(w, dy)| {
+            let qw = quant::QuantizedWeights::quantize(w);
+            let got = ste_backward(dy, &qw.w_int, &qw.deltas);
+            let wdq = qw.dequantize();
+            let want = dy.matmul_bt(&wdq); // dY @ Wᵀ
+            prop::all_close(got.data(), want.data(), 1e-4, 1e-3)
+        });
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in MethodKind::ALL {
+            // every label should parse back (modulo case/punctuation)
+            let parsed = MethodKind::parse(k.label());
+            assert_eq!(parsed, Some(k), "label {}", k.label());
+        }
+        assert_eq!(MethodKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn efficiency_categorization() {
+        assert!(MethodKind::Quaff.is_efficient());
+        assert!(MethodKind::Naive.is_efficient());
+        assert!(!MethodKind::Fp32.is_efficient());
+        assert!(!MethodKind::SmoothDynamic.is_efficient());
+    }
+}

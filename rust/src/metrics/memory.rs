@@ -1,0 +1,173 @@
+//! Analytic device-memory model.
+//!
+//! The paper reports "maximum GPU memory usage during fine-tuning"; on this
+//! CPU testbed we account the same quantities exactly: frozen weights (in
+//! the representation each method stores), PEFT adapters + their Adam
+//! state, peak activation memory of one forward/backward, and per-method
+//! transient buffers (Smooth_D's full requantization copies, LLM.int8's
+//! dequantized rows). Ratios between methods reproduce the paper's memory
+//! columns; absolute GB obviously scale with model size.
+
+use crate::methods::MethodKind;
+use crate::model::{Model, ModelConfig};
+
+/// Memory breakdown in bytes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MemoryBreakdown {
+    /// Frozen base weights in the method's storage format.
+    pub frozen: usize,
+    /// Embeddings / LM head / LayerNorms (FP32 in every method).
+    pub fp32_common: usize,
+    /// Trainable adapter parameters.
+    pub adapters: usize,
+    /// Optimizer state: Adam m+v plus the gradient buffer.
+    pub optimizer: usize,
+    /// Peak activation + cache memory of one train step.
+    pub activations: usize,
+    /// Per-step transient buffers specific to the method.
+    pub transient: usize,
+}
+
+impl MemoryBreakdown {
+    pub fn total(&self) -> usize {
+        self.frozen
+            + self.fp32_common
+            + self.adapters
+            + self.optimizer
+            + self.activations
+            + self.transient
+    }
+}
+
+/// Computes [`MemoryBreakdown`]s for a model under a given method.
+pub struct MemoryAccountant;
+
+impl MemoryAccountant {
+    /// Account a live model (uses each layer's actual storage bytes).
+    pub fn account(
+        model: &mut Model,
+        kind: MethodKind,
+        batch: usize,
+        seq: usize,
+    ) -> MemoryBreakdown {
+        let cfg = model.cfg.clone();
+        let frozen = model.frozen_linear_bytes();
+        let adapters = model.trainable_params() * 4;
+        let fp32_common = Self::fp32_common_bytes(&cfg);
+        let optimizer = adapters * 3; // grad + m + v
+        let activations = Self::activation_bytes(&cfg, batch, seq);
+        let transient = Self::transient_bytes(&cfg, kind);
+        MemoryBreakdown {
+            frozen,
+            fp32_common,
+            adapters,
+            optimizer,
+            activations,
+            transient,
+        }
+    }
+
+    fn fp32_common_bytes(cfg: &ModelConfig) -> usize {
+        let d = cfg.d_model;
+        let emb = cfg.vocab * d + cfg.max_seq * d + d * cfg.vocab;
+        let lns = cfg.n_layers * 2 * 2 * d + 2 * d;
+        (emb + lns) * 4
+    }
+
+    /// Peak activation memory: per-block caches held for backward
+    /// (inputs of each linear, attention probabilities, GELU inputs)
+    /// plus the logits block.
+    pub fn activation_bytes(cfg: &ModelConfig, batch: usize, seq: usize) -> usize {
+        let t = batch * seq;
+        let d = cfg.d_model;
+        let ff = cfg.d_ff;
+        // per block: ~8 d-wide tensors (x, ln-out, q,k,v, attn-out, o, mlp-in)
+        // + 2 ff-wide (u, gelu) + attention probs (batch·heads·seq²)
+        let per_block = 8 * t * d + 2 * t * ff + batch * cfg.n_heads * seq * seq;
+        (cfg.n_layers * per_block + t * cfg.vocab) * 4
+    }
+
+    /// Transient per-step buffers characteristic of each method.
+    fn transient_bytes(cfg: &ModelConfig, kind: MethodKind) -> usize {
+        let d = cfg.d_model;
+        let ff = cfg.d_ff;
+        let per_layer_w: usize = 4 * d * d + 2 * d * ff; // elements across a block
+        match kind {
+            // Smooth_D rescales + requantizes the whole block's weights each
+            // step: one f32 scaled copy + one int8 quantized copy in flight.
+            MethodKind::SmoothDynamic => cfg.n_layers * per_layer_w * 5,
+            // LLM.int8 dequantizes detected outlier rows; worst observed in
+            // the paper is card(O) → c_in, bound here at 25 % of rows.
+            MethodKind::LlmInt8 => cfg.n_layers * per_layer_w, // 25% of rows in f32 = w/4*4
+            // Quaff quantizes only the tiny ŵ slice (≤5 % of rows).
+            MethodKind::Quaff | MethodKind::QuaffNoMomentum => {
+                cfg.n_layers * per_layer_w / 5
+            }
+            _ => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::methods::MethodConfig;
+    use crate::outlier::{BudgetAllocator, BudgetPolicy, OutlierDetector};
+    use crate::peft::PeftKind;
+    use crate::util::prng::Rng;
+
+    fn quantized_model(kind: MethodKind) -> Model {
+        let cfg = ModelConfig::preset("opt-tiny").unwrap();
+        let mut m = Model::new(cfg, 1);
+        m.attach_peft(PeftKind::Lora);
+        let mut r = Rng::new(2);
+        m.start_calibration();
+        let toks: Vec<Vec<u32>> = (0..2)
+            .map(|_| (0..16).map(|_| r.below(288) as u32).collect())
+            .collect();
+        let _ = m.forward(&toks, false);
+        let calib = m.finish_calibration();
+        let alloc = BudgetAllocator::new(BudgetPolicy::PaperNonUniform);
+        let det = OutlierDetector::new(20.0);
+        let _ = m.apply_method(kind, &calib, &alloc, &MethodConfig::default(), &det);
+        m
+    }
+
+    #[test]
+    fn quantized_total_below_fp32() {
+        let mut fp = quantized_model(MethodKind::Fp32);
+        let mut nv = quantized_model(MethodKind::Naive);
+        let a = MemoryAccountant::account(&mut fp, MethodKind::Fp32, 4, 32);
+        let b = MemoryAccountant::account(&mut nv, MethodKind::Naive, 4, 32);
+        assert!(b.total() < a.total(), "naive {} < fp32 {}", b.total(), a.total());
+        assert!(b.frozen < a.frozen / 3);
+    }
+
+    #[test]
+    fn smooth_dynamic_at_least_fp32() {
+        let mut fp = quantized_model(MethodKind::Fp32);
+        let mut sd = quantized_model(MethodKind::SmoothDynamic);
+        let a = MemoryAccountant::account(&mut fp, MethodKind::Fp32, 4, 32);
+        let b = MemoryAccountant::account(&mut sd, MethodKind::SmoothDynamic, 4, 32);
+        assert!(b.total() >= a.total(), "Smooth_D must not be below FP32");
+    }
+
+    #[test]
+    fn quaff_close_to_naive() {
+        let mut nv = quantized_model(MethodKind::Naive);
+        let mut qf = quantized_model(MethodKind::Quaff);
+        let a = MemoryAccountant::account(&mut nv, MethodKind::Naive, 4, 32).total();
+        let b = MemoryAccountant::account(&mut qf, MethodKind::Quaff, 4, 32).total();
+        // paper: 14.6 GB vs 14.9 GB → within a few percent
+        let ratio = b as f64 / a as f64;
+        assert!(ratio < 1.10, "quaff/naive memory ratio {ratio}");
+    }
+
+    #[test]
+    fn activations_scale_with_batch() {
+        let cfg = ModelConfig::preset("phi-mini").unwrap();
+        let a = MemoryAccountant::activation_bytes(&cfg, 1, 64);
+        let b = MemoryAccountant::activation_bytes(&cfg, 4, 64);
+        assert!(b > 3 * a && b < 5 * a);
+    }
+}

@@ -1,0 +1,117 @@
+//! Evaluation metrics and cost accounting: ROUGE-L, perplexity, accuracy,
+//! latency timers, and the analytic device-memory model used to reproduce
+//! the paper's memory columns.
+
+mod memory;
+mod rouge;
+
+pub use memory::{MemoryAccountant, MemoryBreakdown};
+pub use rouge::rouge_l;
+
+use crate::util::Stats;
+use std::time::Instant;
+
+/// Perplexity from a mean cross-entropy (nats).
+pub fn perplexity(mean_nll: f64) -> f64 {
+    mean_nll.exp()
+}
+
+/// Token-level accuracy: fraction of positions where `pred == target`,
+/// counting only masked-in positions.
+pub fn token_accuracy(preds: &[u32], targets: &[u32], mask: &[bool]) -> f64 {
+    assert_eq!(preds.len(), targets.len());
+    assert_eq!(preds.len(), mask.len());
+    let mut hit = 0usize;
+    let mut total = 0usize;
+    for i in 0..preds.len() {
+        if mask[i] {
+            total += 1;
+            if preds[i] == targets[i] {
+                hit += 1;
+            }
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        hit as f64 / total as f64
+    }
+}
+
+/// Wall-clock latency accumulator for per-step measurements
+/// (the paper's "average latency per step" columns).
+#[derive(Debug, Default)]
+pub struct LatencyTimer {
+    stats: Stats,
+    current: Option<Instant>,
+}
+
+impl LatencyTimer {
+    pub fn new() -> Self {
+        LatencyTimer {
+            stats: Stats::new(),
+            current: None,
+        }
+    }
+
+    pub fn start(&mut self) {
+        self.current = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.current.take() {
+            self.stats.push(t0.elapsed().as_secs_f64());
+        }
+    }
+
+    /// Record an externally-measured duration.
+    pub fn record(&mut self, seconds: f64) {
+        self.stats.push(seconds);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.stats.mean()
+    }
+
+    pub fn std(&self) -> f64 {
+        self.stats.std()
+    }
+
+    pub fn count(&self) -> u64 {
+        self.stats.count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perplexity_of_uniform() {
+        // uniform over V: nll = ln V → ppl = V
+        let v = 64.0f64;
+        assert!((perplexity(v.ln()) - v).abs() < 1e-9);
+    }
+
+    #[test]
+    fn token_accuracy_masked() {
+        let preds = [1u32, 2, 3, 4];
+        let tgts = [1u32, 9, 3, 9];
+        let mask = [true, true, true, false];
+        assert!((token_accuracy(&preds, &tgts, &mask) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn token_accuracy_empty_mask() {
+        assert_eq!(token_accuracy(&[1], &[1], &[false]), 0.0);
+    }
+
+    #[test]
+    fn latency_timer_accumulates() {
+        let mut t = LatencyTimer::new();
+        t.record(0.1);
+        t.record(0.3);
+        assert_eq!(t.count(), 2);
+        assert!((t.mean() - 0.2).abs() < 1e-12);
+    }
+}

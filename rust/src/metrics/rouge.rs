@@ -1,0 +1,86 @@
+//! ROUGE-L: longest-common-subsequence F-measure between a candidate and a
+//! reference token sequence — the generation-quality metric of Tables 1/2/4.
+
+/// LCS length via the classic O(n·m) DP (sequences here are ≤ a few hundred
+/// tokens, so quadratic is fine; rows are rolled to keep memory O(m)).
+fn lcs_len<T: PartialEq>(a: &[T], b: &[T]) -> usize {
+    if a.is_empty() || b.is_empty() {
+        return 0;
+    }
+    let m = b.len();
+    let mut prev = vec![0usize; m + 1];
+    let mut curr = vec![0usize; m + 1];
+    for x in a {
+        for (j, y) in b.iter().enumerate() {
+            curr[j + 1] = if x == y {
+                prev[j] + 1
+            } else {
+                prev[j + 1].max(curr[j])
+            };
+        }
+        std::mem::swap(&mut prev, &mut curr);
+    }
+    prev[m]
+}
+
+/// ROUGE-L F1 (β = 1) between candidate and reference token sequences.
+pub fn rouge_l<T: PartialEq>(candidate: &[T], reference: &[T]) -> f64 {
+    if candidate.is_empty() || reference.is_empty() {
+        return 0.0;
+    }
+    let lcs = lcs_len(candidate, reference) as f64;
+    if lcs == 0.0 {
+        return 0.0;
+    }
+    let p = lcs / candidate.len() as f64;
+    let r = lcs / reference.len() as f64;
+    2.0 * p * r / (p + r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_sequences_score_one() {
+        let a = [1u32, 2, 3, 4];
+        assert!((rouge_l(&a, &a) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disjoint_sequences_score_zero() {
+        assert_eq!(rouge_l(&[1u32, 2], &[3u32, 4]), 0.0);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(rouge_l::<u32>(&[], &[1]), 0.0);
+        assert_eq!(rouge_l::<u32>(&[1], &[]), 0.0);
+    }
+
+    #[test]
+    fn known_value() {
+        // cand = [a b c d], ref = [a c d e]: LCS = 3 (a c d)
+        // P = 3/4, R = 3/4 → F1 = 3/4
+        let c = ["a", "b", "c", "d"];
+        let r = ["a", "c", "d", "e"];
+        assert!((rouge_l(&c, &r) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn subsequence_not_substring() {
+        // LCS handles gaps: [a x b y c] vs [a b c] → LCS 3
+        let c = ["a", "x", "b", "y", "c"];
+        let r = ["a", "b", "c"];
+        let lcs = lcs_len(&c, &r);
+        assert_eq!(lcs, 3);
+    }
+
+    #[test]
+    fn order_sensitivity() {
+        // reversed reference shares only a length-1 subsequence pattern
+        let c = [1u32, 2, 3, 4, 5];
+        let r = [5u32, 4, 3, 2, 1];
+        assert_eq!(lcs_len(&c, &r), 1);
+    }
+}

@@ -1,0 +1,239 @@
+//! Outlier injection simulator.
+//!
+//! Billion-parameter pretrained LLMs exhibit *emergent* channel-wise
+//! activation outliers (paper §2.2, Fig. 2). Laptop-scale models trained
+//! from scratch do not, so this substrate plants the same statistics at the
+//! input of every linear layer: a sparse set of channels is amplified
+//! 30–120×, with (a) slow multiplicative magnitude drift across training
+//! iterations — reproducing the distribution shift of Fig. 2(b) that breaks
+//! static scaling — and (b) rare index churn, concentrated on the layer
+//! types the paper identifies as volatile (`o_proj`, and especially
+//! `down_proj`, Appendix B), which is what keeps hit rates below 100 % in
+//! Figs. 3/8 and drives the uniform-budget failure of Fig. 9.
+//!
+//! The injection is a fixed diagonal gain on the activations — equivalent
+//! to a (frozen) reparameterization of the preceding layer — so gradients
+//! pass through it exactly and every quantization method sees identical
+//! inputs.
+
+use crate::tensor::Matrix;
+use crate::util::prng::Rng;
+
+/// Per-injection-point configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct InjectConfig {
+    /// Number of amplified (hot) channels.
+    pub n_hot: usize,
+    /// Log-normal amplitude parameters: `amp = exp(N(mu, sigma))`.
+    pub amp_mu: f32,
+    pub amp_sigma: f32,
+    /// Per-step multiplicative drift: `amp *= exp(N(0, drift_sigma))`.
+    pub drift_sigma: f32,
+    /// Per-step probability that one hot channel migrates to a new index.
+    pub churn_prob: f32,
+}
+
+impl InjectConfig {
+    /// No injection at all.
+    pub fn none() -> InjectConfig {
+        InjectConfig {
+            n_hot: 0,
+            amp_mu: 0.0,
+            amp_sigma: 0.0,
+            drift_sigma: 0.0,
+            churn_prob: 0.0,
+        }
+    }
+
+    /// Stable layer inputs (q/k/v/up): few channels, effectively no churn.
+    pub fn stable(n_hot: usize) -> InjectConfig {
+        InjectConfig {
+            n_hot,
+            amp_mu: 4.1, // e^4.1 ≈ 60×
+            amp_sigma: 0.4,
+            drift_sigma: 0.02,
+            churn_prob: 0.0,
+        }
+    }
+
+    /// Volatile inputs (o_proj): mild churn.
+    pub fn volatile(n_hot: usize) -> InjectConfig {
+        InjectConfig {
+            n_hot,
+            amp_mu: 3.9,
+            amp_sigma: 0.5,
+            drift_sigma: 0.03,
+            churn_prob: 0.002,
+        }
+    }
+
+    /// Highly dynamic inputs (down_proj): strongest drift + churn.
+    pub fn dynamic(n_hot: usize) -> InjectConfig {
+        InjectConfig {
+            n_hot,
+            amp_mu: 3.7,
+            amp_sigma: 0.6,
+            drift_sigma: 0.05,
+            churn_prob: 0.01,
+        }
+    }
+}
+
+/// One injection point: a diagonal gain over `dim` channels, hot on a
+/// sparse drifting subset.
+#[derive(Clone, Debug)]
+pub struct DiagGain {
+    /// Full gain vector (1.0 on normal channels).
+    pub gains: Vec<f32>,
+    /// Current hot channel indices (sorted).
+    pub hot: Vec<usize>,
+    cfg: InjectConfig,
+}
+
+impl DiagGain {
+    pub fn new(dim: usize, cfg: InjectConfig, rng: &mut Rng) -> DiagGain {
+        let n_hot = cfg.n_hot.min(dim);
+        let hot = rng.sample_indices(dim, n_hot);
+        let mut gains = vec![1.0f32; dim];
+        for &c in &hot {
+            gains[c] = rng.lognormal(cfg.amp_mu, cfg.amp_sigma);
+        }
+        DiagGain { gains, hot, cfg }
+    }
+
+    /// Identity injection (for disabled simulation).
+    pub fn identity(dim: usize) -> DiagGain {
+        DiagGain {
+            gains: vec![1.0; dim],
+            hot: Vec::new(),
+            cfg: InjectConfig::none(),
+        }
+    }
+
+    /// Apply the gain: `y = x ∘ g`.
+    pub fn apply(&self, x: &Matrix) -> Matrix {
+        if self.hot.is_empty() {
+            return x.clone();
+        }
+        let mut y = x.clone();
+        // only hot channels differ from 1 — touch those columns only
+        for t in 0..y.rows() {
+            let row = y.row_mut(t);
+            for &c in &self.hot {
+                row[c] *= self.gains[c];
+            }
+        }
+        y
+    }
+
+    /// Backward through the diagonal: `dx = dy ∘ g`.
+    pub fn backward(&self, dy: &Matrix) -> Matrix {
+        self.apply(dy)
+    }
+
+    /// Advance one training iteration: drift magnitudes, maybe churn one
+    /// channel.
+    pub fn tick(&mut self, rng: &mut Rng) {
+        if self.hot.is_empty() {
+            return;
+        }
+        if self.cfg.drift_sigma > 0.0 {
+            for &c in &self.hot {
+                let f = (rng.normal() * self.cfg.drift_sigma).exp();
+                // keep amplitudes in a plausible envelope (10x .. 500x)
+                self.gains[c] = (self.gains[c] * f).clamp(10.0, 500.0);
+            }
+        }
+        if self.cfg.churn_prob > 0.0 && rng.chance(self.cfg.churn_prob) {
+            let dim = self.gains.len();
+            let victim_pos = rng.below(self.hot.len());
+            let old = self.hot[victim_pos];
+            // find a currently-cold channel
+            for _ in 0..16 {
+                let cand = rng.below(dim);
+                if !self.hot.contains(&cand) {
+                    self.gains[cand] = self.gains[old];
+                    self.gains[old] = 1.0;
+                    self.hot[victim_pos] = cand;
+                    self.hot.sort_unstable();
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Amplitude of the hottest channel (diagnostics / Fig. 2).
+    pub fn max_gain(&self) -> f32 {
+        self.hot.iter().map(|&c| self.gains[c]).fold(1.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn apply_scales_only_hot_channels() {
+        let mut r = Rng::new(1);
+        let g = DiagGain::new(16, InjectConfig::stable(2), &mut r);
+        let x = Matrix::from_vec(1, 16, vec![1.0; 16]);
+        let y = g.apply(&x);
+        for c in 0..16 {
+            if g.hot.contains(&c) {
+                assert!(y.get(0, c) > 10.0, "hot channel {c} gain {}", y.get(0, c));
+            } else {
+                assert_eq!(y.get(0, c), 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let mut r = Rng::new(2);
+        let g = DiagGain::identity(8);
+        let x = Matrix::randn(3, 8, &mut r, 1.0);
+        assert_eq!(g.apply(&x).data(), x.data());
+    }
+
+    #[test]
+    fn drift_changes_magnitude_but_not_indices() {
+        let mut r = Rng::new(3);
+        let mut g = DiagGain::new(32, InjectConfig::stable(3), &mut r);
+        let hot0 = g.hot.clone();
+        let amp0: Vec<f32> = hot0.iter().map(|&c| g.gains[c]).collect();
+        for _ in 0..200 {
+            g.tick(&mut r);
+        }
+        assert_eq!(g.hot, hot0, "stable config must not churn");
+        let amp1: Vec<f32> = hot0.iter().map(|&c| g.gains[c]).collect();
+        assert_ne!(amp0, amp1, "drift must move magnitudes");
+    }
+
+    #[test]
+    fn churn_eventually_moves_channels() {
+        let mut r = Rng::new(4);
+        let mut g = DiagGain::new(64, InjectConfig::dynamic(4), &mut r);
+        let hot0 = g.hot.clone();
+        for _ in 0..2000 {
+            g.tick(&mut r);
+        }
+        assert_ne!(g.hot, hot0, "dynamic config should churn over 2000 steps");
+        // invariants: still 4 hot channels, gains consistent
+        assert_eq!(g.hot.len(), 4);
+        for (c, &gain) in g.gains.iter().enumerate() {
+            if g.hot.contains(&c) {
+                assert!(gain >= 10.0);
+            } else {
+                assert_eq!(gain, 1.0, "cold channel {c} has gain {gain}");
+            }
+        }
+    }
+
+    #[test]
+    fn backward_equals_apply() {
+        let mut r = Rng::new(5);
+        let g = DiagGain::new(8, InjectConfig::volatile(2), &mut r);
+        let x = Matrix::randn(2, 8, &mut r, 1.0);
+        assert_eq!(g.apply(&x).data(), g.backward(&x).data());
+    }
+}

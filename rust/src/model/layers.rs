@@ -1,0 +1,461 @@
+//! Transformer building blocks with explicit forward/backward passes.
+//!
+//! All activations flow as `(batch*seq × features)` row-major matrices;
+//! attention reshapes per (batch, head) internally. Base weights are frozen
+//! (PEFT regime) so backward passes only produce input gradients — adapter
+//! gradients are handled by the wrappers in `model::linear` / `peft`.
+
+use crate::tensor::Matrix;
+use crate::util::prng::Rng;
+
+/// LayerNorm with gain+bias (frozen; gains carry the planted outlier
+/// amplification of the simulator, see `model::inject`).
+#[derive(Clone, Debug)]
+pub struct LayerNorm {
+    pub gain: Vec<f32>,
+    pub bias: Vec<f32>,
+    pub eps: f32,
+}
+
+/// Cache for LayerNorm backward.
+pub struct LnCache {
+    /// Normalized pre-gain activations x̂.
+    xhat: Matrix,
+    /// 1/std per row.
+    inv_std: Vec<f32>,
+}
+
+impl LayerNorm {
+    pub fn new(dim: usize, eps: f32) -> LayerNorm {
+        LayerNorm {
+            gain: vec![1.0; dim],
+            bias: vec![0.0; dim],
+            eps,
+        }
+    }
+
+    pub fn forward(&self, x: &Matrix) -> (Matrix, LnCache) {
+        let (t, d) = (x.rows(), x.cols());
+        let mut out = Matrix::zeros(t, d);
+        let mut xhat = Matrix::zeros(t, d);
+        let mut inv_std = vec![0.0f32; t];
+        for i in 0..t {
+            let row = x.row(i);
+            let mean = row.iter().sum::<f32>() / d as f32;
+            let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+            let istd = 1.0 / (var + self.eps).sqrt();
+            inv_std[i] = istd;
+            let xh = xhat.row_mut(i);
+            let o = &mut out.data_mut()[i * d..(i + 1) * d];
+            for j in 0..d {
+                let h = (row[j] - mean) * istd;
+                xh[j] = h;
+                o[j] = h * self.gain[j] + self.bias[j];
+            }
+        }
+        (out, LnCache { xhat, inv_std })
+    }
+
+    /// dL/dx given dL/dy (standard LayerNorm backward; gain/bias frozen).
+    pub fn backward(&self, dy: &Matrix, cache: &LnCache) -> Matrix {
+        let (t, d) = (dy.rows(), dy.cols());
+        let mut dx = Matrix::zeros(t, d);
+        for i in 0..t {
+            let dyr = dy.row(i);
+            let xh = cache.xhat.row(i);
+            let istd = cache.inv_std[i];
+            // dxhat = dy * gain
+            let mut sum_dxh = 0.0f32;
+            let mut sum_dxh_xh = 0.0f32;
+            for j in 0..d {
+                let dxh = dyr[j] * self.gain[j];
+                sum_dxh += dxh;
+                sum_dxh_xh += dxh * xh[j];
+            }
+            let n = d as f32;
+            let o = dx.row_mut(i);
+            for j in 0..d {
+                let dxh = dyr[j] * self.gain[j];
+                o[j] = istd * (dxh - sum_dxh / n - xh[j] * sum_dxh_xh / n);
+            }
+        }
+        dx
+    }
+}
+
+/// GELU (tanh approximation) with derivative for backward.
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+pub fn gelu_grad(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6;
+    let x3 = 0.044715 * x * x * x;
+    let t = (C * (x + x3)).tanh();
+    let sech2 = 1.0 - t * t;
+    0.5 * (1.0 + t) + 0.5 * x * sech2 * C * (1.0 + 3.0 * 0.044715 * x * x)
+}
+
+/// Apply GELU elementwise, returning output + input copy for backward.
+pub fn gelu_forward(x: &Matrix) -> Matrix {
+    let mut out = x.clone();
+    for v in out.data_mut() {
+        *v = gelu(*v);
+    }
+    out
+}
+
+/// dL/dx = dL/dy ∘ gelu'(x).
+pub fn gelu_backward(dy: &Matrix, x: &Matrix) -> Matrix {
+    let mut dx = dy.clone();
+    for (d, &v) in dx.data_mut().iter_mut().zip(x.data()) {
+        *d *= gelu_grad(v);
+    }
+    dx
+}
+
+/// Token + learned positional embedding (frozen base).
+#[derive(Clone, Debug)]
+pub struct Embedding {
+    /// (vocab × d)
+    pub tok: Matrix,
+    /// (max_seq × d)
+    pub pos: Matrix,
+}
+
+impl Embedding {
+    pub fn new(vocab: usize, max_seq: usize, d: usize, rng: &mut Rng) -> Embedding {
+        Embedding {
+            tok: Matrix::randn(vocab, d, rng, 0.02),
+            pos: Matrix::randn(max_seq, d, rng, 0.02),
+        }
+    }
+
+    /// Embed `(batch × seq)` token ids into `(batch*seq × d)`.
+    pub fn forward(&self, tokens: &[Vec<u32>]) -> Matrix {
+        let b = tokens.len();
+        let s = tokens[0].len();
+        let d = self.tok.cols();
+        let mut out = Matrix::zeros(b * s, d);
+        for (bi, seq) in tokens.iter().enumerate() {
+            assert_eq!(seq.len(), s, "ragged batch");
+            for (si, &t) in seq.iter().enumerate() {
+                let row = out.row_mut(bi * s + si);
+                let te = self.tok.row(t as usize);
+                let pe = self.pos.row(si);
+                for j in 0..d {
+                    row[j] = te[j] + pe[j];
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Multi-head causal self-attention cache for backward.
+pub struct AttnCache {
+    pub q: Matrix,
+    pub k: Matrix,
+    pub v: Matrix,
+    /// Softmax probabilities per (batch, head): vec of (seq × seq).
+    pub probs: Vec<Matrix>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// Causal softmax attention core (no projections — those live in
+/// `model::linear`). Takes packed Q,K,V `(batch*seq × d)` and head count.
+pub fn attention_forward(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    batch: usize,
+    seq: usize,
+    n_heads: usize,
+) -> (Matrix, AttnCache) {
+    let d = q.cols();
+    let dh = d / n_heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut out = Matrix::zeros(batch * seq, d);
+    let mut probs = Vec::with_capacity(batch * n_heads);
+    for b in 0..batch {
+        for h in 0..n_heads {
+            let off = h * dh;
+            // scores (seq × seq), causal
+            let mut p = Matrix::zeros(seq, seq);
+            for i in 0..seq {
+                let qrow = &q.row(b * seq + i)[off..off + dh];
+                let prow = p.row_mut(i);
+                for j in 0..=i {
+                    let krow = &k.row(b * seq + j)[off..off + dh];
+                    let mut acc = 0.0f32;
+                    for t in 0..dh {
+                        acc += qrow[t] * krow[t];
+                    }
+                    prow[j] = acc * scale;
+                }
+                for j in (i + 1)..seq {
+                    prow[j] = f32::NEG_INFINITY;
+                }
+            }
+            p.softmax_rows();
+            // ctx = P @ V_h
+            for i in 0..seq {
+                let prow = p.row(i);
+                let orow = &mut out.row_mut(b * seq + i)[off..off + dh];
+                for j in 0..=i {
+                    let pv = prow[j];
+                    if pv == 0.0 {
+                        continue;
+                    }
+                    let vrow = &v.row(b * seq + j)[off..off + dh];
+                    for t in 0..dh {
+                        orow[t] += pv * vrow[t];
+                    }
+                }
+            }
+            probs.push(p);
+        }
+    }
+    let cache = AttnCache {
+        q: q.clone(),
+        k: k.clone(),
+        v: v.clone(),
+        probs,
+        batch,
+        seq,
+    };
+    (out, cache)
+}
+
+/// Backward of the attention core: returns (dQ, dK, dV).
+pub fn attention_backward(dy: &Matrix, cache: &AttnCache, n_heads: usize) -> (Matrix, Matrix, Matrix) {
+    let (batch, seq) = (cache.batch, cache.seq);
+    let d = cache.q.cols();
+    let dh = d / n_heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut dq = Matrix::zeros(batch * seq, d);
+    let mut dk = Matrix::zeros(batch * seq, d);
+    let mut dv = Matrix::zeros(batch * seq, d);
+    for b in 0..batch {
+        for h in 0..n_heads {
+            let off = h * dh;
+            let p = &cache.probs[b * n_heads + h];
+            // dV_h = P^T @ dY_h ; dP = dY_h @ V_h^T
+            let mut dp = Matrix::zeros(seq, seq);
+            for i in 0..seq {
+                let dyrow = &dy.row(b * seq + i)[off..off + dh];
+                let prow = p.row(i);
+                let dprow = dp.row_mut(i);
+                for j in 0..=i {
+                    // dV[j] += P[i,j] * dY[i]
+                    let pv = prow[j];
+                    let vrow = &cache.v.row(b * seq + j)[off..off + dh];
+                    let dvrow = &mut dv.row_mut(b * seq + j)[off..off + dh];
+                    let mut acc = 0.0f32;
+                    for t in 0..dh {
+                        dvrow[t] += pv * dyrow[t];
+                        acc += dyrow[t] * vrow[t];
+                    }
+                    dprow[j] = acc;
+                }
+            }
+            // softmax backward: dS[i,j] = P[i,j] * (dP[i,j] - Σ_k dP[i,k] P[i,k])
+            for i in 0..seq {
+                let prow = p.row(i);
+                let dprow = dp.row(i);
+                let dot: f32 = (0..=i).map(|j| dprow[j] * prow[j]).sum();
+                // dS row scaled; then dQ[i] += dS[i,j]*K[j]*scale, dK[j] += dS[i,j]*Q[i]*scale
+                let qrow: Vec<f32> = cache.q.row(b * seq + i)[off..off + dh].to_vec();
+                let dqrow = &mut dq.row_mut(b * seq + i)[off..off + dh];
+                for j in 0..=i {
+                    let ds = prow[j] * (dprow[j] - dot) * scale;
+                    if ds == 0.0 {
+                        continue;
+                    }
+                    let krow = &cache.k.row(b * seq + j)[off..off + dh];
+                    let dkrow = &mut dk.row_mut(b * seq + j)[off..off + dh];
+                    for t in 0..dh {
+                        dqrow[t] += ds * krow[t];
+                        dkrow[t] += ds * qrow[t];
+                    }
+                }
+            }
+        }
+    }
+    (dq, dk, dv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn finite_diff_check<F>(f: F, x: &Matrix, dy: &Matrix, dx_analytic: &Matrix, tol: f32)
+    where
+        F: Fn(&Matrix) -> Matrix,
+    {
+        // check d<f(x), dy>/dx_i ≈ dx_analytic_i on a handful of coordinates
+        let eps = 1e-3f32;
+        let mut r = Rng::new(123);
+        for _ in 0..12 {
+            let i = r.below(x.rows());
+            let j = r.below(x.cols());
+            let mut xp = x.clone();
+            xp.set(i, j, x.get(i, j) + eps);
+            let mut xm = x.clone();
+            xm.set(i, j, x.get(i, j) - eps);
+            let fp = f(&xp);
+            let fm = f(&xm);
+            let mut num = 0.0f32;
+            for (a, (b, &g)) in fp.data().iter().zip(fm.data().iter().zip(dy.data())) {
+                num += (a - b) / (2.0 * eps) * g;
+            }
+            let ana = dx_analytic.get(i, j);
+            assert!(
+                (num - ana).abs() < tol * (1.0 + ana.abs().max(num.abs())),
+                "fd {num} vs analytic {ana} at ({i},{j})"
+            );
+        }
+    }
+
+    #[test]
+    fn layernorm_forward_normalizes() {
+        let mut r = Rng::new(1);
+        let ln = LayerNorm::new(16, 1e-5);
+        let x = Matrix::randn(5, 16, &mut r, 3.0);
+        let (y, _) = ln.forward(&x);
+        for i in 0..5 {
+            let row = y.row(i);
+            let mean = row.iter().sum::<f32>() / 16.0;
+            let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / 16.0;
+            assert!(mean.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn layernorm_backward_matches_finite_diff() {
+        let mut r = Rng::new(2);
+        let mut ln = LayerNorm::new(8, 1e-5);
+        for g in ln.gain.iter_mut() {
+            *g = 1.0 + r.uniform();
+        }
+        let x = Matrix::randn(4, 8, &mut r, 1.0);
+        let dy = Matrix::randn(4, 8, &mut r, 1.0);
+        let (_, cache) = ln.forward(&x);
+        let dx = ln.backward(&dy, &cache);
+        let lnc = ln.clone();
+        finite_diff_check(move |x| lnc.forward(x).0, &x, &dy, &dx, 2e-2);
+    }
+
+    #[test]
+    fn gelu_matches_reference_points() {
+        assert!((gelu(0.0)).abs() < 1e-6);
+        assert!((gelu(1.0) - 0.8412).abs() < 1e-3);
+        assert!((gelu(-1.0) + 0.1588).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gelu_grad_matches_finite_diff() {
+        prop::check("gelu-grad", 0xF1, 64, |r| r.range(-4.0, 4.0), |&x| {
+            let eps = 1e-3;
+            let num = (gelu(x + eps) - gelu(x - eps)) / (2.0 * eps);
+            prop::close(gelu_grad(x), num, 1e-3, 1e-2)
+        });
+    }
+
+    #[test]
+    fn embedding_adds_positions() {
+        let mut r = Rng::new(3);
+        let emb = Embedding::new(10, 4, 6, &mut r);
+        let x = emb.forward(&[vec![1, 2], vec![3, 1]]);
+        assert_eq!((x.rows(), x.cols()), (4, 6));
+        // (b=1, s=1) row = tok[1] + pos[1]
+        for j in 0..6 {
+            assert!((x.get(3, j) - (emb.tok.get(1, j) + emb.pos.get(1, j))).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn attention_is_causal() {
+        let mut r = Rng::new(4);
+        let (b, s, h, d) = (1, 6, 2, 8);
+        let q = Matrix::randn(b * s, d, &mut r, 1.0);
+        let k = Matrix::randn(b * s, d, &mut r, 1.0);
+        let mut v = Matrix::randn(b * s, d, &mut r, 1.0);
+        let (y1, _) = attention_forward(&q, &k, &v, b, s, h);
+        // perturbing a FUTURE value must not change earlier outputs
+        for j in 0..d {
+            v.set(5, j, v.get(5, j) + 100.0);
+        }
+        let (y2, _) = attention_forward(&q, &k, &v, b, s, h);
+        for i in 0..5 {
+            prop::all_close(y1.row(i), y2.row(i), 1e-6, 1e-6).unwrap();
+        }
+        // ...but it must change the last position
+        let diff: f32 = y1
+            .row(5)
+            .iter()
+            .zip(y2.row(5))
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(diff > 1e-3);
+    }
+
+    #[test]
+    fn attention_rows_convex_combination() {
+        // First token attends only to itself: out[0] == v[0] per head.
+        let mut r = Rng::new(5);
+        let (b, s, h, d) = (2, 4, 2, 8);
+        let q = Matrix::randn(b * s, d, &mut r, 1.0);
+        let k = Matrix::randn(b * s, d, &mut r, 1.0);
+        let v = Matrix::randn(b * s, d, &mut r, 1.0);
+        let (y, _) = attention_forward(&q, &k, &v, b, s, h);
+        for bi in 0..b {
+            prop::all_close(y.row(bi * s), v.row(bi * s), 1e-5, 1e-5).unwrap();
+        }
+    }
+
+    #[test]
+    fn attention_backward_matches_finite_diff_q() {
+        let mut r = Rng::new(6);
+        let (b, s, h, d) = (1, 5, 1, 6);
+        let q = Matrix::randn(b * s, d, &mut r, 0.7);
+        let k = Matrix::randn(b * s, d, &mut r, 0.7);
+        let v = Matrix::randn(b * s, d, &mut r, 0.7);
+        let dy = Matrix::randn(b * s, d, &mut r, 1.0);
+        let (_, cache) = attention_forward(&q, &k, &v, b, s, h);
+        let (dq, dk, dv) = attention_backward(&dy, &cache, h);
+        let kk = k.clone();
+        let vv = v.clone();
+        finite_diff_check(
+            move |qq| attention_forward(qq, &kk, &vv, b, s, h).0,
+            &q,
+            &dy,
+            &dq,
+            3e-2,
+        );
+        let qq = q.clone();
+        let vv2 = v.clone();
+        finite_diff_check(
+            move |kx| attention_forward(&qq, kx, &vv2, b, s, h).0,
+            &k,
+            &dy,
+            &dk,
+            3e-2,
+        );
+        let qq2 = q.clone();
+        let kk2 = k.clone();
+        finite_diff_check(
+            move |vx| attention_forward(&qq2, &kk2, vx, b, s, h).0,
+            &v,
+            &dy,
+            &dv,
+            3e-2,
+        );
+    }
+
+    use crate::util::prng::Rng;
+}

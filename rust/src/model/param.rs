@@ -1,0 +1,61 @@
+//! Trainable parameter: value + gradient accumulator.
+
+use crate::tensor::Matrix;
+
+/// A trainable matrix parameter with its gradient accumulator.
+#[derive(Clone, Debug)]
+pub struct Param {
+    pub value: Matrix,
+    pub grad: Matrix,
+}
+
+impl Param {
+    pub fn new(value: Matrix) -> Param {
+        let grad = Matrix::zeros(value.rows(), value.cols());
+        Param { value, grad }
+    }
+
+    pub fn zeros(rows: usize, cols: usize) -> Param {
+        Param::new(Matrix::zeros(rows, cols))
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.grad.data_mut().fill(0.0);
+    }
+
+    pub fn numel(&self) -> usize {
+        self.value.data().len()
+    }
+
+    /// Accumulate `g` into the gradient.
+    pub fn accumulate(&mut self, g: &Matrix) {
+        self.grad.add_assign(g);
+    }
+}
+
+/// Visitor over a model's trainable parameters (name, param).
+pub trait VisitParams {
+    fn visit_params(&mut self, f: &mut dyn FnMut(&str, &mut Param));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_grad_clears() {
+        let mut p = Param::zeros(2, 2);
+        p.grad.set(0, 0, 3.0);
+        p.zero_grad();
+        assert!(p.grad.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn accumulate_adds() {
+        let mut p = Param::zeros(1, 2);
+        let g = Matrix::from_vec(1, 2, vec![1.0, 2.0]);
+        p.accumulate(&g);
+        p.accumulate(&g);
+        assert_eq!(p.grad.data(), &[2.0, 4.0]);
+    }
+}

@@ -1,0 +1,234 @@
+//! Calibration-time channel statistics and the Eq. 6 outlier criterion.
+//!
+//! For each calibration sample `i`, a channel `o` scores a vote when its
+//! column magnitude dominates the typical magnitude of the sample:
+//! `ξ_o = Σ_i 1[ max|X^i_{:,o}| > τ · ref(|X^i|) ]` (Eq. 6 uses τ=100× the
+//! *typical* activation; we parameterize τ and use the sample median of
+//! per-channel maxima as the reference, which matches the paper's "100×
+//! larger than typical activations" reading and is robust to the outliers
+//! themselves inflating the reference).
+
+use super::OutlierSet;
+use crate::tensor::Matrix;
+
+/// Streaming per-channel activation statistics for one linear layer's input.
+#[derive(Clone, Debug)]
+pub struct ChannelStats {
+    /// Number of input channels (c_in).
+    pub channels: usize,
+    /// Per-channel running max of |X|.
+    pub abs_max: Vec<f32>,
+    /// Per-channel sum of per-sample maxima (for means).
+    sum_max: Vec<f64>,
+    /// Eq. 6 votes per channel.
+    pub votes: Vec<u32>,
+    /// Number of samples observed.
+    pub samples: u32,
+}
+
+impl ChannelStats {
+    pub fn new(channels: usize) -> ChannelStats {
+        ChannelStats {
+            channels,
+            abs_max: vec![0.0; channels],
+            sum_max: vec![0.0; channels],
+            votes: vec![0; channels],
+            samples: 0,
+        }
+    }
+
+    /// Observe one calibration sample's activations `X^i (tokens × c_in)`,
+    /// casting Eq. 6 votes with dominance ratio `tau`.
+    pub fn observe(&mut self, x: &Matrix, tau: f32) {
+        assert_eq!(x.cols(), self.channels, "channel count mismatch");
+        let col_max = x.col_abs_max();
+        // Reference level: median of per-channel maxima for this sample.
+        let mut sorted = col_max.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let reference = sorted[sorted.len() / 2].max(1e-12);
+        for (o, &m) in col_max.iter().enumerate() {
+            if m > self.abs_max[o] {
+                self.abs_max[o] = m;
+            }
+            self.sum_max[o] += m as f64;
+            if m > tau * reference {
+                self.votes[o] += 1;
+            }
+        }
+        self.samples += 1;
+    }
+
+    /// Mean per-sample channel maximum.
+    pub fn mean_max(&self, o: usize) -> f32 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            (self.sum_max[o] / self.samples as f64) as f32
+        }
+    }
+}
+
+/// Outlier detector: ranks channels by Eq. 6 votes (ties broken by magnitude)
+/// and selects up to a budget.
+#[derive(Clone, Debug)]
+pub struct OutlierDetector {
+    /// Dominance ratio τ in Eq. 6 (paper: 100).
+    pub tau: f32,
+}
+
+impl Default for OutlierDetector {
+    fn default() -> Self {
+        OutlierDetector { tau: 100.0 }
+    }
+}
+
+impl OutlierDetector {
+    pub fn new(tau: f32) -> Self {
+        OutlierDetector { tau }
+    }
+
+    /// Select up to `budget` outlier channels from calibration stats.
+    ///
+    /// Channels with zero votes are only admitted if the budget demands it
+    /// and their magnitude still dominates (`rank_by_magnitude`); with no
+    /// qualified channels the returned set may be smaller than the budget —
+    /// we never pad with normal channels (that would waste W_O memory).
+    pub fn select(&self, stats: &ChannelStats, budget: usize) -> OutlierSet {
+        let mut ranked: Vec<usize> = (0..stats.channels).collect();
+        ranked.sort_by(|&a, &b| {
+            stats.votes[b]
+                .cmp(&stats.votes[a])
+                .then_with(|| {
+                    stats.abs_max[b]
+                        .partial_cmp(&stats.abs_max[a])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .then_with(|| a.cmp(&b))
+        });
+        let picked: Vec<usize> = ranked
+            .into_iter()
+            .take(budget)
+            .filter(|&o| stats.votes[o] > 0)
+            .collect();
+        OutlierSet::new(picked)
+    }
+
+    /// Real-time detection over a single batch's activations — the
+    /// "dynamically detected channels" side of the OSSH hit-rate measurement
+    /// (and LLM.int8's per-step detector). Returns the top channels whose
+    /// magnitude dominates the batch median by `tau`.
+    pub fn detect_realtime(&self, x: &Matrix, max_channels: usize) -> OutlierSet {
+        let col_max = x.col_abs_max();
+        let mut sorted = col_max.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let reference = sorted[sorted.len() / 2].max(1e-12);
+        let mut qualified: Vec<usize> = (0..x.cols())
+            .filter(|&o| col_max[o] > self.tau * reference)
+            .collect();
+        qualified.sort_by(|&a, &b| {
+            col_max[b]
+                .partial_cmp(&col_max[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        qualified.truncate(max_channels);
+        OutlierSet::new(qualified)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    /// Build activations with planted outliers at `hot` channels.
+    fn planted(rng: &mut Rng, tokens: usize, cin: usize, hot: &[usize], gain: f32) -> Matrix {
+        let mut x = Matrix::randn(tokens, cin, rng, 1.0);
+        for &c in hot {
+            for t in 0..tokens {
+                let v = x.get(t, c);
+                x.set(t, c, v * gain);
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn detects_planted_channels() {
+        let mut rng = Rng::new(1);
+        let hot = vec![7, 42, 99];
+        let mut stats = ChannelStats::new(128);
+        for _ in 0..16 {
+            let x = planted(&mut rng, 32, 128, &hot, 500.0);
+            stats.observe(&x, 100.0);
+        }
+        let det = OutlierDetector::new(100.0);
+        let set = det.select(&stats, 3);
+        assert_eq!(set.channels, hot);
+    }
+
+    #[test]
+    fn no_outliers_means_empty_set_even_with_budget() {
+        let mut rng = Rng::new(2);
+        let mut stats = ChannelStats::new(64);
+        for _ in 0..8 {
+            let x = Matrix::randn(16, 64, &mut rng, 1.0);
+            stats.observe(&x, 100.0);
+        }
+        let det = OutlierDetector::default();
+        let set = det.select(&stats, 10);
+        assert!(set.is_empty(), "picked {:?}", set.channels);
+    }
+
+    #[test]
+    fn budget_caps_selection() {
+        let mut rng = Rng::new(3);
+        let hot: Vec<usize> = (0..10).collect();
+        let mut stats = ChannelStats::new(64);
+        for _ in 0..8 {
+            let x = planted(&mut rng, 16, 64, &hot, 300.0);
+            stats.observe(&x, 50.0);
+        }
+        let det = OutlierDetector::new(50.0);
+        let set = det.select(&stats, 4);
+        assert_eq!(set.len(), 4);
+        assert!(set.channels.iter().all(|c| hot.contains(c)));
+    }
+
+    #[test]
+    fn votes_monotone_in_gain() {
+        // Property: a channel with a larger planted gain never gets fewer
+        // votes than the same channel with a smaller gain.
+        let votes_for_gain = |gain: f32| {
+            let mut rng = Rng::new(4);
+            let mut stats = ChannelStats::new(32);
+            for _ in 0..12 {
+                let x = planted(&mut rng, 8, 32, &[5], gain);
+                stats.observe(&x, 30.0);
+            }
+            stats.votes[5]
+        };
+        assert!(votes_for_gain(500.0) >= votes_for_gain(50.0));
+        assert!(votes_for_gain(50.0) >= votes_for_gain(1.0));
+    }
+
+    #[test]
+    fn realtime_matches_planted() {
+        let mut rng = Rng::new(5);
+        let x = planted(&mut rng, 64, 128, &[3, 77], 400.0);
+        let det = OutlierDetector::new(100.0);
+        let set = det.detect_realtime(&x, 8);
+        assert_eq!(set.channels, vec![3, 77]);
+    }
+
+    #[test]
+    fn mean_max_tracks_average() {
+        let mut stats = ChannelStats::new(2);
+        let a = Matrix::from_vec(1, 2, vec![1.0, -2.0]);
+        let b = Matrix::from_vec(1, 2, vec![3.0, 0.0]);
+        stats.observe(&a, 100.0);
+        stats.observe(&b, 100.0);
+        assert!((stats.mean_max(0) - 2.0).abs() < 1e-6);
+        assert!((stats.mean_max(1) - 1.0).abs() < 1e-6);
+        assert_eq!(stats.abs_max, vec![3.0, 2.0]);
+    }
+}

@@ -1,0 +1,153 @@
+//! OSSH validation instruments.
+//!
+//! * [`HitRateTracker`] — fraction of dynamically-detected outlier channels
+//!   that fall inside the pre-identified set `O` (Figs. 3, 8, 9, 10;
+//!   Table 6). hit rate = |O_rt ∩ O_pre| / |O_rt| per iteration.
+//! * [`SimilarityTracker`] — Pearson correlation between static
+//!   (calibration-time) and dynamic (current) scaling factors over the top
+//!   channels (Fig. 11), the measurement showing why static scaling decays.
+
+use super::OutlierSet;
+use crate::util::{pearson, Stats};
+
+/// Per-layer hit-rate accumulator across fine-tuning iterations.
+#[derive(Clone, Debug)]
+pub struct HitRateTracker {
+    pub layer: String,
+    predefined: OutlierSet,
+    per_iter: Vec<f64>,
+}
+
+impl HitRateTracker {
+    pub fn new(layer: &str, predefined: OutlierSet) -> Self {
+        HitRateTracker {
+            layer: layer.to_string(),
+            predefined,
+            per_iter: Vec::new(),
+        }
+    }
+
+    /// Record one fine-tuning iteration's dynamically-detected set.
+    /// Iterations with no real-time outliers count as a perfect hit (there
+    /// was nothing to miss) — matching the paper's per-layer averages that
+    /// stay at 100 % for layers whose outliers vanish under drift.
+    pub fn record(&mut self, realtime: &OutlierSet) {
+        let rate = if realtime.is_empty() {
+            1.0
+        } else {
+            self.predefined.intersection_size(realtime) as f64 / realtime.len() as f64
+        };
+        self.per_iter.push(rate);
+    }
+
+    pub fn iterations(&self) -> usize {
+        self.per_iter.len()
+    }
+
+    /// Mean and std of the hit rate across iterations (the line + shaded
+    /// band of Fig. 3).
+    pub fn summary(&self) -> (f64, f64) {
+        let mut s = Stats::new();
+        for &r in &self.per_iter {
+            s.push(r);
+        }
+        (s.mean(), s.std())
+    }
+
+    pub fn series(&self) -> &[f64] {
+        &self.per_iter
+    }
+}
+
+/// Pearson similarity between the static calibration-time scaling factors
+/// and the per-iteration dynamic factors over a fixed top-channel subset.
+#[derive(Clone, Debug)]
+pub struct SimilarityTracker {
+    pub layer: String,
+    /// Channels tracked (top 1 % by calibration magnitude in Fig. 11).
+    channels: Vec<usize>,
+    /// Static factors s_static over `channels`.
+    static_factors: Vec<f32>,
+    per_iter: Vec<f32>,
+}
+
+impl SimilarityTracker {
+    pub fn new(layer: &str, channels: Vec<usize>, static_factors: Vec<f32>) -> Self {
+        assert_eq!(channels.len(), static_factors.len());
+        SimilarityTracker {
+            layer: layer.to_string(),
+            channels,
+            static_factors,
+            per_iter: Vec::new(),
+        }
+    }
+
+    pub fn channels(&self) -> &[usize] {
+        &self.channels
+    }
+
+    /// Record one iteration's dynamic factors over the full channel axis;
+    /// the tracker gathers its subset.
+    pub fn record_full(&mut self, dynamic_all: &[f32]) {
+        let dyn_sub: Vec<f32> = self.channels.iter().map(|&c| dynamic_all[c]).collect();
+        self.per_iter.push(pearson(&self.static_factors, &dyn_sub));
+    }
+
+    /// The similarity time series (Fig. 11's per-layer curve).
+    pub fn series(&self) -> &[f32] {
+        &self.per_iter
+    }
+
+    /// Final-iteration similarity.
+    pub fn last(&self) -> Option<f32> {
+        self.per_iter.last().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_hits_when_subset() {
+        let pre = OutlierSet::new(vec![1, 2, 3, 4]);
+        let mut t = HitRateTracker::new("l", pre);
+        t.record(&OutlierSet::new(vec![2, 3]));
+        t.record(&OutlierSet::new(vec![1, 4]));
+        let (mean, std) = t.summary();
+        assert_eq!(mean, 1.0);
+        assert_eq!(std, 0.0);
+    }
+
+    #[test]
+    fn misses_lower_rate() {
+        let pre = OutlierSet::new(vec![1, 2]);
+        let mut t = HitRateTracker::new("l", pre);
+        t.record(&OutlierSet::new(vec![1, 9])); // 1/2
+        t.record(&OutlierSet::new(vec![8, 9])); // 0/2
+        let (mean, _) = t.summary();
+        assert!((mean - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_realtime_counts_as_hit() {
+        let mut t = HitRateTracker::new("l", OutlierSet::new(vec![1]));
+        t.record(&OutlierSet::default());
+        assert_eq!(t.summary().0, 1.0);
+    }
+
+    #[test]
+    fn similarity_decays_with_drift() {
+        let channels = vec![0, 1, 2, 3, 4];
+        let stat = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut t = SimilarityTracker::new("l", channels, stat.clone());
+        // iteration 0: identical factors → similarity 1
+        t.record_full(&[1.0, 2.0, 3.0, 4.0, 5.0, 99.0]);
+        // later: factors reshuffled → similarity drops
+        t.record_full(&[5.0, 1.0, 4.0, 2.0, 3.0, 99.0]);
+        let s = t.series();
+        assert!((s[0] - 1.0).abs() < 1e-6);
+        assert!(s[1] < 0.5);
+        assert_eq!(t.last(), Some(s[1]));
+    }
+}

@@ -1,0 +1,139 @@
+//! Outlier-channel machinery: calibration statistics, the Eq. 6 detection
+//! criterion, the non-uniform per-layer-type budget allocator (§3.3 / §B),
+//! and the OSSH validation instruments (hit-rate + scaling-similarity
+//! trackers used for Figs. 3, 8–11 and Table 6).
+
+mod budget;
+mod detect;
+mod hitrate;
+
+pub use budget::{BudgetAllocator, BudgetPolicy, LayerKind};
+pub use detect::{ChannelStats, OutlierDetector};
+pub use hitrate::{HitRateTracker, SimilarityTracker};
+
+/// The pre-identified outlier channel set `O` of one linear layer, fixed
+/// before fine-tuning under OSSH.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct OutlierSet {
+    /// Sorted channel indices.
+    pub channels: Vec<usize>,
+}
+
+impl OutlierSet {
+    pub fn new(mut channels: Vec<usize>) -> OutlierSet {
+        channels.sort_unstable();
+        channels.dedup();
+        OutlierSet { channels }
+    }
+
+    pub fn len(&self) -> usize {
+        self.channels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.channels.is_empty()
+    }
+
+    pub fn contains(&self, ch: usize) -> bool {
+        self.channels.binary_search(&ch).is_ok()
+    }
+
+    /// |self ∩ other| — the hit count for OSSH validation.
+    pub fn intersection_size(&self, other: &OutlierSet) -> usize {
+        let mut i = 0;
+        let mut j = 0;
+        let mut n = 0;
+        while i < self.channels.len() && j < other.channels.len() {
+            match self.channels[i].cmp(&other.channels[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    n += 1;
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        n
+    }
+}
+
+/// A registry mapping every linear layer (by name) to its outlier set —
+/// the output of the calibration phase, part of the coordinator's
+/// distribution bundle.
+#[derive(Clone, Debug, Default)]
+pub struct OutlierRegistry {
+    entries: std::collections::BTreeMap<String, OutlierSet>,
+}
+
+impl OutlierRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, layer: &str, set: OutlierSet) {
+        self.entries.insert(layer.to_string(), set);
+    }
+
+    pub fn get(&self, layer: &str) -> Option<&OutlierSet> {
+        self.entries.get(layer)
+    }
+
+    pub fn layers(&self) -> impl Iterator<Item = (&String, &OutlierSet)> {
+        self.entries.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total outlier channels across layers.
+    pub fn total_channels(&self) -> usize {
+        self.entries.values().map(|s| s.len()).sum()
+    }
+
+    /// Overall overhead fraction given total input channels across layers —
+    /// the "≤5 %" budget check from §3.3.
+    pub fn overhead_fraction(&self, total_cin: usize) -> f64 {
+        if total_cin == 0 {
+            0.0
+        } else {
+            self.total_channels() as f64 / total_cin as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outlier_set_sorted_dedup() {
+        let s = OutlierSet::new(vec![5, 1, 3, 1, 5]);
+        assert_eq!(s.channels, vec![1, 3, 5]);
+        assert!(s.contains(3));
+        assert!(!s.contains(2));
+    }
+
+    #[test]
+    fn intersection_size() {
+        let a = OutlierSet::new(vec![1, 2, 3, 8]);
+        let b = OutlierSet::new(vec![2, 3, 4, 9]);
+        assert_eq!(a.intersection_size(&b), 2);
+        assert_eq!(b.intersection_size(&a), 2);
+        assert_eq!(a.intersection_size(&OutlierSet::default()), 0);
+    }
+
+    #[test]
+    fn registry_overhead() {
+        let mut r = OutlierRegistry::new();
+        r.insert("l0.q_proj", OutlierSet::new(vec![0, 1]));
+        r.insert("l0.down_proj", OutlierSet::new(vec![3, 4, 5]));
+        assert_eq!(r.total_channels(), 5);
+        assert!((r.overhead_fraction(100) - 0.05).abs() < 1e-12);
+    }
+}

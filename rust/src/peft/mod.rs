@@ -1,0 +1,381 @@
+//! Parameter-efficient fine-tuning methods (§4.1: LoRA, Prompt tuning,
+//! P-tuning, IA3) — the trainable state Quaff fine-tunes around the frozen,
+//! quantized base weights.
+
+use crate::model::param::Param;
+use crate::tensor::Matrix;
+use crate::util::prng::Rng;
+
+/// PEFT strategy selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PeftKind {
+    /// LoRA on q_proj/v_proj, rank 16, α 16 (paper hyper-params).
+    Lora,
+    /// Prompt tuning: 20 learnable virtual token embeddings.
+    Prompt,
+    /// P-tuning: virtual tokens produced by a learnable MLP encoder.
+    PTuning,
+    /// IA3: learned rescaling of K, V and FFN activations.
+    Ia3,
+}
+
+impl PeftKind {
+    pub const ALL: [PeftKind; 4] = [
+        PeftKind::Lora,
+        PeftKind::Prompt,
+        PeftKind::PTuning,
+        PeftKind::Ia3,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PeftKind::Lora => "LoRA",
+            PeftKind::Prompt => "Prompt",
+            PeftKind::PTuning => "P-Tuning",
+            PeftKind::Ia3 => "IA3",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PeftKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "lora" => Some(PeftKind::Lora),
+            "prompt" => Some(PeftKind::Prompt),
+            "ptuning" | "p-tuning" | "p_tuning" => Some(PeftKind::PTuning),
+            "ia3" => Some(PeftKind::Ia3),
+            _ => None,
+        }
+    }
+}
+
+/// LoRA adapter for one linear layer: `ΔY = (X·A)·B · (α/r)`.
+/// A: (c_in × r) Gaussian init, B: (r × c_out) zero init (so ΔY starts at 0).
+pub struct LoraAdapter {
+    pub a: Param,
+    pub b: Param,
+    pub scale: f32,
+    pub dropout: f32,
+}
+
+/// Forward cache for the adapter backward pass.
+pub struct LoraCache {
+    /// Input X (t × c_in) — needed for dA.
+    x: Matrix,
+    /// Hidden X·A (t × r) — needed for dB.
+    h: Matrix,
+}
+
+impl LoraAdapter {
+    pub fn new(cin: usize, cout: usize, rank: usize, alpha: f32, dropout: f32, rng: &mut Rng) -> Self {
+        let std = 1.0 / (cin as f32).sqrt();
+        LoraAdapter {
+            a: Param::new(Matrix::randn(cin, rank, rng, std)),
+            b: Param::zeros(rank, cout),
+            scale: alpha / rank as f32,
+            dropout,
+        }
+    }
+
+    /// ΔY for input `x`; dropout is applied to the adapter input during
+    /// training (inverted dropout, like the HF PEFT implementation).
+    pub fn forward(&self, x: &Matrix, train: bool, rng: &mut Rng) -> (Matrix, LoraCache) {
+        let xd = if train && self.dropout > 0.0 {
+            let keep = 1.0 - self.dropout;
+            let mut xd = x.clone();
+            for v in xd.data_mut() {
+                if rng.chance(self.dropout) {
+                    *v = 0.0;
+                } else {
+                    *v /= keep;
+                }
+            }
+            xd
+        } else {
+            x.clone()
+        };
+        let h = xd.matmul(&self.a.value);
+        let mut dy = h.matmul(&self.b.value);
+        dy.scale(self.scale);
+        (dy, LoraCache { x: xd, h })
+    }
+
+    /// Backward: accumulates dA, dB; returns the adapter's contribution to
+    /// dX (to be added to the frozen path's input gradient).
+    pub fn backward(&mut self, d_out: &Matrix, cache: &LoraCache) -> Matrix {
+        // dB += (X·A)ᵀ · dY · scale
+        let mut db = cache.h.matmul_at(d_out);
+        db.scale(self.scale);
+        self.b.accumulate(&db);
+        // dH = dY · Bᵀ · scale
+        let mut dh = d_out.matmul_bt(&self.b.value);
+        dh.scale(self.scale);
+        // dA += Xᵀ · dH
+        let da = cache.x.matmul_at(&dh);
+        self.a.accumulate(&da);
+        // dX = dH · Aᵀ
+        dh.matmul_bt(&self.a.value)
+    }
+
+    pub fn trainable_params(&self) -> usize {
+        self.a.numel() + self.b.numel()
+    }
+}
+
+/// IA3 learned per-channel scaling vector: `Y = X ∘ l` (broadcast rows).
+/// Init at 1 so the model starts unmodified.
+pub struct Ia3Vector {
+    pub l: Param,
+}
+
+impl Ia3Vector {
+    pub fn new(dim: usize) -> Self {
+        Ia3Vector {
+            l: Param::new(Matrix::from_vec(1, dim, vec![1.0; dim])),
+        }
+    }
+
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        let mut y = x.clone();
+        y.scale_cols(self.l.value.row(0));
+        y
+    }
+
+    /// Accumulates dl and returns dX.
+    pub fn backward(&mut self, dy: &Matrix, x: &Matrix) -> Matrix {
+        let dim = x.cols();
+        let mut dl = vec![0.0f32; dim];
+        for t in 0..x.rows() {
+            let xr = x.row(t);
+            let dr = dy.row(t);
+            for j in 0..dim {
+                dl[j] += xr[j] * dr[j];
+            }
+        }
+        self.l.accumulate(&Matrix::from_vec(1, dim, dl));
+        let mut dx = dy.clone();
+        dx.scale_cols(self.l.value.row(0));
+        dx
+    }
+}
+
+/// Prompt tuning state: `n_virtual` learnable embeddings prepended to the
+/// input sequence (positions shift right; virtual positions carry no loss).
+pub struct PromptTuning {
+    pub embeddings: Param,
+}
+
+impl PromptTuning {
+    pub fn new(n_virtual: usize, d: usize, rng: &mut Rng) -> Self {
+        PromptTuning {
+            embeddings: Param::new(Matrix::randn(n_virtual, d, rng, 0.02)),
+        }
+    }
+
+    pub fn n_virtual(&self) -> usize {
+        self.embeddings.value.rows()
+    }
+
+    /// Virtual token block for one batch element.
+    pub fn virtual_block(&self) -> Matrix {
+        self.embeddings.value.clone()
+    }
+
+    /// Accumulate gradient from the virtual-token positions of one batch
+    /// element's input gradient.
+    pub fn accumulate(&mut self, d_virtual: &Matrix) {
+        self.embeddings.accumulate(d_virtual);
+    }
+}
+
+/// P-tuning: virtual tokens are produced by a 2-layer MLP "prompt encoder"
+/// over learnable seeds — `P = W2·tanh(W1·E)` (per virtual token).
+pub struct PTuningEncoder {
+    pub seeds: Param,
+    pub w1: Param,
+    pub w2: Param,
+    hidden: usize,
+}
+
+/// Cache for the P-tuning encoder backward.
+pub struct PTuningCache {
+    h_pre: Matrix,
+    h_act: Matrix,
+}
+
+impl PTuningEncoder {
+    pub fn new(n_virtual: usize, d: usize, hidden: usize, rng: &mut Rng) -> Self {
+        PTuningEncoder {
+            seeds: Param::new(Matrix::randn(n_virtual, d, rng, 0.02)),
+            w1: Param::new(Matrix::randn(d, hidden, rng, (1.0 / d as f32).sqrt())),
+            w2: Param::new(Matrix::randn(hidden, d, rng, (1.0 / hidden as f32).sqrt())),
+            hidden,
+        }
+    }
+
+    pub fn n_virtual(&self) -> usize {
+        self.seeds.value.rows()
+    }
+
+    pub fn forward(&self) -> (Matrix, PTuningCache) {
+        let h_pre = self.seeds.value.matmul(&self.w1.value);
+        let mut h_act = h_pre.clone();
+        for v in h_act.data_mut() {
+            *v = v.tanh();
+        }
+        let p = h_act.matmul(&self.w2.value);
+        (p, PTuningCache { h_pre, h_act })
+    }
+
+    /// Backward from dP (gradient at the virtual-token block).
+    pub fn backward(&mut self, dp: &Matrix, cache: &PTuningCache) {
+        // dW2 += h_actᵀ dP
+        let dw2 = cache.h_act.matmul_at(dp);
+        self.w2.accumulate(&dw2);
+        // dh_act = dP W2ᵀ; dh_pre = dh_act ∘ (1 - tanh²)
+        let mut dh = dp.matmul_bt(&self.w2.value);
+        for (g, &pre) in dh.data_mut().iter_mut().zip(cache.h_pre.data()) {
+            let t = pre.tanh();
+            *g *= 1.0 - t * t;
+        }
+        // dW1 += seedsᵀ dh_pre ; dseeds = dh_pre W1ᵀ
+        let dw1 = self.seeds.value.matmul_at(&dh);
+        self.w1.accumulate(&dw1);
+        let dseeds = dh.matmul_bt(&self.w1.value);
+        self.seeds.accumulate(&dseeds);
+    }
+
+    pub fn hidden(&self) -> usize {
+        self.hidden
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn lora_starts_at_zero_delta() {
+        let mut r = Rng::new(1);
+        let lora = LoraAdapter::new(16, 8, 4, 16.0, 0.0, &mut r);
+        let x = Matrix::randn(3, 16, &mut r, 1.0);
+        let (dy, _) = lora.forward(&x, false, &mut r);
+        assert!(dy.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn lora_gradcheck() {
+        let mut r = Rng::new(2);
+        let mut lora = LoraAdapter::new(10, 6, 3, 3.0, 0.0, &mut r);
+        // make B nonzero so gradients flow both ways
+        lora.b.value = Matrix::randn(3, 6, &mut r, 0.3);
+        let x = Matrix::randn(4, 10, &mut r, 1.0);
+        let dy = Matrix::randn(4, 6, &mut r, 1.0);
+        let (_, cache) = lora.forward(&x, false, &mut r);
+        let dx = lora.backward(&dy, &cache);
+        // finite-diff on A[0,0]
+        let eps = 1e-3;
+        let loss = |l: &LoraAdapter, rng: &mut Rng| -> f32 {
+            let (y, _) = l.forward(&x, false, rng);
+            y.data().iter().zip(dy.data()).map(|(a, b)| a * b).sum()
+        };
+        let mut lp = LoraAdapter::new(10, 6, 3, 3.0, 0.0, &mut Rng::new(2));
+        lp.a.value = lora.a.value.clone();
+        lp.b.value = lora.b.value.clone();
+        let base_a = lp.a.value.get(0, 0);
+        lp.a.value.set(0, 0, base_a + eps);
+        let up = loss(&lp, &mut r);
+        lp.a.value.set(0, 0, base_a - eps);
+        let dn = loss(&lp, &mut r);
+        let num = (up - dn) / (2.0 * eps);
+        prop::close(lora.a.grad.get(0, 0), num, 1e-2, 1e-2).unwrap();
+        // dX finite-diff at (1,2)
+        let mut xp = x.clone();
+        xp.set(1, 2, x.get(1, 2) + eps);
+        let (yp, _) = lora.forward(&xp, false, &mut r);
+        let mut xm = x.clone();
+        xm.set(1, 2, x.get(1, 2) - eps);
+        let (ym, _) = lora.forward(&xm, false, &mut r);
+        let num_dx: f32 = yp
+            .data()
+            .iter()
+            .zip(ym.data())
+            .zip(dy.data())
+            .map(|((a, b), g)| (a - b) / (2.0 * eps) * g)
+            .sum();
+        prop::close(dx.get(1, 2), num_dx, 1e-2, 1e-2).unwrap();
+    }
+
+    #[test]
+    fn lora_dropout_zeroes_and_rescales() {
+        let mut r = Rng::new(3);
+        let mut lora = LoraAdapter::new(8, 4, 2, 2.0, 0.5, &mut r);
+        lora.b.value = Matrix::randn(2, 4, &mut r, 1.0);
+        let x = Matrix::from_vec(1, 8, vec![1.0; 8]);
+        // train=false: no dropout
+        let (y_eval, _) = lora.forward(&x, false, &mut r);
+        let (y_eval2, _) = lora.forward(&x, false, &mut r);
+        assert_eq!(y_eval.data(), y_eval2.data());
+        // train=true: stochastic
+        let (y_a, _) = lora.forward(&x, true, &mut r);
+        let (y_b, _) = lora.forward(&x, true, &mut r);
+        assert_ne!(y_a.data(), y_b.data());
+    }
+
+    #[test]
+    fn ia3_identity_at_init() {
+        let mut r = Rng::new(4);
+        let ia3 = Ia3Vector::new(12);
+        let x = Matrix::randn(3, 12, &mut r, 1.0);
+        assert_eq!(ia3.forward(&x).data(), x.data());
+    }
+
+    #[test]
+    fn ia3_gradcheck() {
+        let mut r = Rng::new(5);
+        let mut ia3 = Ia3Vector::new(6);
+        ia3.l.value = Matrix::randn(1, 6, &mut r, 1.0);
+        let x = Matrix::randn(4, 6, &mut r, 1.0);
+        let dy = Matrix::randn(4, 6, &mut r, 1.0);
+        let dx = ia3.backward(&dy, &x);
+        // dl[j] = Σ_t x[t,j] dy[t,j]
+        for j in 0..6 {
+            let want: f32 = (0..4).map(|t| x.get(t, j) * dy.get(t, j)).sum();
+            prop::close(ia3.l.grad.get(0, j), want, 1e-5, 1e-5).unwrap();
+            for t in 0..4 {
+                prop::close(dx.get(t, j), dy.get(t, j) * ia3.l.value.get(0, j), 1e-6, 1e-6)
+                    .unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn ptuning_gradcheck_seeds() {
+        let mut r = Rng::new(6);
+        let mut enc = PTuningEncoder::new(3, 8, 16, &mut r);
+        let dp = Matrix::randn(3, 8, &mut r, 1.0);
+        let (_, cache) = enc.forward();
+        enc.backward(&dp, &cache);
+        // finite-diff seeds[0,0]
+        let eps = 1e-3;
+        let probe = |e: &PTuningEncoder| -> f32 {
+            let (p, _) = e.forward();
+            p.data().iter().zip(dp.data()).map(|(a, b)| a * b).sum()
+        };
+        let base = enc.seeds.value.get(0, 0);
+        enc.seeds.value.set(0, 0, base + eps);
+        let up = probe(&enc);
+        enc.seeds.value.set(0, 0, base - eps);
+        let dn = probe(&enc);
+        enc.seeds.value.set(0, 0, base);
+        let num = (up - dn) / (2.0 * eps);
+        prop::close(enc.seeds.grad.get(0, 0), num, 1e-2, 2e-2).unwrap();
+    }
+
+    #[test]
+    fn peft_kind_parse() {
+        for k in PeftKind::ALL {
+            assert_eq!(PeftKind::parse(k.label()), Some(k));
+        }
+        assert_eq!(PeftKind::parse("adapters"), None);
+    }
+}

@@ -1,0 +1,311 @@
+//! Symmetric round-to-nearest INT8 quantization (paper Eq. 1) at the three
+//! hardware-efficient granularities of Appendix F: per-tensor, per-token
+//! (activation rows) and per-output-channel (weight columns).
+//!
+//! `X_int = round(X / Δ)`, `Δ = max|X| / (2^{N-1} − 1)` with N = 8 → 127.
+
+use crate::tensor::{I8Matrix, Matrix};
+
+/// Symmetric INT8 full-scale value: `2^{8−1} − 1`.
+pub const QMAX: f32 = 127.0;
+
+/// Quantization granularity (Appendix F). Only the hardware-efficient ones:
+/// per-input-channel and per-group cannot feed an integer matmul directly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    /// One Δ for the whole tensor.
+    PerTensor,
+    /// One Δ per activation row (token).
+    PerToken,
+    /// One Δ per weight column (output channel).
+    PerOutChannel,
+}
+
+/// Quantize a scalar range: map `x` with step `delta` to i8.
+#[inline]
+pub fn quantize_value(x: f32, delta: f32) -> i8 {
+    if delta == 0.0 {
+        return 0;
+    }
+    let q = (x / delta).round();
+    q.clamp(-QMAX, QMAX) as i8
+}
+
+/// Step size for symmetric RTN given the absolute max (Eq. 1).
+#[inline]
+pub fn step_size(abs_max: f32) -> f32 {
+    abs_max / QMAX
+}
+
+/// Per-tensor quantization: `(X_int, Δ)`.
+pub fn quantize_per_tensor(x: &Matrix) -> (I8Matrix, f32) {
+    let delta = step_size(x.abs_max());
+    let data = x.data().iter().map(|&v| quantize_value(v, delta)).collect();
+    (I8Matrix::from_vec(x.rows(), x.cols(), data), delta)
+}
+
+/// Per-token (per-row) quantization of activations: `(X_int, Δ ∈ R^t)`.
+pub fn quantize_per_token(x: &Matrix) -> (I8Matrix, Vec<f32>) {
+    let deltas: Vec<f32> = x.row_abs_max().iter().map(|&m| step_size(m)).collect();
+    let mut data = Vec::with_capacity(x.rows() * x.cols());
+    for i in 0..x.rows() {
+        let d = deltas[i];
+        if d == 0.0 {
+            data.extend(std::iter::repeat(0i8).take(x.cols()));
+        } else {
+            let inv = 1.0 / d;
+            data.extend(
+                x.row(i)
+                    .iter()
+                    .map(|&v| (v * inv).round().clamp(-QMAX, QMAX) as i8),
+            );
+        }
+    }
+    (I8Matrix::from_vec(x.rows(), x.cols(), data), deltas)
+}
+
+/// Per-output-channel (per-column) quantization of weights:
+/// `(W_int, Δ ∈ R^{c_out})`.
+pub fn quantize_per_oc(w: &Matrix) -> (I8Matrix, Vec<f32>) {
+    let deltas: Vec<f32> = w.col_abs_max().iter().map(|&m| step_size(m)).collect();
+    let inv: Vec<f32> = deltas
+        .iter()
+        .map(|&d| if d == 0.0 { 0.0 } else { 1.0 / d })
+        .collect();
+    let mut data = Vec::with_capacity(w.rows() * w.cols());
+    for i in 0..w.rows() {
+        let row = w.row(i);
+        data.extend(
+            row.iter()
+                .zip(&inv)
+                .map(|(&v, &iv)| (v * iv).round().clamp(-QMAX, QMAX) as i8),
+        );
+    }
+    (I8Matrix::from_vec(w.rows(), w.cols(), data), deltas)
+}
+
+/// Dequantize a per-token-quantized activation matrix.
+pub fn dequantize_per_token(x: &I8Matrix, deltas: &[f32]) -> Matrix {
+    assert_eq!(deltas.len(), x.rows());
+    let mut out = Matrix::zeros(x.rows(), x.cols());
+    for i in 0..x.rows() {
+        let d = deltas[i];
+        let dst = out.row_mut(i);
+        for (o, &q) in dst.iter_mut().zip(x.row(i)) {
+            *o = q as f32 * d;
+        }
+    }
+    out
+}
+
+/// Dequantize a per-output-channel-quantized weight matrix.
+pub fn dequantize_per_oc(w: &I8Matrix, deltas: &[f32]) -> Matrix {
+    assert_eq!(deltas.len(), w.cols());
+    let mut out = Matrix::zeros(w.rows(), w.cols());
+    for i in 0..w.rows() {
+        let dst = out.row_mut(i);
+        for ((o, &q), &d) in dst.iter_mut().zip(w.row(i)).zip(deltas) {
+            *o = q as f32 * d;
+        }
+    }
+    out
+}
+
+/// Dequantize selected *rows* of a per-OC-quantized weight matrix
+/// (LLM.int8's "retrieve W_O" step — paper Eq. 10 discussion).
+pub fn dequantize_rows_per_oc(w: &I8Matrix, deltas: &[f32], rows: &[usize]) -> Matrix {
+    let mut out = Matrix::zeros(rows.len(), w.cols());
+    for (oi, &i) in rows.iter().enumerate() {
+        let dst = out.row_mut(oi);
+        for ((o, &q), &d) in dst.iter_mut().zip(w.row(i)).zip(deltas) {
+            *o = q as f32 * d;
+        }
+    }
+    out
+}
+
+/// Quantization error metrics between a reference f32 tensor and its
+/// quantize→dequantize round-trip.
+#[derive(Debug, Clone, Copy)]
+pub struct QuantError {
+    pub mse: f64,
+    /// Signal-to-quantization-noise ratio in dB (higher = better).
+    pub sqnr_db: f64,
+}
+
+/// Measure round-trip error of per-token quantization.
+pub fn error_per_token(x: &Matrix) -> QuantError {
+    let (q, d) = quantize_per_token(x);
+    let back = dequantize_per_token(&q, &d);
+    error_between(x, &back)
+}
+
+/// Error metrics between reference and reconstruction.
+pub fn error_between(reference: &Matrix, reconstructed: &Matrix) -> QuantError {
+    let mse = reference.mse(reconstructed);
+    let sig = reference.sq_norm() / reference.data().len().max(1) as f64;
+    let sqnr_db = if mse > 0.0 {
+        10.0 * (sig / mse).log10()
+    } else {
+        f64::INFINITY
+    };
+    QuantError { mse, sqnr_db }
+}
+
+/// Pre-quantized frozen weights of one linear layer: the static part of
+/// Eq. 4/5 that Quaff produces once at preprocessing time.
+///
+/// Alongside the canonical int8 store this keeps a transposed i16 "packed"
+/// copy for the fast CPU integer matmul (§Perf). The packed copy is a
+/// CPU-substrate execution detail — GPU/TPU int8 GEMMs consume `w_int`
+/// directly — so it is excluded from the device-memory model.
+#[derive(Clone, Debug)]
+pub struct QuantizedWeights {
+    pub w_int: I8Matrix,
+    /// Per-output-channel step sizes `Δ_W`.
+    pub deltas: Vec<f32>,
+    /// Transposed i16 form for the vectorized matmul.
+    pub packed: crate::tensor::PackedWeights,
+}
+
+impl QuantizedWeights {
+    pub fn quantize(w: &Matrix) -> QuantizedWeights {
+        let (w_int, deltas) = quantize_per_oc(w);
+        let packed = w_int.pack_transposed();
+        QuantizedWeights {
+            w_int,
+            deltas,
+            packed,
+        }
+    }
+
+    /// Fused `out += Δ_x·(X_int·W_int)·Δ_W` via the packed fast path.
+    pub fn matmul_into(&self, x_int: &I8Matrix, dx: &[f32], out: &mut [f32]) {
+        x_int.matmul_dequant_packed_into(&self.packed, dx, &self.deltas, out);
+    }
+
+    pub fn dequantize(&self) -> Matrix {
+        dequantize_per_oc(&self.w_int, &self.deltas)
+    }
+
+    /// Device bytes: int8 weights + f32 step sizes.
+    pub fn nbytes(&self) -> usize {
+        self.w_int.nbytes() + self.deltas.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
+    #[test]
+    fn per_tensor_roundtrip_error_bounded() {
+        // RTN error per element is at most Δ/2 when no clipping occurs.
+        prop::check("pt-roundtrip", 0xC1, 32, |r| {
+            let std = r.range(0.1, 10.0);
+            Matrix::randn(4 + r.below(20), 4 + r.below(40), r, std)
+        }, |x| {
+            let (q, d) = quantize_per_tensor(x);
+            for (i, (&v, &qv)) in x.data().iter().zip(q.data()).enumerate() {
+                let back = qv as f32 * d;
+                if (v - back).abs() > d * 0.5 + 1e-6 {
+                    return Err(format!("elem {i}: |{v} - {back}| > Δ/2 = {}", d * 0.5));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn per_token_roundtrip_error_bounded_by_row_delta() {
+        prop::check("ptok-roundtrip", 0xC2, 32, |r| {
+            Matrix::randn(2 + r.below(16), 2 + r.below(64), r, 1.0)
+        }, |x| {
+            let (q, deltas) = quantize_per_token(x);
+            let back = dequantize_per_token(&q, &deltas);
+            for i in 0..x.rows() {
+                for j in 0..x.cols() {
+                    let err = (x.get(i, j) - back.get(i, j)).abs();
+                    if err > deltas[i] * 0.5 + 1e-6 {
+                        return Err(format!("({i},{j}): err {err} > Δ/2"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn per_oc_full_scale_uses_127() {
+        let w = Matrix::from_vec(2, 2, vec![1.0, 10.0, -2.0, -5.0]);
+        let (q, d) = quantize_per_oc(&w);
+        // col 0 max=2 -> Δ=2/127; value -2 -> -127
+        assert_eq!(q.get(1, 0), -127);
+        assert!((d[0] - 2.0 / 127.0).abs() < 1e-7);
+        // col 1 max=10 -> 10 -> 127
+        assert_eq!(q.get(0, 1), 127);
+    }
+
+    #[test]
+    fn zero_tensor_quantizes_to_zero() {
+        let x = Matrix::zeros(3, 3);
+        let (q, d) = quantize_per_tensor(&x);
+        assert_eq!(d, 0.0);
+        assert!(q.data().iter().all(|&v| v == 0));
+        let (q2, d2) = quantize_per_token(&x);
+        assert!(d2.iter().all(|&v| v == 0.0));
+        assert!(q2.data().iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn outliers_inflate_per_token_error() {
+        // The paper's core failure mode: one 100x outlier channel makes the
+        // per-token Δ 100x larger, wrecking precision for normal channels.
+        let mut r = Rng::new(77);
+        let clean = Matrix::randn(8, 64, &mut r, 1.0);
+        let mut dirty = clean.clone();
+        for i in 0..8 {
+            let v = dirty.get(i, 3);
+            dirty.set(i, 3, v * 100.0);
+        }
+        let e_clean = error_per_token(&clean);
+        let e_dirty = error_per_token(&dirty);
+        assert!(
+            e_dirty.mse > e_clean.mse * 100.0,
+            "outliers should inflate error: {} vs {}",
+            e_dirty.mse,
+            e_clean.mse
+        );
+    }
+
+    #[test]
+    fn sqnr_improves_without_outliers() {
+        let mut r = Rng::new(78);
+        let x = Matrix::randn(16, 128, &mut r, 1.0);
+        let e = error_per_token(&x);
+        // INT8 RTN on Gaussian data ~ >30 dB SQNR
+        assert!(e.sqnr_db > 30.0, "sqnr = {}", e.sqnr_db);
+    }
+
+    #[test]
+    fn dequantize_rows_matches_full_dequant() {
+        let mut r = Rng::new(79);
+        let w = Matrix::randn(10, 6, &mut r, 1.0);
+        let qw = QuantizedWeights::quantize(&w);
+        let full = qw.dequantize();
+        let rows = [1usize, 4, 9];
+        let sel = dequantize_rows_per_oc(&qw.w_int, &qw.deltas, &rows);
+        for (oi, &i) in rows.iter().enumerate() {
+            assert_eq!(sel.row(oi), full.row(i));
+        }
+    }
+
+    #[test]
+    fn quantized_weights_bytes() {
+        let w = Matrix::zeros(100, 50);
+        let qw = QuantizedWeights::quantize(&w);
+        assert_eq!(qw.nbytes(), 100 * 50 + 50 * 4);
+    }
+}

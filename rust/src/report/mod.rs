@@ -1,0 +1,184 @@
+//! Report harness: regenerates every table and figure of the paper's
+//! evaluation (see DESIGN.md §6 for the experiment index). Each generator
+//! prints a markdown table whose rows mirror the paper's, produced by
+//! actually running the corresponding experiment on the simulator.
+//!
+//! `quaff report <id> [--steps N] [--budget-secs S] [--preset P]`
+
+mod ossh;
+mod perf_grid;
+
+use crate::coordinator::ServerConfig;
+use crate::methods::MethodKind;
+use crate::util::cli::Args;
+
+/// Scaling knobs shared by all reports (paper-scale runs are hours on a
+/// GPU; defaults here finish in minutes on the CPU simulator).
+#[derive(Clone, Debug)]
+pub struct ReportOpts {
+    pub steps: u64,
+    pub batch: usize,
+    pub budget_secs: f64,
+    pub preset: String,
+    pub seeds: u64,
+}
+
+impl ReportOpts {
+    pub fn from_args(args: &Args) -> ReportOpts {
+        ReportOpts {
+            steps: args.get_parse("steps", 12),
+            batch: args.get_parse("batch", 4),
+            budget_secs: args.get_parse("budget-secs", 20.0),
+            preset: args.get_or("preset", "phi-mini").to_string(),
+            seeds: args.get_parse("seeds", 1),
+        }
+    }
+
+    pub fn server_cfg(&self, preset: &str) -> ServerConfig {
+        let mut cfg = ServerConfig::default();
+        cfg.preset = preset.to_string();
+        cfg.calib_samples = 32;
+        cfg.calib_batch = 8;
+        cfg
+    }
+}
+
+impl Default for ReportOpts {
+    fn default() -> Self {
+        ReportOpts {
+            steps: 12,
+            batch: 4,
+            budget_secs: 20.0,
+            preset: "phi-mini".to_string(),
+            seeds: 1,
+        }
+    }
+}
+
+/// Simple markdown table builder.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(row);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("\n### {}\n\n", self.title);
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        out.push_str(&format!(
+            "|{}\n",
+            self.headers.iter().map(|_| "---|").collect::<String>()
+        ));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+}
+
+/// Format a float with 3 decimals (metric cells).
+pub fn f3(x: f64) -> String {
+    if x.is_nan() {
+        "—".to_string()
+    } else {
+        format!("{x:.3}")
+    }
+}
+
+/// Format seconds (latency cells).
+pub fn secs(x: f64) -> String {
+    format!("{x:.3}s")
+}
+
+/// All report ids.
+pub const ALL_REPORTS: [&str; 18] = [
+    "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
+    "table1", "table2", "table3", "table4", "table5", "table6", "table7",
+];
+
+/// Generate one report by id; returns the markdown (also suitable for
+/// EXPERIMENTS.md inclusion).
+pub fn generate(id: &str, opts: &ReportOpts) -> String {
+    match id {
+        "fig1" => perf_grid::fig1(opts),
+        "fig2" => ossh::fig2(opts),
+        "fig3" => ossh::hit_rate_report("fig3", "phi-mini", "oig-chip2", "oig-chip2", false, opts),
+        "fig4" => perf_grid::fig4(opts),
+        "fig5" => perf_grid::fig5(opts),
+        "fig6" => perf_grid::fig6(opts),
+        "fig7" => perf_grid::fig7(opts),
+        "fig8" => ossh::hit_rate_report("fig8", "llama-tiny", "oig-chip2", "oig-chip2", false, opts),
+        "fig9" => ossh::hit_rate_report("fig9", "phi-mini", "oig-chip2", "oig-chip2", true, opts),
+        "fig10" => ossh::hit_rate_report("fig10", "phi-mini", "oig-chip2", "gpqa", false, opts),
+        "fig11" => ossh::fig11(opts),
+        "table1" => perf_grid::table1(opts),
+        "table2" => perf_grid::table2(opts),
+        "table3" => perf_grid::table3(opts),
+        "table4" => perf_grid::table4(opts),
+        "table5" => perf_grid::table5(opts),
+        "table6" => ossh::table6(opts),
+        "table7" => ossh::table7(opts),
+        other => format!("unknown report id '{other}'; known: {ALL_REPORTS:?}\n"),
+    }
+}
+
+/// Paper-style method ordering for table rows.
+pub fn method_rows() -> Vec<MethodKind> {
+    vec![
+        MethodKind::Fp32,
+        MethodKind::LlmInt8,
+        MethodKind::SmoothDynamic,
+        MethodKind::Naive,
+        MethodKind::SmoothStatic,
+        MethodKind::Quaff,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_markdown_shape() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.push(vec!["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### demo"));
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.push(vec!["1".into()]);
+    }
+
+    #[test]
+    fn unknown_report_is_graceful() {
+        let out = generate("fig99", &ReportOpts::default());
+        assert!(out.contains("unknown report"));
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(f3(0.12345), "0.123");
+        assert_eq!(f3(f64::NAN), "—");
+        assert_eq!(secs(1.5), "1.500s");
+    }
+}

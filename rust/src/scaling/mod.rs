@@ -1,0 +1,283 @@
+//! Channel-wise scaling machinery.
+//!
+//! * [`MomentumScaler`] — Quaff's targeted momentum scaling (Eqs. 7–8):
+//!   `s_t = γ·s_{t−1} + (1−γ)·β`, with `β_i = max(1, sqrt(max|X_:,i| /
+//!   max|W_i|))` on outlier channels and `β_i = 1` elsewhere.
+//! * [`smoothquant_factors`] — SmoothQuant's α-balanced factors
+//!   `s_i = max|X_i|^α / max|W_i|^{1−α}` used by the Smooth_S / Smooth_D
+//!   baselines (Eq. 3).
+//! * Decomposition helpers for Eq. 4/5: building `ŵ = (s_O − 1)·W_O` and
+//!   applying `X̂ = X·s^{-1}` only on outlier columns.
+
+use crate::outlier::OutlierSet;
+use crate::tensor::Matrix;
+
+/// Quaff's momentum scaling state for one linear layer (Eqs. 7–8).
+#[derive(Clone, Debug)]
+pub struct MomentumScaler {
+    /// Update inertia γ ∈ [0,1] (paper uses γ = 0.2).
+    pub gamma: f32,
+    /// Outlier channel set O.
+    pub outliers: OutlierSet,
+    /// Current factors s_t over outlier channels only (aligned with
+    /// `outliers.channels`). Non-outlier channels implicitly have s = 1.
+    s: Vec<f32>,
+    /// Momentum disabled ⇒ s_t = β_t (the "Quaff w/o Mo" ablation, Table 3).
+    pub momentum_enabled: bool,
+}
+
+impl MomentumScaler {
+    pub fn new(gamma: f32, outliers: OutlierSet) -> Self {
+        assert!((0.0..=1.0).contains(&gamma), "gamma must be in [0,1]");
+        let n = outliers.len();
+        MomentumScaler {
+            gamma,
+            outliers,
+            s: vec![1.0; n],
+            momentum_enabled: true,
+        }
+    }
+
+    pub fn without_momentum(gamma: f32, outliers: OutlierSet) -> Self {
+        let mut m = Self::new(gamma, outliers);
+        m.momentum_enabled = false;
+        m
+    }
+
+    /// Current factors over outlier channels (aligned with the set).
+    pub fn factors(&self) -> &[f32] {
+        &self.s
+    }
+
+    /// Compute β for the outlier channels from the current batch (Eq. 8)
+    /// and fold into s_t (Eq. 7). `x_col_max[i]` is `max|X̂_:,i|` over the
+    /// *unscaled* activations; `w_row_max[i]` is `max|W_i,:|` for the same
+    /// absolute channel index.
+    pub fn update(&mut self, x_col_max: &[f32], w_row_max: &[f32]) {
+        for (k, &ch) in self.outliers.channels.iter().enumerate() {
+            let xm = x_col_max[ch];
+            let wm = w_row_max[ch].max(1e-12);
+            let beta = (xm / wm).sqrt().max(1.0);
+            self.s[k] = if self.momentum_enabled {
+                self.gamma * self.s[k] + (1.0 - self.gamma) * beta
+            } else {
+                beta
+            };
+        }
+    }
+
+    /// Expand factors to the full channel axis (1.0 off-outliers) — used by
+    /// the similarity tracker and tests.
+    pub fn full_factors(&self, cin: usize) -> Vec<f32> {
+        let mut out = vec![1.0f32; cin];
+        for (k, &ch) in self.outliers.channels.iter().enumerate() {
+            out[ch] = self.s[k];
+        }
+        out
+    }
+}
+
+/// SmoothQuant factors over ALL channels:
+/// `s_i = max|X_i|^α / max|W_i|^{1−α}`, clamped ≥ small-positive.
+/// α = 0.5 is the SmoothQuant default the paper's baselines use.
+pub fn smoothquant_factors(x_col_max: &[f32], w_row_max: &[f32], alpha: f32) -> Vec<f32> {
+    assert_eq!(x_col_max.len(), w_row_max.len());
+    x_col_max
+        .iter()
+        .zip(w_row_max)
+        .map(|(&xm, &wm)| {
+            let num = xm.max(1e-6).powf(alpha);
+            let den = wm.max(1e-6).powf(1.0 - alpha);
+            (num / den).max(1e-6)
+        })
+        .collect()
+}
+
+/// Build `ŵ = (s_O − 1) ∘ W_O` (Eq. 5): rows of `W` at outlier channels,
+/// each row `k` scaled by `(s_O[k] − 1)`.
+pub fn build_outlier_correction(w: &Matrix, outliers: &OutlierSet, s_o: &[f32]) -> Matrix {
+    assert_eq!(outliers.len(), s_o.len());
+    let mut w_hat = w.select_rows(&outliers.channels);
+    for (k, &s) in s_o.iter().enumerate() {
+        let factor = s - 1.0;
+        for v in w_hat.row_mut(k) {
+            *v *= factor;
+        }
+    }
+    w_hat
+}
+
+/// Same as [`build_outlier_correction`] but starting from an already-sliced
+/// `W_O` (|O| × c_out) — the representation Quaff actually stores.
+pub fn build_outlier_correction_from_slice(w_o: &Matrix, s_o: &[f32]) -> Matrix {
+    assert_eq!(w_o.rows(), s_o.len());
+    let mut w_hat = w_o.clone();
+    for (k, &s) in s_o.iter().enumerate() {
+        let factor = s - 1.0;
+        for v in w_hat.row_mut(k) {
+            *v *= factor;
+        }
+    }
+    w_hat
+}
+
+/// Apply `X̂ = X·s^{-1}` **only on outlier columns** (targeted scaling):
+/// divides column `ch` by `s_O[k]` in place.
+pub fn apply_targeted_inverse_scale(x: &mut Matrix, outliers: &OutlierSet, s_o: &[f32]) {
+    assert_eq!(outliers.len(), s_o.len());
+    for t in 0..x.rows() {
+        let row = x.row_mut(t);
+        for (k, &ch) in outliers.channels.iter().enumerate() {
+            row[ch] /= s_o[k];
+        }
+    }
+}
+
+/// Apply full channel-wise inverse scaling `X̂ = X·s^{-1}` (SmoothQuant).
+pub fn apply_full_inverse_scale(x: &mut Matrix, s: &[f32]) {
+    assert_eq!(s.len(), x.cols());
+    let inv: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
+    x.scale_cols(&inv);
+}
+
+/// Scale weight rows by `s` (`Ŵ = s·W`, SmoothQuant's weight side).
+pub fn apply_row_scale(w: &mut Matrix, s: &[f32]) {
+    assert_eq!(s.len(), w.rows());
+    w.scale_rows(s);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
+    #[test]
+    fn beta_floor_is_one() {
+        // Channels where activations are smaller than weights must not be
+        // scaled below 1 (Eq. 8's max(1, ·)).
+        let o = OutlierSet::new(vec![0, 1]);
+        let mut m = MomentumScaler::new(0.0, o); // γ=0 ⇒ s = β directly
+        m.update(&[0.01, 4.0], &[1.0, 1.0]);
+        assert_eq!(m.factors()[0], 1.0);
+        assert!((m.factors()[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn momentum_blends_history() {
+        let o = OutlierSet::new(vec![0]);
+        let mut m = MomentumScaler::new(0.2, o);
+        // β = sqrt(100/1) = 10; s1 = 0.2*1 + 0.8*10 = 8.2
+        m.update(&[100.0], &[1.0]);
+        assert!((m.factors()[0] - 8.2).abs() < 1e-5);
+        // again: s2 = 0.2*8.2 + 0.8*10 = 9.64
+        m.update(&[100.0], &[1.0]);
+        assert!((m.factors()[0] - 9.64).abs() < 1e-5);
+    }
+
+    #[test]
+    fn momentum_converges_to_beta_fixed_point() {
+        // Property: with constant β the iteration converges to β for any γ<1.
+        prop::check("momentum-fixpoint", 0xD1, 32, |r| {
+            (r.range(0.0, 0.99), r.range(1.0, 50.0))
+        }, |&(gamma, beta_sq)| {
+            let o = OutlierSet::new(vec![0]);
+            let mut m = MomentumScaler::new(gamma, o);
+            for _ in 0..400 {
+                m.update(&[beta_sq * beta_sq], &[1.0]);
+            }
+            prop::close(m.factors()[0], beta_sq, 1e-2, 1e-2)
+        });
+    }
+
+    #[test]
+    fn without_momentum_tracks_beta_instantly() {
+        let o = OutlierSet::new(vec![0]);
+        let mut m = MomentumScaler::without_momentum(0.2, o);
+        m.update(&[100.0], &[1.0]);
+        assert!((m.factors()[0] - 10.0).abs() < 1e-5);
+        m.update(&[4.0], &[1.0]);
+        assert!((m.factors()[0] - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn full_factors_one_off_outliers() {
+        let o = OutlierSet::new(vec![2, 5]);
+        let mut m = MomentumScaler::new(0.0, o);
+        m.update(&[0., 0., 9., 0., 0., 16.], &[1.; 6]);
+        let f = m.full_factors(6);
+        assert_eq!(f, vec![1.0, 1.0, 3.0, 1.0, 1.0, 4.0]);
+    }
+
+    #[test]
+    fn smoothquant_alpha_half_balances() {
+        let s = smoothquant_factors(&[16.0], &[4.0], 0.5);
+        assert!((s[0] - 2.0).abs() < 1e-5); // sqrt(16)/sqrt(4)
+    }
+
+    #[test]
+    fn decomposition_identity_exact_in_f32() {
+        // Core algebraic invariant of Eq. 4/5 (before quantization):
+        //   X̂·W + X̂_:,O·(s_O−1)·W_O == X·W  when X̂ = X with outlier columns
+        //   divided by s, because dividing then multiplying back restores X
+        //   exactly on outlier rows of W.
+        prop::check("eq5-identity", 0xD2, 24, |r| {
+            let t = 2 + r.below(10);
+            let cin = 8 + r.below(32);
+            let cout = 4 + r.below(24);
+            let x = Matrix::randn(t, cin, r, 1.0);
+            let w = Matrix::randn(cin, cout, r, 0.5);
+            let k = 1 + r.below(4.min(cin - 1));
+            let chans = r.sample_indices(cin, k);
+            let s: Vec<f32> = (0..k).map(|_| r.range(1.0, 20.0)).collect();
+            (x, w, OutlierSet::new(chans), s)
+        }, |(x, w, o, s)| {
+            let want = x.matmul(w);
+            let mut x_hat = x.clone();
+            apply_targeted_inverse_scale(&mut x_hat, o, s);
+            let main = x_hat.matmul(w);
+            let x_o = x_hat.select_cols(&o.channels);
+            let w_hat = build_outlier_correction(w, o, s);
+            let corr = x_o.matmul(&w_hat);
+            let mut got = main;
+            got.add_assign(&corr);
+            prop::all_close(got.data(), want.data(), 1e-3, 1e-3)
+        });
+    }
+
+    #[test]
+    fn targeted_scale_only_touches_outlier_columns() {
+        let mut r = Rng::new(99);
+        let x = Matrix::randn(4, 8, &mut r, 1.0);
+        let mut scaled = x.clone();
+        let o = OutlierSet::new(vec![1, 6]);
+        apply_targeted_inverse_scale(&mut scaled, &o, &[2.0, 4.0]);
+        for t in 0..4 {
+            for c in 0..8 {
+                let expect = match c {
+                    1 => x.get(t, c) / 2.0,
+                    6 => x.get(t, c) / 4.0,
+                    _ => x.get(t, c),
+                };
+                assert!((scaled.get(t, c) - expect).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn smoothquant_identity_full_scaling() {
+        // (X s^{-1})(s W) == X W in f32.
+        let mut r = Rng::new(100);
+        let x = Matrix::randn(5, 12, &mut r, 1.0);
+        let w = Matrix::randn(12, 7, &mut r, 1.0);
+        let s = smoothquant_factors(&x.col_abs_max(), &w.transpose().col_abs_max(), 0.5);
+        // w_row_max: max |W_i,:| per input channel = per row of W
+        let mut xh = x.clone();
+        apply_full_inverse_scale(&mut xh, &s);
+        let mut wh = w.clone();
+        apply_row_scale(&mut wh, &s);
+        let got = xh.matmul(&wh);
+        let want = x.matmul(&w);
+        prop::all_close(got.data(), want.data(), 1e-3, 1e-3).unwrap();
+    }
+}

@@ -1,0 +1,268 @@
+//! INT8 matrix with i32-accumulating integer matmul — the CPU analogue of
+//! the INT8 tensor-core (paper, CUDA) / MXU-int8 (our Pallas port) path.
+
+use crate::util::prng::Rng;
+
+/// Dense row-major i8 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct I8Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<i8>,
+}
+
+impl I8Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> I8Matrix {
+        I8Matrix {
+            rows,
+            cols,
+            data: vec![0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<i8>) -> I8Matrix {
+        assert_eq!(data.len(), rows * cols, "from_vec shape mismatch");
+        I8Matrix { rows, cols, data }
+    }
+
+    /// Uniform random int8 values (tests/benches).
+    pub fn random(rows: usize, cols: usize, rng: &mut Rng) -> I8Matrix {
+        let data = (0..rows * cols)
+            .map(|_| (rng.next_u64() as i64 % 255 - 127) as i8)
+            .collect();
+        I8Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> i8 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[i8] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[i8] {
+        &self.data
+    }
+
+    /// Bytes of storage (exactly rows*cols — the memory win vs f32).
+    pub fn nbytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Integer matmul `self(i8) @ other(i8) -> i32` with an i16-widening
+    /// inner loop. i-k-j order so the j loop auto-vectorizes.
+    pub fn matmul_i32(&self, other: &I8Matrix) -> Vec<i32> {
+        assert_eq!(self.cols, other.rows, "matmul dim mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = vec![0i32; m * n];
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &a) in arow.iter().enumerate() {
+                if a == 0 {
+                    continue;
+                }
+                let a = a as i32;
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b as i32;
+                }
+            }
+        }
+        out
+    }
+
+    /// Pack a weight matrix into the transposed-and-widened form the fast
+    /// matmul consumes: column-major i16 (§Perf: the i8→i32 sign-extension
+    /// in the naive inner loop quarters the effective SIMD width; widening
+    /// to i16 once lets LLVM use 16-bit multiply-add pairs, and the
+    /// transpose turns the reduction into contiguous dot products).
+    pub fn pack_transposed(&self) -> PackedWeights {
+        let (k, n) = (self.rows, self.cols);
+        let mut data = vec![0i16; n * k];
+        for kk in 0..k {
+            let row = &self.data[kk * n..(kk + 1) * n];
+            for (j, &v) in row.iter().enumerate() {
+                data[j * k + kk] = v as i16;
+            }
+        }
+        PackedWeights { k, n, data }
+    }
+
+    /// Fast fused dequantizing matmul against pre-packed weights:
+    /// `out[i,j] += Δ_row[i] · dot(self[i,:], packedᵀ[:,j]) · Δ_col[j]`.
+    /// The activation row is widened to i16 once per row.
+    pub fn matmul_dequant_packed_into(
+        &self,
+        packed: &PackedWeights,
+        row_scale: &[f32],
+        col_scale: &[f32],
+        out: &mut [f32],
+    ) {
+        let (m, k) = (self.rows, self.cols);
+        let n = packed.n;
+        assert_eq!(packed.k, k, "matmul dim mismatch");
+        assert_eq!(row_scale.len(), m);
+        assert_eq!(col_scale.len(), n);
+        assert_eq!(out.len(), m * n);
+        let mut a16 = vec![0i16; k];
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            for (dst, &v) in a16.iter_mut().zip(arow) {
+                *dst = v as i16;
+            }
+            let rs = row_scale[i];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                let brow = &packed.data[j * k..(j + 1) * k];
+                let mut acc = 0i32;
+                for (&a, &b) in a16.iter().zip(brow) {
+                    acc += a as i32 * b as i32;
+                }
+                orow[j] += rs * acc as f32 * col_scale[j];
+            }
+        }
+    }
+
+    /// Fused dequantizing matmul: `Δ_row[i] * (self @ other)[i,j] * Δ_col[j]`.
+    ///
+    /// This is Eq. 2 / Eq. 9's main term: per-token activation step sizes on
+    /// the left, per-output-channel weight step sizes on the right, i32
+    /// accumulation in the middle. Accumulates into `out` (so the outlier
+    /// correction term can be fused on top).
+    pub fn matmul_dequant_into(
+        &self,
+        other: &I8Matrix,
+        row_scale: &[f32],
+        col_scale: &[f32],
+        out: &mut [f32],
+    ) {
+        assert_eq!(self.cols, other.rows, "matmul dim mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        assert_eq!(row_scale.len(), m);
+        assert_eq!(col_scale.len(), n);
+        assert_eq!(out.len(), m * n);
+        let mut acc = vec![0i32; n];
+        for i in 0..m {
+            acc.fill(0);
+            let arow = &self.data[i * k..(i + 1) * k];
+            for (kk, &a) in arow.iter().enumerate() {
+                if a == 0 {
+                    continue;
+                }
+                let a = a as i32;
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                for (o, &b) in acc.iter_mut().zip(brow) {
+                    *o += a * b as i32;
+                }
+            }
+            let rs = row_scale[i];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for ((o, &a), &cs) in orow.iter_mut().zip(&acc).zip(col_scale) {
+                *o += rs * a as f32 * cs;
+            }
+        }
+    }
+}
+
+/// Weights in transposed, i16-widened, column-contiguous form — built once
+/// at quantization time, consumed by the fast integer matmul.
+#[derive(Clone, Debug)]
+pub struct PackedWeights {
+    k: usize,
+    n: usize,
+    data: Vec<i16>,
+}
+
+impl PackedWeights {
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Storage bytes (2 per element — counted as transient packing state).
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
+    #[test]
+    fn packed_matmul_matches_unpacked() {
+        prop::check("packed==unpacked", 0xB7, 20, |r| {
+            let (m, k, n) = (1 + r.below(16), 1 + r.below(64), 1 + r.below(48));
+            let a = I8Matrix::random(m, k, r);
+            let b = I8Matrix::random(k, n, r);
+            let rs: Vec<f32> = (0..m).map(|_| r.range(0.001, 0.1)).collect();
+            let cs: Vec<f32> = (0..n).map(|_| r.range(0.001, 0.1)).collect();
+            (a, b, rs, cs)
+        }, |(a, b, rs, cs)| {
+            let mut want = vec![0.0f32; a.rows() * b.cols()];
+            a.matmul_dequant_into(b, rs, cs, &mut want);
+            let packed = b.pack_transposed();
+            let mut got = vec![0.0f32; a.rows() * b.cols()];
+            a.matmul_dequant_packed_into(&packed, rs, cs, &mut got);
+            prop::all_close(&got, &want, 1e-5, 1e-5)
+        });
+    }
+
+    #[test]
+    fn dequant_matmul_matches_f32_of_ints() {
+        let mut r = Rng::new(12);
+        let a = I8Matrix::random(5, 7, &mut r);
+        let b = I8Matrix::random(7, 9, &mut r);
+        let row_s: Vec<f32> = (0..5).map(|_| r.range(0.001, 0.1)).collect();
+        let col_s: Vec<f32> = (0..9).map(|_| r.range(0.001, 0.1)).collect();
+        let mut out = vec![0.0f32; 5 * 9];
+        a.matmul_dequant_into(&b, &row_s, &col_s, &mut out);
+        // reference: float matmul of the dequantized ints
+        let mut want = vec![0.0f32; 5 * 9];
+        for i in 0..5 {
+            for j in 0..9 {
+                let mut acc = 0.0f64;
+                for k in 0..7 {
+                    acc += (a.get(i, k) as f64 * row_s[i] as f64)
+                        * (b.get(k, j) as f64 * col_s[j] as f64);
+                }
+                want[i * 9 + j] = acc as f32;
+            }
+        }
+        prop::all_close(&out, &want, 1e-5, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn dequant_matmul_accumulates() {
+        let a = I8Matrix::from_vec(1, 2, vec![1, 1]);
+        let b = I8Matrix::from_vec(2, 1, vec![2, 3]);
+        let mut out = vec![10.0f32];
+        a.matmul_dequant_into(&b, &[1.0], &[1.0], &mut out);
+        assert_eq!(out[0], 15.0);
+    }
+
+    #[test]
+    fn nbytes_is_one_per_element() {
+        assert_eq!(I8Matrix::zeros(13, 17).nbytes(), 13 * 17);
+    }
+}

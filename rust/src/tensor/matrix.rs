@@ -1,0 +1,289 @@
+//! Row-major f32 matrix with the ops the transformer + quantizers need.
+
+use super::{BLOCK_J, BLOCK_K};
+use crate::util::prng::Rng;
+
+/// Dense row-major f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "from_vec shape mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Gaussian init with std `std` (used for weight init and test data).
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng, std: f32) -> Matrix {
+        let data = (0..rows * cols).map(|_| rng.normal() * std).collect();
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// `self @ other` — cache-blocked i-k-j kernel (LLVM vectorizes the j loop).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul dim mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = vec![0.0f32; m * n];
+        for kb in (0..k).step_by(BLOCK_K) {
+            let kend = (kb + BLOCK_K).min(k);
+            for jb in (0..n).step_by(BLOCK_J) {
+                let jend = (jb + BLOCK_J).min(n);
+                for i in 0..m {
+                    let arow = &self.data[i * k..(i + 1) * k];
+                    let orow = &mut out[i * n + jb..i * n + jend];
+                    for kk in kb..kend {
+                        let a = arow[kk];
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let brow = &other.data[kk * n + jb..kk * n + jend];
+                        for (o, &b) in orow.iter_mut().zip(brow) {
+                            *o += a * b;
+                        }
+                    }
+                }
+            }
+        }
+        Matrix::from_vec(m, n, out)
+    }
+
+    /// `self @ other.T` — the backward-pass shape `dX = dY @ W.T`.
+    /// Reads both operands row-wise, so no transpose materialization.
+    pub fn matmul_bt(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "matmul_bt dim mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                let brow = &other.data[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (&a, &b) in arow.iter().zip(brow) {
+                    acc += a * b;
+                }
+                orow[j] = acc;
+            }
+        }
+        Matrix::from_vec(m, n, out)
+    }
+
+    /// `self.T @ other` — the gradient-accumulation shape `dW = X.T @ dY`.
+    pub fn matmul_at(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "matmul_at dim mismatch");
+        let (k, m, n) = (self.rows, self.cols, other.cols);
+        let mut out = vec![0.0f32; m * n];
+        for t in 0..k {
+            let arow = &self.data[t * m..(t + 1) * m];
+            let brow = &other.data[t * n..(t + 1) * n];
+            for (i, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        Matrix::from_vec(m, n, out)
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.set(j, i, self.get(i, j));
+            }
+        }
+        out
+    }
+
+    /// Elementwise in-place `self += other`.
+    pub fn add_assign(&mut self, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Elementwise in-place `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Elementwise in-place scale.
+    pub fn scale(&mut self, alpha: f32) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    /// Multiply each column `j` by `scales[j]` (broadcast over rows).
+    pub fn scale_cols(&mut self, scales: &[f32]) {
+        assert_eq!(scales.len(), self.cols);
+        for i in 0..self.rows {
+            let row = &mut self.data[i * self.cols..(i + 1) * self.cols];
+            for (x, &s) in row.iter_mut().zip(scales) {
+                *x *= s;
+            }
+        }
+    }
+
+    /// Multiply each row `i` by `scales[i]` (broadcast over columns).
+    pub fn scale_rows(&mut self, scales: &[f32]) {
+        assert_eq!(scales.len(), self.rows);
+        for i in 0..self.rows {
+            let s = scales[i];
+            for x in self.row_mut(i) {
+                *x *= s;
+            }
+        }
+    }
+
+    /// Per-column absolute maxima — the channel statistic everything in the
+    /// paper is built on (`max(|X_:,i|)`).
+    pub fn col_abs_max(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.cols];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            for (m, &x) in out.iter_mut().zip(row) {
+                let a = x.abs();
+                if a > *m {
+                    *m = a;
+                }
+            }
+        }
+        out
+    }
+
+    /// Per-row absolute maxima (`max(|X_t,:|)`, the per-token statistic).
+    pub fn row_abs_max(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|i| self.row(i).iter().fold(0.0f32, |m, &x| m.max(x.abs())))
+            .collect()
+    }
+
+    /// Global absolute maximum.
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Gather columns `idx` into a new `(rows × idx.len())` matrix.
+    pub fn select_cols(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, idx.len());
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let orow = out.row_mut(i);
+            for (o, &j) in orow.iter_mut().zip(idx) {
+                *o = row[j];
+            }
+        }
+        out
+    }
+
+    /// Gather rows `idx` into a new `(idx.len() × cols)` matrix.
+    pub fn select_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (oi, &i) in idx.iter().enumerate() {
+            out.row_mut(oi).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// In-place numerically-stable row softmax.
+    pub fn softmax_rows(&mut self) {
+        for i in 0..self.rows {
+            let row = &mut self.data[i * self.cols..(i + 1) * self.cols];
+            let mx = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+            let mut sum = 0.0f32;
+            for x in row.iter_mut() {
+                *x = (*x - mx).exp();
+                sum += *x;
+            }
+            let inv = 1.0 / sum;
+            for x in row.iter_mut() {
+                *x *= inv;
+            }
+        }
+    }
+
+    /// Frobenius-norm squared.
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    /// Mean squared error vs another matrix.
+    pub fn mse(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let n = self.data.len().max(1);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / n as f64
+    }
+}

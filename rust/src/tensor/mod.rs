@@ -1,0 +1,162 @@
+//! Dense row-major tensor substrate.
+//!
+//! The paper's compute lives almost entirely in 2-D matmuls over
+//! `(tokens × c_in) @ (c_in × c_out)`; this module provides exactly that:
+//! an f32 matrix, an i8 matrix with i32-accumulating integer matmul (the CPU
+//! analogue of the INT8 tensor-core / MXU path), and the handful of
+//! elementwise/reduction ops the transformer and the quantizers need.
+//!
+//! Everything is single-threaded (the benchmark host has one core) but
+//! cache-blocked and written so LLVM auto-vectorizes the inner loops.
+
+mod i8mat;
+mod matrix;
+
+pub use i8mat::{I8Matrix, PackedWeights};
+pub use matrix::Matrix;
+
+/// Matmul kernel block sizes (tuned in the §Perf pass; see EXPERIMENTS.md).
+pub(crate) const BLOCK_K: usize = 64;
+pub(crate) const BLOCK_J: usize = 256;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut acc = 0.0f32;
+                for k in 0..a.cols() {
+                    acc += a.get(i, k) * b.get(k, j);
+                }
+                c.set(i, j, acc);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn blocked_matmul_matches_naive() {
+        prop::check("matmul==naive", 0xA1, 24, |r| {
+            let (m, k, n) = (1 + r.below(40), 1 + r.below(70), 1 + r.below(90));
+            let a = Matrix::randn(m, k, r, 1.0);
+            let b = Matrix::randn(k, n, r, 1.0);
+            (a, b)
+        }, |(a, b)| {
+            let fast = a.matmul(b);
+            let slow = naive_matmul(a, b);
+            prop::all_close(fast.data(), slow.data(), 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    fn matmul_bt_is_b_transposed() {
+        let mut r = Rng::new(3);
+        let a = Matrix::randn(7, 5, &mut r, 1.0);
+        let b = Matrix::randn(9, 5, &mut r, 1.0);
+        let direct = a.matmul(&b.transpose());
+        let fused = a.matmul_bt(&b);
+        prop::all_close(direct.data(), fused.data(), 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn matmul_at_is_a_transposed() {
+        let mut r = Rng::new(4);
+        let a = Matrix::randn(6, 8, &mut r, 1.0);
+        let b = Matrix::randn(6, 4, &mut r, 1.0);
+        let direct = a.transpose().matmul(&b);
+        let fused = a.matmul_at(&b);
+        prop::all_close(direct.data(), fused.data(), 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn i8_matmul_matches_i32_reference() {
+        prop::check("i8matmul==ref", 0xB2, 24, |r| {
+            let (m, k, n) = (1 + r.below(20), 1 + r.below(40), 1 + r.below(50));
+            let a = I8Matrix::random(m, k, r);
+            let b = I8Matrix::random(k, n, r);
+            (a, b)
+        }, |(a, b)| {
+            let fast = a.matmul_i32(b);
+            for i in 0..a.rows() {
+                for j in 0..b.cols() {
+                    let mut acc = 0i32;
+                    for kk in 0..a.cols() {
+                        acc += a.get(i, kk) as i32 * b.get(kk, j) as i32;
+                    }
+                    if acc != fast[i * b.cols() + j] {
+                        return Err(format!("mismatch at ({i},{j})"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut r = Rng::new(5);
+        let mut m = Matrix::randn(10, 33, &mut r, 3.0);
+        m.softmax_rows();
+        for i in 0..10 {
+            let s: f32 = (0..33).map(|j| m.get(i, j)).sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {i} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn softmax_handles_large_values() {
+        let mut m = Matrix::from_vec(1, 3, vec![1000.0, 1000.0, -1000.0]);
+        m.softmax_rows();
+        assert!((m.get(0, 0) - 0.5).abs() < 1e-5);
+        assert!(m.get(0, 2) < 1e-6);
+        assert!(m.data().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut r = Rng::new(6);
+        let m = Matrix::randn(11, 7, &mut r, 1.0);
+        let back = m.transpose().transpose();
+        assert_eq!(m.data(), back.data());
+    }
+
+    #[test]
+    fn col_abs_max() {
+        let m = Matrix::from_vec(2, 3, vec![1.0, -5.0, 2.0, -3.0, 4.0, 0.5]);
+        assert_eq!(m.col_abs_max(), vec![3.0, 5.0, 2.0]);
+    }
+
+    #[test]
+    fn row_abs_max() {
+        let m = Matrix::from_vec(2, 3, vec![1.0, -5.0, 2.0, -3.0, 4.0, 0.5]);
+        assert_eq!(m.row_abs_max(), vec![5.0, 4.0]);
+    }
+
+    #[test]
+    fn select_cols_picks_submatrix() {
+        let m = Matrix::from_vec(2, 4, vec![0., 1., 2., 3., 4., 5., 6., 7.]);
+        let s = m.select_cols(&[1, 3]);
+        assert_eq!(s.data(), &[1., 3., 5., 7.]);
+        assert_eq!((s.rows(), s.cols()), (2, 2));
+    }
+
+    #[test]
+    fn select_rows_picks_submatrix() {
+        let m = Matrix::from_vec(3, 2, vec![0., 1., 2., 3., 4., 5.]);
+        let s = m.select_rows(&[0, 2]);
+        assert_eq!(s.data(), &[0., 1., 4., 5.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul dim mismatch")]
+    fn matmul_shape_check() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(4, 2);
+        let _ = a.matmul(&b);
+    }
+}

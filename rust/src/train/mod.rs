@@ -1,0 +1,349 @@
+//! Fine-tuning: masked next-token cross-entropy, Adam over PEFT adapters,
+//! the train-step driver with gradient accumulation, and the
+//! wall-clock-budgeted runner used for the convergence experiments
+//! (Fig. 6 / Table 2's "24 hours of fine-tuning", scaled).
+
+pub mod eval;
+
+use crate::data::{pack_batch, Sample};
+use crate::model::param::Param;
+use crate::model::{Model, ModelCache};
+use crate::tensor::Matrix;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Masked next-token cross-entropy.
+///
+/// `logits` rows are `(batch · seq')` with `seq' = n_virtual + seq`;
+/// `mask[b][i]` marks positions whose next token carries loss. Returns the
+/// mean NLL over masked positions and dL/dlogits.
+pub fn cross_entropy(
+    logits: &Matrix,
+    tokens: &[Vec<u32>],
+    masks: &[Vec<bool>],
+    cache: &ModelCache,
+) -> (f64, Matrix) {
+    let nv = cache.n_virtual;
+    let sp = cache.seq;
+    let s = sp - nv;
+    let vocab = logits.cols();
+    let mut dlogits = Matrix::zeros(logits.rows(), vocab);
+    let mut total_nll = 0.0f64;
+    let mut count = 0usize;
+    for (b, (seq_toks, seq_mask)) in tokens.iter().zip(masks).enumerate() {
+        for i in 0..s.saturating_sub(1) {
+            if !seq_mask[i] {
+                continue;
+            }
+            let row_idx = b * sp + nv + i;
+            let target = seq_toks[i + 1] as usize;
+            let row = logits.row(row_idx);
+            // stable log-softmax
+            let mx = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+            let mut sum = 0.0f64;
+            for &x in row {
+                sum += ((x - mx) as f64).exp();
+            }
+            let log_z = sum.ln() + mx as f64;
+            total_nll += log_z - row[target] as f64;
+            // dlogits = softmax - onehot (normalized later)
+            let drow = dlogits.row_mut(row_idx);
+            for (j, &x) in row.iter().enumerate() {
+                drow[j] = (((x as f64 - log_z).exp()) as f32) - if j == target { 1.0 } else { 0.0 };
+            }
+            count += 1;
+        }
+    }
+    if count > 0 {
+        let inv = 1.0 / count as f32;
+        dlogits.scale(inv);
+        (total_nll / count as f64, dlogits)
+    } else {
+        (0.0, dlogits)
+    }
+}
+
+/// Adam optimizer over the model's trainable (adapter) parameters.
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    t: u64,
+    state: BTreeMap<String, (Matrix, Matrix)>,
+}
+
+impl Adam {
+    /// Paper hyper-parameters: lr 2e-4 (Appendix E).
+    pub fn new(lr: f32) -> Adam {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            t: 0,
+            state: BTreeMap::new(),
+        }
+    }
+
+    /// Apply one update from the accumulated gradients, then zero them.
+    pub fn step(&mut self, model: &mut Model) {
+        self.t += 1;
+        let t = self.t as f64;
+        let bc1 = 1.0 - (self.beta1 as f64).powf(t);
+        let bc2 = 1.0 - (self.beta2 as f64).powf(t);
+        let (b1, b2, lr, eps) = (self.beta1, self.beta2, self.lr, self.eps);
+        let state = &mut self.state;
+        model.visit_params(&mut |name: &str, p: &mut Param| {
+            let (m, v) = state.entry(name.to_string()).or_insert_with(|| {
+                (
+                    Matrix::zeros(p.value.rows(), p.value.cols()),
+                    Matrix::zeros(p.value.rows(), p.value.cols()),
+                )
+            });
+            let g = p.grad.data();
+            let md = m.data_mut();
+            let vd = v.data_mut();
+            let pv = p.value.data_mut();
+            for i in 0..g.len() {
+                md[i] = b1 * md[i] + (1.0 - b1) * g[i];
+                vd[i] = b2 * vd[i] + (1.0 - b2) * g[i] * g[i];
+                let mh = md[i] as f64 / bc1;
+                let vh = vd[i] as f64 / bc2;
+                pv[i] -= lr * (mh / (vh.sqrt() + eps as f64)) as f32;
+            }
+            p.zero_grad();
+        });
+    }
+
+    /// Optimizer state bytes (m+v per param).
+    pub fn state_bytes(&self) -> usize {
+        self.state
+            .values()
+            .map(|(m, v)| (m.data().len() + v.data().len()) * 4)
+            .sum()
+    }
+}
+
+/// Statistics from one optimizer step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepStats {
+    pub loss: f64,
+    pub seconds: f64,
+    pub tokens: usize,
+}
+
+/// The fine-tuning driver: micro-batches with gradient accumulation, outlier
+/// drift ticks, and per-step latency measurement.
+pub struct Trainer {
+    pub opt: Adam,
+    pub max_len: usize,
+    pub grad_accum: usize,
+    pub step_count: u64,
+}
+
+impl Trainer {
+    pub fn new(lr: f32, max_len: usize, grad_accum: usize) -> Trainer {
+        Trainer {
+            opt: Adam::new(lr),
+            max_len,
+            grad_accum,
+            step_count: 0,
+        }
+    }
+
+    /// One optimizer step over `micro_batches` (each a slice of samples).
+    pub fn step(&mut self, model: &mut Model, micro_batches: &[Vec<&Sample>]) -> StepStats {
+        let t0 = Instant::now();
+        let mut loss_sum = 0.0;
+        let mut tokens = 0usize;
+        for mb in micro_batches {
+            let (toks, masks) = pack_batch(mb, self.max_len);
+            tokens += toks.len() * toks[0].len();
+            let (logits, cache) = model.forward(&toks, true);
+            let (loss, dlogits) = cross_entropy(&logits, &toks, &masks, &cache);
+            model.backward(&dlogits, &cache);
+            loss_sum += loss;
+        }
+        self.opt.step(model);
+        model.tick_outliers();
+        self.step_count += 1;
+        StepStats {
+            loss: loss_sum / micro_batches.len().max(1) as f64,
+            seconds: t0.elapsed().as_secs_f64(),
+            tokens,
+        }
+    }
+}
+
+/// A point on a convergence curve.
+#[derive(Debug, Clone, Copy)]
+pub struct CurvePoint {
+    pub seconds: f64,
+    pub steps: u64,
+    pub metric: f64,
+}
+
+/// Run fine-tuning under a wall-clock budget, evaluating `eval` every
+/// `eval_every` steps — the scaled analogue of the paper's 24-hour runs.
+pub fn run_budgeted<F>(
+    model: &mut Model,
+    trainer: &mut Trainer,
+    mut next_batch: impl FnMut() -> Vec<Vec<Sample>>,
+    budget_secs: f64,
+    eval_every: u64,
+    mut eval: F,
+) -> Vec<CurvePoint>
+where
+    F: FnMut(&mut Model) -> f64,
+{
+    let t0 = Instant::now();
+    let mut curve = Vec::new();
+    loop {
+        let owned = next_batch();
+        let micro: Vec<Vec<&Sample>> = owned.iter().map(|b| b.iter().collect()).collect();
+        let _ = trainer.step(model, &micro);
+        if trainer.step_count % eval_every == 0 {
+            let m = eval(model);
+            curve.push(CurvePoint {
+                seconds: t0.elapsed().as_secs_f64(),
+                steps: trainer.step_count,
+                metric: m,
+            });
+        }
+        if t0.elapsed().as_secs_f64() >= budget_secs {
+            break;
+        }
+    }
+    if curve.is_empty() || curve.last().unwrap().steps != trainer.step_count {
+        let m = eval(model);
+        curve.push(CurvePoint {
+            seconds: t0.elapsed().as_secs_f64(),
+            steps: trainer.step_count,
+            metric: m,
+        });
+    }
+    curve
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{SynthTask, Tokenizer};
+    use crate::model::{Model, ModelConfig};
+    use crate::peft::PeftKind;
+    use crate::util::prng::Rng;
+
+    fn tiny_model() -> Model {
+        let cfg = ModelConfig {
+            vocab: crate::data::VOCAB_SIZE,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 64,
+            max_seq: 96,
+            ln_eps: 1e-5,
+            inject_outliers: false,
+            lora_rank: 4,
+            lora_alpha: 8.0,
+            lora_dropout: 0.0,
+            n_virtual: 4,
+        };
+        let mut m = Model::new(cfg, 3);
+        m.attach_peft(PeftKind::Lora);
+        m
+    }
+
+    #[test]
+    fn cross_entropy_uniform_logits() {
+        let mut m = tiny_model();
+        let toks = vec![vec![5u32, 6, 7, 8]];
+        let masks = vec![vec![true, true, true, false]];
+        let (logits, cache) = m.forward(&toks, false);
+        let zero_logits = Matrix::zeros(logits.rows(), logits.cols());
+        let (loss, dl) = cross_entropy(&zero_logits, &toks, &masks, &cache);
+        // uniform: loss = ln(vocab)
+        assert!((loss - (crate::data::VOCAB_SIZE as f64).ln()).abs() < 1e-6);
+        // gradient rows sum ≈ 0 (softmax minus onehot)
+        for i in 0..dl.rows() {
+            let s: f32 = dl.row(i).iter().sum();
+            assert!(s.abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss_on_fixed_batch() {
+        let mut m = tiny_model();
+        let task = SynthTask::by_name("oasst1").unwrap();
+        let mut rng = Rng::new(9);
+        let samples: Vec<_> = (0..4).map(|_| task.sample(&mut rng)).collect();
+        let mut trainer = Trainer::new(1e-2, 96, 1);
+        let refs: Vec<&crate::data::Sample> = samples.iter().collect();
+        let first = trainer.step(&mut m, &[refs.clone()]).loss;
+        let mut last = first;
+        for _ in 0..100 {
+            last = trainer.step(&mut m, &[refs.clone()]).loss;
+        }
+        // LoRA-only adaptation of a frozen *random* base is slow by design;
+        // we assert steady optimization, not memorization (integration tests
+        // train for longer and check task metrics).
+        assert!(
+            last < first - 0.3,
+            "loss should drop on a memorizable batch: {first} → {last}"
+        );
+    }
+
+    #[test]
+    fn adam_updates_only_adapters() {
+        let mut m = tiny_model();
+        let w_before = m.blocks[0].q_proj.master().unwrap().clone();
+        let emb_before = m.emb.tok.clone();
+        let task = SynthTask::by_name("oasst1").unwrap();
+        let mut rng = Rng::new(10);
+        let samples: Vec<_> = (0..2).map(|_| task.sample(&mut rng)).collect();
+        let refs: Vec<&crate::data::Sample> = samples.iter().collect();
+        let mut trainer = Trainer::new(1e-3, 96, 1);
+        for _ in 0..3 {
+            let _ = trainer.step(&mut m, &[refs.clone()]);
+        }
+        assert_eq!(m.blocks[0].q_proj.master().unwrap().data(), w_before.data());
+        assert_eq!(m.emb.tok.data(), emb_before.data());
+        // but LoRA B moved
+        let b = &m.blocks[0].q_proj.lora.as_ref().unwrap().b.value;
+        assert!(b.sq_norm() > 0.0);
+    }
+
+    #[test]
+    fn grad_accum_equivalent_token_count() {
+        let mut m = tiny_model();
+        let task = SynthTask::by_name("oasst1").unwrap();
+        let mut rng = Rng::new(11);
+        let samples: Vec<_> = (0..4).map(|_| task.sample(&mut rng)).collect();
+        let refs: Vec<&crate::data::Sample> = samples.iter().collect();
+        let mut trainer = Trainer::new(1e-3, 96, 2);
+        let stats = trainer.step(&mut m, &[refs[..2].to_vec(), refs[2..].to_vec()]);
+        assert!(stats.tokens > 0);
+        assert!(stats.loss.is_finite());
+    }
+
+    #[test]
+    fn budgeted_run_respects_budget_and_returns_curve() {
+        let mut m = tiny_model();
+        let task = SynthTask::by_name("oasst1").unwrap();
+        let mut rng = Rng::new(12);
+        let mut trainer = Trainer::new(1e-3, 96, 1);
+        let t0 = std::time::Instant::now();
+        let curve = run_budgeted(
+            &mut m,
+            &mut trainer,
+            || vec![(0..2).map(|_| task.sample(&mut rng)).collect()],
+            0.5,
+            2,
+            |_| 0.42,
+        );
+        assert!(t0.elapsed().as_secs_f64() < 30.0);
+        assert!(!curve.is_empty());
+        assert!(curve.last().unwrap().steps >= 1);
+        let _ = Tokenizer::new();
+    }
+}

@@ -1,0 +1,105 @@
+//! Mini property-testing harness.
+//!
+//! `proptest` is not available in the offline vendor set, so this module
+//! provides the core loop we need: run a property over `N` randomized cases
+//! drawn from a seeded [`Rng`](crate::util::prng::Rng); on failure report the
+//! case index and seed so the exact case can be replayed deterministically.
+
+use crate::util::prng::Rng;
+
+/// Default number of cases per property.
+pub const DEFAULT_CASES: usize = 128;
+
+/// Run `prop` over `cases` randomized inputs produced by `gen`.
+///
+/// Panics with the failing case index + seed on the first violation, so a
+/// failure is reproducible by re-running with the same seed.
+pub fn check<T, G, P>(name: &str, seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    for case in 0..cases {
+        // Derive a per-case seed so any single case replays independently.
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (seed {case_seed:#x}): \
+                 {msg}\ninput: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Convenience: run with [`DEFAULT_CASES`].
+pub fn check_default<T, G, P>(name: &str, seed: u64, gen: G, prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    check(name, seed, DEFAULT_CASES, gen, prop)
+}
+
+/// Assert two floats are close (absolute + relative tolerance).
+pub fn close(a: f32, b: f32, atol: f32, rtol: f32) -> Result<(), String> {
+    let diff = (a - b).abs();
+    let bound = atol + rtol * b.abs().max(a.abs());
+    if diff <= bound || (a.is_nan() && b.is_nan()) {
+        Ok(())
+    } else {
+        Err(format!("|{a} - {b}| = {diff} > {bound}"))
+    }
+}
+
+/// Assert two slices are element-wise close.
+pub fn all_close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        close(x, y, atol, rtol).map_err(|e| format!("at index {i}: {e}"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 1, 50, |r| r.uniform(), |_x| {
+            Ok(())
+        });
+        // a second property that counts
+        check("count", 1, 50, |r| r.uniform(), |_x| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_context() {
+        check("always-fails", 2, 10, |r| r.below(10), |_x| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-7, 1e-6, 0.0).is_ok());
+        assert!(close(1.0, 1.1, 1e-6, 0.0).is_err());
+        assert!(close(100.0, 100.5, 0.0, 0.01).is_ok());
+    }
+
+    #[test]
+    fn all_close_reports_index() {
+        let e = all_close(&[1.0, 2.0], &[1.0, 3.0], 1e-6, 0.0).unwrap_err();
+        assert!(e.contains("index 1"), "{e}");
+    }
+}

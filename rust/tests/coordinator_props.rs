@@ -1,0 +1,142 @@
+//! Property tests on coordinator + substrate invariants (in-house harness;
+//! see `util::prop`): bundle routing, state monotonicity, decomposition
+//! identities at model scale.
+
+use quaff::coordinator::{run_job, FinetuneJob, PreprocessServer, ServerConfig};
+use quaff::methods::MethodKind;
+use quaff::outlier::OutlierSet;
+use quaff::peft::PeftKind;
+use quaff::quant;
+use quaff::scaling::{self, MomentumScaler};
+use quaff::tensor::Matrix;
+use quaff::util::prop;
+
+fn server() -> PreprocessServer {
+    let mut cfg = ServerConfig::default();
+    cfg.preset = "opt-tiny".to_string();
+    cfg.calib_samples = 8;
+    cfg.calib_batch = 4;
+    PreprocessServer::new(cfg)
+}
+
+#[test]
+fn prop_eq5_decomposition_identity_large_shapes() {
+    // The algebraic core of the paper at realistic layer sizes.
+    prop::check("eq5-large", 0x51, 10, |r| {
+        let t = 8 + r.below(24);
+        let cin = 64 + r.below(192);
+        let cout = 32 + r.below(128);
+        let x = Matrix::randn(t, cin, r, 1.0);
+        let w = Matrix::randn(cin, cout, r, 0.3);
+        let k = 1 + r.below(8);
+        let chans = r.sample_indices(cin, k);
+        let s: Vec<f32> = (0..k).map(|_| r.range(1.0, 30.0)).collect();
+        (x, w, OutlierSet::new(chans), s)
+    }, |(x, w, o, s)| {
+        let want = x.matmul(w);
+        let mut x_hat = x.clone();
+        scaling::apply_targeted_inverse_scale(&mut x_hat, o, s);
+        let mut got = x_hat.matmul(w);
+        let corr = x_hat
+            .select_cols(&o.channels)
+            .matmul(&scaling::build_outlier_correction(w, o, s));
+        got.add_assign(&corr);
+        prop::all_close(got.data(), want.data(), 1e-2, 1e-2)
+    });
+}
+
+#[test]
+fn prop_quantize_dequantize_monotone_in_magnitude() {
+    // Per-token quantization error grows with the planted outlier gain.
+    prop::check("quant-monotone", 0x52, 16, |r| {
+        let x = Matrix::randn(8, 64, r, 1.0);
+        let gain = r.range(10.0, 200.0);
+        (x, gain)
+    }, |(x, gain)| {
+        let base = quant::error_per_token(x).mse;
+        let mut hot = x.clone();
+        for t in 0..hot.rows() {
+            let v = hot.get(t, 0);
+            hot.set(t, 0, v * gain);
+        }
+        let inflated = quant::error_per_token(&hot).mse;
+        if inflated > base {
+            Ok(())
+        } else {
+            Err(format!("gain {gain}: error {inflated} !> {base}"))
+        }
+    });
+}
+
+#[test]
+fn prop_momentum_scaler_bounded_and_convergent() {
+    prop::check("momentum-bounds", 0x53, 24, |r| {
+        let gamma = r.range(0.0, 0.95);
+        let targets: Vec<f32> = (0..4).map(|_| r.range(1.0, 40.0)).collect();
+        (gamma, targets)
+    }, |(gamma, targets)| {
+        let o = OutlierSet::new((0..targets.len()).collect());
+        let mut m = MomentumScaler::new(*gamma, o);
+        let xmax: Vec<f32> = targets.iter().map(|&t| t * t).collect();
+        let wmax = vec![1.0f32; targets.len()];
+        for _ in 0..500 {
+            m.update(&xmax, &wmax);
+            // invariant: factors never drop below 1 (Eq. 8 floor)
+            if m.factors().iter().any(|&s| s < 1.0 - 1e-6) {
+                return Err("factor below 1".into());
+            }
+        }
+        prop::all_close(m.factors(), targets, 0.05, 0.05)
+    });
+}
+
+#[test]
+fn prop_bundle_payload_monotone_in_method_precision() {
+    // For any seed, the quantized payload is always smaller than FP32's.
+    let server = server();
+    for method in [MethodKind::Naive, MethodKind::Quaff, MethodKind::SmoothStatic] {
+        let q = server.prepare(method, PeftKind::Lora);
+        let f = server.prepare(MethodKind::Fp32, PeftKind::Lora);
+        assert!(
+            q.payload_bytes < f.payload_bytes,
+            "{:?} payload {} !< fp32 {}",
+            method,
+            q.payload_bytes,
+            f.payload_bytes
+        );
+    }
+}
+
+#[test]
+fn prop_job_reports_deterministic_given_seed() {
+    let server = server();
+    let mut job = FinetuneJob::new(0, "gpqa", MethodKind::Quaff, PeftKind::Lora);
+    job.steps = 3;
+    job.batch_size = 2;
+    job.train_pool = 8;
+    job.eval_samples = 4;
+    let a = run_job(&server, &job);
+    let b = run_job(&server, &job);
+    assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits(), "nondeterministic training");
+    assert_eq!(a.metric("acc").to_bits(), b.metric("acc").to_bits());
+}
+
+#[test]
+fn prop_registry_channels_within_layer_bounds() {
+    let server = server();
+    let bundle = server.prepare(MethodKind::Quaff, PeftKind::Lora);
+    // map layer name → c_in
+    let mut cin_by_name = std::collections::BTreeMap::new();
+    for b in &bundle.model.blocks {
+        for l in b.linears_ref() {
+            cin_by_name.insert(l.name.clone(), l.cin());
+        }
+    }
+    for (name, set) in bundle.registry.layers() {
+        let cin = cin_by_name[name];
+        for &c in &set.channels {
+            assert!(c < cin, "{name}: channel {c} out of range (c_in = {cin})");
+        }
+        assert!(set.len() <= cin);
+    }
+}

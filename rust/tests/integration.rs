@@ -1,0 +1,215 @@
+//! End-to-end integration over the pure-Rust stack: calibration →
+//! preprocessing → fine-tuning → evaluation, and the paper's headline
+//! orderings (Quaff ≈ FP32 quality at Naive-like cost).
+
+use quaff::coordinator::{checkpoint, run_job, Coordinator, FinetuneJob, PreprocessServer, ServerConfig};
+use quaff::methods::MethodKind;
+use quaff::peft::PeftKind;
+use quaff::report::{self, ReportOpts};
+
+fn server_cfg(preset: &str) -> ServerConfig {
+    let mut cfg = ServerConfig::default();
+    cfg.preset = preset.to_string();
+    cfg.calib_samples = 16;
+    cfg.calib_batch = 4;
+    cfg
+}
+
+fn quick_job(dataset: &str, method: MethodKind) -> FinetuneJob {
+    let mut j = FinetuneJob::new(0, dataset, method, PeftKind::Lora);
+    j.steps = 4;
+    j.batch_size = 4;
+    j.train_pool = 16;
+    j.eval_samples = 8;
+    j.max_len = 144;
+    j
+}
+
+#[test]
+fn full_pipeline_every_method() {
+    let server = PreprocessServer::new(server_cfg("opt-tiny"));
+    for method in MethodKind::ALL {
+        let r = run_job(&server, &quick_job("gpqa", method));
+        assert!(r.final_loss.is_finite(), "{}", method.label());
+        assert!(r.metric("ppl").is_finite() && r.metric("ppl") > 1.0);
+        assert!((0.0..=1.0).contains(&r.metric("acc")));
+    }
+}
+
+#[test]
+fn full_pipeline_every_task_family() {
+    let server = PreprocessServer::new(server_cfg("opt-tiny"));
+    for (ds, key) in [
+        ("oasst1", "rouge_l"),
+        ("gpqa", "acc"),
+        ("lambada", "exact"),
+        ("longform", "rouge_l"),
+    ] {
+        let mut j = quick_job(ds, MethodKind::Quaff);
+        if ds == "lambada" || ds == "longform" {
+            j.max_len = 256;
+            j.batch_size = 2;
+        }
+        let r = run_job(&server, &j);
+        assert!(
+            r.metrics.contains_key(key),
+            "{ds} should report {key}: has {:?}",
+            r.metrics.keys().collect::<Vec<_>>()
+        );
+    }
+}
+
+#[test]
+fn memory_ordering_reproduces_paper() {
+    // Paper Table 1: FP32 24.1 GB > Smooth_D 23.0 > LLM.int8 16.4 >
+    // Quaff 14.9 ≈ Smooth_S 14.7 ≈ Naive 14.6.
+    let server = PreprocessServer::new(server_cfg("phi-mini"));
+    let mem = |m| run_job(&server, &quick_job("oasst1", m)).memory.total();
+    let fp32 = mem(MethodKind::Fp32);
+    let smooth_d = mem(MethodKind::SmoothDynamic);
+    let naive = mem(MethodKind::Naive);
+    let smooth_s = mem(MethodKind::SmoothStatic);
+    let quaff = mem(MethodKind::Quaff);
+    assert!(fp32 > naive, "fp32 {fp32} vs naive {naive}");
+    assert!(smooth_d >= fp32, "smooth_d must keep f32 masters");
+    assert!(quaff >= naive && quaff <= naive + naive / 3);
+    assert!(smooth_s >= naive && smooth_s <= quaff + quaff / 4);
+}
+
+#[test]
+fn latency_ordering_reproduces_paper() {
+    // Paper: Smooth_D pays a per-step rescale+requantize penalty vs Naive;
+    // Quaff stays within a small overhead of Naive. Measured at the layer
+    // level (256×512×512 forward), where the per-method work dominates —
+    // at toy model scale the end-to-end step is attention/backward-bound
+    // and the ordering drowns in noise (see bench_train for the e2e view).
+    use quaff::methods::{build_method, MethodConfig, MethodKind};
+    use quaff::outlier::{ChannelStats, OutlierDetector};
+    use quaff::tensor::Matrix;
+    use quaff::util::prng::Rng;
+    let mut rng = Rng::new(9);
+    let (t, cin, cout) = (256, 512, 512);
+    let mut x = Matrix::randn(t, cin, &mut rng, 1.0);
+    for c in [7usize, 100, 333] {
+        for ti in 0..t {
+            let v = x.get(ti, c);
+            x.set(ti, c, v * 80.0);
+        }
+    }
+    let mut stats = ChannelStats::new(cin);
+    for _ in 0..4 {
+        stats.observe(&x, 20.0);
+    }
+    let oset = OutlierDetector::new(20.0).select(&stats, 8);
+    let w = Matrix::randn(cin, cout, &mut rng, 0.3);
+    // min over iterations: robust to scheduler contention (cargo runs the
+    // test binary's cases on parallel threads sharing this single core)
+    let lat = |kind: MethodKind| {
+        let mut m = build_method(kind, w.clone(), &stats, &oset, &MethodConfig::default());
+        let _ = m.forward(&x); // warmup
+        (0..20)
+            .map(|_| {
+                let t0 = std::time::Instant::now();
+                std::hint::black_box(m.forward(&x));
+                t0.elapsed().as_secs_f64()
+            })
+            .fold(f64::INFINITY, f64::min)
+    };
+    let naive = lat(MethodKind::Naive);
+    let quaff = lat(MethodKind::Quaff);
+    let smooth_d = lat(MethodKind::SmoothDynamic);
+    assert!(
+        quaff < naive * 1.5,
+        "quaff/naive forward latency ratio too high: {quaff}/{naive}"
+    );
+    assert!(
+        smooth_d > naive * 1.05,
+        "smooth_d must pay its requantization cost: {smooth_d} vs naive {naive}"
+    );
+}
+
+#[test]
+fn coordinator_parallel_jobs_complete() {
+    let mut coord = Coordinator::new(server_cfg("opt-tiny"), 2);
+    let jobs: Vec<FinetuneJob> = (0..4)
+        .map(|i| {
+            let mut j = quick_job("gpqa", MethodKind::Quaff);
+            j.id = i;
+            j.steps = 2;
+            j
+        })
+        .collect();
+    let reports = coord.run_all(jobs);
+    assert_eq!(reports.len(), 4);
+    assert_eq!(reports.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+}
+
+#[test]
+fn checkpoint_roundtrip_through_coordinator_bundle() {
+    let server = PreprocessServer::new(server_cfg("opt-tiny"));
+    let mut bundle = server.prepare(MethodKind::Quaff, PeftKind::Lora);
+    let dir = std::env::temp_dir().join("quaff_integ_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("adapters.ckpt");
+    bundle.model.visit_params(&mut |_, p| {
+        for v in p.value.data_mut().iter_mut() {
+            *v += 0.25;
+        }
+    });
+    let saved = checkpoint::save_adapters(&mut bundle.model, &path).unwrap();
+    let mut fresh = server.prepare(MethodKind::Quaff, PeftKind::Lora);
+    let loaded = checkpoint::load_adapters(&mut fresh.model, &path).unwrap();
+    assert_eq!(saved, loaded);
+}
+
+#[test]
+fn hit_rate_report_shows_ossh() {
+    // The core hypothesis test: with the paper's budget policy, hit rates
+    // must be high (> 0.75 overall on the simulator); DESIGN.md §6.
+    let opts = ReportOpts {
+        steps: 4,
+        batch: 2,
+        budget_secs: 2.0,
+        preset: "opt-tiny".to_string(),
+        seeds: 1,
+    };
+    let md = report::generate("fig3", &ReportOpts {
+        preset: "opt-tiny".to_string(),
+        ..opts
+    });
+    assert!(md.contains("hit rate"), "{md}");
+    // parse the overall row
+    let overall_line = md.lines().find(|l| l.contains("overall")).expect("overall row");
+    let val: f64 = overall_line
+        .split('|')
+        .nth(2)
+        .unwrap()
+        .trim()
+        .parse()
+        .unwrap();
+    assert!(val > 0.75, "overall hit rate {val} too low for OSSH");
+}
+
+#[test]
+fn quaff_error_advantage_survives_full_model() {
+    // PPL under Quaff should not be dramatically worse than FP32 and should
+    // beat Naive on the outlier-heavy simulator (paper Fig. 4 shape).
+    let server = PreprocessServer::new(server_cfg("phi-mini"));
+    let ppl = |m| {
+        let mut j = quick_job("oasst1", m);
+        j.steps = 6;
+        j.seed = 3;
+        run_job(&server, &j).metric("ppl")
+    };
+    let fp32 = ppl(MethodKind::Fp32);
+    let quaff = ppl(MethodKind::Quaff);
+    let naive = ppl(MethodKind::Naive);
+    assert!(
+        quaff < naive * 1.05,
+        "quaff ppl {quaff} should be ≤ naive {naive} (±5%)"
+    );
+    assert!(
+        quaff < fp32 * 1.35,
+        "quaff ppl {quaff} should be within 35% of fp32 {fp32}"
+    );
+}
