@@ -4,10 +4,10 @@
 //!
 //!     cargo run --release --example quickstart
 
-use quaff::methods::{build_method, MethodConfig, MethodKind};
+use quaff::methods::{build_method, MethodConfig, MethodKind, QuantMethod};
 use quaff::outlier::{ChannelStats, OutlierDetector};
 use quaff::quant::error_between;
-use quaff::tensor::Matrix;
+use quaff::tensor::{Matrix, Workspace};
 use quaff::util::prng::Rng;
 
 fn main() {
@@ -39,16 +39,19 @@ fn main() {
     // 2. build every method over the same frozen weights
     let w = Matrix::randn(cin, cout, &mut rng, 0.3);
     let cfg = MethodConfig::default();
+    let mut ws = Workspace::new(); // scratch arena reused across every step
     println!("{:<14} {:>12} {:>12} {:>14}", "method", "MSE", "SQNR (dB)", "weight bytes");
     for kind in MethodKind::ALL {
         let mut method = build_method(kind, w.clone(), &stats, &outliers, &cfg);
         // warm Quaff's momentum state a little (Eq. 7)
         for _ in 0..5 {
-            let _ = method.forward(&make_x(&mut rng));
+            let x = make_x(&mut rng);
+            let y = method.forward(&x, &mut ws);
+            ws.recycle(y);
         }
         let x = make_x(&mut rng);
         let want = x.matmul(&w);
-        let got = method.forward(&x);
+        let got = method.forward(&x, &mut ws);
         let err = error_between(&want, &got);
         println!(
             "{:<14} {:>12.3e} {:>12.1} {:>14}",

@@ -1,6 +1,7 @@
 //! §Perf ablation: cache-block-size sweep for the f32 matmul and shape
-//! sweep for the packed int8 matmul — the measurements behind the tile
-//! choices recorded in EXPERIMENTS.md §Perf.
+//! sweep for the packed int8 matmul — the measurements behind the
+//! BLOCK_K/BLOCK_J tile choices in `tensor` (see also BENCH_kernels.json
+//! from `bench_kernels` for the alloc-vs-workspace trajectory).
 
 #[path = "harness.rs"]
 mod harness;

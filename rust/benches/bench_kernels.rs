@@ -1,0 +1,231 @@
+//! Execution-engine benchmark: the allocating convenience paths vs the
+//! workspace-backed `_into` paths, at `e2e-small` preset shapes
+//! (d_model = 256, d_ff = 1024), covering both prefill-like and
+//! decode-like token counts.
+//!
+//! "alloc" means what the pre-workspace code did every call: fresh output
+//! and scratch buffers (for the method forwards, a cold `Workspace` per
+//! call — every take is a heap allocation). "workspace" is the same kernel
+//! sequence against a warm arena. Emits `BENCH_kernels.json` at the
+//! workspace root to seed the perf trajectory.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, write_kernels_json, KernelPair};
+use quaff::methods::{QuantMethod, QuaffLinear};
+use quaff::outlier::OutlierSet;
+use quaff::quant;
+use quaff::tensor::{I8Matrix, Matrix, Workspace};
+use quaff::util::prng::Rng;
+
+// e2e-small preset (see ModelConfig::preset)
+const D_MODEL: usize = 256;
+const D_FF: usize = 1024;
+
+fn pair(
+    name: &str,
+    warmup: u32,
+    budget: f64,
+    mut alloc: impl FnMut(),
+    mut workspace: impl FnMut(),
+) -> KernelPair {
+    let a = bench(&format!("{name} [alloc]"), warmup, budget, &mut alloc);
+    let w = bench(&format!("{name} [workspace]"), warmup, budget, &mut workspace);
+    println!("  ↳ workspace speedup: {:.2}x\n", a.mean_secs / w.mean_secs);
+    KernelPair {
+        name: name.to_string(),
+        alloc: a,
+        workspace: w,
+    }
+}
+
+fn quaff_layer(rng: &mut Rng, cin: usize, cout: usize, n_out: usize) -> QuaffLinear {
+    let w = Matrix::randn(cin, cout, rng, 0.3);
+    let o = OutlierSet::new((0..n_out).map(|i| i * (cin / n_out)).collect());
+    QuaffLinear::new(w, o, 0.2, true)
+}
+
+fn hot_x(rng: &mut Rng, t: usize, cin: usize) -> Matrix {
+    let mut x = Matrix::randn(t, cin, rng, 1.0);
+    for c in (0..cin).step_by(cin / 8) {
+        for ti in 0..t {
+            let v = x.get(ti, c);
+            x.set(ti, c, v * 60.0);
+        }
+    }
+    x
+}
+
+fn main() {
+    let mut rng = Rng::new(6);
+    println!("== bench_kernels: alloc vs workspace paths (e2e-small shapes) ==\n");
+    let mut pairs = Vec::new();
+
+    // --- dequantize: memory-bound, so the zeroing+malloc of the alloc path
+    // is a real fraction of the op ---
+    {
+        let x = hot_x(&mut rng, 512, D_MODEL);
+        let (xq, dx) = quant::quantize_per_token(&x);
+        let mut out = Matrix::zeros(512, D_MODEL);
+        pairs.push(pair(
+            "dequantize_per_token 512x256",
+            3,
+            0.8,
+            || {
+                std::hint::black_box(quant::dequantize_per_token(&xq, &dx));
+            },
+            || {
+                quant::dequantize_per_token_into(&xq, &dx, &mut out);
+                std::hint::black_box(&out);
+            },
+        ));
+    }
+
+    // --- per-token quantize at the prefill shape ---
+    {
+        let x = hot_x(&mut rng, 512, D_MODEL);
+        let mut xq = I8Matrix::zeros(512, D_MODEL);
+        let mut dx = Vec::with_capacity(512);
+        pairs.push(pair(
+            "quantize_per_token 512x256",
+            3,
+            0.8,
+            || {
+                std::hint::black_box(quant::quantize_per_token(&x));
+            },
+            || {
+                quant::quantize_per_token_into(&x, &mut xq, &mut dx);
+                std::hint::black_box(&xq);
+            },
+        ));
+    }
+
+    // --- Quaff linear forward, decode shape (t=1): per-step buffers
+    // dominate the tiny matmul ---
+    {
+        let x = hot_x(&mut rng, 1, D_MODEL);
+        let mut m_alloc = quaff_layer(&mut rng, D_MODEL, D_MODEL, 8);
+        let mut m_ws = quaff_layer(&mut rng, D_MODEL, D_MODEL, 8);
+        let mut ws = Workspace::new();
+        pairs.push(pair(
+            "quaff_linear_forward t=1 256x256",
+            8,
+            0.8,
+            || {
+                let mut cold = Workspace::new();
+                std::hint::black_box(m_alloc.forward(&x, &mut cold));
+            },
+            || {
+                let y = m_ws.forward(&x, &mut ws);
+                ws.recycle(std::hint::black_box(y));
+            },
+        ));
+    }
+
+    // --- Quaff linear forward, small-batch prefill (t=32) ---
+    {
+        let x = hot_x(&mut rng, 32, D_MODEL);
+        let mut m_alloc = quaff_layer(&mut rng, D_MODEL, D_MODEL, 8);
+        let mut m_ws = quaff_layer(&mut rng, D_MODEL, D_MODEL, 8);
+        let mut ws = Workspace::new();
+        pairs.push(pair(
+            "quaff_linear_forward t=32 256x256",
+            4,
+            0.8,
+            || {
+                let mut cold = Workspace::new();
+                std::hint::black_box(m_alloc.forward(&x, &mut cold));
+            },
+            || {
+                let y = m_ws.forward(&x, &mut ws);
+                ws.recycle(std::hint::black_box(y));
+            },
+        ));
+    }
+
+    // --- Naive W8A8 up-projection, decode shape ---
+    {
+        use quaff::methods::NaiveW8A8Linear;
+        let x = hot_x(&mut rng, 1, D_MODEL);
+        let w = Matrix::randn(D_MODEL, D_FF, &mut rng, 0.3);
+        let mut m_alloc = NaiveW8A8Linear::new(w.clone());
+        let mut m_ws = NaiveW8A8Linear::new(w);
+        let mut ws = Workspace::new();
+        pairs.push(pair(
+            "naive_linear_forward t=1 256x1024",
+            8,
+            0.8,
+            || {
+                let mut cold = Workspace::new();
+                std::hint::black_box(m_alloc.forward(&x, &mut cold));
+            },
+            || {
+                let y = m_ws.forward(&x, &mut ws);
+                ws.recycle(std::hint::black_box(y));
+            },
+        ));
+    }
+
+    // --- STE backward through a down-projection, decode shape ---
+    {
+        use quaff::methods::NaiveW8A8Linear;
+        let w = Matrix::randn(D_FF, D_MODEL, &mut rng, 0.3);
+        let m_alloc = NaiveW8A8Linear::new(w.clone());
+        let m_ws = NaiveW8A8Linear::new(w);
+        let dy = Matrix::randn(1, D_MODEL, &mut rng, 1.0);
+        let mut ws = Workspace::new();
+        pairs.push(pair(
+            "ste_backward t=1 1024x256",
+            8,
+            0.8,
+            || {
+                let mut cold = Workspace::new();
+                std::hint::black_box(m_alloc.backward_input(&dy, &mut cold));
+            },
+            || {
+                let dx = m_ws.backward_input(&dy, &mut ws);
+                ws.recycle(std::hint::black_box(dx));
+            },
+        ));
+    }
+
+    // --- blocked vs naive transpose (gradient-path satellite; reported in
+    // the JSON as its own pair) ---
+    {
+        let m = Matrix::randn(D_FF, D_MODEL, &mut rng, 1.0);
+        let naive_transpose = |src: &Matrix| {
+            let mut out = Matrix::zeros(src.cols(), src.rows());
+            for i in 0..src.rows() {
+                for j in 0..src.cols() {
+                    out.set(j, i, src.get(i, j));
+                }
+            }
+            out
+        };
+        pairs.push(pair(
+            "transpose 1024x256 naive-vs-blocked",
+            3,
+            0.8,
+            || {
+                std::hint::black_box(naive_transpose(&m));
+            },
+            || {
+                std::hint::black_box(m.transpose());
+            },
+        ));
+    }
+
+    let geomean = pairs
+        .iter()
+        .map(|p| p.speedup().ln())
+        .sum::<f64>()
+        / pairs.len() as f64;
+    println!("\nworkspace-vs-alloc geomean speedup: {:.2}x", geomean.exp());
+
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_kernels.json");
+    match write_kernels_json(&out, "e2e-small", &pairs) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write BENCH_kernels.json: {e}"),
+    }
+}

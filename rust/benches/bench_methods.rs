@@ -6,9 +6,9 @@
 mod harness;
 
 use harness::bench;
-use quaff::methods::{build_method, MethodConfig, MethodKind};
+use quaff::methods::{build_method, MethodConfig, MethodKind, QuantMethod};
 use quaff::outlier::{ChannelStats, OutlierDetector};
-use quaff::tensor::Matrix;
+use quaff::tensor::{Matrix, Workspace};
 use quaff::util::prng::Rng;
 
 fn main() {
@@ -37,11 +37,13 @@ fn main() {
     let cfg = MethodConfig::default();
     let x = mk_x(&mut rng);
 
+    let mut ws = Workspace::new();
     let mut results = Vec::new();
     for kind in MethodKind::ALL {
         let mut m = build_method(kind, w.clone(), &stats, &oset, &cfg);
         let r = bench(&format!("forward {} ({t}x{cin}x{cout})", kind.label()), 2, 1.5, || {
-            std::hint::black_box(m.forward(&x));
+            let y = m.forward(&x, &mut ws);
+            ws.recycle(std::hint::black_box(y));
         });
         results.push((kind, r.mean_secs, m.weight_bytes()));
     }

@@ -2,14 +2,21 @@
 //! the AOT train step and of the standalone L1 kernel. Skips gracefully if
 //! `make artifacts` hasn't been run.
 
+#[cfg(feature = "pjrt")]
 #[path = "harness.rs"]
 mod harness;
 
-use harness::bench;
-use quaff::runtime::{Engine, HostValue, TrainSession};
-use std::path::PathBuf;
-
+#[cfg(not(feature = "pjrt"))]
 fn main() {
+    println!("== bench_runtime: skipped (built without the `pjrt` feature) ==");
+}
+
+#[cfg(feature = "pjrt")]
+fn main() {
+    use harness::bench;
+    use quaff::runtime::{Engine, HostValue, TrainSession};
+    use std::path::PathBuf;
+
     println!("== bench_runtime: PJRT execute latency ==\n");
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {

@@ -56,3 +56,55 @@ pub fn throughput(name: &str, result: &BenchResult, work_per_iter: f64, unit: &s
         work_per_iter / result.mean_secs / 1e9
     );
 }
+
+/// An allocating-path vs workspace-path measurement of one kernel.
+#[allow(dead_code)]
+pub struct KernelPair {
+    pub name: String,
+    pub alloc: BenchResult,
+    pub workspace: BenchResult,
+}
+
+impl KernelPair {
+    #[allow(dead_code)]
+    pub fn speedup(&self) -> f64 {
+        self.alloc.mean_secs / self.workspace.mean_secs
+    }
+}
+
+/// Emit a machine-readable benchmark record (ns/op for the alloc vs
+/// workspace paths plus per-pair speedups and their geometric mean) — the
+/// perf-trajectory seed consumed by CI and future optimisation PRs.
+#[allow(dead_code)]
+pub fn write_kernels_json(
+    path: &std::path::Path,
+    preset: &str,
+    pairs: &[KernelPair],
+) -> std::io::Result<()> {
+    let mut kernels = Vec::new();
+    let mut log_sum = 0.0f64;
+    for p in pairs {
+        kernels.push(format!(
+            "    {{\"name\": \"{}\", \"alloc_ns_per_op\": {:.1}, \"workspace_ns_per_op\": {:.1}, \
+             \"speedup\": {:.4}, \"alloc_iters\": {}, \"workspace_iters\": {}}}",
+            p.name,
+            p.alloc.mean_secs * 1e9,
+            p.workspace.mean_secs * 1e9,
+            p.speedup(),
+            p.alloc.iters,
+            p.workspace.iters,
+        ));
+        log_sum += p.speedup().ln();
+    }
+    let geomean = if pairs.is_empty() {
+        1.0
+    } else {
+        (log_sum / pairs.len() as f64).exp()
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"kernels\",\n  \"preset\": \"{preset}\",\n  \"kernels\": [\n{}\n  ],\n  \
+         \"workspace_speedup_geomean\": {geomean:.4}\n}}\n",
+        kernels.join(",\n")
+    );
+    std::fs::write(path, json)
+}

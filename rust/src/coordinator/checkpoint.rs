@@ -5,7 +5,8 @@
 //! (name-len, name, rows, cols, f32 data). No serde in the vendor set.
 
 use crate::model::Model;
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::Result;
+use crate::{anyhow, bail};
 use std::io::{Read, Write};
 use std::path::Path;
 

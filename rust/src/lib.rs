@@ -15,8 +15,10 @@
 //! * **L1 (`python/compile/kernels/`)** — the fused Pallas quantized-linear
 //!   kernel (interpret mode on CPU; MXU-shaped block specs for TPU).
 //!
-//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
-//! paper-vs-measured record.
+//! See `DESIGN.md` for the system inventory, the execution-engine /
+//! workspace architecture, and the `pjrt` feature; `BENCH_kernels.json`
+//! (emitted by `cargo bench --bench bench_kernels`) records the
+//! alloc-vs-workspace perf trajectory.
 
 pub mod coordinator;
 pub mod data;

@@ -12,16 +12,14 @@
 //!   quaff finetune --dataset gpqa --method quaff --peft lora --steps 30
 //!   quaff runtime --artifacts artifacts --steps 20
 
-use anyhow::{anyhow, bail, Result};
 use quaff::coordinator::{run_job, FinetuneJob, PreprocessServer, ServerConfig};
-use quaff::data::{corpus_samples, Tokenizer};
 use quaff::methods::MethodKind;
 use quaff::model::ModelConfig;
 use quaff::peft::PeftKind;
 use quaff::report::{self, ReportOpts};
-use quaff::runtime::{Engine, TrainSession};
 use quaff::util::cli::Args;
-use quaff::util::prng::Rng;
+use quaff::util::error::Result;
+use quaff::{anyhow, bail};
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -117,7 +115,21 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_runtime(_args: &Args) -> Result<()> {
+    bail!(
+        "the `runtime` command drives AOT JAX artifacts through PJRT and needs the \
+         `pjrt` cargo feature: rebuild with `cargo build --release --features pjrt` \
+         (see DESIGN.md §PJRT)"
+    )
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_runtime(args: &Args) -> Result<()> {
+    use quaff::data::{corpus_samples, Tokenizer};
+    use quaff::runtime::{Engine, TrainSession};
+    use quaff::util::prng::Rng;
+
     let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
     let steps: u64 = args.get_parse("steps", 10);
     eprintln!("[runtime] loading artifacts from {} …", dir.display());

@@ -1,12 +1,18 @@
 //! Baseline WAQ methods: FP32, Naive W8A8, LLM.int8, SmoothQuant
 //! static/dynamic — each performing exactly the per-step work the paper
 //! attributes to it (§2.3, Appendix A).
+//!
+//! All transient buffers come from the caller's [`Workspace`]; after a
+//! warm-up step the forwards/backwards are allocation-free — except where a
+//! method's *semantic* cost is itself an allocation (Smooth_D's per-step
+//! weight requantization), which stays, because that cost is the point of
+//! the comparison.
 
-use super::{ste_backward, QuantMethod};
+use super::{ste_backward_ws, QuantMethod};
 use crate::outlier::ChannelStats;
 use crate::quant::{self, QuantizedWeights};
 use crate::scaling;
-use crate::tensor::Matrix;
+use crate::tensor::{kernels, Matrix, Workspace};
 
 /// Full-precision reference: `Y = X · W` in f32.
 pub struct Fp32Linear {
@@ -24,12 +30,16 @@ impl QuantMethod for Fp32Linear {
         "FP32"
     }
 
-    fn forward(&mut self, x: &Matrix) -> Matrix {
-        x.matmul(&self.w)
+    fn forward(&mut self, x: &Matrix, ws: &mut Workspace) -> Matrix {
+        let mut y = ws.take_matrix("fp32.y", x.rows(), self.w.cols());
+        kernels::matmul_into(x, &self.w, &mut y);
+        y
     }
 
-    fn backward_input(&self, dy: &Matrix) -> Matrix {
-        dy.matmul_bt(&self.w)
+    fn backward_input(&self, dy: &Matrix, ws: &mut Workspace) -> Matrix {
+        let mut dx = ws.take_matrix("fp32.dx", dy.rows(), self.w.rows());
+        kernels::matmul_bt_into(dy, &self.w, &mut dx);
+        dx
     }
 
     fn weight_bytes(&self) -> usize {
@@ -64,15 +74,20 @@ impl QuantMethod for NaiveW8A8Linear {
         "Naive"
     }
 
-    fn forward(&mut self, x: &Matrix) -> Matrix {
-        let (x_int, dx) = quant::quantize_per_token(x);
-        let mut out = vec![0.0f32; x.rows() * self.qw.w_int.cols()];
-        self.qw.matmul_into(&x_int, &dx, &mut out);
-        Matrix::from_vec(x.rows(), self.qw.w_int.cols(), out)
+    fn forward(&mut self, x: &Matrix, ws: &mut Workspace) -> Matrix {
+        let (t, cout) = (x.rows(), self.qw.w_int.cols());
+        let mut x_int = ws.take_i8_matrix("naive.xint", t, x.cols());
+        let mut dx = ws.take_f32("naive.dx", t);
+        quant::quantize_per_token_into(x, &mut x_int, &mut dx);
+        let mut y = ws.take_matrix_zeroed("naive.y", t, cout);
+        self.qw.matmul_ws(&x_int, &dx, ws, y.data_mut());
+        ws.put_i8_matrix("naive.xint", x_int);
+        ws.put_f32("naive.dx", dx);
+        y
     }
 
-    fn backward_input(&self, dy: &Matrix) -> Matrix {
-        ste_backward(dy, &self.qw.w_int, &self.qw.deltas)
+    fn backward_input(&self, dy: &Matrix, ws: &mut Workspace) -> Matrix {
+        ste_backward_ws(dy, &self.qw.w_int, &self.qw.deltas, ws)
     }
 
     fn weight_bytes(&self) -> usize {
@@ -125,40 +140,53 @@ impl QuantMethod for LlmInt8Linear {
         "LLM.int8"
     }
 
-    fn forward(&mut self, x: &Matrix) -> Matrix {
+    fn forward(&mut self, x: &Matrix, ws: &mut Workspace) -> Matrix {
         let t = x.rows();
         let cout = self.qw.w_int.cols();
         // 1. dynamic detection: columns whose |max| exceeds σ
-        let col_max = x.col_abs_max();
-        let outlier_cols: Vec<usize> = (0..x.cols())
-            .filter(|&c| col_max[c] > self.sigma)
-            .collect();
+        let mut col_max = ws.take_f32("llmint8.colmax", x.cols());
+        kernels::col_abs_max_into(x, &mut col_max);
+        let mut outlier_cols = ws.take_idx("llmint8.ocols");
+        outlier_cols.extend((0..x.cols()).filter(|&c| col_max[c] > self.sigma));
         self.dequant_rows_total += outlier_cols.len() as u64;
         self.steps += 1;
         // 2. regular part: zero outlier columns, int8 path
-        let mut x_reg = x.clone();
+        let mut x_reg = ws.take_matrix("llmint8.xreg", t, x.cols());
+        x_reg.data_mut().copy_from_slice(x.data());
         for ti in 0..t {
             let row = x_reg.row_mut(ti);
             for &c in &outlier_cols {
                 row[c] = 0.0;
             }
         }
-        let (x_int, dx) = quant::quantize_per_token(&x_reg);
-        let mut out = vec![0.0f32; t * cout];
-        self.qw.matmul_into(&x_int, &dx, &mut out);
-        let mut y = Matrix::from_vec(t, cout, out);
+        let mut x_int = ws.take_i8_matrix("llmint8.xint", t, x.cols());
+        let mut dx = ws.take_f32("llmint8.dx", t);
+        quant::quantize_per_token_into(&x_reg, &mut x_int, &mut dx);
+        let mut y = ws.take_matrix_zeroed("llmint8.y", t, cout);
+        self.qw.matmul_ws(&x_int, &dx, ws, y.data_mut());
         // 3. outlier part in f32 — requires dequantizing W rows *every step*
         if !outlier_cols.is_empty() {
-            let x_o = x.select_cols(&outlier_cols);
-            let w_o = quant::dequantize_rows_per_oc(&self.qw.w_int, &self.qw.deltas, &outlier_cols);
-            let corr = x_o.matmul(&w_o);
+            let mut x_o = ws.take_matrix("llmint8.xo", t, outlier_cols.len());
+            kernels::select_cols_into(x, &outlier_cols, &mut x_o);
+            let mut w_o = ws.take_matrix("llmint8.wo", outlier_cols.len(), cout);
+            quant::dequantize_rows_per_oc_into(&self.qw.w_int, &self.qw.deltas, &outlier_cols, &mut w_o);
+            let mut corr = ws.take_matrix("llmint8.corr", t, cout);
+            kernels::matmul_into(&x_o, &w_o, &mut corr);
             y.add_assign(&corr);
+            ws.put_matrix("llmint8.xo", x_o);
+            ws.put_matrix("llmint8.wo", w_o);
+            ws.put_matrix("llmint8.corr", corr);
         }
+        ws.put_f32("llmint8.colmax", col_max);
+        ws.put_idx("llmint8.ocols", outlier_cols);
+        ws.put_matrix("llmint8.xreg", x_reg);
+        ws.put_i8_matrix("llmint8.xint", x_int);
+        ws.put_f32("llmint8.dx", dx);
         y
     }
 
-    fn backward_input(&self, dy: &Matrix) -> Matrix {
-        ste_backward(dy, &self.qw.w_int, &self.qw.deltas)
+    fn backward_input(&self, dy: &Matrix, ws: &mut Workspace) -> Matrix {
+        ste_backward_ws(dy, &self.qw.w_int, &self.qw.deltas, ws)
     }
 
     fn weight_bytes(&self) -> usize {
@@ -180,6 +208,8 @@ impl QuantMethod for LlmInt8Linear {
 pub struct SmoothStaticLinear {
     qw_scaled: QuantizedWeights,
     s: Vec<f32>,
+    /// Precomputed `s^{-1}` so the per-step rescale never allocates.
+    inv_s: Vec<f32>,
 }
 
 impl SmoothStaticLinear {
@@ -189,11 +219,13 @@ impl SmoothStaticLinear {
             .map(|i| w.row(i).iter().fold(0.0f32, |m, &v| m.max(v.abs())))
             .collect();
         let s = scaling::smoothquant_factors(&calib.abs_max, &w_row_max, alpha);
+        let inv_s: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
         let mut w_scaled = w;
         scaling::apply_row_scale(&mut w_scaled, &s);
         SmoothStaticLinear {
             qw_scaled: QuantizedWeights::quantize(&w_scaled),
             s,
+            inv_s,
         }
     }
 }
@@ -203,20 +235,26 @@ impl QuantMethod for SmoothStaticLinear {
         "Smooth_S"
     }
 
-    fn forward(&mut self, x: &Matrix) -> Matrix {
-        let mut x_hat = x.clone();
-        scaling::apply_full_inverse_scale(&mut x_hat, &self.s);
-        let (x_int, dx) = quant::quantize_per_token(&x_hat);
-        let mut out = vec![0.0f32; x.rows() * self.qw_scaled.w_int.cols()];
-        self.qw_scaled.matmul_into(&x_int, &dx, &mut out);
-        Matrix::from_vec(x.rows(), self.qw_scaled.w_int.cols(), out)
+    fn forward(&mut self, x: &Matrix, ws: &mut Workspace) -> Matrix {
+        let (t, cout) = (x.rows(), self.qw_scaled.w_int.cols());
+        let mut x_hat = ws.take_matrix("smooths.xhat", t, x.cols());
+        x_hat.data_mut().copy_from_slice(x.data());
+        x_hat.scale_cols(&self.inv_s);
+        let mut x_int = ws.take_i8_matrix("smooths.xint", t, x.cols());
+        let mut dx = ws.take_f32("smooths.dx", t);
+        quant::quantize_per_token_into(&x_hat, &mut x_int, &mut dx);
+        let mut y = ws.take_matrix_zeroed("smooths.y", t, cout);
+        self.qw_scaled.matmul_ws(&x_int, &dx, ws, y.data_mut());
+        ws.put_matrix("smooths.xhat", x_hat);
+        ws.put_i8_matrix("smooths.xint", x_int);
+        ws.put_f32("smooths.dx", dx);
+        y
     }
 
-    fn backward_input(&self, dy: &Matrix) -> Matrix {
+    fn backward_input(&self, dy: &Matrix, ws: &mut Workspace) -> Matrix {
         // d(X)= dY·Ŵᵀ ∘ s^{-1}  (chain rule through X̂ = X·s^{-1}, Y = X̂Ŵ)
-        let mut dx = ste_backward(dy, &self.qw_scaled.w_int, &self.qw_scaled.deltas);
-        let inv: Vec<f32> = self.s.iter().map(|&v| 1.0 / v).collect();
-        dx.scale_cols(&inv);
+        let mut dx = ste_backward_ws(dy, &self.qw_scaled.w_int, &self.qw_scaled.deltas, ws);
+        dx.scale_cols(&self.inv_s);
         dx
     }
 
@@ -240,7 +278,9 @@ impl QuantMethod for SmoothStaticLinear {
 /// SmoothQuant **dynamic** (Smooth_D): recompute `s` from the *current*
 /// batch, rescale and **requantize the full weight matrix every step** —
 /// which forces keeping W in f32 (the memory cost) and paying a full
-/// quantization pass per step (the latency cost).
+/// quantization pass per step (the latency cost). The requantization
+/// deliberately stays off the workspace: its allocations ARE the method's
+/// per-step cost the paper measures.
 pub struct SmoothDynamicLinear {
     w_full: Matrix,
     w_row_max: Vec<f32>,
@@ -268,7 +308,8 @@ impl QuantMethod for SmoothDynamicLinear {
         "Smooth_D"
     }
 
-    fn forward(&mut self, x: &Matrix) -> Matrix {
+    fn forward(&mut self, x: &Matrix, ws: &mut Workspace) -> Matrix {
+        let (t, cout) = (x.rows(), self.w_full.cols());
         // 1. dynamic factors from the live batch
         let s = scaling::smoothquant_factors(&x.col_abs_max(), &self.w_row_max, self.alpha);
         // 2. the coupling bottleneck: rescale + requantize the FULL weight
@@ -276,18 +317,26 @@ impl QuantMethod for SmoothDynamicLinear {
         scaling::apply_row_scale(&mut w_scaled, &s);
         let qw = QuantizedWeights::quantize(&w_scaled);
         // 3. scaled activation path
-        let mut x_hat = x.clone();
+        let mut x_hat = ws.take_matrix("smoothd.xhat", t, x.cols());
+        x_hat.data_mut().copy_from_slice(x.data());
         scaling::apply_full_inverse_scale(&mut x_hat, &s);
-        let (x_int, dx) = quant::quantize_per_token(&x_hat);
-        let mut out = vec![0.0f32; x.rows() * qw.w_int.cols()];
-        qw.matmul_into(&x_int, &dx, &mut out);
+        let mut x_int = ws.take_i8_matrix("smoothd.xint", t, x.cols());
+        let mut dx = ws.take_f32("smoothd.dx", t);
+        quant::quantize_per_token_into(&x_hat, &mut x_int, &mut dx);
+        let mut y = ws.take_matrix_zeroed("smoothd.y", t, cout);
+        qw.matmul_ws(&x_int, &dx, ws, y.data_mut());
         self.last_s = s;
-        Matrix::from_vec(x.rows(), qw.w_int.cols(), out)
+        ws.put_matrix("smoothd.xhat", x_hat);
+        ws.put_i8_matrix("smoothd.xint", x_int);
+        ws.put_f32("smoothd.dx", dx);
+        y
     }
 
-    fn backward_input(&self, dy: &Matrix) -> Matrix {
+    fn backward_input(&self, dy: &Matrix, ws: &mut Workspace) -> Matrix {
         // keeps full-precision W anyway, so the backward is exact
-        dy.matmul_bt(&self.w_full)
+        let mut dx = ws.take_matrix("smoothd.dx_bwd", dy.rows(), self.w_full.rows());
+        kernels::matmul_bt_into(dy, &self.w_full, &mut dx);
+        dx
     }
 
     fn weight_bytes(&self) -> usize {
@@ -317,10 +366,11 @@ mod tests {
     #[test]
     fn fp32_is_exact() {
         let mut r = Rng::new(31);
+        let mut ws = Workspace::new();
         let w = Matrix::randn(16, 8, &mut r, 0.5);
         let x = Matrix::randn(4, 16, &mut r, 1.0);
         let mut m = Fp32Linear::new(w.clone());
-        let y = m.forward(&x);
+        let y = m.forward(&x, &mut ws);
         assert_eq!(y.data(), x.matmul(&w).data());
         assert_eq!(m.weight_bytes(), 16 * 8 * 4);
     }
@@ -328,6 +378,7 @@ mod tests {
     #[test]
     fn llmint8_detects_and_corrects_outliers() {
         let mut r = Rng::new(32);
+        let mut ws = Workspace::new();
         let w = Matrix::randn(32, 16, &mut r, 0.3);
         let mut x = Matrix::randn(8, 32, &mut r, 1.0);
         // plant a hot column above sigma
@@ -336,7 +387,7 @@ mod tests {
         }
         let want = x.matmul(&w);
         let mut m = LlmInt8Linear::new(w, 6.0);
-        let y = m.forward(&x);
+        let y = m.forward(&x, &mut ws);
         assert_eq!(m.dequant_rows_total, 1);
         let err = error_between(&want, &y);
         assert!(err.sqnr_db > 25.0, "sqnr {}", err.sqnr_db);
@@ -345,6 +396,7 @@ mod tests {
     #[test]
     fn llmint8_outlier_count_grows_with_hot_columns() {
         let mut r = Rng::new(33);
+        let mut ws = Workspace::new();
         let w = Matrix::randn(64, 16, &mut r, 0.3);
         let mut m = LlmInt8Linear::new(w, 6.0);
         for hot_n in [0usize, 4, 16] {
@@ -354,7 +406,7 @@ mod tests {
                     x.set(t, c * 3, 50.0);
                 }
             }
-            let _ = m.forward(&x);
+            let _ = m.forward(&x, &mut ws);
         }
         assert!(m.dequant_rows_total >= 4 + 16);
         assert_eq!(m.steps, 3);
@@ -363,13 +415,14 @@ mod tests {
     #[test]
     fn smooth_dynamic_tracks_current_batch() {
         let mut r = Rng::new(34);
+        let mut ws = Workspace::new();
         let w = Matrix::randn(32, 16, &mut r, 0.3);
         let mut m = SmoothDynamicLinear::new(w, 0.5);
         let mut x = Matrix::randn(4, 32, &mut r, 1.0);
         for t in 0..4 {
             x.set(t, 7, 100.0);
         }
-        let _ = m.forward(&x);
+        let _ = m.forward(&x, &mut ws);
         let s = m.scaling_factors().unwrap();
         // channel 7's factor should dominate all others
         let max_other = (0..32)
@@ -382,6 +435,7 @@ mod tests {
     #[test]
     fn smooth_static_factors_fixed_across_steps() {
         let mut r = Rng::new(35);
+        let mut ws = Workspace::new();
         let w = Matrix::randn(32, 16, &mut r, 0.3);
         let mut calib = ChannelStats::new(32);
         for _ in 0..4 {
@@ -389,7 +443,7 @@ mod tests {
         }
         let mut m = SmoothStaticLinear::new(w, &calib, 0.5);
         let s0 = m.scaling_factors().unwrap();
-        let _ = m.forward(&Matrix::randn(4, 32, &mut r, 5.0));
+        let _ = m.forward(&Matrix::randn(4, 32, &mut r, 5.0), &mut ws);
         let s1 = m.scaling_factors().unwrap();
         assert_eq!(s0, s1);
     }
@@ -397,6 +451,7 @@ mod tests {
     #[test]
     fn backward_shapes() {
         let mut r = Rng::new(36);
+        let mut ws = Workspace::new();
         let w = Matrix::randn(24, 10, &mut r, 0.3);
         let dy = Matrix::randn(3, 10, &mut r, 1.0);
         let calib = {
@@ -412,8 +467,9 @@ mod tests {
             Box::new(SmoothDynamicLinear::new(w.clone(), 0.5)),
         ];
         for m in &methods {
-            let dx = m.backward_input(&dy);
+            let dx = m.backward_input(&dy, &mut ws);
             assert_eq!((dx.rows(), dx.cols()), (3, 24), "{}", m.name());
+            ws.recycle(dx);
         }
     }
 }

@@ -25,9 +25,14 @@ pub use baselines::{Fp32Linear, LlmInt8Linear, NaiveW8A8Linear, SmoothDynamicLin
 pub use quaff::QuaffLinear;
 
 use crate::outlier::{ChannelStats, OutlierSet};
-use crate::tensor::{I8Matrix, Matrix};
+use crate::tensor::{I8Matrix, Matrix, Workspace};
 
 /// A frozen-weight linear operator under some quantization scheme.
+///
+/// Forward/backward draw every transient buffer — and the returned output
+/// matrix — from the caller's [`Workspace`], so a warm arena makes the
+/// per-step path allocation-free. Callers that are done with the returned
+/// matrix should hand it back via [`Workspace::recycle`].
 pub trait QuantMethod: Send {
     /// Display name matching the paper's tables.
     fn name(&self) -> &'static str;
@@ -35,10 +40,10 @@ pub trait QuantMethod: Send {
     /// `Y ≈ X · W` under the method's quantization scheme.
     /// `&mut self` because dynamic methods update per-step state (scaling
     /// factors, requantized weights).
-    fn forward(&mut self, x: &Matrix) -> Matrix;
+    fn forward(&mut self, x: &Matrix, ws: &mut Workspace) -> Matrix;
 
     /// Straight-through `dX = dY · Wᵀ` using the stored representation.
-    fn backward_input(&self, dy: &Matrix) -> Matrix;
+    fn backward_input(&self, dy: &Matrix, ws: &mut Workspace) -> Matrix;
 
     /// Bytes of device memory held for the frozen weight + method state.
     fn weight_bytes(&self) -> usize;
@@ -157,14 +162,26 @@ pub fn build_method(
 /// `dX = (dY ∘ Δ_w) · W_intᵀ` — shared STE backward for all int8-weight
 /// methods. Reads the int8 weights row-wise, never materializing an f32 W.
 pub(crate) fn ste_backward(dy: &Matrix, w_int: &I8Matrix, w_deltas: &[f32]) -> Matrix {
+    ste_backward_ws(dy, w_int, w_deltas, &mut Workspace::new())
+}
+
+/// [`ste_backward`] on the workspace: the Δ-scaled dY scratch comes from —
+/// and goes back to — the arena; the returned dX is arena-backed too.
+pub(crate) fn ste_backward_ws(
+    dy: &Matrix,
+    w_int: &I8Matrix,
+    w_deltas: &[f32],
+    ws: &mut Workspace,
+) -> Matrix {
     let (t, cout) = (dy.rows(), dy.cols());
     let cin = w_int.rows();
     assert_eq!(w_int.cols(), cout);
     assert_eq!(w_deltas.len(), cout);
     // scale dY columns by Δ_w once
-    let mut dys = dy.clone();
+    let mut dys = ws.take_matrix("ste.dys", t, cout);
+    dys.data_mut().copy_from_slice(dy.data());
     dys.scale_cols(w_deltas);
-    let mut out = Matrix::zeros(t, cin);
+    let mut out = ws.take_matrix("ste.dx", t, cin);
     for ti in 0..t {
         let drow = dys.row(ti);
         let orow = out.row_mut(ti);
@@ -177,6 +194,7 @@ pub(crate) fn ste_backward(dy: &Matrix, w_int: &I8Matrix, w_deltas: &[f32]) -> M
             orow[i] = acc;
         }
     }
+    ws.put_matrix("ste.dys", dys);
     out
 }
 
@@ -234,6 +252,7 @@ mod tests {
         let x = make_acts(&mut rng, 12, cin, &hot, 120.0);
         let want = x.matmul(&w);
         let cfg = MethodConfig::default();
+        let mut ws = Workspace::new();
         for kind in [
             MethodKind::Naive,
             MethodKind::LlmInt8,
@@ -243,7 +262,7 @@ mod tests {
             MethodKind::QuaffNoMomentum,
         ] {
             let mut m = build_method(kind, w.clone(), &calib, &oset, &cfg);
-            let got = m.forward(&x);
+            let got = m.forward(&x, &mut ws);
             let err = quant::error_between(&want, &got);
             assert!(
                 err.sqnr_db > 15.0,
@@ -268,13 +287,14 @@ mod tests {
         let cfg = MethodConfig::default();
         let mut quaff = build_method(MethodKind::Quaff, w.clone(), &calib, &oset, &cfg);
         let mut naive = build_method(MethodKind::Naive, w.clone(), &calib, &oset, &cfg);
+        let mut ws = Workspace::new();
         let mut q_mse = 0.0;
         let mut n_mse = 0.0;
         for _ in 0..6 {
             let x = make_acts(&mut rng, 16, cin, &hot, 100.0);
             let want = x.matmul(&w);
-            q_mse += quant::error_between(&want, &quaff.forward(&x)).mse;
-            n_mse += quant::error_between(&want, &naive.forward(&x)).mse;
+            q_mse += quant::error_between(&want, &quaff.forward(&x, &mut ws)).mse;
+            n_mse += quant::error_between(&want, &naive.forward(&x, &mut ws)).mse;
         }
         assert!(
             q_mse < n_mse * 0.25,

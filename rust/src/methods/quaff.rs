@@ -14,13 +14,16 @@
 //!      and fuse the correction `Δ_X̂ · x̂_int ŵ_int · Δ_ŵ` into the output.
 //!
 //! No full-precision master weight, no global rescaling, no requantization
-//! of `W_int` — the decoupling that resolves the trilemma.
+//! of `W_int` — the decoupling that resolves the trilemma. Every per-step
+//! buffer (X̂, X̂_int, ŵ, the gathered outlier slice, the i32 accumulator)
+//! comes from the caller's [`Workspace`], so the steady-state step is
+//! allocation-free — the "lightweight operations" the paper promises.
 
-use super::{ste_backward, QuantMethod};
+use super::{ste_backward_ws, QuantMethod};
 use crate::outlier::OutlierSet;
 use crate::quant::{self, QuantizedWeights};
 use crate::scaling::{self, MomentumScaler};
-use crate::tensor::{I8Matrix, Matrix};
+use crate::tensor::{kernels, Matrix, Workspace};
 
 /// Quaff quantized linear layer.
 pub struct QuaffLinear {
@@ -66,10 +69,11 @@ impl QuaffLinear {
         &self.scaler.outliers
     }
 
-    /// Column maxima restricted to outlier channels — cheaper than a full
-    /// `col_abs_max` when |O| ≪ c_in (perf: targeted statistics).
-    fn outlier_col_max(&self, x: &Matrix) -> Vec<f32> {
-        let mut maxima = vec![0.0f32; self.cin];
+    /// Column maxima restricted to outlier channels, written into `maxima`
+    /// (length c_in, zeroed here) — cheaper than a full `col_abs_max` when
+    /// |O| ≪ c_in (perf: targeted statistics).
+    fn outlier_col_max_into(&self, x: &Matrix, maxima: &mut [f32]) {
+        maxima.fill(0.0);
         for &ch in &self.scaler.outliers.channels {
             let mut m = 0.0f32;
             for t in 0..x.rows() {
@@ -80,7 +84,6 @@ impl QuaffLinear {
             }
             maxima[ch] = m;
         }
-        maxima
     }
 }
 
@@ -93,49 +96,75 @@ impl QuantMethod for QuaffLinear {
         }
     }
 
-    fn forward(&mut self, x: &Matrix) -> Matrix {
+    fn forward(&mut self, x: &Matrix, ws: &mut Workspace) -> Matrix {
         let t = x.rows();
         let n_out = self.scaler.outliers.len();
         if n_out == 0 {
             // Degenerate case (budget 0): Quaff reduces to Naive W8A8.
-            let (x_int, dx) = quant::quantize_per_token(x);
-            let mut out = vec![0.0f32; t * self.cout];
-            self.qw.matmul_into(&x_int, &dx, &mut out);
-            return Matrix::from_vec(t, self.cout, out);
+            let mut x_int = ws.take_i8_matrix("quaff.xint", t, self.cin);
+            let mut dx = ws.take_f32("quaff.dx", t);
+            quant::quantize_per_token_into(x, &mut x_int, &mut dx);
+            let mut y = ws.take_matrix_zeroed("quaff.y", t, self.cout);
+            self.qw.matmul_ws(&x_int, &dx, ws, y.data_mut());
+            ws.put_i8_matrix("quaff.xint", x_int);
+            ws.put_f32("quaff.dx", dx);
+            return y;
         }
         // 1. momentum update from targeted statistics (Eqs. 7–8)
-        let col_max = self.outlier_col_max(x);
+        let mut col_max = ws.take_f32("quaff.colmax", self.cin);
+        self.outlier_col_max_into(x, &mut col_max);
         self.scaler.update(&col_max, &self.w_row_max);
-        let s_o = self.scaler.factors().to_vec();
+        let mut s_o = ws.take_f32("quaff.so", n_out);
+        s_o.copy_from_slice(self.scaler.factors());
         // 2. targeted inverse scaling
-        let mut x_hat = x.clone();
+        let mut x_hat = ws.take_matrix("quaff.xhat", t, self.cin);
+        x_hat.data_mut().copy_from_slice(x.data());
         scaling::apply_targeted_inverse_scale(&mut x_hat, &self.scaler.outliers, &s_o);
         // 3. per-token quantization
-        let (x_int, dx) = quant::quantize_per_token(&x_hat);
+        let mut x_int = ws.take_i8_matrix("quaff.xint", t, self.cin);
+        let mut dx = ws.take_f32("quaff.dx", t);
+        quant::quantize_per_token_into(&x_hat, &mut x_int, &mut dx);
         // 4. main integer matmul
-        let mut out = vec![0.0f32; t * self.cout];
-        self.qw.matmul_into(&x_int, &dx, &mut out);
+        let mut y = ws.take_matrix_zeroed("quaff.y", t, self.cout);
+        self.qw.matmul_ws(&x_int, &dx, ws, y.data_mut());
         // 5. outlier correction: ŵ = (s_O−1)·W_O, x̂_int = [X̂_int]_{:,O}
-        let w_hat = scaling::build_outlier_correction_from_slice(&self.w_o, &s_o);
-        let (w_hat_int, d_what) = quant::quantize_per_oc(&w_hat);
-        let x_o_int = select_cols_i8(&x_int, &self.scaler.outliers.channels);
-        x_o_int.matmul_dequant_into(&w_hat_int, &dx, &d_what, &mut out);
-        Matrix::from_vec(t, self.cout, out)
+        let mut w_hat = ws.take_matrix("quaff.what", n_out, self.cout);
+        scaling::build_outlier_correction_from_slice_into(&self.w_o, &s_o, &mut w_hat);
+        let mut w_hat_int = ws.take_i8_matrix("quaff.whatint", n_out, self.cout);
+        let mut d_what = ws.take_f32("quaff.dwhat", self.cout);
+        quant::quantize_per_oc_ws(&w_hat, &mut w_hat_int, &mut d_what, ws);
+        let mut x_o_int = ws.take_i8_matrix("quaff.xoint", t, n_out);
+        kernels::select_cols_i8_into(&x_int, &self.scaler.outliers.channels, &mut x_o_int);
+        let mut acc = ws.take_i32("quaff.acc", 0);
+        x_o_int.matmul_dequant_scratch_into(&w_hat_int, &dx, &d_what, &mut acc, y.data_mut());
+        ws.put_f32("quaff.colmax", col_max);
+        ws.put_f32("quaff.so", s_o);
+        ws.put_matrix("quaff.xhat", x_hat);
+        ws.put_i8_matrix("quaff.xint", x_int);
+        ws.put_f32("quaff.dx", dx);
+        ws.put_matrix("quaff.what", w_hat);
+        ws.put_i8_matrix("quaff.whatint", w_hat_int);
+        ws.put_f32("quaff.dwhat", d_what);
+        ws.put_i8_matrix("quaff.xoint", x_o_int);
+        ws.put_i32("quaff.acc", acc);
+        y
     }
 
-    fn backward_input(&self, dy: &Matrix) -> Matrix {
+    fn backward_input(&self, dy: &Matrix, ws: &mut Workspace) -> Matrix {
         // STE through the Eq. 5 identity: the decomposition reconstructs
         // X·W, so dX = dY·Wᵀ with the int8 store (+ exact outlier rows).
-        let mut dx = ste_backward(dy, &self.qw.w_int, &self.qw.deltas);
+        let mut dx = ste_backward_ws(dy, &self.qw.w_int, &self.qw.deltas, ws);
         // refine outlier rows with the exact f32 slice we already hold
         if !self.scaler.outliers.is_empty() {
-            let exact = dy.matmul_bt(&self.w_o); // (t × |O|)
+            let mut exact = ws.take_matrix("quaff.bwd.exact", dy.rows(), self.w_o.rows());
+            kernels::matmul_bt_into(dy, &self.w_o, &mut exact); // (t × |O|)
             for ti in 0..dy.rows() {
                 let row = dx.row_mut(ti);
                 for (k, &ch) in self.scaler.outliers.channels.iter().enumerate() {
                     row[ch] = exact.get(ti, k);
                 }
             }
+            ws.put_matrix("quaff.bwd.exact", exact);
         }
         dx
     }
@@ -158,16 +187,6 @@ impl QuantMethod for QuaffLinear {
     }
 }
 
-/// Gather columns of an i8 matrix (x̂_int = [X̂_int]_{:,O}).
-fn select_cols_i8(x: &I8Matrix, idx: &[usize]) -> I8Matrix {
-    let mut data = Vec::with_capacity(x.rows() * idx.len());
-    for t in 0..x.rows() {
-        let row = x.row(t);
-        data.extend(idx.iter().map(|&j| row[j]));
-    }
-    I8Matrix::from_vec(x.rows(), idx.len(), data)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -188,27 +207,33 @@ mod tests {
     #[test]
     fn zero_budget_equals_naive() {
         let mut r = Rng::new(41);
+        let mut ws = Workspace::new();
         let w = Matrix::randn(32, 16, &mut r, 0.3);
         let x = Matrix::randn(4, 32, &mut r, 1.0);
         let mut quaff = QuaffLinear::new(w.clone(), OutlierSet::default(), 0.2, true);
         let mut naive = super::super::NaiveW8A8Linear::new(w);
-        assert_eq!(quaff.forward(&x).data(), naive.forward(&x).data());
+        assert_eq!(
+            quaff.forward(&x, &mut ws).data(),
+            naive.forward(&x, &mut ws).data()
+        );
     }
 
     #[test]
     fn suppresses_planted_outliers() {
         let mut r = Rng::new(42);
+        let mut ws = Workspace::new();
         let hot = vec![3, 20];
         let w = Matrix::randn(64, 32, &mut r, 0.3);
         let mut m = QuaffLinear::new(w.clone(), OutlierSet::new(hot.clone()), 0.2, true);
         // warm up momentum
         for _ in 0..10 {
             let x = planted(&mut r, 8, 64, &hot, 100.0);
-            let _ = m.forward(&x);
+            let y = m.forward(&x, &mut ws);
+            ws.recycle(y);
         }
         let x = planted(&mut r, 8, 64, &hot, 100.0);
         let want = x.matmul(&w);
-        let got = m.forward(&x);
+        let got = m.forward(&x, &mut ws);
         let err = error_between(&want, &got);
         assert!(err.sqnr_db > 25.0, "sqnr {:.1}", err.sqnr_db);
         // factors should have moved well above 1 on the hot channels
@@ -220,6 +245,7 @@ mod tests {
         // Momentum must damp a one-step activation spike (the paper's
         // "prevents overreaction to transient activation shifts").
         let mut r = Rng::new(43);
+        let mut ws = Workspace::new();
         let hot = vec![5];
         let w = Matrix::randn(32, 16, &mut r, 0.3);
         let mut with_mo = QuaffLinear::new(w.clone(), OutlierSet::new(hot.clone()), 0.9, true);
@@ -227,14 +253,16 @@ mod tests {
         // steady state at gain 50
         for _ in 0..30 {
             let x = planted(&mut r, 8, 32, &hot, 50.0);
-            let _ = with_mo.forward(&x);
-            let _ = no_mo.forward(&x);
+            let y = with_mo.forward(&x, &mut ws);
+            ws.recycle(y);
+            let y = no_mo.forward(&x, &mut ws);
+            ws.recycle(y);
         }
         let steady = with_mo.outlier_factors()[0];
         // one spike at gain 5000
         let spike = planted(&mut r, 8, 32, &hot, 5000.0);
-        let _ = with_mo.forward(&spike);
-        let _ = no_mo.forward(&spike);
+        let _ = with_mo.forward(&spike, &mut ws);
+        let _ = no_mo.forward(&spike, &mut ws);
         let jump_mo = with_mo.outlier_factors()[0] / steady;
         let jump_nomo = no_mo.outlier_factors()[0] / steady;
         assert!(
@@ -263,11 +291,12 @@ mod tests {
     #[test]
     fn backward_exact_on_outlier_channels() {
         let mut r = Rng::new(45);
+        let mut ws = Workspace::new();
         let w = Matrix::randn(16, 8, &mut r, 0.5);
         let o = OutlierSet::new(vec![2, 9]);
         let m = QuaffLinear::new(w.clone(), o, 0.2, true);
         let dy = Matrix::randn(3, 8, &mut r, 1.0);
-        let dx = m.backward_input(&dy);
+        let dx = m.backward_input(&dy, &mut ws);
         let exact = dy.matmul_bt(&w);
         for t in 0..3 {
             for &ch in &[2usize, 9] {
@@ -281,8 +310,41 @@ mod tests {
 
     #[test]
     fn select_cols_i8_gathers() {
+        use crate::tensor::I8Matrix;
         let x = I8Matrix::from_vec(2, 4, vec![0, 1, 2, 3, 4, 5, 6, 7]);
-        let s = select_cols_i8(&x, &[1, 3]);
+        let mut s = I8Matrix::zeros(2, 2);
+        kernels::select_cols_i8_into(&x, &[1, 3], &mut s);
         assert_eq!(s.data(), &[1, 3, 5, 7]);
+    }
+
+    #[test]
+    fn forward_steady_state_allocates_nothing_from_arena() {
+        // After one warm step, every take must be served from the arena.
+        let mut r = Rng::new(46);
+        let mut ws = Workspace::new();
+        let hot = vec![2, 11];
+        let w = Matrix::randn(32, 24, &mut r, 0.3);
+        let mut m = QuaffLinear::new(w, OutlierSet::new(hot.clone()), 0.2, true);
+        for _ in 0..2 {
+            let x = planted(&mut r, 6, 32, &hot, 60.0);
+            let y = m.forward(&x, &mut ws);
+            ws.recycle(y);
+            let dy = Matrix::randn(6, 24, &mut r, 1.0);
+            let dx = m.backward_input(&dy, &mut ws);
+            ws.recycle(dx);
+        }
+        let frozen = ws.fresh_allocs;
+        for _ in 0..5 {
+            let x = planted(&mut r, 6, 32, &hot, 60.0);
+            let y = m.forward(&x, &mut ws);
+            ws.recycle(y);
+            let dy = Matrix::randn(6, 24, &mut r, 1.0);
+            let dx = m.backward_input(&dy, &mut ws);
+            ws.recycle(dx);
+        }
+        assert_eq!(
+            ws.fresh_allocs, frozen,
+            "steady-state forward/backward must not grow the arena"
+        );
     }
 }

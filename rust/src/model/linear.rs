@@ -4,7 +4,7 @@
 use crate::methods::{build_method, MethodConfig, MethodKind, QuantMethod};
 use crate::outlier::{ChannelStats, LayerKind, OutlierSet};
 use crate::peft::{LoraAdapter, LoraCache};
-use crate::tensor::Matrix;
+use crate::tensor::{kernels, Matrix, Workspace};
 use crate::util::prng::Rng;
 
 /// One linear layer of the model.
@@ -122,7 +122,15 @@ impl QuantLinear {
     }
 
     /// Forward `Y = X·W (+ LoRA ΔY)`. Observes the calibration tap if on.
-    pub fn forward(&mut self, x: &Matrix, train: bool, rng: &mut Rng) -> (Matrix, LinCache) {
+    /// The output matrix is drawn from `ws`; callers that are done with it
+    /// should hand it back via [`Workspace::recycle`].
+    pub fn forward(
+        &mut self,
+        x: &Matrix,
+        train: bool,
+        rng: &mut Rng,
+        ws: &mut Workspace,
+    ) -> (Matrix, LinCache) {
         if let Some(stats) = self.stats.as_mut() {
             stats.observe(x, self.tap_tau);
         }
@@ -131,13 +139,18 @@ impl QuantLinear {
             self.capture_next = false;
         }
         let mut y = match (&mut self.method, &self.w_master) {
-            (Some(m), _) => m.forward(x),
-            (None, Some(w)) => x.matmul(w),
+            (Some(m), _) => m.forward(x, ws),
+            (None, Some(w)) => {
+                let mut y = ws.take_matrix("lin.master.y", x.rows(), w.cols());
+                kernels::matmul_into(x, w, &mut y);
+                y
+            }
             _ => unreachable!("linear layer with neither method nor master"),
         };
         let lora_cache = if let Some(lora) = &self.lora {
             let (dy, cache) = lora.forward(x, train, rng);
             y.add_assign(&dy);
+            ws.recycle(dy);
             Some(cache)
         } else {
             None
@@ -145,16 +158,21 @@ impl QuantLinear {
         (y, LinCache { lora: lora_cache })
     }
 
-    /// Backward: returns dX; accumulates adapter gradients.
-    pub fn backward(&mut self, dy: &Matrix, cache: &LinCache) -> Matrix {
+    /// Backward: returns dX (workspace-backed); accumulates adapter grads.
+    pub fn backward(&mut self, dy: &Matrix, cache: &LinCache, ws: &mut Workspace) -> Matrix {
         let mut dx = match (&self.method, &self.w_master) {
-            (Some(m), _) => m.backward_input(dy),
-            (None, Some(w)) => dy.matmul_bt(w),
+            (Some(m), _) => m.backward_input(dy, ws),
+            (None, Some(w)) => {
+                let mut dx = ws.take_matrix("lin.master.dx", dy.rows(), w.rows());
+                kernels::matmul_bt_into(dy, w, &mut dx);
+                dx
+            }
             _ => unreachable!(),
         };
         if let (Some(lora), Some(lc)) = (self.lora.as_mut(), cache.lora.as_ref()) {
             let dx_lora = lora.backward(dy, lc);
             dx.add_assign(&dx_lora);
+            ws.recycle(dx_lora);
         }
         dx
     }
@@ -169,30 +187,32 @@ mod tests {
     #[test]
     fn master_forward_then_quantized_close() {
         let mut r = Rng::new(51);
+        let mut ws = Workspace::new();
         let mut lin = QuantLinear::new("blocks.0.mlp.up_proj", 32, 24, &mut r);
         assert_eq!(lin.kind, LayerKind::UpProj);
         let x = Matrix::randn(4, 32, &mut r, 1.0);
-        let (y0, _) = lin.forward(&x, false, &mut r);
+        let (y0, _) = lin.forward(&x, false, &mut r, &mut ws);
         // calibrate + convert to naive
         lin.start_calibration();
-        let _ = lin.forward(&x, false, &mut r);
+        let _ = lin.forward(&x, false, &mut r, &mut ws);
         let stats = lin.take_stats().unwrap();
         lin.apply_method(MethodKind::Naive, &stats, &OutlierSet::default(), &MethodConfig::default());
         assert!(lin.is_quantized());
-        let (y1, _) = lin.forward(&x, false, &mut r);
+        let (y1, _) = lin.forward(&x, false, &mut r, &mut ws);
         prop::all_close(y0.data(), y1.data(), 0.05, 0.05).unwrap();
     }
 
     #[test]
     fn lora_adds_delta_after_training_b() {
         let mut r = Rng::new(52);
+        let mut ws = Workspace::new();
         let mut lin = QuantLinear::new("l.q_proj", 16, 16, &mut r);
         lin.lora = Some(LoraAdapter::new(16, 16, 4, 8.0, 0.0, &mut r));
         let x = Matrix::randn(2, 16, &mut r, 1.0);
-        let (y0, _) = lin.forward(&x, false, &mut r);
+        let (y0, _) = lin.forward(&x, false, &mut r, &mut ws);
         // poke B so the adapter contributes
         lin.lora.as_mut().unwrap().b.value = Matrix::randn(4, 16, &mut r, 0.5);
-        let (y1, _) = lin.forward(&x, false, &mut r);
+        let (y1, _) = lin.forward(&x, false, &mut r, &mut ws);
         let diff: f32 = y0
             .data()
             .iter()
@@ -205,13 +225,14 @@ mod tests {
     #[test]
     fn backward_includes_lora_path() {
         let mut r = Rng::new(53);
+        let mut ws = Workspace::new();
         let mut lin = QuantLinear::new("l.v_proj", 12, 10, &mut r);
         lin.lora = Some(LoraAdapter::new(12, 10, 3, 3.0, 0.0, &mut r));
         lin.lora.as_mut().unwrap().b.value = Matrix::randn(3, 10, &mut r, 0.5);
         let x = Matrix::randn(3, 12, &mut r, 1.0);
         let dy = Matrix::randn(3, 10, &mut r, 1.0);
-        let (_, cache) = lin.forward(&x, false, &mut r);
-        let dx = lin.backward(&dy, &cache);
+        let (_, cache) = lin.forward(&x, false, &mut r, &mut ws);
+        let dx = lin.backward(&dy, &cache, &mut ws);
         // compare against manual: dX = dY Wᵀ + lora-path
         let w = lin.master().unwrap().clone();
         let want_frozen = dy.matmul_bt(&w);
@@ -232,11 +253,12 @@ mod tests {
     #[test]
     fn calibration_tap_collects() {
         let mut r = Rng::new(54);
+        let mut ws = Workspace::new();
         let mut lin = QuantLinear::new("l.k_proj", 8, 8, &mut r);
         lin.start_calibration();
         for _ in 0..3 {
             let x = Matrix::randn(2, 8, &mut r, 1.0);
-            let _ = lin.forward(&x, false, &mut r);
+            let _ = lin.forward(&x, false, &mut r, &mut ws);
         }
         let stats = lin.take_stats().unwrap();
         assert_eq!(stats.samples, 3);

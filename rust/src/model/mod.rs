@@ -17,7 +17,7 @@ pub mod param;
 use crate::methods::{MethodConfig, MethodKind};
 use crate::outlier::{BudgetAllocator, ChannelStats, OutlierDetector, OutlierRegistry};
 use crate::peft::{Ia3Vector, LoraAdapter, PTuningCache, PTuningEncoder, PeftKind, PromptTuning};
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, Workspace};
 use crate::util::prng::Rng;
 use inject::{DiagGain, InjectConfig};
 use layers::{
@@ -190,13 +190,16 @@ impl Block {
         seq: usize,
         train: bool,
         rng: &mut Rng,
+        ws: &mut Workspace,
     ) -> (Matrix, BlockCache) {
         // attention sub-layer
         let (h1, ln1c) = self.ln1.forward(x);
         let a_in = self.inj_attn.apply(&h1);
-        let (q, qc) = self.q_proj.forward(&a_in, train, rng);
-        let (k0, kc) = self.k_proj.forward(&a_in, train, rng);
-        let (v0, vc) = self.v_proj.forward(&a_in, train, rng);
+        ws.recycle(h1);
+        let (q, qc) = self.q_proj.forward(&a_in, train, rng, ws);
+        let (k0, kc) = self.k_proj.forward(&a_in, train, rng, ws);
+        let (v0, vc) = self.v_proj.forward(&a_in, train, rng, ws);
+        ws.recycle(a_in);
         let (k, k_raw) = match &self.ia3_k {
             Some(ia3) => (ia3.forward(&k0), Some(k0)),
             None => (k0, None),
@@ -206,23 +209,35 @@ impl Block {
             None => (v0, None),
         };
         let (attn_out, attn) = attention_forward(&q, &k, &v, batch, seq, self.n_heads);
+        ws.recycle(q);
+        ws.recycle(k);
+        ws.recycle(v);
         let o_in = self.inj_o.apply(&attn_out);
-        let (o, oc) = self.o_proj.forward(&o_in, train, rng);
-        let mut x2 = x.clone();
+        ws.recycle(attn_out);
+        let (o, oc) = self.o_proj.forward(&o_in, train, rng, ws);
+        ws.recycle(o_in);
+        let mut x2 = ws.take_matrix("blk.x2", x.rows(), x.cols());
+        x2.data_mut().copy_from_slice(x.data());
         x2.add_assign(&o);
+        ws.recycle(o);
         // MLP sub-layer
         let (h2, ln2c) = self.ln2.forward(&x2);
         let m_in = self.inj_mlp.apply(&h2);
-        let (u, upc) = self.up_proj.forward(&m_in, train, rng);
+        ws.recycle(h2);
+        let (u, upc) = self.up_proj.forward(&m_in, train, rng, ws);
+        ws.recycle(m_in);
         let g0 = gelu_forward(&u);
         let (g, g_post) = match &self.ia3_ff {
             Some(ia3) => (ia3.forward(&g0), Some(g0)),
             None => (g0, None),
         };
         let d_in = self.inj_down.apply(&g);
-        let (dn, downc) = self.down_proj.forward(&d_in, train, rng);
+        ws.recycle(g);
+        let (dn, downc) = self.down_proj.forward(&d_in, train, rng, ws);
+        ws.recycle(d_in);
         let mut out = x2;
         out.add_assign(&dn);
+        ws.recycle(dn);
         (
             out,
             BlockCache {
@@ -243,37 +258,72 @@ impl Block {
         )
     }
 
-    fn backward(&mut self, dout: &Matrix, cache: &BlockCache) -> Matrix {
+    fn backward(&mut self, dout: &Matrix, cache: &BlockCache, ws: &mut Workspace) -> Matrix {
         // out = x2 + dn
-        let mut d_x2 = dout.clone();
-        let d_d_in = self.down_proj.backward(dout, &cache.downc);
+        let mut d_x2 = ws.take_matrix("blk.dx2", dout.rows(), dout.cols());
+        d_x2.data_mut().copy_from_slice(dout.data());
+        let d_d_in = self.down_proj.backward(dout, &cache.downc, ws);
         let d_g = self.inj_down.backward(&d_d_in);
+        ws.recycle(d_d_in);
         let d_g0 = match (self.ia3_ff.as_mut(), cache.g_post.as_ref()) {
-            (Some(ia3), Some(g0)) => ia3.backward(&d_g, g0),
+            (Some(ia3), Some(g0)) => {
+                let r = ia3.backward(&d_g, g0);
+                ws.recycle(d_g);
+                r
+            }
             _ => d_g,
         };
         let d_u = gelu_backward(&d_g0, &cache.u);
-        let d_m_in = self.up_proj.backward(&d_u, &cache.upc);
+        ws.recycle(d_g0);
+        let d_m_in = self.up_proj.backward(&d_u, &cache.upc, ws);
+        ws.recycle(d_u);
         let d_h2 = self.inj_mlp.backward(&d_m_in);
-        d_x2.add_assign(&self.ln2.backward(&d_h2, &cache.ln2c));
+        ws.recycle(d_m_in);
+        let t_ln2 = self.ln2.backward(&d_h2, &cache.ln2c);
+        d_x2.add_assign(&t_ln2);
+        ws.recycle(t_ln2);
+        ws.recycle(d_h2);
         // x2 = x + o
-        let mut d_x = d_x2.clone();
-        let d_o_in = self.o_proj.backward(&d_x2, &cache.oc);
+        let mut d_x = ws.take_matrix("blk.dx", d_x2.rows(), d_x2.cols());
+        d_x.data_mut().copy_from_slice(d_x2.data());
+        let d_o_in = self.o_proj.backward(&d_x2, &cache.oc, ws);
+        ws.recycle(d_x2);
         let d_attn_out = self.inj_o.backward(&d_o_in);
+        ws.recycle(d_o_in);
         let (dq, dk, dv) = attention_backward(&d_attn_out, &cache.attn, self.n_heads);
+        ws.recycle(d_attn_out);
         let dk0 = match (self.ia3_k.as_mut(), cache.k_raw.as_ref()) {
-            (Some(ia3), Some(kr)) => ia3.backward(&dk, kr),
+            (Some(ia3), Some(kr)) => {
+                let r = ia3.backward(&dk, kr);
+                ws.recycle(dk);
+                r
+            }
             _ => dk,
         };
         let dv0 = match (self.ia3_v.as_mut(), cache.v_raw.as_ref()) {
-            (Some(ia3), Some(vr)) => ia3.backward(&dv, vr),
+            (Some(ia3), Some(vr)) => {
+                let r = ia3.backward(&dv, vr);
+                ws.recycle(dv);
+                r
+            }
             _ => dv,
         };
-        let mut d_a_in = self.q_proj.backward(&dq, &cache.qc);
-        d_a_in.add_assign(&self.k_proj.backward(&dk0, &cache.kc));
-        d_a_in.add_assign(&self.v_proj.backward(&dv0, &cache.vc));
+        let mut d_a_in = self.q_proj.backward(&dq, &cache.qc, ws);
+        ws.recycle(dq);
+        let t_k = self.k_proj.backward(&dk0, &cache.kc, ws);
+        d_a_in.add_assign(&t_k);
+        ws.recycle(t_k);
+        ws.recycle(dk0);
+        let t_v = self.v_proj.backward(&dv0, &cache.vc, ws);
+        d_a_in.add_assign(&t_v);
+        ws.recycle(t_v);
+        ws.recycle(dv0);
         let d_h1 = self.inj_attn.backward(&d_a_in);
-        d_x.add_assign(&self.ln1.backward(&d_h1, &cache.ln1c));
+        ws.recycle(d_a_in);
+        let t_ln1 = self.ln1.backward(&d_h1, &cache.ln1c);
+        d_x.add_assign(&t_ln1);
+        ws.recycle(t_ln1);
+        ws.recycle(d_h1);
         d_x
     }
 }
@@ -304,6 +354,9 @@ pub struct Model {
     pub ptuning: Option<PTuningEncoder>,
     /// Dropout / simulation randomness.
     pub rng: Rng,
+    /// Scratch arena used by [`Model::forward`]/[`Model::backward`] when the
+    /// caller does not thread its own (see [`Model::forward_with`]).
+    pub ws: Workspace,
 }
 
 impl Model {
@@ -325,6 +378,7 @@ impl Model {
             prompt: None,
             ptuning: None,
             rng,
+            ws: Workspace::new(),
         }
     }
 
@@ -421,9 +475,25 @@ impl Model {
         (x, ptc)
     }
 
-    /// Full forward pass. Returns logits `(batch·seq' × vocab)` and the
-    /// cache for backward (`seq' = n_virtual + seq`).
+    /// Full forward pass using the model's own scratch arena. Returns
+    /// logits `(batch·seq' × vocab)` and the cache for backward
+    /// (`seq' = n_virtual + seq`).
     pub fn forward(&mut self, tokens: &[Vec<u32>], train: bool) -> (Matrix, ModelCache) {
+        let mut ws = std::mem::take(&mut self.ws);
+        let out = self.forward_with(tokens, train, &mut ws);
+        self.ws = ws;
+        out
+    }
+
+    /// Full forward pass drawing every hot-path buffer from `ws` — the
+    /// train loop threads one arena through every step so the linear-layer
+    /// path stops allocating at steady state.
+    pub fn forward_with(
+        &mut self,
+        tokens: &[Vec<u32>],
+        train: bool,
+        ws: &mut Workspace,
+    ) -> (Matrix, ModelCache) {
         let batch = tokens.len();
         let s = tokens[0].len();
         let nv = self.n_virtual();
@@ -432,12 +502,13 @@ impl Model {
         let mut caches = Vec::with_capacity(self.blocks.len());
         let mut rng = self.rng.clone();
         for blk in &mut self.blocks {
-            let (nx, c) = blk.forward(&x, batch, sp, train, &mut rng);
-            x = nx;
+            let (nx, c) = blk.forward(&x, batch, sp, train, &mut rng, ws);
+            ws.recycle(std::mem::replace(&mut x, nx));
             caches.push(c);
         }
         self.rng = rng;
         let (h, final_lnc) = self.final_ln.forward(&x);
+        ws.recycle(x);
         let logits = h.matmul(&self.lm_head);
         (
             logits,
@@ -453,13 +524,23 @@ impl Model {
         )
     }
 
-    /// Backward pass from dL/dlogits; accumulates adapter gradients.
+    /// Backward pass from dL/dlogits using the model's own scratch arena;
+    /// accumulates adapter gradients.
     pub fn backward(&mut self, dlogits: &Matrix, cache: &ModelCache) {
+        let mut ws = std::mem::take(&mut self.ws);
+        self.backward_with(dlogits, cache, &mut ws);
+        self.ws = ws;
+    }
+
+    /// Backward pass drawing every hot-path buffer from `ws`.
+    pub fn backward_with(&mut self, dlogits: &Matrix, cache: &ModelCache, ws: &mut Workspace) {
         // logits = h @ lm_head  (frozen) → dh = dlogits @ lm_headᵀ
         let dh = dlogits.matmul_bt(&self.lm_head);
         let mut dx = self.final_ln.backward(&dh, &cache.final_lnc);
+        ws.recycle(dh);
         for (blk, bc) in self.blocks.iter_mut().zip(cache.blocks.iter()).rev() {
-            dx = blk.backward(&dx, bc);
+            let next = blk.backward(&dx, bc, ws);
+            ws.recycle(std::mem::replace(&mut dx, next));
         }
         // virtual-token gradients
         let nv = cache.n_virtual;
@@ -481,6 +562,7 @@ impl Model {
                 p.backward(&dvirt, ptc);
             }
         }
+        ws.recycle(dx);
     }
 
     /// Visit every trainable parameter (adapters only — base is frozen).

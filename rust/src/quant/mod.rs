@@ -4,7 +4,7 @@
 //!
 //! `X_int = round(X / Δ)`, `Δ = max|X| / (2^{N-1} − 1)` with N = 8 → 127.
 
-use crate::tensor::{I8Matrix, Matrix};
+use crate::tensor::{kernels, I8Matrix, Matrix, Workspace};
 
 /// Symmetric INT8 full-scale value: `2^{8−1} − 1`.
 pub const QMAX: f32 = 127.0;
@@ -46,48 +46,104 @@ pub fn quantize_per_tensor(x: &Matrix) -> (I8Matrix, f32) {
 
 /// Per-token (per-row) quantization of activations: `(X_int, Δ ∈ R^t)`.
 pub fn quantize_per_token(x: &Matrix) -> (I8Matrix, Vec<f32>) {
-    let deltas: Vec<f32> = x.row_abs_max().iter().map(|&m| step_size(m)).collect();
-    let mut data = Vec::with_capacity(x.rows() * x.cols());
+    let mut x_int = I8Matrix::zeros(x.rows(), x.cols());
+    let mut deltas = Vec::with_capacity(x.rows());
+    quantize_per_token_into(x, &mut x_int, &mut deltas);
+    (x_int, deltas)
+}
+
+/// [`quantize_per_token`] into caller-provided buffers: `x_int` must match
+/// `x`'s shape; `deltas` is cleared and refilled. Allocation-free on reuse.
+pub fn quantize_per_token_into(x: &Matrix, x_int: &mut I8Matrix, deltas: &mut Vec<f32>) {
+    assert_eq!(
+        (x_int.rows(), x_int.cols()),
+        (x.rows(), x.cols()),
+        "quantize_per_token_into shape mismatch"
+    );
+    deltas.clear();
+    for i in 0..x.rows() {
+        let m = x.row(i).iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        deltas.push(step_size(m));
+    }
     for i in 0..x.rows() {
         let d = deltas[i];
+        let dst = x_int.row_mut(i);
         if d == 0.0 {
-            data.extend(std::iter::repeat(0i8).take(x.cols()));
+            dst.fill(0);
         } else {
             let inv = 1.0 / d;
-            data.extend(
-                x.row(i)
-                    .iter()
-                    .map(|&v| (v * inv).round().clamp(-QMAX, QMAX) as i8),
-            );
+            for (o, &v) in dst.iter_mut().zip(x.row(i)) {
+                *o = (v * inv).round().clamp(-QMAX, QMAX) as i8;
+            }
         }
     }
-    (I8Matrix::from_vec(x.rows(), x.cols(), data), deltas)
 }
 
 /// Per-output-channel (per-column) quantization of weights:
 /// `(W_int, Δ ∈ R^{c_out})`.
 pub fn quantize_per_oc(w: &Matrix) -> (I8Matrix, Vec<f32>) {
-    let deltas: Vec<f32> = w.col_abs_max().iter().map(|&m| step_size(m)).collect();
-    let inv: Vec<f32> = deltas
-        .iter()
-        .map(|&d| if d == 0.0 { 0.0 } else { 1.0 / d })
-        .collect();
-    let mut data = Vec::with_capacity(w.rows() * w.cols());
+    let mut w_int = I8Matrix::zeros(w.rows(), w.cols());
+    let mut deltas = Vec::with_capacity(w.cols());
+    let mut inv = Vec::with_capacity(w.cols());
+    quantize_per_oc_core(w, &mut w_int, &mut deltas, &mut inv);
+    (w_int, deltas)
+}
+
+/// [`quantize_per_oc`] into caller-provided buffers, with the reciprocal
+/// scratch drawn from the workspace — the per-step `ŵ` quantization on
+/// Quaff's hot path uses this.
+pub fn quantize_per_oc_ws(
+    w: &Matrix,
+    w_int: &mut I8Matrix,
+    deltas: &mut Vec<f32>,
+    ws: &mut Workspace,
+) {
+    let mut inv = ws.take_f32("quant.oc.inv", 0);
+    quantize_per_oc_core(w, w_int, deltas, &mut inv);
+    ws.put_f32("quant.oc.inv", inv);
+}
+
+fn quantize_per_oc_core(
+    w: &Matrix,
+    w_int: &mut I8Matrix,
+    deltas: &mut Vec<f32>,
+    inv: &mut Vec<f32>,
+) {
+    assert_eq!(
+        (w_int.rows(), w_int.cols()),
+        (w.rows(), w.cols()),
+        "quantize_per_oc shape mismatch"
+    );
+    let cols = w.cols();
+    deltas.clear();
+    deltas.resize(cols, 0.0);
+    kernels::col_abs_max_into(w, deltas);
+    for d in deltas.iter_mut() {
+        *d = step_size(*d);
+    }
+    inv.clear();
+    inv.extend(deltas.iter().map(|&d| if d == 0.0 { 0.0 } else { 1.0 / d }));
     for i in 0..w.rows() {
         let row = w.row(i);
-        data.extend(
-            row.iter()
-                .zip(&inv)
-                .map(|(&v, &iv)| (v * iv).round().clamp(-QMAX, QMAX) as i8),
-        );
+        let dst = w_int.row_mut(i);
+        for ((o, &v), &iv) in dst.iter_mut().zip(row).zip(inv.iter()) {
+            *o = (v * iv).round().clamp(-QMAX, QMAX) as i8;
+        }
     }
-    (I8Matrix::from_vec(w.rows(), w.cols(), data), deltas)
 }
 
 /// Dequantize a per-token-quantized activation matrix.
 pub fn dequantize_per_token(x: &I8Matrix, deltas: &[f32]) -> Matrix {
-    assert_eq!(deltas.len(), x.rows());
     let mut out = Matrix::zeros(x.rows(), x.cols());
+    dequantize_per_token_into(x, deltas, &mut out);
+    out
+}
+
+/// [`dequantize_per_token`] into a caller-provided matrix (fully
+/// overwritten — dirty recycled buffers are fine).
+pub fn dequantize_per_token_into(x: &I8Matrix, deltas: &[f32], out: &mut Matrix) {
+    assert_eq!(deltas.len(), x.rows());
+    assert_eq!((out.rows(), out.cols()), (x.rows(), x.cols()));
     for i in 0..x.rows() {
         let d = deltas[i];
         let dst = out.row_mut(i);
@@ -95,33 +151,49 @@ pub fn dequantize_per_token(x: &I8Matrix, deltas: &[f32]) -> Matrix {
             *o = q as f32 * d;
         }
     }
-    out
 }
 
 /// Dequantize a per-output-channel-quantized weight matrix.
 pub fn dequantize_per_oc(w: &I8Matrix, deltas: &[f32]) -> Matrix {
-    assert_eq!(deltas.len(), w.cols());
     let mut out = Matrix::zeros(w.rows(), w.cols());
+    dequantize_per_oc_into(w, deltas, &mut out);
+    out
+}
+
+/// [`dequantize_per_oc`] into a caller-provided matrix.
+pub fn dequantize_per_oc_into(w: &I8Matrix, deltas: &[f32], out: &mut Matrix) {
+    assert_eq!(deltas.len(), w.cols());
+    assert_eq!((out.rows(), out.cols()), (w.rows(), w.cols()));
     for i in 0..w.rows() {
         let dst = out.row_mut(i);
         for ((o, &q), &d) in dst.iter_mut().zip(w.row(i)).zip(deltas) {
             *o = q as f32 * d;
         }
     }
-    out
 }
 
 /// Dequantize selected *rows* of a per-OC-quantized weight matrix
 /// (LLM.int8's "retrieve W_O" step — paper Eq. 10 discussion).
 pub fn dequantize_rows_per_oc(w: &I8Matrix, deltas: &[f32], rows: &[usize]) -> Matrix {
     let mut out = Matrix::zeros(rows.len(), w.cols());
+    dequantize_rows_per_oc_into(w, deltas, rows, &mut out);
+    out
+}
+
+/// [`dequantize_rows_per_oc`] into a caller-provided matrix.
+pub fn dequantize_rows_per_oc_into(
+    w: &I8Matrix,
+    deltas: &[f32],
+    rows: &[usize],
+    out: &mut Matrix,
+) {
+    assert_eq!((out.rows(), out.cols()), (rows.len(), w.cols()));
     for (oi, &i) in rows.iter().enumerate() {
         let dst = out.row_mut(oi);
         for ((o, &q), &d) in dst.iter_mut().zip(w.row(i)).zip(deltas) {
             *o = q as f32 * d;
         }
     }
-    out
 }
 
 /// Quantization error metrics between a reference f32 tensor and its
@@ -182,6 +254,14 @@ impl QuantizedWeights {
     /// Fused `out += Δ_x·(X_int·W_int)·Δ_W` via the packed fast path.
     pub fn matmul_into(&self, x_int: &I8Matrix, dx: &[f32], out: &mut [f32]) {
         x_int.matmul_dequant_packed_into(&self.packed, dx, &self.deltas, out);
+    }
+
+    /// [`Self::matmul_into`] with the widening scratch drawn from the
+    /// workspace — zero allocations at steady state.
+    pub fn matmul_ws(&self, x_int: &I8Matrix, dx: &[f32], ws: &mut Workspace, out: &mut [f32]) {
+        let mut a16 = ws.take_i16("qw.a16", 0);
+        x_int.matmul_dequant_packed_scratch_into(&self.packed, dx, &self.deltas, &mut a16, out);
+        ws.put_i16("qw.a16", a16);
     }
 
     pub fn dequantize(&self) -> Matrix {

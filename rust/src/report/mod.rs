@@ -111,7 +111,7 @@ pub const ALL_REPORTS: [&str; 18] = [
 ];
 
 /// Generate one report by id; returns the markdown (also suitable for
-/// EXPERIMENTS.md inclusion).
+/// inclusion in the paper-vs-measured record, DESIGN.md §Reports).
 pub fn generate(id: &str, opts: &ReportOpts) -> String {
     match id {
         "fig1" => perf_grid::fig1(opts),

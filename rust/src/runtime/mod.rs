@@ -1,14 +1,33 @@
-//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
-//! `python/compile/aot.py`, compiles them once on the PJRT CPU client, and
-//! executes them from the L3 hot path. Python never runs here.
+//! Execution-engine runtime: the artifact/marshaling contract plus a
+//! pluggable [`ExecBackend`].
+//!
+//! Two backends implement the trait:
+//!
+//! * [`NativeBackend`] — pure Rust, always available: a registry of named
+//!   kernels executed on the L3 tensor substrate (the same workspace-backed
+//!   int8 path the trainer uses). This is what `cargo build` gives you
+//!   offline, with zero external dependencies.
+//! * `Engine` (behind the **`pjrt`** cargo feature, in [`pjrt`]) — loads
+//!   the AOT-compiled HLO-text artifacts produced by `python/compile/aot.py`,
+//!   compiles them once on the PJRT CPU client, and executes them from the
+//!   L3 hot path. Python never runs here. The feature is off by default so
+//!   the default build needs neither network nor the native `xla` library;
+//!   see `DESIGN.md` §PJRT for how to enable it against real bindings.
 //!
 //! The artifact contract is `artifacts/manifest.json`: flattened, ordered
-//! input/output specs for each HLO module; [`TrainSession`] threads the
-//! training state (LoRA params, Adam moments, step counter, Quaff momentum
-//! scales) through successive `train_step` executions.
+//! input/output specs for each HLO module; `TrainSession` (pjrt) threads
+//! training state through successive `train_step` executions.
 
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{Engine, TrainSession};
+
+use crate::quant;
+use crate::tensor::{kernels, Matrix, Workspace};
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
+use crate::{anyhow, bail};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
@@ -120,7 +139,7 @@ impl Manifest {
     }
 }
 
-/// A host-side array crossing the PJRT boundary.
+/// A host-side array crossing the backend boundary.
 #[derive(Clone, Debug, PartialEq)]
 pub enum HostValue {
     F32(Vec<usize>, Vec<f32>),
@@ -152,252 +171,122 @@ impl HostValue {
         }
     }
 
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let (ty, dims, bytes): (xla::ElementType, &[usize], Vec<u8>) = match self {
-            HostValue::F32(shape, data) => (
-                xla::ElementType::F32,
-                shape,
-                data.iter().flat_map(|x| x.to_le_bytes()).collect(),
-            ),
-            HostValue::I32(shape, data) => (
-                xla::ElementType::S32,
-                shape,
-                data.iter().flat_map(|x| x.to_le_bytes()).collect(),
-            ),
-        };
-        xla::Literal::create_from_shape_and_untyped_data(ty, dims, &bytes)
-            .map_err(|e| anyhow!("literal creation failed: {e:?}"))
-    }
-
-    fn from_literal(lit: &xla::Literal, spec: &ArraySpec) -> Result<HostValue> {
-        match spec.dtype.as_str() {
-            "float32" => Ok(HostValue::F32(
-                spec.shape.clone(),
-                lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
-            )),
-            "int32" => Ok(HostValue::I32(
-                spec.shape.clone(),
-                lit.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?,
-            )),
-            other => bail!("unsupported dtype in manifest: {other}"),
-        }
-    }
-}
-
-/// The engine: a PJRT CPU client plus compiled executables, keyed by
-/// artifact name.
-pub struct Engine {
-    pub manifest: Manifest,
-    client: xla::PjRtClient,
-    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
-    /// Compile seconds per artifact (diagnostics).
-    pub compile_secs: BTreeMap<String, f64>,
-}
-
-impl Engine {
-    /// Load the manifest and compile every artifact.
-    pub fn load(dir: &Path) -> Result<Engine> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        let mut executables = BTreeMap::new();
-        let mut compile_secs = BTreeMap::new();
-        for (name, entry) in &manifest.artifacts {
-            let t0 = std::time::Instant::now();
-            let proto = xla::HloModuleProto::from_text_file(&entry.path)
-                .map_err(|e| anyhow!("parsing {}: {e:?}", entry.path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-            compile_secs.insert(name.clone(), t0.elapsed().as_secs_f64());
-            executables.insert(name.clone(), exe);
-        }
-        Ok(Engine {
-            manifest,
-            client,
-            executables,
-            compile_secs,
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Execute an artifact with ordered inputs; returns ordered outputs.
-    pub fn execute(&self, name: &str, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
-        let entry = self
-            .manifest
-            .artifacts
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
-        if inputs.len() != entry.inputs.len() {
-            bail!(
-                "artifact {name}: expected {} inputs, got {}",
-                entry.inputs.len(),
-                inputs.len()
-            );
-        }
-        for (hv, spec) in inputs.iter().zip(&entry.inputs) {
-            if hv.shape() != spec.shape.as_slice() {
-                bail!(
-                    "artifact {name}: input '{}' shape {:?} != manifest {:?}",
-                    spec.name,
-                    hv.shape(),
-                    spec.shape
-                );
+    /// View a 2-D f32 value as a [`Matrix`] (copies into row-major storage).
+    pub fn to_matrix(&self) -> Result<Matrix> {
+        match self {
+            HostValue::F32(shape, data) if shape.len() == 2 => {
+                Ok(Matrix::from_vec(shape[0], shape[1], data.clone()))
             }
+            HostValue::F32(shape, _) => bail!("expected 2-D f32, got shape {shape:?}"),
+            HostValue::I32(..) => bail!("expected f32, got i32"),
         }
-        let exe = &self.executables[name];
-        let literals = inputs
-            .iter()
-            .map(HostValue::to_literal)
-            .collect::<Result<Vec<_>>>()?;
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch: {e:?}"))?;
-        // aot.py lowers with return_tuple=True: one tuple of N outputs
-        let parts = tuple.to_tuple().map_err(|e| anyhow!("tuple: {e:?}"))?;
-        if parts.len() != entry.outputs.len() {
-            bail!(
-                "artifact {name}: expected {} outputs, got {}",
-                entry.outputs.len(),
-                parts.len()
-            );
-        }
-        parts
-            .iter()
-            .zip(&entry.outputs)
-            .map(|(lit, spec)| HostValue::from_literal(lit, spec))
-            .collect()
+    }
+
+    pub fn from_matrix(m: &Matrix) -> HostValue {
+        HostValue::F32(vec![m.rows(), m.cols()], m.data().to_vec())
     }
 }
 
-/// Threads fine-tuning state across `train_step` executions.
+/// A pluggable executor of named entry points with [`HostValue`] I/O.
 ///
-/// Input order (from `aot.py`): `tokens, mask, t, lora…, m…, v…, scales…`.
-/// Output order: `loss, t, lora…, m…, v…, scales…`.
-pub struct TrainSession<'e> {
-    engine: &'e Engine,
-    /// Persistent state: everything after (tokens, mask) in input order.
-    state: Vec<HostValue>,
-    pub steps: u64,
-    pub losses: Vec<f64>,
+/// Implementations: [`NativeBackend`] (always), `Engine` (pjrt feature).
+pub trait ExecBackend {
+    /// Human-readable platform tag ("native-cpu", "cpu" via PJRT, ...).
+    fn platform(&self) -> String;
+
+    /// Entry points this backend can execute.
+    fn entry_points(&self) -> Vec<String>;
+
+    /// Execute `name` with ordered inputs; returns ordered outputs.
+    fn execute(&self, name: &str, inputs: &[HostValue]) -> Result<Vec<HostValue>>;
 }
 
-impl<'e> TrainSession<'e> {
-    /// Initialize state from the manifest specs (zeros — matching aot.py's
-    /// zero-initialized Adam moments and LoRA-B, ones for scales).
-    pub fn new(engine: &'e Engine) -> Result<TrainSession<'e>> {
-        let entry = engine
-            .manifest
-            .artifacts
-            .get("train_step")
-            .ok_or_else(|| anyhow!("no train_step artifact"))?;
-        let mut state = Vec::new();
-        for spec in &entry.inputs[2..] {
-            let n = spec.numel();
-            let hv = match spec.name.as_str() {
-                s if s.starts_with("scales.") => HostValue::F32(spec.shape.clone(), vec![1.0; n]),
-                s if s.starts_with("lora.") && s.ends_with("lora_a") => {
-                    // Gaussian init matching aot.py's seed is impossible from
-                    // here; instead load from the artifact goldens if needed.
-                    // Zero init for A is also valid (B is zero ⇒ ΔY = 0).
-                    HostValue::F32(spec.shape.clone(), vec![0.0; n])
-                }
-                _ => HostValue::F32(spec.shape.clone(), vec![0.0; n]),
-            };
-            state.push(hv);
-        }
-        // seed lora_a with a deterministic small init so training can move
-        let mut k = 0x9E3779B97F4A7C15u64;
-        for (hv, spec) in state.iter_mut().zip(&entry.inputs[2..]) {
-            if spec.name.starts_with("lora.") && spec.name.ends_with("lora_a") {
-                if let HostValue::F32(shape, data) = hv {
-                    let cin = shape[0] as f32;
-                    for v in data.iter_mut() {
-                        k ^= k << 13;
-                        k ^= k >> 7;
-                        k ^= k << 17;
-                        let u = (k >> 40) as f32 / (1u64 << 24) as f32;
-                        *v = (u - 0.5) * 2.0 / cin.sqrt();
-                    }
-                }
-            }
-        }
-        Ok(TrainSession {
-            engine,
-            state,
-            steps: 0,
-            losses: Vec::new(),
-        })
+/// A named native kernel: ordered [`HostValue`] inputs → ordered outputs.
+pub type NativeKernel = Box<dyn Fn(&[HostValue]) -> Result<Vec<HostValue>> + Send + Sync>;
+
+/// Pure-Rust [`ExecBackend`]: a registry of named kernels running on the L3
+/// tensor substrate. Ships with the quantized-linear hot path built in, so
+/// the backend abstraction is exercised end-to-end without PJRT:
+///
+/// * `"matmul"` — `(A [m,k], B [k,n]) → [m,n]` f32, cache-blocked.
+/// * `"quant_linear"` — `(X [t,cin], W [cin,cout]) → [t,cout]`: per-token
+///   quantize X, per-OC quantize W, packed int8 matmul with fused dequant —
+///   the same kernel sequence `QuaffLinear` runs per step.
+pub struct NativeBackend {
+    kernels: BTreeMap<String, NativeKernel>,
+}
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        let mut b = NativeBackend {
+            kernels: BTreeMap::new(),
+        };
+        b.register("matmul", Box::new(native_matmul));
+        b.register("quant_linear", Box::new(native_quant_linear));
+        b
     }
 
-    /// One training step; returns the loss.
-    pub fn step(&mut self, tokens: &[i32], mask: &[f32]) -> Result<f64> {
-        let m = &self.engine.manifest;
-        let mut inputs = Vec::with_capacity(2 + self.state.len());
-        inputs.push(HostValue::I32(vec![m.batch, m.seq], tokens.to_vec()));
-        inputs.push(HostValue::F32(vec![m.batch, m.seq], mask.to_vec()));
-        inputs.extend(self.state.iter().cloned());
-        let outputs = self.engine.execute("train_step", &inputs)?;
-        let loss = outputs[0]
-            .as_f32()
-            .and_then(|v| v.first().copied())
-            .ok_or_else(|| anyhow!("loss missing"))? as f64;
-        // outputs: loss, t, lora…, m…, v…, scales… → state = outputs[1..]
-        self.state = outputs[1..].to_vec();
-        self.steps += 1;
-        self.losses.push(loss);
-        Ok(loss)
+    /// Register (or replace) a kernel under `name`.
+    pub fn register(&mut self, name: &str, k: NativeKernel) {
+        self.kernels.insert(name.to_string(), k);
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        NativeBackend::new()
+    }
+}
+
+impl ExecBackend for NativeBackend {
+    fn platform(&self) -> String {
+        "native-cpu".to_string()
     }
 
-    /// Evaluate: returns (loss, predictions).
-    pub fn eval(&self, tokens: &[i32], mask: &[f32]) -> Result<(f64, Vec<i32>)> {
-        let m = &self.engine.manifest;
-        let entry = self
-            .engine
-            .manifest
-            .artifacts
-            .get("eval_step")
-            .ok_or_else(|| anyhow!("no eval_step artifact"))?;
-        // eval inputs: tokens, mask, lora…, scales…
-        let n_lora = entry
-            .inputs
-            .iter()
-            .filter(|s| s.name.starts_with("lora."))
-            .count();
-        let mut inputs = Vec::new();
-        inputs.push(HostValue::I32(vec![m.batch, m.seq], tokens.to_vec()));
-        inputs.push(HostValue::F32(vec![m.batch, m.seq], mask.to_vec()));
-        // state order: t is state[0]; lora = state[1..1+n_lora]
-        inputs.extend(self.state[1..1 + n_lora].iter().cloned());
-        let n_scales = entry
-            .inputs
-            .iter()
-            .filter(|s| s.name.starts_with("scales."))
-            .count();
-        let scales_start = self.state.len() - n_scales;
-        inputs.extend(self.state[scales_start..].iter().cloned());
-        let outputs = self.engine.execute("eval_step", &inputs)?;
-        let loss = outputs[0].as_f32().and_then(|v| v.first().copied()).unwrap_or(f32::NAN) as f64;
-        let preds = outputs[1].as_i32().unwrap_or(&[]).to_vec();
-        Ok((loss, preds))
+    fn entry_points(&self) -> Vec<String> {
+        self.kernels.keys().cloned().collect()
     }
 
-    /// Current momentum scale vectors (diagnostics).
-    pub fn scales(&self) -> Vec<&HostValue> {
-        let entry = &self.engine.manifest.artifacts["train_step"];
-        entry.inputs[2..]
-            .iter()
-            .zip(&self.state)
-            .filter(|(s, _)| s.name.starts_with("scales."))
-            .map(|(_, v)| v)
-            .collect()
+    fn execute(&self, name: &str, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        let k = self
+            .kernels
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown native kernel '{name}'"))?;
+        k(inputs)
     }
+}
+
+fn native_matmul(inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+    if inputs.len() != 2 {
+        bail!("matmul expects 2 inputs, got {}", inputs.len());
+    }
+    let a = inputs[0].to_matrix().context("matmul input A")?;
+    let b = inputs[1].to_matrix().context("matmul input B")?;
+    if a.cols() != b.rows() {
+        bail!("matmul shape mismatch: {}x{} @ {}x{}", a.rows(), a.cols(), b.rows(), b.cols());
+    }
+    let mut y = Matrix::zeros(a.rows(), b.cols());
+    kernels::matmul_into(&a, &b, &mut y);
+    Ok(vec![HostValue::from_matrix(&y)])
+}
+
+fn native_quant_linear(inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+    if inputs.len() != 2 {
+        bail!("quant_linear expects 2 inputs (X, W), got {}", inputs.len());
+    }
+    let x = inputs[0].to_matrix().context("quant_linear input X")?;
+    let w = inputs[1].to_matrix().context("quant_linear input W")?;
+    if x.cols() != w.rows() {
+        bail!("quant_linear shape mismatch: X cols {} vs W rows {}", x.cols(), w.rows());
+    }
+    let mut ws = Workspace::new();
+    let qw = quant::QuantizedWeights::quantize(&w);
+    let mut x_int = ws.take_i8_matrix("native.xint", x.rows(), x.cols());
+    let mut dx = ws.take_f32("native.dx", x.rows());
+    quant::quantize_per_token_into(&x, &mut x_int, &mut dx);
+    let mut y = ws.take_matrix_zeroed("native.y", x.rows(), w.cols());
+    qw.matmul_ws(&x_int, &dx, &mut ws, y.data_mut());
+    Ok(vec![HostValue::from_matrix(&y)])
 }
 
 #[cfg(test)]
@@ -441,20 +330,71 @@ mod tests {
         };
         assert_eq!(s.numel(), 1);
     }
-}
-
-#[cfg(test)]
-mod literal_roundtrip_tests {
-    use super::*;
 
     #[test]
-    fn untyped_literal_roundtrip() {
-        let hv = HostValue::F32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
-        let lit = hv.to_literal().unwrap();
-        let back = lit.to_vec::<f32>().unwrap();
-        assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
-        let hv = HostValue::I32(vec![4], vec![7, -8, 9, 10]);
-        let lit = hv.to_literal().unwrap();
-        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7, -8, 9, 10]);
+    fn native_backend_matmul_matches_tensor_path() {
+        use crate::util::prng::Rng;
+        let mut r = Rng::new(7);
+        let a = Matrix::randn(5, 8, &mut r, 1.0);
+        let b = Matrix::randn(8, 3, &mut r, 1.0);
+        let backend = NativeBackend::new();
+        assert_eq!(backend.platform(), "native-cpu");
+        assert!(backend.entry_points().contains(&"matmul".to_string()));
+        let out = backend
+            .execute(
+                "matmul",
+                &[HostValue::from_matrix(&a), HostValue::from_matrix(&b)],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape(), &[5, 3]);
+        assert_eq!(out[0].as_f32().unwrap(), a.matmul(&b).data());
+    }
+
+    #[test]
+    fn native_backend_quant_linear_approximates_f32() {
+        use crate::quant::error_between;
+        use crate::util::prng::Rng;
+        let mut r = Rng::new(8);
+        let x = Matrix::randn(12, 32, &mut r, 1.0);
+        let w = Matrix::randn(32, 16, &mut r, 0.3);
+        let backend = NativeBackend::new();
+        let out = backend
+            .execute(
+                "quant_linear",
+                &[HostValue::from_matrix(&x), HostValue::from_matrix(&w)],
+            )
+            .unwrap();
+        let y = out[0].to_matrix().unwrap();
+        let want = x.matmul(&w);
+        let err = error_between(&want, &y);
+        assert!(err.sqnr_db > 20.0, "int8 path too lossy: {} dB", err.sqnr_db);
+    }
+
+    #[test]
+    fn native_backend_rejects_unknown_and_bad_shapes() {
+        let backend = NativeBackend::new();
+        assert!(backend.execute("nope", &[]).is_err());
+        let a = HostValue::F32(vec![2, 3], vec![0.0; 6]);
+        let b = HostValue::F32(vec![4, 2], vec![0.0; 8]);
+        assert!(backend.execute("matmul", &[a.clone(), b]).is_err());
+        assert!(backend.execute("matmul", &[a]).is_err());
+    }
+
+    #[test]
+    fn custom_kernel_registration() {
+        let mut backend = NativeBackend::new();
+        backend.register(
+            "double",
+            Box::new(|inputs: &[HostValue]| {
+                let m = inputs[0].to_matrix()?;
+                let mut d = m.clone();
+                d.scale(2.0);
+                Ok(vec![HostValue::from_matrix(&d)])
+            }),
+        );
+        let m = Matrix::from_vec(1, 2, vec![1.0, 2.0]);
+        let out = backend.execute("double", &[HostValue::from_matrix(&m)]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[2.0, 4.0]);
     }
 }

@@ -1,0 +1,293 @@
+//! PJRT backend (behind the `pjrt` cargo feature): loads the AOT-compiled
+//! HLO-text artifacts produced by `python/compile/aot.py`, compiles them
+//! once on the PJRT CPU client, and executes them from the L3 hot path.
+//!
+//! The default offline build links the API-compatible stub crate in
+//! `rust/vendor/xla` (whose client constructor returns a descriptive
+//! error); deployments with the real `xla-rs` bindings swap it via a
+//! `[patch]` entry — see `DESIGN.md` §PJRT.
+
+use super::{ArraySpec, ExecBackend, HostValue, Manifest};
+use crate::util::error::Result;
+use crate::{anyhow, bail};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+impl HostValue {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let (ty, dims, bytes): (xla::ElementType, &[usize], Vec<u8>) = match self {
+            HostValue::F32(shape, data) => (
+                xla::ElementType::F32,
+                shape,
+                data.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            ),
+            HostValue::I32(shape, data) => (
+                xla::ElementType::S32,
+                shape,
+                data.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            ),
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, dims, &bytes)
+            .map_err(|e| anyhow!("literal creation failed: {e:?}"))
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &ArraySpec) -> Result<HostValue> {
+        match spec.dtype.as_str() {
+            "float32" => Ok(HostValue::F32(
+                spec.shape.clone(),
+                lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            )),
+            "int32" => Ok(HostValue::I32(
+                spec.shape.clone(),
+                lit.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?,
+            )),
+            other => bail!("unsupported dtype in manifest: {other}"),
+        }
+    }
+}
+
+/// The engine: a PJRT CPU client plus compiled executables, keyed by
+/// artifact name.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    /// Compile seconds per artifact (diagnostics).
+    pub compile_secs: BTreeMap<String, f64>,
+}
+
+impl Engine {
+    /// Load the manifest and compile every artifact.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut executables = BTreeMap::new();
+        let mut compile_secs = BTreeMap::new();
+        for (name, entry) in &manifest.artifacts {
+            let t0 = std::time::Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(&entry.path)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", entry.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            compile_secs.insert(name.clone(), t0.elapsed().as_secs_f64());
+            executables.insert(name.clone(), exe);
+        }
+        Ok(Engine {
+            manifest,
+            client,
+            executables,
+            compile_secs,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute an artifact with ordered inputs; returns ordered outputs.
+    pub fn execute(&self, name: &str, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        let entry = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        if inputs.len() != entry.inputs.len() {
+            bail!(
+                "artifact {name}: expected {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (hv, spec) in inputs.iter().zip(&entry.inputs) {
+            if hv.shape() != spec.shape.as_slice() {
+                bail!(
+                    "artifact {name}: input '{}' shape {:?} != manifest {:?}",
+                    spec.name,
+                    hv.shape(),
+                    spec.shape
+                );
+            }
+        }
+        let exe = &self.executables[name];
+        let literals = inputs
+            .iter()
+            .map(HostValue::to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: one tuple of N outputs
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        if parts.len() != entry.outputs.len() {
+            bail!(
+                "artifact {name}: expected {} outputs, got {}",
+                entry.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&entry.outputs)
+            .map(|(lit, spec)| HostValue::from_literal(lit, spec))
+            .collect()
+    }
+}
+
+impl ExecBackend for Engine {
+    fn platform(&self) -> String {
+        Engine::platform(self)
+    }
+
+    fn entry_points(&self) -> Vec<String> {
+        self.manifest.artifacts.keys().cloned().collect()
+    }
+
+    fn execute(&self, name: &str, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        Engine::execute(self, name, inputs)
+    }
+}
+
+/// Threads fine-tuning state across `train_step` executions.
+///
+/// Input order (from `aot.py`): `tokens, mask, t, lora…, m…, v…, scales…`.
+/// Output order: `loss, t, lora…, m…, v…, scales…`.
+pub struct TrainSession<'e> {
+    engine: &'e Engine,
+    /// Persistent state: everything after (tokens, mask) in input order.
+    state: Vec<HostValue>,
+    pub steps: u64,
+    pub losses: Vec<f64>,
+}
+
+impl<'e> TrainSession<'e> {
+    /// Initialize state from the manifest specs (zeros — matching aot.py's
+    /// zero-initialized Adam moments and LoRA-B, ones for scales).
+    pub fn new(engine: &'e Engine) -> Result<TrainSession<'e>> {
+        let entry = engine
+            .manifest
+            .artifacts
+            .get("train_step")
+            .ok_or_else(|| anyhow!("no train_step artifact"))?;
+        let mut state = Vec::new();
+        for spec in &entry.inputs[2..] {
+            let n = spec.numel();
+            let hv = match spec.name.as_str() {
+                s if s.starts_with("scales.") => HostValue::F32(spec.shape.clone(), vec![1.0; n]),
+                s if s.starts_with("lora.") && s.ends_with("lora_a") => {
+                    // Gaussian init matching aot.py's seed is impossible from
+                    // here; instead load from the artifact goldens if needed.
+                    // Zero init for A is also valid (B is zero ⇒ ΔY = 0).
+                    HostValue::F32(spec.shape.clone(), vec![0.0; n])
+                }
+                _ => HostValue::F32(spec.shape.clone(), vec![0.0; n]),
+            };
+            state.push(hv);
+        }
+        // seed lora_a with a deterministic small init so training can move
+        let mut k = 0x9E3779B97F4A7C15u64;
+        for (hv, spec) in state.iter_mut().zip(&entry.inputs[2..]) {
+            if spec.name.starts_with("lora.") && spec.name.ends_with("lora_a") {
+                if let HostValue::F32(shape, data) = hv {
+                    let cin = shape[0] as f32;
+                    for v in data.iter_mut() {
+                        k ^= k << 13;
+                        k ^= k >> 7;
+                        k ^= k << 17;
+                        let u = (k >> 40) as f32 / (1u64 << 24) as f32;
+                        *v = (u - 0.5) * 2.0 / cin.sqrt();
+                    }
+                }
+            }
+        }
+        Ok(TrainSession {
+            engine,
+            state,
+            steps: 0,
+            losses: Vec::new(),
+        })
+    }
+
+    /// One training step; returns the loss.
+    pub fn step(&mut self, tokens: &[i32], mask: &[f32]) -> Result<f64> {
+        let m = &self.engine.manifest;
+        let mut inputs = Vec::with_capacity(2 + self.state.len());
+        inputs.push(HostValue::I32(vec![m.batch, m.seq], tokens.to_vec()));
+        inputs.push(HostValue::F32(vec![m.batch, m.seq], mask.to_vec()));
+        inputs.extend(self.state.iter().cloned());
+        let outputs = self.engine.execute("train_step", &inputs)?;
+        let loss = outputs[0]
+            .as_f32()
+            .and_then(|v| v.first().copied())
+            .ok_or_else(|| anyhow!("loss missing"))? as f64;
+        // outputs: loss, t, lora…, m…, v…, scales… → state = outputs[1..]
+        self.state = outputs[1..].to_vec();
+        self.steps += 1;
+        self.losses.push(loss);
+        Ok(loss)
+    }
+
+    /// Evaluate: returns (loss, predictions).
+    pub fn eval(&self, tokens: &[i32], mask: &[f32]) -> Result<(f64, Vec<i32>)> {
+        let m = &self.engine.manifest;
+        let entry = self
+            .engine
+            .manifest
+            .artifacts
+            .get("eval_step")
+            .ok_or_else(|| anyhow!("no eval_step artifact"))?;
+        // eval inputs: tokens, mask, lora…, scales…
+        let n_lora = entry
+            .inputs
+            .iter()
+            .filter(|s| s.name.starts_with("lora."))
+            .count();
+        let mut inputs = Vec::new();
+        inputs.push(HostValue::I32(vec![m.batch, m.seq], tokens.to_vec()));
+        inputs.push(HostValue::F32(vec![m.batch, m.seq], mask.to_vec()));
+        // state order: t is state[0]; lora = state[1..1+n_lora]
+        inputs.extend(self.state[1..1 + n_lora].iter().cloned());
+        let n_scales = entry
+            .inputs
+            .iter()
+            .filter(|s| s.name.starts_with("scales."))
+            .count();
+        let scales_start = self.state.len() - n_scales;
+        inputs.extend(self.state[scales_start..].iter().cloned());
+        let outputs = self.engine.execute("eval_step", &inputs)?;
+        let loss = outputs[0].as_f32().and_then(|v| v.first().copied()).unwrap_or(f32::NAN) as f64;
+        let preds = outputs[1].as_i32().unwrap_or(&[]).to_vec();
+        Ok((loss, preds))
+    }
+
+    /// Current momentum scale vectors (diagnostics).
+    pub fn scales(&self) -> Vec<&HostValue> {
+        let entry = &self.engine.manifest.artifacts["train_step"];
+        entry.inputs[2..]
+            .iter()
+            .zip(&self.state)
+            .filter(|(s, _)| s.name.starts_with("scales."))
+            .map(|(_, v)| v)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod literal_roundtrip_tests {
+    use super::*;
+
+    #[test]
+    fn untyped_literal_roundtrip() {
+        let hv = HostValue::F32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = hv.to_literal().unwrap();
+        let back = lit.to_vec::<f32>().unwrap();
+        assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let hv = HostValue::I32(vec![4], vec![7, -8, 9, 10]);
+        let lit = hv.to_literal().unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7, -8, 9, 10]);
+    }
+}

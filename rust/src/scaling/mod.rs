@@ -110,15 +110,22 @@ pub fn build_outlier_correction(w: &Matrix, outliers: &OutlierSet, s_o: &[f32]) 
 /// Same as [`build_outlier_correction`] but starting from an already-sliced
 /// `W_O` (|O| × c_out) — the representation Quaff actually stores.
 pub fn build_outlier_correction_from_slice(w_o: &Matrix, s_o: &[f32]) -> Matrix {
+    let mut w_hat = Matrix::zeros(w_o.rows(), w_o.cols());
+    build_outlier_correction_from_slice_into(w_o, s_o, &mut w_hat);
+    w_hat
+}
+
+/// [`build_outlier_correction_from_slice`] into a caller-provided matrix
+/// (fully overwritten) — the per-step `ŵ` build on Quaff's hot path.
+pub fn build_outlier_correction_from_slice_into(w_o: &Matrix, s_o: &[f32], out: &mut Matrix) {
     assert_eq!(w_o.rows(), s_o.len());
-    let mut w_hat = w_o.clone();
+    assert_eq!((out.rows(), out.cols()), (w_o.rows(), w_o.cols()));
     for (k, &s) in s_o.iter().enumerate() {
         let factor = s - 1.0;
-        for v in w_hat.row_mut(k) {
-            *v *= factor;
+        for (o, &v) in out.row_mut(k).iter_mut().zip(w_o.row(k)) {
+            *o = v * factor;
         }
     }
-    w_hat
 }
 
 /// Apply `X̂ = X·s^{-1}` **only on outlier columns** (targeted scaling):

@@ -25,10 +25,13 @@ impl I8Matrix {
         I8Matrix { rows, cols, data }
     }
 
-    /// Uniform random int8 values (tests/benches).
+    /// Uniform random int8 values in the symmetric range `[-127, 127]`
+    /// (tests/benches). `below(255)` draws from `[0, 254]`, so the shift
+    /// never leaves the i8 range — the old `u64 as i64 % 255` form could go
+    /// negative before the modulo and wrap through `as i8`.
     pub fn random(rows: usize, cols: usize, rng: &mut Rng) -> I8Matrix {
         let data = (0..rows * cols)
-            .map(|_| (rng.next_u64() as i64 % 255 - 127) as i8)
+            .map(|_| (rng.below(255) as i64 - 127) as i8)
             .collect();
         I8Matrix { rows, cols, data }
     }
@@ -54,8 +57,22 @@ impl I8Matrix {
     }
 
     #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [i8] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
     pub fn data(&self) -> &[i8] {
         &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [i8] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<i8> {
+        self.data
     }
 
     /// Bytes of storage (exactly rows*cols — the memory win vs f32).
@@ -113,13 +130,28 @@ impl I8Matrix {
         col_scale: &[f32],
         out: &mut [f32],
     ) {
+        let mut a16 = Vec::new();
+        self.matmul_dequant_packed_scratch_into(packed, row_scale, col_scale, &mut a16, out);
+    }
+
+    /// [`Self::matmul_dequant_packed_into`] with the i16 activation-widening
+    /// scratch provided by the caller (resized as needed) — the
+    /// workspace-backed hot path uses this to stay allocation-free.
+    pub fn matmul_dequant_packed_scratch_into(
+        &self,
+        packed: &PackedWeights,
+        row_scale: &[f32],
+        col_scale: &[f32],
+        a16: &mut Vec<i16>,
+        out: &mut [f32],
+    ) {
         let (m, k) = (self.rows, self.cols);
         let n = packed.n;
         assert_eq!(packed.k, k, "matmul dim mismatch");
         assert_eq!(row_scale.len(), m);
         assert_eq!(col_scale.len(), n);
         assert_eq!(out.len(), m * n);
-        let mut a16 = vec![0i16; k];
+        a16.resize(k, 0);
         for i in 0..m {
             let arow = &self.data[i * k..(i + 1) * k];
             for (dst, &v) in a16.iter_mut().zip(arow) {
@@ -151,12 +183,26 @@ impl I8Matrix {
         col_scale: &[f32],
         out: &mut [f32],
     ) {
+        let mut acc = Vec::new();
+        self.matmul_dequant_scratch_into(other, row_scale, col_scale, &mut acc, out);
+    }
+
+    /// [`Self::matmul_dequant_into`] with the i32 accumulator row provided
+    /// by the caller (resized as needed) — allocation-free on reuse.
+    pub fn matmul_dequant_scratch_into(
+        &self,
+        other: &I8Matrix,
+        row_scale: &[f32],
+        col_scale: &[f32],
+        acc: &mut Vec<i32>,
+        out: &mut [f32],
+    ) {
         assert_eq!(self.cols, other.rows, "matmul dim mismatch");
         let (m, k, n) = (self.rows, self.cols, other.cols);
         assert_eq!(row_scale.len(), m);
         assert_eq!(col_scale.len(), n);
         assert_eq!(out.len(), m * n);
-        let mut acc = vec![0i32; n];
+        acc.resize(n, 0);
         for i in 0..m {
             acc.fill(0);
             let arow = &self.data[i * k..(i + 1) * k];
@@ -172,7 +218,7 @@ impl I8Matrix {
             }
             let rs = row_scale[i];
             let orow = &mut out[i * n..(i + 1) * n];
-            for ((o, &a), &cs) in orow.iter_mut().zip(&acc).zip(col_scale) {
+            for ((o, &a), &cs) in orow.iter_mut().zip(acc.iter()).zip(col_scale) {
                 *o += rs * a as f32 * cs;
             }
         }

@@ -1,0 +1,182 @@
+//! `_into` compute kernels: the matmul / transpose / gather loops, written
+//! once, targeting caller-provided output buffers.
+//!
+//! These are the single source of truth for the hot loops — the allocating
+//! convenience methods on [`Matrix`] delegate here, and the workspace-backed
+//! execution path calls them directly with pooled buffers, so both paths
+//! are bit-identical by construction (asserted by `tests/workspace_kernels`).
+//!
+//! All kernels **overwrite** `out` completely; none of them read its prior
+//! contents, so dirty recycled buffers are safe inputs.
+
+use super::{I8Matrix, Matrix, BLOCK_J, BLOCK_K};
+
+/// Transpose tile edge: 32×32 f32 tiles = 4 KiB read + 4 KiB write, which
+/// keeps both the row-major reads and the column-major writes inside L1.
+const TRANSPOSE_TILE: usize = 32;
+
+/// `out = a @ b` — cache-blocked i-k-j kernel (LLVM vectorizes the j loop).
+pub fn matmul_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    assert_eq!(a.cols(), b.rows(), "matmul dim mismatch");
+    assert_eq!(
+        (out.rows(), out.cols()),
+        (a.rows(), b.cols()),
+        "matmul out shape mismatch"
+    );
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let ad = a.data();
+    let bd = b.data();
+    let od = out.data_mut();
+    od.fill(0.0);
+    for kb in (0..k).step_by(BLOCK_K) {
+        let kend = (kb + BLOCK_K).min(k);
+        for jb in (0..n).step_by(BLOCK_J) {
+            let jend = (jb + BLOCK_J).min(n);
+            for i in 0..m {
+                let arow = &ad[i * k..(i + 1) * k];
+                let orow = &mut od[i * n + jb..i * n + jend];
+                for kk in kb..kend {
+                    let av = arow[kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &bd[kk * n + jb..kk * n + jend];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `out = a @ b.T` — the backward-pass shape `dX = dY @ W.T`.
+/// Reads both operands row-wise, so no transpose materialization.
+pub fn matmul_bt_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    assert_eq!(a.cols(), b.cols(), "matmul_bt dim mismatch");
+    assert_eq!(
+        (out.rows(), out.cols()),
+        (a.rows(), b.rows()),
+        "matmul_bt out shape mismatch"
+    );
+    let (m, k, n) = (a.rows(), a.cols(), b.rows());
+    let ad = a.data();
+    let bd = b.data();
+    let od = out.data_mut();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        let orow = &mut od[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &bd[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            orow[j] = acc;
+        }
+    }
+}
+
+/// `out = a.T @ b` — the gradient-accumulation shape `dW = X.T @ dY`.
+pub fn matmul_at_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    assert_eq!(a.rows(), b.rows(), "matmul_at dim mismatch");
+    assert_eq!(
+        (out.rows(), out.cols()),
+        (a.cols(), b.cols()),
+        "matmul_at out shape mismatch"
+    );
+    let (k, m, n) = (a.rows(), a.cols(), b.cols());
+    let ad = a.data();
+    let bd = b.data();
+    let od = out.data_mut();
+    od.fill(0.0);
+    for t in 0..k {
+        let arow = &ad[t * m..(t + 1) * m];
+        let brow = &bd[t * n..(t + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut od[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `out = src.T` — cache-blocked transpose. The naive get/set loop strides
+/// the output by `rows` every element, missing cache on every write for
+/// large matrices; tiling keeps both streams resident (it sits on the
+/// gradient path, so this matters every step).
+pub fn transpose_into(src: &Matrix, out: &mut Matrix) {
+    assert_eq!(
+        (out.rows(), out.cols()),
+        (src.cols(), src.rows()),
+        "transpose out shape mismatch"
+    );
+    let (r, c) = (src.rows(), src.cols());
+    let sd = src.data();
+    let od = out.data_mut();
+    for ib in (0..r).step_by(TRANSPOSE_TILE) {
+        let iend = (ib + TRANSPOSE_TILE).min(r);
+        for jb in (0..c).step_by(TRANSPOSE_TILE) {
+            let jend = (jb + TRANSPOSE_TILE).min(c);
+            for i in ib..iend {
+                let srow = &sd[i * c..(i + 1) * c];
+                for j in jb..jend {
+                    od[j * r + i] = srow[j];
+                }
+            }
+        }
+    }
+}
+
+/// Per-column absolute maxima into `out` (length `src.cols()`, fully
+/// overwritten) — the channel statistic the whole paper is built on,
+/// shared by `Matrix::col_abs_max`, LLM.int8's detector, and the per-OC
+/// quantizer so the reduction exists exactly once.
+pub fn col_abs_max_into(src: &Matrix, out: &mut [f32]) {
+    assert_eq!(out.len(), src.cols(), "col_abs_max out length mismatch");
+    out.fill(0.0);
+    for i in 0..src.rows() {
+        for (m, &v) in out.iter_mut().zip(src.row(i)) {
+            let a = v.abs();
+            if a > *m {
+                *m = a;
+            }
+        }
+    }
+}
+
+/// Gather columns `idx` of `src` into `out` (`rows × idx.len()`).
+pub fn select_cols_into(src: &Matrix, idx: &[usize], out: &mut Matrix) {
+    assert_eq!(
+        (out.rows(), out.cols()),
+        (src.rows(), idx.len()),
+        "select_cols out shape mismatch"
+    );
+    for i in 0..src.rows() {
+        let row = src.row(i);
+        let orow = out.row_mut(i);
+        for (o, &j) in orow.iter_mut().zip(idx) {
+            *o = row[j];
+        }
+    }
+}
+
+/// Gather columns `idx` of an i8 matrix (`x̂_int = [X̂_int]_{:,O}`).
+pub fn select_cols_i8_into(src: &I8Matrix, idx: &[usize], out: &mut I8Matrix) {
+    assert_eq!(
+        (out.rows(), out.cols()),
+        (src.rows(), idx.len()),
+        "select_cols_i8 out shape mismatch"
+    );
+    for i in 0..src.rows() {
+        let row = src.row(i);
+        let orow = out.row_mut(i);
+        for (o, &j) in orow.iter_mut().zip(idx) {
+            *o = row[j];
+        }
+    }
+}

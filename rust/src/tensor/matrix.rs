@@ -1,6 +1,11 @@
 //! Row-major f32 matrix with the ops the transformer + quantizers need.
+//!
+//! The hot loops (matmul family, transpose) live in [`super::kernels`] as
+//! `_into` kernels; the allocating methods here are thin wrappers so both
+//! the convenience API and the workspace-backed path share one
+//! implementation.
 
-use super::{BLOCK_J, BLOCK_K};
+use super::kernels;
 use crate::util::prng::Rng;
 
 /// Dense row-major f32 matrix.
@@ -77,81 +82,30 @@ impl Matrix {
 
     /// `self @ other` — cache-blocked i-k-j kernel (LLVM vectorizes the j loop).
     pub fn matmul(&self, other: &Matrix) -> Matrix {
-        assert_eq!(self.cols, other.rows, "matmul dim mismatch");
-        let (m, k, n) = (self.rows, self.cols, other.cols);
-        let mut out = vec![0.0f32; m * n];
-        for kb in (0..k).step_by(BLOCK_K) {
-            let kend = (kb + BLOCK_K).min(k);
-            for jb in (0..n).step_by(BLOCK_J) {
-                let jend = (jb + BLOCK_J).min(n);
-                for i in 0..m {
-                    let arow = &self.data[i * k..(i + 1) * k];
-                    let orow = &mut out[i * n + jb..i * n + jend];
-                    for kk in kb..kend {
-                        let a = arow[kk];
-                        if a == 0.0 {
-                            continue;
-                        }
-                        let brow = &other.data[kk * n + jb..kk * n + jend];
-                        for (o, &b) in orow.iter_mut().zip(brow) {
-                            *o += a * b;
-                        }
-                    }
-                }
-            }
-        }
-        Matrix::from_vec(m, n, out)
+        let mut out = Matrix::zeros(self.rows, other.cols());
+        kernels::matmul_into(self, other, &mut out);
+        out
     }
 
     /// `self @ other.T` — the backward-pass shape `dX = dY @ W.T`.
     /// Reads both operands row-wise, so no transpose materialization.
     pub fn matmul_bt(&self, other: &Matrix) -> Matrix {
-        assert_eq!(self.cols, other.cols, "matmul_bt dim mismatch");
-        let (m, k, n) = (self.rows, self.cols, other.rows);
-        let mut out = vec![0.0f32; m * n];
-        for i in 0..m {
-            let arow = &self.data[i * k..(i + 1) * k];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for j in 0..n {
-                let brow = &other.data[j * k..(j + 1) * k];
-                let mut acc = 0.0f32;
-                for (&a, &b) in arow.iter().zip(brow) {
-                    acc += a * b;
-                }
-                orow[j] = acc;
-            }
-        }
-        Matrix::from_vec(m, n, out)
+        let mut out = Matrix::zeros(self.rows, other.rows());
+        kernels::matmul_bt_into(self, other, &mut out);
+        out
     }
 
     /// `self.T @ other` — the gradient-accumulation shape `dW = X.T @ dY`.
     pub fn matmul_at(&self, other: &Matrix) -> Matrix {
-        assert_eq!(self.rows, other.rows, "matmul_at dim mismatch");
-        let (k, m, n) = (self.rows, self.cols, other.cols);
-        let mut out = vec![0.0f32; m * n];
-        for t in 0..k {
-            let arow = &self.data[t * m..(t + 1) * m];
-            let brow = &other.data[t * n..(t + 1) * n];
-            for (i, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let orow = &mut out[i * n..(i + 1) * n];
-                for (o, &b) in orow.iter_mut().zip(brow) {
-                    *o += a * b;
-                }
-            }
-        }
-        Matrix::from_vec(m, n, out)
+        let mut out = Matrix::zeros(self.cols, other.cols());
+        kernels::matmul_at_into(self, other, &mut out);
+        out
     }
 
+    /// Cache-blocked transpose (see [`kernels::transpose_into`]).
     pub fn transpose(&self) -> Matrix {
         let mut out = Matrix::zeros(self.cols, self.rows);
-        for i in 0..self.rows {
-            for j in 0..self.cols {
-                out.set(j, i, self.get(i, j));
-            }
-        }
+        kernels::transpose_into(self, &mut out);
         out
     }
 
@@ -204,15 +158,7 @@ impl Matrix {
     /// paper is built on (`max(|X_:,i|)`).
     pub fn col_abs_max(&self) -> Vec<f32> {
         let mut out = vec![0.0f32; self.cols];
-        for i in 0..self.rows {
-            let row = self.row(i);
-            for (m, &x) in out.iter_mut().zip(row) {
-                let a = x.abs();
-                if a > *m {
-                    *m = a;
-                }
-            }
-        }
+        kernels::col_abs_max_into(self, &mut out);
         out
     }
 
@@ -231,13 +177,7 @@ impl Matrix {
     /// Gather columns `idx` into a new `(rows × idx.len())` matrix.
     pub fn select_cols(&self, idx: &[usize]) -> Matrix {
         let mut out = Matrix::zeros(self.rows, idx.len());
-        for i in 0..self.rows {
-            let row = self.row(i);
-            let orow = out.row_mut(i);
-            for (o, &j) in orow.iter_mut().zip(idx) {
-                *o = row[j];
-            }
-        }
+        kernels::select_cols_into(self, idx, &mut out);
         out
     }
 

@@ -8,14 +8,23 @@
 //!
 //! Everything is single-threaded (the benchmark host has one core) but
 //! cache-blocked and written so LLVM auto-vectorizes the inner loops.
+//!
+//! The execution-engine layer lives here too: [`kernels`] holds the `_into`
+//! variants of every hot loop (they write into caller-provided buffers) and
+//! [`Workspace`] is the keyed, grow-only scratch arena those buffers come
+//! from, so the fine-tuning hot path stops allocating at steady state.
+//! See `DESIGN.md` §Execution engine.
 
 mod i8mat;
+pub mod kernels;
 mod matrix;
+mod workspace;
 
 pub use i8mat::{I8Matrix, PackedWeights};
 pub use matrix::Matrix;
+pub use workspace::Workspace;
 
-/// Matmul kernel block sizes (tuned in the §Perf pass; see EXPERIMENTS.md).
+/// Matmul kernel block sizes (tuned by the `bench_blocks` sweep).
 pub(crate) const BLOCK_K: usize = 64;
 pub(crate) const BLOCK_J: usize = 256;
 

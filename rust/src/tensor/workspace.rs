@@ -1,0 +1,305 @@
+//! Reusable scratch arena for the execution hot path.
+//!
+//! Every matmul / quantize / dequantize on the fine-tuning hot path needs
+//! transient buffers. Allocating them per call is what the §Perf profile
+//! shows as steady-state churn; the [`Workspace`] keeps them alive across
+//! steps instead:
+//!
+//! * buffers are **keyed** by a `&'static str` so each call site gets a
+//!   stable buffer back (`take_*` removes it from the arena, `put_*`
+//!   returns it — plain moves, no RefCell, no borrow gymnastics);
+//! * buffers are **grow-only**: a take that needs more capacity than the
+//!   pooled buffer reallocates once, after which the larger buffer stays;
+//! * outputs handed to a caller come back via [`Workspace::recycle`] into a
+//!   shared donor pool that keyed takes fall back on (best capacity fit),
+//!   so a consumer never needs to know the producer's key.
+//!
+//! After a warm-up step with fixed shapes, every take is served from the
+//! arena: the hot path performs **zero heap allocations** at steady state
+//! (`fresh_allocs` stops moving — asserted by `tests/zero_alloc.rs` with a
+//! counting global allocator).
+
+use super::{I8Matrix, Matrix};
+
+/// Key under which [`Workspace::recycle`] parks donated buffers.
+const RECYCLED: &str = "__recycled";
+
+/// Donor-pool saturation bound. The transformer layers donate more buffers
+/// per step than keyed takes consume (LayerNorm/injection/attention outputs
+/// are recycled too), so an uncapped pool would grow without bound across a
+/// long run. Beyond this many parked donors, further donations are simply
+/// dropped — takes still find a donor (the working set is far smaller than
+/// the cap), so the steady-state zero-allocation property is unaffected.
+const MAX_DONORS: usize = 64;
+
+/// Keyed, grow-only scratch arena. See the module docs.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    f32s: Vec<(&'static str, Vec<f32>)>,
+    i8s: Vec<(&'static str, Vec<i8>)>,
+    i16s: Vec<(&'static str, Vec<i16>)>,
+    i32s: Vec<(&'static str, Vec<i32>)>,
+    idxs: Vec<(&'static str, Vec<usize>)>,
+    /// Buffers that had to be freshly allocated (or regrown). Stops
+    /// increasing once the arena is warm — the zero-alloc invariant.
+    pub fresh_allocs: u64,
+    /// Takes served entirely from pooled capacity.
+    pub reuses: u64,
+}
+
+/// Take a buffer from `pool`: exact key match first, then the best-fitting
+/// donor from the recycled pool, else a fresh allocation. The returned
+/// buffer has length `len` and **unspecified contents** — callers that
+/// accumulate must `fill` it themselves.
+fn take_from<T: Clone + Default>(
+    pool: &mut Vec<(&'static str, Vec<T>)>,
+    fresh: &mut u64,
+    reuses: &mut u64,
+    key: &'static str,
+    len: usize,
+) -> Vec<T> {
+    let pos = pool.iter().position(|(k, _)| *k == key).or_else(|| {
+        // Best-fit donor: smallest recycled buffer whose capacity suffices,
+        // else the largest recycled one (it will grow once and then stick).
+        let mut best_fit: Option<usize> = None;
+        let mut largest: Option<usize> = None;
+        for (i, (k, v)) in pool.iter().enumerate() {
+            if *k != RECYCLED {
+                continue;
+            }
+            let cap = v.capacity();
+            if cap >= len && best_fit.map_or(true, |b| cap < pool[b].1.capacity()) {
+                best_fit = Some(i);
+            }
+            if largest.map_or(true, |l| cap > pool[l].1.capacity()) {
+                largest = Some(i);
+            }
+        }
+        best_fit.or(largest)
+    });
+    match pos {
+        Some(i) => {
+            let (_, mut v) = pool.swap_remove(i);
+            if v.capacity() >= len {
+                *reuses += 1;
+            } else {
+                *fresh += 1;
+            }
+            v.resize(len, T::default());
+            v
+        }
+        None => {
+            *fresh += 1;
+            vec![T::default(); len]
+        }
+    }
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// f32 scratch of length `len`, contents unspecified.
+    pub fn take_f32(&mut self, key: &'static str, len: usize) -> Vec<f32> {
+        take_from(&mut self.f32s, &mut self.fresh_allocs, &mut self.reuses, key, len)
+    }
+
+    pub fn put_f32(&mut self, key: &'static str, v: Vec<f32>) {
+        self.f32s.push((key, v));
+    }
+
+    pub fn take_i8(&mut self, key: &'static str, len: usize) -> Vec<i8> {
+        take_from(&mut self.i8s, &mut self.fresh_allocs, &mut self.reuses, key, len)
+    }
+
+    pub fn put_i8(&mut self, key: &'static str, v: Vec<i8>) {
+        self.i8s.push((key, v));
+    }
+
+    pub fn take_i16(&mut self, key: &'static str, len: usize) -> Vec<i16> {
+        take_from(&mut self.i16s, &mut self.fresh_allocs, &mut self.reuses, key, len)
+    }
+
+    pub fn put_i16(&mut self, key: &'static str, v: Vec<i16>) {
+        self.i16s.push((key, v));
+    }
+
+    pub fn take_i32(&mut self, key: &'static str, len: usize) -> Vec<i32> {
+        take_from(&mut self.i32s, &mut self.fresh_allocs, &mut self.reuses, key, len)
+    }
+
+    pub fn put_i32(&mut self, key: &'static str, v: Vec<i32>) {
+        self.i32s.push((key, v));
+    }
+
+    /// Cleared index scratch (length 0; push into it).
+    pub fn take_idx(&mut self, key: &'static str) -> Vec<usize> {
+        let mut v = take_from(&mut self.idxs, &mut self.fresh_allocs, &mut self.reuses, key, 0);
+        v.clear();
+        v
+    }
+
+    pub fn put_idx(&mut self, key: &'static str, v: Vec<usize>) {
+        self.idxs.push((key, v));
+    }
+
+    /// `rows × cols` matrix, contents unspecified.
+    pub fn take_matrix(&mut self, key: &'static str, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_vec(rows, cols, self.take_f32(key, rows * cols))
+    }
+
+    /// `rows × cols` matrix, zero-filled.
+    pub fn take_matrix_zeroed(&mut self, key: &'static str, rows: usize, cols: usize) -> Matrix {
+        let mut m = self.take_matrix(key, rows, cols);
+        m.data_mut().fill(0.0);
+        m
+    }
+
+    pub fn put_matrix(&mut self, key: &'static str, m: Matrix) {
+        self.put_f32(key, m.into_vec());
+    }
+
+    pub fn take_i8_matrix(&mut self, key: &'static str, rows: usize, cols: usize) -> I8Matrix {
+        I8Matrix::from_vec(rows, cols, self.take_i8(key, rows * cols))
+    }
+
+    pub fn put_i8_matrix(&mut self, key: &'static str, m: I8Matrix) {
+        self.put_i8(key, m.into_vec());
+    }
+
+    /// Donate a matrix whose producer key the caller does not know; keyed
+    /// takes fall back on these donors. Donations beyond [`MAX_DONORS`]
+    /// parked entries are dropped (see the constant's docs).
+    pub fn recycle(&mut self, m: Matrix) {
+        self.recycle_f32(m.into_vec());
+    }
+
+    pub fn recycle_f32(&mut self, v: Vec<f32>) {
+        if self.f32s.iter().filter(|(k, _)| *k == RECYCLED).count() < MAX_DONORS {
+            self.put_f32(RECYCLED, v);
+        }
+    }
+
+    /// Number of buffers currently parked in the arena (all types).
+    pub fn pooled(&self) -> usize {
+        self.f32s.len() + self.i8s.len() + self.i16s.len() + self.i32s.len() + self.idxs.len()
+    }
+
+    /// Total bytes of pooled capacity (diagnostics).
+    pub fn pooled_bytes(&self) -> usize {
+        self.f32s.iter().map(|(_, v)| v.capacity() * 4).sum::<usize>()
+            + self.i8s.iter().map(|(_, v)| v.capacity()).sum::<usize>()
+            + self.i16s.iter().map(|(_, v)| v.capacity() * 2).sum::<usize>()
+            + self.i32s.iter().map(|(_, v)| v.capacity() * 4).sum::<usize>()
+            + self.idxs.iter().map(|(_, v)| v.capacity() * 8).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keyed_take_put_reuses_capacity() {
+        let mut ws = Workspace::new();
+        let v = ws.take_f32("a", 100);
+        assert_eq!(v.len(), 100);
+        assert_eq!(ws.fresh_allocs, 1);
+        ws.put_f32("a", v);
+        let v = ws.take_f32("a", 64);
+        assert_eq!(v.len(), 64);
+        assert_eq!(ws.fresh_allocs, 1, "shrinking take must reuse");
+        assert_eq!(ws.reuses, 1);
+        ws.put_f32("a", v);
+    }
+
+    #[test]
+    fn grow_only_realloc_counted_once() {
+        let mut ws = Workspace::new();
+        let v = ws.take_f32("a", 10);
+        ws.put_f32("a", v);
+        let v = ws.take_f32("a", 1000);
+        assert_eq!(v.len(), 1000);
+        assert_eq!(ws.fresh_allocs, 2);
+        ws.put_f32("a", v);
+        let v = ws.take_f32("a", 1000);
+        assert_eq!(ws.fresh_allocs, 2, "second large take must reuse");
+        ws.put_f32("a", v);
+    }
+
+    #[test]
+    fn recycled_donor_serves_unknown_keys() {
+        let mut ws = Workspace::new();
+        let m = ws.take_matrix("producer", 8, 8);
+        ws.recycle(m);
+        let _ = ws.take_matrix("consumer", 8, 8);
+        assert_eq!(ws.fresh_allocs, 1, "donor pool should serve the miss");
+        assert_eq!(ws.reuses, 1);
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient_donor() {
+        let mut ws = Workspace::new();
+        let big = ws.take_f32("b", 1000);
+        let small = ws.take_f32("s", 10);
+        ws.recycle_f32(big);
+        ws.recycle_f32(small);
+        let v = ws.take_f32("x", 10);
+        assert!(v.capacity() < 1000, "should pick the small donor");
+        ws.recycle_f32(v);
+    }
+
+    #[test]
+    fn i8_matrix_roundtrip() {
+        let mut ws = Workspace::new();
+        let m = ws.take_i8_matrix("q", 4, 4);
+        assert_eq!((m.rows(), m.cols()), (4, 4));
+        ws.put_i8_matrix("q", m);
+        let _ = ws.take_i8_matrix("q", 4, 4);
+        assert_eq!(ws.fresh_allocs, 1);
+    }
+
+    #[test]
+    fn donor_pool_is_bounded() {
+        let mut ws = Workspace::new();
+        for _ in 0..(MAX_DONORS * 3) {
+            ws.recycle(Matrix::zeros(4, 4));
+        }
+        assert!(ws.pooled() <= MAX_DONORS, "donor pool grew past the cap");
+        // keyed entries are unaffected by the cap
+        let v = ws.take_f32("keyed", 8);
+        ws.put_f32("keyed", v);
+        assert!(ws.pooled() <= MAX_DONORS + 1);
+    }
+
+    #[test]
+    fn idx_take_is_cleared() {
+        let mut ws = Workspace::new();
+        let mut v = ws.take_idx("i");
+        v.extend([1usize, 2, 3]);
+        ws.put_idx("i", v);
+        let v = ws.take_idx("i");
+        assert!(v.is_empty());
+        ws.put_idx("i", v);
+    }
+
+    #[test]
+    fn steady_state_is_alloc_free() {
+        let mut ws = Workspace::new();
+        for _ in 0..3 {
+            let a = ws.take_matrix("a", 16, 16);
+            let b = ws.take_i8_matrix("b", 16, 16);
+            ws.put_matrix("a", a);
+            ws.put_i8_matrix("b", b);
+        }
+        let frozen = ws.fresh_allocs;
+        for _ in 0..10 {
+            let a = ws.take_matrix("a", 16, 16);
+            let b = ws.take_i8_matrix("b", 16, 16);
+            ws.put_matrix("a", a);
+            ws.put_i8_matrix("b", b);
+        }
+        assert_eq!(ws.fresh_allocs, frozen);
+    }
+}

@@ -8,7 +8,7 @@ pub mod eval;
 use crate::data::{pack_batch, Sample};
 use crate::model::param::Param;
 use crate::model::{Model, ModelCache};
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, Workspace};
 use std::collections::BTreeMap;
 use std::time::Instant;
 
@@ -134,12 +134,15 @@ pub struct StepStats {
 }
 
 /// The fine-tuning driver: micro-batches with gradient accumulation, outlier
-/// drift ticks, and per-step latency measurement.
+/// drift ticks, and per-step latency measurement. Owns the scratch
+/// [`Workspace`] threaded through every forward/backward, so buffers are
+/// reused across the whole run rather than reallocated per step.
 pub struct Trainer {
     pub opt: Adam,
     pub max_len: usize,
     pub grad_accum: usize,
     pub step_count: u64,
+    pub ws: Workspace,
 }
 
 impl Trainer {
@@ -149,6 +152,7 @@ impl Trainer {
             max_len,
             grad_accum,
             step_count: 0,
+            ws: Workspace::new(),
         }
     }
 
@@ -160,9 +164,11 @@ impl Trainer {
         for mb in micro_batches {
             let (toks, masks) = pack_batch(mb, self.max_len);
             tokens += toks.len() * toks[0].len();
-            let (logits, cache) = model.forward(&toks, true);
+            let (logits, cache) = model.forward_with(&toks, true, &mut self.ws);
             let (loss, dlogits) = cross_entropy(&logits, &toks, &masks, &cache);
-            model.backward(&dlogits, &cache);
+            model.backward_with(&dlogits, &cache, &mut self.ws);
+            self.ws.recycle(logits);
+            self.ws.recycle(dlogits);
             loss_sum += loss;
         }
         self.opt.step(model);

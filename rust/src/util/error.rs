@@ -1,0 +1,133 @@
+//! Minimal error plumbing — `anyhow` is not in the offline vendor set, so
+//! this provides the small slice of its API the crate uses: a string-y
+//! [`Error`], the [`anyhow!`](crate::anyhow)/[`bail!`](crate::bail) macros,
+//! and a [`Context`] extension for `Result`/`Option`.
+
+use std::fmt;
+
+/// A message-carrying error. Context added via [`Context`] is prepended
+/// `outer: inner` style, like anyhow's display chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Debug doubles as Display so `fn main() -> Result<()>` prints cleanly.
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e)
+    }
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error { msg: s }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error::msg(s)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(...)` / `.with_context(|| ...)` for results and options.
+pub trait Context<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{msg}: {e}")))
+    }
+
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg.to_string()))
+    }
+
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Build an [`Error`] from a format string (drop-in for `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] (drop-in for `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_prepends() {
+        let r: std::result::Result<(), &str> = Err("inner");
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+
+    #[test]
+    fn option_context() {
+        let o: Option<u32> = None;
+        let e = o.with_context(|| "missing thing").unwrap_err();
+        assert_eq!(e.to_string(), "missing thing");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = crate::anyhow!("bad {} at {}", "value", 3);
+        assert_eq!(e.to_string(), "bad value at 3");
+        fn f() -> Result<()> {
+            crate::bail!("nope {}", 1)
+        }
+        assert_eq!(f().unwrap_err().to_string(), "nope 1");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn f() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/real/path/xyz")?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+}

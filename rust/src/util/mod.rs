@@ -1,6 +1,8 @@
-//! Shared utilities: PRNG, JSON, CLI parsing, property-test harness, timing.
+//! Shared utilities: PRNG, JSON, CLI parsing, property-test harness,
+//! error plumbing, timing.
 
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod prng;
 pub mod prop;

@@ -83,9 +83,9 @@ fn latency_ordering_reproduces_paper() {
     // level (256×512×512 forward), where the per-method work dominates —
     // at toy model scale the end-to-end step is attention/backward-bound
     // and the ordering drowns in noise (see bench_train for the e2e view).
-    use quaff::methods::{build_method, MethodConfig, MethodKind};
+    use quaff::methods::{build_method, MethodConfig, MethodKind, QuantMethod};
     use quaff::outlier::{ChannelStats, OutlierDetector};
-    use quaff::tensor::Matrix;
+    use quaff::tensor::{Matrix, Workspace};
     use quaff::util::prng::Rng;
     let mut rng = Rng::new(9);
     let (t, cin, cout) = (256, 512, 512);
@@ -105,12 +105,15 @@ fn latency_ordering_reproduces_paper() {
     // min over iterations: robust to scheduler contention (cargo runs the
     // test binary's cases on parallel threads sharing this single core)
     let lat = |kind: MethodKind| {
+        let mut ws = Workspace::new();
         let mut m = build_method(kind, w.clone(), &stats, &oset, &MethodConfig::default());
-        let _ = m.forward(&x); // warmup
+        let warm = m.forward(&x, &mut ws); // warmup
+        ws.recycle(warm);
         (0..20)
             .map(|_| {
                 let t0 = std::time::Instant::now();
-                std::hint::black_box(m.forward(&x));
+                let y = m.forward(&x, &mut ws);
+                ws.recycle(std::hint::black_box(y));
                 t0.elapsed().as_secs_f64()
             })
             .fold(f64::INFINITY, f64::min)

@@ -2,8 +2,11 @@
 //! `python/compile/aot.py`, execute them via PJRT, and cross-check
 //! numerics against the python-recorded goldens.
 //!
-//! Requires `make artifacts` to have run (skips gracefully otherwise so
+//! Requires the `pjrt` cargo feature (the whole file is compiled out
+//! otherwise) and `make artifacts` to have run (skips gracefully if not, so
 //! `cargo test` stays green on a fresh checkout).
+
+#![cfg(feature = "pjrt")]
 
 use quaff::runtime::{Engine, HostValue, TrainSession};
 use quaff::util::json::Json;

@@ -1,0 +1,316 @@
+//! Execution-engine equivalence suite: the workspace-backed `_into` kernels
+//! must be **bit-exact** against the legacy allocating paths — including
+//! when their output buffers arrive dirty from the arena — and a reused
+//! [`Workspace`] must produce identical results across repeated steps.
+
+use quaff::methods::{build_method, MethodConfig, MethodKind, QuantMethod};
+use quaff::outlier::{ChannelStats, OutlierDetector, OutlierSet};
+use quaff::quant;
+use quaff::tensor::{kernels, I8Matrix, Matrix, Workspace};
+use quaff::util::prng::Rng;
+use quaff::util::prop;
+
+/// A matrix pre-filled with garbage, as if recycled from the arena.
+fn dirty(rows: usize, cols: usize) -> Matrix {
+    Matrix::from_vec(rows, cols, vec![777.25; rows * cols])
+}
+
+#[test]
+fn matmul_into_bit_exact_on_dirty_buffers() {
+    prop::check(
+        "matmul_into==matmul",
+        0x51,
+        24,
+        |r| {
+            let (m, k, n) = (1 + r.below(24), 1 + r.below(48), 1 + r.below(48));
+            let a = Matrix::randn(m, k, r, 1.0);
+            let b = Matrix::randn(k, n, r, 1.0);
+            (a, b)
+        },
+        |(a, b)| {
+            let want = a.matmul(b);
+            let mut got = dirty(a.rows(), b.cols());
+            kernels::matmul_into(a, b, &mut got);
+            if got.data() != want.data() {
+                return Err("matmul_into differs from matmul".to_string());
+            }
+            let want_bt = a.matmul_bt(&b.transpose());
+            let mut got_bt = dirty(a.rows(), b.cols());
+            kernels::matmul_bt_into(a, &b.transpose(), &mut got_bt);
+            if got_bt.data() != want_bt.data() {
+                return Err("matmul_bt_into differs from matmul_bt".to_string());
+            }
+            let want_at = a.matmul_at(&want);
+            let mut got_at = dirty(a.cols(), want.cols());
+            kernels::matmul_at_into(a, &want, &mut got_at);
+            if got_at.data() != want_at.data() {
+                return Err("matmul_at_into differs from matmul_at".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn blocked_transpose_matches_naive() {
+    prop::check(
+        "transpose==naive",
+        0x52,
+        32,
+        |r| Matrix::randn(1 + r.below(90), 1 + r.below(90), r, 1.0),
+        |m| {
+            let fast = m.transpose();
+            for i in 0..m.rows() {
+                for j in 0..m.cols() {
+                    if fast.get(j, i) != m.get(i, j) {
+                        return Err(format!("transpose mismatch at ({i},{j})"));
+                    }
+                }
+            }
+            let back = fast.transpose();
+            if back.data() != m.data() {
+                return Err("transpose roundtrip broken".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn quantize_per_token_into_bit_exact() {
+    prop::check(
+        "qpt_into==qpt",
+        0x53,
+        32,
+        |r| {
+            let mut x = Matrix::randn(1 + r.below(16), 1 + r.below(64), r, 1.0);
+            if x.rows() > 2 {
+                // plant a zero row to exercise the Δ=0 branch
+                x.row_mut(0).fill(0.0);
+            }
+            x
+        },
+        |x| {
+            let (want_q, want_d) = quant::quantize_per_token(x);
+            let mut got_q = I8Matrix::from_vec(
+                x.rows(),
+                x.cols(),
+                vec![-77i8; x.rows() * x.cols()],
+            );
+            let mut got_d = vec![555.0f32; 3];
+            quant::quantize_per_token_into(x, &mut got_q, &mut got_d);
+            if got_q.data() != want_q.data() {
+                return Err("int8 payload differs".to_string());
+            }
+            if got_d != want_d {
+                return Err("deltas differ".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn quantize_per_oc_ws_bit_exact() {
+    prop::check(
+        "qoc_ws==qoc",
+        0x54,
+        32,
+        |r| Matrix::randn(1 + r.below(48), 1 + r.below(32), r, 0.5),
+        |w| {
+            let (want_q, want_d) = quant::quantize_per_oc(w);
+            let mut ws = Workspace::new();
+            let mut got_q = I8Matrix::from_vec(
+                w.rows(),
+                w.cols(),
+                vec![13i8; w.rows() * w.cols()],
+            );
+            let mut got_d = vec![9.0f32; 1];
+            quant::quantize_per_oc_ws(w, &mut got_q, &mut got_d, &mut ws);
+            if got_q.data() != want_q.data() || got_d != want_d {
+                return Err("per-OC quantization differs".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn dequantize_into_bit_exact_on_dirty_buffers() {
+    let mut r = Rng::new(0x55);
+    for _ in 0..16 {
+        let x = Matrix::randn(1 + r.below(16), 1 + r.below(48), &mut r, 1.0);
+        let (q, d) = quant::quantize_per_token(&x);
+        let want = quant::dequantize_per_token(&q, &d);
+        let mut got = dirty(q.rows(), q.cols());
+        quant::dequantize_per_token_into(&q, &d, &mut got);
+        assert_eq!(got.data(), want.data());
+
+        let w = Matrix::randn(1 + r.below(32), 1 + r.below(24), &mut r, 0.5);
+        let (wq, wd) = quant::quantize_per_oc(&w);
+        let want = quant::dequantize_per_oc(&wq, &wd);
+        let mut got = dirty(wq.rows(), wq.cols());
+        quant::dequantize_per_oc_into(&wq, &wd, &mut got);
+        assert_eq!(got.data(), want.data());
+
+        if wq.rows() >= 2 {
+            let rows = [0usize, wq.rows() - 1];
+            let want = quant::dequantize_rows_per_oc(&wq, &wd, &rows);
+            let mut got = dirty(2, wq.cols());
+            quant::dequantize_rows_per_oc_into(&wq, &wd, &rows, &mut got);
+            assert_eq!(got.data(), want.data());
+        }
+    }
+}
+
+#[test]
+fn packed_matmul_scratch_reuse_bit_exact() {
+    prop::check(
+        "packed_scratch==packed",
+        0x56,
+        20,
+        |r| {
+            let (m, k, n) = (1 + r.below(12), 1 + r.below(48), 1 + r.below(32));
+            let a = I8Matrix::random(m, k, r);
+            let b = I8Matrix::random(k, n, r);
+            let rs: Vec<f32> = (0..m).map(|_| r.range(0.001, 0.1)).collect();
+            let cs: Vec<f32> = (0..n).map(|_| r.range(0.001, 0.1)).collect();
+            (a, b, rs, cs)
+        },
+        |(a, b, rs, cs)| {
+            let packed = b.pack_transposed();
+            let mut want = vec![0.0f32; a.rows() * b.cols()];
+            a.matmul_dequant_packed_into(&packed, rs, cs, &mut want);
+            // dirty, oversized scratch from a previous (larger) call
+            let mut scratch = vec![-5i16; a.cols() + 17];
+            let mut got = vec![0.0f32; a.rows() * b.cols()];
+            a.matmul_dequant_packed_scratch_into(&packed, rs, cs, &mut scratch, &mut got);
+            if got != want {
+                return Err("scratch variant differs".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn i8_random_is_symmetric_uniform_in_range() {
+    let mut r = Rng::new(0x57);
+    let m = I8Matrix::random(64, 64, &mut r);
+    let mut lo = 0i32;
+    let mut hi = 0i32;
+    for &v in m.data() {
+        assert!((-127..=127).contains(&(v as i32)), "out of range: {v}");
+        if v < 0 {
+            lo += 1;
+        }
+        if v > 0 {
+            hi += 1;
+        }
+    }
+    // both signs well represented, extremes reachable
+    assert!(lo > 1500 && hi > 1500, "skewed: {lo} neg vs {hi} pos");
+    assert!(m.data().iter().any(|&v| v as i32 <= -120));
+    assert!(m.data().iter().any(|&v| v as i32 >= 120));
+}
+
+/// Calibration fixture shared by the method-level reuse tests.
+fn calib_fixture(rng: &mut Rng, cin: usize, hot: &[usize]) -> (ChannelStats, OutlierSet) {
+    let mut stats = ChannelStats::new(cin);
+    for _ in 0..6 {
+        let mut x = Matrix::randn(8, cin, rng, 1.0);
+        for &c in hot {
+            for t in 0..8 {
+                let v = x.get(t, c);
+                x.set(t, c, v * 90.0);
+            }
+        }
+        stats.observe(&x, 40.0);
+    }
+    let set = OutlierDetector::new(40.0).select(&stats, hot.len());
+    (stats, set)
+}
+
+#[test]
+fn reused_workspace_is_deterministic_across_steps_for_every_method() {
+    // Two identical method instances: one gets a fresh arena every step,
+    // the other reuses one arena for the whole run. Outputs must be
+    // bit-identical at every step — dirty recycled buffers must never leak
+    // into results.
+    let mut rng = Rng::new(0x58);
+    let cin = 48;
+    let cout = 40;
+    let hot = vec![3, 17, 30];
+    let (stats, oset) = calib_fixture(&mut rng, cin, &hot);
+    let w = Matrix::randn(cin, cout, &mut rng, 0.3);
+    let cfg = MethodConfig::default();
+    for kind in MethodKind::ALL {
+        let mut fresh_side = build_method(kind, w.clone(), &stats, &oset, &cfg);
+        let mut reuse_side = build_method(kind, w.clone(), &stats, &oset, &cfg);
+        let mut ws = Workspace::new();
+        for step in 0..6 {
+            let mut x = Matrix::randn(7, cin, &mut rng, 1.0);
+            for &c in &hot {
+                for t in 0..7 {
+                    let v = x.get(t, c);
+                    x.set(t, c, v * 90.0);
+                }
+            }
+            let dy = Matrix::randn(7, cout, &mut rng, 1.0);
+            let want_y = fresh_side.forward(&x, &mut Workspace::new());
+            let got_y = reuse_side.forward(&x, &mut ws);
+            assert_eq!(
+                want_y.data(),
+                got_y.data(),
+                "{} forward diverged at step {step}",
+                fresh_side.name()
+            );
+            let want_dx = fresh_side.backward_input(&dy, &mut Workspace::new());
+            let got_dx = reuse_side.backward_input(&dy, &mut ws);
+            assert_eq!(
+                want_dx.data(),
+                got_dx.data(),
+                "{} backward diverged at step {step}",
+                fresh_side.name()
+            );
+            ws.recycle(got_y);
+            ws.recycle(got_dx);
+        }
+    }
+}
+
+#[test]
+fn warm_arena_stops_allocating() {
+    let mut rng = Rng::new(0x59);
+    let cin = 32;
+    let cout = 24;
+    let hot = vec![5, 20];
+    let (stats, oset) = calib_fixture(&mut rng, cin, &hot);
+    let w = Matrix::randn(cin, cout, &mut rng, 0.3);
+    let cfg = MethodConfig::default();
+    for kind in [MethodKind::Naive, MethodKind::Quaff, MethodKind::SmoothStatic] {
+        let mut m = build_method(kind, w.clone(), &stats, &oset, &cfg);
+        let mut ws = Workspace::new();
+        let x = Matrix::randn(5, cin, &mut rng, 1.0);
+        let dy = Matrix::randn(5, cout, &mut rng, 1.0);
+        for _ in 0..2 {
+            let y = m.forward(&x, &mut ws);
+            ws.recycle(y);
+            let dx = m.backward_input(&dy, &mut ws);
+            ws.recycle(dx);
+        }
+        let frozen = ws.fresh_allocs;
+        for _ in 0..8 {
+            let y = m.forward(&x, &mut ws);
+            ws.recycle(y);
+            let dx = m.backward_input(&dy, &mut ws);
+            ws.recycle(dx);
+        }
+        assert_eq!(
+            ws.fresh_allocs,
+            frozen,
+            "{} kept allocating after warm-up",
+            m.name()
+        );
+    }
+}

@@ -1,0 +1,208 @@
+//! Offline API stub for the `xla-rs` PJRT bindings — see README.md.
+//!
+//! Host-side types ([`Literal`], [`ElementType`]) are real and tested;
+//! runtime entry points ([`PjRtClient::cpu`],
+//! [`HloModuleProto::from_text_file`]) fail with a descriptive [`Error`]
+//! because the native XLA library is not available offline.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: carries a message explaining what would need real XLA.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn stub(what: &str) -> Error {
+        Error {
+            msg: format!(
+                "{what} requires the real xla-rs bindings; this build links the offline \
+                 stub in rust/vendor/xla (see its README.md for how to swap in xla-rs)"
+            ),
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element dtypes quaff marshals.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    fn size(&self) -> usize {
+        4
+    }
+}
+
+/// Element types [`Literal::to_vec`] can extract.
+pub trait NativeType: Sized {
+    const TY: ElementType;
+    fn from_le(bytes: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_le(bytes: [u8; 4]) -> f32 {
+        f32::from_le_bytes(bytes)
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_le(bytes: [u8; 4]) -> i32 {
+        i32::from_le_bytes(bytes)
+    }
+}
+
+/// A host-side literal: dtype + dims + little-endian bytes. Fully
+/// functional in the stub (it never touches native code).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let numel: usize = dims.iter().product::<usize>().max(1);
+        if data.len() != numel * ty.size() {
+            return Err(Error {
+                msg: format!(
+                    "literal byte length {} does not match shape {dims:?} ({} bytes expected)",
+                    data.len(),
+                    numel * ty.size()
+                ),
+            });
+        }
+        Ok(Literal {
+            ty,
+            dims: dims.to_vec(),
+            bytes: data.to_vec(),
+        })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty != T::TY {
+            return Err(Error {
+                msg: format!("literal dtype {:?} does not match requested {:?}", self.ty, T::TY),
+            });
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| T::from_le([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::stub("Literal::to_tuple"))
+    }
+}
+
+/// Opaque parsed HLO module.
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(Error::stub("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Opaque XLA computation.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::stub("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stub("PjRtClient::compile"))
+    }
+}
+
+/// Device-side buffer handle.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stub("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub("PjRtLoadedExecutable::execute"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data: Vec<u8> = [1.0f32, -2.5, 3.25].iter().flat_map(|x| x.to_le_bytes()).collect();
+        let lit = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &data).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, -2.5, 3.25]);
+        assert_eq!(lit.dims(), &[3]);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_rejects_bad_length() {
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::S32, &[2], &[0u8; 4]).is_err());
+    }
+
+    #[test]
+    fn runtime_entry_points_fail_descriptively() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{e}").contains("xla-rs"));
+        assert!(HloModuleProto::from_text_file("/tmp/x").is_err());
+    }
+}
