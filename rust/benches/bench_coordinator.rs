@@ -36,7 +36,7 @@ fn main() {
             j
         })
         .collect();
-    let reports = coord.run_all(jobs);
+    let reports = coord.run_all(jobs).expect("known datasets");
     let secs = t0.elapsed().as_secs_f64();
     println!(
         "\n4 jobs end-to-end: {:.2}s total, {:.2}s/job, all complete: {}",

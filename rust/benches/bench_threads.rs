@@ -1,0 +1,114 @@
+//! Thread-scaling benchmark: the pool-sharded kernels at e2e-small
+//! prefill shapes (d_model = 256, d_ff = 1024, t = 512), swept over an
+//! active width of 1/2/4/8 threads on one spawn-once pool.
+//!
+//! Emits `BENCH_threads.json` (ns/op per kernel per width + the 4-vs-1
+//! speedup) at the workspace root — the record `tools/bench_gate` compares
+//! against `BENCH_baseline.json` in CI. Widths above the pool size are
+//! clamped; the JSON records both requested and effective width so a
+//! 2-core runner's numbers stay interpretable.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, write_threads_json, ThreadSweep};
+use quaff::quant;
+use quaff::tensor::{pool, I8Matrix, Matrix, Workspace};
+use quaff::util::prng::Rng;
+
+// e2e-small preset (see ModelConfig::preset), prefill token count
+const D_MODEL: usize = 256;
+const D_FF: usize = 1024;
+const TOKENS: usize = 512;
+
+const WIDTHS: [usize; 4] = [1, 2, 4, 8];
+
+fn main() {
+    // Request an 8-wide pool before first use so every sweep leg has real
+    // workers to run on (QUAFF_THREADS still wins if the pool was already
+    // spawned by an earlier bench in the same process).
+    pool::init(pool::ThreadConfig { threads: 8 });
+    let pool_threads = pool::global().threads();
+    println!("== bench_threads: sharded kernels, pool of {pool_threads} threads ==\n");
+
+    let mut rng = Rng::new(7);
+    let x = Matrix::randn(TOKENS, D_MODEL, &mut rng, 1.0);
+    let w_up = Matrix::randn(D_MODEL, D_FF, &mut rng, 0.3);
+    let dy = Matrix::randn(TOKENS, D_FF, &mut rng, 1.0);
+    let big = Matrix::randn(2048, 1024, &mut rng, 1.0);
+    let (x_int, dx) = quant::quantize_per_token(&x);
+    let qw = quant::QuantizedWeights::quantize(&w_up);
+
+    let mut y_mm = Matrix::zeros(TOKENS, D_FF);
+    let mut y_bt = Matrix::zeros(TOKENS, D_MODEL);
+    let mut y_at = Matrix::zeros(D_MODEL, D_FF);
+    let mut xq = I8Matrix::zeros(TOKENS, D_MODEL);
+    let mut dq: Vec<f32> = Vec::with_capacity(TOKENS);
+    let mut y_int = vec![0.0f32; TOKENS * D_FF];
+    let mut cmax = vec![0.0f32; big.cols()];
+    let mut ws = Workspace::new();
+
+    // Sweep names double as the CI gate's permanent baseline ids, so each
+    // name is declared right next to the closure it measures (no positional
+    // list to drift out of sync).
+    let mut sweeps: Vec<ThreadSweep> = Vec::new();
+    let mut record = |sweeps: &mut Vec<ThreadSweep>, name: &str, t: usize, eff: usize, r| {
+        match sweeps.iter_mut().find(|s| s.name == name) {
+            Some(sw) => sw.legs.push((t, eff, r)),
+            None => sweeps.push(ThreadSweep {
+                name: name.to_string(),
+                legs: vec![(t, eff, r)],
+            }),
+        }
+    };
+
+    for &t in &WIDTHS {
+        let eff = pool::set_active_threads(t);
+        println!("-- requested {t} threads (effective {eff}) --");
+        let r = bench(&format!("matmul_into [{t}t]"), 2, 0.6, || {
+            quaff::tensor::kernels::matmul_into(&x, &w_up, &mut y_mm);
+            std::hint::black_box(&y_mm);
+        });
+        record(&mut sweeps, "matmul_into 512x256x1024", t, eff, r);
+        let r = bench(&format!("matmul_bt_into [{t}t]"), 2, 0.6, || {
+            quaff::tensor::kernels::matmul_bt_into(&dy, &w_up, &mut y_bt);
+            std::hint::black_box(&y_bt);
+        });
+        record(&mut sweeps, "matmul_bt_into 512x1024x256", t, eff, r);
+        let r = bench(&format!("matmul_at_into [{t}t]"), 2, 0.6, || {
+            quaff::tensor::kernels::matmul_at_into(&x, &dy, &mut y_at);
+            std::hint::black_box(&y_at);
+        });
+        record(&mut sweeps, "matmul_at_into 512x256.512x1024", t, eff, r);
+        let r = bench(&format!("int8_matmul_ws [{t}t]"), 2, 0.6, || {
+            y_int.fill(0.0);
+            qw.matmul_ws(&x_int, &dx, &mut ws, &mut y_int);
+            std::hint::black_box(&y_int);
+        });
+        record(&mut sweeps, "int8_matmul_ws 512x256x1024", t, eff, r);
+        let r = bench(&format!("quantize_per_token [{t}t]"), 2, 0.4, || {
+            quant::quantize_per_token_into(&x, &mut xq, &mut dq);
+            std::hint::black_box(&xq);
+        });
+        record(&mut sweeps, "quantize_per_token 512x256", t, eff, r);
+        let r = bench(&format!("col_abs_max [{t}t]"), 2, 0.4, || {
+            quaff::tensor::kernels::col_abs_max_into(&big, &mut cmax);
+            std::hint::black_box(&cmax);
+        });
+        record(&mut sweeps, "col_abs_max 2048x1024", t, eff, r);
+        println!();
+    }
+
+    println!("speedup at 4 threads vs 1 (requested):");
+    for sw in &sweeps {
+        if let (Some(t1), Some(t4)) = (sw.ns_at(1), sw.ns_at(4)) {
+            println!("  {:<40} {:.2}x", sw.name, t1 / t4);
+        }
+    }
+
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_threads.json");
+    match write_threads_json(&out, "e2e-small", pool_threads, &sweeps) {
+        Ok(()) => println!("\nwrote {}", out.display()),
+        Err(e) => eprintln!("could not write BENCH_threads.json: {e}"),
+    }
+}

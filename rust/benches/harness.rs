@@ -13,24 +13,42 @@ pub struct BenchResult {
     pub iters: u64,
 }
 
-/// Run `f` repeatedly for ~`budget_secs` (after `warmup` calls); report stats.
+/// Target sample count before the budget may stop the loop.
+const MIN_SAMPLES: usize = 3;
+
+/// Chasing [`MIN_SAMPLES`] on a slow kernel must not run away: hard-stop
+/// once this multiple of the budget has elapsed, whatever the count.
+const MAX_OVERRUN: f64 = 5.0;
+
+/// Run `f` repeatedly for ~`budget_secs` (after `warmup` calls); report
+/// stats. Aims for at least [`MIN_SAMPLES`] timed iterations but never
+/// overruns the budget by more than [`MAX_OVERRUN`]× (always timing at
+/// least one iteration), and reports the sample standard deviation
+/// (`n − 1`; 0 for a single sample).
 pub fn bench<F: FnMut()>(name: &str, warmup: u32, budget_secs: f64, mut f: F) -> BenchResult {
     for _ in 0..warmup {
         f();
     }
     let mut times = Vec::new();
     let t0 = Instant::now();
-    while t0.elapsed().as_secs_f64() < budget_secs || times.len() < 3 {
+    loop {
+        let elapsed = t0.elapsed().as_secs_f64();
+        let want_more = elapsed < budget_secs || times.len() < MIN_SAMPLES;
+        let overrun = elapsed >= budget_secs * MAX_OVERRUN;
+        if !times.is_empty() && (!want_more || overrun || times.len() > 10_000) {
+            break;
+        }
         let s = Instant::now();
         f();
         times.push(s.elapsed().as_secs_f64());
-        if times.len() > 10_000 {
-            break;
-        }
     }
     let n = times.len() as f64;
     let mean = times.iter().sum::<f64>() / n;
-    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n;
+    let var = if times.len() >= 2 {
+        times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / (n - 1.0)
+    } else {
+        0.0
+    };
     let r = BenchResult {
         name: name.to_string(),
         mean_secs: mean,
@@ -104,6 +122,67 @@ pub fn write_kernels_json(
     let json = format!(
         "{{\n  \"bench\": \"kernels\",\n  \"preset\": \"{preset}\",\n  \"kernels\": [\n{}\n  ],\n  \
          \"workspace_speedup_geomean\": {geomean:.4}\n}}\n",
+        kernels.join(",\n")
+    );
+    std::fs::write(path, json)
+}
+
+/// One kernel measured across a thread-count sweep.
+#[allow(dead_code)]
+pub struct ThreadSweep {
+    pub name: String,
+    /// `(requested_threads, effective_threads, result)` per leg.
+    pub legs: Vec<(usize, usize, BenchResult)>,
+}
+
+impl ThreadSweep {
+    /// ns/op of the leg whose *requested* thread count is `t`, if measured.
+    #[allow(dead_code)]
+    pub fn ns_at(&self, t: usize) -> Option<f64> {
+        self.legs
+            .iter()
+            .find(|(req, _, _)| *req == t)
+            .map(|(_, _, r)| r.mean_secs * 1e9)
+    }
+}
+
+/// Emit `BENCH_threads.json`: ns/op per kernel per thread count plus the
+/// 4-vs-1-thread speedup — the record the CI perf gate compares and the
+/// evidence behind the sharding claims.
+#[allow(dead_code)]
+pub fn write_threads_json(
+    path: &std::path::Path,
+    preset: &str,
+    pool_threads: usize,
+    sweeps: &[ThreadSweep],
+) -> std::io::Result<()> {
+    let mut kernels = Vec::new();
+    for sw in sweeps {
+        let ns: Vec<String> = sw
+            .legs
+            .iter()
+            .map(|(req, eff, r)| {
+                format!(
+                    "      {{\"threads\": {req}, \"threads_effective\": {eff}, \
+                     \"ns_per_op\": {:.1}, \"iters\": {}}}",
+                    r.mean_secs * 1e9,
+                    r.iters
+                )
+            })
+            .collect();
+        let speedup = match (sw.ns_at(1), sw.ns_at(4)) {
+            (Some(t1), Some(t4)) if t4 > 0.0 => format!("{:.4}", t1 / t4),
+            _ => "null".to_string(),
+        };
+        kernels.push(format!(
+            "    {{\"name\": \"{}\", \"legs\": [\n{}\n    ], \"speedup_4v1\": {speedup}}}",
+            sw.name,
+            ns.join(",\n")
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"threads\",\n  \"preset\": \"{preset}\",\n  \
+         \"pool_threads\": {pool_threads},\n  \"kernels\": [\n{}\n  ]\n}}\n",
         kernels.join(",\n")
     );
     std::fs::write(path, json)

@@ -13,11 +13,15 @@ pub mod checkpoint;
 
 pub use bundle::{DistributionBundle, PreprocessServer, ServerConfig};
 
-use crate::data::{Dataset, Sample, SynthTask, TaskFamily};
+use crate::anyhow;
+use crate::data::{
+    Dataset, Sample, SynthTask, TaskFamily, INSTRUCTION_SETS, LONGTEXT_SETS, REASONING_SETS,
+};
 use crate::methods::MethodKind;
 use crate::metrics::{LatencyTimer, MemoryAccountant, MemoryBreakdown};
 use crate::peft::PeftKind;
 use crate::train::{eval as teval, Trainer};
+use crate::util::error::{Context, Result};
 use crate::util::prng::Rng;
 use std::collections::BTreeMap;
 use std::sync::mpsc;
@@ -86,10 +90,23 @@ impl JobReport {
 }
 
 /// Execute one job against a prepared bundle (the worker body; exposed so
-/// reports/benches can run cells synchronously without the queue).
-pub fn run_job(server: &PreprocessServer, job: &FinetuneJob) -> JobReport {
-    let task = SynthTask::by_name(&job.dataset)
-        .unwrap_or_else(|| panic!("unknown dataset {}", job.dataset));
+/// reports/benches can run cells synchronously without the queue). A job
+/// naming an unknown dataset is a readable [`Err`], not a panic — bad task
+/// names come straight from CLI flags.
+pub fn run_job(server: &PreprocessServer, job: &FinetuneJob) -> Result<JobReport> {
+    let task = SynthTask::by_name(&job.dataset).with_context(|| {
+        format!(
+            "unknown dataset '{}' (known: {})",
+            job.dataset,
+            INSTRUCTION_SETS
+                .iter()
+                .chain(&REASONING_SETS)
+                .chain(&LONGTEXT_SETS)
+                .copied()
+                .collect::<Vec<_>>()
+                .join(", ")
+        )
+    })?;
     let mut rng = Rng::new(job.seed);
     let samples: Vec<Sample> = (0..job.train_pool + job.eval_samples)
         .map(|_| task.sample(&mut rng))
@@ -146,7 +163,7 @@ pub fn run_job(server: &PreprocessServer, job: &FinetuneJob) -> JobReport {
         }
     }
     let memory = MemoryAccountant::account(model, job.method, job.batch_size, job.max_len);
-    JobReport {
+    Ok(JobReport {
         id: job.id,
         dataset: job.dataset.clone(),
         method: job.method,
@@ -157,11 +174,11 @@ pub fn run_job(server: &PreprocessServer, job: &FinetuneJob) -> JobReport {
         mean_step_secs: timer.mean(),
         memory,
         payload_bytes: bundle.payload_bytes,
-    }
+    })
 }
 
 enum Msg {
-    Submit(FinetuneJob, mpsc::Sender<JobReport>),
+    Submit(FinetuneJob, mpsc::Sender<Result<JobReport>>),
     Shutdown,
 }
 
@@ -203,8 +220,8 @@ impl Coordinator {
         }
     }
 
-    /// Submit a job; returns a receiver for its report.
-    pub fn submit(&mut self, job: FinetuneJob) -> mpsc::Receiver<JobReport> {
+    /// Submit a job; returns a receiver for its (fallible) report.
+    pub fn submit(&mut self, job: FinetuneJob) -> mpsc::Receiver<Result<JobReport>> {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.submitted += 1;
         self.tx
@@ -213,12 +230,17 @@ impl Coordinator {
         reply_rx
     }
 
-    /// Submit a batch and wait for all reports (returned in submit order).
-    pub fn run_all(&mut self, jobs: Vec<FinetuneJob>) -> Vec<JobReport> {
+    /// Submit a batch and wait for all reports (returned in submit order);
+    /// the first failing job (e.g. an unknown dataset name) surfaces as a
+    /// readable error.
+    pub fn run_all(&mut self, jobs: Vec<FinetuneJob>) -> Result<Vec<JobReport>> {
         let receivers: Vec<_> = jobs.into_iter().map(|j| self.submit(j)).collect();
         receivers
             .into_iter()
-            .map(|rx| rx.recv().expect("worker dropped reply"))
+            .map(|rx| match rx.recv() {
+                Ok(report) => report,
+                Err(_) => Err(anyhow!("coordinator worker dropped its reply")),
+            })
             .collect()
     }
 
@@ -271,9 +293,24 @@ mod tests {
     }
 
     #[test]
+    fn unknown_dataset_is_a_readable_error_not_a_panic() {
+        let server = PreprocessServer::new(tiny_server_cfg());
+        let mut job = tiny_job(1, MethodKind::Naive);
+        job.dataset = "definitely-not-a-task".to_string();
+        let err = run_job(&server, &job).unwrap_err().to_string();
+        assert!(err.contains("unknown dataset 'definitely-not-a-task'"), "{err}");
+        assert!(err.contains("gpqa"), "should list known tasks: {err}");
+        // ...and through the queue as well
+        let mut coord = Coordinator::new(tiny_server_cfg(), 1);
+        let err = coord.run_all(vec![job]).unwrap_err().to_string();
+        assert!(err.contains("unknown dataset"), "{err}");
+        coord.shutdown();
+    }
+
+    #[test]
     fn run_job_produces_complete_report() {
         let server = PreprocessServer::new(tiny_server_cfg());
-        let report = run_job(&server, &tiny_job(1, MethodKind::Quaff));
+        let report = run_job(&server, &tiny_job(1, MethodKind::Quaff)).expect("known dataset");
         assert_eq!(report.id, 1);
         assert_eq!(report.steps, 2);
         assert!(report.final_loss.is_finite());
@@ -291,7 +328,7 @@ mod tests {
             tiny_job(11, MethodKind::Quaff),
             tiny_job(12, MethodKind::Fp32),
         ];
-        let reports = coord.run_all(jobs);
+        let reports = coord.run_all(jobs).expect("known datasets");
         assert_eq!(
             reports.iter().map(|r| r.id).collect::<Vec<_>>(),
             vec![10, 11, 12]
@@ -303,9 +340,9 @@ mod tests {
     #[test]
     fn memory_report_orders_methods_correctly() {
         let server = PreprocessServer::new(tiny_server_cfg());
-        let fp32 = run_job(&server, &tiny_job(1, MethodKind::Fp32));
-        let quaff = run_job(&server, &tiny_job(2, MethodKind::Quaff));
-        let smooth_d = run_job(&server, &tiny_job(3, MethodKind::SmoothDynamic));
+        let fp32 = run_job(&server, &tiny_job(1, MethodKind::Fp32)).unwrap();
+        let quaff = run_job(&server, &tiny_job(2, MethodKind::Quaff)).unwrap();
+        let smooth_d = run_job(&server, &tiny_job(3, MethodKind::SmoothDynamic)).unwrap();
         assert!(quaff.memory.total() < fp32.memory.total());
         assert!(smooth_d.memory.total() >= fp32.memory.total());
     }

@@ -16,9 +16,10 @@
 //!   kernel (interpret mode on CPU; MXU-shaped block specs for TPU).
 //!
 //! See `DESIGN.md` for the system inventory, the execution-engine /
-//! workspace architecture, and the `pjrt` feature; `BENCH_kernels.json`
-//! (emitted by `cargo bench --bench bench_kernels`) records the
-//! alloc-vs-workspace perf trajectory.
+//! workspace architecture, the `tensor::pool` threading model
+//! (`QUAFF_THREADS`, deterministic row-sharding), and the `pjrt` feature;
+//! `BENCH_kernels.json` / `BENCH_threads.json` (emitted by `cargo bench`)
+//! record the perf trajectory guarded by the CI bench gate.
 
 pub mod coordinator;
 pub mod data;

@@ -18,7 +18,7 @@ use quaff::model::ModelConfig;
 use quaff::peft::PeftKind;
 use quaff::report::{self, ReportOpts};
 use quaff::util::cli::Args;
-use quaff::util::error::Result;
+use quaff::util::error::{Context, Result};
 use quaff::{anyhow, bail};
 
 fn main() -> Result<()> {
@@ -55,7 +55,7 @@ fn cmd_report(args: &Args) -> Result<()> {
         all.push_str(&md);
     }
     if let Some(path) = args.get("out") {
-        std::fs::write(path, &all)?;
+        std::fs::write(path, &all).with_context(|| format!("writing report to {path}"))?;
         eprintln!("[report] written to {path}");
     }
     Ok(())
@@ -81,7 +81,7 @@ fn cmd_finetune(args: &Args) -> Result<()> {
         peft.label(),
         job.steps
     );
-    let r = run_job(&server, &job);
+    let r = run_job(&server, &job)?;
     println!("dataset        : {}", r.dataset);
     println!("method / peft  : {} / {}", r.method.label(), r.peft.label());
     println!("steps          : {}", r.steps);

@@ -143,9 +143,10 @@ impl QuantMethod for LlmInt8Linear {
     fn forward(&mut self, x: &Matrix, ws: &mut Workspace) -> Matrix {
         let t = x.rows();
         let cout = self.qw.w_int.cols();
-        // 1. dynamic detection: columns whose |max| exceeds σ
+        // 1. dynamic detection: columns whose |max| exceeds σ (workspace
+        // variant so the sharded reduction's lanes stay pooled)
         let mut col_max = ws.take_f32("llmint8.colmax", x.cols());
-        kernels::col_abs_max_into(x, &mut col_max);
+        kernels::col_abs_max_ws(x, &mut col_max, ws);
         let mut outlier_cols = ws.take_idx("llmint8.ocols");
         outlier_cols.extend((0..x.cols()).filter(|&c| col_max[c] > self.sigma));
         self.dequant_rows_total += outlier_cols.len() as u64;

@@ -167,12 +167,15 @@ pub(crate) fn ste_backward(dy: &Matrix, w_int: &I8Matrix, w_deltas: &[f32]) -> M
 
 /// [`ste_backward`] on the workspace: the Δ-scaled dY scratch comes from —
 /// and goes back to — the arena; the returned dX is arena-backed too.
+/// Sharded over the token rows of dX (each row reads the shared int8
+/// weights, writes only itself — bit-identical for any thread count).
 pub(crate) fn ste_backward_ws(
     dy: &Matrix,
     w_int: &I8Matrix,
     w_deltas: &[f32],
     ws: &mut Workspace,
 ) -> Matrix {
+    use crate::tensor::pool::{self, shard_range, SplitMut};
     let (t, cout) = (dy.rows(), dy.cols());
     let cin = w_int.rows();
     assert_eq!(w_int.cols(), cout);
@@ -182,20 +185,37 @@ pub(crate) fn ste_backward_ws(
     dys.data_mut().copy_from_slice(dy.data());
     dys.scale_cols(w_deltas);
     let mut out = ws.take_matrix("ste.dx", t, cin);
-    for ti in 0..t {
+    let shards = pool::shards_for(t, t * cout * cin);
+    if shards <= 1 {
+        ste_rows(&dys, w_int, out.data_mut(), 0, t);
+    } else {
+        let split = SplitMut::new(out.data_mut());
+        let dys_ref = &dys;
+        pool::run_shards(shards, &|s| {
+            let (r0, r1) = shard_range(t, shards, s);
+            let orows = unsafe { split.slice(r0 * cin, (r1 - r0) * cin) };
+            ste_rows(dys_ref, w_int, orows, r0, r1);
+        });
+    }
+    ws.put_matrix("ste.dys", dys);
+    out
+}
+
+/// Row-range core of the STE backward: dX rows `r0..r1`.
+fn ste_rows(dys: &Matrix, w_int: &I8Matrix, orows: &mut [f32], r0: usize, r1: usize) {
+    let cin = w_int.rows();
+    for ti in r0..r1 {
         let drow = dys.row(ti);
-        let orow = out.row_mut(ti);
-        for i in 0..cin {
+        let orow = &mut orows[(ti - r0) * cin..(ti - r0 + 1) * cin];
+        for (i, o) in orow.iter_mut().enumerate() {
             let wrow = w_int.row(i);
             let mut acc = 0.0f32;
             for (&d, &q) in drow.iter().zip(wrow) {
                 acc += d * q as f32;
             }
-            orow[i] = acc;
+            *o = acc;
         }
     }
-    ws.put_matrix("ste.dys", dys);
-    out
 }
 
 #[cfg(test)]

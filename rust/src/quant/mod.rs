@@ -3,7 +3,13 @@
 //! (activation rows) and per-output-channel (weight columns).
 //!
 //! `X_int = round(X / Δ)`, `Δ = max|X| / (2^{N-1} − 1)` with N = 8 → 127.
+//!
+//! The per-token / per-OC loops are row-sharded across the tensor
+//! [`pool`]: every row's Δ and quantized values depend only on that row, so
+//! the threaded paths are bit-identical to the serial ones for any thread
+//! count (small launches stay serial under [`pool::MIN_SHARD_WORK`]).
 
+use crate::tensor::pool::{self, shard_range, SplitMut};
 use crate::tensor::{kernels, I8Matrix, Matrix, Workspace};
 
 /// Symmetric INT8 full-scale value: `2^{8−1} − 1`.
@@ -53,26 +59,47 @@ pub fn quantize_per_token(x: &Matrix) -> (I8Matrix, Vec<f32>) {
 }
 
 /// [`quantize_per_token`] into caller-provided buffers: `x_int` must match
-/// `x`'s shape; `deltas` is cleared and refilled. Allocation-free on reuse.
+/// `x`'s shape; `deltas` is cleared and refilled. Allocation-free on reuse;
+/// row-sharded for large activations (each row's Δ and values are local to
+/// the row, so the split never changes results).
 pub fn quantize_per_token_into(x: &Matrix, x_int: &mut I8Matrix, deltas: &mut Vec<f32>) {
     assert_eq!(
         (x_int.rows(), x_int.cols()),
         (x.rows(), x.cols()),
         "quantize_per_token_into shape mismatch"
     );
+    let (rows, cols) = (x.rows(), x.cols());
     deltas.clear();
-    for i in 0..x.rows() {
-        let m = x.row(i).iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-        deltas.push(step_size(m));
+    deltas.resize(rows, 0.0);
+    let shards = pool::shards_for(rows, rows * cols * 2);
+    if shards <= 1 {
+        return ptok_rows(x, x_int.data_mut(), deltas, 0, rows);
     }
-    for i in 0..x.rows() {
-        let d = deltas[i];
-        let dst = x_int.row_mut(i);
+    let xi = SplitMut::new(x_int.data_mut());
+    let dl = SplitMut::new(&mut deltas[..]);
+    pool::run_shards(shards, &|s| {
+        let (r0, r1) = shard_range(rows, shards, s);
+        let xis = unsafe { xi.slice(r0 * cols, (r1 - r0) * cols) };
+        let dls = unsafe { dl.slice(r0, r1 - r0) };
+        ptok_rows(x, xis, dls, r0, r1);
+    });
+}
+
+/// Row-range core of [`quantize_per_token_into`]: rows `r0..r1` into the
+/// relative sub-slices `xi` / `deltas`.
+fn ptok_rows(x: &Matrix, xi: &mut [i8], deltas: &mut [f32], r0: usize, r1: usize) {
+    let cols = x.cols();
+    for i in r0..r1 {
+        let row = x.row(i);
+        let m = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let d = step_size(m);
+        deltas[i - r0] = d;
+        let dst = &mut xi[(i - r0) * cols..(i - r0 + 1) * cols];
         if d == 0.0 {
             dst.fill(0);
         } else {
             let inv = 1.0 / d;
-            for (o, &v) in dst.iter_mut().zip(x.row(i)) {
+            for (o, &v) in dst.iter_mut().zip(row) {
                 *o = (v * inv).round().clamp(-QMAX, QMAX) as i8;
             }
         }
@@ -90,16 +117,24 @@ pub fn quantize_per_oc(w: &Matrix) -> (I8Matrix, Vec<f32>) {
 }
 
 /// [`quantize_per_oc`] into caller-provided buffers, with the reciprocal
-/// scratch drawn from the workspace — the per-step `ŵ` quantization on
-/// Quaff's hot path uses this.
+/// and reduction-lane scratch drawn from the workspace — the per-step `ŵ`
+/// quantization on Quaff's hot path uses this.
 pub fn quantize_per_oc_ws(
     w: &Matrix,
     w_int: &mut I8Matrix,
     deltas: &mut Vec<f32>,
     ws: &mut Workspace,
 ) {
+    assert_eq!(
+        (w_int.rows(), w_int.cols()),
+        (w.rows(), w.cols()),
+        "quantize_per_oc shape mismatch"
+    );
     let mut inv = ws.take_f32("quant.oc.inv", 0);
-    quantize_per_oc_core(w, w_int, deltas, &mut inv);
+    deltas.clear();
+    deltas.resize(w.cols(), 0.0);
+    kernels::col_abs_max_ws(w, deltas, ws);
+    oc_finish(w, w_int, deltas, &mut inv);
     ws.put_f32("quant.oc.inv", inv);
 }
 
@@ -114,18 +149,41 @@ fn quantize_per_oc_core(
         (w.rows(), w.cols()),
         "quantize_per_oc shape mismatch"
     );
-    let cols = w.cols();
     deltas.clear();
-    deltas.resize(cols, 0.0);
+    deltas.resize(w.cols(), 0.0);
     kernels::col_abs_max_into(w, deltas);
+    oc_finish(w, w_int, deltas, inv);
+}
+
+/// Shared tail of the per-OC quantizer: turn column maxima into step sizes
+/// + reciprocals, then quantize the rows (sharded — each output row only
+/// reads `inv`, so the split never changes results).
+fn oc_finish(w: &Matrix, w_int: &mut I8Matrix, deltas: &mut [f32], inv: &mut Vec<f32>) {
     for d in deltas.iter_mut() {
         *d = step_size(*d);
     }
     inv.clear();
     inv.extend(deltas.iter().map(|&d| if d == 0.0 { 0.0 } else { 1.0 / d }));
-    for i in 0..w.rows() {
+    let (rows, cols) = (w.rows(), w.cols());
+    let shards = pool::shards_for(rows, rows * cols * 2);
+    if shards <= 1 {
+        return oc_rows(w, w_int.data_mut(), inv, 0, rows);
+    }
+    let wi = SplitMut::new(w_int.data_mut());
+    let inv = &inv[..];
+    pool::run_shards(shards, &|s| {
+        let (r0, r1) = shard_range(rows, shards, s);
+        let wis = unsafe { wi.slice(r0 * cols, (r1 - r0) * cols) };
+        oc_rows(w, wis, inv, r0, r1);
+    });
+}
+
+/// Row-range core of the per-OC quantizer.
+fn oc_rows(w: &Matrix, wi: &mut [i8], inv: &[f32], r0: usize, r1: usize) {
+    let cols = w.cols();
+    for i in r0..r1 {
         let row = w.row(i);
-        let dst = w_int.row_mut(i);
+        let dst = &mut wi[(i - r0) * cols..(i - r0 + 1) * cols];
         for ((o, &v), &iv) in dst.iter_mut().zip(row).zip(inv.iter()) {
             *o = (v * iv).round().clamp(-QMAX, QMAX) as i8;
         }
@@ -140,13 +198,29 @@ pub fn dequantize_per_token(x: &I8Matrix, deltas: &[f32]) -> Matrix {
 }
 
 /// [`dequantize_per_token`] into a caller-provided matrix (fully
-/// overwritten — dirty recycled buffers are fine).
+/// overwritten — dirty recycled buffers are fine). Row-sharded.
 pub fn dequantize_per_token_into(x: &I8Matrix, deltas: &[f32], out: &mut Matrix) {
     assert_eq!(deltas.len(), x.rows());
     assert_eq!((out.rows(), out.cols()), (x.rows(), x.cols()));
-    for i in 0..x.rows() {
+    let (rows, cols) = (x.rows(), x.cols());
+    let od = out.data_mut();
+    let shards = pool::shards_for(rows, rows * cols);
+    if shards <= 1 {
+        return dtok_rows(x, deltas, od, 0, rows);
+    }
+    let split = SplitMut::new(od);
+    pool::run_shards(shards, &|s| {
+        let (r0, r1) = shard_range(rows, shards, s);
+        let orows = unsafe { split.slice(r0 * cols, (r1 - r0) * cols) };
+        dtok_rows(x, deltas, orows, r0, r1);
+    });
+}
+
+fn dtok_rows(x: &I8Matrix, deltas: &[f32], orows: &mut [f32], r0: usize, r1: usize) {
+    let cols = x.cols();
+    for i in r0..r1 {
         let d = deltas[i];
-        let dst = out.row_mut(i);
+        let dst = &mut orows[(i - r0) * cols..(i - r0 + 1) * cols];
         for (o, &q) in dst.iter_mut().zip(x.row(i)) {
             *o = q as f32 * d;
         }
@@ -160,12 +234,28 @@ pub fn dequantize_per_oc(w: &I8Matrix, deltas: &[f32]) -> Matrix {
     out
 }
 
-/// [`dequantize_per_oc`] into a caller-provided matrix.
+/// [`dequantize_per_oc`] into a caller-provided matrix. Row-sharded.
 pub fn dequantize_per_oc_into(w: &I8Matrix, deltas: &[f32], out: &mut Matrix) {
     assert_eq!(deltas.len(), w.cols());
     assert_eq!((out.rows(), out.cols()), (w.rows(), w.cols()));
-    for i in 0..w.rows() {
-        let dst = out.row_mut(i);
+    let (rows, cols) = (w.rows(), w.cols());
+    let od = out.data_mut();
+    let shards = pool::shards_for(rows, rows * cols);
+    if shards <= 1 {
+        return doc_rows(w, deltas, od, 0, rows);
+    }
+    let split = SplitMut::new(od);
+    pool::run_shards(shards, &|s| {
+        let (r0, r1) = shard_range(rows, shards, s);
+        let orows = unsafe { split.slice(r0 * cols, (r1 - r0) * cols) };
+        doc_rows(w, deltas, orows, r0, r1);
+    });
+}
+
+fn doc_rows(w: &I8Matrix, deltas: &[f32], orows: &mut [f32], r0: usize, r1: usize) {
+    let cols = w.cols();
+    for i in r0..r1 {
+        let dst = &mut orows[(i - r0) * cols..(i - r0 + 1) * cols];
         for ((o, &q), &d) in dst.iter_mut().zip(w.row(i)).zip(deltas) {
             *o = q as f32 * d;
         }
@@ -251,17 +341,27 @@ impl QuantizedWeights {
         }
     }
 
-    /// Fused `out += Δ_x·(X_int·W_int)·Δ_W` via the packed fast path.
+    /// Fused `out += Δ_x·(X_int·W_int)·Δ_W` via the packed fast path
+    /// (row-sharded internally for large launches).
     pub fn matmul_into(&self, x_int: &I8Matrix, dx: &[f32], out: &mut [f32]) {
         x_int.matmul_dequant_packed_into(&self.packed, dx, &self.deltas, out);
     }
 
-    /// [`Self::matmul_into`] with the widening scratch drawn from the
-    /// workspace — zero allocations at steady state.
+    /// [`Self::matmul_into`] with the per-shard widening scratch drawn from
+    /// the workspace's lane pool — zero allocations at steady state, serial
+    /// single-scratch path for small (decode-shape) launches.
     pub fn matmul_ws(&self, x_int: &I8Matrix, dx: &[f32], ws: &mut Workspace, out: &mut [f32]) {
-        let mut a16 = ws.take_i16("qw.a16", 0);
-        x_int.matmul_dequant_packed_scratch_into(&self.packed, dx, &self.deltas, &mut a16, out);
-        ws.put_i16("qw.a16", a16);
+        let (m, k, n) = (x_int.rows(), x_int.cols(), self.packed.n());
+        let shards = pool::shards_for(m, m * k * n);
+        if shards <= 1 {
+            let mut a16 = ws.take_i16("qw.a16", 0);
+            x_int.matmul_dequant_packed_scratch_into(&self.packed, dx, &self.deltas, &mut a16, out);
+            ws.put_i16("qw.a16", a16);
+        } else {
+            let mut lanes = ws.take_i16_lanes("qw.a16.lanes", shards);
+            x_int.matmul_dequant_packed_lanes_into(&self.packed, dx, &self.deltas, &mut lanes, out);
+            ws.put_i16_lanes("qw.a16.lanes", lanes);
+        }
     }
 
     pub fn dequantize(&self) -> Matrix {

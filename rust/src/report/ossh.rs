@@ -182,7 +182,7 @@ pub fn table7(opts: &ReportOpts) -> String {
             j.steps = opts.steps;
             j.batch_size = if dataset == "lambada" { 2 } else { opts.batch };
             j.max_len = if dataset == "lambada" { 256 } else { 160 };
-            let r = crate::coordinator::run_job(&server, &j);
+            let r = crate::coordinator::run_job(&server, &j).expect("embedded dataset");
             row.push(f3(r.metric("acc")));
         }
         t.push(row);

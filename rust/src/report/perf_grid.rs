@@ -2,7 +2,7 @@
 //! comparisons (Figs. 1, 4, 5, 6, 7; Tables 1–4).
 
 use super::{f3, method_rows, secs, ReportOpts, Table};
-use crate::coordinator::{run_job, FinetuneJob, PreprocessServer};
+use crate::coordinator::{run_job, FinetuneJob, JobReport, PreprocessServer};
 use crate::data::SynthTask;
 use crate::methods::MethodKind;
 use crate::peft::PeftKind;
@@ -14,6 +14,12 @@ fn job(opts: &ReportOpts, id: u64, dataset: &str, method: MethodKind, peft: Peft
     j.steps = opts.steps;
     j.batch_size = opts.batch;
     j
+}
+
+/// Report cells only reference embedded dataset names, so a lookup failure
+/// here is a bug in the report code (not user input) — surface it loudly.
+fn run(server: &PreprocessServer, j: &FinetuneJob) -> JobReport {
+    run_job(server, j).expect("report datasets are embedded and known-good")
 }
 
 /// Fig. 1: accuracy vs latency-per-step vs memory on GPQA with the default
@@ -30,7 +36,7 @@ pub fn fig1(opts: &ReportOpts) -> String {
     let mut fp32_mem = 0usize;
     let mut rows = Vec::new();
     for (i, method) in method_rows().into_iter().enumerate() {
-        let r = run_job(&server, &job(opts, i as u64, "gpqa", method, PeftKind::Lora));
+        let r = run(&server, &job(opts, i as u64, "gpqa", method, PeftKind::Lora));
         if method == MethodKind::Fp32 {
             fp32_mem = r.memory.total();
         }
@@ -62,7 +68,7 @@ pub fn fig4(opts: &ReportOpts) -> String {
             let mut base_lat = 1.0;
             let mut base_mem = 1.0;
             for (i, method) in method_rows().into_iter().enumerate() {
-                let r = run_job(&server, &job(opts, i as u64, dataset, method, PeftKind::Lora));
+                let r = run(&server, &job(opts, i as u64, dataset, method, PeftKind::Lora));
                 if method == MethodKind::Fp32 {
                     base_lat = r.mean_step_secs;
                     base_mem = r.memory.total() as f64;
@@ -90,7 +96,7 @@ pub fn fig5(opts: &ReportOpts) -> String {
             &["Method", "Acc↑", "Latency/step", "Memory"],
         );
         for (i, method) in method_rows().into_iter().enumerate() {
-            let r = run_job(&server, &job(opts, i as u64, "gpqa", method, peft));
+            let r = run(&server, &job(opts, i as u64, "gpqa", method, peft));
             t.push(vec![
                 r.method.label().to_string(),
                 f3(r.metric("acc")),
@@ -150,7 +156,7 @@ pub fn fig7(opts: &ReportOpts) -> String {
             let mut j = job(opts, i as u64, "lambada", method, PeftKind::Lora);
             j.max_len = 256;
             j.batch_size = opts.batch.min(2);
-            let r = run_job(&server, &j);
+            let r = run(&server, &j);
             t.push(vec![
                 r.method.label().to_string(),
                 f3(r.metric("acc")),
@@ -174,7 +180,7 @@ pub fn table1(opts: &ReportOpts) -> String {
             &["Method", "Latency/step", "Memory", "ROUGE-L↑", "PPL↓", "Acc↑"],
         );
         for (i, method) in method_rows().into_iter().enumerate() {
-            let r = run_job(&server, &job(opts, i as u64, dataset, method, PeftKind::Lora));
+            let r = run(&server, &job(opts, i as u64, dataset, method, PeftKind::Lora));
             t.push(vec![
                 r.method.label().to_string(),
                 secs(r.mean_step_secs),
@@ -196,12 +202,12 @@ pub fn table2(opts: &ReportOpts) -> String {
     let server = PreprocessServer::new(opts.server_cfg(&opts.preset));
     // device cap: geometric mean of Quaff and FP32 totals → Quaff fits,
     // FP32/Smooth_D page (mirrors the RTX 2080 Super 8 GB situation).
-    let probe_fp32 = run_job(&server, &{
+    let probe_fp32 = run(&server, &{
         let mut j = job(opts, 90, "oig-chip2", MethodKind::Fp32, PeftKind::Lora);
         j.steps = 1;
         j
     });
-    let probe_quaff = run_job(&server, &{
+    let probe_quaff = run(&server, &{
         let mut j = job(opts, 91, "oig-chip2", MethodKind::Quaff, PeftKind::Lora);
         j.steps = 1;
         j
@@ -224,12 +230,12 @@ pub fn table2(opts: &ReportOpts) -> String {
         // translate the wall-clock budget into steps using a 1-step probe
         let mut probe = j.clone();
         probe.steps = 1;
-        let p = run_job(&server, &probe);
+        let p = run(&server, &probe);
         let paged = p.memory.total() > cap;
         let eff_step = p.mean_step_secs * if paged { PAGING_PENALTY } else { 1.0 };
         let steps = ((opts.budget_secs / eff_step).floor() as u64).clamp(1, opts.steps * 4);
         j.steps = steps;
-        let r = run_job(&server, &j);
+        let r = run(&server, &j);
         t.push(vec![
             r.method.label().to_string(),
             secs(eff_step),
@@ -258,13 +264,13 @@ pub fn table3(opts: &ReportOpts) -> String {
     for peft in PeftKind::ALL {
         let mut best: f64 = 0.0;
         for (i, m) in baselines.iter().enumerate() {
-            let r = run_job(&server, &job(opts, i as u64, "gpqa", *m, peft));
+            let r = run(&server, &job(opts, i as u64, "gpqa", *m, peft));
             best = best.max(r.metric("acc"));
         }
         best_row.push(f3(best));
-        let r = run_job(&server, &job(opts, 20, "gpqa", MethodKind::QuaffNoMomentum, peft));
+        let r = run(&server, &job(opts, 20, "gpqa", MethodKind::QuaffNoMomentum, peft));
         nomom_row.push(f3(r.metric("acc")));
-        let r = run_job(&server, &job(opts, 21, "gpqa", MethodKind::Quaff, peft));
+        let r = run(&server, &job(opts, 21, "gpqa", MethodKind::Quaff, peft));
         quaff_row.push(f3(r.metric("acc")));
     }
     t.push(best_row);
@@ -285,7 +291,7 @@ pub fn table4(opts: &ReportOpts) -> String {
         j.max_len = 256;
         j.batch_size = opts.batch.min(2);
         j.grad_accum = 2;
-        let r = run_job(&server, &j);
+        let r = run(&server, &j);
         t.push(vec![
             r.method.label().to_string(),
             secs(r.mean_step_secs),
@@ -316,7 +322,7 @@ pub fn table5(opts: &ReportOpts) -> String {
                 j.max_len = 256;
                 j.batch_size = opts.batch.min(2);
             }
-            let r = run_job(&server, &j);
+            let r = run(&server, &j);
             row.push(f3(r.metric(key)));
         }
         t.push(row);

@@ -205,13 +205,19 @@ pub trait ExecBackend {
 pub type NativeKernel = Box<dyn Fn(&[HostValue]) -> Result<Vec<HostValue>> + Send + Sync>;
 
 /// Pure-Rust [`ExecBackend`]: a registry of named kernels running on the L3
-/// tensor substrate. Ships with the quantized-linear hot path built in, so
-/// the backend abstraction is exercised end-to-end without PJRT:
+/// tensor substrate — every registered kernel executes on the sharded
+/// `tensor::pool` paths (`QUAFF_THREADS` wide), so the backend abstraction
+/// exposes the thread pool without touching the `pjrt` feature path. Ships
+/// with the quantized-linear hot path built in, so the abstraction is
+/// exercised end-to-end without PJRT:
 ///
-/// * `"matmul"` — `(A [m,k], B [k,n]) → [m,n]` f32, cache-blocked.
+/// * `"matmul"` — `(A [m,k], B [k,n]) → [m,n]` f32, cache-blocked,
+///   row-sharded.
 /// * `"quant_linear"` — `(X [t,cin], W [cin,cout]) → [t,cout]`: per-token
 ///   quantize X, per-OC quantize W, packed int8 matmul with fused dequant —
 ///   the same kernel sequence `QuaffLinear` runs per step.
+/// * `"col_abs_max"` — `(X [r,c]) → [c]`: the pooled tree-reduced channel
+///   statistic.
 pub struct NativeBackend {
     kernels: BTreeMap<String, NativeKernel>,
 }
@@ -223,6 +229,7 @@ impl NativeBackend {
         };
         b.register("matmul", Box::new(native_matmul));
         b.register("quant_linear", Box::new(native_quant_linear));
+        b.register("col_abs_max", Box::new(native_col_abs_max));
         b
     }
 
@@ -240,7 +247,7 @@ impl Default for NativeBackend {
 
 impl ExecBackend for NativeBackend {
     fn platform(&self) -> String {
-        "native-cpu".to_string()
+        format!("native-cpu/{}t", crate::tensor::pool::active_threads())
     }
 
     fn entry_points(&self) -> Vec<String> {
@@ -268,6 +275,16 @@ fn native_matmul(inputs: &[HostValue]) -> Result<Vec<HostValue>> {
     let mut y = Matrix::zeros(a.rows(), b.cols());
     kernels::matmul_into(&a, &b, &mut y);
     Ok(vec![HostValue::from_matrix(&y)])
+}
+
+fn native_col_abs_max(inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+    if inputs.len() != 1 {
+        bail!("col_abs_max expects 1 input, got {}", inputs.len());
+    }
+    let x = inputs[0].to_matrix().context("col_abs_max input X")?;
+    let mut out = vec![0.0f32; x.cols()];
+    kernels::col_abs_max_into(&x, &mut out);
+    Ok(vec![HostValue::F32(vec![x.cols()], out)])
 }
 
 fn native_quant_linear(inputs: &[HostValue]) -> Result<Vec<HostValue>> {
@@ -338,8 +355,13 @@ mod tests {
         let a = Matrix::randn(5, 8, &mut r, 1.0);
         let b = Matrix::randn(8, 3, &mut r, 1.0);
         let backend = NativeBackend::new();
-        assert_eq!(backend.platform(), "native-cpu");
+        assert!(
+            backend.platform().starts_with("native-cpu"),
+            "platform should name the native substrate (got {})",
+            backend.platform()
+        );
         assert!(backend.entry_points().contains(&"matmul".to_string()));
+        assert!(backend.entry_points().contains(&"col_abs_max".to_string()));
         let out = backend
             .execute(
                 "matmul",
@@ -369,6 +391,20 @@ mod tests {
         let want = x.matmul(&w);
         let err = error_between(&want, &y);
         assert!(err.sqnr_db > 20.0, "int8 path too lossy: {} dB", err.sqnr_db);
+    }
+
+    #[test]
+    fn native_backend_col_abs_max_matches_tensor_path() {
+        use crate::util::prng::Rng;
+        let mut r = Rng::new(9);
+        let x = Matrix::randn(17, 11, &mut r, 2.0);
+        let backend = NativeBackend::new();
+        let out = backend
+            .execute("col_abs_max", &[HostValue::from_matrix(&x)])
+            .unwrap();
+        assert_eq!(out[0].shape(), &[11]);
+        assert_eq!(out[0].as_f32().unwrap(), x.col_abs_max());
+        assert!(backend.execute("col_abs_max", &[]).is_err());
     }
 
     #[test]

@@ -1,6 +1,14 @@
 //! INT8 matrix with i32-accumulating integer matmul — the CPU analogue of
 //! the INT8 tensor-core (paper, CUDA) / MXU-int8 (our Pallas port) path.
+//!
+//! The matmuls are row-sharded across [`pool`](super::pool): each shard owns
+//! a fixed range of activation rows and its own widening-scratch **lane**,
+//! so shards never share mutable state and the result is bit-identical to
+//! the serial loop (integer accumulation is exact anyway). The `_lanes_into`
+//! variants take one scratch buffer per potential shard, typically drawn
+//! from the workspace's lane pools.
 
+use super::pool::{self, shard_range, SplitMut};
 use crate::util::prng::Rng;
 
 /// Dense row-major i8 matrix.
@@ -81,25 +89,23 @@ impl I8Matrix {
     }
 
     /// Integer matmul `self(i8) @ other(i8) -> i32` with an i16-widening
-    /// inner loop. i-k-j order so the j loop auto-vectorizes.
+    /// inner loop. i-k-j order so the j loop auto-vectorizes. Row-sharded
+    /// for large launches (exact integer math — identical for any split).
     pub fn matmul_i32(&self, other: &I8Matrix) -> Vec<i32> {
         assert_eq!(self.cols, other.rows, "matmul dim mismatch");
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = vec![0i32; m * n];
-        for i in 0..m {
-            let arow = &self.data[i * k..(i + 1) * k];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (kk, &a) in arow.iter().enumerate() {
-                if a == 0 {
-                    continue;
-                }
-                let a = a as i32;
-                let brow = &other.data[kk * n..(kk + 1) * n];
-                for (o, &b) in orow.iter_mut().zip(brow) {
-                    *o += a * b as i32;
-                }
-            }
+        let shards = pool::shards_for(m, m * k * n);
+        if shards <= 1 {
+            i8_matmul_rows(&self.data, &other.data, &mut out, 0, m, k, n);
+            return out;
         }
+        let split = SplitMut::new(&mut out);
+        pool::run_shards(shards, &|s| {
+            let (r0, r1) = shard_range(m, shards, s);
+            let orows = unsafe { split.slice(r0 * n, (r1 - r0) * n) };
+            i8_matmul_rows(&self.data, &other.data, orows, r0, r1, k, n);
+        });
         out
     }
 
@@ -122,7 +128,8 @@ impl I8Matrix {
 
     /// Fast fused dequantizing matmul against pre-packed weights:
     /// `out[i,j] += Δ_row[i] · dot(self[i,:], packedᵀ[:,j]) · Δ_col[j]`.
-    /// The activation row is widened to i16 once per row.
+    /// The activation row is widened to i16 once per row. Allocates its own
+    /// scratch lanes; hot-path callers use [`Self::matmul_dequant_packed_lanes_into`].
     pub fn matmul_dequant_packed_into(
         &self,
         packed: &PackedWeights,
@@ -130,13 +137,13 @@ impl I8Matrix {
         col_scale: &[f32],
         out: &mut [f32],
     ) {
-        let mut a16 = Vec::new();
-        self.matmul_dequant_packed_scratch_into(packed, row_scale, col_scale, &mut a16, out);
+        let n_lanes = pool::active_threads().max(1);
+        let mut lanes: Vec<Vec<i16>> = (0..n_lanes).map(|_| Vec::new()).collect();
+        self.matmul_dequant_packed_lanes_into(packed, row_scale, col_scale, &mut lanes, out);
     }
 
     /// [`Self::matmul_dequant_packed_into`] with the i16 activation-widening
-    /// scratch provided by the caller (resized as needed) — the
-    /// workspace-backed hot path uses this to stay allocation-free.
+    /// scratch provided by the caller (resized as needed) — strictly serial.
     pub fn matmul_dequant_packed_scratch_into(
         &self,
         packed: &PackedWeights,
@@ -145,29 +152,53 @@ impl I8Matrix {
         a16: &mut Vec<i16>,
         out: &mut [f32],
     ) {
-        let (m, k) = (self.rows, self.cols);
-        let n = packed.n;
-        assert_eq!(packed.k, k, "matmul dim mismatch");
-        assert_eq!(row_scale.len(), m);
-        assert_eq!(col_scale.len(), n);
-        assert_eq!(out.len(), m * n);
-        a16.resize(k, 0);
-        for i in 0..m {
-            let arow = &self.data[i * k..(i + 1) * k];
-            for (dst, &v) in a16.iter_mut().zip(arow) {
-                *dst = v as i16;
-            }
-            let rs = row_scale[i];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for j in 0..n {
-                let brow = &packed.data[j * k..(j + 1) * k];
-                let mut acc = 0i32;
-                for (&a, &b) in a16.iter().zip(brow) {
-                    acc += a as i32 * b as i32;
-                }
-                orow[j] += rs * acc as f32 * col_scale[j];
-            }
+        self.packed_checks(packed, row_scale, col_scale, out);
+        packed_matmul_rows(
+            &self.data, packed, row_scale, col_scale, a16, out, 0, self.rows, self.cols,
+        );
+    }
+
+    /// Row-sharded [`Self::matmul_dequant_packed_into`] with one widening
+    /// lane per potential shard (at most `lanes.len()` shards run; pass the
+    /// workspace's per-thread lanes). Bit-identical to the serial path.
+    pub fn matmul_dequant_packed_lanes_into(
+        &self,
+        packed: &PackedWeights,
+        row_scale: &[f32],
+        col_scale: &[f32],
+        lanes: &mut [Vec<i16>],
+        out: &mut [f32],
+    ) {
+        self.packed_checks(packed, row_scale, col_scale, out);
+        assert!(!lanes.is_empty(), "need at least one scratch lane");
+        let (m, k, n) = (self.rows, self.cols, packed.n);
+        let shards = pool::shards_for(m, m * k * n).min(lanes.len());
+        if shards <= 1 {
+            return packed_matmul_rows(
+                &self.data, packed, row_scale, col_scale, &mut lanes[0], out, 0, m, k,
+            );
         }
+        let out_split = SplitMut::new(out);
+        let lane_split = SplitMut::new(lanes);
+        pool::run_shards(shards, &|s| {
+            let (r0, r1) = shard_range(m, shards, s);
+            let orows = unsafe { out_split.slice(r0 * n, (r1 - r0) * n) };
+            let a16 = unsafe { lane_split.at(s) };
+            packed_matmul_rows(&self.data, packed, row_scale, col_scale, a16, orows, r0, r1, k);
+        });
+    }
+
+    fn packed_checks(
+        &self,
+        packed: &PackedWeights,
+        row_scale: &[f32],
+        col_scale: &[f32],
+        out: &[f32],
+    ) {
+        assert_eq!(packed.k, self.cols, "matmul dim mismatch");
+        assert_eq!(row_scale.len(), self.rows);
+        assert_eq!(col_scale.len(), packed.n);
+        assert_eq!(out.len(), self.rows * packed.n);
     }
 
     /// Fused dequantizing matmul: `Δ_row[i] * (self @ other)[i,j] * Δ_col[j]`.
@@ -188,7 +219,9 @@ impl I8Matrix {
     }
 
     /// [`Self::matmul_dequant_into`] with the i32 accumulator row provided
-    /// by the caller (resized as needed) — allocation-free on reuse.
+    /// by the caller (resized as needed) — strictly serial, allocation-free
+    /// on reuse. (The unpacked matmul only runs over the tiny outlier slice
+    /// on the hot path, so it does not earn a sharded variant.)
     pub fn matmul_dequant_scratch_into(
         &self,
         other: &I8Matrix,
@@ -221,6 +254,68 @@ impl I8Matrix {
             for ((o, &a), &cs) in orow.iter_mut().zip(acc.iter()).zip(col_scale) {
                 *o += rs * a as f32 * cs;
             }
+        }
+    }
+}
+
+/// Row-range core of [`I8Matrix::matmul_i32`]: output rows `r0..r1` into
+/// `orows` (relative sub-slice).
+fn i8_matmul_rows(
+    ad: &[i8],
+    bd: &[i8],
+    orows: &mut [i32],
+    r0: usize,
+    r1: usize,
+    k: usize,
+    n: usize,
+) {
+    orows.fill(0);
+    for i in r0..r1 {
+        let arow = &ad[i * k..(i + 1) * k];
+        let orow = &mut orows[(i - r0) * n..(i - r0 + 1) * n];
+        for (kk, &a) in arow.iter().enumerate() {
+            if a == 0 {
+                continue;
+            }
+            let a = a as i32;
+            let brow = &bd[kk * n..(kk + 1) * n];
+            for (o, &b) in orow.iter_mut().zip(brow) {
+                *o += a * b as i32;
+            }
+        }
+    }
+}
+
+/// Row-range core of the packed fused dequantizing matmul: rows `r0..r1`
+/// of the activation, accumulating into the relative sub-slice `orows`.
+#[allow(clippy::too_many_arguments)]
+fn packed_matmul_rows(
+    xd: &[i8],
+    packed: &PackedWeights,
+    row_scale: &[f32],
+    col_scale: &[f32],
+    a16: &mut Vec<i16>,
+    orows: &mut [f32],
+    r0: usize,
+    r1: usize,
+    k: usize,
+) {
+    let n = packed.n;
+    a16.resize(k, 0);
+    for i in r0..r1 {
+        let arow = &xd[i * k..(i + 1) * k];
+        for (dst, &v) in a16.iter_mut().zip(arow) {
+            *dst = v as i16;
+        }
+        let rs = row_scale[i];
+        let orow = &mut orows[(i - r0) * n..(i - r0 + 1) * n];
+        for j in 0..n {
+            let brow = &packed.data[j * k..(j + 1) * k];
+            let mut acc = 0i32;
+            for (&a, &b) in a16.iter().zip(brow) {
+                acc += a as i32 * b as i32;
+            }
+            orow[j] += rs * acc as f32 * col_scale[j];
         }
     }
 }

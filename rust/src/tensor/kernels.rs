@@ -8,33 +8,42 @@
 //!
 //! All kernels **overwrite** `out` completely; none of them read its prior
 //! contents, so dirty recycled buffers are safe inputs.
+//!
+//! Hot kernels are **row-sharded** across the [`pool`](super::pool): each
+//! shard owns a fixed contiguous range of output rows and runs the same
+//! row-range core the serial path runs, so threaded results are
+//! bit-identical to single-threaded ones for *any* thread count (asserted by
+//! `tests/thread_determinism.rs`). Small launches (decode shapes, tiny
+//! matrices) fall below [`pool::MIN_SHARD_WORK`] and stay serial.
 
+use super::pool::{self, shard_range, SplitMut};
 use super::{I8Matrix, Matrix, BLOCK_J, BLOCK_K};
 
 /// Transpose tile edge: 32×32 f32 tiles = 4 KiB read + 4 KiB write, which
 /// keeps both the row-major reads and the column-major writes inside L1.
 const TRANSPOSE_TILE: usize = 32;
 
-/// `out = a @ b` — cache-blocked i-k-j kernel (LLVM vectorizes the j loop).
-pub fn matmul_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
-    assert_eq!(a.cols(), b.rows(), "matmul dim mismatch");
-    assert_eq!(
-        (out.rows(), out.cols()),
-        (a.rows(), b.cols()),
-        "matmul out shape mismatch"
-    );
-    let (m, k, n) = (a.rows(), a.cols(), b.cols());
-    let ad = a.data();
-    let bd = b.data();
-    let od = out.data_mut();
-    od.fill(0.0);
+/// Row-range core of [`matmul_into`]: compute output rows `r0..r1` into
+/// `orows` (the sub-slice for exactly those rows). Per-row accumulation
+/// order is fixed (kb → jb → kk), independent of the range split.
+fn matmul_rows(
+    ad: &[f32],
+    bd: &[f32],
+    orows: &mut [f32],
+    r0: usize,
+    r1: usize,
+    k: usize,
+    n: usize,
+) {
+    orows.fill(0.0);
     for kb in (0..k).step_by(BLOCK_K) {
         let kend = (kb + BLOCK_K).min(k);
         for jb in (0..n).step_by(BLOCK_J) {
             let jend = (jb + BLOCK_J).min(n);
-            for i in 0..m {
+            for i in r0..r1 {
                 let arow = &ad[i * k..(i + 1) * k];
-                let orow = &mut od[i * n + jb..i * n + jend];
+                let base = (i - r0) * n;
+                let orow = &mut orows[base + jb..base + jend];
                 for kk in kb..kend {
                     let av = arow[kk];
                     if av == 0.0 {
@@ -46,6 +55,55 @@ pub fn matmul_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
                     }
                 }
             }
+        }
+    }
+}
+
+/// `out = a @ b` — cache-blocked i-k-j kernel (LLVM vectorizes the j loop),
+/// row-sharded across the pool for large launches.
+pub fn matmul_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    assert_eq!(a.cols(), b.rows(), "matmul dim mismatch");
+    assert_eq!(
+        (out.rows(), out.cols()),
+        (a.rows(), b.cols()),
+        "matmul out shape mismatch"
+    );
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let ad = a.data();
+    let bd = b.data();
+    let od = out.data_mut();
+    let shards = pool::shards_for(m, m * k * n);
+    if shards <= 1 {
+        return matmul_rows(ad, bd, od, 0, m, k, n);
+    }
+    let split = SplitMut::new(od);
+    pool::run_shards(shards, &|s| {
+        let (r0, r1) = shard_range(m, shards, s);
+        let orows = unsafe { split.slice(r0 * n, (r1 - r0) * n) };
+        matmul_rows(ad, bd, orows, r0, r1, k, n);
+    });
+}
+
+/// Row-range core of [`matmul_bt_into`].
+fn matmul_bt_rows(
+    ad: &[f32],
+    bd: &[f32],
+    orows: &mut [f32],
+    r0: usize,
+    r1: usize,
+    k: usize,
+    n: usize,
+) {
+    for i in r0..r1 {
+        let arow = &ad[i * k..(i + 1) * k];
+        let orow = &mut orows[(i - r0) * n..(i - r0 + 1) * n];
+        for j in 0..n {
+            let brow = &bd[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            orow[j] = acc;
         }
     }
 }
@@ -63,21 +121,48 @@ pub fn matmul_bt_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
     let ad = a.data();
     let bd = b.data();
     let od = out.data_mut();
-    for i in 0..m {
-        let arow = &ad[i * k..(i + 1) * k];
-        let orow = &mut od[i * n..(i + 1) * n];
-        for j in 0..n {
-            let brow = &bd[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for (&av, &bv) in arow.iter().zip(brow) {
-                acc += av * bv;
+    let shards = pool::shards_for(m, m * k * n);
+    if shards <= 1 {
+        return matmul_bt_rows(ad, bd, od, 0, m, k, n);
+    }
+    let split = SplitMut::new(od);
+    pool::run_shards(shards, &|s| {
+        let (r0, r1) = shard_range(m, shards, s);
+        let orows = unsafe { split.slice(r0 * n, (r1 - r0) * n) };
+        matmul_bt_rows(ad, bd, orows, r0, r1, k, n);
+    });
+}
+
+/// Row-range core of [`matmul_at_into`]: output rows `c0..c1` (columns of
+/// `a`). Per-output-row accumulation order over `t` is fixed.
+fn matmul_at_rows(
+    ad: &[f32],
+    bd: &[f32],
+    orows: &mut [f32],
+    c0: usize,
+    c1: usize,
+    k: usize,
+    m: usize,
+    n: usize,
+) {
+    orows.fill(0.0);
+    for t in 0..k {
+        let arow = &ad[t * m + c0..t * m + c1];
+        let brow = &bd[t * n..(t + 1) * n];
+        for (ii, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
             }
-            orow[j] = acc;
+            let orow = &mut orows[ii * n..(ii + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
         }
     }
 }
 
 /// `out = a.T @ b` — the gradient-accumulation shape `dW = X.T @ dY`.
+/// Sharded over output rows (columns of `a`), so no write races.
 pub fn matmul_at_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
     assert_eq!(a.rows(), b.rows(), "matmul_at dim mismatch");
     assert_eq!(
@@ -89,20 +174,16 @@ pub fn matmul_at_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
     let ad = a.data();
     let bd = b.data();
     let od = out.data_mut();
-    od.fill(0.0);
-    for t in 0..k {
-        let arow = &ad[t * m..(t + 1) * m];
-        let brow = &bd[t * n..(t + 1) * n];
-        for (i, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let orow = &mut od[i * n..(i + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
+    let shards = pool::shards_for(m, k * m * n);
+    if shards <= 1 {
+        return matmul_at_rows(ad, bd, od, 0, m, k, m, n);
     }
+    let split = SplitMut::new(od);
+    pool::run_shards(shards, &|s| {
+        let (c0, c1) = shard_range(m, shards, s);
+        let orows = unsafe { split.slice(c0 * n, (c1 - c0) * n) };
+        matmul_at_rows(ad, bd, orows, c0, c1, k, m, n);
+    });
 }
 
 /// `out = src.T` — cache-blocked transpose. The naive get/set loop strides
@@ -132,14 +213,11 @@ pub fn transpose_into(src: &Matrix, out: &mut Matrix) {
     }
 }
 
-/// Per-column absolute maxima into `out` (length `src.cols()`, fully
-/// overwritten) — the channel statistic the whole paper is built on,
-/// shared by `Matrix::col_abs_max`, LLM.int8's detector, and the per-OC
-/// quantizer so the reduction exists exactly once.
-pub fn col_abs_max_into(src: &Matrix, out: &mut [f32]) {
-    assert_eq!(out.len(), src.cols(), "col_abs_max out length mismatch");
+/// Row-range core of the column-max reduction: maxima of rows `r0..r1` into
+/// `out` (length `cols`, fully overwritten).
+fn col_abs_max_rows(src: &Matrix, out: &mut [f32], r0: usize, r1: usize) {
     out.fill(0.0);
-    for i in 0..src.rows() {
+    for i in r0..r1 {
         for (m, &v) in out.iter_mut().zip(src.row(i)) {
             let a = v.abs();
             if a > *m {
@@ -147,6 +225,68 @@ pub fn col_abs_max_into(src: &Matrix, out: &mut [f32]) {
             }
         }
     }
+}
+
+/// Shard `src`'s rows, reduce per-shard partial maxima, then merge the
+/// lanes **in fixed shard order**. `partials` must hold
+/// `(shards - 1) * cols` values (shard 0 reduces straight into `out`).
+/// `max` is exact, so the tree reduction is bit-identical to the serial
+/// loop for any shard count.
+fn col_abs_max_sharded(src: &Matrix, out: &mut [f32], partials: &mut [f32], shards: usize) {
+    let (rows, cols) = (src.rows(), src.cols());
+    debug_assert!(partials.len() >= (shards - 1) * cols);
+    let out_split = SplitMut::new(&mut *out);
+    let lane_split = SplitMut::new(&mut *partials);
+    pool::run_shards(shards, &|s| {
+        let (r0, r1) = shard_range(rows, shards, s);
+        let dst = unsafe {
+            if s == 0 {
+                out_split.slice(0, cols)
+            } else {
+                lane_split.slice((s - 1) * cols, cols)
+            }
+        };
+        col_abs_max_rows(src, dst, r0, r1);
+    });
+    for s in 1..shards {
+        let lane = &partials[(s - 1) * cols..s * cols];
+        for (m, &v) in out.iter_mut().zip(lane) {
+            if v > *m {
+                *m = v;
+            }
+        }
+    }
+}
+
+/// Per-column absolute maxima into `out` (length `src.cols()`, fully
+/// overwritten) — the channel statistic the whole paper is built on,
+/// shared by `Matrix::col_abs_max`, LLM.int8's detector, and the per-OC
+/// quantizer so the reduction exists exactly once. Large inputs reduce
+/// per-shard partials merged in fixed order (lane scratch allocated here;
+/// hot-path callers use [`col_abs_max_ws`]).
+pub fn col_abs_max_into(src: &Matrix, out: &mut [f32]) {
+    assert_eq!(out.len(), src.cols(), "col_abs_max out length mismatch");
+    let rows = src.rows();
+    let shards = pool::shards_for(rows, rows * src.cols());
+    if shards <= 1 {
+        return col_abs_max_rows(src, out, 0, rows);
+    }
+    let mut partials = vec![0.0f32; (shards - 1) * src.cols()];
+    col_abs_max_sharded(src, out, &mut partials, shards);
+}
+
+/// [`col_abs_max_into`] with the per-shard partial lanes drawn from the
+/// workspace — allocation-free at steady state.
+pub fn col_abs_max_ws(src: &Matrix, out: &mut [f32], ws: &mut super::Workspace) {
+    assert_eq!(out.len(), src.cols(), "col_abs_max out length mismatch");
+    let rows = src.rows();
+    let shards = pool::shards_for(rows, rows * src.cols());
+    if shards <= 1 {
+        return col_abs_max_rows(src, out, 0, rows);
+    }
+    let mut partials = ws.take_f32("kern.camax.lanes", (shards - 1) * src.cols());
+    col_abs_max_sharded(src, out, &mut partials, shards);
+    ws.put_f32("kern.camax.lanes", partials);
 }
 
 /// Gather columns `idx` of `src` into `out` (`rows × idx.len()`).

@@ -6,18 +6,24 @@
 //! analogue of the INT8 tensor-core / MXU path), and the handful of
 //! elementwise/reduction ops the transformer and the quantizers need.
 //!
-//! Everything is single-threaded (the benchmark host has one core) but
-//! cache-blocked and written so LLVM auto-vectorizes the inner loops.
+//! Everything is cache-blocked and written so LLVM auto-vectorizes the
+//! inner loops, and the hot kernels are **row-sharded** across the
+//! hand-rolled [`pool`] thread pool (`QUAFF_THREADS` / available
+//! parallelism): shards own fixed disjoint output ranges and run the same
+//! row-range cores as the serial path, so threaded results are
+//! bit-identical to single-threaded ones. See `DESIGN.md` §Threading.
 //!
 //! The execution-engine layer lives here too: [`kernels`] holds the `_into`
 //! variants of every hot loop (they write into caller-provided buffers) and
 //! [`Workspace`] is the keyed, grow-only scratch arena those buffers come
-//! from, so the fine-tuning hot path stops allocating at steady state.
+//! from — including per-thread scratch *lanes* for the sharded kernels — so
+//! the fine-tuning hot path stops allocating at steady state.
 //! See `DESIGN.md` §Execution engine.
 
 mod i8mat;
 pub mod kernels;
 mod matrix;
+pub mod pool;
 mod workspace;
 
 pub use i8mat::{I8Matrix, PackedWeights};

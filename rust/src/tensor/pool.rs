@@ -1,0 +1,464 @@
+//! `tensor::pool` — the hand-rolled, zero-dependency thread pool behind the
+//! sharded kernels.
+//!
+//! Design (see DESIGN.md §Threading):
+//!
+//! * **Spawn-once.** A global pool is built lazily on first use and lives for
+//!   the process. Size comes from, in priority order: [`init`] (the
+//!   [`ThreadConfig`] API), the `QUAFF_THREADS` environment variable, then
+//!   `std::thread::available_parallelism()`.
+//! * **Channel of closures.** Each worker owns an `mpsc` receiver; a kernel
+//!   launch broadcasts one small [`Job`] per participating worker. A job is a
+//!   pointer to a stack-allocated scope descriptor (shard counter + latch +
+//!   the borrowed closure), so launches are cheap — no per-shard boxing.
+//! * **Scoped.** [`ThreadPool::run`] does not return until every broadcast
+//!   worker has finished the scope, so the closure may borrow locals; the
+//!   `'static`-erasure is contained in this module.
+//! * **Work-stealing shards.** Shards are claimed from an atomic counter, but
+//!   every shard maps to a *fixed* output range ([`shard_range`]), so results
+//!   never depend on which thread ran which shard.
+//! * **Deterministic by construction.** The sharded kernels either write
+//!   disjoint fixed row ranges (bit-identical to the serial loop for any
+//!   shard count) or reduce per-unit partials merged in fixed order.
+//! * **No nesting.** A launch from inside a pool scope (worker thread, or a
+//!   re-entrant call on the launching thread) runs its shards inline — the
+//!   kernels compose without deadlock and without oversubscription.
+//!
+//! The pool size is fixed at spawn, but the *active* width is adjustable at
+//! runtime ([`set_active_threads`]) — `bench_threads` sweeps 1/2/4/8 over one
+//! pool, and `QUAFF_THREADS=1` forces every kernel down the serial path.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::OnceLock;
+use std::thread::{self, Thread};
+
+/// Minimum work (in rough fused-op equivalents) per shard before a kernel
+/// splits. Below ~64k ops the broadcast + wakeup overhead (a few µs) is not
+/// worth it — decode-shape (`t = 1`) launches always stay serial.
+pub const MIN_SHARD_WORK: usize = 1 << 16;
+
+/// Pool sizing, set via [`init`] before first kernel use.
+#[derive(Clone, Copy, Debug)]
+pub struct ThreadConfig {
+    /// Total threads participating in sharded kernels (callers + workers).
+    pub threads: usize,
+}
+
+impl ThreadConfig {
+    /// Resolve from the environment: `QUAFF_THREADS` if set to a positive
+    /// integer, else the machine's available parallelism.
+    pub fn from_env() -> ThreadConfig {
+        let env = std::env::var("QUAFF_THREADS").ok();
+        ThreadConfig {
+            threads: parse_threads(env.as_deref()),
+        }
+    }
+}
+
+/// `QUAFF_THREADS` parsing: positive integers win; unset/garbage falls back
+/// to available parallelism (≥ 1).
+fn parse_threads(val: Option<&str>) -> usize {
+    match val.and_then(|v| v.trim().parse::<usize>().ok()) {
+        Some(n) if n >= 1 => n,
+        _ => thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
+/// One kernel launch, shared between the launching thread and the workers it
+/// messaged. Lives on the launcher's stack for the duration of the scope.
+struct Scope {
+    /// The sharded closure, lifetime-erased; [`ThreadPool::run`] guarantees
+    /// it outlives every job that references this scope.
+    f: *const (dyn Fn(usize) + Sync),
+    /// Next shard index to claim.
+    next: AtomicUsize,
+    n_shards: usize,
+    /// Workers that have not yet finished the scope.
+    pending: AtomicUsize,
+    panicked: AtomicBool,
+    /// The launching thread, parked until `pending` drains.
+    waiter: Thread,
+}
+
+impl Scope {
+    /// Claim and run shards until the counter runs out.
+    fn drain(&self) {
+        // Safety: `ThreadPool::run` keeps the closure alive until the scope
+        // latch opens, and never returns before that.
+        let f = unsafe { &*self.f };
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n_shards {
+                break;
+            }
+            if catch_unwind(AssertUnwindSafe(|| f(i))).is_err() {
+                self.panicked.store(true, Ordering::Release);
+            }
+        }
+    }
+
+    /// Worker-side completion. The `fetch_sub` is this thread's **last**
+    /// access to the scope: the waiter handle is cloned out first, because
+    /// the instant `pending` hits zero the launcher may return and free the
+    /// stack-allocated scope. (A Mutex/Condvar latch would have exactly that
+    /// use-after-free window between its decrement and its lock.)
+    fn finish_one(&self) {
+        let waiter = self.waiter.clone();
+        if self.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            waiter.unpark();
+        }
+    }
+
+    /// Launcher-side wait for every messaged worker. `unpark` before `park`
+    /// leaves a token, so the wakeup cannot be lost; spurious wakeups just
+    /// re-check the latch.
+    fn wait(&self) {
+        while self.pending.load(Ordering::Acquire) != 0 {
+            thread::park();
+        }
+    }
+}
+
+/// A type-erased pointer to a [`Scope`]; sent over the worker channels.
+struct Job(*const Scope);
+
+// Safety: the referenced Scope outlives the job (scoped execution), and all
+// of its shared state is atomics plus a `Thread` handle (Send + Sync); the
+// closure it carries is required to be Sync by `ThreadPool::run`'s signature.
+unsafe impl Send for Job {}
+
+thread_local! {
+    /// True while this thread is executing inside a pool scope (worker body
+    /// or a launching thread mid-`run`). Re-entrant launches go serial.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// The spawn-once pool. One instance lives in a process-global
+/// [`OnceLock`]; explicit instances exist for the pool's own tests.
+pub struct ThreadPool {
+    senders: Vec<Sender<Job>>,
+    handles: Vec<thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Build a pool where `threads` total threads (the caller plus
+    /// `threads - 1` workers) cooperate on each launch.
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let mut senders = Vec::with_capacity(threads - 1);
+        let mut handles = Vec::with_capacity(threads - 1);
+        for i in 1..threads {
+            let (tx, rx) = channel::<Job>();
+            senders.push(tx);
+            let handle = thread::Builder::new()
+                .name(format!("quaff-pool-{i}"))
+                .spawn(move || worker_loop(rx))
+                .expect("spawning pool worker");
+            handles.push(handle);
+        }
+        ThreadPool {
+            senders,
+            handles,
+            threads,
+        }
+    }
+
+    /// Total cooperating threads (callers + workers).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute `f(0..n_shards)` across up to `n_shards` threads; returns
+    /// after every shard completed. Shards are claimed dynamically but each
+    /// shard index owns a fixed slice of the output, so scheduling never
+    /// changes results. Panics (after completing the scope) if a shard
+    /// panicked.
+    pub fn run(&self, n_shards: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n_shards == 0 {
+            return;
+        }
+        // Wake at most one worker per spare shard; run serial when there is
+        // nobody to share with or we are already inside a pool scope.
+        let workers = self.senders.len().min(n_shards - 1);
+        if workers == 0 || IN_POOL.with(|c| c.get()) {
+            for i in 0..n_shards {
+                f(i);
+            }
+            return;
+        }
+        let scope = Scope {
+            f: f as *const (dyn Fn(usize) + Sync),
+            next: AtomicUsize::new(0),
+            n_shards,
+            pending: AtomicUsize::new(workers),
+            panicked: AtomicBool::new(false),
+            waiter: thread::current(),
+        };
+        for s in &self.senders[..workers] {
+            s.send(Job(&scope as *const Scope))
+                .expect("pool worker channel closed");
+        }
+        IN_POOL.with(|c| c.set(true));
+        scope.drain(); // the launcher participates
+        IN_POOL.with(|c| c.set(false));
+        scope.wait();
+        if scope.panicked.load(Ordering::Acquire) {
+            panic!("tensor::pool: a sharded kernel closure panicked");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.senders.clear(); // disconnect → workers observe Err and exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(rx: Receiver<Job>) {
+    IN_POOL.with(|c| c.set(true));
+    while let Ok(job) = rx.recv() {
+        // Safety: the launching thread keeps the scope alive until `pending`
+        // reaches zero, which happens only after this `finish_one`.
+        let scope = unsafe { &*job.0 };
+        scope.drain();
+        scope.finish_one();
+    }
+}
+
+static POOL: OnceLock<ThreadPool> = OnceLock::new();
+static REQUESTED: AtomicUsize = AtomicUsize::new(0);
+static ACTIVE: AtomicUsize = AtomicUsize::new(0);
+
+/// Request a pool size before first use (the `ThreadConfig` API). Returns
+/// `false` if the global pool was already spawned (the request is ignored —
+/// use `QUAFF_THREADS` or call earlier).
+pub fn init(cfg: ThreadConfig) -> bool {
+    REQUESTED.store(cfg.threads.max(1), Ordering::Relaxed);
+    POOL.get().is_none()
+}
+
+/// The process-global pool, spawned on first use.
+pub fn global() -> &'static ThreadPool {
+    POOL.get_or_init(|| {
+        let requested = REQUESTED.load(Ordering::Relaxed);
+        let threads = if requested == 0 {
+            ThreadConfig::from_env().threads
+        } else {
+            requested
+        };
+        ThreadPool::new(threads)
+    })
+}
+
+/// Threads kernels may currently use (≤ the pool size).
+pub fn active_threads() -> usize {
+    match ACTIVE.load(Ordering::Relaxed) {
+        0 => {
+            let n = global().threads();
+            ACTIVE.store(n, Ordering::Relaxed);
+            n
+        }
+        n => n,
+    }
+}
+
+/// Cap the number of threads kernels use without respawning the pool
+/// (clamped to `[1, pool size]`); returns the effective width. Benches sweep
+/// this; `QUAFF_THREADS=1` makes the default width 1.
+pub fn set_active_threads(n: usize) -> usize {
+    let eff = n.clamp(1, global().threads());
+    ACTIVE.store(eff, Ordering::Relaxed);
+    eff
+}
+
+/// Run `f(shard)` for `shard ∈ 0..n_shards` on the global pool.
+pub fn run_shards(n_shards: usize, f: &(dyn Fn(usize) + Sync)) {
+    global().run(n_shards, f);
+}
+
+/// Shard count for a kernel over `rows` independent rows costing `work`
+/// rough fused-ops in total: enough shards to keep each above
+/// [`MIN_SHARD_WORK`], capped by the active width and the row count.
+/// Returns 1 (serial) for small launches.
+pub fn shards_for(rows: usize, work: usize) -> usize {
+    if rows < 2 {
+        return 1;
+    }
+    let by_work = work / MIN_SHARD_WORK;
+    if by_work <= 1 {
+        return 1;
+    }
+    active_threads().min(rows).min(by_work)
+}
+
+/// The fixed, balanced range of shard `i` of `shards` over `total` items:
+/// contiguous, disjoint, covering `0..total` exactly.
+pub fn shard_range(total: usize, shards: usize, i: usize) -> (usize, usize) {
+    let base = total / shards;
+    let rem = total % shards;
+    let start = i * base + i.min(rem);
+    let len = base + usize::from(i < rem);
+    (start, start + len)
+}
+
+/// Raw view of a mutable slice that sharded closures can carve disjoint
+/// sub-slices from. The borrow checker cannot see the disjointness of
+/// per-shard ranges, so the split is expressed with one contained `unsafe`.
+pub struct SplitMut<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+// Safety: SplitMut hands out access to T values across threads; requiring
+// T: Send matches what std's split_at_mut-based scoped threading would need.
+unsafe impl<T: Send> Send for SplitMut<T> {}
+unsafe impl<T: Send> Sync for SplitMut<T> {}
+
+impl<T> SplitMut<T> {
+    pub fn new(slice: &mut [T]) -> SplitMut<T> {
+        SplitMut {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+        }
+    }
+
+    /// Borrow `[off, off + len)` mutably.
+    ///
+    /// # Safety
+    /// Ranges handed to concurrently running shards must be disjoint, and
+    /// the underlying slice must outlive the use (guaranteed inside a
+    /// [`ThreadPool::run`] scope over a caller-owned buffer).
+    #[allow(clippy::mut_from_ref)] // the whole point: checked disjoint split
+    pub unsafe fn slice(&self, off: usize, len: usize) -> &mut [T] {
+        assert!(off + len <= self.len, "SplitMut range out of bounds");
+        std::slice::from_raw_parts_mut(self.ptr.add(off), len)
+    }
+
+    /// Borrow element `i` mutably (per-shard lane access).
+    ///
+    /// # Safety
+    /// As for [`Self::slice`]: one shard per index.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn at(&self, i: usize) -> &mut T {
+        assert!(i < self.len, "SplitMut index out of bounds");
+        &mut *self.ptr.add(i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_range_partitions_exactly() {
+        for total in [0usize, 1, 2, 7, 64, 1000] {
+            for shards in 1..=8usize {
+                let mut covered = 0;
+                let mut prev_end = 0;
+                for i in 0..shards {
+                    let (s, e) = shard_range(total, shards, i);
+                    assert_eq!(s, prev_end, "gap at shard {i} of {shards}/{total}");
+                    assert!(e >= s);
+                    covered += e - s;
+                    prev_end = e;
+                }
+                assert_eq!(covered, total, "{shards} shards over {total}");
+                assert_eq!(prev_end, total);
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_pool_runs_all_shards_once() {
+        let pool = ThreadPool::new(3);
+        assert_eq!(pool.threads(), 3);
+        let hits: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(64, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "shard {i}");
+        }
+    }
+
+    #[test]
+    fn split_mut_disjoint_writes_land() {
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0u32; 1000];
+        let split = SplitMut::new(&mut data);
+        pool.run(5, &|s| {
+            let (r0, r1) = shard_range(1000, 5, s);
+            let chunk = unsafe { split.slice(r0, r1 - r0) };
+            for (k, v) in chunk.iter_mut().enumerate() {
+                *v = (r0 + k) as u32;
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v as usize, i);
+        }
+    }
+
+    #[test]
+    fn nested_launches_run_inline_and_complete() {
+        let pool = ThreadPool::new(4);
+        let outer: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(4, &|s| {
+            // a re-entrant launch from inside a scope must not deadlock
+            let inner = AtomicUsize::new(0);
+            global().run(8, &|_| {
+                inner.fetch_add(1, Ordering::Relaxed);
+            });
+            outer[s].store(inner.load(Ordering::Relaxed), Ordering::Relaxed);
+        });
+        for o in &outer {
+            assert_eq!(o.load(Ordering::Relaxed), 8);
+        }
+    }
+
+    #[test]
+    fn zero_and_one_shard_are_noop_and_serial() {
+        let pool = ThreadPool::new(2);
+        pool.run(0, &|_| panic!("no shards should run"));
+        let ran = AtomicUsize::new(0);
+        pool.run(1, &|i| {
+            assert_eq!(i, 0);
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "sharded kernel closure panicked")]
+    fn shard_panic_propagates_after_scope() {
+        let pool = ThreadPool::new(3);
+        pool.run(6, &|i| {
+            if i == 3 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn parse_threads_rules() {
+        assert_eq!(parse_threads(Some("4")), 4);
+        assert_eq!(parse_threads(Some(" 2 ")), 2);
+        assert!(parse_threads(Some("0")) >= 1); // falls back
+        assert!(parse_threads(Some("banana")) >= 1);
+        assert!(parse_threads(None) >= 1);
+    }
+
+    #[test]
+    fn shards_for_thresholds() {
+        assert_eq!(shards_for(1, usize::MAX), 1, "single row is serial");
+        assert_eq!(shards_for(512, 100), 1, "tiny work is serial");
+        let s = shards_for(512, MIN_SHARD_WORK * 64);
+        assert!(s >= 1 && s <= 512.min(active_threads()).max(1));
+    }
+}

@@ -40,6 +40,13 @@ pub struct Workspace {
     i16s: Vec<(&'static str, Vec<i16>)>,
     i32s: Vec<(&'static str, Vec<i32>)>,
     idxs: Vec<(&'static str, Vec<usize>)>,
+    /// Per-thread scratch **lanes** for the sharded kernels: a pooled
+    /// `Vec<Vec<T>>` with one buffer per shard, so parallel shards stay
+    /// zero-alloc without sharing mutable scratch. Lane sets only ever grow
+    /// (a narrower take hands back the wider set), so warmed inner buffers
+    /// survive shard-count fluctuations.
+    i16_lanes: Vec<(&'static str, Vec<Vec<i16>>)>,
+    i32_lanes: Vec<(&'static str, Vec<Vec<i32>>)>,
     /// Buffers that had to be freshly allocated (or regrown). Stops
     /// increasing once the arena is warm — the zero-alloc invariant.
     pub fresh_allocs: u64,
@@ -133,6 +140,28 @@ impl Workspace {
         self.i32s.push((key, v));
     }
 
+    /// At least `n` i16 scratch lanes (one per shard of a sharded kernel),
+    /// each with unspecified contents and retained capacity. Lane sets are
+    /// **grow-only**: a take after a wider launch hands back the wider set
+    /// (callers use the first `n`), so shard-count fluctuations never drop
+    /// warmed lane buffers.
+    pub fn take_i16_lanes(&mut self, key: &'static str, n: usize) -> Vec<Vec<i16>> {
+        take_lanes_from(&mut self.i16_lanes, &mut self.fresh_allocs, &mut self.reuses, key, n)
+    }
+
+    pub fn put_i16_lanes(&mut self, key: &'static str, v: Vec<Vec<i16>>) {
+        self.i16_lanes.push((key, v));
+    }
+
+    /// At least `n` i32 scratch lanes — see [`Workspace::take_i16_lanes`].
+    pub fn take_i32_lanes(&mut self, key: &'static str, n: usize) -> Vec<Vec<i32>> {
+        take_lanes_from(&mut self.i32_lanes, &mut self.fresh_allocs, &mut self.reuses, key, n)
+    }
+
+    pub fn put_i32_lanes(&mut self, key: &'static str, v: Vec<Vec<i32>>) {
+        self.i32_lanes.push((key, v));
+    }
+
     /// Cleared index scratch (length 0; push into it).
     pub fn take_idx(&mut self, key: &'static str) -> Vec<usize> {
         let mut v = take_from(&mut self.idxs, &mut self.fresh_allocs, &mut self.reuses, key, 0);
@@ -183,7 +212,13 @@ impl Workspace {
 
     /// Number of buffers currently parked in the arena (all types).
     pub fn pooled(&self) -> usize {
-        self.f32s.len() + self.i8s.len() + self.i16s.len() + self.i32s.len() + self.idxs.len()
+        self.f32s.len()
+            + self.i8s.len()
+            + self.i16s.len()
+            + self.i32s.len()
+            + self.idxs.len()
+            + self.i16_lanes.len()
+            + self.i32_lanes.len()
     }
 
     /// Total bytes of pooled capacity (diagnostics).
@@ -193,12 +228,79 @@ impl Workspace {
             + self.i16s.iter().map(|(_, v)| v.capacity() * 2).sum::<usize>()
             + self.i32s.iter().map(|(_, v)| v.capacity() * 4).sum::<usize>()
             + self.idxs.iter().map(|(_, v)| v.capacity() * 8).sum::<usize>()
+            + lane_bytes(&self.i16_lanes, 2)
+            + lane_bytes(&self.i32_lanes, 4)
     }
+}
+
+/// Take a lane set (`Vec<Vec<T>>`) of at least `n` lanes from `pool`:
+/// exact key match reused (grown with empty lanes if the launch got wider,
+/// **never shrunk** — truncating would free warmed inner buffers whenever
+/// the shard count fluctuates), else a fresh set of `n` empty lanes.
+fn take_lanes_from<T>(
+    pool: &mut Vec<(&'static str, Vec<Vec<T>>)>,
+    fresh: &mut u64,
+    reuses: &mut u64,
+    key: &'static str,
+    n: usize,
+) -> Vec<Vec<T>> {
+    match pool.iter().position(|(k, _)| *k == key) {
+        Some(i) => {
+            let (_, mut v) = pool.swap_remove(i);
+            if v.len() < n {
+                *fresh += 1;
+                v.resize_with(n, Vec::new);
+            } else {
+                *reuses += 1;
+            }
+            v
+        }
+        None => {
+            *fresh += 1;
+            let mut v = Vec::with_capacity(n);
+            v.resize_with(n, Vec::new);
+            v
+        }
+    }
+}
+
+/// Pooled capacity of a lane pool (inner buffers only; the outer vecs are
+/// a few pointers each).
+fn lane_bytes<T>(pool: &[(&'static str, Vec<Vec<T>>)], elem: usize) -> usize {
+    pool.iter()
+        .map(|(_, lanes)| lanes.iter().map(|l| l.capacity() * elem).sum::<usize>())
+        .sum()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn lane_take_put_reuses_outer_and_inner_capacity() {
+        let mut ws = Workspace::new();
+        let mut lanes = ws.take_i16_lanes("l", 4);
+        assert_eq!(lanes.len(), 4);
+        for l in &mut lanes {
+            l.resize(100, 0); // simulate kernel growing its lane
+        }
+        ws.put_i16_lanes("l", lanes);
+        let frozen = ws.fresh_allocs;
+        let lanes = ws.take_i16_lanes("l", 4);
+        assert_eq!(ws.fresh_allocs, frozen, "steady lane take must reuse");
+        assert!(lanes.iter().all(|l| l.capacity() >= 100));
+        ws.put_i16_lanes("l", lanes);
+        // a narrower launch must NOT shrink the set (warmed lanes survive)
+        let lanes = ws.take_i16_lanes("l", 2);
+        assert_eq!(lanes.len(), 4, "lane set is grow-only");
+        assert_eq!(ws.fresh_allocs, frozen);
+        ws.put_i16_lanes("l", lanes);
+        // a wider launch grows it with fresh empty lanes
+        let lanes = ws.take_i16_lanes("l", 6);
+        assert_eq!(lanes.len(), 6);
+        assert!(lanes[..4].iter().all(|l| l.capacity() >= 100));
+        ws.put_i16_lanes("l", lanes);
+    }
 
     #[test]
     fn keyed_take_put_reuses_capacity() {

@@ -7,6 +7,23 @@ use crate::data::{pack_batch, Sample, SynthTask, EOS};
 use crate::metrics::{perplexity, rouge_l};
 use crate::model::Model;
 
+/// Index of the maximum of a logit row, keeping the **last** maximal element
+/// on ties (the `Iterator::max_by` convention the previous implementation
+/// had, so tied-logit predictions are unchanged). Total — no `unwrap` on the
+/// evaluation path: an empty or all-NaN row yields index 0 instead of a
+/// panic mid-eval.
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (j, &v) in row.iter().enumerate() {
+        if v >= best_v {
+            best_v = v;
+            best = j;
+        }
+    }
+    best
+}
+
 /// Mean NLL + perplexity over a sample set (teacher forcing).
 pub fn eval_ppl(model: &mut Model, samples: &[Sample], batch: usize, max_len: usize) -> (f64, f64) {
     let mut total = 0.0f64;
@@ -46,15 +63,17 @@ pub fn eval_mcq_accuracy(model: &mut Model, samples: &[Sample], max_len: usize) 
             let gold = s.target[offset] as u32;
             // the row predicting position `letter_pos` is `letter_pos - 1`
             let row = logits.row(b * sp + nv + letter_pos - 1);
-            let pred = letters
-                .iter()
-                .max_by(|&&a, &&b| {
-                    row[a as usize]
-                        .partial_cmp(&row[b as usize])
-                        .unwrap_or(std::cmp::Ordering::Equal)
-                })
-                .copied()
-                .unwrap();
+            // argmax restricted to the option-letter tokens (total, no
+            // panic; `>=` keeps the last tied letter like `max_by` did)
+            let mut pred = letters[0];
+            let mut best = f32::NEG_INFINITY;
+            for &l in letters.iter() {
+                let v = row[l as usize];
+                if v >= best {
+                    best = v;
+                    pred = l;
+                }
+            }
             if pred == gold {
                 hit += 1;
             }
@@ -87,12 +106,7 @@ pub fn eval_token_accuracy(model: &mut Model, samples: &[Sample], max_len: usize
                     continue;
                 }
                 let row = logits.row(b * sp + nv + i);
-                let pred = row
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
-                    .map(|(j, _)| j as u32)
-                    .unwrap();
+                let pred = argmax(row) as u32;
                 if pred == seq_toks[i + 1] {
                     hit += 1;
                 }
@@ -125,12 +139,7 @@ pub fn eval_exact_match(model: &mut Model, samples: &[Sample], max_len: usize) -
             }
             any = true;
             let row = logits.row(nv + i);
-            let pred = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
-                .map(|(j, _)| j as u32)
-                .unwrap();
+            let pred = argmax(row) as u32;
             if pred != toks[0][i + 1] {
                 all = false;
                 break;

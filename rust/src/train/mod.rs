@@ -2,12 +2,19 @@
 //! the train-step driver with gradient accumulation, and the
 //! wall-clock-budgeted runner used for the convergence experiments
 //! (Fig. 6 / Table 2's "24 hours of fine-tuning", scaled).
+//!
+//! The step is **sharded** (see DESIGN.md §Threading): micro-batch
+//! forward/backward run the pool-sharded kernels, the cross-entropy shards
+//! per *sequence* with partials merged in fixed batch order, and Adam
+//! shards elementwise — so gradient accumulation and the loss are
+//! bit-identical for any `QUAFF_THREADS`.
 
 pub mod eval;
 
 use crate::data::{pack_batch, Sample};
 use crate::model::param::Param;
 use crate::model::{Model, ModelCache};
+use crate::tensor::pool::{self, shard_range, SplitMut};
 use crate::tensor::{Matrix, Workspace};
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -17,6 +24,10 @@ use std::time::Instant;
 /// `logits` rows are `(batch · seq')` with `seq' = n_virtual + seq`;
 /// `mask[b][i]` marks positions whose next token carries loss. Returns the
 /// mean NLL over masked positions and dL/dlogits.
+///
+/// Sharded per sequence: each sequence's NLL/count partials and dlogits
+/// block are computed independently and the partials are merged **in batch
+/// order**, so the loss is bit-identical for any shard count.
 pub fn cross_entropy(
     logits: &Matrix,
     tokens: &[Vec<u32>],
@@ -25,35 +36,39 @@ pub fn cross_entropy(
 ) -> (f64, Matrix) {
     let nv = cache.n_virtual;
     let sp = cache.seq;
-    let s = sp - nv;
     let vocab = logits.cols();
     let mut dlogits = Matrix::zeros(logits.rows(), vocab);
-    let mut total_nll = 0.0f64;
-    let mut count = 0usize;
-    for (b, (seq_toks, seq_mask)) in tokens.iter().zip(masks).enumerate() {
-        for i in 0..s.saturating_sub(1) {
-            if !seq_mask[i] {
-                continue;
-            }
-            let row_idx = b * sp + nv + i;
-            let target = seq_toks[i + 1] as usize;
-            let row = logits.row(row_idx);
-            // stable log-softmax
-            let mx = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
-            let mut sum = 0.0f64;
-            for &x in row {
-                sum += ((x - mx) as f64).exp();
-            }
-            let log_z = sum.ln() + mx as f64;
-            total_nll += log_z - row[target] as f64;
-            // dlogits = softmax - onehot (normalized later)
-            let drow = dlogits.row_mut(row_idx);
-            for (j, &x) in row.iter().enumerate() {
-                drow[j] = (((x as f64 - log_z).exp()) as f32) - if j == target { 1.0 } else { 0.0 };
-            }
-            count += 1;
+    let b_count = tokens.len();
+    let mut nll = vec![0.0f64; b_count];
+    let mut cnt = vec![0usize; b_count];
+    let shards = pool::shards_for(b_count, logits.rows() * vocab * 8);
+    if shards <= 1 {
+        let dd = dlogits.data_mut();
+        for b in 0..b_count {
+            let block = &mut dd[b * sp * vocab..(b + 1) * sp * vocab];
+            let (n, c) = ce_sequence(logits, &tokens[b], &masks[b], b, nv, sp, block);
+            nll[b] = n;
+            cnt[b] = c;
         }
+    } else {
+        let dsplit = SplitMut::new(dlogits.data_mut());
+        let nsplit = SplitMut::new(&mut nll);
+        let csplit = SplitMut::new(&mut cnt);
+        pool::run_shards(shards, &|sh| {
+            let (b0, b1) = shard_range(b_count, shards, sh);
+            for b in b0..b1 {
+                let block = unsafe { dsplit.slice(b * sp * vocab, sp * vocab) };
+                let (n, c) = ce_sequence(logits, &tokens[b], &masks[b], b, nv, sp, block);
+                unsafe {
+                    *nsplit.at(b) = n;
+                    *csplit.at(b) = c;
+                }
+            }
+        });
     }
+    // fixed-order reduction over sequences
+    let total_nll: f64 = nll.iter().sum();
+    let count: usize = cnt.iter().sum();
     if count > 0 {
         let inv = 1.0 / count as f32;
         dlogits.scale(inv);
@@ -61,6 +76,46 @@ pub fn cross_entropy(
     } else {
         (0.0, dlogits)
     }
+}
+
+/// One sequence's cross-entropy: fills its `sp × vocab` dlogits block
+/// (rows outside masked positions stay zero) and returns (nll, count).
+fn ce_sequence(
+    logits: &Matrix,
+    seq_toks: &[u32],
+    seq_mask: &[bool],
+    b: usize,
+    nv: usize,
+    sp: usize,
+    dblock: &mut [f32],
+) -> (f64, usize) {
+    let s = sp - nv;
+    let vocab = logits.cols();
+    let mut total_nll = 0.0f64;
+    let mut count = 0usize;
+    for i in 0..s.saturating_sub(1) {
+        if !seq_mask[i] {
+            continue;
+        }
+        let row_idx = b * sp + nv + i;
+        let target = seq_toks[i + 1] as usize;
+        let row = logits.row(row_idx);
+        // stable log-softmax
+        let mx = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+        let mut sum = 0.0f64;
+        for &x in row {
+            sum += ((x - mx) as f64).exp();
+        }
+        let log_z = sum.ln() + mx as f64;
+        total_nll += log_z - row[target] as f64;
+        // dlogits = softmax - onehot (normalized later)
+        let drow = &mut dblock[(nv + i) * vocab..(nv + i + 1) * vocab];
+        for (j, &x) in row.iter().enumerate() {
+            drow[j] = (((x as f64 - log_z).exp()) as f32) - if j == target { 1.0 } else { 0.0 };
+        }
+        count += 1;
+    }
+    (total_nll, count)
 }
 
 /// Adam optimizer over the model's trainable (adapter) parameters.
@@ -87,6 +142,9 @@ impl Adam {
     }
 
     /// Apply one update from the accumulated gradients, then zero them.
+    /// Large parameters shard elementwise across the pool (each index is
+    /// independent, so the update is bit-identical for any thread count);
+    /// adapter-sized parameters stay serial under the work threshold.
     pub fn step(&mut self, model: &mut Model) {
         self.t += 1;
         let t = self.t as f64;
@@ -105,12 +163,21 @@ impl Adam {
             let md = m.data_mut();
             let vd = v.data_mut();
             let pv = p.value.data_mut();
-            for i in 0..g.len() {
-                md[i] = b1 * md[i] + (1.0 - b1) * g[i];
-                vd[i] = b2 * vd[i] + (1.0 - b2) * g[i] * g[i];
-                let mh = md[i] as f64 / bc1;
-                let vh = vd[i] as f64 / bc2;
-                pv[i] -= lr * (mh / (vh.sqrt() + eps as f64)) as f32;
+            let len = g.len();
+            let shards = pool::shards_for(len, len * 8);
+            if shards <= 1 {
+                adam_update(g, md, vd, pv, (b1, b2, lr, eps), (bc1, bc2));
+            } else {
+                let ms = SplitMut::new(md);
+                let vs = SplitMut::new(vd);
+                let ps = SplitMut::new(pv);
+                pool::run_shards(shards, &|s| {
+                    let (r0, r1) = shard_range(len, shards, s);
+                    let (mc, vc, pc) = unsafe {
+                        (ms.slice(r0, r1 - r0), vs.slice(r0, r1 - r0), ps.slice(r0, r1 - r0))
+                    };
+                    adam_update(&g[r0..r1], mc, vc, pc, (b1, b2, lr, eps), (bc1, bc2));
+                });
             }
             p.zero_grad();
         });
@@ -122,6 +189,25 @@ impl Adam {
             .values()
             .map(|(m, v)| (m.data().len() + v.data().len()) * 4)
             .sum()
+    }
+}
+
+/// Elementwise Adam update over pre-sliced ranges — one index, one update;
+/// trivially deterministic under sharding.
+fn adam_update(
+    g: &[f32],
+    md: &mut [f32],
+    vd: &mut [f32],
+    pv: &mut [f32],
+    (b1, b2, lr, eps): (f32, f32, f32, f32),
+    (bc1, bc2): (f64, f64),
+) {
+    for i in 0..g.len() {
+        md[i] = b1 * md[i] + (1.0 - b1) * g[i];
+        vd[i] = b2 * vd[i] + (1.0 - b2) * g[i] * g[i];
+        let mh = md[i] as f64 / bc1;
+        let vh = vd[i] as f64 / bc2;
+        pv[i] -= lr * (mh / (vh.sqrt() + eps as f64)) as f32;
     }
 }
 
@@ -137,6 +223,13 @@ pub struct StepStats {
 /// drift ticks, and per-step latency measurement. Owns the scratch
 /// [`Workspace`] threaded through every forward/backward, so buffers are
 /// reused across the whole run rather than reallocated per step.
+///
+/// Execution is sharded *inside* each micro-batch: every linear's kernels
+/// split token rows across the pool, the loss shards per sequence, and Adam
+/// shards elementwise — while micro-batches themselves accumulate gradients
+/// in fixed submission order. That keeps the gradient reduction
+/// deterministic (bit-identical for any `QUAFF_THREADS`) without
+/// replicating model state per thread.
 pub struct Trainer {
     pub opt: Adam,
     pub max_len: usize,

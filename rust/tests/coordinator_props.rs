@@ -115,8 +115,8 @@ fn prop_job_reports_deterministic_given_seed() {
     job.batch_size = 2;
     job.train_pool = 8;
     job.eval_samples = 4;
-    let a = run_job(&server, &job);
-    let b = run_job(&server, &job);
+    let a = run_job(&server, &job).unwrap();
+    let b = run_job(&server, &job).unwrap();
     assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits(), "nondeterministic training");
     assert_eq!(a.metric("acc").to_bits(), b.metric("acc").to_bits());
 }

@@ -29,7 +29,7 @@ fn quick_job(dataset: &str, method: MethodKind) -> FinetuneJob {
 fn full_pipeline_every_method() {
     let server = PreprocessServer::new(server_cfg("opt-tiny"));
     for method in MethodKind::ALL {
-        let r = run_job(&server, &quick_job("gpqa", method));
+        let r = run_job(&server, &quick_job("gpqa", method)).unwrap();
         assert!(r.final_loss.is_finite(), "{}", method.label());
         assert!(r.metric("ppl").is_finite() && r.metric("ppl") > 1.0);
         assert!((0.0..=1.0).contains(&r.metric("acc")));
@@ -50,7 +50,7 @@ fn full_pipeline_every_task_family() {
             j.max_len = 256;
             j.batch_size = 2;
         }
-        let r = run_job(&server, &j);
+        let r = run_job(&server, &j).unwrap();
         assert!(
             r.metrics.contains_key(key),
             "{ds} should report {key}: has {:?}",
@@ -64,7 +64,7 @@ fn memory_ordering_reproduces_paper() {
     // Paper Table 1: FP32 24.1 GB > Smooth_D 23.0 > LLM.int8 16.4 >
     // Quaff 14.9 ≈ Smooth_S 14.7 ≈ Naive 14.6.
     let server = PreprocessServer::new(server_cfg("phi-mini"));
-    let mem = |m| run_job(&server, &quick_job("oasst1", m)).memory.total();
+    let mem = |m| run_job(&server, &quick_job("oasst1", m)).unwrap().memory.total();
     let fp32 = mem(MethodKind::Fp32);
     let smooth_d = mem(MethodKind::SmoothDynamic);
     let naive = mem(MethodKind::Naive);
@@ -142,7 +142,7 @@ fn coordinator_parallel_jobs_complete() {
             j
         })
         .collect();
-    let reports = coord.run_all(jobs);
+    let reports = coord.run_all(jobs).expect("known datasets");
     assert_eq!(reports.len(), 4);
     assert_eq!(reports.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
 }
@@ -202,7 +202,7 @@ fn quaff_error_advantage_survives_full_model() {
         let mut j = quick_job("oasst1", m);
         j.steps = 6;
         j.seed = 3;
-        run_job(&server, &j).metric("ppl")
+        run_job(&server, &j).unwrap().metric("ppl")
     };
     let fp32 = ppl(MethodKind::Fp32);
     let quaff = ppl(MethodKind::Quaff);

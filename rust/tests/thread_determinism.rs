@@ -1,0 +1,231 @@
+//! Thread-determinism suite: every pool-sharded path must be **bit-identical**
+//! to its single-threaded execution, for any thread count, including across
+//! repeated runs against a reused [`Workspace`].
+//!
+//! The whole suite is one `#[test]` because it flips the process-global
+//! active thread width ([`pool::set_active_threads`]) between legs; a single
+//! test body keeps the flips strictly sequential.
+
+use quaff::methods::{build_method, MethodConfig, MethodKind};
+use quaff::model::{Model, ModelConfig};
+use quaff::outlier::{ChannelStats, OutlierDetector, OutlierSet};
+use quaff::peft::PeftKind;
+use quaff::quant;
+use quaff::tensor::{kernels, pool, I8Matrix, Matrix, Workspace};
+use quaff::train::Trainer;
+use quaff::util::prng::Rng;
+
+/// Shapes big enough that the 4-wide legs actually shard (work ≫
+/// `pool::MIN_SHARD_WORK`); the 1-wide legs run the same cores serially.
+const T: usize = 96;
+const CIN: usize = 128;
+const COUT: usize = 192;
+
+fn calib(rng: &mut Rng, cin: usize, hot: &[usize]) -> (ChannelStats, OutlierSet) {
+    let mut stats = ChannelStats::new(cin);
+    for _ in 0..4 {
+        let mut x = Matrix::randn(8, cin, rng, 1.0);
+        for &c in hot {
+            for t in 0..8 {
+                let v = x.get(t, c);
+                x.set(t, c, v * 80.0);
+            }
+        }
+        stats.observe(&x, 30.0);
+    }
+    let set = OutlierDetector::new(30.0).select(&stats, hot.len());
+    (stats, set)
+}
+
+fn hot_x(rng: &mut Rng, t: usize, cin: usize, hot: &[usize]) -> Matrix {
+    let mut x = Matrix::randn(t, cin, rng, 1.0);
+    for &c in hot {
+        for ti in 0..t {
+            let v = x.get(ti, c);
+            x.set(ti, c, v * 60.0);
+        }
+    }
+    x
+}
+
+/// Run `f` at the given active width, returning its output.
+fn at_width<R>(width: usize, f: impl FnOnce() -> R) -> R {
+    pool::set_active_threads(width);
+    f()
+}
+
+fn check_kernels(rng: &mut Rng) {
+    let a = Matrix::randn(T, CIN, rng, 1.0);
+    let b = Matrix::randn(CIN, COUT, rng, 1.0);
+    let dy = Matrix::randn(T, COUT, rng, 1.0);
+    let wide = Matrix::randn(700, 300, rng, 2.0);
+
+    // f32 matmul family
+    let mm1 = at_width(1, || a.matmul(&b));
+    let mm4 = at_width(4, || a.matmul(&b));
+    assert_eq!(mm1.data(), mm4.data(), "matmul_into threads≠serial");
+    let bt1 = at_width(1, || dy.matmul_bt(&b));
+    let bt4 = at_width(4, || dy.matmul_bt(&b));
+    assert_eq!(bt1.data(), bt4.data(), "matmul_bt_into threads≠serial");
+    let at1 = at_width(1, || a.matmul_at(&dy));
+    let at4 = at_width(4, || a.matmul_at(&dy));
+    assert_eq!(at1.data(), at4.data(), "matmul_at_into threads≠serial");
+
+    // col_abs_max (tree-reduced when threaded) — plain and workspace paths
+    let c1 = at_width(1, || wide.col_abs_max());
+    let c4 = at_width(4, || wide.col_abs_max());
+    assert_eq!(c1, c4, "col_abs_max threads≠serial");
+    let mut ws = Workspace::new();
+    let mut c4ws = vec![0.0f32; wide.cols()];
+    at_width(4, || kernels::col_abs_max_ws(&wide, &mut c4ws, &mut ws));
+    assert_eq!(c1, c4ws, "col_abs_max_ws threads≠serial");
+
+    // quantize / dequantize — on `wide`, whose work sits well above the
+    // shard threshold so the 4-wide legs genuinely split
+    let (q1w, d1w) = at_width(1, || quant::quantize_per_token(&wide));
+    let (q4w, d4w) = at_width(4, || quant::quantize_per_token(&wide));
+    assert_eq!(q1w.data(), q4w.data(), "quantize_per_token threads≠serial");
+    assert_eq!(d1w, d4w);
+    let (w1, wd1) = at_width(1, || quant::quantize_per_oc(&wide));
+    let (w4, wd4) = at_width(4, || quant::quantize_per_oc(&wide));
+    assert_eq!(w1.data(), w4.data(), "quantize_per_oc threads≠serial");
+    assert_eq!(wd1, wd4);
+    let dq1 = at_width(1, || quant::dequantize_per_token(&q1w, &d1w));
+    let dq4 = at_width(4, || quant::dequantize_per_token(&q1w, &d1w));
+    assert_eq!(dq1.data(), dq4.data(), "dequantize_per_token threads≠serial");
+    let do1 = at_width(1, || quant::dequantize_per_oc(&w1, &wd1));
+    let do4 = at_width(4, || quant::dequantize_per_oc(&w1, &wd1));
+    assert_eq!(do1.data(), do4.data(), "dequantize_per_oc threads≠serial");
+    // per-token quantization of the matmul input feeds the int8 leg below
+    let (q1, d1) = at_width(1, || quant::quantize_per_token(&a));
+
+    // int8 matmuls (exact integer math, but the dequant epilogue is f32)
+    let ai = I8Matrix::random(T, CIN, rng);
+    let bi = I8Matrix::random(CIN, COUT, rng);
+    let i1 = at_width(1, || ai.matmul_i32(&bi));
+    let i4 = at_width(4, || ai.matmul_i32(&bi));
+    assert_eq!(i1, i4, "matmul_i32 threads≠serial");
+    let qw = quant::QuantizedWeights::quantize(&b);
+    let mut y1 = vec![0.0f32; T * COUT];
+    let mut y4 = vec![0.0f32; T * COUT];
+    at_width(1, || qw.matmul_ws(&q1, &d1, &mut ws, &mut y1));
+    at_width(4, || qw.matmul_ws(&q1, &d1, &mut ws, &mut y4));
+    assert_eq!(y1, y4, "packed int8 matmul threads≠serial");
+    // run-to-run identity with the same (now warm) workspace
+    let mut y4b = vec![0.0f32; T * COUT];
+    at_width(4, || qw.matmul_ws(&q1, &d1, &mut ws, &mut y4b));
+    assert_eq!(y4, y4b, "packed int8 matmul not reproducible on warm arena");
+}
+
+fn check_methods(rng: &mut Rng) {
+    let hot = vec![5, 40, 100];
+    let (stats, oset) = calib(rng, CIN, &hot);
+    let w = Matrix::randn(CIN, COUT, rng, 0.3);
+    let cfg = MethodConfig::default();
+    let kinds = [
+        MethodKind::Fp32,
+        MethodKind::Naive,
+        MethodKind::LlmInt8,
+        MethodKind::SmoothStatic,
+        MethodKind::SmoothDynamic,
+        MethodKind::Quaff,
+        MethodKind::QuaffNoMomentum,
+    ];
+    // Pre-generate a shared step sequence so stateful methods (momentum,
+    // dynamic scaling) see identical histories on both legs.
+    let steps: Vec<(Matrix, Matrix)> = (0..3)
+        .map(|_| {
+            (
+                hot_x(rng, T, CIN, &hot),
+                Matrix::randn(T, COUT, rng, 1.0),
+            )
+        })
+        .collect();
+    for kind in kinds {
+        let mut m1 = build_method(kind, w.clone(), &stats, &oset, &cfg);
+        let mut m4 = build_method(kind, w.clone(), &stats, &oset, &cfg);
+        let mut ws1 = Workspace::new();
+        let mut ws4 = Workspace::new();
+        for (step, (x, dy)) in steps.iter().enumerate() {
+            let y1 = at_width(1, || m1.forward(x, &mut ws1));
+            let y4 = at_width(4, || m4.forward(x, &mut ws4));
+            assert_eq!(
+                y1.data(),
+                y4.data(),
+                "{} forward threads≠serial at step {step}",
+                m1.name()
+            );
+            let dx1 = at_width(1, || m1.backward_input(dy, &mut ws1));
+            let dx4 = at_width(4, || m4.backward_input(dy, &mut ws4));
+            assert_eq!(
+                dx1.data(),
+                dx4.data(),
+                "{} backward threads≠serial at step {step}",
+                m1.name()
+            );
+            ws1.recycle(y1);
+            ws1.recycle(dx1);
+            ws4.recycle(y4);
+            ws4.recycle(dx4);
+        }
+    }
+}
+
+/// End-to-end: identical models trained for a few steps at width 1 and
+/// width 4 must produce bit-identical losses and adapter parameters —
+/// forward, loss, backward, gradient accumulation, and Adam all included.
+fn check_trainer_end_to_end() {
+    let cfg = ModelConfig {
+        vocab: quaff::data::VOCAB_SIZE,
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 256,
+        max_seq: 96,
+        ln_eps: 1e-5,
+        inject_outliers: false,
+        lora_rank: 8,
+        lora_alpha: 8.0,
+        lora_dropout: 0.0,
+        n_virtual: 4,
+    };
+    let task = quaff::data::SynthTask::by_name("oasst1").expect("embedded task");
+    let run = |width: usize| {
+        pool::set_active_threads(width);
+        let mut m = Model::new(cfg.clone(), 33);
+        m.attach_peft(PeftKind::Lora);
+        let mut srng = Rng::new(17);
+        let samples: Vec<_> = (0..4).map(|_| task.sample(&mut srng)).collect();
+        let refs: Vec<&quaff::data::Sample> = samples.iter().collect();
+        let mut trainer = Trainer::new(1e-3, 64, 1);
+        let mut losses = Vec::new();
+        for _ in 0..4 {
+            losses.push(trainer.step(&mut m, &[refs.clone()]).loss);
+        }
+        let mut params: Vec<(String, Vec<f32>)> = Vec::new();
+        m.visit_params(&mut |name, p| params.push((name.to_string(), p.value.data().to_vec())));
+        (losses, params)
+    };
+    let (loss1, params1) = run(1);
+    let (loss4, params4) = run(4);
+    assert_eq!(loss1, loss4, "losses diverged between 1 and 4 threads");
+    assert_eq!(params1.len(), params4.len());
+    for ((n1, v1), (n4, v4)) in params1.iter().zip(&params4) {
+        assert_eq!(n1, n4);
+        assert_eq!(v1, v4, "param {n1} diverged between 1 and 4 threads");
+    }
+}
+
+#[test]
+fn threaded_paths_bit_identical_to_serial() {
+    // Ask for an 8-wide pool regardless of QUAFF_THREADS so the 4-wide legs
+    // genuinely shard even on the serial CI leg (this test *is* the
+    // serial-vs-threaded comparison).
+    pool::init(pool::ThreadConfig { threads: 8 });
+    let mut rng = Rng::new(4242);
+    check_kernels(&mut rng);
+    check_methods(&mut rng);
+    check_trainer_end_to_end();
+    // leave the default width behind for any later in-process user
+    pool::set_active_threads(pool::global().threads());
+}

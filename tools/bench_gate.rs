@@ -1,0 +1,372 @@
+//! CI perf-regression gate.
+//!
+//! Compares fresh benchmark records (`BENCH_kernels.json` from
+//! `bench_kernels`, `BENCH_threads.json` from `bench_threads`) against the
+//! committed `BENCH_baseline.json` and fails (exit 1) when any mean
+//! regresses beyond the tolerance, or when a baselined kernel disappeared
+//! from the fresh records. Always writes `BENCH_gate_diff.json` so CI can
+//! upload the comparison as an artifact.
+//!
+//! ```text
+//! bench_gate [--baseline F] [--fresh F1,F2] [--tol 0.25] [--diff F] [--update]
+//! ```
+//!
+//! * An **empty baseline** (`"entries": {}`) puts the gate in *seeding*
+//!   mode: it passes and prints how to promote the fresh numbers.
+//! * `--update` rewrites the baseline from the fresh records (run benches
+//!   on the reference runner class, then commit the result).
+//!
+//! See DESIGN.md §CI for the refresh workflow.
+
+use quaff::util::json::Json;
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+const DEFAULT_TOL: f64 = 0.25;
+
+#[derive(Debug, PartialEq)]
+enum Verdict {
+    Ok,
+    Improved,
+    Regressed,
+    Missing,
+    New,
+}
+
+struct Finding {
+    id: String,
+    baseline_ns: Option<f64>,
+    fresh_ns: Option<f64>,
+    verdict: Verdict,
+}
+
+/// Flatten one bench record into `(id, mean_ns)` entries. Ids are
+/// `<bench>/<kernel name>/<metric>` so records from several files coexist.
+fn extract_entries(j: &Json) -> Vec<(String, f64)> {
+    let bench = j.get("bench").and_then(Json::as_str).unwrap_or("unknown");
+    let mut out = Vec::new();
+    let kernels = match j.get("kernels").and_then(Json::as_arr) {
+        Some(k) => k,
+        None => return out,
+    };
+    for k in kernels {
+        let name = k.get("name").and_then(Json::as_str).unwrap_or("?");
+        for metric in ["alloc_ns_per_op", "workspace_ns_per_op", "ns_per_op"] {
+            if let Some(v) = k.get(metric).and_then(Json::as_f64) {
+                out.push((format!("{bench}/{name}/{metric}"), v));
+            }
+        }
+        if let Some(legs) = k.get("legs").and_then(Json::as_arr) {
+            for leg in legs {
+                let (t, ns) = (
+                    leg.get("threads").and_then(Json::as_f64),
+                    leg.get("ns_per_op").and_then(Json::as_f64),
+                );
+                if let (Some(t), Some(ns)) = (t, ns) {
+                    out.push((format!("{bench}/{name}/t{}", t as u64), ns));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Pure comparison: every baseline entry must be present in `fresh` and not
+/// regressed beyond `tol`; fresh-only entries are reported as new.
+fn compare(
+    baseline: &BTreeMap<String, f64>,
+    fresh: &BTreeMap<String, f64>,
+    tol: f64,
+) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for (id, &base) in baseline {
+        match fresh.get(id) {
+            None => findings.push(Finding {
+                id: id.clone(),
+                baseline_ns: Some(base),
+                fresh_ns: None,
+                verdict: Verdict::Missing,
+            }),
+            Some(&f) => {
+                let verdict = if f > base * (1.0 + tol) {
+                    Verdict::Regressed
+                } else if f < base * (1.0 - tol) {
+                    Verdict::Improved
+                } else {
+                    Verdict::Ok
+                };
+                findings.push(Finding {
+                    id: id.clone(),
+                    baseline_ns: Some(base),
+                    fresh_ns: Some(f),
+                    verdict,
+                });
+            }
+        }
+    }
+    for (id, &f) in fresh {
+        if !baseline.contains_key(id) {
+            findings.push(Finding {
+                id: id.clone(),
+                baseline_ns: None,
+                fresh_ns: Some(f),
+                verdict: Verdict::New,
+            });
+        }
+    }
+    findings
+}
+
+fn findings_to_json(findings: &[Finding], tol: f64, pass: bool) -> Json {
+    let items = findings.iter().map(|f| {
+        Json::obj(vec![
+            ("id", Json::str(f.id.clone())),
+            ("baseline_ns", f.baseline_ns.map(Json::num).unwrap_or(Json::Null)),
+            ("fresh_ns", f.fresh_ns.map(Json::num).unwrap_or(Json::Null)),
+            ("verdict", Json::str(format!("{:?}", f.verdict).to_lowercase())),
+        ])
+    });
+    Json::obj(vec![
+        ("tolerance", Json::num(tol)),
+        ("pass", Json::Bool(pass)),
+        ("findings", Json::arr(items)),
+    ])
+}
+
+fn baseline_json(entries: &BTreeMap<String, f64>, tol: f64) -> Json {
+    Json::obj(vec![
+        ("tolerance", Json::num(tol)),
+        (
+            "entries",
+            Json::Obj(entries.iter().map(|(k, &v)| (k.clone(), Json::num(v))).collect()),
+        ),
+    ])
+}
+
+struct Args {
+    baseline: String,
+    fresh: Vec<String>,
+    tol: Option<f64>,
+    diff: String,
+    update: bool,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut args = Args {
+        baseline: "BENCH_baseline.json".to_string(),
+        fresh: vec!["BENCH_kernels.json".to_string(), "BENCH_threads.json".to_string()],
+        tol: None,
+        diff: "BENCH_gate_diff.json".to_string(),
+        update: false,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        let mut value = |name: &str| it.next().ok_or_else(|| format!("{name} needs a value"));
+        match a.as_str() {
+            "--baseline" => args.baseline = value("--baseline")?,
+            "--fresh" => args.fresh = value("--fresh")?.split(',').map(str::to_string).collect(),
+            "--tol" => {
+                args.tol = Some(
+                    value("--tol")?
+                        .parse::<f64>()
+                        .map_err(|e| format!("bad --tol: {e}"))?,
+                )
+            }
+            "--diff" => args.diff = value("--diff")?,
+            "--update" => args.update = true,
+            other => return Err(format!("unknown argument '{other}'")),
+        }
+    }
+    Ok(args)
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("bench_gate: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    // fresh records (missing files are tolerated here; the baseline check
+    // below catches a silently-skipped bench)
+    let mut fresh = BTreeMap::new();
+    for path in &args.fresh {
+        match std::fs::read_to_string(path) {
+            Ok(text) => match Json::parse(&text) {
+                Ok(j) => fresh.extend(extract_entries(&j)),
+                Err(e) => {
+                    eprintln!("bench_gate: cannot parse {path}: {e}");
+                    return ExitCode::from(2);
+                }
+            },
+            Err(e) => eprintln!("bench_gate: note: {path} not found ({e})"),
+        }
+    }
+
+    // baseline
+    let (baseline, file_tol) = match std::fs::read_to_string(&args.baseline) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(j) => {
+                let tol = j.get("tolerance").and_then(Json::as_f64);
+                let mut map = BTreeMap::new();
+                if let Some(Json::Obj(entries)) = j.get("entries") {
+                    for (k, v) in entries {
+                        if let Some(x) = v.as_f64() {
+                            map.insert(k.clone(), x);
+                        }
+                    }
+                }
+                (map, tol)
+            }
+            Err(e) => {
+                eprintln!("bench_gate: cannot parse {}: {e}", args.baseline);
+                return ExitCode::from(2);
+            }
+        },
+        Err(e) => {
+            eprintln!("bench_gate: cannot read {}: {e}", args.baseline);
+            return ExitCode::from(2);
+        }
+    };
+    let tol = args.tol.or(file_tol).unwrap_or(DEFAULT_TOL);
+
+    if args.update {
+        if fresh.is_empty() {
+            eprintln!(
+                "bench_gate: refusing --update with no fresh records — an empty baseline would \
+                 disarm the gate. Run the benches from the repo root first (see DESIGN.md §CI)."
+            );
+            return ExitCode::from(2);
+        }
+        let out = baseline_json(&fresh, tol);
+        if let Err(e) = std::fs::write(&args.baseline, format!("{}\n", out.to_string())) {
+            eprintln!("bench_gate: cannot write {}: {e}", args.baseline);
+            return ExitCode::from(2);
+        }
+        println!(
+            "bench_gate: baseline {} updated with {} entries (tol {tol})",
+            args.baseline,
+            fresh.len()
+        );
+        return ExitCode::SUCCESS;
+    }
+
+    let findings = compare(&baseline, &fresh, tol);
+    let mut regressions = 0usize;
+    for f in &findings {
+        let (b, fr) = (f.baseline_ns.unwrap_or(f64::NAN), f.fresh_ns.unwrap_or(f64::NAN));
+        match f.verdict {
+            Verdict::Regressed => {
+                regressions += 1;
+                println!("REGRESSED  {:<60} {b:>12.1} -> {fr:>12.1} ns", f.id);
+            }
+            Verdict::Missing => {
+                regressions += 1;
+                println!("MISSING    {:<60} {b:>12.1} ns (no fresh record)", f.id);
+            }
+            Verdict::Improved => println!("improved   {:<60} {b:>12.1} -> {fr:>12.1} ns", f.id),
+            Verdict::New => println!("new        {:<60} {fr:>27.1} ns", f.id),
+            Verdict::Ok => println!("ok         {:<60} {b:>12.1} -> {fr:>12.1} ns", f.id),
+        }
+    }
+    let pass = regressions == 0;
+    let diff = findings_to_json(&findings, tol, pass);
+    if let Err(e) = std::fs::write(&args.diff, format!("{}\n", diff.to_string())) {
+        eprintln!("bench_gate: cannot write {}: {e}", args.diff);
+        return ExitCode::from(2);
+    }
+
+    if baseline.is_empty() {
+        println!(
+            "bench_gate: baseline is empty (seeding mode) — {} fresh entries recorded in {}.\n\
+             To arm the gate: run the benches on the reference runner, then\n\
+             `cargo run --release --bin bench_gate -- --update` and commit {}.",
+            fresh.len(),
+            args.diff,
+            args.baseline
+        );
+        return ExitCode::SUCCESS;
+    }
+    if pass {
+        println!(
+            "bench_gate: PASS — {} entries within ±{:.0}% of baseline",
+            findings.len(),
+            tol * 100.0
+        );
+        ExitCode::SUCCESS
+    } else {
+        println!(
+            "bench_gate: FAIL — {regressions} regression(s)/missing record(s) beyond ±{:.0}% \
+             (diff in {})",
+            tol * 100.0,
+            args.diff
+        );
+        ExitCode::from(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn map(pairs: &[(&str, f64)]) -> BTreeMap<String, f64> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn compare_flags_regressions_and_passes_noise() {
+        let base = map(&[("k/a/ns", 100.0), ("k/b/ns", 100.0), ("k/c/ns", 100.0)]);
+        let fresh = map(&[("k/a/ns", 110.0), ("k/b/ns", 130.0), ("k/c/ns", 60.0)]);
+        let f = compare(&base, &fresh, 0.25);
+        let verdict = |id: &str| &f.iter().find(|x| x.id == id).unwrap().verdict;
+        assert_eq!(*verdict("k/a/ns"), Verdict::Ok, "within tolerance");
+        assert_eq!(*verdict("k/b/ns"), Verdict::Regressed);
+        assert_eq!(*verdict("k/c/ns"), Verdict::Improved);
+    }
+
+    #[test]
+    fn compare_flags_missing_and_new() {
+        let base = map(&[("k/gone/ns", 50.0)]);
+        let fresh = map(&[("k/added/ns", 50.0)]);
+        let f = compare(&base, &fresh, 0.25);
+        assert!(f.iter().any(|x| x.id == "k/gone/ns" && x.verdict == Verdict::Missing));
+        assert!(f.iter().any(|x| x.id == "k/added/ns" && x.verdict == Verdict::New));
+    }
+
+    #[test]
+    fn extract_reads_kernels_and_threads_schemas() {
+        let kernels = Json::parse(
+            r#"{"bench":"kernels","kernels":[
+                {"name":"mm","alloc_ns_per_op":10.0,"workspace_ns_per_op":5.0}]}"#,
+        )
+        .unwrap();
+        let e = extract_entries(&kernels);
+        assert!(e.contains(&("kernels/mm/alloc_ns_per_op".to_string(), 10.0)));
+        assert!(e.contains(&("kernels/mm/workspace_ns_per_op".to_string(), 5.0)));
+        let threads = Json::parse(
+            r#"{"bench":"threads","kernels":[
+                {"name":"mm","legs":[{"threads":1,"ns_per_op":9.0},{"threads":4,"ns_per_op":3.0}]}]}"#,
+        )
+        .unwrap();
+        let e = extract_entries(&threads);
+        assert!(e.contains(&("threads/mm/t1".to_string(), 9.0)));
+        assert!(e.contains(&("threads/mm/t4".to_string(), 3.0)));
+    }
+
+    #[test]
+    fn baseline_roundtrips_through_json() {
+        let entries = map(&[("k/a/ns", 12.5), ("t/b/t4", 7.0)]);
+        let text = baseline_json(&entries, 0.25).to_string();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("tolerance").and_then(Json::as_f64), Some(0.25));
+        let mut back = BTreeMap::new();
+        if let Some(Json::Obj(m)) = j.get("entries") {
+            for (k, v) in m {
+                back.insert(k.clone(), v.as_f64().unwrap());
+            }
+        }
+        assert_eq!(back, entries);
+    }
+}
