@@ -12,9 +12,10 @@ use quaff::methods::MethodKind;
 use quaff::metrics::MemoryAccountant;
 use quaff::peft::PeftKind;
 use quaff::train::{eval as teval, run_budgeted, Trainer};
+use quaff::util::error::Result;
 use quaff::util::prng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let budget: f64 = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())

@@ -3,19 +3,22 @@
 //! through PJRT, fine-tuning LoRA adapters of the quantized transformer on
 //! the embedded real text corpus, and logs the loss curve.
 //!
-//! Prerequisite: `make artifacts` (python runs once, never again).
+//! Prerequisite: `make artifacts` (python runs once, never again) and a
+//! build with `--features pjrt` against real xla bindings (the default
+//! vendored stub compiles but cannot execute — see DESIGN.md §PJRT).
 //!
-//!     cargo run --release --example finetune_e2e -- [steps] [artifacts-dir]
+//!     cargo run --release --features pjrt --example finetune_e2e -- [steps] [artifacts-dir]
 //!
 //! The loss curve is appended to EXPERIMENTS.md by the Makefile target
 //! `make e2e` (here it's just printed).
 
 use quaff::data::{corpus_samples, Tokenizer};
 use quaff::runtime::{Engine, TrainSession};
+use quaff::util::error::Result;
 use quaff::util::prng::Rng;
 use std::path::PathBuf;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let steps: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(200);
     let dir = PathBuf::from(args.get(2).map(|s| s.as_str()).unwrap_or("artifacts"));
@@ -69,7 +72,9 @@ fn main() -> anyhow::Result<()> {
         .flat_map(|hv| hv.as_f32().unwrap().iter().copied())
         .fold(0.0f32, f32::max);
     println!("[e2e] max momentum scale factor s_O = {max_scale:.2} (outlier suppression engaged)");
-    anyhow::ensure!(last < first, "loss did not decrease: {first} → {last}");
+    if last >= first {
+        quaff::bail!("loss did not decrease: {first} → {last}");
+    }
     println!("[e2e] OK — all three layers compose: Rust coordinator → PJRT → JAX model → Pallas kernel");
     Ok(())
 }

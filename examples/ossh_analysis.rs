@@ -12,10 +12,11 @@ use quaff::outlier::{HitRateTracker, LayerKind, OutlierDetector};
 use quaff::peft::PeftKind;
 use quaff::scaling::smoothquant_factors;
 use quaff::train::Trainer;
+use quaff::util::error::Result;
 use quaff::util::{pearson, prng::Rng};
 use std::collections::BTreeMap;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let steps: u64 = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
@@ -65,7 +66,8 @@ fn main() -> anyhow::Result<()> {
                 hits.get_mut(&l.name).unwrap().record(&rt);
                 // SmoothQuant-style factors from the live batch (unit weight
                 // reference — we only need the *shape* across channels)
-                let dynamic = smoothquant_factors(&s.abs_max, &vec![1.0; l.cin()], 0.5);
+                let ones = vec![1.0f32; l.cin()];
+                let dynamic = smoothquant_factors(&s.abs_max, &ones, 0.5);
                 let st = static_factors
                     .entry(l.name.clone())
                     .or_insert_with(|| dynamic.clone());

@@ -1,0 +1,101 @@
+//! Batched quantized serving: the coordinator's preprocess server builds a
+//! Quaff bundle, then a [`BatchEngine`] serves a queue of concurrent
+//! generation requests through the KV-cached decode path — the "deploy the
+//! fine-tuned model on the consumer device" end of the paper's story
+//! (§1 motivation; DESIGN.md §Inference).
+//!
+//!     cargo run --release --example serve_batch -- [requests] [slots]
+//!
+//! Prints each completion plus prefill/decode throughput. Tokens per
+//! second land in `BENCH_infer.json` territory; this example is the
+//! human-readable tour of the same machinery.
+
+use quaff::coordinator::{PreprocessServer, ServerConfig};
+use quaff::data::{SynthTask, BOS, EOS};
+use quaff::infer::{BatchEngine, GenerateConfig, Request};
+use quaff::methods::MethodKind;
+use quaff::peft::PeftKind;
+use quaff::util::prng::Rng;
+use std::time::Instant;
+
+fn main() {
+    let n_requests: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8)
+        .max(4);
+    let slots: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4)
+        .max(1);
+
+    // server side: calibrate, detect outliers, quantize under Quaff
+    let mut cfg = ServerConfig::default();
+    cfg.preset = "phi-mini".to_string();
+    let server = PreprocessServer::new(cfg);
+    eprintln!("[server] preparing Quaff bundle (calibrate → detect → quantize) …");
+    let bundle = server.prepare(MethodKind::Quaff, PeftKind::Lora);
+    let model = bundle.model;
+    println!(
+        "[server] serving {} under {} ({} outlier channels, payload {})",
+        bundle.preset,
+        MethodKind::Quaff.label(),
+        bundle.registry.total_channels(),
+        quaff::util::fmt_bytes(bundle.payload_bytes),
+    );
+
+    // client side: a queue of concurrent chat-style requests
+    let task = SynthTask::by_name("oig-chip2").unwrap();
+    let mut rng = Rng::new(0x5E47E);
+    let requests: Vec<Request> = (0..n_requests)
+        .map(|i| {
+            let s = task.sample(&mut rng);
+            let mut prompt = vec![BOS];
+            prompt.extend_from_slice(&s.prompt);
+            Request {
+                id: i as u64,
+                prompt,
+                max_new: 24,
+            }
+        })
+        .collect();
+
+    let mut gen_cfg = GenerateConfig::greedy(24);
+    gen_cfg.eos = Some(EOS);
+    let mut engine = BatchEngine::new(&model, slots, gen_cfg);
+    println!(
+        "[engine] {} requests across {} slots (continuous batching) …\n",
+        requests.len(),
+        engine.slots()
+    );
+    let t0 = Instant::now();
+    let completions = engine.run_requests(&model, &requests);
+    let secs = t0.elapsed().as_secs_f64();
+
+    for c in &completions {
+        println!(
+            "  req {:>2}  prompt {:>3} tok  → {:>2} new: {:?}",
+            c.id,
+            c.prompt_len,
+            c.tokens.len(),
+            c.tokens
+        );
+    }
+    let s = engine.stats;
+    let new_tokens: usize = completions.iter().map(|c| c.tokens.len()).sum();
+    println!(
+        "\n[engine] {:.2}s wall: {} prefill tok, {} decode tok over {} steps \
+         (mean batch {:.2})",
+        secs,
+        s.prefill_tokens,
+        s.decode_tokens,
+        s.decode_steps,
+        s.mean_batch()
+    );
+    println!(
+        "[engine] throughput: {:.0} generated tok/s ({:.0} tok/s incl. prefill)",
+        new_tokens as f64 / secs,
+        (s.prefill_tokens + s.decode_tokens) as f64 / secs
+    );
+}

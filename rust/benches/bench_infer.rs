@@ -1,0 +1,184 @@
+//! Inference throughput benchmark: KV-cached prefill and decode under the
+//! Quaff method at e2e-small scale, batch 1/4/16.
+//!
+//! Emits `BENCH_infer.json` (ns/token as `ns_per_op`, plus tokens/sec) at
+//! the workspace root — the record `tools/bench_gate` compares against
+//! `BENCH_baseline.json` in CI, alongside the kernel and thread records.
+//!
+//!     cargo bench --bench bench_infer
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{write_infer_json, InferRecord};
+use quaff::infer::{BatchEngine, GenerateConfig, Request};
+use quaff::methods::{MethodConfig, MethodKind};
+use quaff::model::{Model, ModelConfig};
+use quaff::outlier::{BudgetAllocator, BudgetPolicy, OutlierDetector};
+use quaff::tensor::{pool, Workspace};
+use quaff::util::prng::Rng;
+use std::time::Instant;
+
+const PROMPT_LEN: usize = 64;
+const DECODE_LEN: usize = 64;
+const BATCHES: [usize; 3] = [1, 4, 16];
+
+/// Calibrate + quantize an e2e-small model under Quaff.
+fn build_model() -> Model {
+    let cfg = ModelConfig::preset("e2e-small").expect("preset");
+    let mut m = Model::new(cfg, 0xBE5C);
+    let mut r = Rng::new(0xCA11B);
+    m.start_calibration();
+    for _ in 0..2 {
+        let toks: Vec<Vec<u32>> = (0..2)
+            .map(|_| (0..32).map(|_| r.below(m.cfg.vocab) as u32).collect())
+            .collect();
+        let _ = m.forward(&toks, false);
+    }
+    let calib = m.finish_calibration();
+    let alloc = BudgetAllocator::new(BudgetPolicy::PaperNonUniform);
+    let det = OutlierDetector::new(20.0);
+    let _ = m.apply_method(
+        MethodKind::Quaff,
+        &calib,
+        &alloc,
+        &MethodConfig::default(),
+        &det,
+    );
+    m
+}
+
+fn prompt(rng: &mut Rng, vocab: usize) -> Vec<u32> {
+    (0..PROMPT_LEN).map(|_| rng.below(vocab) as u32).collect()
+}
+
+/// Time `engine.run_requests` over `b` requests of PROMPT_LEN + DECODE_LEN
+/// tokens, repeating until ~budget; split the wall time into prefill vs
+/// decode using the engine's token counters per repetition.
+fn measure(m: &Model, b: usize, budget_secs: f64) -> (InferRecord, InferRecord) {
+    let mut rng = Rng::new(0x5EED ^ b as u64);
+    let requests: Vec<Request> = (0..b)
+        .map(|i| Request {
+            id: i as u64,
+            prompt: prompt(&mut rng, m.cfg.vocab),
+            max_new: DECODE_LEN,
+        })
+        .collect();
+    // prefill-only timing: engines with max_new = 1 spend ~all work in the
+    // prompt pass (one decode sample costs one row)
+    let prefill_reqs: Vec<Request> = requests
+        .iter()
+        .map(|r| Request {
+            id: r.id,
+            prompt: r.prompt.clone(),
+            max_new: 1,
+        })
+        .collect();
+    let cfg = GenerateConfig::greedy(DECODE_LEN);
+    let mut engine = BatchEngine::new(m, b, cfg);
+
+    // warm the arenas once
+    let _ = engine.run_requests(m, &prefill_reqs);
+    let _ = engine.run_requests(m, &requests);
+
+    let mut prefill_secs = 0.0f64;
+    let mut prefill_tokens = 0u64;
+    let mut iters_p = 0u64;
+    let t0 = Instant::now();
+    while t0.elapsed().as_secs_f64() < budget_secs || iters_p < 2 {
+        let before = engine.stats.prefill_tokens;
+        let s = Instant::now();
+        let _ = engine.run_requests(m, &prefill_reqs);
+        prefill_secs += s.elapsed().as_secs_f64();
+        prefill_tokens += engine.stats.prefill_tokens - before;
+        iters_p += 1;
+    }
+
+    let mut full_secs = 0.0f64;
+    let mut decode_tokens = 0u64;
+    let mut full_prefill_tokens = 0u64;
+    let mut iters_d = 0u64;
+    let t0 = Instant::now();
+    while t0.elapsed().as_secs_f64() < budget_secs || iters_d < 2 {
+        let before_d = engine.stats.decode_tokens;
+        let before_p = engine.stats.prefill_tokens;
+        let s = Instant::now();
+        let _ = engine.run_requests(m, &requests);
+        full_secs += s.elapsed().as_secs_f64();
+        decode_tokens += engine.stats.decode_tokens - before_d;
+        full_prefill_tokens += engine.stats.prefill_tokens - before_p;
+        iters_d += 1;
+    }
+    // subtract the (separately measured) prefill share from the full runs
+    let prefill_ns_tok = prefill_secs * 1e9 / prefill_tokens.max(1) as f64;
+    let decode_secs = (full_secs - full_prefill_tokens as f64 * prefill_ns_tok / 1e9).max(1e-9);
+    let decode_ns_tok = decode_secs * 1e9 / decode_tokens.max(1) as f64;
+
+    let pre = InferRecord {
+        name: format!("prefill b{b} s{PROMPT_LEN}"),
+        ns_per_token: prefill_ns_tok,
+        tokens_per_sec: 1e9 / prefill_ns_tok,
+        iters: iters_p,
+    };
+    let dec = InferRecord {
+        name: format!("decode b{b} n{DECODE_LEN}"),
+        ns_per_token: decode_ns_tok,
+        tokens_per_sec: 1e9 / decode_ns_tok,
+        iters: iters_d,
+    };
+    println!(
+        "{:<28} {:>12.1} ns/tok  {:>12.0} tok/s  (n={})",
+        pre.name, pre.ns_per_token, pre.tokens_per_sec, pre.iters
+    );
+    println!(
+        "{:<28} {:>12.1} ns/tok  {:>12.0} tok/s  (n={})",
+        dec.name, dec.ns_per_token, dec.tokens_per_sec, dec.iters
+    );
+    (pre, dec)
+}
+
+fn main() {
+    println!(
+        "== bench_infer: e2e-small under Quaff, {} threads ==\n",
+        pool::active_threads()
+    );
+    let m = build_model();
+    let mut records = Vec::new();
+    for &b in &BATCHES {
+        let (pre, dec) = measure(&m, b, 0.5);
+        records.push(pre);
+        records.push(dec);
+    }
+
+    // reference point: cached vs uncached single-request decode
+    let mut ws = Workspace::new();
+    let mut kv = quaff::infer::KvCache::for_model(&m, 1, &mut ws);
+    let mut rng = Rng::new(1);
+    let p = prompt(&mut rng, m.cfg.vocab);
+    let cfg = GenerateConfig::greedy(16);
+    let r = harness::bench("generate_cached 64+16", 1, 0.4, || {
+        let t = quaff::infer::generate_cached(&m, &p, &cfg, &mut kv, 0, &mut ws);
+        std::hint::black_box(&t);
+    });
+    let cached_ns_tok = r.mean_secs * 1e9 / 16.0;
+    records.push(InferRecord {
+        name: "generate_cached s64 n16".to_string(),
+        ns_per_token: cached_ns_tok,
+        tokens_per_sec: 1e9 / cached_ns_tok,
+        iters: r.iters,
+    });
+    let r = harness::bench("generate_uncached 64+16", 1, 0.4, || {
+        let t = quaff::infer::generate_uncached(&m, &p, &cfg, &mut ws);
+        std::hint::black_box(&t);
+    });
+    println!(
+        "\ncache speedup at s=64, 16 new tokens: {:.2}x",
+        r.mean_secs * 1e9 / 16.0 / cached_ns_tok
+    );
+
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_infer.json");
+    match write_infer_json(&out, "e2e-small", "Quaff", &records) {
+        Ok(()) => println!("\nwrote {}", out.display()),
+        Err(e) => eprintln!("could not write BENCH_infer.json: {e}"),
+    }
+}

@@ -127,6 +127,42 @@ pub fn write_kernels_json(
     std::fs::write(path, json)
 }
 
+/// One inference measurement: mean ns per generated/processed token.
+#[allow(dead_code)]
+pub struct InferRecord {
+    pub name: String,
+    pub ns_per_token: f64,
+    pub tokens_per_sec: f64,
+    pub iters: u64,
+}
+
+/// Emit `BENCH_infer.json`: ns/token (as the gate-comparable `ns_per_op`)
+/// plus tokens/sec per record — prefill vs decode at several batch sizes.
+#[allow(dead_code)]
+pub fn write_infer_json(
+    path: &std::path::Path,
+    preset: &str,
+    method: &str,
+    records: &[InferRecord],
+) -> std::io::Result<()> {
+    let kernels: Vec<String> = records
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"name\": \"{}\", \"ns_per_op\": {:.1}, \"tokens_per_sec\": {:.1}, \
+                 \"iters\": {}}}",
+                r.name, r.ns_per_token, r.tokens_per_sec, r.iters
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"infer\",\n  \"preset\": \"{preset}\",\n  \"method\": \"{method}\",\n  \
+         \"kernels\": [\n{}\n  ]\n}}\n",
+        kernels.join(",\n")
+    );
+    std::fs::write(path, json)
+}
+
 /// One kernel measured across a thread-count sweep.
 #[allow(dead_code)]
 pub struct ThreadSweep {

@@ -1,0 +1,186 @@
+//! Batched serving engine: continuous batching of decode steps over a
+//! fixed set of [`KvCache`] slots.
+//!
+//! [`BatchEngine::run_requests`] admits queued requests into free slots,
+//! prefills each admission, then repeatedly runs **one stacked
+//! [`Model::decode_step`] for every active request** — the linear layers
+//! see an `(n_active × d)` batch and shard across the `tensor::pool`
+//! threads, while attention reads each slot's own cached prefix. Finished
+//! requests free their slot immediately and the next queued request is
+//! admitted mid-flight, so the decode batch stays as full as the queue
+//! allows.
+//!
+//! Determinism: decoding is row-local (see `model::decode`), so a
+//! request's tokens are identical whether it runs alone or batched with
+//! arbitrary neighbours, at any thread count; each request samples from
+//! its own RNG stream seeded by `cfg.seed ^ request.id`.
+
+use super::{sample_token, GenerateConfig, KvCache};
+use crate::model::Model;
+use crate::tensor::Workspace;
+use crate::util::prng::Rng;
+
+/// One generation request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Caller-chosen id, echoed on the [`Completion`] (and folded into the
+    /// per-request sampling seed).
+    pub id: u64,
+    /// Prompt token ids (BOS and friends are the caller's concern).
+    pub prompt: Vec<u32>,
+    /// Per-request generation cap (bounded by the engine config's
+    /// `max_new` semantics: this field *is* the cap used).
+    pub max_new: usize,
+}
+
+/// A finished request.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    /// The request's id.
+    pub id: u64,
+    /// Prompt length, for tokens-processed accounting.
+    pub prompt_len: usize,
+    /// Generated tokens (no prompt, no EOS).
+    pub tokens: Vec<u32>,
+}
+
+/// Aggregate throughput counters for one engine lifetime.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    /// Batched decode steps executed.
+    pub decode_steps: u64,
+    /// Tokens produced by decode steps (sum of batch sizes).
+    pub decode_tokens: u64,
+    /// Prompt tokens processed by prefills (including virtual tokens).
+    pub prefill_tokens: u64,
+}
+
+impl EngineStats {
+    /// Mean decode-batch occupancy (tokens per step).
+    pub fn mean_batch(&self) -> f64 {
+        if self.decode_steps == 0 {
+            0.0
+        } else {
+            self.decode_tokens as f64 / self.decode_steps as f64
+        }
+    }
+}
+
+/// A request in flight.
+struct Active {
+    slot: usize,
+    req: usize,
+    rng: Rng,
+    /// Last sampled token, not yet resolved into the output stream.
+    next: u32,
+    toks: Vec<u32>,
+}
+
+/// Throughput-oriented batch decoder over a fixed slot count. Owns its
+/// [`KvCache`] and [`Workspace`], so one engine instance serves many
+/// request queues without reallocating.
+pub struct BatchEngine {
+    cfg: GenerateConfig,
+    kv: KvCache,
+    ws: Workspace,
+    /// Lifetime throughput counters.
+    pub stats: EngineStats,
+}
+
+impl BatchEngine {
+    /// An engine with `slots` concurrent decode lanes for `model`.
+    pub fn new(model: &Model, slots: usize, cfg: GenerateConfig) -> BatchEngine {
+        let mut ws = Workspace::new();
+        let kv = KvCache::for_model(model, slots, &mut ws);
+        BatchEngine {
+            cfg,
+            kv,
+            ws,
+            stats: EngineStats::default(),
+        }
+    }
+
+    /// Number of concurrent decode slots.
+    pub fn slots(&self) -> usize {
+        self.kv.slots()
+    }
+
+    /// Run every request to completion, admitting from the queue as slots
+    /// free up. Completions are returned in request order. Degenerate
+    /// requests (empty/over-long prompt, `max_new == 0`) complete empty.
+    pub fn run_requests(&mut self, model: &Model, requests: &[Request]) -> Vec<Completion> {
+        let mut done: Vec<Option<Completion>> = requests.iter().map(|_| None).collect();
+        let mut free: Vec<usize> = (0..self.kv.slots()).rev().collect();
+        let mut queue = 0usize;
+        let mut active: Vec<Active> = Vec::new();
+        while queue < requests.len() || !active.is_empty() {
+            // admit into free slots
+            while let (Some(&slot), true) = (free.last(), queue < requests.len()) {
+                let req = queue;
+                queue += 1;
+                let r = &requests[req];
+                let overlong = model.n_virtual() + r.prompt.len() > model.cfg.max_seq;
+                if r.prompt.is_empty() || r.max_new == 0 || overlong {
+                    done[req] = Some(Completion {
+                        id: r.id,
+                        prompt_len: r.prompt.len(),
+                        tokens: Vec::new(),
+                    });
+                    continue;
+                }
+                free.pop();
+                self.kv.reset_slot(slot);
+                let logits = model.prefill(&r.prompt, slot, &mut self.kv, &mut self.ws);
+                self.stats.prefill_tokens += self.kv.len(slot) as u64;
+                let mut rng = Rng::new(self.cfg.seed ^ r.id);
+                let next = sample_token(logits.row(0), &self.cfg, &mut rng);
+                self.ws.recycle(logits);
+                active.push(Active {
+                    slot,
+                    req,
+                    rng,
+                    next,
+                    toks: Vec::new(),
+                });
+            }
+            // resolve the last sampled token of every active request
+            let mut still = Vec::with_capacity(active.len());
+            for mut a in active.drain(..) {
+                let r = &requests[a.req];
+                let eos_hit = self.cfg.eos == Some(a.next);
+                if !eos_hit {
+                    a.toks.push(a.next);
+                }
+                let exhausted =
+                    a.toks.len() >= r.max_new || self.kv.len(a.slot) >= model.cfg.max_seq;
+                if eos_hit || exhausted {
+                    done[a.req] = Some(Completion {
+                        id: r.id,
+                        prompt_len: r.prompt.len(),
+                        tokens: std::mem::take(&mut a.toks),
+                    });
+                    free.push(a.slot);
+                } else {
+                    still.push(a);
+                }
+            }
+            active = still;
+            if active.is_empty() {
+                continue; // admit more, or fall out of the loop when drained
+            }
+            // one stacked decode step for every active request
+            let tokens: Vec<u32> = active.iter().map(|a| a.next).collect();
+            let slots: Vec<usize> = active.iter().map(|a| a.slot).collect();
+            let logits = model.decode_step(&tokens, &slots, &mut self.kv, &mut self.ws);
+            self.stats.decode_steps += 1;
+            self.stats.decode_tokens += active.len() as u64;
+            for (i, a) in active.iter_mut().enumerate() {
+                a.next = sample_token(logits.row(i), &self.cfg, &mut a.rng);
+            }
+            self.ws.recycle(logits);
+        }
+        done.into_iter()
+            .map(|c| c.expect("every request resolves to a completion"))
+            .collect()
+    }
+}

@@ -1,0 +1,182 @@
+//! Per-block key/value cache for incremental decoding.
+//!
+//! One [`KvCache`] holds the K and V activations of **every** decoder block
+//! for a fixed number of request *slots*. The backing buffers are f32 lanes
+//! drawn from a [`Workspace`] (two lanes per block: one K, one V), so
+//! caches are pooled across requests exactly like every other hot-path
+//! buffer: grow-only, reused on [`KvCache::release`]/[`KvCache::new`], and
+//! reset per request without freeing.
+//!
+//! Layout: lane `2·layer` is K, lane `2·layer + 1` is V; within a lane,
+//! slot `s`'s row `p` (cache position `p`, counting PEFT virtual tokens)
+//! starts at `(s · max_seq + p) · d`.
+
+use crate::model::Model;
+use crate::tensor::Workspace;
+
+/// Pooled, grow-only K/V storage for `slots` concurrent requests. See the
+/// module docs for the lane layout.
+pub struct KvCache {
+    /// `2 · n_layers` workspace lanes (K then V per layer). The pooled lane
+    /// set may carry extra lanes from a wider earlier take; only the first
+    /// `2 · n_layers` are used.
+    lanes: Vec<Vec<f32>>,
+    n_layers: usize,
+    d: usize,
+    max_seq: usize,
+    slots: usize,
+    /// Cached rows per slot (counting virtual tokens). 0 = slot is free.
+    lens: Vec<usize>,
+}
+
+impl KvCache {
+    /// A cache for `slots` concurrent requests of a model with `n_layers`
+    /// blocks, width `d`, and `max_seq` positions. Backing buffers come
+    /// from `ws` (key `"infer.kv"`), so building a cache after a release
+    /// reuses the previous allocation.
+    pub fn new(
+        n_layers: usize,
+        d: usize,
+        max_seq: usize,
+        slots: usize,
+        ws: &mut Workspace,
+    ) -> KvCache {
+        assert!(n_layers > 0 && d > 0 && max_seq > 0 && slots > 0);
+        let mut lanes = ws.take_f32_lanes("infer.kv", 2 * n_layers);
+        for lane in lanes.iter_mut().take(2 * n_layers) {
+            lane.resize(slots * max_seq * d, 0.0);
+        }
+        KvCache {
+            lanes,
+            n_layers,
+            d,
+            max_seq,
+            slots,
+            lens: vec![0; slots],
+        }
+    }
+
+    /// [`KvCache::new`] sized from a model's configuration.
+    pub fn for_model(model: &Model, slots: usize, ws: &mut Workspace) -> KvCache {
+        KvCache::new(
+            model.cfg.n_layers,
+            model.cfg.d_model,
+            model.cfg.max_seq,
+            slots,
+            ws,
+        )
+    }
+
+    /// Hand the backing lanes back to the workspace pool.
+    pub fn release(self, ws: &mut Workspace) {
+        ws.put_f32_lanes("infer.kv", self.lanes);
+    }
+
+    /// Number of request slots.
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Maximum cache positions per slot.
+    pub fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    /// Cached rows for `slot` (0 = free / reset).
+    pub fn len(&self, slot: usize) -> usize {
+        self.lens[slot]
+    }
+
+    /// Free positions remaining in `slot`.
+    pub fn remaining(&self, slot: usize) -> usize {
+        self.max_seq - self.lens[slot]
+    }
+
+    /// Mark `slot` empty (the rows are overwritten by the next prefill —
+    /// nothing is freed).
+    pub fn reset_slot(&mut self, slot: usize) {
+        self.lens[slot] = 0;
+    }
+
+    /// Reset every slot.
+    pub fn reset_all(&mut self) {
+        self.lens.fill(0);
+    }
+
+    /// Bytes of K/V storage held (diagnostics / memory accounting).
+    pub fn nbytes(&self) -> usize {
+        2 * self.n_layers * self.slots * self.max_seq * self.d * 4
+    }
+
+    /// Record that `slot` gained `n` cached rows (called once per
+    /// prefill/decode step, after every layer wrote its K/V rows).
+    pub(crate) fn advance(&mut self, slot: usize, n: usize) {
+        let len = self.lens[slot] + n;
+        assert!(len <= self.max_seq, "KvCache slot {slot} overflow");
+        self.lens[slot] = len;
+    }
+
+    /// Write one K row and one V row for `layer` at `(slot, pos)`.
+    pub(crate) fn write_row(
+        &mut self,
+        layer: usize,
+        slot: usize,
+        pos: usize,
+        k: &[f32],
+        v: &[f32],
+    ) {
+        assert!(layer < self.n_layers && slot < self.slots && pos < self.max_seq);
+        debug_assert_eq!(k.len(), self.d);
+        debug_assert_eq!(v.len(), self.d);
+        let off = (slot * self.max_seq + pos) * self.d;
+        self.lanes[2 * layer][off..off + self.d].copy_from_slice(k);
+        self.lanes[2 * layer + 1][off..off + self.d].copy_from_slice(v);
+    }
+
+    /// Borrow `layer`'s full (K, V) lanes for attention reads.
+    pub(crate) fn lanes(&self, layer: usize) -> (&[f32], &[f32]) {
+        (&self.lanes[2 * layer], &self.lanes[2 * layer + 1])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_roundtrip_and_reset() {
+        let mut ws = Workspace::new();
+        let mut kv = KvCache::new(2, 4, 8, 3, &mut ws);
+        assert_eq!((kv.slots(), kv.max_seq()), (3, 8));
+        assert_eq!(kv.len(1), 0);
+        kv.write_row(1, 2, 0, &[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0]);
+        kv.advance(2, 1);
+        assert_eq!(kv.len(2), 1);
+        assert_eq!(kv.remaining(2), 7);
+        let (k, v) = kv.lanes(1);
+        let off = (2 * 8) * 4;
+        assert_eq!(&k[off..off + 4], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(&v[off..off + 4], &[5.0, 6.0, 7.0, 8.0]);
+        kv.reset_slot(2);
+        assert_eq!(kv.len(2), 0);
+    }
+
+    #[test]
+    fn release_pools_the_lanes() {
+        let mut ws = Workspace::new();
+        let kv = KvCache::new(3, 8, 16, 2, &mut ws);
+        kv.release(&mut ws);
+        let frozen = ws.fresh_allocs;
+        let kv = KvCache::new(3, 8, 16, 2, &mut ws);
+        assert_eq!(ws.fresh_allocs, frozen, "rebuild must reuse pooled lanes");
+        kv.release(&mut ws);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn advance_past_capacity_panics() {
+        let mut ws = Workspace::new();
+        let mut kv = KvCache::new(1, 2, 4, 1, &mut ws);
+        kv.advance(0, 5);
+    }
+}

@@ -1,0 +1,266 @@
+//! Quantized autoregressive inference: KV-cached decoding, sampling, and
+//! the batched serving engine.
+//!
+//! This subsystem turns the fine-tuning stack into a *serving* stack. The
+//! same [`QuantMethod`](crate::methods::QuantMethod) kernels that run the
+//! teacher-forced training forward run generation, through three layers:
+//!
+//! * **[`KvCache`]** ([`kv`]) — pooled, grow-only per-block K/V storage
+//!   for many concurrent request slots, reset (not freed) per request.
+//! * **Decode entry points** (`model::decode`) — `Model::prefill` fills a
+//!   slot from a prompt; `Model::decode_step` extends many slots by one
+//!   token as one stacked batch, so the int8 linear kernels shard across
+//!   the `tensor::pool` threads. Both are frozen-state and row-local,
+//!   which makes cached decoding **bit-identical** to a naive full
+//!   re-forward for every quantization method (`tests/decode_parity.rs`).
+//! * **Drivers** — [`generate_cached`] / [`generate_uncached`] for single
+//!   requests (greedy or temperature/top-k sampling via [`GenerateConfig`],
+//!   deterministic under a fixed seed), and [`BatchEngine`] ([`engine`])
+//!   for throughput-oriented serving of a whole request queue with
+//!   continuous batching.
+//!
+//! `benches/bench_infer.rs` records prefill/decode tokens-per-second at
+//! batch 1/4/16 into `BENCH_infer.json` for the CI perf gate;
+//! `examples/serve_batch.rs` demonstrates the serving path end to end.
+
+pub mod engine;
+pub mod kv;
+
+pub use engine::{BatchEngine, Completion, EngineStats, Request};
+pub use kv::KvCache;
+
+use crate::model::Model;
+use crate::tensor::Workspace;
+use crate::util::prng::Rng;
+
+/// How to turn logits into tokens, and when to stop.
+#[derive(Clone, Debug)]
+pub struct GenerateConfig {
+    /// Maximum tokens to generate (the cache capacity may stop earlier).
+    pub max_new: usize,
+    /// Stop (without emitting) when this token is sampled.
+    pub eos: Option<u32>,
+    /// Softmax temperature; `<= 0` means greedy argmax decoding.
+    pub temperature: f32,
+    /// Restrict sampling to the `top_k` most likely tokens (0 = full
+    /// vocabulary). Ignored under greedy decoding.
+    pub top_k: usize,
+    /// Seed for the sampling RNG (`util::prng`): a fixed seed yields a
+    /// fixed token stream.
+    pub seed: u64,
+}
+
+impl Default for GenerateConfig {
+    fn default() -> Self {
+        GenerateConfig {
+            max_new: 32,
+            eos: None,
+            temperature: 0.0,
+            top_k: 0,
+            seed: 0,
+        }
+    }
+}
+
+impl GenerateConfig {
+    /// Greedy decoding for up to `max_new` tokens.
+    pub fn greedy(max_new: usize) -> GenerateConfig {
+        GenerateConfig {
+            max_new,
+            ..GenerateConfig::default()
+        }
+    }
+
+    /// Temperature/top-k sampling for up to `max_new` tokens.
+    pub fn sampled(max_new: usize, temperature: f32, top_k: usize, seed: u64) -> GenerateConfig {
+        GenerateConfig {
+            max_new,
+            temperature,
+            top_k,
+            seed,
+            ..GenerateConfig::default()
+        }
+    }
+}
+
+/// Greedy argmax keeping the **last** maximal element on ties — the one
+/// shared copy of the crate's greedy convention (`Model::generate` and
+/// `train::eval` follow it; the decode-parity suite compares against it).
+pub fn argmax(row: &[f32]) -> u32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (j, &v) in row.iter().enumerate() {
+        if v >= best_v {
+            best_v = v;
+            best = j;
+        }
+    }
+    best as u32
+}
+
+/// Sample one token from a logits row under `cfg`: greedy when
+/// `temperature <= 0`, else softmax over the `top_k` largest logits at the
+/// given temperature. Fully deterministic given the RNG state: candidates
+/// are walked in a fixed order (index order for the full vocabulary,
+/// descending-logit order under top-k), so a fixed seed yields a fixed
+/// stream.
+pub fn sample_token(logits: &[f32], cfg: &GenerateConfig, rng: &mut Rng) -> u32 {
+    if cfg.temperature <= 0.0 {
+        return argmax(logits);
+    }
+    let inv_t = 1.0 / cfg.temperature;
+    let u = rng.uniform();
+    if cfg.top_k == 0 || cfg.top_k >= logits.len() {
+        // full vocabulary: no ranking needed — softmax and walk in index
+        // order (any fixed order samples the same categorical)
+        let mx = logits.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+        let sum: f32 = logits.iter().map(|&l| ((l - mx) * inv_t).exp()).sum();
+        let inv = 1.0 / sum;
+        let mut acc = 0.0f32;
+        for (j, &l) in logits.iter().enumerate() {
+            acc += ((l - mx) * inv_t).exp() * inv;
+            if u < acc {
+                return j as u32;
+            }
+        }
+        return (logits.len() - 1) as u32; // rounding slack
+    }
+    // top-k: select the k largest (descending logit, ties broken by index
+    // for reproducibility) without sorting the whole vocabulary
+    let k = cfg.top_k.max(1);
+    let desc = |a: &usize, b: &usize| logits[*b].total_cmp(&logits[*a]).then(a.cmp(b));
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.select_nth_unstable_by(k - 1, desc);
+    idx.truncate(k);
+    idx.sort_unstable_by(desc);
+    let mx = logits[idx[0]];
+    let sum: f32 = idx.iter().map(|&j| ((logits[j] - mx) * inv_t).exp()).sum();
+    let inv = 1.0 / sum;
+    let mut acc = 0.0f32;
+    for &j in &idx {
+        acc += ((logits[j] - mx) * inv_t).exp() * inv;
+        if u < acc {
+            return j as u32;
+        }
+    }
+    idx[k - 1] as u32 // rounding slack: fall back to the least likely kept
+}
+
+/// KV-cached generation for one request in `slot` (reset here). Returns
+/// the generated tokens (without the prompt, without EOS). An empty or
+/// over-long prompt yields an empty completion.
+pub fn generate_cached(
+    model: &Model,
+    prompt: &[u32],
+    cfg: &GenerateConfig,
+    kv: &mut KvCache,
+    slot: usize,
+    ws: &mut Workspace,
+) -> Vec<u32> {
+    let mut out = Vec::new();
+    if prompt.is_empty()
+        || cfg.max_new == 0
+        || model.n_virtual() + prompt.len() > model.cfg.max_seq
+    {
+        return out;
+    }
+    kv.reset_slot(slot);
+    let mut rng = Rng::new(cfg.seed);
+    let logits = model.prefill(prompt, slot, kv, ws);
+    let mut next = sample_token(logits.row(0), cfg, &mut rng);
+    ws.recycle(logits);
+    loop {
+        if cfg.eos == Some(next) {
+            break;
+        }
+        out.push(next);
+        if out.len() >= cfg.max_new || kv.len(slot) >= model.cfg.max_seq {
+            break;
+        }
+        let logits = model.decode_step(&[next], &[slot], kv, ws);
+        next = sample_token(logits.row(0), cfg, &mut rng);
+        ws.recycle(logits);
+    }
+    out
+}
+
+/// Reference decoding without a cache: re-forward the whole growing
+/// sequence each step (frozen-state, like the cached path). Identical
+/// output to [`generate_cached`] — kept as the parity oracle and as the
+/// baseline `bench_infer` measures the cache against.
+pub fn generate_uncached(
+    model: &Model,
+    prompt: &[u32],
+    cfg: &GenerateConfig,
+    ws: &mut Workspace,
+) -> Vec<u32> {
+    let mut out = Vec::new();
+    let nv = model.n_virtual();
+    if prompt.is_empty() || cfg.max_new == 0 || nv + prompt.len() > model.cfg.max_seq {
+        return out;
+    }
+    let mut rng = Rng::new(cfg.seed);
+    let mut seq = prompt.to_vec();
+    let logits = model.forward_infer(&[seq.clone()], ws);
+    let mut next = sample_token(logits.row(logits.rows() - 1), cfg, &mut rng);
+    ws.recycle(logits);
+    loop {
+        if cfg.eos == Some(next) {
+            break;
+        }
+        out.push(next);
+        seq.push(next);
+        // same stop rule as the cached path: the next step would embed at
+        // cache position nv + seq.len() - 1, which must fit max_seq
+        if out.len() >= cfg.max_new || nv + seq.len() > model.cfg.max_seq {
+            break;
+        }
+        let logits = model.forward_infer(&[seq.clone()], ws);
+        next = sample_token(logits.row(logits.rows() - 1), cfg, &mut rng);
+        ws.recycle(logits);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_keeps_last_tied_max() {
+        let mut rng = Rng::new(1);
+        let cfg = GenerateConfig::greedy(4);
+        assert_eq!(sample_token(&[0.0, 1.0, 1.0, -2.0], &cfg, &mut rng), 2);
+    }
+
+    #[test]
+    fn sampling_is_seed_deterministic_and_respects_top_k() {
+        let logits: Vec<f32> = (0..16).map(|i| (i as f32) * 0.3).collect();
+        let cfg = GenerateConfig::sampled(4, 0.8, 3, 7);
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        for _ in 0..64 {
+            let ta = sample_token(&logits, &cfg, &mut a);
+            let tb = sample_token(&logits, &cfg, &mut b);
+            assert_eq!(ta, tb, "same RNG state must sample the same token");
+            // top-3 of an increasing ramp = the last three indices
+            assert!((13..16).contains(&(ta as usize)), "token {ta} outside top-k");
+        }
+    }
+
+    #[test]
+    fn high_temperature_spreads_low_sharpens() {
+        let logits = [0.0f32, 0.5, 1.0, 4.0];
+        let mut rng = Rng::new(3);
+        let mut hot = [0usize; 4];
+        let cfg_hot = GenerateConfig::sampled(1, 8.0, 0, 0);
+        for _ in 0..400 {
+            hot[sample_token(&logits, &cfg_hot, &mut rng) as usize] += 1;
+        }
+        assert!(hot.iter().all(|&c| c > 0), "hot sampling must reach all tokens: {hot:?}");
+        let cfg_cold = GenerateConfig::sampled(1, 0.05, 0, 0);
+        for _ in 0..50 {
+            assert_eq!(sample_token(&logits, &cfg_cold, &mut rng), 3);
+        }
+    }
+}

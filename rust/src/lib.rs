@@ -6,10 +6,11 @@
 //!
 //! * **L3 (this crate)** — the runtime: INT8 quantization substrate, the six
 //!   WAQ methods (FP32 / Naive / LLM.int8 / Smooth_S / Smooth_D / Quaff), a
-//!   trainable decoder-only transformer with PEFT adapters, the calibration +
-//!   server–client coordinator, the PJRT runtime that executes AOT-compiled
-//!   JAX artifacts, and the report harness regenerating every paper table
-//!   and figure.
+//!   trainable decoder-only transformer with PEFT adapters, the KV-cached
+//!   batched inference engine (`infer`), the calibration + server–client
+//!   coordinator, the PJRT runtime that executes AOT-compiled JAX
+//!   artifacts, and the report harness regenerating every paper table and
+//!   figure.
 //! * **L2 (`python/compile/model.py`)** — the JAX model + LoRA train step,
 //!   lowered once to HLO text by `python/compile/aot.py`.
 //! * **L1 (`python/compile/kernels/`)** — the fused Pallas quantized-linear
@@ -23,6 +24,7 @@
 
 pub mod coordinator;
 pub mod data;
+pub mod infer;
 pub mod methods;
 pub mod metrics;
 pub mod model;

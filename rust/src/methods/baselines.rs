@@ -31,6 +31,10 @@ impl QuantMethod for Fp32Linear {
     }
 
     fn forward(&mut self, x: &Matrix, ws: &mut Workspace) -> Matrix {
+        self.forward_infer(x, ws)
+    }
+
+    fn forward_infer(&self, x: &Matrix, ws: &mut Workspace) -> Matrix {
         let mut y = ws.take_matrix("fp32.y", x.rows(), self.w.cols());
         kernels::matmul_into(x, &self.w, &mut y);
         y
@@ -75,6 +79,10 @@ impl QuantMethod for NaiveW8A8Linear {
     }
 
     fn forward(&mut self, x: &Matrix, ws: &mut Workspace) -> Matrix {
+        self.forward_infer(x, ws)
+    }
+
+    fn forward_infer(&self, x: &Matrix, ws: &mut Workspace) -> Matrix {
         let (t, cout) = (x.rows(), self.qw.w_int.cols());
         let mut x_int = ws.take_i8_matrix("naive.xint", t, x.cols());
         let mut dx = ws.take_f32("naive.dx", t);
@@ -186,6 +194,47 @@ impl QuantMethod for LlmInt8Linear {
         y
     }
 
+    /// Inference mode detects outliers **per token row** (columns of that
+    /// row whose |x| exceeds σ) instead of per batch column, so each output
+    /// row depends only on its own input row — the row-locality incremental
+    /// decoding needs. The detection counters stay frozen.
+    fn forward_infer(&self, x: &Matrix, ws: &mut Workspace) -> Matrix {
+        let t = x.rows();
+        let cout = self.qw.w_int.cols();
+        // 1. regular part: zero this row's outlier entries, int8 path
+        let mut x_reg = ws.take_matrix("llmint8.xreg", t, x.cols());
+        x_reg.data_mut().copy_from_slice(x.data());
+        for v in x_reg.data_mut() {
+            if v.abs() > self.sigma {
+                *v = 0.0;
+            }
+        }
+        let mut x_int = ws.take_i8_matrix("llmint8.xint", t, x.cols());
+        let mut dx = ws.take_f32("llmint8.dx", t);
+        quant::quantize_per_token_into(&x_reg, &mut x_int, &mut dx);
+        let mut y = ws.take_matrix_zeroed("llmint8.y", t, cout);
+        self.qw.matmul_ws(&x_int, &dx, ws, y.data_mut());
+        // 2. outlier part in f32: per row, dequantize the hit weight rows
+        // from the int8 store (the method's per-step latency cost)
+        for ti in 0..t {
+            let xr = x.row(ti);
+            let yr = y.row_mut(ti);
+            for (c, &xv) in xr.iter().enumerate() {
+                if xv.abs() <= self.sigma {
+                    continue;
+                }
+                let wrow = self.qw.w_int.row(c);
+                for ((o, &q), &d) in yr.iter_mut().zip(wrow).zip(self.qw.deltas.iter()) {
+                    *o += xv * q as f32 * d;
+                }
+            }
+        }
+        ws.put_matrix("llmint8.xreg", x_reg);
+        ws.put_i8_matrix("llmint8.xint", x_int);
+        ws.put_f32("llmint8.dx", dx);
+        y
+    }
+
     fn backward_input(&self, dy: &Matrix, ws: &mut Workspace) -> Matrix {
         ste_backward_ws(dy, &self.qw.w_int, &self.qw.deltas, ws)
     }
@@ -237,6 +286,10 @@ impl QuantMethod for SmoothStaticLinear {
     }
 
     fn forward(&mut self, x: &Matrix, ws: &mut Workspace) -> Matrix {
+        self.forward_infer(x, ws)
+    }
+
+    fn forward_infer(&self, x: &Matrix, ws: &mut Workspace) -> Matrix {
         let (t, cout) = (x.rows(), self.qw_scaled.w_int.cols());
         let mut x_hat = ws.take_matrix("smooths.xhat", t, x.cols());
         x_hat.data_mut().copy_from_slice(x.data());
@@ -327,6 +380,29 @@ impl QuantMethod for SmoothDynamicLinear {
         let mut y = ws.take_matrix_zeroed("smoothd.y", t, cout);
         qw.matmul_ws(&x_int, &dx, ws, y.data_mut());
         self.last_s = s;
+        ws.put_matrix("smoothd.xhat", x_hat);
+        ws.put_i8_matrix("smoothd.xint", x_int);
+        ws.put_f32("smoothd.dx", dx);
+        y
+    }
+
+    /// Inference mode freezes the factors at their most recent per-step
+    /// values (`last_s`; all-ones if the layer never stepped) — the weights
+    /// are still rescaled and requantized per call, because that coupling
+    /// is the cost the method is measured for.
+    fn forward_infer(&self, x: &Matrix, ws: &mut Workspace) -> Matrix {
+        let (t, cout) = (x.rows(), self.w_full.cols());
+        let mut w_scaled = self.w_full.clone();
+        scaling::apply_row_scale(&mut w_scaled, &self.last_s);
+        let qw = QuantizedWeights::quantize(&w_scaled);
+        let mut x_hat = ws.take_matrix("smoothd.xhat", t, x.cols());
+        x_hat.data_mut().copy_from_slice(x.data());
+        scaling::apply_full_inverse_scale(&mut x_hat, &self.last_s);
+        let mut x_int = ws.take_i8_matrix("smoothd.xint", t, x.cols());
+        let mut dx = ws.take_f32("smoothd.dx", t);
+        quant::quantize_per_token_into(&x_hat, &mut x_int, &mut dx);
+        let mut y = ws.take_matrix_zeroed("smoothd.y", t, cout);
+        qw.matmul_ws(&x_int, &dx, ws, y.data_mut());
         ws.put_matrix("smoothd.xhat", x_hat);
         ws.put_i8_matrix("smoothd.xint", x_int);
         ws.put_f32("smoothd.dx", dx);

@@ -42,6 +42,15 @@ pub trait QuantMethod: Send {
     /// factors, requantized weights).
     fn forward(&mut self, x: &Matrix, ws: &mut Workspace) -> Matrix;
 
+    /// Inference-mode forward: like [`QuantMethod::forward`] but **frozen**
+    /// (no per-step state updates — Quaff's momentum, Smooth_D's factors,
+    /// and LLM.int8's detection statistics stay fixed) and **row-local**
+    /// (each output row depends only on the matching input row and frozen
+    /// state). Row-locality is what makes KV-cached incremental decoding
+    /// bit-identical to a full re-forward — `tests/decode_parity.rs` pins
+    /// it for every method. No gradient bookkeeping happens on this path.
+    fn forward_infer(&self, x: &Matrix, ws: &mut Workspace) -> Matrix;
+
     /// Straight-through `dX = dY · Wᵀ` using the stored representation.
     fn backward_input(&self, dy: &Matrix, ws: &mut Workspace) -> Matrix;
 

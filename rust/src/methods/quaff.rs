@@ -97,6 +97,21 @@ impl QuantMethod for QuaffLinear {
     }
 
     fn forward(&mut self, x: &Matrix, ws: &mut Workspace) -> Matrix {
+        // 1. momentum update from targeted statistics (Eqs. 7–8); the rest
+        // of the step is the frozen-state path below.
+        if !self.scaler.outliers.is_empty() {
+            let mut col_max = ws.take_f32("quaff.colmax", self.cin);
+            self.outlier_col_max_into(x, &mut col_max);
+            self.scaler.update(&col_max, &self.w_row_max);
+            ws.put_f32("quaff.colmax", col_max);
+        }
+        self.forward_infer(x, ws)
+    }
+
+    /// Steps 2–5 of the per-step pipeline with the momentum factors frozen
+    /// at their current values — row-local, so KV-cached decode matches a
+    /// full re-forward bit-for-bit.
+    fn forward_infer(&self, x: &Matrix, ws: &mut Workspace) -> Matrix {
         let t = x.rows();
         let n_out = self.scaler.outliers.len();
         if n_out == 0 {
@@ -110,10 +125,6 @@ impl QuantMethod for QuaffLinear {
             ws.put_f32("quaff.dx", dx);
             return y;
         }
-        // 1. momentum update from targeted statistics (Eqs. 7–8)
-        let mut col_max = ws.take_f32("quaff.colmax", self.cin);
-        self.outlier_col_max_into(x, &mut col_max);
-        self.scaler.update(&col_max, &self.w_row_max);
         let mut s_o = ws.take_f32("quaff.so", n_out);
         s_o.copy_from_slice(self.scaler.factors());
         // 2. targeted inverse scaling
@@ -137,7 +148,6 @@ impl QuantMethod for QuaffLinear {
         kernels::select_cols_i8_into(&x_int, &self.scaler.outliers.channels, &mut x_o_int);
         let mut acc = ws.take_i32("quaff.acc", 0);
         x_o_int.matmul_dequant_scratch_into(&w_hat_int, &dx, &d_what, &mut acc, y.data_mut());
-        ws.put_f32("quaff.colmax", col_max);
         ws.put_f32("quaff.so", s_o);
         ws.put_matrix("quaff.xhat", x_hat);
         ws.put_i8_matrix("quaff.xint", x_int);

@@ -1,0 +1,357 @@
+//! KV-cached autoregressive decoding — the incremental inference path.
+//!
+//! Training runs full-sequence teacher-forced passes; serving runs one new
+//! token per request per step. This module gives [`Model`] that second
+//! shape of execution on top of the same quantized substrate:
+//!
+//! * [`Model::forward_infer`] — full-sequence **frozen-state** forward (no
+//!   backward caches, no calibration taps, no momentum updates). This is
+//!   the reference the cached path is proven against.
+//! * [`Model::prefill`] — run a whole prompt through the blocks once,
+//!   writing every layer's K/V rows into a [`KvCache`] slot, and return the
+//!   last position's logits.
+//! * [`Model::decode_step`] — extend several slots by one token each: the
+//!   new rows of all active requests are stacked into one `(n × d)` batch
+//!   so the quantized linear kernels (and their `tensor::pool` sharding)
+//!   see a real batch, while attention reads each slot's cached K/V.
+//!
+//! **Bit-parity invariant.** Every op on this path is *row-local* — an
+//! output row depends only on its own input row plus frozen state (LN,
+//! GELU, diagonal gains, per-token quantization, the int8 matmuls, and
+//! [`attend_cached`], which reproduces `layers::attention_forward`'s
+//! per-row arithmetic exactly, including the softmax evaluation order).
+//! Therefore prefill + N decode steps produce byte-identical logits to N
+//! full re-forwards over the growing sequence, for every quantization
+//! method and any `QUAFF_THREADS` width (`tests/decode_parity.rs`).
+
+use super::layers::{attention_forward, gelu_forward};
+use super::{Block, Model};
+use crate::infer::KvCache;
+use crate::tensor::pool::{self, shard_range, SplitMut};
+use crate::tensor::{kernels, Matrix, Workspace};
+
+/// Causal attention for **one query row** against a slot's cached K/V rows
+/// `0..=pos`. `k_lane`/`v_lane` are row-major `[rows × d]` buffers; `base`
+/// is the index of the slot's row 0 inside the lane (`slot · max_seq` for a
+/// [`KvCache`] lane, 0 for a plain matrix). `scores` is caller scratch
+/// (resized here); `out_row` (length `d`) is fully overwritten.
+///
+/// The arithmetic mirrors `layers::attention_forward` row `pos` exactly —
+/// same dot-product order, same max/exp/normalize sequence, same
+/// skip-zero context accumulation — so cached and uncached attention are
+/// bit-identical.
+#[allow(clippy::too_many_arguments)]
+pub fn attend_cached(
+    q_row: &[f32],
+    k_lane: &[f32],
+    v_lane: &[f32],
+    base: usize,
+    pos: usize,
+    d: usize,
+    n_heads: usize,
+    scores: &mut Vec<f32>,
+    out_row: &mut [f32],
+) {
+    let dh = d / n_heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    out_row.fill(0.0);
+    scores.clear();
+    scores.resize(pos + 1, 0.0);
+    for h in 0..n_heads {
+        let off = h * dh;
+        let qh = &q_row[off..off + dh];
+        for (j, s) in scores.iter_mut().enumerate() {
+            let krow = &k_lane[(base + j) * d + off..(base + j) * d + off + dh];
+            let mut acc = 0.0f32;
+            for t in 0..dh {
+                acc += qh[t] * krow[t];
+            }
+            *s = acc * scale;
+        }
+        // softmax over 0..=pos (mirrors Matrix::softmax_rows; the masked
+        // positions of the uncached path contribute exact 0.0 terms)
+        let mx = scores.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+        let mut sum = 0.0f32;
+        for s in scores.iter_mut() {
+            *s = (*s - mx).exp();
+            sum += *s;
+        }
+        let inv = 1.0 / sum;
+        for s in scores.iter_mut() {
+            *s *= inv;
+        }
+        let orow = &mut out_row[off..off + dh];
+        for (j, &pv) in scores.iter().enumerate() {
+            if pv == 0.0 {
+                continue;
+            }
+            let vrow = &v_lane[(base + j) * d + off..(base + j) * d + off + dh];
+            for t in 0..dh {
+                orow[t] += pv * vrow[t];
+            }
+        }
+    }
+}
+
+impl Block {
+    /// Full-sequence inference forward: frozen state, no backward caches.
+    pub(crate) fn forward_infer(
+        &self,
+        x: &Matrix,
+        batch: usize,
+        seq: usize,
+        ws: &mut Workspace,
+    ) -> Matrix {
+        let (q, k, v) = self.project_qkv(x, ws);
+        let (attn_out, _) = attention_forward(&q, &k, &v, batch, seq, self.n_heads);
+        ws.recycle(q);
+        ws.recycle(k);
+        ws.recycle(v);
+        self.finish_infer(x, attn_out, ws)
+    }
+
+    /// Cache-filling inference forward: row `r` of `x` belongs to
+    /// `rows[r] = (slot, pos)`. Writes each row's K/V into the cache, then
+    /// attends over the slot's cached prefix `0..=pos`. Attention is
+    /// sharded over the stacked rows (disjoint output rows, one score lane
+    /// per shard — bit-identical for any width).
+    pub(crate) fn forward_cached(
+        &self,
+        x: &Matrix,
+        layer: usize,
+        rows: &[(usize, usize)],
+        kv: &mut KvCache,
+        ws: &mut Workspace,
+    ) -> Matrix {
+        let (q, k, v) = self.project_qkv(x, ws);
+        for (r, &(slot, pos)) in rows.iter().enumerate() {
+            kv.write_row(layer, slot, pos, k.row(r), v.row(r));
+        }
+        ws.recycle(k);
+        ws.recycle(v);
+        let d = x.cols();
+        let t = rows.len();
+        let mut attn_out = ws.take_matrix("blk.dec.attn", t, d);
+        let max_seq = kv.max_seq();
+        let (k_lane, v_lane) = kv.lanes(layer);
+        let work: usize = rows.iter().map(|&(_, p)| (p + 1) * d * 2).sum();
+        let shards = pool::shards_for(t, work);
+        if shards <= 1 {
+            let mut scores = ws.take_f32("infer.attn.scores", 0);
+            for (r, &(slot, pos)) in rows.iter().enumerate() {
+                attend_cached(
+                    q.row(r),
+                    k_lane,
+                    v_lane,
+                    slot * max_seq,
+                    pos,
+                    d,
+                    self.n_heads,
+                    &mut scores,
+                    attn_out.row_mut(r),
+                );
+            }
+            ws.put_f32("infer.attn.scores", scores);
+        } else {
+            let mut lanes = ws.take_f32_lanes("infer.attn.lanes", shards);
+            let split = SplitMut::new(attn_out.data_mut());
+            let lane_split = SplitMut::new(&mut lanes[..]);
+            let q_ref = &q;
+            let n_heads = self.n_heads;
+            pool::run_shards(shards, &|s| {
+                let (r0, r1) = shard_range(t, shards, s);
+                let orows = unsafe { split.slice(r0 * d, (r1 - r0) * d) };
+                let scores = unsafe { lane_split.at(s) };
+                for r in r0..r1 {
+                    let (slot, pos) = rows[r];
+                    attend_cached(
+                        q_ref.row(r),
+                        k_lane,
+                        v_lane,
+                        slot * max_seq,
+                        pos,
+                        d,
+                        n_heads,
+                        scores,
+                        &mut orows[(r - r0) * d..(r - r0 + 1) * d],
+                    );
+                }
+            });
+            ws.put_f32_lanes("infer.attn.lanes", lanes);
+        }
+        ws.recycle(q);
+        self.finish_infer(x, attn_out, ws)
+    }
+
+    /// LN → injection → q/k/v projections → IA3 on k/v (shared head of the
+    /// inference forwards).
+    fn project_qkv(&self, x: &Matrix, ws: &mut Workspace) -> (Matrix, Matrix, Matrix) {
+        let h1 = self.ln1.forward_infer(x, ws);
+        let a_in = self.inj_attn.apply(&h1);
+        ws.recycle(h1);
+        let q = self.q_proj.infer(&a_in, ws);
+        let k0 = self.k_proj.infer(&a_in, ws);
+        let v0 = self.v_proj.infer(&a_in, ws);
+        ws.recycle(a_in);
+        let k = match &self.ia3_k {
+            Some(ia3) => {
+                let r = ia3.forward(&k0);
+                ws.recycle(k0);
+                r
+            }
+            None => k0,
+        };
+        let v = match &self.ia3_v {
+            Some(ia3) => {
+                let r = ia3.forward(&v0);
+                ws.recycle(v0);
+                r
+            }
+            None => v0,
+        };
+        (q, k, v)
+    }
+
+    /// o-projection + residual + MLP sub-layer (shared tail of the
+    /// inference forwards; mirrors [`Block`]'s training forward).
+    fn finish_infer(&self, x: &Matrix, attn_out: Matrix, ws: &mut Workspace) -> Matrix {
+        let o_in = self.inj_o.apply(&attn_out);
+        ws.recycle(attn_out);
+        let o = self.o_proj.infer(&o_in, ws);
+        ws.recycle(o_in);
+        let mut x2 = ws.take_matrix("blk.x2", x.rows(), x.cols());
+        x2.data_mut().copy_from_slice(x.data());
+        x2.add_assign(&o);
+        ws.recycle(o);
+        let h2 = self.ln2.forward_infer(&x2, ws);
+        let m_in = self.inj_mlp.apply(&h2);
+        ws.recycle(h2);
+        let u = self.up_proj.infer(&m_in, ws);
+        ws.recycle(m_in);
+        let g0 = gelu_forward(&u);
+        ws.recycle(u);
+        let g = match &self.ia3_ff {
+            Some(ia3) => {
+                let r = ia3.forward(&g0);
+                ws.recycle(g0);
+                r
+            }
+            None => g0,
+        };
+        let d_in = self.inj_down.apply(&g);
+        ws.recycle(g);
+        let dn = self.down_proj.infer(&d_in, ws);
+        ws.recycle(d_in);
+        let mut out = x2;
+        out.add_assign(&dn);
+        ws.recycle(dn);
+        out
+    }
+}
+
+impl Model {
+    /// Full-sequence **frozen-state** forward: logits
+    /// `(batch·(n_virtual+seq) × vocab)` with no backward caches, no
+    /// calibration taps, and no per-step method-state updates. The
+    /// reference decode path compares against this (`generate_uncached`).
+    pub fn forward_infer(&self, tokens: &[Vec<u32>], ws: &mut Workspace) -> Matrix {
+        let batch = tokens.len();
+        let s = tokens[0].len();
+        let sp = self.n_virtual() + s;
+        let (mut x, _ptc) = self.embed(tokens);
+        for blk in &self.blocks {
+            let nx = blk.forward_infer(&x, batch, sp, ws);
+            ws.recycle(std::mem::replace(&mut x, nx));
+        }
+        let h = self.final_ln.forward_infer(&x, ws);
+        ws.recycle(x);
+        let mut logits = ws.take_matrix("infer.logits", h.rows(), self.lm_head.cols());
+        kernels::matmul_into(&h, &self.lm_head, &mut logits);
+        ws.recycle(h);
+        logits
+    }
+
+    /// Run `prompt` (plus any PEFT virtual tokens) through the model once,
+    /// filling `slot`'s K/V rows in every block, and return the **last
+    /// position's logits** `(1 × vocab)`. The slot must be reset
+    /// (`kv.len(slot) == 0`).
+    pub fn prefill(
+        &self,
+        prompt: &[u32],
+        slot: usize,
+        kv: &mut KvCache,
+        ws: &mut Workspace,
+    ) -> Matrix {
+        assert!(!prompt.is_empty(), "prefill requires a non-empty prompt");
+        assert_eq!(kv.len(slot), 0, "prefill requires a reset slot");
+        let (mut x, _ptc) = self.embed(&[prompt.to_vec()]);
+        let t = x.rows(); // n_virtual + prompt.len()
+        let rows: Vec<(usize, usize)> = (0..t).map(|p| (slot, p)).collect();
+        for (l, blk) in self.blocks.iter().enumerate() {
+            let nx = blk.forward_cached(&x, l, &rows, kv, ws);
+            ws.recycle(std::mem::replace(&mut x, nx));
+        }
+        kv.advance(slot, t);
+        let mut last = ws.take_matrix("infer.last", 1, x.cols());
+        last.data_mut().copy_from_slice(x.row(t - 1));
+        ws.recycle(x);
+        let h = self.final_ln.forward_infer(&last, ws);
+        ws.recycle(last);
+        let mut logits = ws.take_matrix("infer.logits", 1, self.lm_head.cols());
+        kernels::matmul_into(&h, &self.lm_head, &mut logits);
+        ws.recycle(h);
+        logits
+    }
+
+    /// One incremental decode step: feed `tokens[i]` to slot `slots[i]`
+    /// (distinct, already prefilled) and return the next-token logits
+    /// `(slots.len() × vocab)`. All active rows run the linear layers as
+    /// one stacked batch; attention reads each slot's cached prefix.
+    pub fn decode_step(
+        &self,
+        tokens: &[u32],
+        slots: &[usize],
+        kv: &mut KvCache,
+        ws: &mut Workspace,
+    ) -> Matrix {
+        assert_eq!(tokens.len(), slots.len(), "one token per active slot");
+        let n = tokens.len();
+        assert!(n > 0, "decode_step needs at least one active slot");
+        // duplicate slots would stack two rows on one cache position and
+        // silently corrupt the prefix — reject them even in release builds
+        // (n is the active batch, so the quadratic scan is noise next to
+        // the block forwards)
+        assert!(
+            slots.iter().all(|s| slots.iter().filter(|t| *t == s).count() == 1),
+            "duplicate slot in decode batch"
+        );
+        let d = self.cfg.d_model;
+        let mut x = ws.take_matrix("infer.dec.x", n, d);
+        let mut rows = Vec::with_capacity(n);
+        for (i, (&tok, &slot)) in tokens.iter().zip(slots).enumerate() {
+            let pos = kv.len(slot);
+            assert!(pos > 0, "decode_step on slot {slot} before prefill");
+            assert!(pos < self.cfg.max_seq, "slot {slot} ran out of positions");
+            let row = x.row_mut(i);
+            let te = self.emb.tok.row(tok as usize);
+            let pe = self.emb.pos.row(pos);
+            for j in 0..d {
+                row[j] = te[j] + pe[j];
+            }
+            rows.push((slot, pos));
+        }
+        for (l, blk) in self.blocks.iter().enumerate() {
+            let nx = blk.forward_cached(&x, l, &rows, kv, ws);
+            ws.recycle(std::mem::replace(&mut x, nx));
+        }
+        for &slot in slots {
+            kv.advance(slot, 1);
+        }
+        let h = self.final_ln.forward_infer(&x, ws);
+        ws.recycle(x);
+        let mut logits = ws.take_matrix("infer.logits", n, self.lm_head.cols());
+        kernels::matmul_into(&h, &self.lm_head, &mut logits);
+        ws.recycle(h);
+        logits
+    }
+}

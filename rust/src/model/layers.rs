@@ -5,7 +5,7 @@
 //! (PEFT regime) so backward passes only produce input gradients — adapter
 //! gradients are handled by the wrappers in `model::linear` / `peft`.
 
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, Workspace};
 use crate::util::prng::Rng;
 
 /// LayerNorm with gain+bias (frozen; gains carry the planted outlier
@@ -54,6 +54,26 @@ impl LayerNorm {
             }
         }
         (out, LnCache { xhat, inv_std })
+    }
+
+    /// Inference-mode forward: no backward cache, output drawn from the
+    /// workspace. Row-local and arithmetically identical to
+    /// [`LayerNorm::forward`] (same mean/var/normalize sequence), so the
+    /// cached decode path matches the training-path forward bit-for-bit.
+    pub fn forward_infer(&self, x: &Matrix, ws: &mut Workspace) -> Matrix {
+        let (t, d) = (x.rows(), x.cols());
+        let mut out = ws.take_matrix("ln.inf.y", t, d);
+        for i in 0..t {
+            let row = x.row(i);
+            let mean = row.iter().sum::<f32>() / d as f32;
+            let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+            let istd = 1.0 / (var + self.eps).sqrt();
+            let o = out.row_mut(i);
+            for j in 0..d {
+                o[j] = (row[j] - mean) * istd * self.gain[j] + self.bias[j];
+            }
+        }
+        out
     }
 
     /// dL/dx given dL/dy (standard LayerNorm backward; gain/bias frozen).

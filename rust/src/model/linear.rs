@@ -158,6 +158,29 @@ impl QuantLinear {
         (y, LinCache { lora: lora_cache })
     }
 
+    /// Inference-mode forward: frozen method state (no momentum updates, no
+    /// calibration tap, no capture), no backward cache, LoRA applied without
+    /// dropout. Row-local, which is what lets the KV-cached decode path in
+    /// `model::decode` reuse this layer incrementally. The output comes from
+    /// `ws`; hand it back via [`Workspace::recycle`] when done.
+    pub fn infer(&self, x: &Matrix, ws: &mut Workspace) -> Matrix {
+        let mut y = match (&self.method, &self.w_master) {
+            (Some(m), _) => m.forward_infer(x, ws),
+            (None, Some(w)) => {
+                let mut y = ws.take_matrix("lin.master.y", x.rows(), w.cols());
+                kernels::matmul_into(x, w, &mut y);
+                y
+            }
+            _ => unreachable!("linear layer with neither method nor master"),
+        };
+        if let Some(lora) = &self.lora {
+            let dy = lora.delta_infer(x, ws);
+            y.add_assign(&dy);
+            ws.recycle(dy);
+        }
+        y
+    }
+
     /// Backward: returns dX (workspace-backed); accumulates adapter grads.
     pub fn backward(&mut self, dy: &Matrix, cache: &LinCache, ws: &mut Workspace) -> Matrix {
         let mut dx = match (&self.method, &self.w_master) {

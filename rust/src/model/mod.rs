@@ -8,7 +8,13 @@
 //! residual → LayerNorm → GELU-MLP → residual; learned positional
 //! embeddings; tied-free FP32 LM head (excluded from quantization, as in
 //! the paper's bitsandbytes setup which quantizes `nn.Linear` blocks only).
+//!
+//! Besides the teacher-forced training forward, the model has a frozen-
+//! state inference surface in [`decode`]: `forward_infer`, KV-cached
+//! `prefill`/`decode_step`, bit-identical to each other per
+//! `tests/decode_parity.rs`.
 
+pub mod decode;
 pub mod inject;
 pub mod layers;
 pub mod linear;

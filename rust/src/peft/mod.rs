@@ -3,7 +3,7 @@
 //! quantized base weights.
 
 use crate::model::param::Param;
-use crate::tensor::Matrix;
+use crate::tensor::{kernels, Matrix, Workspace};
 use crate::util::prng::Rng;
 
 /// PEFT strategy selector.
@@ -96,6 +96,20 @@ impl LoraAdapter {
         let mut dy = h.matmul(&self.b.value);
         dy.scale(self.scale);
         (dy, LoraCache { x: xd, h })
+    }
+
+    /// Inference-mode ΔY: no dropout, no cache, no RNG — bit-identical to
+    /// [`LoraAdapter::forward`] with `train = false`. Buffers come from the
+    /// workspace; callers hand the returned delta back via
+    /// [`Workspace::recycle`].
+    pub fn delta_infer(&self, x: &Matrix, ws: &mut Workspace) -> Matrix {
+        let mut h = ws.take_matrix("lora.inf.h", x.rows(), self.a.value.cols());
+        kernels::matmul_into(x, &self.a.value, &mut h);
+        let mut dy = ws.take_matrix("lora.inf.dy", x.rows(), self.b.value.cols());
+        kernels::matmul_into(&h, &self.b.value, &mut dy);
+        dy.scale(self.scale);
+        ws.put_matrix("lora.inf.h", h);
+        dy
     }
 
     /// Backward: accumulates dA, dB; returns the adapter's contribution to

@@ -218,6 +218,9 @@ pub type NativeKernel = Box<dyn Fn(&[HostValue]) -> Result<Vec<HostValue>> + Sen
 ///   the same kernel sequence `QuaffLinear` runs per step.
 /// * `"col_abs_max"` — `(X [r,c]) → [c]`: the pooled tree-reduced channel
 ///   statistic.
+/// * `"attn_decode"` — `(q [1,d], K [len,d], V [len,d], n_heads []) →
+///   [1,d]`: one cached-attention decode step (the `infer` subsystem's
+///   core), exposed so backends can serve incremental decoding.
 pub struct NativeBackend {
     kernels: BTreeMap<String, NativeKernel>,
 }
@@ -230,6 +233,7 @@ impl NativeBackend {
         b.register("matmul", Box::new(native_matmul));
         b.register("quant_linear", Box::new(native_quant_linear));
         b.register("col_abs_max", Box::new(native_col_abs_max));
+        b.register("attn_decode", Box::new(native_attn_decode));
         b
     }
 
@@ -304,6 +308,46 @@ fn native_quant_linear(inputs: &[HostValue]) -> Result<Vec<HostValue>> {
     let mut y = ws.take_matrix_zeroed("native.y", x.rows(), w.cols());
     qw.matmul_ws(&x_int, &dx, &mut ws, y.data_mut());
     Ok(vec![HostValue::from_matrix(&y)])
+}
+
+fn native_attn_decode(inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+    if inputs.len() != 4 {
+        bail!("attn_decode expects 4 inputs (q, K, V, n_heads), got {}", inputs.len());
+    }
+    let q = inputs[0].to_matrix().context("attn_decode input q")?;
+    let k = inputs[1].to_matrix().context("attn_decode input K")?;
+    let v = inputs[2].to_matrix().context("attn_decode input V")?;
+    let n_heads = inputs[3]
+        .as_f32()
+        .and_then(|s| s.first().copied())
+        .ok_or_else(|| anyhow!("attn_decode expects a scalar n_heads"))? as usize;
+    let d = q.cols();
+    if q.rows() != 1 {
+        bail!("attn_decode takes a single query row, got {}", q.rows());
+    }
+    if (k.rows(), k.cols()) != (v.rows(), v.cols()) || k.cols() != d || k.rows() == 0 {
+        bail!(
+            "attn_decode K/V shape mismatch: K {}x{}, V {}x{}, d {}",
+            k.rows(), k.cols(), v.rows(), v.cols(), d
+        );
+    }
+    if n_heads == 0 || d % n_heads != 0 {
+        bail!("attn_decode: d {d} not divisible by n_heads {n_heads}");
+    }
+    let mut out = Matrix::zeros(1, d);
+    let mut scores = Vec::new();
+    crate::model::decode::attend_cached(
+        q.row(0),
+        k.data(),
+        v.data(),
+        0,
+        k.rows() - 1,
+        d,
+        n_heads,
+        &mut scores,
+        out.row_mut(0),
+    );
+    Ok(vec![HostValue::from_matrix(&out)])
 }
 
 #[cfg(test)]
@@ -405,6 +449,35 @@ mod tests {
         assert_eq!(out[0].shape(), &[11]);
         assert_eq!(out[0].as_f32().unwrap(), x.col_abs_max());
         assert!(backend.execute("col_abs_max", &[]).is_err());
+    }
+
+    #[test]
+    fn native_backend_attn_decode_matches_full_attention() {
+        use crate::model::layers::attention_forward;
+        use crate::util::prng::Rng;
+        let mut r = Rng::new(11);
+        let (s, h, d) = (5usize, 2usize, 8usize);
+        let q = Matrix::randn(s, d, &mut r, 1.0);
+        let k = Matrix::randn(s, d, &mut r, 1.0);
+        let v = Matrix::randn(s, d, &mut r, 1.0);
+        let (full, _) = attention_forward(&q, &k, &v, 1, s, h);
+        let backend = NativeBackend::new();
+        let q_last = Matrix::from_vec(1, d, q.row(s - 1).to_vec());
+        let out = backend
+            .execute(
+                "attn_decode",
+                &[
+                    HostValue::from_matrix(&q_last),
+                    HostValue::from_matrix(&k),
+                    HostValue::from_matrix(&v),
+                    HostValue::scalar_f32(h as f32),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out[0].shape(), &[1, d]);
+        assert_eq!(out[0].as_f32().unwrap(), full.row(s - 1));
+        // malformed calls are rejected, not panicked on
+        assert!(backend.execute("attn_decode", &[HostValue::from_matrix(&q_last)]).is_err());
     }
 
     #[test]

@@ -47,6 +47,10 @@ pub struct Workspace {
     /// survive shard-count fluctuations.
     i16_lanes: Vec<(&'static str, Vec<Vec<i16>>)>,
     i32_lanes: Vec<(&'static str, Vec<Vec<i32>>)>,
+    /// f32 lane sets: per-shard score scratch for the cached-attention
+    /// kernel and the K/V cache's per-layer backing buffers (see
+    /// `infer::KvCache`), pooled so caches are reused across requests.
+    f32_lanes: Vec<(&'static str, Vec<Vec<f32>>)>,
     /// Buffers that had to be freshly allocated (or regrown). Stops
     /// increasing once the arena is warm — the zero-alloc invariant.
     pub fresh_allocs: u64,
@@ -162,6 +166,15 @@ impl Workspace {
         self.i32_lanes.push((key, v));
     }
 
+    /// At least `n` f32 scratch lanes — see [`Workspace::take_i16_lanes`].
+    pub fn take_f32_lanes(&mut self, key: &'static str, n: usize) -> Vec<Vec<f32>> {
+        take_lanes_from(&mut self.f32_lanes, &mut self.fresh_allocs, &mut self.reuses, key, n)
+    }
+
+    pub fn put_f32_lanes(&mut self, key: &'static str, v: Vec<Vec<f32>>) {
+        self.f32_lanes.push((key, v));
+    }
+
     /// Cleared index scratch (length 0; push into it).
     pub fn take_idx(&mut self, key: &'static str) -> Vec<usize> {
         let mut v = take_from(&mut self.idxs, &mut self.fresh_allocs, &mut self.reuses, key, 0);
@@ -219,6 +232,7 @@ impl Workspace {
             + self.idxs.len()
             + self.i16_lanes.len()
             + self.i32_lanes.len()
+            + self.f32_lanes.len()
     }
 
     /// Total bytes of pooled capacity (diagnostics).
@@ -230,6 +244,7 @@ impl Workspace {
             + self.idxs.iter().map(|(_, v)| v.capacity() * 8).sum::<usize>()
             + lane_bytes(&self.i16_lanes, 2)
             + lane_bytes(&self.i32_lanes, 4)
+            + lane_bytes(&self.f32_lanes, 4)
     }
 }
 

@@ -11,17 +11,10 @@ use crate::model::Model;
 /// on ties (the `Iterator::max_by` convention the previous implementation
 /// had, so tied-logit predictions are unchanged). Total — no `unwrap` on the
 /// evaluation path: an empty or all-NaN row yields index 0 instead of a
-/// panic mid-eval.
+/// panic mid-eval. One shared implementation lives in [`crate::infer`] so
+/// greedy decoding and teacher-forced scoring cannot drift apart.
 fn argmax(row: &[f32]) -> usize {
-    let mut best = 0usize;
-    let mut best_v = f32::NEG_INFINITY;
-    for (j, &v) in row.iter().enumerate() {
-        if v >= best_v {
-            best_v = v;
-            best = j;
-        }
-    }
-    best
+    crate::infer::argmax(row) as usize
 }
 
 /// Mean NLL + perplexity over a sample set (teacher forcing).
@@ -172,6 +165,29 @@ pub fn eval_rouge(model: &mut Model, samples: &[Sample], max_new_cap: usize) -> 
     total / samples.len() as f64
 }
 
+/// [`eval_rouge`] over the shared KV-cached decode path (`infer`): frozen
+/// method state, O(1) work per generated token instead of a full
+/// re-forward. Takes `&Model` — scoring never mutates the model.
+pub fn eval_rouge_decode(model: &Model, samples: &[Sample], max_new_cap: usize) -> f64 {
+    use crate::infer::{generate_cached, GenerateConfig, KvCache};
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut ws = crate::tensor::Workspace::new();
+    let mut kv = KvCache::for_model(model, 1, &mut ws);
+    let mut total = 0.0f64;
+    for s in samples {
+        let mut prompt = vec![crate::data::BOS];
+        prompt.extend_from_slice(&s.prompt);
+        let mut cfg = GenerateConfig::greedy((s.target.len() + 8).min(max_new_cap));
+        cfg.eos = Some(EOS);
+        let gen = generate_cached(model, &prompt, &cfg, &mut kv, 0, &mut ws);
+        total += rouge_l(&gen, &s.target);
+    }
+    kv.release(&mut ws);
+    total / samples.len() as f64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -246,6 +262,16 @@ mod tests {
         let mut rng = Rng::new(25);
         let test: Vec<_> = (0..2).map(|_| task.sample(&mut rng)).collect();
         let r = eval_rouge(&mut m, &test, 16);
+        assert!((0.0..=1.0).contains(&r));
+    }
+
+    #[test]
+    fn rouge_decode_eval_runs() {
+        let m = model();
+        let task = SynthTask::by_name("oasst1").unwrap();
+        let mut rng = Rng::new(25);
+        let test: Vec<_> = (0..2).map(|_| task.sample(&mut rng)).collect();
+        let r = eval_rouge_decode(&m, &test, 16);
         assert!((0.0..=1.0).contains(&r));
     }
 

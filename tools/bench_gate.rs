@@ -1,7 +1,8 @@
 //! CI perf-regression gate.
 //!
 //! Compares fresh benchmark records (`BENCH_kernels.json` from
-//! `bench_kernels`, `BENCH_threads.json` from `bench_threads`) against the
+//! `bench_kernels`, `BENCH_threads.json` from `bench_threads`,
+//! `BENCH_infer.json` from `bench_infer`) against the
 //! committed `BENCH_baseline.json` and fails (exit 1) when any mean
 //! regresses beyond the tolerance, or when a baselined kernel disappeared
 //! from the fresh records. Always writes `BENCH_gate_diff.json` so CI can
@@ -154,7 +155,11 @@ struct Args {
 fn parse_args() -> Result<Args, String> {
     let mut args = Args {
         baseline: "BENCH_baseline.json".to_string(),
-        fresh: vec!["BENCH_kernels.json".to_string(), "BENCH_threads.json".to_string()],
+        fresh: vec![
+            "BENCH_kernels.json".to_string(),
+            "BENCH_threads.json".to_string(),
+            "BENCH_infer.json".to_string(),
+        ],
         tol: None,
         diff: "BENCH_gate_diff.json".to_string(),
         update: false,
