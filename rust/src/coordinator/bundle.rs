@@ -14,7 +14,10 @@ use crate::methods::{MethodConfig, MethodKind};
 use crate::model::{Model, ModelConfig};
 use crate::outlier::{BudgetAllocator, BudgetPolicy, OutlierDetector, OutlierRegistry};
 use crate::peft::PeftKind;
+use crate::persist;
+use crate::util::error::Result;
 use crate::util::prng::Rng;
+use std::path::Path;
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -58,6 +61,24 @@ pub struct DistributionBundle {
     pub payload_bytes: usize,
     /// Outlier overhead fraction actually achieved (≤5 % check).
     pub outlier_overhead: f64,
+}
+
+impl DistributionBundle {
+    /// Persist the bundle crash-safely (see [`crate::persist`]): the int8
+    /// stores, per-channel scales, Quaff momentum state, adapters, and the
+    /// outlier registry all round-trip disk **without ever materializing
+    /// f32 base weights**. Returns the archive size in bytes.
+    pub fn save(&mut self, path: &Path) -> Result<usize> {
+        persist::save_bundle(path, self)
+    }
+
+    /// Load a bundle saved by [`DistributionBundle::save`]. The restored
+    /// model is bit-identical in every forward — fine-tuning can continue
+    /// on it, and an [`infer::BatchEngine`](crate::infer::BatchEngine) can
+    /// serve from it directly (`tests/persist_resume.rs` pins both).
+    pub fn load(path: &Path) -> Result<DistributionBundle> {
+        persist::load_bundle(path)
+    }
 }
 
 /// The preprocessing server.
@@ -171,6 +192,39 @@ mod tests {
         let ra: Vec<_> = a.registry.layers().collect();
         let rb: Vec<_> = b.registry.layers().collect();
         assert_eq!(ra, rb);
+    }
+
+    #[test]
+    fn bundle_roundtrips_disk_without_f32_weights_and_forwards_identically() {
+        let dir = std::env::temp_dir().join(format!("quaff_bundle_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("quaff.qckpt");
+        let server = small_server();
+        let mut bundle = server.prepare(MethodKind::Quaff, PeftKind::Lora);
+        let bytes = bundle.save(&path).unwrap();
+        assert!(bytes > 0);
+        let mut loaded = DistributionBundle::load(&path).unwrap();
+        assert_eq!(loaded.preset, bundle.preset);
+        assert_eq!(loaded.method, MethodKind::Quaff);
+        assert_eq!(loaded.payload_bytes, bundle.payload_bytes);
+        assert_eq!(
+            bundle.registry.layers().collect::<Vec<_>>(),
+            loaded.registry.layers().collect::<Vec<_>>()
+        );
+        // every linear comes back quantized — no f32 master anywhere
+        for b in &mut loaded.model.blocks {
+            for l in b.linears() {
+                assert!(l.is_quantized());
+                assert!(l.master().is_none());
+                assert_eq!(l.method_name(), "Quaff");
+            }
+        }
+        // and the forward pass is bit-identical to the never-persisted model
+        let toks = vec![vec![1u32, 2, 3, 4, 5, 6]];
+        let (la, _) = bundle.model.forward(&toks, false);
+        let (lb, _) = loaded.model.forward(&toks, false);
+        assert_eq!(la.data(), lb.data());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,8 +1,15 @@
-//! Adapter checkpointing: clients persist only their PEFT state (the point
-//! of the server–client split — base weights never leave the bundle).
+//! Adapter-only checkpointing: clients persist just their PEFT state (the
+//! point of the server–client split — base weights never leave the bundle).
 //!
 //! Format: a tiny self-describing binary — magic, count, then per-param
 //! (name-len, name, rows, cols, f32 data). No serde in the vendor set.
+//!
+//! This is the lightweight *export* format for handing adapters around.
+//! For crash-safe **full-state** checkpoint/resume (int8 base weights,
+//! Quaff momentum, Adam moments, PRNG streams, loss log — bit-identical
+//! resume) use [`crate::persist`] via [`CheckpointSpec`](super::CheckpointSpec)
+//! on a job, and [`DistributionBundle::save`](super::DistributionBundle::save)
+//! for whole quantized bundles.
 
 use crate::model::Model;
 use crate::util::error::Result;

@@ -7,26 +7,55 @@
 //! [`DistributionBundle`], and returns [`JobReport`]s with task metrics,
 //! per-step latency and the memory breakdown — the measurement engine
 //! behind every table and figure in `report`.
+//!
+//! Long-running jobs are the common case on consumer hardware, so jobs can
+//! carry a [`CheckpointSpec`]: `run_job` then writes the **full** training
+//! state (quantized base weights, Quaff momentum, adapters, Adam moments,
+//! PRNG streams, data cursor, loss log) crash-safely every N steps via
+//! [`crate::persist`], resumes from an existing checkpoint automatically,
+//! and [`resumable_jobs`] + [`Coordinator::run_all`] pick up every
+//! interrupted job in a directory. Resume is **bit-identical** to the
+//! uninterrupted run (`tests/persist_resume.rs`).
 
 pub mod bundle;
 pub mod checkpoint;
 
 pub use bundle::{DistributionBundle, PreprocessServer, ServerConfig};
 
-use crate::anyhow;
 use crate::data::{
     Dataset, Sample, SynthTask, TaskFamily, INSTRUCTION_SETS, LONGTEXT_SETS, REASONING_SETS,
 };
 use crate::methods::MethodKind;
 use crate::metrics::{LatencyTimer, MemoryAccountant, MemoryBreakdown};
 use crate::peft::PeftKind;
+use crate::persist;
 use crate::train::{eval as teval, Trainer};
 use crate::util::error::{Context, Result};
 use crate::util::prng::Rng;
+use crate::{anyhow, bail};
 use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
+
+/// Periodic full-state checkpointing policy for a job.
+///
+/// When set on a [`FinetuneJob`], `run_job` writes the complete training
+/// state to `path` every `every` optimizer steps (and after the final
+/// step), crash-safely — temp file + fsync + atomic rename, with the
+/// previous generation retained at `<path>.prev` for corrupt-tail
+/// recovery. If `path` (or its previous generation) already holds a
+/// checkpoint when the job starts, the job **resumes** from it instead of
+/// starting over, after validating that the stored job spec matches.
+#[derive(Clone, Debug)]
+pub struct CheckpointSpec {
+    /// Archive location; by convention named `*.qckpt` so directory scans
+    /// ([`resumable_jobs`]) can discover it.
+    pub path: PathBuf,
+    /// Save every N steps; 0 disables saving (resume-only).
+    pub every: u64,
+}
 
 /// One fine-tuning request.
 #[derive(Clone, Debug)]
@@ -44,6 +73,8 @@ pub struct FinetuneJob {
     pub train_pool: usize,
     pub eval_samples: usize,
     pub max_len: usize,
+    /// Periodic checkpoint/resume policy (None = run in memory only).
+    pub checkpoint: Option<CheckpointSpec>,
 }
 
 impl FinetuneJob {
@@ -63,6 +94,7 @@ impl FinetuneJob {
             train_pool: 64,
             eval_samples: 24,
             max_len: 160,
+            checkpoint: None,
         }
     }
 }
@@ -76,6 +108,12 @@ pub struct JobReport {
     pub peft: PeftKind,
     pub steps: u64,
     pub final_loss: f64,
+    /// Every per-step loss, in step order (spans resumes: a resumed job's
+    /// log continues the interrupted run's — bit-identical to an
+    /// uninterrupted run's log).
+    pub losses: Vec<f64>,
+    /// `Some(k)` when the job resumed from a checkpoint taken at step `k`.
+    pub resumed_from: Option<u64>,
     /// Task metrics: keys among {"ppl", "acc", "rouge_l", "exact"}.
     pub metrics: BTreeMap<String, f64>,
     pub mean_step_secs: f64,
@@ -89,10 +127,60 @@ impl JobReport {
     }
 }
 
+/// Verify that a checkpoint's recorded job spec matches the job asking to
+/// resume from it. `steps` (extendable), `id`, and the checkpoint policy
+/// itself may differ; everything that determines the training trajectory
+/// must match, or the resumed run would silently diverge.
+fn validate_resume(saved: &FinetuneJob, job: &FinetuneJob) -> Result<()> {
+    let mut diffs: Vec<&str> = Vec::new();
+    if saved.dataset != job.dataset {
+        diffs.push("dataset");
+    }
+    if saved.method != job.method {
+        diffs.push("method");
+    }
+    if saved.peft != job.peft {
+        diffs.push("peft");
+    }
+    if saved.batch_size != job.batch_size {
+        diffs.push("batch_size");
+    }
+    if saved.grad_accum != job.grad_accum {
+        diffs.push("grad_accum");
+    }
+    if saved.lr.to_bits() != job.lr.to_bits() {
+        diffs.push("lr");
+    }
+    if saved.seed != job.seed {
+        diffs.push("seed");
+    }
+    if saved.train_pool != job.train_pool {
+        diffs.push("train_pool");
+    }
+    if saved.eval_samples != job.eval_samples {
+        diffs.push("eval_samples");
+    }
+    if saved.max_len != job.max_len {
+        diffs.push("max_len");
+    }
+    if !diffs.is_empty() {
+        bail!(
+            "checkpoint belongs to a different job (mismatched: {})",
+            diffs.join(", ")
+        );
+    }
+    Ok(())
+}
+
 /// Execute one job against a prepared bundle (the worker body; exposed so
 /// reports/benches can run cells synchronously without the queue). A job
 /// naming an unknown dataset is a readable [`Err`], not a panic — bad task
 /// names come straight from CLI flags.
+///
+/// When the job carries a [`CheckpointSpec`] and a checkpoint already
+/// exists at its path, the run **resumes** from it — model, optimizer,
+/// PRNG streams, data cursor and loss log all continue mid-stream, so the
+/// completed run is bit-identical to one that was never interrupted.
 pub fn run_job(server: &PreprocessServer, job: &FinetuneJob) -> Result<JobReport> {
     let task = SynthTask::by_name(&job.dataset).with_context(|| {
         format!(
@@ -113,56 +201,95 @@ pub fn run_job(server: &PreprocessServer, job: &FinetuneJob) -> Result<JobReport
         .collect();
     let ds = Dataset::from_samples(&job.dataset, samples, &mut rng);
 
-    let mut bundle = server.prepare(job.method, job.peft);
-    let model = &mut bundle.model;
-    let mut trainer = Trainer::new(job.lr, job.max_len, job.grad_accum);
+    // Resume from an existing checkpoint, or prepare a fresh bundle.
+    let mut resumed_from = None;
+    let (mut model, payload_bytes, mut trainer, mut losses, cursor) = match &job.checkpoint {
+        Some(spec) if persist::checkpoint_exists(&spec.path) => {
+            let loaded = persist::load_train_checkpoint(&spec.path)
+                .with_context(|| format!("resume job {}", job.id))?;
+            validate_resume(&loaded.ckpt.job, job)?;
+            let ck = loaded.ckpt;
+            resumed_from = Some(ck.steps_done);
+            (ck.model, ck.payload_bytes, ck.trainer, ck.losses, ck.cursor)
+        }
+        _ => {
+            let bundle = server.prepare(job.method, job.peft);
+            let payload = bundle.payload_bytes;
+            (
+                bundle.model,
+                payload,
+                Trainer::new(job.lr, job.max_len, job.grad_accum),
+                Vec::new(),
+                0,
+            )
+        }
+    };
     let mut timer = LatencyTimer::new();
     let mut iter = ds.batches(job.batch_size);
-    let mut final_loss = f64::NAN;
-    for _ in 0..job.steps {
+    iter.seek(cursor);
+    while trainer.step_count < job.steps {
         let mut micro = Vec::with_capacity(job.grad_accum);
         for _ in 0..job.grad_accum {
             micro.push(iter.next_batch());
         }
-        let stats = trainer.step(model, &micro);
+        let stats = trainer.step(&mut model, &micro);
         timer.record(stats.seconds);
-        final_loss = stats.loss;
+        losses.push(stats.loss);
+        if let Some(spec) = &job.checkpoint {
+            let due = spec.every > 0
+                && (trainer.step_count % spec.every == 0 || trainer.step_count == job.steps);
+            if due {
+                persist::save_train_checkpoint(
+                    &spec.path,
+                    job,
+                    &mut model,
+                    &trainer,
+                    iter.cursor(),
+                    &losses,
+                    payload_bytes,
+                )
+                .with_context(|| {
+                    format!("checkpoint job {} at step {}", job.id, trainer.step_count)
+                })?;
+            }
+        }
     }
+    let final_loss = losses.last().copied().unwrap_or(f64::NAN);
     // evaluation by task family
     let test: Vec<Sample> = ds.test.iter().take(job.eval_samples).cloned().collect();
     let mut metrics = BTreeMap::new();
-    let (_nll, ppl) = teval::eval_ppl(model, &test, job.batch_size, job.max_len);
+    let (_nll, ppl) = teval::eval_ppl(&mut model, &test, job.batch_size, job.max_len);
     metrics.insert("ppl".to_string(), ppl);
     match task.family {
         TaskFamily::Mcq => {
             metrics.insert(
                 "acc".to_string(),
-                teval::eval_mcq_accuracy(model, &test, job.max_len),
+                teval::eval_mcq_accuracy(&mut model, &test, job.max_len),
             );
         }
         TaskFamily::Lambada => {
             metrics.insert(
                 "acc".to_string(),
-                teval::eval_token_accuracy(model, &test, job.max_len),
+                teval::eval_token_accuracy(&mut model, &test, job.max_len),
             );
             metrics.insert(
                 "exact".to_string(),
-                teval::eval_exact_match(model, &test, job.max_len),
+                teval::eval_exact_match(&mut model, &test, job.max_len),
             );
         }
         TaskFamily::Instruction | TaskFamily::LongForm => {
             metrics.insert(
                 "acc".to_string(),
-                teval::eval_token_accuracy(model, &test, job.max_len),
+                teval::eval_token_accuracy(&mut model, &test, job.max_len),
             );
             let n_rouge = test.len().min(6);
             metrics.insert(
                 "rouge_l".to_string(),
-                teval::eval_rouge(model, &test[..n_rouge], 48),
+                teval::eval_rouge(&mut model, &test[..n_rouge], 48),
             );
         }
     }
-    let memory = MemoryAccountant::account(model, job.method, job.batch_size, job.max_len);
+    let memory = MemoryAccountant::account(&mut model, job.method, job.batch_size, job.max_len);
     Ok(JobReport {
         id: job.id,
         dataset: job.dataset.clone(),
@@ -170,11 +297,50 @@ pub fn run_job(server: &PreprocessServer, job: &FinetuneJob) -> Result<JobReport
         peft: job.peft,
         steps: trainer.step_count,
         final_loss,
+        losses,
+        resumed_from,
         metrics,
         mean_step_secs: timer.mean(),
         memory,
-        payload_bytes: bundle.payload_bytes,
+        payload_bytes,
     })
+}
+
+/// Scan `dir` for training checkpoints (`*.qckpt`) and return their
+/// recorded job specs wired to resume in place — feeding the result to
+/// [`Coordinator::run_all`] picks up every interrupted job where it left
+/// off (jobs already at their target step count just re-evaluate and
+/// report). Paths are scanned in sorted order for determinism.
+pub fn resumable_jobs(dir: &Path) -> Result<Vec<FinetuneJob>> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| anyhow!("scan {}: {e}", dir.display()))?;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for entry in entries {
+        let path = entry.map_err(|e| anyhow!("scan {}: {e}", dir.display()))?.path();
+        let is_ckpt = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .is_some_and(|n| n.ends_with(".qckpt"));
+        if is_ckpt {
+            paths.push(path);
+        }
+    }
+    paths.sort();
+    let mut jobs = Vec::new();
+    for path in paths {
+        // skip other archive kinds that share the extension (e.g. a saved
+        // DistributionBundle) — only corrupt/unreadable files are errors
+        let is_ckpt = persist::is_train_checkpoint(&path)
+            .with_context(|| format!("scan {}", path.display()))?;
+        if !is_ckpt {
+            continue;
+        }
+        let (mut job, _steps_done) =
+            persist::peek_job(&path).with_context(|| format!("scan {}", path.display()))?;
+        job.checkpoint = Some(CheckpointSpec { path, every: 1 });
+        jobs.push(job);
+    }
+    Ok(jobs)
 }
 
 enum Msg {
@@ -335,6 +501,47 @@ mod tests {
         );
         assert_eq!(coord.submitted(), 3);
         coord.shutdown();
+    }
+
+    #[test]
+    fn interrupted_jobs_are_scanned_and_picked_up_by_run_all() {
+        let dir = std::env::temp_dir().join(format!("quaff_coord_resume_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let server = PreprocessServer::new(tiny_server_cfg());
+        // "interrupt" a job by running only 1 of its 2 steps, checkpointing
+        let path = dir.join("job7.qckpt");
+        let mut j = tiny_job(7, MethodKind::Quaff);
+        j.steps = 1;
+        j.checkpoint = Some(CheckpointSpec { path: path.clone(), every: 1 });
+        let partial = run_job(&server, &j).unwrap();
+        assert_eq!(partial.steps, 1);
+        assert!(partial.resumed_from.is_none());
+        // a saved bundle sharing the extension must be skipped, not fatal
+        let mut bundle = server.prepare(MethodKind::Naive, PeftKind::Lora);
+        bundle.save(&dir.join("bundle.qckpt")).unwrap();
+        // the scanner finds the interrupted job with its recorded spec
+        let jobs = resumable_jobs(&dir).unwrap();
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].id, 7);
+        assert_eq!(jobs[0].dataset, "gpqa");
+        // extend to the full length and let the queue pick it up
+        let mut resumed = jobs;
+        resumed[0].steps = 2;
+        let mut coord = Coordinator::new(tiny_server_cfg(), 1);
+        let reports = coord.run_all(resumed).unwrap();
+        assert_eq!(reports[0].resumed_from, Some(1));
+        assert_eq!(reports[0].steps, 2);
+        assert_eq!(reports[0].losses.len(), 2);
+        assert_eq!(reports[0].losses[0], partial.losses[0], "loss log must continue");
+        coord.shutdown();
+        // a mismatched job spec is rejected readably
+        let mut wrong = tiny_job(8, MethodKind::Naive);
+        wrong.steps = 2;
+        wrong.checkpoint = Some(CheckpointSpec { path, every: 1 });
+        let err = run_job(&server, &wrong).unwrap_err().to_string();
+        assert!(err.contains("different job"), "{err}");
+        assert!(err.contains("method"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -74,6 +74,21 @@ impl<'a> BatchIter<'a> {
         }
         out
     }
+
+    /// Current position in the cyclic pool (persistence).
+    pub fn cursor(&self) -> usize {
+        self.cursor
+    }
+
+    /// Restore a persisted position, so a resumed run draws exactly the
+    /// batches the uninterrupted run would have drawn next.
+    pub fn seek(&mut self, cursor: usize) {
+        self.cursor = if self.samples.is_empty() {
+            0
+        } else {
+            cursor % self.samples.len()
+        };
+    }
 }
 
 /// Pack a batch of samples into padded token rows + loss masks.

@@ -105,6 +105,26 @@ impl BatchEngine {
         self.kv.slots()
     }
 
+    /// Fresh-allocation counter of the engine's arena. Stops moving once
+    /// the engine has served a request of a given shape — pinned by
+    /// `tests/engine_memory.rs`.
+    pub fn workspace_fresh_allocs(&self) -> u64 {
+        self.ws.fresh_allocs
+    }
+
+    /// Bytes of pooled arena capacity (excluding the K/V cache, which
+    /// [`BatchEngine::kv_bytes`] reports). Stable across same-shape
+    /// request batches.
+    pub fn workspace_pooled_bytes(&self) -> usize {
+        self.ws.pooled_bytes()
+    }
+
+    /// Bytes held by the engine's K/V cache lanes (sized once at
+    /// construction; never grows per request).
+    pub fn kv_bytes(&self) -> usize {
+        self.kv.nbytes()
+    }
+
     /// Run every request to completion, admitting from the queue as slots
     /// free up. Completions are returned in request order. Degenerate
     /// requests (empty/over-long prompt, `max_new == 0`) complete empty.

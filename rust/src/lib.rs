@@ -8,9 +8,10 @@
 //!   WAQ methods (FP32 / Naive / LLM.int8 / Smooth_S / Smooth_D / Quaff), a
 //!   trainable decoder-only transformer with PEFT adapters, the KV-cached
 //!   batched inference engine (`infer`), the calibration + server–client
-//!   coordinator, the PJRT runtime that executes AOT-compiled JAX
-//!   artifacts, and the report harness regenerating every paper table and
-//!   figure.
+//!   coordinator, the crash-safe checkpoint/resume + quantized-bundle
+//!   persistence tier (`persist`, on the `util::codec` binary format), the
+//!   PJRT runtime that executes AOT-compiled JAX artifacts, and the report
+//!   harness regenerating every paper table and figure.
 //! * **L2 (`python/compile/model.py`)** — the JAX model + LoRA train step,
 //!   lowered once to HLO text by `python/compile/aot.py`.
 //! * **L1 (`python/compile/kernels/`)** — the fused Pallas quantized-linear
@@ -30,6 +31,7 @@ pub mod metrics;
 pub mod model;
 pub mod outlier;
 pub mod peft;
+pub mod persist;
 pub mod quant;
 pub mod report;
 pub mod runtime;

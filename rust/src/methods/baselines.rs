@@ -8,11 +8,11 @@
 //! weight requantization), which stays, because that cost is the point of
 //! the comparison.
 
-use super::{ste_backward_ws, QuantMethod};
+use super::{ste_backward_ws, MethodSnapshot, QuantMethod};
 use crate::outlier::ChannelStats;
 use crate::quant::{self, QuantizedWeights};
 use crate::scaling;
-use crate::tensor::{kernels, Matrix, Workspace};
+use crate::tensor::{kernels, I8Matrix, Matrix, Workspace};
 
 /// Full-precision reference: `Y = X · W` in f32.
 pub struct Fp32Linear {
@@ -57,6 +57,10 @@ impl QuantMethod for Fp32Linear {
     fn cout(&self) -> usize {
         self.w.cols()
     }
+
+    fn snapshot(&self) -> MethodSnapshot {
+        MethodSnapshot::Fp32 { w: self.w.clone() }
+    }
 }
 
 /// Naive W8A8 (Eq. 2): per-OC weight quant once, per-token activation quant
@@ -69,6 +73,13 @@ impl NaiveW8A8Linear {
     pub fn new(w: Matrix) -> Self {
         NaiveW8A8Linear {
             qw: QuantizedWeights::quantize(&w),
+        }
+    }
+
+    /// Rebuild from a persisted int8 store (no f32 master ever exists).
+    pub fn from_parts(w_int: I8Matrix, deltas: Vec<f32>) -> Self {
+        NaiveW8A8Linear {
+            qw: QuantizedWeights::from_parts(w_int, deltas),
         }
     }
 }
@@ -109,6 +120,13 @@ impl QuantMethod for NaiveW8A8Linear {
     fn cout(&self) -> usize {
         self.qw.w_int.cols()
     }
+
+    fn snapshot(&self) -> MethodSnapshot {
+        MethodSnapshot::Naive {
+            w_int: self.qw.w_int.clone(),
+            deltas: self.qw.deltas.clone(),
+        }
+    }
 }
 
 /// LLM.int8 (Eq. 10/11): per-step *dynamic* outlier detection by absolute
@@ -130,6 +148,23 @@ impl LlmInt8Linear {
             sigma,
             dequant_rows_total: 0,
             steps: 0,
+        }
+    }
+
+    /// Rebuild from a persisted int8 store, threshold, and the lifetime
+    /// detection counters (so diagnostics continue across a resume).
+    pub fn from_parts(
+        w_int: I8Matrix,
+        deltas: Vec<f32>,
+        sigma: f32,
+        dequant_rows_total: u64,
+        steps: u64,
+    ) -> Self {
+        LlmInt8Linear {
+            qw: QuantizedWeights::from_parts(w_int, deltas),
+            sigma,
+            dequant_rows_total,
+            steps,
         }
     }
 
@@ -250,6 +285,16 @@ impl QuantMethod for LlmInt8Linear {
     fn cout(&self) -> usize {
         self.qw.w_int.cols()
     }
+
+    fn snapshot(&self) -> MethodSnapshot {
+        MethodSnapshot::LlmInt8 {
+            w_int: self.qw.w_int.clone(),
+            deltas: self.qw.deltas.clone(),
+            sigma: self.sigma,
+            dequant_rows_total: self.dequant_rows_total,
+            steps: self.steps,
+        }
+    }
 }
 
 /// SmoothQuant **static** (Smooth_S): factors fixed from calibration data;
@@ -274,6 +319,19 @@ impl SmoothStaticLinear {
         scaling::apply_row_scale(&mut w_scaled, &s);
         SmoothStaticLinear {
             qw_scaled: QuantizedWeights::quantize(&w_scaled),
+            s,
+            inv_s,
+        }
+    }
+
+    /// Rebuild from the persisted **scaled** int8 store + static factors;
+    /// the reciprocals are a pure derivation (recomputed exactly as the
+    /// constructor does).
+    pub fn from_parts(w_int: I8Matrix, deltas: Vec<f32>, s: Vec<f32>) -> Self {
+        assert_eq!(s.len(), w_int.rows(), "factor count must match c_in");
+        let inv_s: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
+        SmoothStaticLinear {
+            qw_scaled: QuantizedWeights::from_parts(w_int, deltas),
             s,
             inv_s,
         }
@@ -327,6 +385,14 @@ impl QuantMethod for SmoothStaticLinear {
     fn scaling_factors(&self) -> Option<Vec<f32>> {
         Some(self.s.clone())
     }
+
+    fn snapshot(&self) -> MethodSnapshot {
+        MethodSnapshot::SmoothStatic {
+            w_int: self.qw_scaled.w_int.clone(),
+            deltas: self.qw_scaled.deltas.clone(),
+            s: self.s.clone(),
+        }
+    }
 }
 
 /// SmoothQuant **dynamic** (Smooth_D): recompute `s` from the *current*
@@ -353,6 +419,22 @@ impl SmoothDynamicLinear {
             w_row_max,
             alpha,
             last_s: vec![1.0; cin],
+        }
+    }
+
+    /// Rebuild from the persisted f32 master (the method must keep one —
+    /// that memory cost is its point in the comparison) + the factors of
+    /// the last step taken, so a resumed `forward_infer` is bit-identical.
+    pub fn from_parts(w_full: Matrix, alpha: f32, last_s: Vec<f32>) -> Self {
+        assert_eq!(last_s.len(), w_full.rows(), "factor count must match c_in");
+        let w_row_max: Vec<f32> = (0..w_full.rows())
+            .map(|i| w_full.row(i).iter().fold(0.0f32, |m, &v| m.max(v.abs())))
+            .collect();
+        SmoothDynamicLinear {
+            w_full,
+            w_row_max,
+            alpha,
+            last_s,
         }
     }
 }
@@ -431,6 +513,14 @@ impl QuantMethod for SmoothDynamicLinear {
 
     fn scaling_factors(&self) -> Option<Vec<f32>> {
         Some(self.last_s.clone())
+    }
+
+    fn snapshot(&self) -> MethodSnapshot {
+        MethodSnapshot::SmoothDynamic {
+            w_full: self.w_full.clone(),
+            alpha: self.alpha,
+            last_s: self.last_s.clone(),
+        }
     }
 }
 

@@ -68,6 +68,146 @@ pub trait QuantMethod: Send {
     fn scaling_factors(&self) -> Option<Vec<f32>> {
         None
     }
+
+    /// Complete persistable state — frozen representation **and** per-step
+    /// mutable state (Quaff momentum factors, Smooth_D's last factors,
+    /// LLM.int8 detection counters). [`method_from_snapshot`] rebuilds a
+    /// method whose every future forward/backward is bit-identical to this
+    /// one's, which is what makes checkpoint/resume exact (`persist`).
+    fn snapshot(&self) -> MethodSnapshot;
+}
+
+/// Owned state captured by [`QuantMethod::snapshot`]. One variant per
+/// method, holding exactly what that method stores: quantized
+/// representations stay quantized (the int8 store round-trips disk without
+/// ever touching f32 weights), f32-keeping methods (FP32, Smooth_D) keep
+/// their f32 master, and all per-step mutable state rides along.
+#[derive(Clone, Debug)]
+pub enum MethodSnapshot {
+    /// Full-precision weight.
+    Fp32 { w: Matrix },
+    /// Int8 store + per-OC step sizes.
+    Naive { w_int: I8Matrix, deltas: Vec<f32> },
+    /// Int8 store + detection threshold and lifetime counters.
+    LlmInt8 {
+        w_int: I8Matrix,
+        deltas: Vec<f32>,
+        sigma: f32,
+        dequant_rows_total: u64,
+        steps: u64,
+    },
+    /// Int8 store of the **scaled** weight + the static factors.
+    SmoothStatic {
+        w_int: I8Matrix,
+        deltas: Vec<f32>,
+        s: Vec<f32>,
+    },
+    /// F32 master (the method's semantic cost) + last dynamic factors.
+    SmoothDynamic {
+        w_full: Matrix,
+        alpha: f32,
+        last_s: Vec<f32>,
+    },
+    /// Int8 store + f32 outlier slice + momentum scaler state.
+    Quaff {
+        w_int: I8Matrix,
+        deltas: Vec<f32>,
+        w_o: Matrix,
+        w_row_max: Vec<f32>,
+        channels: Vec<usize>,
+        s_o: Vec<f32>,
+        gamma: f32,
+        momentum: bool,
+    },
+}
+
+impl MethodSnapshot {
+    /// The [`MethodKind`] this snapshot rebuilds into.
+    pub fn kind(&self) -> MethodKind {
+        match self {
+            MethodSnapshot::Fp32 { .. } => MethodKind::Fp32,
+            MethodSnapshot::Naive { .. } => MethodKind::Naive,
+            MethodSnapshot::LlmInt8 { .. } => MethodKind::LlmInt8,
+            MethodSnapshot::SmoothStatic { .. } => MethodKind::SmoothStatic,
+            MethodSnapshot::SmoothDynamic { .. } => MethodKind::SmoothDynamic,
+            MethodSnapshot::Quaff { momentum, .. } => {
+                if *momentum {
+                    MethodKind::Quaff
+                } else {
+                    MethodKind::QuaffNoMomentum
+                }
+            }
+        }
+    }
+
+    /// Input-channel count of the layer this snapshot belongs to.
+    pub fn cin(&self) -> usize {
+        match self {
+            MethodSnapshot::Fp32 { w } => w.rows(),
+            MethodSnapshot::Naive { w_int, .. }
+            | MethodSnapshot::LlmInt8 { w_int, .. }
+            | MethodSnapshot::SmoothStatic { w_int, .. }
+            | MethodSnapshot::Quaff { w_int, .. } => w_int.rows(),
+            MethodSnapshot::SmoothDynamic { w_full, .. } => w_full.rows(),
+        }
+    }
+
+    /// Output-channel count of the layer this snapshot belongs to.
+    pub fn cout(&self) -> usize {
+        match self {
+            MethodSnapshot::Fp32 { w } => w.cols(),
+            MethodSnapshot::Naive { w_int, .. }
+            | MethodSnapshot::LlmInt8 { w_int, .. }
+            | MethodSnapshot::SmoothStatic { w_int, .. }
+            | MethodSnapshot::Quaff { w_int, .. } => w_int.cols(),
+            MethodSnapshot::SmoothDynamic { w_full, .. } => w_full.cols(),
+        }
+    }
+}
+
+/// Rebuild a live method from a snapshot. The inverse of
+/// [`QuantMethod::snapshot`]: `method_from_snapshot(m.snapshot())` behaves
+/// bit-identically to `m` on every input.
+pub fn method_from_snapshot(snap: MethodSnapshot) -> Box<dyn QuantMethod> {
+    match snap {
+        MethodSnapshot::Fp32 { w } => Box::new(Fp32Linear::new(w)),
+        MethodSnapshot::Naive { w_int, deltas } => {
+            Box::new(NaiveW8A8Linear::from_parts(w_int, deltas))
+        }
+        MethodSnapshot::LlmInt8 {
+            w_int,
+            deltas,
+            sigma,
+            dequant_rows_total,
+            steps,
+        } => Box::new(LlmInt8Linear::from_parts(
+            w_int,
+            deltas,
+            sigma,
+            dequant_rows_total,
+            steps,
+        )),
+        MethodSnapshot::SmoothStatic { w_int, deltas, s } => {
+            Box::new(SmoothStaticLinear::from_parts(w_int, deltas, s))
+        }
+        MethodSnapshot::SmoothDynamic {
+            w_full,
+            alpha,
+            last_s,
+        } => Box::new(SmoothDynamicLinear::from_parts(w_full, alpha, last_s)),
+        MethodSnapshot::Quaff {
+            w_int,
+            deltas,
+            w_o,
+            w_row_max,
+            channels,
+            s_o,
+            gamma,
+            momentum,
+        } => Box::new(QuaffLinear::from_parts(
+            w_int, deltas, w_o, w_row_max, channels, s_o, gamma, momentum,
+        )),
+    }
 }
 
 /// Method selector (CLI + reports).
@@ -368,6 +508,58 @@ mod tests {
             let want = dy.matmul_bt(&wdq); // dY @ Wᵀ
             prop::all_close(got.data(), want.data(), 1e-4, 1e-3)
         });
+    }
+
+    #[test]
+    fn snapshot_roundtrip_is_bit_identical_for_every_method() {
+        let mut rng = Rng::new(0x5A07);
+        let cin = 48;
+        let cout = 32;
+        let hot = vec![7, 30];
+        let (calib, oset) = make_calib(&mut rng, cin, &hot, 90.0, 6);
+        let w = Matrix::randn(cin, cout, &mut rng, 0.3);
+        let cfg = MethodConfig::default();
+        let mut ws = Workspace::new();
+        for kind in [
+            MethodKind::Fp32,
+            MethodKind::Naive,
+            MethodKind::LlmInt8,
+            MethodKind::SmoothStatic,
+            MethodKind::SmoothDynamic,
+            MethodKind::Quaff,
+            MethodKind::QuaffNoMomentum,
+        ] {
+            let mut original = build_method(kind, w.clone(), &calib, &oset, &cfg);
+            // advance per-step state so the snapshot carries live momentum /
+            // dynamic factors, not just the post-construction defaults
+            for _ in 0..3 {
+                let x = Matrix::randn(5, cin, &mut rng, 1.0);
+                let y = original.forward(&x, &mut ws);
+                ws.recycle(y);
+            }
+            let snap = original.snapshot();
+            assert_eq!(snap.kind(), kind, "{}", original.name());
+            assert_eq!((snap.cin(), snap.cout()), (cin, cout));
+            let mut restored = method_from_snapshot(snap);
+            assert_eq!(restored.name(), original.name());
+            assert_eq!(restored.weight_bytes(), original.weight_bytes());
+            // both continue bit-identically — forward (including further
+            // per-step state updates) and backward
+            for _ in 0..2 {
+                let x = Matrix::randn(5, cin, &mut rng, 1.0);
+                let ya = original.forward(&x, &mut ws);
+                let yb = restored.forward(&x, &mut ws);
+                assert_eq!(ya.data(), yb.data(), "{kind:?} forward diverged");
+                ws.recycle(ya);
+                ws.recycle(yb);
+                let dy = Matrix::randn(5, cout, &mut rng, 1.0);
+                let da = original.backward_input(&dy, &mut ws);
+                let db = restored.backward_input(&dy, &mut ws);
+                assert_eq!(da.data(), db.data(), "{kind:?} backward diverged");
+                ws.recycle(da);
+                ws.recycle(db);
+            }
+        }
     }
 
     #[test]

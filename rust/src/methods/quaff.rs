@@ -19,11 +19,11 @@
 //! comes from the caller's [`Workspace`], so the steady-state step is
 //! allocation-free — the "lightweight operations" the paper promises.
 
-use super::{ste_backward_ws, QuantMethod};
+use super::{ste_backward_ws, MethodSnapshot, QuantMethod};
 use crate::outlier::OutlierSet;
 use crate::quant::{self, QuantizedWeights};
 use crate::scaling::{self, MomentumScaler};
-use crate::tensor::{kernels, Matrix, Workspace};
+use crate::tensor::{kernels, I8Matrix, Matrix, Workspace};
 
 /// Quaff quantized linear layer.
 pub struct QuaffLinear {
@@ -52,6 +52,39 @@ impl QuaffLinear {
         };
         QuaffLinear {
             qw: QuantizedWeights::quantize(&w),
+            w_o,
+            w_row_max,
+            scaler,
+            cin,
+            cout,
+        }
+    }
+
+    /// Rebuild from persisted state: int8 store, f32 outlier slice, the
+    /// static per-channel weight maxima (not derivable once the f32 master
+    /// is gone), and the momentum scaler mid-stream — the restored layer's
+    /// next momentum update and forward are bit-identical to the original's.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        w_int: I8Matrix,
+        deltas: Vec<f32>,
+        w_o: Matrix,
+        w_row_max: Vec<f32>,
+        channels: Vec<usize>,
+        s_o: Vec<f32>,
+        gamma: f32,
+        momentum: bool,
+    ) -> Self {
+        let cin = w_int.rows();
+        let cout = w_int.cols();
+        assert_eq!(w_row_max.len(), cin, "w_row_max must cover every input channel");
+        assert_eq!(w_o.rows(), channels.len(), "W_O must have one row per outlier");
+        assert!(w_o.rows() == 0 || w_o.cols() == cout, "W_O width must match c_out");
+        let outliers = OutlierSet::new(channels);
+        assert_eq!(outliers.len(), w_o.rows(), "outlier channels must be distinct");
+        let scaler = MomentumScaler::from_parts(gamma, outliers, s_o, momentum);
+        QuaffLinear {
+            qw: QuantizedWeights::from_parts(w_int, deltas),
             w_o,
             w_row_max,
             scaler,
@@ -194,6 +227,19 @@ impl QuantMethod for QuaffLinear {
 
     fn scaling_factors(&self) -> Option<Vec<f32>> {
         Some(self.scaler.full_factors(self.cin))
+    }
+
+    fn snapshot(&self) -> MethodSnapshot {
+        MethodSnapshot::Quaff {
+            w_int: self.qw.w_int.clone(),
+            deltas: self.qw.deltas.clone(),
+            w_o: self.w_o.clone(),
+            w_row_max: self.w_row_max.clone(),
+            channels: self.scaler.outliers.channels.clone(),
+            s_o: self.scaler.factors().to_vec(),
+            gamma: self.scaler.gamma,
+            momentum: self.scaler.momentum_enabled,
+        }
     }
 }
 

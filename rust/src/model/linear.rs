@@ -1,7 +1,7 @@
 //! Quantized linear layer wrapper: frozen base weight under a pluggable
 //! [`QuantMethod`], plus optional LoRA adapter, plus the calibration tap.
 
-use crate::methods::{build_method, MethodConfig, MethodKind, QuantMethod};
+use crate::methods::{build_method, MethodConfig, MethodKind, MethodSnapshot, QuantMethod};
 use crate::outlier::{ChannelStats, LayerKind, OutlierSet};
 use crate::peft::{LoraAdapter, LoraCache};
 use crate::tensor::{kernels, Matrix, Workspace};
@@ -101,6 +101,27 @@ impl QuantLinear {
     /// Is the layer converted to a quantized method yet?
     pub fn is_quantized(&self) -> bool {
         self.method.is_some()
+    }
+
+    /// Persistable state of the converted method, if any (see
+    /// [`MethodSnapshot`]): the full frozen representation plus per-step
+    /// mutable state, captured by the `persist` tier.
+    pub fn method_snapshot(&self) -> Option<MethodSnapshot> {
+        self.method.as_ref().map(|m| m.snapshot())
+    }
+
+    /// Install a restored method (checkpoint/bundle loading). Replaces any
+    /// master weights — the layer runs quantized from here on, exactly as
+    /// the snapshotted layer did.
+    pub fn set_method(&mut self, method: Box<dyn QuantMethod>) {
+        assert_eq!(
+            (method.cin(), method.cout()),
+            (self.cin, self.cout),
+            "restored method shape mismatch for {}",
+            self.name
+        );
+        self.method = Some(method);
+        self.w_master = None;
     }
 
     pub fn method_name(&self) -> &'static str {

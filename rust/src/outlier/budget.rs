@@ -88,7 +88,9 @@ impl BudgetAllocator {
     /// Channel budget for a layer of kind `kind` with `cin` input channels.
     /// Non-zero fractions grant at least one channel so tiny simulated models
     /// can still exercise the mechanism (at 0.03 % of c_in=256 the paper's
-    /// formula would round to zero everywhere).
+    /// formula would round to zero everywhere); over-unity fractions clamp
+    /// to `cin` (all-outlier), and a zero-channel layer gets 0 — the
+    /// min-1-channel floor must not outgrow the layer.
     pub fn channels_for(&self, kind: LayerKind, cin: usize) -> usize {
         let frac = match self.policy {
             BudgetPolicy::PaperNonUniform => Self::paper_fraction(kind),
@@ -97,7 +99,7 @@ impl BudgetAllocator {
             // envelope, so ScaledNonUniform(0.05) == PaperNonUniform.
             BudgetPolicy::ScaledNonUniform(x) => Self::paper_fraction(kind) * (x / 0.05),
         };
-        if frac <= 0.0 {
+        if frac <= 0.0 || cin == 0 {
             return 0;
         }
         ((cin as f64 * frac).round() as usize).clamp(1, cin)
@@ -182,6 +184,49 @@ mod tests {
         let s = fifth.channels_for(LayerKind::DownProj, cin);
         assert_eq!(f, 1000); // 10% of 10k
         assert_eq!(s, 200); // scaled by 1/5
+    }
+
+    #[test]
+    fn zero_channel_layer_gets_zero_budget_for_every_policy() {
+        // Regression: the min-1-channel floor used to clamp(1, 0), which
+        // panics — a zero-width layer must simply get no budget.
+        for policy in [
+            BudgetPolicy::PaperNonUniform,
+            BudgetPolicy::Uniform(0.5),
+            BudgetPolicy::ScaledNonUniform(0.05),
+        ] {
+            let a = BudgetAllocator::new(policy);
+            for kind in [
+                LayerKind::QProj,
+                LayerKind::KProj,
+                LayerKind::VProj,
+                LayerKind::OProj,
+                LayerKind::UpProj,
+                LayerKind::DownProj,
+                LayerKind::Other,
+            ] {
+                assert_eq!(a.channels_for(kind, 0), 0, "{policy:?}/{kind:?}");
+            }
+        }
+        assert_eq!(
+            BudgetAllocator::new(BudgetPolicy::PaperNonUniform).overall_fraction(&[]),
+            0.0
+        );
+    }
+
+    #[test]
+    fn budget_clamps_at_full_width_for_over_unity_fractions() {
+        // All-outlier: a fraction ≥ 1 can never grant more channels than
+        // the layer has.
+        let u = BudgetAllocator::new(BudgetPolicy::Uniform(2.0));
+        assert_eq!(u.channels_for(LayerKind::QProj, 10), 10);
+        assert_eq!(u.channels_for(LayerKind::DownProj, 1), 1);
+        let s = BudgetAllocator::new(BudgetPolicy::ScaledNonUniform(1.0));
+        // down_proj fraction 0.10 * (1.0/0.05) = 2.0 → clamp to cin
+        assert_eq!(s.channels_for(LayerKind::DownProj, 64), 64);
+        // the min-1 floor at the other extreme: tiny fraction, tiny layer
+        let t = BudgetAllocator::new(BudgetPolicy::Uniform(1e-9));
+        assert_eq!(t.channels_for(LayerKind::QProj, 1), 1);
     }
 
     #[test]

@@ -137,6 +137,60 @@ mod tests {
     }
 
     #[test]
+    fn empty_predefined_set_scores_zero_against_any_detection() {
+        // Zero-channel edge: nothing was pre-identified, so every
+        // real-time detection is a miss — and nothing panics.
+        let mut t = HitRateTracker::new("l", OutlierSet::default());
+        t.record(&OutlierSet::new(vec![3, 4]));
+        assert_eq!(t.summary().0, 0.0);
+        // ...while an empty detection still counts as a perfect hit
+        t.record(&OutlierSet::default());
+        assert_eq!(t.iterations(), 2);
+        assert_eq!(t.summary().0, 0.5);
+    }
+
+    #[test]
+    fn all_outlier_layer_hits_perfectly() {
+        // All-outlier edge: predefined covers the whole axis, so any
+        // detected subset is a 100 % hit.
+        let full = OutlierSet::new((0..16).collect());
+        let mut t = HitRateTracker::new("l", full.clone());
+        t.record(&full);
+        t.record(&OutlierSet::new(vec![0, 15]));
+        let (mean, std) = t.summary();
+        assert_eq!(mean, 1.0);
+        assert_eq!(std, 0.0);
+    }
+
+    #[test]
+    fn zero_iteration_summary_is_defined() {
+        let t = HitRateTracker::new("l", OutlierSet::new(vec![1]));
+        assert_eq!(t.iterations(), 0);
+        let (mean, std) = t.summary();
+        assert_eq!((mean, std), (0.0, 0.0));
+        assert!(t.series().is_empty());
+    }
+
+    #[test]
+    fn similarity_tracker_with_zero_channels_is_total() {
+        // Pearson over an empty subset is degenerate → 0.0, not a panic.
+        let mut t = SimilarityTracker::new("l", Vec::new(), Vec::new());
+        t.record_full(&[1.0, 2.0, 3.0]);
+        assert_eq!(t.series(), &[0.0]);
+        assert_eq!(t.last(), Some(0.0));
+        assert!(t.channels().is_empty());
+    }
+
+    #[test]
+    fn similarity_tracker_constant_factors_are_degenerate_zero() {
+        // A constant factor vector has zero variance → correlation is
+        // defined as 0 (see util::pearson).
+        let mut t = SimilarityTracker::new("l", vec![0, 1, 2], vec![2.0, 2.0, 2.0]);
+        t.record_full(&[5.0, 1.0, 3.0]);
+        assert_eq!(t.series(), &[0.0]);
+    }
+
+    #[test]
     fn similarity_decays_with_drift() {
         let channels = vec![0, 1, 2, 3, 4];
         let stat = vec![1.0, 2.0, 3.0, 4.0, 5.0];

@@ -1,0 +1,1047 @@
+//! Crash-safe full-state persistence: training checkpoints and quantized
+//! distribution bundles.
+//!
+//! Built on the [`util::codec`](crate::util::codec) archive (length-prefixed
+//! CRC-protected sections behind a magic/version header), this module
+//! captures **everything** a run mutates, so that interrupt-at-any-step +
+//! resume is *bit-identical* to the uninterrupted run
+//! (`tests/persist_resume.rs` pins this for all six quantization methods ×
+//! PEFT kinds × thread widths):
+//!
+//! * the int8 base weights + per-channel scales of every linear, via
+//!   [`MethodSnapshot`] — including Quaff's momentum factors, Smooth_D's
+//!   last dynamic factors, and LLM.int8's detection counters;
+//! * LoRA / Prompt / P-tuning / IA3 adapter parameters (every trainable
+//!   param the model visits);
+//! * Adam first/second moments and the bias-correction timestep;
+//! * the outlier-injection simulator's drifting gains and hot sets;
+//! * `util::prng` stream positions (model RNG) and the data cursor;
+//! * job spec + progress (step count, every logged loss, payload bytes).
+//!
+//! **Crash model.** [`write_atomic_rotating`] writes a temp file, fsyncs it,
+//! rotates any existing checkpoint to a `.prev` sibling, then atomically
+//! renames the temp into place (and fsyncs the directory). A crash mid-write
+//! leaves either the old generation intact or a torn `.tmp` that is never
+//! read; a corrupt tail (truncation, bit rot — both CRC-detected) falls back
+//! to the retained previous generation on load
+//! ([`load_train_checkpoint`] reports which generation served the load).
+//!
+//! Bundles ([`save_bundle`]/[`load_bundle`], surfaced as
+//! `DistributionBundle::save`/`load`) persist a server-prepared quantized
+//! model so a fine-tuned artifact round-trips disk → `infer::BatchEngine`
+//! serving without ever materializing f32 base weights.
+
+use crate::coordinator::{DistributionBundle, FinetuneJob};
+use crate::methods::{method_from_snapshot, MethodKind, MethodSnapshot};
+use crate::model::{Model, ModelConfig};
+use crate::outlier::{OutlierRegistry, OutlierSet};
+use crate::peft::PeftKind;
+use crate::tensor::Matrix;
+use crate::train::Trainer;
+use crate::util::codec::{Archive, SectionReader, SectionWriter, Writer};
+use crate::util::error::Result;
+use crate::util::prng::Rng;
+use crate::{anyhow, bail};
+use std::collections::BTreeMap;
+use std::fs::{self, File};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// On-disk format version (strict equality on read).
+pub const FORMAT_VERSION: u32 = 1;
+
+const KIND_CHECKPOINT: &str = "train-checkpoint";
+const KIND_BUNDLE: &str = "distribution-bundle";
+
+/// Section names shared by checkpoints and bundles.
+mod sec {
+    pub const META: &str = "meta";
+    pub const CFG: &str = "model.cfg";
+    pub const FROZEN: &str = "model.frozen";
+    pub const METHODS: &str = "model.methods";
+    pub const INJECT: &str = "model.inject";
+    pub const PARAMS: &str = "model.params";
+    pub const RNG: &str = "model.rng";
+    pub const JOB: &str = "job";
+    pub const PROGRESS: &str = "progress";
+    pub const OPTIM: &str = "optim";
+    pub const BUNDLE: &str = "bundle.info";
+    pub const REGISTRY: &str = "bundle.registry";
+}
+
+fn sibling(path: &Path, suffix: &str) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(suffix);
+    PathBuf::from(os)
+}
+
+/// Path of the retained previous checkpoint generation for `path`.
+pub fn previous_generation(path: &Path) -> PathBuf {
+    sibling(path, ".prev")
+}
+
+/// Crash-safe write: temp file + fsync + (rotate old generation to
+/// `.prev`) + atomic rename + directory fsync. After any crash, `path`
+/// holds either the old bytes or the new bytes — never a torn mix — and
+/// the previous generation survives for corrupt-tail recovery.
+///
+/// Only a *valid* current generation is rotated: if `path` holds a corrupt
+/// archive (e.g. the very file a resume just recovered *from* `.prev`
+/// around), it is dropped instead, so a good previous generation is never
+/// overwritten by garbage.
+pub fn write_atomic_rotating(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = sibling(path, ".tmp");
+    {
+        let mut f = File::create(&tmp)
+            .map_err(|e| anyhow!("create {}: {e}", tmp.display()))?;
+        f.write_all(bytes)
+            .map_err(|e| anyhow!("write {}: {e}", tmp.display()))?;
+        f.sync_all()
+            .map_err(|e| anyhow!("fsync {}: {e}", tmp.display()))?;
+    }
+    if path.exists() {
+        let current_valid = fs::read(path)
+            .ok()
+            .is_some_and(|b| Archive::from_bytes(&b).is_ok());
+        if current_valid {
+            let prev = previous_generation(path);
+            fs::rename(path, &prev)
+                .map_err(|e| anyhow!("rotate {} -> {}: {e}", path.display(), prev.display()))?;
+        } else {
+            fs::remove_file(path)
+                .map_err(|e| anyhow!("drop corrupt {}: {e}", path.display()))?;
+        }
+    }
+    fs::rename(&tmp, path)
+        .map_err(|e| anyhow!("rename {} -> {}: {e}", tmp.display(), path.display()))?;
+    // Durability of the renames themselves; best-effort (not all platforms
+    // allow opening a directory for sync).
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// Does a loadable generation exist at `path` (current or previous)?
+pub fn checkpoint_exists(path: &Path) -> bool {
+    path.exists() || previous_generation(path).exists()
+}
+
+fn read_archive_with_recovery(path: &Path) -> Result<(Archive, bool, Option<String>)> {
+    let primary = fs::read(path)
+        .map_err(|e| anyhow!("read {}: {e}", path.display()))
+        .and_then(|b| Archive::from_bytes(&b));
+    match primary {
+        Ok(ar) => Ok((ar, false, None)),
+        Err(e) => {
+            let prev = previous_generation(path);
+            let bytes = fs::read(&prev).map_err(|pe| {
+                anyhow!(
+                    "checkpoint {} unusable ({e}); previous generation {} unreadable ({pe})",
+                    path.display(),
+                    prev.display()
+                )
+            })?;
+            let ar = Archive::from_bytes(&bytes).map_err(|pe| {
+                anyhow!(
+                    "checkpoint {} unusable ({e}); previous generation {} corrupt ({pe})",
+                    path.display(),
+                    prev.display()
+                )
+            })?;
+            Ok((ar, true, Some(e.to_string())))
+        }
+    }
+}
+
+fn check_header(ar: &Archive, kind: &str) -> Result<()> {
+    if ar.version() != FORMAT_VERSION {
+        bail!(
+            "unsupported archive version {} (this build reads {FORMAT_VERSION})",
+            ar.version()
+        );
+    }
+    let mut meta = ar.section(sec::META)?;
+    let k = meta.get_str()?;
+    if k != kind {
+        bail!("archive holds a '{k}', expected a '{kind}'");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- tags
+
+fn method_tag(k: MethodKind) -> u8 {
+    match k {
+        MethodKind::Fp32 => 1,
+        MethodKind::Naive => 2,
+        MethodKind::LlmInt8 => 3,
+        MethodKind::SmoothStatic => 4,
+        MethodKind::SmoothDynamic => 5,
+        MethodKind::Quaff => 6,
+        MethodKind::QuaffNoMomentum => 7,
+    }
+}
+
+fn method_from_tag(t: u8) -> Result<MethodKind> {
+    Ok(match t {
+        1 => MethodKind::Fp32,
+        2 => MethodKind::Naive,
+        3 => MethodKind::LlmInt8,
+        4 => MethodKind::SmoothStatic,
+        5 => MethodKind::SmoothDynamic,
+        6 => MethodKind::Quaff,
+        7 => MethodKind::QuaffNoMomentum,
+        _ => bail!("unknown method tag {t}"),
+    })
+}
+
+fn peft_tag(p: PeftKind) -> u8 {
+    match p {
+        PeftKind::Lora => 1,
+        PeftKind::Prompt => 2,
+        PeftKind::PTuning => 3,
+        PeftKind::Ia3 => 4,
+    }
+}
+
+fn peft_from_tag(t: u8) -> Result<PeftKind> {
+    Ok(match t {
+        1 => PeftKind::Lora,
+        2 => PeftKind::Prompt,
+        3 => PeftKind::PTuning,
+        4 => PeftKind::Ia3,
+        _ => bail!("unknown peft tag {t}"),
+    })
+}
+
+// ----------------------------------------------------- method snapshots
+
+fn put_layer_state(s: &mut SectionWriter, snap: Option<MethodSnapshot>, master: Option<&Matrix>) {
+    match snap {
+        None => {
+            s.put_u8(0);
+            s.put_matrix(master.expect("linear layer with neither method nor master"));
+        }
+        Some(MethodSnapshot::Fp32 { w }) => {
+            s.put_u8(1);
+            s.put_matrix(&w);
+        }
+        Some(MethodSnapshot::Naive { w_int, deltas }) => {
+            s.put_u8(2);
+            s.put_i8_matrix(&w_int);
+            s.put_f32s(&deltas);
+        }
+        Some(MethodSnapshot::LlmInt8 {
+            w_int,
+            deltas,
+            sigma,
+            dequant_rows_total,
+            steps,
+        }) => {
+            s.put_u8(3);
+            s.put_i8_matrix(&w_int);
+            s.put_f32s(&deltas);
+            s.put_f32(sigma);
+            s.put_u64(dequant_rows_total);
+            s.put_u64(steps);
+        }
+        Some(MethodSnapshot::SmoothStatic { w_int, deltas, s: factors }) => {
+            s.put_u8(4);
+            s.put_i8_matrix(&w_int);
+            s.put_f32s(&deltas);
+            s.put_f32s(&factors);
+        }
+        Some(MethodSnapshot::SmoothDynamic {
+            w_full,
+            alpha,
+            last_s,
+        }) => {
+            s.put_u8(5);
+            s.put_matrix(&w_full);
+            s.put_f32(alpha);
+            s.put_f32s(&last_s);
+        }
+        Some(MethodSnapshot::Quaff {
+            w_int,
+            deltas,
+            w_o,
+            w_row_max,
+            channels,
+            s_o,
+            gamma,
+            momentum,
+        }) => {
+            s.put_u8(6);
+            s.put_i8_matrix(&w_int);
+            s.put_f32s(&deltas);
+            s.put_matrix(&w_o);
+            s.put_f32s(&w_row_max);
+            s.put_usizes(&channels);
+            s.put_f32s(&s_o);
+            s.put_f32(gamma);
+            s.put_bool(momentum);
+        }
+    }
+}
+
+enum LayerState {
+    Master(Matrix),
+    Quantized(MethodSnapshot),
+}
+
+fn get_layer_state(r: &mut SectionReader<'_>) -> Result<LayerState> {
+    let tag = r.get_u8()?;
+    Ok(match tag {
+        0 => LayerState::Master(r.get_matrix()?),
+        1 => LayerState::Quantized(MethodSnapshot::Fp32 { w: r.get_matrix()? }),
+        2 => LayerState::Quantized(MethodSnapshot::Naive {
+            w_int: r.get_i8_matrix()?,
+            deltas: r.get_f32s()?,
+        }),
+        3 => LayerState::Quantized(MethodSnapshot::LlmInt8 {
+            w_int: r.get_i8_matrix()?,
+            deltas: r.get_f32s()?,
+            sigma: r.get_f32()?,
+            dequant_rows_total: r.get_u64()?,
+            steps: r.get_u64()?,
+        }),
+        4 => LayerState::Quantized(MethodSnapshot::SmoothStatic {
+            w_int: r.get_i8_matrix()?,
+            deltas: r.get_f32s()?,
+            s: r.get_f32s()?,
+        }),
+        5 => LayerState::Quantized(MethodSnapshot::SmoothDynamic {
+            w_full: r.get_matrix()?,
+            alpha: r.get_f32()?,
+            last_s: r.get_f32s()?,
+        }),
+        6 => LayerState::Quantized(MethodSnapshot::Quaff {
+            w_int: r.get_i8_matrix()?,
+            deltas: r.get_f32s()?,
+            w_o: r.get_matrix()?,
+            w_row_max: r.get_f32s()?,
+            channels: r.get_usizes()?,
+            s_o: r.get_f32s()?,
+            gamma: r.get_f32()?,
+            momentum: r.get_bool()?,
+        }),
+        t => bail!("unknown layer-state tag {t}"),
+    })
+}
+
+/// Internal-consistency checks on a decoded snapshot, so a CRC-valid but
+/// malformed archive (a buggy or foreign producer — the CRC only protects
+/// against *corruption*) surfaces as a readable error from the load path
+/// instead of tripping the `from_parts` invariant asserts (a panic).
+fn validate_snapshot(snap: &MethodSnapshot) -> Result<()> {
+    let deltas_ok = |deltas: &[f32], cout: usize| -> Result<()> {
+        if deltas.len() != cout {
+            bail!("method state: {} step sizes for {cout} output channels", deltas.len());
+        }
+        Ok(())
+    };
+    match snap {
+        MethodSnapshot::Fp32 { .. } => {}
+        MethodSnapshot::Naive { w_int, deltas } => deltas_ok(deltas, w_int.cols())?,
+        MethodSnapshot::LlmInt8 { w_int, deltas, .. } => deltas_ok(deltas, w_int.cols())?,
+        MethodSnapshot::SmoothStatic { w_int, deltas, s } => {
+            deltas_ok(deltas, w_int.cols())?;
+            if s.len() != w_int.rows() {
+                bail!("Smooth_S state: {} factors for {} input channels", s.len(), w_int.rows());
+            }
+        }
+        MethodSnapshot::SmoothDynamic { w_full, last_s, .. } => {
+            if last_s.len() != w_full.rows() {
+                bail!(
+                    "Smooth_D state: {} factors for {} input channels",
+                    last_s.len(),
+                    w_full.rows()
+                );
+            }
+        }
+        MethodSnapshot::Quaff {
+            w_int,
+            deltas,
+            w_o,
+            w_row_max,
+            channels,
+            s_o,
+            gamma,
+            ..
+        } => {
+            deltas_ok(deltas, w_int.cols())?;
+            if w_row_max.len() != w_int.rows() {
+                bail!(
+                    "Quaff state: {} row maxima for {} input channels",
+                    w_row_max.len(),
+                    w_int.rows()
+                );
+            }
+            let sorted_unique = channels.windows(2).all(|w| w[0] < w[1]);
+            let in_range = channels.iter().all(|&c| c < w_int.rows());
+            if !sorted_unique || !in_range {
+                bail!("Quaff state: outlier channels must be sorted, distinct, and in range");
+            }
+            if s_o.len() != channels.len() || w_o.rows() != channels.len() {
+                bail!(
+                    "Quaff state: {} factors / {} W_O rows for {} outlier channels",
+                    s_o.len(),
+                    w_o.rows(),
+                    channels.len()
+                );
+            }
+            if w_o.rows() > 0 && w_o.cols() != w_int.cols() {
+                bail!(
+                    "Quaff state: W_O width {} does not match c_out {}",
+                    w_o.cols(),
+                    w_int.cols()
+                );
+            }
+            if !(0.0..=1.0).contains(gamma) {
+                bail!("Quaff state: gamma {gamma} outside [0, 1]");
+            }
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------- model state
+
+fn encode_model(w: &mut Writer, model: &mut Model) {
+    // cfg + attached PEFT kind
+    let mut c = SectionWriter::new();
+    let cfg = &model.cfg;
+    c.put_usize(cfg.vocab);
+    c.put_usize(cfg.d_model);
+    c.put_usize(cfg.n_layers);
+    c.put_usize(cfg.n_heads);
+    c.put_usize(cfg.d_ff);
+    c.put_usize(cfg.max_seq);
+    c.put_f32(cfg.ln_eps);
+    c.put_bool(cfg.inject_outliers);
+    c.put_usize(cfg.lora_rank);
+    c.put_f32(cfg.lora_alpha);
+    c.put_f32(cfg.lora_dropout);
+    c.put_usize(cfg.n_virtual);
+    c.put_u8(model.peft.map(peft_tag).unwrap_or(0));
+    w.section(sec::CFG, c);
+    // frozen common parts
+    let mut f = SectionWriter::new();
+    f.put_matrix(&model.emb.tok);
+    f.put_matrix(&model.emb.pos);
+    f.put_matrix(&model.lm_head);
+    for b in &model.blocks {
+        f.put_f32s(&b.ln1.gain);
+        f.put_f32s(&b.ln1.bias);
+        f.put_f32s(&b.ln2.gain);
+        f.put_f32s(&b.ln2.bias);
+    }
+    f.put_f32s(&model.final_ln.gain);
+    f.put_f32s(&model.final_ln.bias);
+    w.section(sec::FROZEN, f);
+    // per-linear quantized state (or the pre-conversion master)
+    let mut m = SectionWriter::new();
+    for b in &model.blocks {
+        for lin in b.linears_ref() {
+            put_layer_state(&mut m, lin.method_snapshot(), lin.master());
+        }
+    }
+    w.section(sec::METHODS, m);
+    // outlier-injection simulator state (drifts every training step)
+    let mut inj = SectionWriter::new();
+    for b in &model.blocks {
+        for g in [&b.inj_attn, &b.inj_o, &b.inj_mlp, &b.inj_down] {
+            inj.put_f32s(&g.gains);
+            inj.put_usizes(&g.hot);
+        }
+    }
+    w.section(sec::INJECT, inj);
+    // every trainable parameter (adapters, prompt/p-tuning, IA3) — one
+    // pass counts, one pass serializes straight into the buffer, so
+    // periodic checkpoints never clone a tensor
+    let mut count: u32 = 0;
+    model.visit_params(&mut |_, _| count += 1);
+    let mut ps = SectionWriter::new();
+    ps.put_u32(count);
+    model.visit_params(&mut |name, p| {
+        ps.put_str(name);
+        ps.put_matrix(&p.value);
+    });
+    w.section(sec::PARAMS, ps);
+    // PRNG stream position
+    let mut rs = SectionWriter::new();
+    for v in model.rng.state() {
+        rs.put_u64(v);
+    }
+    w.section(sec::RNG, rs);
+}
+
+fn ensure_mat(name: &str, m: &Matrix, rows: usize, cols: usize) -> Result<()> {
+    if (m.rows(), m.cols()) != (rows, cols) {
+        bail!(
+            "{name}: archive shape ({}, {}) does not match model ({rows}, {cols})",
+            m.rows(),
+            m.cols()
+        );
+    }
+    Ok(())
+}
+
+fn decode_model(ar: &Archive) -> Result<Model> {
+    let mut c = ar.section(sec::CFG)?;
+    let cfg = ModelConfig {
+        vocab: c.get_usize()?,
+        d_model: c.get_usize()?,
+        n_layers: c.get_usize()?,
+        n_heads: c.get_usize()?,
+        d_ff: c.get_usize()?,
+        max_seq: c.get_usize()?,
+        ln_eps: c.get_f32()?,
+        inject_outliers: c.get_bool()?,
+        lora_rank: c.get_usize()?,
+        lora_alpha: c.get_f32()?,
+        lora_dropout: c.get_f32()?,
+        n_virtual: c.get_usize()?,
+    };
+    let peft_tag_v = c.get_u8()?;
+    let mut model = Model::new(cfg, 0);
+    if peft_tag_v != 0 {
+        model.attach_peft(peft_from_tag(peft_tag_v)?);
+    }
+    let d = model.cfg.d_model;
+    // frozen common parts
+    let mut f = ar.section(sec::FROZEN)?;
+    let tok = f.get_matrix()?;
+    ensure_mat("emb.tok", &tok, model.emb.tok.rows(), model.emb.tok.cols())?;
+    model.emb.tok = tok;
+    let pos = f.get_matrix()?;
+    ensure_mat("emb.pos", &pos, model.emb.pos.rows(), model.emb.pos.cols())?;
+    model.emb.pos = pos;
+    let head = f.get_matrix()?;
+    ensure_mat("lm_head", &head, model.lm_head.rows(), model.lm_head.cols())?;
+    model.lm_head = head;
+    for i in 0..model.blocks.len() {
+        let b = &mut model.blocks[i];
+        for (label, slot) in [
+            ("ln1.gain", &mut b.ln1.gain),
+            ("ln1.bias", &mut b.ln1.bias),
+            ("ln2.gain", &mut b.ln2.gain),
+            ("ln2.bias", &mut b.ln2.bias),
+        ] {
+            let v = f.get_f32s()?;
+            if v.len() != d {
+                bail!("blocks.{i}.{label}: length {} != d_model {d}", v.len());
+            }
+            *slot = v;
+        }
+    }
+    for (label, slot) in [
+        ("final_ln.gain", &mut model.final_ln.gain),
+        ("final_ln.bias", &mut model.final_ln.bias),
+    ] {
+        let v = f.get_f32s()?;
+        if v.len() != d {
+            bail!("{label}: length {} != d_model {d}", v.len());
+        }
+        *slot = v;
+    }
+    // per-linear state
+    let mut ms = ar.section(sec::METHODS)?;
+    for i in 0..model.blocks.len() {
+        for lin in model.blocks[i].linears() {
+            match get_layer_state(&mut ms)? {
+                LayerState::Master(w) => {
+                    ensure_mat(&format!("{} master", lin.name), &w, lin.cin(), lin.cout())?;
+                    lin.set_master(w);
+                }
+                LayerState::Quantized(snap) => {
+                    validate_snapshot(&snap)?;
+                    if (snap.cin(), snap.cout()) != (lin.cin(), lin.cout()) {
+                        bail!(
+                            "{}: archive method shape ({}, {}) does not match layer ({}, {})",
+                            lin.name,
+                            snap.cin(),
+                            snap.cout(),
+                            lin.cin(),
+                            lin.cout()
+                        );
+                    }
+                    lin.set_method(method_from_snapshot(snap));
+                }
+            }
+        }
+    }
+    // injection simulator
+    let mut inj = ar.section(sec::INJECT)?;
+    for i in 0..model.blocks.len() {
+        let b = &mut model.blocks[i];
+        for g in [&mut b.inj_attn, &mut b.inj_o, &mut b.inj_mlp, &mut b.inj_down] {
+            let gains = inj.get_f32s()?;
+            if gains.len() != g.gains.len() {
+                bail!("blocks.{i}: injection gain length {} != {}", gains.len(), g.gains.len());
+            }
+            let hot = inj.get_usizes()?;
+            if hot.iter().any(|&c| c >= gains.len()) {
+                bail!("blocks.{i}: injection hot channel out of range");
+            }
+            g.gains = gains;
+            g.hot = hot;
+        }
+    }
+    // trainable parameters
+    let mut ps = ar.section(sec::PARAMS)?;
+    let count = ps.get_u32()? as usize;
+    let mut loaded: BTreeMap<String, Matrix> = BTreeMap::new();
+    for _ in 0..count {
+        let name = ps.get_str()?;
+        let value = ps.get_matrix()?;
+        loaded.insert(name, value);
+    }
+    let mut err: Option<String> = None;
+    model.visit_params(&mut |name, p| match loaded.remove(name) {
+        Some(value) => {
+            if (value.rows(), value.cols()) != (p.value.rows(), p.value.cols()) {
+                err.get_or_insert(format!(
+                    "param {name}: archive shape ({}, {}) does not match model ({}, {})",
+                    value.rows(),
+                    value.cols(),
+                    p.value.rows(),
+                    p.value.cols()
+                ));
+                return;
+            }
+            p.value = value;
+            p.zero_grad();
+        }
+        None => {
+            err.get_or_insert(format!("model param {name} missing from archive"));
+        }
+    });
+    if let Some(e) = err {
+        bail!("{e}");
+    }
+    if !loaded.is_empty() {
+        bail!(
+            "archive params not present in model: {:?}",
+            loaded.keys().collect::<Vec<_>>()
+        );
+    }
+    // PRNG stream
+    let mut rs = ar.section(sec::RNG)?;
+    let state = [rs.get_u64()?, rs.get_u64()?, rs.get_u64()?, rs.get_u64()?];
+    model.rng = Rng::from_state(state);
+    Ok(model)
+}
+
+// ------------------------------------------------------------ job spec
+
+fn put_job(s: &mut SectionWriter, job: &FinetuneJob) {
+    s.put_u64(job.id);
+    s.put_str(&job.dataset);
+    s.put_u8(method_tag(job.method));
+    s.put_u8(peft_tag(job.peft));
+    s.put_u64(job.steps);
+    s.put_usize(job.batch_size);
+    s.put_usize(job.grad_accum);
+    s.put_f32(job.lr);
+    s.put_u64(job.seed);
+    s.put_usize(job.train_pool);
+    s.put_usize(job.eval_samples);
+    s.put_usize(job.max_len);
+}
+
+fn get_job(s: &mut SectionReader<'_>) -> Result<FinetuneJob> {
+    Ok(FinetuneJob {
+        id: s.get_u64()?,
+        dataset: s.get_str()?,
+        method: method_from_tag(s.get_u8()?)?,
+        peft: peft_from_tag(s.get_u8()?)?,
+        steps: s.get_u64()?,
+        batch_size: s.get_usize()?,
+        grad_accum: s.get_usize()?,
+        lr: s.get_f32()?,
+        seed: s.get_u64()?,
+        train_pool: s.get_usize()?,
+        eval_samples: s.get_usize()?,
+        max_len: s.get_usize()?,
+        checkpoint: None,
+    })
+}
+
+// -------------------------------------------------------- checkpoints
+
+/// Everything a resumed `run_job` needs, fully restored.
+pub struct TrainCheckpoint {
+    /// The job spec as recorded at save time (`checkpoint` cleared).
+    pub job: FinetuneJob,
+    /// Optimizer steps completed (== `trainer.step_count`).
+    pub steps_done: u64,
+    /// Data-iterator cursor after the last completed step.
+    pub cursor: usize,
+    /// Every per-step loss logged so far.
+    pub losses: Vec<f64>,
+    /// Distribution payload bytes recorded at preparation time.
+    pub payload_bytes: usize,
+    /// The model, bit-identical to the checkpointed one.
+    pub model: Model,
+    /// Trainer with Adam moments/timestep and step count restored.
+    pub trainer: Trainer,
+}
+
+/// A loaded checkpoint plus which generation served it.
+pub struct LoadedCheckpoint {
+    pub ckpt: TrainCheckpoint,
+    /// True when the current generation was corrupt/missing and the
+    /// retained `.prev` generation was used instead.
+    pub recovered_from_previous: bool,
+    /// The current generation's error, when recovery happened.
+    pub primary_error: Option<String>,
+}
+
+/// Serialize the full training state to `path` crash-safely (see the
+/// module docs for the crash model). Returns the archive size in bytes.
+pub fn save_train_checkpoint(
+    path: &Path,
+    job: &FinetuneJob,
+    model: &mut Model,
+    trainer: &Trainer,
+    cursor: usize,
+    losses: &[f64],
+    payload_bytes: usize,
+) -> Result<usize> {
+    let mut w = Writer::new(FORMAT_VERSION);
+    let mut meta = SectionWriter::new();
+    meta.put_str(KIND_CHECKPOINT);
+    w.section(sec::META, meta);
+    let mut js = SectionWriter::new();
+    put_job(&mut js, job);
+    w.section(sec::JOB, js);
+    let mut pg = SectionWriter::new();
+    pg.put_u64(trainer.step_count);
+    pg.put_usize(cursor);
+    pg.put_f64s(losses);
+    pg.put_usize(payload_bytes);
+    w.section(sec::PROGRESS, pg);
+    encode_model(&mut w, model);
+    let mut os = SectionWriter::new();
+    os.put_u64(trainer.opt.timestep());
+    let mut count: u32 = 0;
+    trainer.opt.visit_state(&mut |_, _, _| count += 1);
+    os.put_u32(count);
+    trainer.opt.visit_state(&mut |name, m, v| {
+        os.put_str(name);
+        os.put_matrix(m);
+        os.put_matrix(v);
+    });
+    w.section(sec::OPTIM, os);
+    let bytes = w.finish();
+    write_atomic_rotating(path, &bytes)?;
+    Ok(bytes.len())
+}
+
+/// Load a checkpoint, falling back to the previous generation when the
+/// current one is truncated or bit-rotted (CRC), and reporting which
+/// generation served the load.
+pub fn load_train_checkpoint(path: &Path) -> Result<LoadedCheckpoint> {
+    let (ar, recovered, primary_error) = read_archive_with_recovery(path)?;
+    check_header(&ar, KIND_CHECKPOINT)?;
+    let mut js = ar.section(sec::JOB)?;
+    let job = get_job(&mut js)?;
+    let mut pg = ar.section(sec::PROGRESS)?;
+    let steps_done = pg.get_u64()?;
+    let cursor = pg.get_usize()?;
+    let losses = pg.get_f64s()?;
+    let payload_bytes = pg.get_usize()?;
+    if losses.len() as u64 != steps_done {
+        bail!(
+            "checkpoint inconsistent: {} losses for {steps_done} steps",
+            losses.len()
+        );
+    }
+    let model = decode_model(&ar)?;
+    let mut trainer = Trainer::new(job.lr, job.max_len, job.grad_accum);
+    trainer.step_count = steps_done;
+    let mut os = ar.section(sec::OPTIM)?;
+    trainer.opt.set_timestep(os.get_u64()?);
+    let n = os.get_u32()? as usize;
+    for _ in 0..n {
+        let name = os.get_str()?;
+        let m = os.get_matrix()?;
+        let v = os.get_matrix()?;
+        trainer.opt.insert_state(&name, m, v);
+    }
+    Ok(LoadedCheckpoint {
+        ckpt: TrainCheckpoint {
+            job,
+            steps_done,
+            cursor,
+            losses,
+            payload_bytes,
+            model,
+            trainer,
+        },
+        recovered_from_previous: recovered,
+        primary_error,
+    })
+}
+
+/// Does `path` hold a *training checkpoint* (as opposed to some other
+/// archive kind, e.g. a saved distribution bundle that also ends in
+/// `.qckpt`)? Unreadable/corrupt archives (both generations) and
+/// unsupported versions are errors; a readable archive of another kind is
+/// `Ok(false)` — directory scans skip those rather than failing wholesale.
+pub fn is_train_checkpoint(path: &Path) -> Result<bool> {
+    let (ar, _, _) = read_archive_with_recovery(path)?;
+    if ar.version() != FORMAT_VERSION {
+        bail!(
+            "unsupported archive version {} (this build reads {FORMAT_VERSION})",
+            ar.version()
+        );
+    }
+    let mut meta = ar.section(sec::META)?;
+    Ok(meta.get_str()? == KIND_CHECKPOINT)
+}
+
+/// Read only the job spec + progress out of a checkpoint (cheap relative to
+/// a full restore only in intent — the archive is still parsed once; used
+/// by `Coordinator` directory scans).
+pub fn peek_job(path: &Path) -> Result<(FinetuneJob, u64)> {
+    let (ar, _, _) = read_archive_with_recovery(path)?;
+    check_header(&ar, KIND_CHECKPOINT)?;
+    let mut js = ar.section(sec::JOB)?;
+    let job = get_job(&mut js)?;
+    let mut pg = ar.section(sec::PROGRESS)?;
+    let steps_done = pg.get_u64()?;
+    Ok((job, steps_done))
+}
+
+// ------------------------------------------------------------- bundles
+
+/// Persist a server-prepared [`DistributionBundle`] (quantized model +
+/// outlier registry + provenance). Crash-safe like checkpoints. Returns
+/// the archive size in bytes.
+pub fn save_bundle(path: &Path, bundle: &mut DistributionBundle) -> Result<usize> {
+    let mut w = Writer::new(FORMAT_VERSION);
+    let mut meta = SectionWriter::new();
+    meta.put_str(KIND_BUNDLE);
+    w.section(sec::META, meta);
+    let mut info = SectionWriter::new();
+    info.put_str(&bundle.preset);
+    info.put_u8(method_tag(bundle.method));
+    info.put_usize(bundle.payload_bytes);
+    info.put_f64(bundle.outlier_overhead);
+    w.section(sec::BUNDLE, info);
+    let mut reg = SectionWriter::new();
+    let entries: Vec<_> = bundle.registry.layers().collect();
+    reg.put_u32(entries.len() as u32);
+    for (name, set) in entries {
+        reg.put_str(name);
+        reg.put_usizes(&set.channels);
+    }
+    w.section(sec::REGISTRY, reg);
+    encode_model(&mut w, &mut bundle.model);
+    let bytes = w.finish();
+    write_atomic_rotating(path, &bytes)?;
+    Ok(bytes.len())
+}
+
+/// Load a [`DistributionBundle`] saved by [`save_bundle`]: the model comes
+/// back with every linear in its persisted representation (int8 stores stay
+/// int8 — no f32 base weights are materialized), ready to fine-tune or to
+/// serve from an `infer::BatchEngine` directly.
+pub fn load_bundle(path: &Path) -> Result<DistributionBundle> {
+    let (ar, _, _) = read_archive_with_recovery(path)?;
+    check_header(&ar, KIND_BUNDLE)?;
+    let mut info = ar.section(sec::BUNDLE)?;
+    let preset = info.get_str()?;
+    let method = method_from_tag(info.get_u8()?)?;
+    let payload_bytes = info.get_usize()?;
+    let outlier_overhead = info.get_f64()?;
+    let mut rs = ar.section(sec::REGISTRY)?;
+    let n = rs.get_u32()? as usize;
+    let mut registry = OutlierRegistry::new();
+    for _ in 0..n {
+        let name = rs.get_str()?;
+        let channels = rs.get_usizes()?;
+        registry.insert(&name, OutlierSet::new(channels));
+    }
+    let model = decode_model(&ar)?;
+    Ok(DistributionBundle {
+        model,
+        registry,
+        method,
+        preset,
+        payload_bytes,
+        outlier_overhead,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("quaff_persist_unit_{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn tiny_model() -> Model {
+        let mut cfg = ModelConfig::preset("opt-tiny").unwrap();
+        cfg.n_layers = 2;
+        let mut m = Model::new(cfg, 11);
+        m.attach_peft(PeftKind::Lora);
+        m
+    }
+
+    fn tiny_job() -> FinetuneJob {
+        let mut j = FinetuneJob::new(5, "gpqa", MethodKind::Naive, PeftKind::Lora);
+        j.steps = 4;
+        j
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_restores_job_progress_and_model_state() {
+        let path = tmp("roundtrip.qckpt");
+        let mut model = tiny_model();
+        // make state nontrivial
+        model.visit_params(&mut |_, p| {
+            for (i, v) in p.value.data_mut().iter_mut().enumerate() {
+                *v = (i % 5) as f32 * 0.25 - 0.5;
+            }
+        });
+        for _ in 0..3 {
+            model.tick_outliers();
+        }
+        let job = tiny_job();
+        let trainer = Trainer::new(job.lr, job.max_len, job.grad_accum);
+        let losses = vec![];
+        save_train_checkpoint(&path, &job, &mut model, &trainer, 6, &losses, 123).unwrap();
+        let loaded = load_train_checkpoint(&path).unwrap();
+        assert!(!loaded.recovered_from_previous);
+        let ck = loaded.ckpt;
+        assert_eq!(ck.job.dataset, "gpqa");
+        assert_eq!(ck.job.id, 5);
+        assert_eq!(ck.cursor, 6);
+        assert_eq!(ck.payload_bytes, 123);
+        assert_eq!(ck.steps_done, 0);
+        // params round-trip bit-exactly
+        let mut want = Vec::new();
+        model.visit_params(&mut |_, p| want.push(p.value.clone()));
+        let mut restored = ck.model;
+        let mut got = Vec::new();
+        restored.visit_params(&mut |_, p| got.push(p.value.clone()));
+        assert_eq!(want.len(), got.len());
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.data(), b.data());
+        }
+        // rng + injection state round-trip
+        assert_eq!(model.rng.state(), restored.rng.state());
+        assert_eq!(model.blocks[0].inj_down.gains, restored.blocks[0].inj_down.gains);
+        assert_eq!(model.blocks[0].inj_down.hot, restored.blocks[0].inj_down.hot);
+    }
+
+    #[test]
+    fn rotation_retains_previous_generation_and_recovers_from_corrupt_tail() {
+        let path = tmp("rotate.qckpt");
+        let _ = fs::remove_file(&path);
+        let _ = fs::remove_file(previous_generation(&path));
+        let mut model = tiny_model();
+        let job = tiny_job();
+        let trainer = Trainer::new(job.lr, job.max_len, job.grad_accum);
+        save_train_checkpoint(&path, &job, &mut model, &trainer, 1, &[], 1).unwrap();
+        assert!(!previous_generation(&path).exists());
+        save_train_checkpoint(&path, &job, &mut model, &trainer, 2, &[], 1).unwrap();
+        assert!(previous_generation(&path).exists(), "second save must rotate");
+        // corrupt the tail of the current generation
+        let bytes = fs::read(&path).unwrap();
+        fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        let loaded = load_train_checkpoint(&path).unwrap();
+        assert!(loaded.recovered_from_previous);
+        assert!(loaded.primary_error.is_some());
+        assert_eq!(loaded.ckpt.cursor, 1, "recovery must serve the previous generation");
+        // a subsequent save must NOT rotate the corrupt current generation
+        // over the good previous one — it is dropped instead
+        save_train_checkpoint(&path, &job, &mut model, &trainer, 3, &[], 1).unwrap();
+        let prev_bytes = fs::read(previous_generation(&path)).unwrap();
+        Archive::from_bytes(&prev_bytes).expect("previous generation must stay valid");
+        let after = load_train_checkpoint(&path).unwrap();
+        assert!(!after.recovered_from_previous);
+        assert_eq!(after.ckpt.cursor, 3);
+        // with both generations gone, the error is readable
+        fs::remove_file(&path).unwrap();
+        fs::remove_file(previous_generation(&path)).unwrap();
+        let e = load_train_checkpoint(&path).unwrap_err().to_string();
+        assert!(e.contains("unusable"), "{e}");
+    }
+
+    #[test]
+    fn inconsistent_snapshots_are_rejected_not_panicked() {
+        use crate::tensor::I8Matrix;
+        // mismatched momentum factors vs outlier channels
+        let bad = MethodSnapshot::Quaff {
+            w_int: I8Matrix::zeros(4, 3),
+            deltas: vec![0.1; 3],
+            w_o: Matrix::zeros(1, 3),
+            w_row_max: vec![1.0; 4],
+            channels: vec![2],
+            s_o: vec![1.0, 2.0],
+            gamma: 0.2,
+            momentum: true,
+        };
+        assert!(validate_snapshot(&bad).unwrap_err().to_string().contains("factors"));
+        // out-of-range / unsorted channels
+        let bad = MethodSnapshot::Quaff {
+            w_int: I8Matrix::zeros(4, 3),
+            deltas: vec![0.1; 3],
+            w_o: Matrix::zeros(1, 3),
+            w_row_max: vec![1.0; 4],
+            channels: vec![9],
+            s_o: vec![1.0],
+            gamma: 0.2,
+            momentum: true,
+        };
+        assert!(validate_snapshot(&bad).is_err());
+        // gamma outside [0, 1]
+        let bad = MethodSnapshot::Quaff {
+            w_int: I8Matrix::zeros(4, 3),
+            deltas: vec![0.1; 3],
+            w_o: Matrix::zeros(1, 3),
+            w_row_max: vec![1.0; 4],
+            channels: vec![2],
+            s_o: vec![1.0],
+            gamma: 1.5,
+            momentum: true,
+        };
+        assert!(validate_snapshot(&bad).unwrap_err().to_string().contains("gamma"));
+        // step-size count mismatch on the int8 substrate
+        let bad = MethodSnapshot::Naive {
+            w_int: I8Matrix::zeros(4, 3),
+            deltas: vec![0.1; 2],
+        };
+        assert!(validate_snapshot(&bad).is_err());
+        // and a consistent one passes
+        let good = MethodSnapshot::Naive {
+            w_int: I8Matrix::zeros(4, 3),
+            deltas: vec![0.1; 3],
+        };
+        assert!(validate_snapshot(&good).is_ok());
+    }
+
+    #[test]
+    fn kind_and_version_are_enforced() {
+        let path = tmp("kind.qckpt");
+        let mut model = tiny_model();
+        let job = tiny_job();
+        let trainer = Trainer::new(job.lr, job.max_len, job.grad_accum);
+        save_train_checkpoint(&path, &job, &mut model, &trainer, 0, &[], 0).unwrap();
+        let e = load_bundle(&path).unwrap_err().to_string();
+        assert!(e.contains("expected a 'distribution-bundle'"), "{e}");
+        let (job2, steps) = peek_job(&path).unwrap();
+        assert_eq!(job2.dataset, job.dataset);
+        assert_eq!(steps, 0);
+    }
+}

@@ -341,6 +341,20 @@ impl QuantizedWeights {
         }
     }
 
+    /// Rebuild from a persisted int8 store + per-OC step sizes (the
+    /// `persist` tier stores exactly these). The packed transposed form is
+    /// a pure layout cache and is re-derived, so a round-tripped store is
+    /// bit-identical to the original in every matmul.
+    pub fn from_parts(w_int: I8Matrix, deltas: Vec<f32>) -> QuantizedWeights {
+        assert_eq!(deltas.len(), w_int.cols(), "Δ_W length must match c_out");
+        let packed = w_int.pack_transposed();
+        QuantizedWeights {
+            w_int,
+            deltas,
+            packed,
+        }
+    }
+
     /// Fused `out += Δ_x·(X_int·W_int)·Δ_W` via the packed fast path
     /// (row-sharded internally for large launches).
     pub fn matmul_into(&self, x_int: &I8Matrix, dx: &[f32], out: &mut [f32]) {

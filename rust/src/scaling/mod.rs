@@ -44,6 +44,26 @@ impl MomentumScaler {
         m
     }
 
+    /// Rebuild a scaler at a previously captured state (persistence): the
+    /// factors continue from exactly where the checkpointed run left them,
+    /// so the next momentum update is bit-identical to the uninterrupted
+    /// run's.
+    pub fn from_parts(
+        gamma: f32,
+        outliers: OutlierSet,
+        s: Vec<f32>,
+        momentum_enabled: bool,
+    ) -> Self {
+        assert!((0.0..=1.0).contains(&gamma), "gamma must be in [0,1]");
+        assert_eq!(s.len(), outliers.len(), "factor count must match outlier set");
+        MomentumScaler {
+            gamma,
+            outliers,
+            s,
+            momentum_enabled,
+        }
+    }
+
     /// Current factors over outlier channels (aligned with the set).
     pub fn factors(&self) -> &[f32] {
         &self.s

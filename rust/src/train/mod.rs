@@ -183,6 +183,31 @@ impl Adam {
         });
     }
 
+    /// Adam's bias-correction timestep `t` (persistence).
+    pub fn timestep(&self) -> u64 {
+        self.t
+    }
+
+    /// Restore the bias-correction timestep of a checkpointed run — with
+    /// the moments reinserted via [`Adam::insert_state`], the next `step`
+    /// is bit-identical to the uninterrupted run's.
+    pub fn set_timestep(&mut self, t: u64) {
+        self.t = t;
+    }
+
+    /// Visit the per-parameter first/second moments in name order
+    /// (persistence; the order is stable because the state is a BTreeMap).
+    pub fn visit_state(&self, f: &mut dyn FnMut(&str, &Matrix, &Matrix)) {
+        for (name, (m, v)) in &self.state {
+            f(name, m, v);
+        }
+    }
+
+    /// Reinsert a persisted parameter's moments (checkpoint loading).
+    pub fn insert_state(&mut self, name: &str, m: Matrix, v: Matrix) {
+        self.state.insert(name.to_string(), (m, v));
+    }
+
     /// Optimizer state bytes (m+v per param).
     pub fn state_bytes(&self) -> usize {
         self.state

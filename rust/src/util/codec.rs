@@ -1,0 +1,595 @@
+//! Zero-dependency versioned binary codec for on-disk artifacts
+//! (checkpoints, distribution bundles).
+//!
+//! An archive is a flat list of named **sections**, each protected by its
+//! own CRC-32, behind a magic/version header:
+//!
+//! ```text
+//! magic   8 bytes  b"QUAFFAR1"
+//! version u32 LE   format version (strict equality on read)
+//! count   u32 LE   number of sections
+//! section (repeated `count` times):
+//!   name_len u32 LE, name bytes (UTF-8)
+//!   payload_len u64 LE, payload bytes
+//!   crc u32 LE       CRC-32 (IEEE) over name bytes ++ payload bytes
+//! ```
+//!
+//! Every numeric value is little-endian; floats are stored as their raw IEEE
+//! bits, so NaN payloads and signed infinities round-trip **bit-exactly** —
+//! the property the persistence tier's bit-identical-resume invariant rests
+//! on. Reads are total: truncation, trailing garbage, a wrong magic/version,
+//! and any single bit flip (the CRC covers section names too) surface as a
+//! readable [`Err`], never as a panic or as silently wrong data.
+//! `util::prop` round-trip/corruption properties pin this (see the tests
+//! below).
+//!
+//! ```
+//! use quaff::util::codec::{Archive, SectionWriter, Writer};
+//!
+//! let mut w = Writer::new(3);
+//! let mut s = SectionWriter::new();
+//! s.put_f32s(&[1.0, f32::NAN, f32::NEG_INFINITY]);
+//! w.section("scales", s);
+//! let bytes = w.finish();
+//!
+//! let ar = Archive::from_bytes(&bytes).unwrap();
+//! assert_eq!(ar.version(), 3);
+//! let got = ar.section("scales").unwrap().get_f32s().unwrap();
+//! assert_eq!(got[0].to_bits(), 1.0f32.to_bits());
+//! assert!(got[1].is_nan());
+//! ```
+
+use crate::tensor::{I8Matrix, Matrix};
+use crate::util::error::Result;
+use crate::{anyhow, bail};
+
+/// Archive magic: identifies the container, not the payload kind (archives
+/// carry a `meta` section naming what they hold).
+pub const MAGIC: [u8; 8] = *b"QUAFFAR1";
+
+const CRC_TABLE: [u32; 256] = crc_table();
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+fn crc_update(mut state: u32, bytes: &[u8]) -> u32 {
+    for &b in bytes {
+        state = CRC_TABLE[((state ^ b as u32) & 0xFF) as usize] ^ (state >> 8);
+    }
+    state
+}
+
+/// CRC-32 (IEEE 802.3 polynomial) of `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    crc_update(0xFFFF_FFFF, bytes) ^ 0xFFFF_FFFF
+}
+
+fn crc32_named(name: &[u8], payload: &[u8]) -> u32 {
+    crc_update(crc_update(0xFFFF_FFFF, name), payload) ^ 0xFFFF_FFFF
+}
+
+/// Append-only body of one section: a sequence of primitive puts whose
+/// order the matching [`SectionReader`] gets must mirror.
+#[derive(Debug, Default)]
+pub struct SectionWriter {
+    buf: Vec<u8>,
+}
+
+impl SectionWriter {
+    pub fn new() -> SectionWriter {
+        SectionWriter::default()
+    }
+
+    /// Bytes written so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    /// Raw IEEE bits — NaN/±inf round-trip exactly.
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Length-prefixed f32 slice (raw bits).
+    pub fn put_f32s(&mut self, xs: &[f32]) {
+        self.put_u64(xs.len() as u64);
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed f64 slice (raw bits).
+    pub fn put_f64s(&mut self, xs: &[f64]) {
+        self.put_u64(xs.len() as u64);
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed i8 slice.
+    pub fn put_i8s(&mut self, xs: &[i8]) {
+        self.put_u64(xs.len() as u64);
+        for &x in xs {
+            self.buf.push(x as u8);
+        }
+    }
+
+    /// Length-prefixed index slice (each as u64).
+    pub fn put_usizes(&mut self, xs: &[usize]) {
+        self.put_u64(xs.len() as u64);
+        for &x in xs {
+            self.put_u64(x as u64);
+        }
+    }
+
+    /// Shape-prefixed dense f32 matrix.
+    pub fn put_matrix(&mut self, m: &Matrix) {
+        self.put_u32(m.rows() as u32);
+        self.put_u32(m.cols() as u32);
+        for &x in m.data() {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// Shape-prefixed dense i8 matrix.
+    pub fn put_i8_matrix(&mut self, m: &I8Matrix) {
+        self.put_u32(m.rows() as u32);
+        self.put_u32(m.cols() as u32);
+        for &x in m.data() {
+            self.buf.push(x as u8);
+        }
+    }
+
+    fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Archive builder: named sections are appended, then [`Writer::finish`]
+/// serializes the header + CRC-protected section stream.
+#[derive(Debug)]
+pub struct Writer {
+    version: u32,
+    sections: Vec<(String, Vec<u8>)>,
+}
+
+impl Writer {
+    pub fn new(version: u32) -> Writer {
+        Writer {
+            version,
+            sections: Vec::new(),
+        }
+    }
+
+    /// Append a named section (order is preserved; names should be unique —
+    /// lookups return the first match).
+    pub fn section(&mut self, name: &str, body: SectionWriter) {
+        self.sections.push((name.to_string(), body.into_bytes()));
+    }
+
+    /// Serialize the archive.
+    pub fn finish(self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&self.version.to_le_bytes());
+        out.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
+        for (name, payload) in &self.sections {
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+            out.extend_from_slice(payload);
+            out.extend_from_slice(&crc32_named(name.as_bytes(), payload).to_le_bytes());
+        }
+        out
+    }
+}
+
+/// A parsed archive: header validated, every section CRC-checked, no
+/// trailing bytes.
+#[derive(Debug)]
+pub struct Archive {
+    version: u32,
+    sections: Vec<(String, Vec<u8>)>,
+}
+
+impl Archive {
+    /// Parse and validate. Any defect — short buffer, wrong magic, section
+    /// running past the end, CRC mismatch, trailing garbage — is an error.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Archive> {
+        fn take<'a>(bytes: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
+            if n > bytes.len() - *pos {
+                bail!(
+                    "truncated archive: wanted {} bytes at offset {}, have {}",
+                    n,
+                    *pos,
+                    bytes.len() - *pos
+                );
+            }
+            let s = &bytes[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        }
+        let mut pos = 0usize;
+        let magic = take(bytes, &mut pos, 8)?;
+        if magic != MAGIC.as_slice() {
+            bail!("not a quaff archive: bad magic");
+        }
+        let version = u32::from_le_bytes(take(bytes, &mut pos, 4)?.try_into().unwrap());
+        let count = u32::from_le_bytes(take(bytes, &mut pos, 4)?.try_into().unwrap()) as usize;
+        let mut sections = Vec::new();
+        for i in 0..count {
+            let name_len =
+                u32::from_le_bytes(take(bytes, &mut pos, 4)?.try_into().unwrap()) as usize;
+            let name_bytes = take(bytes, &mut pos, name_len)?.to_vec();
+            let name = String::from_utf8(name_bytes)
+                .map_err(|_| anyhow!("section {i}: name is not UTF-8"))?;
+            let payload_len =
+                u64::from_le_bytes(take(bytes, &mut pos, 8)?.try_into().unwrap()) as usize;
+            let payload = take(bytes, &mut pos, payload_len)?.to_vec();
+            let crc = u32::from_le_bytes(take(bytes, &mut pos, 4)?.try_into().unwrap());
+            let want = crc32_named(name.as_bytes(), &payload);
+            if crc != want {
+                bail!("section '{name}': CRC mismatch (stored {crc:#010x}, computed {want:#010x})");
+            }
+            sections.push((name, payload));
+        }
+        if pos != bytes.len() {
+            bail!("trailing garbage: {} bytes past the last section", bytes.len() - pos);
+        }
+        Ok(Archive { version, sections })
+    }
+
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
+    /// Raw payload of a section, if present.
+    pub fn section_bytes(&self, name: &str) -> Option<&[u8]> {
+        self.sections
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, b)| b.as_slice())
+    }
+
+    /// Cursor over a section's payload.
+    pub fn section(&self, name: &str) -> Result<SectionReader<'_>> {
+        let bytes = self
+            .section_bytes(name)
+            .ok_or_else(|| anyhow!("archive has no section '{name}'"))?;
+        Ok(SectionReader { buf: bytes, pos: 0 })
+    }
+
+    /// All sections in file order as (name, payload) pairs.
+    pub fn sections(&self) -> impl Iterator<Item = (&str, &[u8])> {
+        self.sections.iter().map(|(n, b)| (n.as_str(), b.as_slice()))
+    }
+}
+
+/// Sequential reader over one section's payload; every `get` checks bounds
+/// and returns a readable error on shortfall.
+#[derive(Debug)]
+pub struct SectionReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> SectionReader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.buf.len() - self.pos {
+            bail!(
+                "truncated section: wanted {} bytes at offset {}, have {}",
+                n,
+                self.pos,
+                self.buf.len() - self.pos
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Unread bytes remaining.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_bool(&mut self) -> Result<bool> {
+        Ok(self.get_u8()? != 0)
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_usize(&mut self) -> Result<usize> {
+        Ok(self.get_u64()? as usize)
+    }
+
+    pub fn get_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_str(&mut self) -> Result<String> {
+        let n = self.get_u32()? as usize;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec()).map_err(|_| anyhow!("string is not UTF-8"))
+    }
+
+    pub fn get_f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.get_u64()? as usize;
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| anyhow!("f32 slice length overflow"))?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn get_f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.get_u64()? as usize;
+        let raw = self.take(n.checked_mul(8).ok_or_else(|| anyhow!("f64 slice length overflow"))?)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn get_i8s(&mut self) -> Result<Vec<i8>> {
+        let n = self.get_u64()? as usize;
+        let raw = self.take(n)?;
+        Ok(raw.iter().map(|&b| b as i8).collect())
+    }
+
+    pub fn get_usizes(&mut self) -> Result<Vec<usize>> {
+        let n = self.get_u64()? as usize;
+        let len = n
+            .checked_mul(8)
+            .ok_or_else(|| anyhow!("index slice length overflow"))?;
+        let raw = self.take(len)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
+            .collect())
+    }
+
+    pub fn get_matrix(&mut self) -> Result<Matrix> {
+        let rows = self.get_u32()? as usize;
+        let cols = self.get_u32()? as usize;
+        let n = rows
+            .checked_mul(cols)
+            .and_then(|n| n.checked_mul(4))
+            .ok_or_else(|| anyhow!("matrix shape overflow"))?;
+        let raw = self.take(n)?;
+        let data = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Matrix::from_vec(rows, cols, data))
+    }
+
+    pub fn get_i8_matrix(&mut self) -> Result<I8Matrix> {
+        let rows = self.get_u32()? as usize;
+        let cols = self.get_u32()? as usize;
+        let n = rows
+            .checked_mul(cols)
+            .ok_or_else(|| anyhow!("matrix shape overflow"))?;
+        let raw = self.take(n)?;
+        Ok(I8Matrix::from_vec(rows, cols, raw.iter().map(|&b| b as i8).collect()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop;
+
+    fn rand_matrix(r: &mut Rng, special: bool) -> Matrix {
+        let rows = r.below(6);
+        let cols = if rows == 0 { 0 } else { r.below(8) };
+        let mut m = Matrix::randn(rows, cols, r, 1.0);
+        if special && !m.data().is_empty() {
+            // plant NaN / ±inf payloads — they must round-trip bit-exactly
+            let n = m.data().len();
+            m.data_mut()[r.below(n)] = f32::NAN;
+            m.data_mut()[r.below(n)] = f32::INFINITY;
+            m.data_mut()[r.below(n)] = f32::NEG_INFINITY;
+        }
+        m
+    }
+
+    fn build_archive(m: &Matrix, qi: &I8Matrix, scales: &[f32], version: u32) -> Vec<u8> {
+        let mut w = Writer::new(version);
+        let mut s = SectionWriter::new();
+        s.put_matrix(m);
+        s.put_i8_matrix(qi);
+        s.put_f32s(scales);
+        s.put_str("label");
+        s.put_u64(42);
+        w.section("payload", s);
+        let mut meta = SectionWriter::new();
+        meta.put_str("test");
+        w.section("meta", meta);
+        w.finish()
+    }
+
+    #[test]
+    fn roundtrip_matrices_scales_including_empty_and_nonfinite() {
+        prop::check(
+            "codec-roundtrip",
+            0xC0DEC,
+            48,
+            |r| {
+                let special = r.chance(0.5);
+                let m = rand_matrix(r, special);
+                let qrows = r.below(5);
+                let qcols = if qrows == 0 { 0 } else { r.below(7) };
+                let qi = I8Matrix::random(qrows, qcols, r);
+                let n_scales = r.below(6);
+                let mut scales: Vec<f32> = (0..n_scales).map(|_| r.normal()).collect();
+                if !scales.is_empty() && r.chance(0.3) {
+                    scales[0] = f32::NAN;
+                }
+                (m, qi, scales)
+            },
+            |(m, qi, scales)| {
+                let bytes = build_archive(m, qi, scales, 7);
+                let ar = Archive::from_bytes(&bytes).map_err(|e| e.to_string())?;
+                if ar.version() != 7 {
+                    return Err("version mismatch".into());
+                }
+                let mut r = ar.section("payload").map_err(|e| e.to_string())?;
+                let m2 = r.get_matrix().map_err(|e| e.to_string())?;
+                let qi2 = r.get_i8_matrix().map_err(|e| e.to_string())?;
+                let s2 = r.get_f32s().map_err(|e| e.to_string())?;
+                if (m2.rows(), m2.cols()) != (m.rows(), m.cols()) {
+                    return Err("matrix shape changed".into());
+                }
+                for (a, b) in m.data().iter().zip(m2.data()) {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("f32 bits changed: {a} vs {b}"));
+                    }
+                }
+                if qi2.data() != qi.data() || (qi2.rows(), qi2.cols()) != (qi.rows(), qi.cols()) {
+                    return Err("i8 matrix changed".into());
+                }
+                if s2.len() != scales.len()
+                    || s2.iter().zip(scales).any(|(a, b)| a.to_bits() != b.to_bits())
+                {
+                    return Err("scales changed".into());
+                }
+                if r.get_str().map_err(|e| e.to_string())? != "label" {
+                    return Err("string changed".into());
+                }
+                if r.get_u64().map_err(|e| e.to_string())? != 42 {
+                    return Err("u64 changed".into());
+                }
+                if r.remaining() != 0 {
+                    return Err("leftover bytes".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn any_truncation_is_rejected() {
+        prop::check(
+            "codec-truncation",
+            0x7A6C,
+            64,
+            |r| {
+                let m = rand_matrix(r, true);
+                let qi = I8Matrix::random(2, 3, r);
+                let bytes = build_archive(&m, &qi, &[1.0, 2.0], 1);
+                let cut = r.below(bytes.len());
+                (bytes, cut)
+            },
+            |(bytes, cut)| match Archive::from_bytes(&bytes[..*cut]) {
+                Ok(_) => Err(format!("truncation to {cut}/{} parsed", bytes.len())),
+                Err(_) => Ok(()),
+            },
+        );
+    }
+
+    #[test]
+    fn any_single_bit_flip_is_rejected() {
+        // Every flip must surface: as a parse error (framing or CRC — the
+        // CRC covers section names and payloads), or — for the 4 header
+        // version bytes, which carry no CRC — as a changed version, which
+        // the load path rejects by strict equality.
+        prop::check(
+            "codec-bitflip",
+            0xF11B,
+            64,
+            |r| {
+                let m = rand_matrix(r, false);
+                let qi = I8Matrix::random(3, 2, r);
+                let bytes = build_archive(&m, &qi, &[0.5; 4], 1);
+                let byte = r.below(bytes.len());
+                let bit = r.below(8) as u32;
+                (bytes, byte, bit)
+            },
+            |(bytes, byte, bit)| {
+                let mut c = bytes.clone();
+                c[*byte] ^= 1u8 << bit;
+                match Archive::from_bytes(&c) {
+                    Err(_) => Ok(()),
+                    Ok(ar) if (8..12).contains(byte) && ar.version() != 1 => Ok(()),
+                    Ok(_) => Err(format!("bit flip at byte {byte} bit {bit} parsed cleanly")),
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn wrong_magic_and_missing_section_are_readable_errors() {
+        let e = Archive::from_bytes(b"NOTQUAFFxxxxxxxxxxxx").unwrap_err().to_string();
+        assert!(e.contains("bad magic"), "{e}");
+        let bytes = Writer::new(1).finish();
+        let ar = Archive::from_bytes(&bytes).unwrap();
+        let e = ar.section("nope").unwrap_err().to_string();
+        assert!(e.contains("no section 'nope'"), "{e}");
+    }
+
+    #[test]
+    fn crc_reference_vector() {
+        // classic check value for the IEEE polynomial
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+}

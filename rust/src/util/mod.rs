@@ -1,7 +1,9 @@
-//! Shared utilities: PRNG, JSON, CLI parsing, property-test harness,
-//! error plumbing, timing.
+//! Shared utilities: PRNG, JSON, the versioned binary codec behind the
+//! persistence tier, CLI parsing, property-test harness, error plumbing,
+//! timing.
 
 pub mod cli;
+pub mod codec;
 pub mod error;
 pub mod json;
 pub mod prng;

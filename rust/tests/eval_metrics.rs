@@ -1,0 +1,162 @@
+//! Unit-test tier for `train::eval`: hand-checkable fixtures for every
+//! metric (`eval_ppl`, `eval_mcq_accuracy`, `eval_token_accuracy`,
+//! `eval_exact_match`, `eval_rouge`), plus thread-count invariance.
+//!
+//! The hand-checkable trick: a model whose `lm_head` is all zeros emits
+//! exactly-uniform logits, so
+//! * the masked cross-entropy is exactly `ln(vocab)` (ppl = vocab), and
+//! * greedy argmax always predicts the **last** vocabulary id
+//!   (`VOCAB_SIZE - 1`; the crate's argmax keeps the last tied maximum),
+//! which makes every metric computable by hand from the fixture samples.
+
+use quaff::data::{Sample, SynthTask, VOCAB_SIZE};
+use quaff::metrics::rouge_l;
+use quaff::model::{Model, ModelConfig};
+use quaff::tensor::{pool, Matrix};
+use quaff::train::eval as teval;
+use quaff::util::prng::Rng;
+
+/// The token greedy decoding picks under uniform logits.
+const LAST: u32 = (VOCAB_SIZE - 1) as u32;
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        vocab: VOCAB_SIZE,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 64,
+        max_seq: 160,
+        ln_eps: 1e-5,
+        inject_outliers: false,
+        lora_rank: 4,
+        lora_alpha: 8.0,
+        lora_dropout: 0.0,
+        n_virtual: 4,
+    }
+}
+
+/// A model that emits exactly-uniform (all-zero) logits.
+fn uniform_model() -> Model {
+    let mut m = Model::new(cfg(), 77);
+    m.lm_head = Matrix::zeros(32, VOCAB_SIZE);
+    m
+}
+
+fn sample(prompt: Vec<u32>, target: Vec<u32>) -> Sample {
+    Sample { prompt, target }
+}
+
+#[test]
+fn ppl_of_uniform_logits_is_exactly_vocab() {
+    let mut m = uniform_model();
+    let samples = vec![
+        sample(vec![1, 2], vec![5, 6, 7]),
+        sample(vec![9], vec![40, 41]),
+    ];
+    let (nll, ppl) = teval::eval_ppl(&mut m, &samples, 2, 64);
+    assert!(
+        (nll - (VOCAB_SIZE as f64).ln()).abs() < 1e-9,
+        "uniform-logit NLL must be ln(vocab): {nll}"
+    );
+    assert!((ppl - VOCAB_SIZE as f64).abs() < 1e-6, "ppl {ppl}");
+}
+
+#[test]
+fn token_accuracy_counts_exactly_the_matching_next_tokens() {
+    let mut m = uniform_model();
+    // max_len 4 truncates the EOS, so the masked next-tokens are exactly
+    // the two target tokens: [LAST, LAST] → 2/2 hits.
+    let all_last = [sample(vec![1], vec![LAST, LAST])];
+    assert_eq!(teval::eval_token_accuracy(&mut m, &all_last, 4), 1.0);
+    // [5, LAST] → the prediction (always LAST) hits 1 of 2.
+    let half = [sample(vec![1], vec![5, LAST])];
+    assert_eq!(teval::eval_token_accuracy(&mut m, &half, 4), 0.5);
+    // no LAST anywhere → 0.
+    let none = [sample(vec![1], vec![5, 6])];
+    assert_eq!(teval::eval_token_accuracy(&mut m, &none, 4), 0.0);
+}
+
+#[test]
+fn exact_match_requires_every_masked_position() {
+    let mut m = uniform_model();
+    let perfect = [sample(vec![1], vec![LAST, LAST])];
+    assert_eq!(teval::eval_exact_match(&mut m, &perfect, 4), 1.0);
+    // one mismatching position sinks the whole sample
+    let broken = [sample(vec![1], vec![LAST, 5])];
+    assert_eq!(teval::eval_exact_match(&mut m, &broken, 4), 0.0);
+    // the un-truncated EOS is part of the mask and can never match LAST
+    let with_eos = [sample(vec![1], vec![LAST, LAST])];
+    assert_eq!(teval::eval_exact_match(&mut m, &with_eos, 64), 0.0);
+    assert_eq!(teval::eval_exact_match(&mut m, &[], 64), 0.0);
+}
+
+#[test]
+fn mcq_accuracy_follows_the_tie_breaking_prediction() {
+    let mut m = uniform_model();
+    let letters = SynthTask::option_letter_tokens();
+    let off = SynthTask::mcq_letter_offset();
+    // under uniform logits the predicted letter is the LAST option letter
+    let gold_last = {
+        let mut target = vec![1u32; off + 1];
+        target[off] = *letters.last().unwrap();
+        [sample(vec![1, 2, 3], target)]
+    };
+    assert_eq!(teval::eval_mcq_accuracy(&mut m, &gold_last, 64), 1.0);
+    let gold_first = {
+        let mut target = vec![1u32; off + 1];
+        target[off] = letters[0];
+        [sample(vec![1, 2, 3], target)]
+    };
+    assert_eq!(teval::eval_mcq_accuracy(&mut m, &gold_first, 64), 0.0);
+    // a letter position truncated away contributes nothing (total = 0)
+    let truncated = {
+        let mut target = vec![1u32; off + 1];
+        target[off] = letters[0];
+        [sample(vec![1, 2, 3], target)]
+    };
+    assert_eq!(teval::eval_mcq_accuracy(&mut m, &truncated, 8), 0.0);
+}
+
+#[test]
+fn rouge_eval_scores_the_greedy_generation() {
+    let mut m = uniform_model();
+    // greedy generation under uniform logits emits LAST until the cap:
+    // gen = [LAST; 4] against target [LAST, LAST, 7] → LCS 2,
+    // P = 2/4, R = 2/3, F1 = 4/7.
+    let target = vec![LAST, LAST, 7];
+    let s = [sample(vec![1, 2], target.clone())];
+    let got = teval::eval_rouge(&mut m, &s, 4);
+    let want = rouge_l(&[LAST, LAST, LAST, LAST], &target);
+    assert_eq!(got.to_bits(), want.to_bits());
+    assert!((want - 4.0 / 7.0).abs() < 1e-12, "hand value 4/7, got {want}");
+    // rouge_l itself, hand-checked
+    assert!((rouge_l(&[1u32, 2, 3], &[1u32, 2, 3]) - 1.0).abs() < 1e-12);
+    assert_eq!(rouge_l(&[1u32, 2], &[3u32, 4]), 0.0);
+    assert_eq!(teval::eval_rouge(&mut m, &[], 4), 0.0);
+}
+
+/// Every metric must be bit-identical under any thread-pool width. One
+/// `#[test]` body because it flips the process-global width between legs.
+#[test]
+fn all_eval_metrics_are_thread_count_invariant() {
+    let mut m = Model::new(cfg(), 21);
+    let mut rng = Rng::new(22);
+    let gen_task = SynthTask::by_name("oasst1").unwrap();
+    let mcq_task = SynthTask::by_name("gpqa").unwrap();
+    let gen_samples: Vec<Sample> = (0..6).map(|_| gen_task.sample(&mut rng)).collect();
+    let mcq_samples: Vec<Sample> = (0..6).map(|_| mcq_task.sample(&mut rng)).collect();
+    let mut measure = |width: usize, m: &mut Model| -> Vec<u64> {
+        pool::set_active_threads(width);
+        let (nll, ppl) = teval::eval_ppl(m, &gen_samples, 3, 96);
+        let acc = teval::eval_token_accuracy(m, &gen_samples, 96);
+        let em = teval::eval_exact_match(m, &gen_samples, 96);
+        let mcq = teval::eval_mcq_accuracy(m, &mcq_samples, 96);
+        let rouge = teval::eval_rouge(m, &gen_samples[..2], 16);
+        [nll, ppl, acc, em, mcq, rouge].into_iter().map(f64::to_bits).collect()
+    };
+    let serial = measure(1, &mut m);
+    let wide = measure(4, &mut m);
+    pool::set_active_threads(pool::global().threads());
+    assert_eq!(serial, wide, "metric bits diverged across thread widths");
+}

@@ -1,0 +1,268 @@
+//! Persistence/determinism tier: the defining invariant of the `persist`
+//! subsystem.
+//!
+//! **Interrupt at any step k, resume, and the completed run is
+//! bit-identical to the uninterrupted run** — final adapters, optimizer
+//! moments, PRNG streams, every logged loss, and every task metric — for
+//! all six quantization methods × {LoRA, Prompt} × thread widths {1, 4}.
+//! Plus: a truncated or bit-flipped checkpoint is *detected* (CRC /
+//! framing) and *recovered* from the retained previous generation, and a
+//! saved `DistributionBundle` serves bit-identically from a fresh
+//! `BatchEngine` after a disk round-trip.
+//!
+//! The corruption-recovery test appends a human-readable log to
+//! `PERSIST_recovery.log` at the repo root; CI uploads it as an artifact.
+
+use quaff::coordinator::{
+    run_job, CheckpointSpec, DistributionBundle, FinetuneJob, JobReport, PreprocessServer,
+    ServerConfig,
+};
+use quaff::infer::{BatchEngine, GenerateConfig, Request};
+use quaff::methods::MethodKind;
+use quaff::peft::PeftKind;
+use quaff::persist;
+use quaff::tensor::pool;
+use quaff::util::codec::Archive;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("quaff_persist_{tag}_{}", std::process::id()));
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn server_cfg() -> ServerConfig {
+    let mut cfg = ServerConfig::default();
+    cfg.preset = "opt-tiny".to_string();
+    cfg.calib_samples = 8;
+    cfg.calib_batch = 4;
+    cfg
+}
+
+fn tiny_job(method: MethodKind, peft: PeftKind) -> FinetuneJob {
+    let mut j = FinetuneJob::new(1, "gpqa", method, peft);
+    j.steps = 3;
+    j.batch_size = 2;
+    j.train_pool = 8;
+    j.eval_samples = 2;
+    j.max_len = 64;
+    j
+}
+
+fn sanitize(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '-' })
+        .collect()
+}
+
+/// Assert two reports agree bit-for-bit on everything deterministic.
+fn assert_reports_bit_identical(a: &JobReport, b: &JobReport, tag: &str) {
+    assert_eq!(a.steps, b.steps, "{tag}: step counts differ");
+    assert_eq!(a.losses.len(), b.losses.len(), "{tag}: loss log lengths differ");
+    for (i, (x, y)) in a.losses.iter().zip(&b.losses).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{tag}: loss at step {i} differs: {x} vs {y}"
+        );
+    }
+    assert_eq!(
+        a.final_loss.to_bits(),
+        b.final_loss.to_bits(),
+        "{tag}: final loss differs"
+    );
+    let keys_a: Vec<_> = a.metrics.keys().collect();
+    let keys_b: Vec<_> = b.metrics.keys().collect();
+    assert_eq!(keys_a, keys_b, "{tag}: metric keys differ");
+    for (k, v) in &a.metrics {
+        assert_eq!(
+            v.to_bits(),
+            b.metrics[k].to_bits(),
+            "{tag}: metric '{k}' differs: {v} vs {}",
+            b.metrics[k]
+        );
+    }
+    assert_eq!(a.payload_bytes, b.payload_bytes, "{tag}: payload bytes differ");
+}
+
+/// Assert the model/optimizer sections of two completed checkpoints are
+/// byte-identical — which is bit-identity of the final adapters, int8
+/// stores, momentum state, Adam moments, injection state and RNG streams.
+fn assert_final_state_identical(ref_path: &Path, res_path: &Path, tag: &str) {
+    let a = Archive::from_bytes(&fs::read(ref_path).unwrap()).unwrap();
+    let b = Archive::from_bytes(&fs::read(res_path).unwrap()).unwrap();
+    for sec in [
+        "model.cfg",
+        "model.frozen",
+        "model.methods",
+        "model.inject",
+        "model.params",
+        "model.rng",
+        "optim",
+        "progress",
+    ] {
+        let sa = a.section_bytes(sec).unwrap_or_else(|| panic!("{tag}: ref missing {sec}"));
+        let sb = b.section_bytes(sec).unwrap_or_else(|| panic!("{tag}: res missing {sec}"));
+        assert_eq!(sa, sb, "{tag}: checkpoint section '{sec}' diverged");
+    }
+}
+
+/// The full matrix: one `#[test]` body because it flips the process-global
+/// thread width between legs (results are width-invariant regardless —
+/// `tests/thread_determinism.rs` — so concurrent tests are unaffected).
+#[test]
+fn interrupt_resume_is_bit_identical_for_all_methods_pefts_and_widths() {
+    let dir = tmp_dir("resume");
+    for &width in &[1usize, 4] {
+        pool::set_active_threads(width);
+        for method in MethodKind::ALL {
+            for peft in [PeftKind::Lora, PeftKind::Prompt] {
+                let tag =
+                    format!("{}-{}-t{width}", sanitize(method.label()), sanitize(peft.label()));
+                let server = PreprocessServer::new(server_cfg());
+                // uninterrupted reference, checkpointed once at completion
+                let ref_path = dir.join(format!("ref-{tag}.qckpt"));
+                let mut jref = tiny_job(method, peft);
+                jref.checkpoint = Some(CheckpointSpec {
+                    path: ref_path.clone(),
+                    every: jref.steps,
+                });
+                let ref_report = run_job(&server, &jref).unwrap();
+                assert_eq!(ref_report.resumed_from, None, "{tag}");
+                // interrupt at step k=1: run one step, checkpointing every step
+                let ck_path = dir.join(format!("ck-{tag}.qckpt"));
+                let mut jint = tiny_job(method, peft);
+                jint.steps = 1;
+                jint.checkpoint = Some(CheckpointSpec {
+                    path: ck_path.clone(),
+                    every: 1,
+                });
+                let partial = run_job(&server, &jint).unwrap();
+                assert_eq!(partial.steps, 1, "{tag}");
+                // resume to completion
+                let mut jres = tiny_job(method, peft);
+                jres.checkpoint = Some(CheckpointSpec {
+                    path: ck_path.clone(),
+                    every: 1,
+                });
+                let res_report = run_job(&server, &jres).unwrap();
+                assert_eq!(res_report.resumed_from, Some(1), "{tag}: must resume from step 1");
+                assert_reports_bit_identical(&ref_report, &res_report, &tag);
+                assert_final_state_identical(&ref_path, &ck_path, &tag);
+            }
+        }
+    }
+    pool::set_active_threads(pool::global().threads());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_tail_is_detected_and_recovered_from_previous_generation() {
+    let dir = tmp_dir("corrupt");
+    let mut log = String::new();
+    log.push_str("PERSIST corrupt-checkpoint recovery log (tests/persist_resume.rs)\n");
+    let server = PreprocessServer::new(server_cfg());
+    let (method, peft) = (MethodKind::Quaff, PeftKind::Lora);
+    // uninterrupted reference
+    let ref_path = dir.join("ref.qckpt");
+    let mut jref = tiny_job(method, peft);
+    jref.checkpoint = Some(CheckpointSpec { path: ref_path, every: jref.steps });
+    let ref_report = run_job(&server, &jref).unwrap();
+    // interrupted at k=2 with per-step checkpoints → current gen at step 2,
+    // previous gen at step 1
+    let ck_path = dir.join("ck.qckpt");
+    let mut jint = tiny_job(method, peft);
+    jint.steps = 2;
+    jint.checkpoint = Some(CheckpointSpec { path: ck_path.clone(), every: 1 });
+    run_job(&server, &jint).unwrap();
+    let prev_path = persist::previous_generation(&ck_path);
+    assert!(ck_path.exists() && prev_path.exists());
+
+    // 1. truncation is detected
+    let intact = fs::read(&ck_path).unwrap();
+    fs::write(&ck_path, &intact[..intact.len() / 2]).unwrap();
+    let truncated_err = Archive::from_bytes(&fs::read(&ck_path).unwrap())
+        .unwrap_err()
+        .to_string();
+    assert!(truncated_err.contains("truncated"), "{truncated_err}");
+    log.push_str(&format!(
+        "truncated {} to {} of {} bytes -> detected: {truncated_err}\n",
+        ck_path.display(),
+        intact.len() / 2,
+        intact.len()
+    ));
+
+    // 2. the loader falls back to the previous generation
+    let loaded = persist::load_train_checkpoint(&ck_path).unwrap();
+    assert!(loaded.recovered_from_previous);
+    assert_eq!(loaded.ckpt.steps_done, 1, "previous generation is the step-1 state");
+    log.push_str(&format!(
+        "recovered from {} (steps_done={}): primary error: {}\n",
+        prev_path.display(),
+        loaded.ckpt.steps_done,
+        loaded.primary_error.as_deref().unwrap_or("-")
+    ));
+
+    // 3. resuming through run_job completes from step 1 and is still
+    // bit-identical to the uninterrupted run
+    let mut jres = tiny_job(method, peft);
+    jres.checkpoint = Some(CheckpointSpec { path: ck_path.clone(), every: 1 });
+    let res_report = run_job(&server, &jres).unwrap();
+    assert_eq!(res_report.resumed_from, Some(1));
+    assert_reports_bit_identical(&ref_report, &res_report, "corrupt-recovery");
+    log.push_str("resumed run bit-identical to uninterrupted run: OK\n");
+
+    // 4. a single bit flip is detected too (CRC)
+    let mut flipped = intact.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 0x10;
+    let flip_err = Archive::from_bytes(&flipped).unwrap_err().to_string();
+    assert!(
+        flip_err.contains("CRC") || flip_err.contains("truncated") || flip_err.contains("garbage"),
+        "bit flip must be detected: {flip_err}"
+    );
+    log.push_str(&format!("bit flip at byte {mid} -> detected: {flip_err}\n"));
+
+    // publish the recovery log for the CI artifact
+    let log_path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../PERSIST_recovery.log");
+    fs::write(&log_path, &log).unwrap();
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn saved_bundle_serves_identically_from_a_fresh_engine() {
+    let dir = tmp_dir("bundle_serve");
+    let server = PreprocessServer::new(server_cfg());
+    let mut bundle = server.prepare(MethodKind::Quaff, PeftKind::Lora);
+    let requests: Vec<Request> = (0..5)
+        .map(|i| Request {
+            id: i,
+            prompt: vec![2, 3 + i as u32, 5, 7],
+            max_new: 6,
+        })
+        .collect();
+    let mut engine = BatchEngine::new(&bundle.model, 2, GenerateConfig::greedy(6));
+    let want: Vec<Vec<u32>> = engine
+        .run_requests(&bundle.model, &requests)
+        .into_iter()
+        .map(|c| c.tokens)
+        .collect();
+    // disk round-trip → serve from the loaded bundle, no f32 weights touched
+    let path = dir.join("served.qckpt");
+    bundle.save(&path).unwrap();
+    let loaded = DistributionBundle::load(&path).unwrap();
+    for b in &loaded.model.blocks {
+        for l in b.linears_ref() {
+            assert!(l.is_quantized() && l.master().is_none());
+        }
+    }
+    let mut engine2 = BatchEngine::new(&loaded.model, 2, GenerateConfig::greedy(6));
+    let got: Vec<Vec<u32>> = engine2
+        .run_requests(&loaded.model, &requests)
+        .into_iter()
+        .map(|c| c.tokens)
+        .collect();
+    assert_eq!(want, got, "served tokens must be identical after the disk round-trip");
+    let _ = fs::remove_dir_all(&dir);
+}
