@@ -24,7 +24,9 @@ fn main() {
     ] {
         let x = Matrix::randn(256, cin, &mut rng, 1.0);
         let w = Matrix::randn(cin, cout, &mut rng, 0.3);
-        let (xq, dx) = quant::quantize_per_token(&x);
+        let mut xq = quaff::tensor::I8Matrix::zeros(256, cin);
+        let mut dx: Vec<f32> = Vec::with_capacity(256);
+        quant::quantize_per_token_into(&x, &mut xq, &mut dx);
         let qw = quant::QuantizedWeights::quantize(&w);
         let mut out = vec![0.0f32; 256 * cout];
         let flops = 2.0 * (256 * cin * cout) as f64;

@@ -57,6 +57,14 @@ fn hot_x(rng: &mut Rng, t: usize, cin: usize) -> Matrix {
     x
 }
 
+/// What the removed allocating wrapper did: fresh buffers every call.
+fn qpt_alloc(x: &Matrix) -> (I8Matrix, Vec<f32>) {
+    let mut q = I8Matrix::zeros(x.rows(), x.cols());
+    let mut d = Vec::with_capacity(x.rows());
+    quant::quantize_per_token_into(x, &mut q, &mut d);
+    (q, d)
+}
+
 fn main() {
     let mut rng = Rng::new(6);
     println!("== bench_kernels: alloc vs workspace paths (e2e-small shapes) ==\n");
@@ -66,14 +74,16 @@ fn main() {
     // is a real fraction of the op ---
     {
         let x = hot_x(&mut rng, 512, D_MODEL);
-        let (xq, dx) = quant::quantize_per_token(&x);
+        let (xq, dx) = qpt_alloc(&x);
         let mut out = Matrix::zeros(512, D_MODEL);
         pairs.push(pair(
             "dequantize_per_token 512x256",
             3,
             0.8,
             || {
-                std::hint::black_box(quant::dequantize_per_token(&xq, &dx));
+                let mut fresh = Matrix::zeros(xq.rows(), xq.cols());
+                quant::dequantize_per_token_into(&xq, &dx, &mut fresh);
+                std::hint::black_box(fresh);
             },
             || {
                 quant::dequantize_per_token_into(&xq, &dx, &mut out);
@@ -92,7 +102,7 @@ fn main() {
             3,
             0.8,
             || {
-                std::hint::black_box(quant::quantize_per_token(&x));
+                std::hint::black_box(qpt_alloc(&x));
             },
             || {
                 quant::quantize_per_token_into(&x, &mut xq, &mut dx);

@@ -22,8 +22,14 @@ fn main() {
     let x = Matrix::randn(t, cin, &mut rng, 1.0);
     let w = Matrix::randn(cin, cout, &mut rng, 0.3);
 
+    let qpt_alloc = |x: &Matrix| {
+        let mut q = I8Matrix::zeros(x.rows(), x.cols());
+        let mut d = Vec::with_capacity(x.rows());
+        quant::quantize_per_token_into(x, &mut q, &mut d);
+        (q, d)
+    };
     let r = bench("quantize_per_token 512x512", 3, 1.0, || {
-        std::hint::black_box(quant::quantize_per_token(&x));
+        std::hint::black_box(qpt_alloc(&x));
     });
     throughput("bytes", &r, (t * cin * 5) as f64, "GiB/s");
     bench("quantize_per_oc 512x512", 3, 1.0, || {
@@ -31,7 +37,7 @@ fn main() {
     });
 
     // f32 vs int8 matmul — the core speedup the paper leverages
-    let (xq, dx) = quant::quantize_per_token(&x);
+    let (xq, dx) = qpt_alloc(&x);
     let (wq, dw) = quant::quantize_per_oc(&w);
     let flops = 2.0 * (t * cin * cout) as f64;
     let rf = bench("matmul f32 512x512x512", 2, 2.0, || {

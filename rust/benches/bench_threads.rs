@@ -36,7 +36,9 @@ fn main() {
     let w_up = Matrix::randn(D_MODEL, D_FF, &mut rng, 0.3);
     let dy = Matrix::randn(TOKENS, D_FF, &mut rng, 1.0);
     let big = Matrix::randn(2048, 1024, &mut rng, 1.0);
-    let (x_int, dx) = quant::quantize_per_token(&x);
+    let mut x_int = I8Matrix::zeros(TOKENS, D_MODEL);
+    let mut dx: Vec<f32> = Vec::with_capacity(TOKENS);
+    quant::quantize_per_token_into(&x, &mut x_int, &mut dx);
     let qw = quant::QuantizedWeights::quantize(&w_up);
 
     let mut y_mm = Matrix::zeros(TOKENS, D_FF);

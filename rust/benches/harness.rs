@@ -163,6 +163,65 @@ pub fn write_infer_json(
     std::fs::write(path, json)
 }
 
+/// One fused-vs-unfused qgemm measurement at a fixed batch/thread shape.
+#[allow(dead_code)]
+pub struct QgemmRecord {
+    /// e.g. `"train t64 th4"` or `"decode b1 th1"`.
+    pub name: String,
+    pub fused_ns_per_token: f64,
+    pub unfused_ns_per_token: f64,
+    pub fused_iters: u64,
+    pub unfused_iters: u64,
+}
+
+impl QgemmRecord {
+    #[allow(dead_code)]
+    pub fn speedup(&self) -> f64 {
+        self.unfused_ns_per_token / self.fused_ns_per_token
+    }
+}
+
+/// Emit `BENCH_qgemm.json`: fused vs unfused ns/token per shape (each as a
+/// gate-comparable `ns_per_op` entry) plus per-shape speedups and their
+/// geometric mean — the record behind the "fused ≥ unfused throughput"
+/// acceptance bar.
+#[allow(dead_code)]
+pub fn write_qgemm_json(
+    path: &std::path::Path,
+    preset: &str,
+    records: &[QgemmRecord],
+) -> std::io::Result<()> {
+    let mut kernels = Vec::new();
+    let mut log_sum = 0.0f64;
+    for r in records {
+        kernels.push(format!(
+            "    {{\"name\": \"fused {}\", \"ns_per_op\": {:.1}, \"iters\": {}}}",
+            r.name, r.fused_ns_per_token, r.fused_iters
+        ));
+        kernels.push(format!(
+            "    {{\"name\": \"unfused {}\", \"ns_per_op\": {:.1}, \"iters\": {}}}",
+            r.name, r.unfused_ns_per_token, r.unfused_iters
+        ));
+        kernels.push(format!(
+            "    {{\"name\": \"speedup {}\", \"fused_speedup\": {:.4}}}",
+            r.name,
+            r.speedup()
+        ));
+        log_sum += r.speedup().ln();
+    }
+    let geomean = if records.is_empty() {
+        1.0
+    } else {
+        (log_sum / records.len() as f64).exp()
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"qgemm\",\n  \"preset\": \"{preset}\",\n  \"kernels\": [\n{}\n  ],\n  \
+         \"fused_speedup_geomean\": {geomean:.4}\n}}\n",
+        kernels.join(",\n")
+    );
+    std::fs::write(path, json)
+}
+
 /// One kernel measured across a thread-count sweep.
 #[allow(dead_code)]
 pub struct ThreadSweep {

@@ -88,10 +88,14 @@ pub struct BatchEngine {
 }
 
 impl BatchEngine {
-    /// An engine with `slots` concurrent decode lanes for `model`.
+    /// An engine with `slots` concurrent decode lanes for `model`. Every
+    /// linear layer's execution plan is pre-compiled into the engine's
+    /// arena (sized for the full decode batch), so the first admitted
+    /// request already runs the fused plan-driven pipeline.
     pub fn new(model: &Model, slots: usize, cfg: GenerateConfig) -> BatchEngine {
         let mut ws = Workspace::new();
         let kv = KvCache::for_model(model, slots, &mut ws);
+        model.warm_plans(slots.max(1), &mut ws);
         BatchEngine {
             cfg,
             kv,

@@ -19,8 +19,10 @@
 //!
 //! See `DESIGN.md` for the system inventory, the execution-engine /
 //! workspace architecture, the `tensor::pool` threading model
-//! (`QUAFF_THREADS`, deterministic row-sharding), and the `pjrt` feature;
-//! `BENCH_kernels.json` / `BENCH_threads.json` (emitted by `cargo bench`)
+//! (`QUAFF_THREADS`, deterministic row-sharding), the compiled per-layer
+//! execution plans every quantized linear runs on (`quant::pipeline`,
+//! DESIGN.md §7), and the `pjrt` feature; `BENCH_kernels.json` /
+//! `BENCH_threads.json` / `BENCH_qgemm.json` (emitted by `cargo bench`)
 //! record the perf trajectory guarded by the CI bench gate.
 
 pub mod coordinator;

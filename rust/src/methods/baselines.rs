@@ -10,18 +10,27 @@
 
 use super::{ste_backward_ws, MethodSnapshot, QuantMethod};
 use crate::outlier::ChannelStats;
+use crate::quant::pipeline::{self, PlanId, ScaleOp};
 use crate::quant::{self, QuantizedWeights};
 use crate::scaling;
 use crate::tensor::{kernels, I8Matrix, Matrix, Workspace};
 
+/// Plan aux-slot roles for the LLM.int8 training-path correction stage.
+const AX_COLMAX: usize = 0; // detection column maxima
+const AX_CAMAX: usize = 1; // col_abs_max reduction lanes
+const AX_XO: usize = 2; // gathered outlier activations (f32)
+const AX_WO: usize = 3; // per-step dequantized weight rows
+const AX_CORR: usize = 4; // f32 correction product
+
 /// Full-precision reference: `Y = X · W` in f32.
 pub struct Fp32Linear {
     w: Matrix,
+    plan: PlanId,
 }
 
 impl Fp32Linear {
     pub fn new(w: Matrix) -> Self {
-        Fp32Linear { w }
+        Fp32Linear { w, plan: PlanId::fresh() }
     }
 }
 
@@ -35,9 +44,15 @@ impl QuantMethod for Fp32Linear {
     }
 
     fn forward_infer(&self, x: &Matrix, ws: &mut Workspace) -> Matrix {
-        let mut y = ws.take_matrix("fp32.y", x.rows(), self.w.cols());
-        kernels::matmul_into(x, &self.w, &mut y);
+        let plan = pipeline::plan_for(ws, self.plan, self.w.rows(), self.w.cols(), x.rows());
+        let mut y = ws.take_donor_matrix(x.rows(), self.w.cols());
+        plan.matmul_f32(x, &self.w, &mut y);
+        pipeline::store_plan(ws, self.plan, plan);
         y
+    }
+
+    fn warm_plan(&self, m_hint: usize, ws: &mut Workspace) {
+        pipeline::warm(ws, self.plan, self.w.rows(), self.w.cols(), m_hint);
     }
 
     fn backward_input(&self, dy: &Matrix, ws: &mut Workspace) -> Matrix {
@@ -67,12 +82,14 @@ impl QuantMethod for Fp32Linear {
 /// each step, integer matmul. Fast and small, but outliers inflate Δ_X.
 pub struct NaiveW8A8Linear {
     qw: QuantizedWeights,
+    plan: PlanId,
 }
 
 impl NaiveW8A8Linear {
     pub fn new(w: Matrix) -> Self {
         NaiveW8A8Linear {
             qw: QuantizedWeights::quantize(&w),
+            plan: PlanId::fresh(),
         }
     }
 
@@ -80,6 +97,7 @@ impl NaiveW8A8Linear {
     pub fn from_parts(w_int: I8Matrix, deltas: Vec<f32>) -> Self {
         NaiveW8A8Linear {
             qw: QuantizedWeights::from_parts(w_int, deltas),
+            plan: PlanId::fresh(),
         }
     }
 }
@@ -95,14 +113,15 @@ impl QuantMethod for NaiveW8A8Linear {
 
     fn forward_infer(&self, x: &Matrix, ws: &mut Workspace) -> Matrix {
         let (t, cout) = (x.rows(), self.qw.w_int.cols());
-        let mut x_int = ws.take_i8_matrix("naive.xint", t, x.cols());
-        let mut dx = ws.take_f32("naive.dx", t);
-        quant::quantize_per_token_into(x, &mut x_int, &mut dx);
-        let mut y = ws.take_matrix_zeroed("naive.y", t, cout);
-        self.qw.matmul_ws(&x_int, &dx, ws, y.data_mut());
-        ws.put_i8_matrix("naive.xint", x_int);
-        ws.put_f32("naive.dx", dx);
+        let plan = pipeline::plan_for(ws, self.plan, x.cols(), cout, t);
+        let mut y = ws.take_donor_matrix(t, cout);
+        pipeline::qgemm_into(x, &ScaleOp::Identity, &self.qw, &plan, ws, y.data_mut());
+        pipeline::store_plan(ws, self.plan, plan);
         y
+    }
+
+    fn warm_plan(&self, m_hint: usize, ws: &mut Workspace) {
+        pipeline::warm(ws, self.plan, self.qw.w_int.rows(), self.qw.w_int.cols(), m_hint);
     }
 
     fn backward_input(&self, dy: &Matrix, ws: &mut Workspace) -> Matrix {
@@ -136,6 +155,7 @@ impl QuantMethod for NaiveW8A8Linear {
 pub struct LlmInt8Linear {
     qw: QuantizedWeights,
     sigma: f32,
+    plan: PlanId,
     /// Running count of dequantized rows (diagnostics: card(O) growth).
     pub dequant_rows_total: u64,
     pub steps: u64,
@@ -146,6 +166,7 @@ impl LlmInt8Linear {
         LlmInt8Linear {
             qw: QuantizedWeights::quantize(&w),
             sigma,
+            plan: PlanId::fresh(),
             dequant_rows_total: 0,
             steps: 0,
         }
@@ -163,6 +184,7 @@ impl LlmInt8Linear {
         LlmInt8Linear {
             qw: QuantizedWeights::from_parts(w_int, deltas),
             sigma,
+            plan: PlanId::fresh(),
             dequant_rows_total,
             steps,
         }
@@ -186,46 +208,44 @@ impl QuantMethod for LlmInt8Linear {
     fn forward(&mut self, x: &Matrix, ws: &mut Workspace) -> Matrix {
         let t = x.rows();
         let cout = self.qw.w_int.cols();
-        // 1. dynamic detection: columns whose |max| exceeds σ (workspace
-        // variant so the sharded reduction's lanes stay pooled)
-        let mut col_max = ws.take_f32("llmint8.colmax", x.cols());
-        kernels::col_abs_max_ws(x, &mut col_max, ws);
-        let mut outlier_cols = ws.take_idx("llmint8.ocols");
+        let plan = pipeline::plan_for(ws, self.plan, x.cols(), cout, t);
+        // 1. dynamic detection: columns whose |max| exceeds σ (slot-backed
+        // reduction lanes — no string lookup, no allocation)
+        let mut col_max = ws.take_slot_f32(plan.aux_f32[AX_COLMAX], x.cols());
+        let mut camax = ws.take_slot_f32(plan.aux_f32[AX_CAMAX], 0);
+        kernels::col_abs_max_scratch(x, &mut col_max, &mut camax);
+        let mut outlier_cols = ws.take_slot_idx(plan.aux_idx);
         outlier_cols.extend((0..x.cols()).filter(|&c| col_max[c] > self.sigma));
         self.dequant_rows_total += outlier_cols.len() as u64;
         self.steps += 1;
-        // 2. regular part: zero outlier columns, int8 path
-        let mut x_reg = ws.take_matrix("llmint8.xreg", t, x.cols());
-        x_reg.data_mut().copy_from_slice(x.data());
-        for ti in 0..t {
-            let row = x_reg.row_mut(ti);
-            for &c in &outlier_cols {
-                row[c] = 0.0;
-            }
-        }
-        let mut x_int = ws.take_i8_matrix("llmint8.xint", t, x.cols());
-        let mut dx = ws.take_f32("llmint8.dx", t);
-        quant::quantize_per_token_into(&x_reg, &mut x_int, &mut dx);
-        let mut y = ws.take_matrix_zeroed("llmint8.y", t, cout);
-        self.qw.matmul_ws(&x_int, &dx, ws, y.data_mut());
+        // 2. regular part: outlier columns zeroed *while* quantizing (no
+        // masked X copy), matmul+dequant written straight into y
+        let mut y = ws.take_donor_matrix(t, cout);
+        pipeline::qgemm_into(
+            x,
+            &ScaleOp::ZeroCols { cols: &outlier_cols },
+            &self.qw,
+            &plan,
+            ws,
+            y.data_mut(),
+        );
         // 3. outlier part in f32 — requires dequantizing W rows *every step*
         if !outlier_cols.is_empty() {
-            let mut x_o = ws.take_matrix("llmint8.xo", t, outlier_cols.len());
+            let mut x_o = ws.take_slot_matrix(plan.aux_f32[AX_XO], t, outlier_cols.len());
             kernels::select_cols_into(x, &outlier_cols, &mut x_o);
-            let mut w_o = ws.take_matrix("llmint8.wo", outlier_cols.len(), cout);
+            let mut w_o = ws.take_slot_matrix(plan.aux_f32[AX_WO], outlier_cols.len(), cout);
             quant::dequantize_rows_per_oc_into(&self.qw.w_int, &self.qw.deltas, &outlier_cols, &mut w_o);
-            let mut corr = ws.take_matrix("llmint8.corr", t, cout);
+            let mut corr = ws.take_slot_matrix(plan.aux_f32[AX_CORR], t, cout);
             kernels::matmul_into(&x_o, &w_o, &mut corr);
             y.add_assign(&corr);
-            ws.put_matrix("llmint8.xo", x_o);
-            ws.put_matrix("llmint8.wo", w_o);
-            ws.put_matrix("llmint8.corr", corr);
+            ws.put_slot_matrix(plan.aux_f32[AX_XO], x_o);
+            ws.put_slot_matrix(plan.aux_f32[AX_WO], w_o);
+            ws.put_slot_matrix(plan.aux_f32[AX_CORR], corr);
         }
-        ws.put_f32("llmint8.colmax", col_max);
-        ws.put_idx("llmint8.ocols", outlier_cols);
-        ws.put_matrix("llmint8.xreg", x_reg);
-        ws.put_i8_matrix("llmint8.xint", x_int);
-        ws.put_f32("llmint8.dx", dx);
+        ws.put_slot_f32(plan.aux_f32[AX_COLMAX], col_max);
+        ws.put_slot_f32(plan.aux_f32[AX_CAMAX], camax);
+        ws.put_slot_idx(plan.aux_idx, outlier_cols);
+        pipeline::store_plan(ws, self.plan, plan);
         y
     }
 
@@ -236,19 +256,19 @@ impl QuantMethod for LlmInt8Linear {
     fn forward_infer(&self, x: &Matrix, ws: &mut Workspace) -> Matrix {
         let t = x.rows();
         let cout = self.qw.w_int.cols();
-        // 1. regular part: zero this row's outlier entries, int8 path
-        let mut x_reg = ws.take_matrix("llmint8.xreg", t, x.cols());
-        x_reg.data_mut().copy_from_slice(x.data());
-        for v in x_reg.data_mut() {
-            if v.abs() > self.sigma {
-                *v = 0.0;
-            }
-        }
-        let mut x_int = ws.take_i8_matrix("llmint8.xint", t, x.cols());
-        let mut dx = ws.take_f32("llmint8.dx", t);
-        quant::quantize_per_token_into(&x_reg, &mut x_int, &mut dx);
-        let mut y = ws.take_matrix_zeroed("llmint8.y", t, cout);
-        self.qw.matmul_ws(&x_int, &dx, ws, y.data_mut());
+        let plan = pipeline::plan_for(ws, self.plan, x.cols(), cout, t);
+        // 1. regular part: this row's outlier entries zeroed while
+        // quantizing (row-local, no masked X copy), fused matmul into y
+        let mut y = ws.take_donor_matrix(t, cout);
+        pipeline::qgemm_into(
+            x,
+            &ScaleOp::ZeroAbsAbove { sigma: self.sigma },
+            &self.qw,
+            &plan,
+            ws,
+            y.data_mut(),
+        );
+        pipeline::store_plan(ws, self.plan, plan);
         // 2. outlier part in f32: per row, dequantize the hit weight rows
         // from the int8 store (the method's per-step latency cost)
         for ti in 0..t {
@@ -264,10 +284,11 @@ impl QuantMethod for LlmInt8Linear {
                 }
             }
         }
-        ws.put_matrix("llmint8.xreg", x_reg);
-        ws.put_i8_matrix("llmint8.xint", x_int);
-        ws.put_f32("llmint8.dx", dx);
         y
+    }
+
+    fn warm_plan(&self, m_hint: usize, ws: &mut Workspace) {
+        pipeline::warm(ws, self.plan, self.qw.w_int.rows(), self.qw.w_int.cols(), m_hint);
     }
 
     fn backward_input(&self, dy: &Matrix, ws: &mut Workspace) -> Matrix {
@@ -305,6 +326,7 @@ pub struct SmoothStaticLinear {
     s: Vec<f32>,
     /// Precomputed `s^{-1}` so the per-step rescale never allocates.
     inv_s: Vec<f32>,
+    plan: PlanId,
 }
 
 impl SmoothStaticLinear {
@@ -321,6 +343,7 @@ impl SmoothStaticLinear {
             qw_scaled: QuantizedWeights::quantize(&w_scaled),
             s,
             inv_s,
+            plan: PlanId::fresh(),
         }
     }
 
@@ -334,6 +357,7 @@ impl SmoothStaticLinear {
             qw_scaled: QuantizedWeights::from_parts(w_int, deltas),
             s,
             inv_s,
+            plan: PlanId::fresh(),
         }
     }
 }
@@ -349,18 +373,28 @@ impl QuantMethod for SmoothStaticLinear {
 
     fn forward_infer(&self, x: &Matrix, ws: &mut Workspace) -> Matrix {
         let (t, cout) = (x.rows(), self.qw_scaled.w_int.cols());
-        let mut x_hat = ws.take_matrix("smooths.xhat", t, x.cols());
-        x_hat.data_mut().copy_from_slice(x.data());
-        x_hat.scale_cols(&self.inv_s);
-        let mut x_int = ws.take_i8_matrix("smooths.xint", t, x.cols());
-        let mut dx = ws.take_f32("smooths.dx", t);
-        quant::quantize_per_token_into(&x_hat, &mut x_int, &mut dx);
-        let mut y = ws.take_matrix_zeroed("smooths.y", t, cout);
-        self.qw_scaled.matmul_ws(&x_int, &dx, ws, y.data_mut());
-        ws.put_matrix("smooths.xhat", x_hat);
-        ws.put_i8_matrix("smooths.xint", x_int);
-        ws.put_f32("smooths.dx", dx);
+        let plan = pipeline::plan_for(ws, self.plan, x.cols(), cout, t);
+        let mut y = ws.take_donor_matrix(t, cout);
+        pipeline::qgemm_into(
+            x,
+            &ScaleOp::MulPerCol { inv: &self.inv_s },
+            &self.qw_scaled,
+            &plan,
+            ws,
+            y.data_mut(),
+        );
+        pipeline::store_plan(ws, self.plan, plan);
         y
+    }
+
+    fn warm_plan(&self, m_hint: usize, ws: &mut Workspace) {
+        pipeline::warm(
+            ws,
+            self.plan,
+            self.qw_scaled.w_int.rows(),
+            self.qw_scaled.w_int.cols(),
+            m_hint,
+        );
     }
 
     fn backward_input(&self, dy: &Matrix, ws: &mut Workspace) -> Matrix {
@@ -406,6 +440,7 @@ pub struct SmoothDynamicLinear {
     w_row_max: Vec<f32>,
     alpha: f32,
     last_s: Vec<f32>,
+    plan: PlanId,
 }
 
 impl SmoothDynamicLinear {
@@ -419,6 +454,7 @@ impl SmoothDynamicLinear {
             w_row_max,
             alpha,
             last_s: vec![1.0; cin],
+            plan: PlanId::fresh(),
         }
     }
 
@@ -435,7 +471,27 @@ impl SmoothDynamicLinear {
             w_row_max,
             alpha,
             last_s,
+            plan: PlanId::fresh(),
         }
+    }
+
+    /// Shared tail of both Smooth_D forwards: requantize the full weight
+    /// under `s` (the method's deliberate per-step cost — the allocations
+    /// here ARE what the paper measures), then run the activation side
+    /// through the shared fused plan.
+    fn coupled_forward(&self, x: &Matrix, s: &[f32], ws: &mut Workspace) -> Matrix {
+        let (t, cout) = (x.rows(), self.w_full.cols());
+        let mut w_scaled = self.w_full.clone();
+        scaling::apply_row_scale(&mut w_scaled, s);
+        let qw = QuantizedWeights::quantize(&w_scaled);
+        // the reciprocal vector matches what apply_full_inverse_scale
+        // computed per step (an allocation the method semantically owns)
+        let inv: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
+        let plan = pipeline::plan_for(ws, self.plan, x.cols(), cout, t);
+        let mut y = ws.take_donor_matrix(t, cout);
+        pipeline::qgemm_into(x, &ScaleOp::MulPerCol { inv: &inv }, &qw, &plan, ws, y.data_mut());
+        pipeline::store_plan(ws, self.plan, plan);
+        y
     }
 }
 
@@ -445,26 +501,12 @@ impl QuantMethod for SmoothDynamicLinear {
     }
 
     fn forward(&mut self, x: &Matrix, ws: &mut Workspace) -> Matrix {
-        let (t, cout) = (x.rows(), self.w_full.cols());
-        // 1. dynamic factors from the live batch
+        // 1. dynamic factors from the live batch; 2. the coupling
+        // bottleneck: rescale + requantize the FULL weight; 3. scaled
+        // activation path through the shared fused plan
         let s = scaling::smoothquant_factors(&x.col_abs_max(), &self.w_row_max, self.alpha);
-        // 2. the coupling bottleneck: rescale + requantize the FULL weight
-        let mut w_scaled = self.w_full.clone();
-        scaling::apply_row_scale(&mut w_scaled, &s);
-        let qw = QuantizedWeights::quantize(&w_scaled);
-        // 3. scaled activation path
-        let mut x_hat = ws.take_matrix("smoothd.xhat", t, x.cols());
-        x_hat.data_mut().copy_from_slice(x.data());
-        scaling::apply_full_inverse_scale(&mut x_hat, &s);
-        let mut x_int = ws.take_i8_matrix("smoothd.xint", t, x.cols());
-        let mut dx = ws.take_f32("smoothd.dx", t);
-        quant::quantize_per_token_into(&x_hat, &mut x_int, &mut dx);
-        let mut y = ws.take_matrix_zeroed("smoothd.y", t, cout);
-        qw.matmul_ws(&x_int, &dx, ws, y.data_mut());
+        let y = self.coupled_forward(x, &s, ws);
         self.last_s = s;
-        ws.put_matrix("smoothd.xhat", x_hat);
-        ws.put_i8_matrix("smoothd.xint", x_int);
-        ws.put_f32("smoothd.dx", dx);
         y
     }
 
@@ -473,22 +515,11 @@ impl QuantMethod for SmoothDynamicLinear {
     /// are still rescaled and requantized per call, because that coupling
     /// is the cost the method is measured for.
     fn forward_infer(&self, x: &Matrix, ws: &mut Workspace) -> Matrix {
-        let (t, cout) = (x.rows(), self.w_full.cols());
-        let mut w_scaled = self.w_full.clone();
-        scaling::apply_row_scale(&mut w_scaled, &self.last_s);
-        let qw = QuantizedWeights::quantize(&w_scaled);
-        let mut x_hat = ws.take_matrix("smoothd.xhat", t, x.cols());
-        x_hat.data_mut().copy_from_slice(x.data());
-        scaling::apply_full_inverse_scale(&mut x_hat, &self.last_s);
-        let mut x_int = ws.take_i8_matrix("smoothd.xint", t, x.cols());
-        let mut dx = ws.take_f32("smoothd.dx", t);
-        quant::quantize_per_token_into(&x_hat, &mut x_int, &mut dx);
-        let mut y = ws.take_matrix_zeroed("smoothd.y", t, cout);
-        qw.matmul_ws(&x_int, &dx, ws, y.data_mut());
-        ws.put_matrix("smoothd.xhat", x_hat);
-        ws.put_i8_matrix("smoothd.xint", x_int);
-        ws.put_f32("smoothd.dx", dx);
-        y
+        self.coupled_forward(x, &self.last_s, ws)
+    }
+
+    fn warm_plan(&self, m_hint: usize, ws: &mut Workspace) {
+        pipeline::warm(ws, self.plan, self.w_full.rows(), self.w_full.cols(), m_hint);
     }
 
     fn backward_input(&self, dy: &Matrix, ws: &mut Workspace) -> Matrix {

@@ -17,6 +17,13 @@
 //! Backward passes use the straight-through estimator: `dX = dY · Wᵀ` with
 //! the stored (de)quantized weights, frozen weights get no gradient — the
 //! PEFT adapters around the layer (see `peft`) carry all trainable state.
+//!
+//! Every method's `forward`/`forward_infer` routes through **one shared
+//! compiled execution plan** (`quant::pipeline`, DESIGN.md §7): fused
+//! scale→quantize, a matmul+dequant epilogue that writes the output
+//! directly, and pre-resolved workspace slots instead of string-keyed
+//! lookups. `tests/qgemm_parity.rs` pins the fused path bit-identical to
+//! the unfused reference pipeline for all six methods.
 
 mod baselines;
 mod quaff;
@@ -50,6 +57,13 @@ pub trait QuantMethod: Send {
     /// bit-identical to a full re-forward — `tests/decode_parity.rs` pins
     /// it for every method. No gradient bookkeeping happens on this path.
     fn forward_infer(&self, x: &Matrix, ws: &mut Workspace) -> Matrix;
+
+    /// Pre-compile this layer's execution plan (`quant::pipeline`) in `ws`,
+    /// pre-sized for batches of `m_hint` token rows. Optional — forwards
+    /// build the plan lazily on first use with a workspace — but the model,
+    /// decode and serving layers call it at construction so the first step
+    /// is already plan-driven.
+    fn warm_plan(&self, _m_hint: usize, _ws: &mut Workspace) {}
 
     /// Straight-through `dX = dY · Wᵀ` using the stored representation.
     fn backward_input(&self, dy: &Matrix, ws: &mut Workspace) -> Matrix;

@@ -21,9 +21,18 @@
 
 use super::{ste_backward_ws, MethodSnapshot, QuantMethod};
 use crate::outlier::OutlierSet;
+use crate::quant::pipeline::{self, PlanId, ScaleOp};
 use crate::quant::{self, QuantizedWeights};
 use crate::scaling::{self, MomentumScaler};
 use crate::tensor::{kernels, I8Matrix, Matrix, Workspace};
+
+/// Plan aux-slot roles for the Quaff correction stage (see
+/// `quant::pipeline::QgemmPlan::aux_f32`).
+const AX_WHAT: usize = 0; // ŵ = (s_O−1)·W_O
+const AX_DWHAT: usize = 1; // Δ_ŵ
+const AX_OC_INV: usize = 2; // per-OC quantizer reciprocals
+const AX_OC_LANES: usize = 3; // col_abs_max reduction lanes
+const AX_COLMAX: usize = 4; // momentum-update targeted column maxima
 
 /// Quaff quantized linear layer.
 pub struct QuaffLinear {
@@ -33,6 +42,8 @@ pub struct QuaffLinear {
     /// Static per-input-channel weight maxima `max|W_i,:|` for Eq. 8.
     w_row_max: Vec<f32>,
     scaler: MomentumScaler,
+    /// Identity of this layer's compiled execution plan (one per workspace).
+    plan: PlanId,
     cin: usize,
     cout: usize,
 }
@@ -55,6 +66,7 @@ impl QuaffLinear {
             w_o,
             w_row_max,
             scaler,
+            plan: PlanId::fresh(),
             cin,
             cout,
         }
@@ -88,6 +100,7 @@ impl QuaffLinear {
             w_o,
             w_row_max,
             scaler,
+            plan: PlanId::fresh(),
             cin,
             cout,
         }
@@ -131,66 +144,76 @@ impl QuantMethod for QuaffLinear {
 
     fn forward(&mut self, x: &Matrix, ws: &mut Workspace) -> Matrix {
         // 1. momentum update from targeted statistics (Eqs. 7–8); the rest
-        // of the step is the frozen-state path below.
+        // of the step is the frozen-state plan pipeline below.
         if !self.scaler.outliers.is_empty() {
-            let mut col_max = ws.take_f32("quaff.colmax", self.cin);
+            let plan = pipeline::plan_for(ws, self.plan, self.cin, self.cout, x.rows());
+            let mut col_max = ws.take_slot_f32(plan.aux_f32[AX_COLMAX], self.cin);
             self.outlier_col_max_into(x, &mut col_max);
             self.scaler.update(&col_max, &self.w_row_max);
-            ws.put_f32("quaff.colmax", col_max);
+            ws.put_slot_f32(plan.aux_f32[AX_COLMAX], col_max);
+            pipeline::store_plan(ws, self.plan, plan);
         }
         self.forward_infer(x, ws)
     }
 
     /// Steps 2–5 of the per-step pipeline with the momentum factors frozen
     /// at their current values — row-local, so KV-cached decode matches a
-    /// full re-forward bit-for-bit.
+    /// full re-forward bit-for-bit. Runs entirely on the compiled plan:
+    /// fused scale+quantize (no X̂ materialization), fused matmul epilogue
+    /// (no zeroed output pass), slot-resolved buffers (no string lookups).
     fn forward_infer(&self, x: &Matrix, ws: &mut Workspace) -> Matrix {
         let t = x.rows();
         let n_out = self.scaler.outliers.len();
+        let plan = pipeline::plan_for(ws, self.plan, self.cin, self.cout, t);
+        let mut y = ws.take_donor_matrix(t, self.cout);
         if n_out == 0 {
             // Degenerate case (budget 0): Quaff reduces to Naive W8A8.
-            let mut x_int = ws.take_i8_matrix("quaff.xint", t, self.cin);
-            let mut dx = ws.take_f32("quaff.dx", t);
-            quant::quantize_per_token_into(x, &mut x_int, &mut dx);
-            let mut y = ws.take_matrix_zeroed("quaff.y", t, self.cout);
-            self.qw.matmul_ws(&x_int, &dx, ws, y.data_mut());
-            ws.put_i8_matrix("quaff.xint", x_int);
-            ws.put_f32("quaff.dx", dx);
+            pipeline::qgemm_into(x, &ScaleOp::Identity, &self.qw, &plan, ws, y.data_mut());
+            pipeline::store_plan(ws, self.plan, plan);
             return y;
         }
-        let mut s_o = ws.take_f32("quaff.so", n_out);
-        s_o.copy_from_slice(self.scaler.factors());
-        // 2. targeted inverse scaling
-        let mut x_hat = ws.take_matrix("quaff.xhat", t, self.cin);
-        x_hat.data_mut().copy_from_slice(x.data());
-        scaling::apply_targeted_inverse_scale(&mut x_hat, &self.scaler.outliers, &s_o);
-        // 3. per-token quantization
-        let mut x_int = ws.take_i8_matrix("quaff.xint", t, self.cin);
-        let mut dx = ws.take_f32("quaff.dx", t);
-        quant::quantize_per_token_into(&x_hat, &mut x_int, &mut dx);
-        // 4. main integer matmul
-        let mut y = ws.take_matrix_zeroed("quaff.y", t, self.cout);
-        self.qw.matmul_ws(&x_int, &dx, ws, y.data_mut());
-        // 5. outlier correction: ŵ = (s_O−1)·W_O, x̂_int = [X̂_int]_{:,O}
-        let mut w_hat = ws.take_matrix("quaff.what", n_out, self.cout);
-        scaling::build_outlier_correction_from_slice_into(&self.w_o, &s_o, &mut w_hat);
-        let mut w_hat_int = ws.take_i8_matrix("quaff.whatint", n_out, self.cout);
-        let mut d_what = ws.take_f32("quaff.dwhat", self.cout);
-        quant::quantize_per_oc_ws(&w_hat, &mut w_hat_int, &mut d_what, ws);
-        let mut x_o_int = ws.take_i8_matrix("quaff.xoint", t, n_out);
-        kernels::select_cols_i8_into(&x_int, &self.scaler.outliers.channels, &mut x_o_int);
-        let mut acc = ws.take_i32("quaff.acc", 0);
-        x_o_int.matmul_dequant_scratch_into(&w_hat_int, &dx, &d_what, &mut acc, y.data_mut());
-        ws.put_f32("quaff.so", s_o);
-        ws.put_matrix("quaff.xhat", x_hat);
-        ws.put_i8_matrix("quaff.xint", x_int);
-        ws.put_f32("quaff.dx", dx);
-        ws.put_matrix("quaff.what", w_hat);
-        ws.put_i8_matrix("quaff.whatint", w_hat_int);
-        ws.put_f32("quaff.dwhat", d_what);
-        ws.put_i8_matrix("quaff.xoint", x_o_int);
-        ws.put_i32("quaff.acc", acc);
+        let s_o = self.scaler.factors();
+        // 2+3. fused targeted inverse scaling + per-token quantization,
+        // 4. main integer matmul written straight into y
+        let qa = plan.quantize(
+            x,
+            &ScaleOp::DivCols { channels: &self.scaler.outliers.channels, factors: s_o },
+            ws,
+        );
+        plan.matmul_write(&qa, &self.qw, ws, y.data_mut());
+        // 5. outlier correction: ŵ = (s_O−1)·W_O, x̂_int = [X̂_int]_{:,O},
+        // fused into the epilogue buffer
+        let mut w_hat = ws.take_slot_matrix(plan.aux_f32[AX_WHAT], n_out, self.cout);
+        scaling::build_outlier_correction_from_slice_into(&self.w_o, s_o, &mut w_hat);
+        let mut w_hat_int = ws.take_slot_i8_matrix(plan.aux_i8[0], n_out, self.cout);
+        let mut d_what = ws.take_slot_f32(plan.aux_f32[AX_DWHAT], self.cout);
+        let mut oc_inv = ws.take_slot_f32(plan.aux_f32[AX_OC_INV], 0);
+        let mut oc_lanes = ws.take_slot_f32(plan.aux_f32[AX_OC_LANES], 0);
+        quant::quantize_per_oc_scratch(
+            &w_hat,
+            &mut w_hat_int,
+            &mut d_what,
+            &mut oc_inv,
+            &mut oc_lanes,
+        );
+        let mut x_o_int = ws.take_slot_i8_matrix(plan.aux_i8[1], t, n_out);
+        kernels::select_cols_i8_into(&qa.x_int, &self.scaler.outliers.channels, &mut x_o_int);
+        let mut acc = ws.take_slot_i32(plan.aux_i32, 0);
+        x_o_int.matmul_dequant_scratch_into(&w_hat_int, &qa.dx, &d_what, &mut acc, y.data_mut());
+        ws.put_slot_matrix(plan.aux_f32[AX_WHAT], w_hat);
+        ws.put_slot_i8_matrix(plan.aux_i8[0], w_hat_int);
+        ws.put_slot_f32(plan.aux_f32[AX_DWHAT], d_what);
+        ws.put_slot_f32(plan.aux_f32[AX_OC_INV], oc_inv);
+        ws.put_slot_f32(plan.aux_f32[AX_OC_LANES], oc_lanes);
+        ws.put_slot_i8_matrix(plan.aux_i8[1], x_o_int);
+        ws.put_slot_i32(plan.aux_i32, acc);
+        plan.release(qa, ws);
+        pipeline::store_plan(ws, self.plan, plan);
         y
+    }
+
+    fn warm_plan(&self, m_hint: usize, ws: &mut Workspace) {
+        pipeline::warm(ws, self.plan, self.cin, self.cout, m_hint);
     }
 
     fn backward_input(&self, dy: &Matrix, ws: &mut Workspace) -> Matrix {

@@ -250,6 +250,19 @@ impl Block {
 }
 
 impl Model {
+    /// Pre-compile every linear layer's execution plan in `ws`
+    /// (`quant::pipeline`), pre-sized for `rows` stacked token rows — the
+    /// serving layers call this once at engine construction so the first
+    /// prefill/decode_step already runs plan-driven (no lazy compile, no
+    /// string-keyed lookups on the hot path).
+    pub fn warm_plans(&self, rows: usize, ws: &mut Workspace) {
+        for b in &self.blocks {
+            for l in b.linears_ref() {
+                l.warm_plan(rows, ws);
+            }
+        }
+    }
+
     /// Full-sequence **frozen-state** forward: logits
     /// `(batch·(n_virtual+seq) × vocab)` with no backward caches, no
     /// calibration taps, and no per-step method-state updates. The

@@ -128,6 +128,16 @@ impl QuantLinear {
         self.method.as_ref().map(|m| m.name()).unwrap_or("master")
     }
 
+    /// Pre-compile the converted method's execution plan in `ws`
+    /// (`quant::pipeline`), pre-sized for batches of `m_hint` token rows.
+    /// No-op for unconverted (master-weight) layers — the FP32 master path
+    /// has no quantization pipeline to plan.
+    pub fn warm_plan(&self, m_hint: usize, ws: &mut Workspace) {
+        if let Some(m) = &self.method {
+            m.warm_plan(m_hint, ws);
+        }
+    }
+
     /// Current activation scaling factors, if the method scales.
     pub fn scaling_factors(&self) -> Option<Vec<f32>> {
         self.method.as_ref().and_then(|m| m.scaling_factors())

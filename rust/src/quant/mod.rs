@@ -9,6 +9,8 @@
 //! the threaded paths are bit-identical to the serial ones for any thread
 //! count (small launches stay serial under [`pool::MIN_SHARD_WORK`]).
 
+pub mod pipeline;
+
 use crate::tensor::pool::{self, shard_range, SplitMut};
 use crate::tensor::{kernels, I8Matrix, Matrix, Workspace};
 
@@ -50,18 +52,14 @@ pub fn quantize_per_tensor(x: &Matrix) -> (I8Matrix, f32) {
     (I8Matrix::from_vec(x.rows(), x.cols(), data), delta)
 }
 
-/// Per-token (per-row) quantization of activations: `(X_int, Δ ∈ R^t)`.
-pub fn quantize_per_token(x: &Matrix) -> (I8Matrix, Vec<f32>) {
-    let mut x_int = I8Matrix::zeros(x.rows(), x.cols());
-    let mut deltas = Vec::with_capacity(x.rows());
-    quantize_per_token_into(x, &mut x_int, &mut deltas);
-    (x_int, deltas)
-}
-
-/// [`quantize_per_token`] into caller-provided buffers: `x_int` must match
-/// `x`'s shape; `deltas` is cleared and refilled. Allocation-free on reuse;
-/// row-sharded for large activations (each row's Δ and values are local to
-/// the row, so the split never changes results).
+/// Per-token (per-row) quantization of activations into caller-provided
+/// buffers: `x_int` must match `x`'s shape; `deltas` is cleared and
+/// refilled. Allocation-free on reuse; row-sharded for large activations
+/// (each row's Δ and values are local to the row, so the split never
+/// changes results). The hot path runs the fused scale→quantize variant in
+/// [`pipeline`] instead; this standalone form serves calibration, tests and
+/// benches. (The old allocating `quantize_per_token` wrapper is gone —
+/// callers provide buffers.)
 pub fn quantize_per_token_into(x: &Matrix, x_int: &mut I8Matrix, deltas: &mut Vec<f32>) {
     assert_eq!(
         (x_int.rows(), x_int.cols()),
@@ -117,25 +115,25 @@ pub fn quantize_per_oc(w: &Matrix) -> (I8Matrix, Vec<f32>) {
 }
 
 /// [`quantize_per_oc`] into caller-provided buffers, with the reciprocal
-/// and reduction-lane scratch drawn from the workspace — the per-step `ŵ`
-/// quantization on Quaff's hot path uses this.
-pub fn quantize_per_oc_ws(
+/// and reduction-lane scratch provided explicitly — the per-step `ŵ`
+/// quantization on Quaff's plan-driven hot path passes slot-backed buffers
+/// (no allocation, no string-keyed lookup).
+pub fn quantize_per_oc_scratch(
     w: &Matrix,
     w_int: &mut I8Matrix,
     deltas: &mut Vec<f32>,
-    ws: &mut Workspace,
+    inv: &mut Vec<f32>,
+    camax_lanes: &mut Vec<f32>,
 ) {
     assert_eq!(
         (w_int.rows(), w_int.cols()),
         (w.rows(), w.cols()),
         "quantize_per_oc shape mismatch"
     );
-    let mut inv = ws.take_f32("quant.oc.inv", 0);
     deltas.clear();
     deltas.resize(w.cols(), 0.0);
-    kernels::col_abs_max_ws(w, deltas, ws);
-    oc_finish(w, w_int, deltas, &mut inv);
-    ws.put_f32("quant.oc.inv", inv);
+    kernels::col_abs_max_scratch(w, deltas, camax_lanes);
+    oc_finish(w, w_int, deltas, inv);
 }
 
 fn quantize_per_oc_core(
@@ -190,15 +188,10 @@ fn oc_rows(w: &Matrix, wi: &mut [i8], inv: &[f32], r0: usize, r1: usize) {
     }
 }
 
-/// Dequantize a per-token-quantized activation matrix.
-pub fn dequantize_per_token(x: &I8Matrix, deltas: &[f32]) -> Matrix {
-    let mut out = Matrix::zeros(x.rows(), x.cols());
-    dequantize_per_token_into(x, deltas, &mut out);
-    out
-}
-
-/// [`dequantize_per_token`] into a caller-provided matrix (fully
-/// overwritten — dirty recycled buffers are fine). Row-sharded.
+/// Dequantize a per-token-quantized activation matrix into a
+/// caller-provided matrix (fully overwritten — dirty recycled buffers are
+/// fine). Row-sharded. (The allocating wrapper is gone; callers provide
+/// the output.)
 pub fn dequantize_per_token_into(x: &I8Matrix, deltas: &[f32], out: &mut Matrix) {
     assert_eq!(deltas.len(), x.rows());
     assert_eq!((out.rows(), out.cols()), (x.rows(), x.cols()));
@@ -227,14 +220,8 @@ fn dtok_rows(x: &I8Matrix, deltas: &[f32], orows: &mut [f32], r0: usize, r1: usi
     }
 }
 
-/// Dequantize a per-output-channel-quantized weight matrix.
-pub fn dequantize_per_oc(w: &I8Matrix, deltas: &[f32]) -> Matrix {
-    let mut out = Matrix::zeros(w.rows(), w.cols());
-    dequantize_per_oc_into(w, deltas, &mut out);
-    out
-}
-
-/// [`dequantize_per_oc`] into a caller-provided matrix. Row-sharded.
+/// Dequantize a per-output-channel-quantized weight matrix into a
+/// caller-provided matrix. Row-sharded.
 pub fn dequantize_per_oc_into(w: &I8Matrix, deltas: &[f32], out: &mut Matrix) {
     assert_eq!(deltas.len(), w.cols());
     assert_eq!((out.rows(), out.cols()), (w.rows(), w.cols()));
@@ -262,15 +249,9 @@ fn doc_rows(w: &I8Matrix, deltas: &[f32], orows: &mut [f32], r0: usize, r1: usiz
     }
 }
 
-/// Dequantize selected *rows* of a per-OC-quantized weight matrix
-/// (LLM.int8's "retrieve W_O" step — paper Eq. 10 discussion).
-pub fn dequantize_rows_per_oc(w: &I8Matrix, deltas: &[f32], rows: &[usize]) -> Matrix {
-    let mut out = Matrix::zeros(rows.len(), w.cols());
-    dequantize_rows_per_oc_into(w, deltas, rows, &mut out);
-    out
-}
-
-/// [`dequantize_rows_per_oc`] into a caller-provided matrix.
+/// Dequantize selected *rows* of a per-OC-quantized weight matrix into a
+/// caller-provided matrix (LLM.int8's "retrieve W_O" step — paper Eq. 10
+/// discussion).
 pub fn dequantize_rows_per_oc_into(
     w: &I8Matrix,
     deltas: &[f32],
@@ -295,10 +276,14 @@ pub struct QuantError {
     pub sqnr_db: f64,
 }
 
-/// Measure round-trip error of per-token quantization.
+/// Measure round-trip error of per-token quantization (diagnostics-tier:
+/// allocates its own scratch).
 pub fn error_per_token(x: &Matrix) -> QuantError {
-    let (q, d) = quantize_per_token(x);
-    let back = dequantize_per_token(&q, &d);
+    let mut q = I8Matrix::zeros(x.rows(), x.cols());
+    let mut d = Vec::with_capacity(x.rows());
+    quantize_per_token_into(x, &mut q, &mut d);
+    let mut back = Matrix::zeros(x.rows(), x.cols());
+    dequantize_per_token_into(&q, &d, &mut back);
     error_between(x, &back)
 }
 
@@ -379,7 +364,9 @@ impl QuantizedWeights {
     }
 
     pub fn dequantize(&self) -> Matrix {
-        dequantize_per_oc(&self.w_int, &self.deltas)
+        let mut out = Matrix::zeros(self.w_int.rows(), self.w_int.cols());
+        dequantize_per_oc_into(&self.w_int, &self.deltas, &mut out);
+        out
     }
 
     /// Device bytes: int8 weights + f32 step sizes.
@@ -393,6 +380,21 @@ mod tests {
     use super::*;
     use crate::util::prng::Rng;
     use crate::util::prop;
+
+    /// Test-local allocating wrappers over the `_into` kernels (the old
+    /// convenience functions, kept only where tests want fresh buffers).
+    fn qpt(x: &Matrix) -> (I8Matrix, Vec<f32>) {
+        let mut q = I8Matrix::zeros(x.rows(), x.cols());
+        let mut d = Vec::with_capacity(x.rows());
+        quantize_per_token_into(x, &mut q, &mut d);
+        (q, d)
+    }
+
+    fn dqt(q: &I8Matrix, d: &[f32]) -> Matrix {
+        let mut out = Matrix::zeros(q.rows(), q.cols());
+        dequantize_per_token_into(q, d, &mut out);
+        out
+    }
 
     #[test]
     fn per_tensor_roundtrip_error_bounded() {
@@ -417,8 +419,8 @@ mod tests {
         prop::check("ptok-roundtrip", 0xC2, 32, |r| {
             Matrix::randn(2 + r.below(16), 2 + r.below(64), r, 1.0)
         }, |x| {
-            let (q, deltas) = quantize_per_token(x);
-            let back = dequantize_per_token(&q, &deltas);
+            let (q, deltas) = qpt(x);
+            let back = dqt(&q, &deltas);
             for i in 0..x.rows() {
                 for j in 0..x.cols() {
                     let err = (x.get(i, j) - back.get(i, j)).abs();
@@ -448,7 +450,7 @@ mod tests {
         let (q, d) = quantize_per_tensor(&x);
         assert_eq!(d, 0.0);
         assert!(q.data().iter().all(|&v| v == 0));
-        let (q2, d2) = quantize_per_token(&x);
+        let (q2, d2) = qpt(&x);
         assert!(d2.iter().all(|&v| v == 0.0));
         assert!(q2.data().iter().all(|&v| v == 0));
     }
@@ -490,7 +492,8 @@ mod tests {
         let qw = QuantizedWeights::quantize(&w);
         let full = qw.dequantize();
         let rows = [1usize, 4, 9];
-        let sel = dequantize_rows_per_oc(&qw.w_int, &qw.deltas, &rows);
+        let mut sel = Matrix::zeros(rows.len(), qw.w_int.cols());
+        dequantize_rows_per_oc_into(&qw.w_int, &qw.deltas, &rows, &mut sel);
         for (oi, &i) in rows.iter().enumerate() {
             assert_eq!(sel.row(oi), full.row(i));
         }

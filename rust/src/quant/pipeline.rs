@@ -1,0 +1,499 @@
+//! Compiled per-layer execution plans with a fused
+//! quantize→matmul→epilogue pipeline — the shared hot path every
+//! [`QuantMethod`](crate::methods::QuantMethod) forward routes through
+//! (DESIGN.md §7).
+//!
+//! Before this layer, every quantized linear ran scale/quantize, the int8
+//! matmul, the i32→f32 dequant and the correction/adapter adds as separate
+//! passes over memory, re-resolving each scratch buffer through string-keyed
+//! [`Workspace`] lookups on every forward — and the whole shape was
+//! hand-duplicated across six methods × the train and infer paths. The plan
+//! layer replaces that with:
+//!
+//! * **[`QgemmPlan`]** — built **once** per layer per workspace: it binds
+//!   every hot-loop buffer to a pre-resolved workspace slot (no string
+//!   hashing on the hot path — `Workspace::keyed_takes` stays frozen) and
+//!   pre-sizes them for the layer's shapes, so the steady state is
+//!   allocation-free from the first plan-driven step. Plans live *in* the
+//!   workspace (keyed by the owning layer's [`PlanId`]), because slots are
+//!   workspace-local; a layer used with two arenas simply compiles one plan
+//!   per arena.
+//! * **Fused scale→quantize** ([`QgemmPlan::quantize`]) — the method's
+//!   activation transform (Quaff's targeted momentum factors, SmoothQuant's
+//!   static factors, LLM.int8's outlier masking, or identity) is applied
+//!   per row *while* quantizing, in one read pass over `X`: no scaled-copy
+//!   `X̂` matrix is ever materialized. Each shard stages one row in an L1-
+//!   resident lane buffer, so the arithmetic — and therefore every bit of
+//!   the output — is exactly the legacy copy-whole-matrix-then-quantize
+//!   sequence (`tests/qgemm_parity.rs` is the referee).
+//! * **Fused matmul epilogue** ([`QgemmPlan::matmul_write`]) — the packed
+//!   int8 matmul dequantizes and **writes** the f32 output directly
+//!   (`0.0 + Δ_x·acc·Δ_w`, bit-identical to the old zero-fill + accumulate
+//!   contract while eliminating the `take_matrix_zeroed` pass). Method
+//!   corrections (Quaff's `x̂·ŵ` term, LLM.int8's f32 slice) and the LoRA
+//!   delta then accumulate into that same buffer, in the legacy order:
+//!   main term → method correction → adapter delta. No bias term exists in
+//!   this model family; a bias would be one more epilogue accumulation.
+//!
+//! The epilogue contract, precisely: `out = (0.0 + main) ⊕ correction ⊕
+//! adapter-delta`, where `⊕` is in-place `+=` in that fixed order — the
+//! same float-add sequence as the unfused pipeline, which is what keeps
+//! the existing `thread_determinism` / `decode_parity` / `persist_resume`
+//! suites passing unchanged on top of the fused path.
+
+use super::{step_size, QuantizedWeights, QMAX};
+use crate::tensor::pool::{self, shard_range, SplitMut};
+use crate::tensor::{
+    kernels, I8Matrix, Matrix, Workspace, WsF32, WsF32Lanes, WsI16, WsI16Lanes, WsI32, WsI8,
+    WsIdx,
+};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Unique identity of one plan-owning layer (a `QuantMethod` instance).
+/// Allocated at method construction; keys the compiled plan inside each
+/// [`Workspace`] the layer runs against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanId(u64);
+
+static NEXT_PLAN: AtomicU64 = AtomicU64::new(1);
+
+impl PlanId {
+    /// A process-unique plan id.
+    pub fn fresh() -> PlanId {
+        PlanId(NEXT_PLAN.fetch_add(1, Ordering::Relaxed))
+    }
+}
+
+/// The activation transform fused into the quantization read pass.
+/// Every variant reproduces the corresponding legacy pre-pass bit-for-bit,
+/// applied per row instead of to a materialized copy of the whole matrix.
+pub enum ScaleOp<'a> {
+    /// No transform (Naive W8A8, Quaff with an empty outlier set).
+    Identity,
+    /// Divide the listed absolute channel columns by their factors —
+    /// Quaff's targeted inverse scaling `X̂ = X` with `[X]_{:,O} / s_O`
+    /// (`scaling::apply_targeted_inverse_scale`, row-local form).
+    DivCols {
+        /// Outlier channel indices.
+        channels: &'a [usize],
+        /// One factor per channel, aligned with `channels`.
+        factors: &'a [f32],
+    },
+    /// Multiply every column by a precomputed reciprocal factor —
+    /// SmoothQuant's full-axis `X̂ = X · s^{-1}` (`Matrix::scale_cols`).
+    MulPerCol {
+        /// `s^{-1}`, length `c_in`.
+        inv: &'a [f32],
+    },
+    /// Zero the listed columns — LLM.int8's training-path outlier masking.
+    ZeroCols {
+        /// Detected outlier columns.
+        cols: &'a [usize],
+    },
+    /// Zero entries with `|x| > sigma` — LLM.int8's row-local inference
+    /// detection.
+    ZeroAbsAbove {
+        /// Detection threshold σ.
+        sigma: f32,
+    },
+}
+
+/// Apply `op` to one staged activation row (bit-identical to the legacy
+/// whole-matrix pre-pass, restricted to this row).
+fn apply_row(op: &ScaleOp<'_>, row: &mut [f32]) {
+    match op {
+        ScaleOp::Identity => {}
+        ScaleOp::DivCols { channels, factors } => {
+            for (k, &ch) in channels.iter().enumerate() {
+                row[ch] /= factors[k];
+            }
+        }
+        ScaleOp::MulPerCol { inv } => {
+            for (v, &s) in row.iter_mut().zip(*inv) {
+                *v *= s;
+            }
+        }
+        ScaleOp::ZeroCols { cols } => {
+            for &c in *cols {
+                row[c] = 0.0;
+            }
+        }
+        ScaleOp::ZeroAbsAbove { sigma } => {
+            for v in row.iter_mut() {
+                if v.abs() > *sigma {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Quantize one (already scaled) row: symmetric RTN with the row's own Δ —
+/// exactly the `ptok_rows` arithmetic in `quant`.
+#[inline]
+fn quantize_row(row: &[f32], dst: &mut [i8], delta: &mut f32) {
+    let m = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let d = step_size(m);
+    *delta = d;
+    if d == 0.0 {
+        dst.fill(0);
+    } else {
+        let inv = 1.0 / d;
+        for (o, &v) in dst.iter_mut().zip(row) {
+            *o = (v * inv).round().clamp(-QMAX, QMAX) as i8;
+        }
+    }
+}
+
+/// Row-range core of the fused scale→quantize pass: rows `r0..r1` of `x`
+/// into the relative sub-slices `xi`/`deltas`, staging each row in `buf`
+/// when a transform is active (identity reads `x` directly, like the
+/// legacy standalone quantizer).
+fn scale_quantize_rows(
+    x: &Matrix,
+    op: &ScaleOp<'_>,
+    buf: &mut Vec<f32>,
+    xi: &mut [i8],
+    deltas: &mut [f32],
+    r0: usize,
+    r1: usize,
+) {
+    let cols = x.cols();
+    if matches!(op, ScaleOp::Identity) {
+        for i in r0..r1 {
+            let dst = &mut xi[(i - r0) * cols..(i - r0 + 1) * cols];
+            quantize_row(x.row(i), dst, &mut deltas[i - r0]);
+        }
+        return;
+    }
+    buf.resize(cols, 0.0);
+    for i in r0..r1 {
+        buf.copy_from_slice(x.row(i));
+        apply_row(op, buf);
+        let dst = &mut xi[(i - r0) * cols..(i - r0 + 1) * cols];
+        quantize_row(buf, dst, &mut deltas[i - r0]);
+    }
+}
+
+/// Number of general-purpose auxiliary f32 slots per plan (method
+/// correction stages index these with local constants).
+pub const AUX_F32_SLOTS: usize = 6;
+/// Number of auxiliary i8 slots per plan.
+pub const AUX_I8_SLOTS: usize = 2;
+
+/// The fused scale→quantize product, checked out of the plan's slots:
+/// per-token int8 activations plus their step sizes `Δ_X̂`. Hand it back
+/// via [`QgemmPlan::release`] once the correction stages are done with it.
+pub struct QuantizedAct {
+    /// `X̂_int` (t × c_in).
+    pub x_int: I8Matrix,
+    /// Per-token step sizes, length t.
+    pub dx: Vec<f32>,
+}
+
+/// A compiled execution plan for one quantized linear layer: every
+/// hot-loop buffer pre-bound to a workspace slot, pre-sized for the
+/// layer's shapes. Built once per layer per workspace ([`plan_for`]),
+/// checked out for the duration of a forward, stored back afterwards
+/// ([`store_plan`]).
+pub struct QgemmPlan {
+    cin: usize,
+    cout: usize,
+    /// Quantized-activation store (t × c_in).
+    x_int: WsI8,
+    /// Per-token step sizes Δ_X̂.
+    dx: WsF32,
+    /// Per-shard row-staging lanes for the fused scale→quantize pass.
+    rows: WsF32Lanes,
+    /// Serial widening scratch for the packed matmul (decode shapes).
+    a16: WsI16,
+    /// Per-shard widening lanes for the sharded packed matmul.
+    a16_lanes: WsI16Lanes,
+    /// General-purpose f32 slots for method correction stages (Quaff's
+    /// `s_O`/`ŵ`/Δ_ŵ, LLM.int8's column maxima and f32 slice, …).
+    pub aux_f32: [WsF32; AUX_F32_SLOTS],
+    /// General-purpose i8 slots (Quaff's `ŵ_int` and gathered `x̂_int`).
+    pub aux_i8: [WsI8; AUX_I8_SLOTS],
+    /// i32 accumulator slot (the unpacked correction matmul's scratch row).
+    pub aux_i32: WsI32,
+    /// Index scratch slot (LLM.int8's detected-column list).
+    pub aux_idx: WsIdx,
+}
+
+impl QgemmPlan {
+    /// Compile a plan for a `c_in × c_out` layer, pre-sizing the slots for
+    /// batches of `m_hint` token rows. This is the cold path: it allocates;
+    /// everything after it runs on pre-resolved handles.
+    pub fn build(ws: &mut Workspace, cin: usize, cout: usize, m_hint: usize) -> QgemmPlan {
+        let lanes = pool::active_threads().max(1);
+        QgemmPlan {
+            cin,
+            cout,
+            x_int: ws.bind_i8("qgemm.xint", m_hint * cin),
+            dx: ws.bind_f32("qgemm.dx", m_hint),
+            rows: ws.bind_f32_lanes("qgemm.rows", lanes, cin),
+            a16: ws.bind_i16("qgemm.a16", cin),
+            a16_lanes: ws.bind_i16_lanes("qgemm.a16.lanes", lanes, cin),
+            aux_f32: [
+                ws.bind_f32("qgemm.aux_f32.0", 0),
+                ws.bind_f32("qgemm.aux_f32.1", 0),
+                ws.bind_f32("qgemm.aux_f32.2", 0),
+                ws.bind_f32("qgemm.aux_f32.3", 0),
+                ws.bind_f32("qgemm.aux_f32.4", 0),
+                ws.bind_f32("qgemm.aux_f32.5", 0),
+            ],
+            aux_i8: [ws.bind_i8("qgemm.aux_i8.0", 0), ws.bind_i8("qgemm.aux_i8.1", 0)],
+            aux_i32: ws.bind_i32("qgemm.acc", cout),
+            aux_idx: ws.bind_idx("qgemm.idx"),
+        }
+    }
+
+    /// Input-channel count the plan was compiled for.
+    pub fn cin(&self) -> usize {
+        self.cin
+    }
+
+    /// Output-channel count the plan was compiled for.
+    pub fn cout(&self) -> usize {
+        self.cout
+    }
+
+    /// Fused scale→quantize: apply `op` and per-token-quantize `x` in one
+    /// read pass (row-sharded exactly like the standalone quantizer, so
+    /// results are bit-identical for any thread count).
+    pub fn quantize(&self, x: &Matrix, op: &ScaleOp<'_>, ws: &mut Workspace) -> QuantizedAct {
+        let (t, cin) = (x.rows(), x.cols());
+        assert_eq!(cin, self.cin, "qgemm plan c_in mismatch");
+        let mut x_int = ws.take_slot_i8_matrix(self.x_int, t, cin);
+        let mut dx = ws.take_slot_f32(self.dx, t);
+        let shards = pool::shards_for(t, t * cin * 2);
+        if shards <= 1 {
+            let mut lanes = ws.take_slot_f32_lanes(self.rows, 1);
+            scale_quantize_rows(x, op, &mut lanes[0], x_int.data_mut(), &mut dx, 0, t);
+            ws.put_slot_f32_lanes(self.rows, lanes);
+        } else {
+            let mut lanes = ws.take_slot_f32_lanes(self.rows, shards);
+            let xi = SplitMut::new(x_int.data_mut());
+            let dl = SplitMut::new(&mut dx[..]);
+            let lane_split = SplitMut::new(&mut lanes[..]);
+            pool::run_shards(shards, &|s| {
+                let (r0, r1) = shard_range(t, shards, s);
+                let xis = unsafe { xi.slice(r0 * cin, (r1 - r0) * cin) };
+                let dls = unsafe { dl.slice(r0, r1 - r0) };
+                let buf = unsafe { lane_split.at(s) };
+                scale_quantize_rows(x, op, buf, xis, dls, r0, r1);
+            });
+            ws.put_slot_f32_lanes(self.rows, lanes);
+        }
+        QuantizedAct { x_int, dx }
+    }
+
+    /// Fused matmul + dequant epilogue: `out[i,j] = 0.0 + Δ_x[i]·acc·Δ_w[j]`
+    /// written directly (no pre-zeroing pass; bit-identical to zero-fill +
+    /// accumulate). Row-sharded with slot-backed widening lanes.
+    pub fn matmul_write(
+        &self,
+        qa: &QuantizedAct,
+        qw: &QuantizedWeights,
+        ws: &mut Workspace,
+        out: &mut [f32],
+    ) {
+        let (m, k, n) = (qa.x_int.rows(), qa.x_int.cols(), qw.packed.n());
+        assert_eq!(out.len(), m * n, "qgemm output length mismatch");
+        let shards = pool::shards_for(m, m * k * n);
+        if shards <= 1 {
+            let mut a16 = ws.take_slot_i16(self.a16, 0);
+            qa.x_int
+                .matmul_dequant_packed_scratch_write(&qw.packed, &qa.dx, &qw.deltas, &mut a16, out);
+            ws.put_slot_i16(self.a16, a16);
+        } else {
+            let mut lanes = ws.take_slot_i16_lanes(self.a16_lanes, shards);
+            qa.x_int
+                .matmul_dequant_packed_lanes_write(&qw.packed, &qa.dx, &qw.deltas, &mut lanes, out);
+            ws.put_slot_i16_lanes(self.a16_lanes, lanes);
+        }
+    }
+
+    /// The FP32 leg of the shared pipeline (the full-precision reference
+    /// method): a plain blocked matmul writing `out` directly.
+    pub fn matmul_f32(&self, x: &Matrix, w: &Matrix, out: &mut Matrix) {
+        kernels::matmul_into(x, w, out);
+    }
+
+    /// Hand the quantized activations back to their slots.
+    pub fn release(&self, qa: QuantizedAct, ws: &mut Workspace) {
+        ws.put_slot_i8_matrix(self.x_int, qa.x_int);
+        ws.put_slot_f32(self.dx, qa.dx);
+    }
+}
+
+/// Fetch the compiled plan for `id` out of `ws`, building (and pre-sizing)
+/// it on first use with this workspace — or rebuilding if the stored plan
+/// was compiled for different layer shapes. The plan is *checked out* of
+/// the workspace so plan and arena borrow independently; hand it back with
+/// [`store_plan`] at the end of the forward. The plan stays boxed across
+/// the round-trip, so the steady-state fetch/store cycle performs no heap
+/// allocation (the zero-alloc invariant covers the plan machinery too).
+pub fn plan_for(
+    ws: &mut Workspace,
+    id: PlanId,
+    cin: usize,
+    cout: usize,
+    m_hint: usize,
+) -> Box<QgemmPlan> {
+    match ws.take_plan(id.0) {
+        Some(b) => match b.downcast::<QgemmPlan>() {
+            Ok(p) if p.cin == cin && p.cout == cout => p,
+            _ => Box::new(QgemmPlan::build(ws, cin, cout, m_hint)),
+        },
+        None => Box::new(QgemmPlan::build(ws, cin, cout, m_hint)),
+    }
+}
+
+/// Store a checked-out plan back under its id (an unsizing move — no
+/// allocation).
+pub fn store_plan(ws: &mut Workspace, id: PlanId, plan: Box<QgemmPlan>) {
+    ws.put_plan(id.0, plan);
+}
+
+/// Pre-compile (warm) the plan for `id` without running anything — the
+/// model/engine layers call this at construction so the first prefill,
+/// decode step or train step is already plan-driven.
+pub fn warm(ws: &mut Workspace, id: PlanId, cin: usize, cout: usize, m_hint: usize) {
+    let plan = plan_for(ws, id, cin, cout, m_hint);
+    store_plan(ws, id, plan);
+}
+
+/// One-call fused pipeline for methods without a correction stage:
+/// scale→quantize → matmul+dequant, writing `out` directly.
+pub fn qgemm_into(
+    x: &Matrix,
+    op: &ScaleOp<'_>,
+    qw: &QuantizedWeights,
+    plan: &QgemmPlan,
+    ws: &mut Workspace,
+    out: &mut [f32],
+) {
+    let qa = plan.quantize(x, op, ws);
+    plan.matmul_write(&qa, qw, ws, out);
+    plan.release(qa, ws);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant;
+    use crate::util::prng::Rng;
+
+    fn qpt(x: &Matrix) -> (I8Matrix, Vec<f32>) {
+        let mut q = I8Matrix::zeros(x.rows(), x.cols());
+        let mut d = Vec::with_capacity(x.rows());
+        quant::quantize_per_token_into(x, &mut q, &mut d);
+        (q, d)
+    }
+
+    #[test]
+    fn fused_identity_matches_standalone_quantizer_and_matmul() {
+        let mut r = Rng::new(0x91);
+        let mut ws = Workspace::new();
+        let x = Matrix::randn(9, 40, &mut r, 1.0);
+        let w = Matrix::randn(40, 24, &mut r, 0.4);
+        let qw = QuantizedWeights::quantize(&w);
+        let plan = QgemmPlan::build(&mut ws, 40, 24, 9);
+        let mut got = vec![-1.5f32; 9 * 24];
+        qgemm_into(&x, &ScaleOp::Identity, &qw, &plan, &mut ws, &mut got);
+        let (xi, dx) = qpt(&x);
+        let mut want = vec![0.0f32; 9 * 24];
+        qw.matmul_into(&xi, &dx, &mut want);
+        assert_eq!(got, want, "fused identity path diverged");
+    }
+
+    #[test]
+    fn fused_scale_ops_match_legacy_prepass() {
+        let mut r = Rng::new(0x92);
+        let mut ws = Workspace::new();
+        let (t, cin, cout) = (7, 24, 12);
+        let x = Matrix::randn(t, cin, &mut r, 2.0);
+        let w = Matrix::randn(cin, cout, &mut r, 0.4);
+        let qw = QuantizedWeights::quantize(&w);
+        let plan = QgemmPlan::build(&mut ws, cin, cout, t);
+
+        // DivCols vs apply_targeted_inverse_scale
+        let channels = [2usize, 11, 17];
+        let factors = [3.0f32, 1.5, 8.0];
+        let oset = crate::outlier::OutlierSet::new(channels.to_vec());
+        let mut got = vec![0.0f32; t * cout];
+        qgemm_into(
+            &x,
+            &ScaleOp::DivCols { channels: &channels, factors: &factors },
+            &qw,
+            &plan,
+            &mut ws,
+            &mut got,
+        );
+        let mut x_hat = x.clone();
+        crate::scaling::apply_targeted_inverse_scale(&mut x_hat, &oset, &factors);
+        let (xi, dx) = qpt(&x_hat);
+        let mut want = vec![0.0f32; t * cout];
+        qw.matmul_into(&xi, &dx, &mut want);
+        assert_eq!(got, want, "DivCols diverged from targeted scaling");
+
+        // MulPerCol vs scale_cols
+        let inv: Vec<f32> = (0..cin).map(|i| 1.0 / (1.0 + i as f32 * 0.1)).collect();
+        let mut got = vec![0.0f32; t * cout];
+        qgemm_into(&x, &ScaleOp::MulPerCol { inv: &inv }, &qw, &plan, &mut ws, &mut got);
+        let mut x_hat = x.clone();
+        x_hat.scale_cols(&inv);
+        let (xi, dx) = qpt(&x_hat);
+        let mut want = vec![0.0f32; t * cout];
+        qw.matmul_into(&xi, &dx, &mut want);
+        assert_eq!(got, want, "MulPerCol diverged from scale_cols");
+
+        // ZeroCols / ZeroAbsAbove vs explicit masking
+        let cols = [1usize, 13];
+        let mut got = vec![0.0f32; t * cout];
+        qgemm_into(&x, &ScaleOp::ZeroCols { cols: &cols }, &qw, &plan, &mut ws, &mut got);
+        let mut x_hat = x.clone();
+        for ti in 0..t {
+            for &c in &cols {
+                x_hat.row_mut(ti)[c] = 0.0;
+            }
+        }
+        let (xi, dx) = qpt(&x_hat);
+        let mut want = vec![0.0f32; t * cout];
+        qw.matmul_into(&xi, &dx, &mut want);
+        assert_eq!(got, want, "ZeroCols diverged from masking");
+
+        let mut got = vec![0.0f32; t * cout];
+        qgemm_into(&x, &ScaleOp::ZeroAbsAbove { sigma: 1.0 }, &qw, &plan, &mut ws, &mut got);
+        let mut x_hat = x.clone();
+        for v in x_hat.data_mut() {
+            if v.abs() > 1.0 {
+                *v = 0.0;
+            }
+        }
+        let (xi, dx) = qpt(&x_hat);
+        let mut want = vec![0.0f32; t * cout];
+        qw.matmul_into(&xi, &dx, &mut want);
+        assert_eq!(got, want, "ZeroAbsAbove diverged from masking");
+    }
+
+    #[test]
+    fn plan_roundtrips_through_workspace() {
+        let mut ws = Workspace::new();
+        let id = PlanId::fresh();
+        let plan = plan_for(&mut ws, id, 8, 4, 2);
+        assert_eq!((plan.cin(), plan.cout()), (8, 4));
+        store_plan(&mut ws, id, plan);
+        let frozen = ws.fresh_allocs;
+        // same shapes: the stored plan comes back, nothing is rebuilt
+        let plan = plan_for(&mut ws, id, 8, 4, 2);
+        assert_eq!(ws.fresh_allocs, frozen, "plan refetch must not rebuild");
+        store_plan(&mut ws, id, plan);
+        // different shapes: a fresh plan is compiled
+        let plan = plan_for(&mut ws, id, 16, 4, 2);
+        assert_eq!(plan.cin(), 16);
+        assert!(ws.fresh_allocs > frozen, "shape change must recompile");
+        store_plan(&mut ws, id, plan);
+    }
+}

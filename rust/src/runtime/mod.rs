@@ -215,7 +215,13 @@ pub type NativeKernel = Box<dyn Fn(&[HostValue]) -> Result<Vec<HostValue>> + Sen
 ///   row-sharded.
 /// * `"quant_linear"` — `(X [t,cin], W [cin,cout]) → [t,cout]`: per-token
 ///   quantize X, per-OC quantize W, packed int8 matmul with fused dequant —
-///   the same kernel sequence `QuaffLinear` runs per step.
+///   the legacy unfused kernel sequence, kept as the comparison reference.
+/// * `"qgemm"` — same contract as `quant_linear`, executed through the
+///   compiled-plan **fused** pipeline (`quant::pipeline`): one-pass
+///   scale+quantize, matmul epilogue writing the output directly, slots
+///   resolved once and cached in a backend-owned workspace. Bit-identical
+///   to `quant_linear`; this is the first-class fused entry point the
+///   serving/training layers run on.
 /// * `"col_abs_max"` — `(X [r,c]) → [c]`: the pooled tree-reduced channel
 ///   statistic.
 /// * `"attn_decode"` — `(q [1,d], K [len,d], V [len,d], n_heads []) →
@@ -232,6 +238,7 @@ impl NativeBackend {
         };
         b.register("matmul", Box::new(native_matmul));
         b.register("quant_linear", Box::new(native_quant_linear));
+        b.register("qgemm", native_qgemm_kernel());
         b.register("col_abs_max", Box::new(native_col_abs_max));
         b.register("attn_decode", Box::new(native_attn_decode));
         b
@@ -308,6 +315,48 @@ fn native_quant_linear(inputs: &[HostValue]) -> Result<Vec<HostValue>> {
     let mut y = ws.take_matrix_zeroed("native.y", x.rows(), w.cols());
     qw.matmul_ws(&x_int, &dx, &mut ws, y.data_mut());
     Ok(vec![HostValue::from_matrix(&y)])
+}
+
+/// The fused plan-driven qgemm entry point: same `(X, W) → Y` contract as
+/// `quant_linear`, but executed through `quant::pipeline` against a
+/// backend-owned workspace. Plans are keyed **per layer shape** — each
+/// distinct `(c_in, c_out)` compiles once and is reused on every later
+/// call with that shape (alternating shapes must not recompile per call:
+/// a recompile strands the old plan's bound slots, so shape-keying is
+/// what keeps the persistent workspace bounded) — while staying
+/// bit-identical to the unfused kernel.
+fn native_qgemm_kernel() -> NativeKernel {
+    use crate::quant::pipeline::{self, PlanId, ScaleOp};
+    use std::sync::Mutex;
+    type PlanTable = Vec<((usize, usize), PlanId)>;
+    let state: Mutex<(Workspace, PlanTable)> = Mutex::new((Workspace::new(), Vec::new()));
+    Box::new(move |inputs: &[HostValue]| {
+        if inputs.len() != 2 {
+            bail!("qgemm expects 2 inputs (X, W), got {}", inputs.len());
+        }
+        let x = inputs[0].to_matrix().context("qgemm input X")?;
+        let w = inputs[1].to_matrix().context("qgemm input W")?;
+        if x.cols() != w.rows() {
+            bail!("qgemm shape mismatch: X cols {} vs W rows {}", x.cols(), w.rows());
+        }
+        let qw = quant::QuantizedWeights::quantize(&w);
+        let shape = (x.cols(), w.cols());
+        let mut guard = state.lock().map_err(|_| anyhow!("qgemm workspace poisoned"))?;
+        let (ws, ids) = &mut *guard;
+        let id = match ids.iter().find(|(s, _)| *s == shape) {
+            Some((_, id)) => *id,
+            None => {
+                let id = PlanId::fresh();
+                ids.push((shape, id));
+                id
+            }
+        };
+        let plan = pipeline::plan_for(ws, id, shape.0, shape.1, x.rows());
+        let mut y = Matrix::zeros(x.rows(), w.cols());
+        pipeline::qgemm_into(&x, &ScaleOp::Identity, &qw, &plan, ws, y.data_mut());
+        pipeline::store_plan(ws, id, plan);
+        Ok(vec![HostValue::from_matrix(&y)])
+    })
 }
 
 fn native_attn_decode(inputs: &[HostValue]) -> Result<Vec<HostValue>> {
@@ -435,6 +484,33 @@ mod tests {
         let want = x.matmul(&w);
         let err = error_between(&want, &y);
         assert!(err.sqnr_db > 20.0, "int8 path too lossy: {} dB", err.sqnr_db);
+    }
+
+    #[test]
+    fn native_backend_qgemm_matches_unfused_quant_linear_bitwise() {
+        use crate::util::prng::Rng;
+        let mut r = Rng::new(10);
+        let backend = NativeBackend::new();
+        assert!(backend.entry_points().contains(&"qgemm".to_string()));
+        // several calls, including shape changes and a return to the first
+        // shape (per-shape plans must reuse, never recompile-per-call),
+        // against the backend's persistent plan workspace — every one must
+        // match the unfused path
+        for (t, cin, cout) in
+            [(12usize, 32usize, 16usize), (12, 32, 16), (3, 20, 24), (12, 32, 16)]
+        {
+            let x = Matrix::randn(t, cin, &mut r, 1.0);
+            let w = Matrix::randn(cin, cout, &mut r, 0.3);
+            let inputs = [HostValue::from_matrix(&x), HostValue::from_matrix(&w)];
+            let fused = backend.execute("qgemm", &inputs).unwrap();
+            let unfused = backend.execute("quant_linear", &inputs).unwrap();
+            assert_eq!(
+                fused[0].as_f32().unwrap(),
+                unfused[0].as_f32().unwrap(),
+                "fused qgemm diverged from quant_linear at {t}x{cin}x{cout}"
+            );
+        }
+        assert!(backend.execute("qgemm", &[]).is_err());
     }
 
     #[test]

@@ -188,6 +188,56 @@ impl I8Matrix {
         });
     }
 
+    /// **Write-mode** [`Self::matmul_dequant_packed_scratch_into`]: fully
+    /// overwrites `out` instead of accumulating, eliminating the caller's
+    /// zero-fill pass. Bit-identical to zero-fill + accumulate (the fused
+    /// qgemm pipeline's main-term contract — see `quant::pipeline`).
+    pub fn matmul_dequant_packed_scratch_write(
+        &self,
+        packed: &PackedWeights,
+        row_scale: &[f32],
+        col_scale: &[f32],
+        a16: &mut Vec<i16>,
+        out: &mut [f32],
+    ) {
+        self.packed_checks(packed, row_scale, col_scale, out);
+        packed_matmul_rows_core::<true>(
+            &self.data, packed, row_scale, col_scale, a16, out, 0, self.rows, self.cols,
+        );
+    }
+
+    /// **Write-mode** [`Self::matmul_dequant_packed_lanes_into`]: fully
+    /// overwrites `out` (see [`Self::matmul_dequant_packed_scratch_write`]);
+    /// row-sharded with one widening lane per potential shard.
+    pub fn matmul_dequant_packed_lanes_write(
+        &self,
+        packed: &PackedWeights,
+        row_scale: &[f32],
+        col_scale: &[f32],
+        lanes: &mut [Vec<i16>],
+        out: &mut [f32],
+    ) {
+        self.packed_checks(packed, row_scale, col_scale, out);
+        assert!(!lanes.is_empty(), "need at least one scratch lane");
+        let (m, k, n) = (self.rows, self.cols, packed.n);
+        let shards = pool::shards_for(m, m * k * n).min(lanes.len());
+        if shards <= 1 {
+            return packed_matmul_rows_core::<true>(
+                &self.data, packed, row_scale, col_scale, &mut lanes[0], out, 0, m, k,
+            );
+        }
+        let out_split = SplitMut::new(out);
+        let lane_split = SplitMut::new(lanes);
+        pool::run_shards(shards, &|s| {
+            let (r0, r1) = shard_range(m, shards, s);
+            let orows = unsafe { out_split.slice(r0 * n, (r1 - r0) * n) };
+            let a16 = unsafe { lane_split.at(s) };
+            packed_matmul_rows_core::<true>(
+                &self.data, packed, row_scale, col_scale, a16, orows, r0, r1, k,
+            );
+        });
+    }
+
     fn packed_checks(
         &self,
         packed: &PackedWeights,
@@ -287,9 +337,13 @@ fn i8_matmul_rows(
 }
 
 /// Row-range core of the packed fused dequantizing matmul: rows `r0..r1`
-/// of the activation, accumulating into the relative sub-slice `orows`.
+/// of the activation into the relative sub-slice `orows`. `WRITE = false`
+/// accumulates (`+=`, the legacy contract); `WRITE = true` overwrites with
+/// `0.0 + term` — the explicit `0.0 +` keeps the write mode bit-identical
+/// to accumulating into a zero-filled buffer (a plain `=` could differ in
+/// the sign of a zero result, and LLVM cannot fold `+0.0 + x` away).
 #[allow(clippy::too_many_arguments)]
-fn packed_matmul_rows(
+fn packed_matmul_rows_core<const WRITE: bool>(
     xd: &[i8],
     packed: &PackedWeights,
     row_scale: &[f32],
@@ -315,9 +369,30 @@ fn packed_matmul_rows(
             for (&a, &b) in a16.iter().zip(brow) {
                 acc += a as i32 * b as i32;
             }
-            orow[j] += rs * acc as f32 * col_scale[j];
+            let term = rs * acc as f32 * col_scale[j];
+            if WRITE {
+                orow[j] = 0.0 + term;
+            } else {
+                orow[j] += term;
+            }
         }
     }
+}
+
+/// Accumulating (`+=`) row-range core — see [`packed_matmul_rows_core`].
+#[allow(clippy::too_many_arguments)]
+fn packed_matmul_rows(
+    xd: &[i8],
+    packed: &PackedWeights,
+    row_scale: &[f32],
+    col_scale: &[f32],
+    a16: &mut Vec<i16>,
+    orows: &mut [f32],
+    r0: usize,
+    r1: usize,
+    k: usize,
+) {
+    packed_matmul_rows_core::<false>(xd, packed, row_scale, col_scale, a16, orows, r0, r1, k);
 }
 
 /// Weights in transposed, i16-widened, column-contiguous form — built once
@@ -405,5 +480,35 @@ mod tests {
     #[test]
     fn nbytes_is_one_per_element() {
         assert_eq!(I8Matrix::zeros(13, 17).nbytes(), 13 * 17);
+    }
+
+    #[test]
+    fn write_mode_matches_zeroed_accumulate_bitwise() {
+        prop::check("packed_write==zero+acc", 0xB8, 24, |r| {
+            let (m, k, n) = (1 + r.below(16), 1 + r.below(64), 1 + r.below(48));
+            let a = I8Matrix::random(m, k, r);
+            let b = I8Matrix::random(k, n, r);
+            let rs: Vec<f32> = (0..m).map(|_| r.range(0.001, 0.1)).collect();
+            let cs: Vec<f32> = (0..n).map(|_| r.range(0.001, 0.1)).collect();
+            (a, b, rs, cs)
+        }, |(a, b, rs, cs)| {
+            let packed = b.pack_transposed();
+            let mut want = vec![0.0f32; a.rows() * b.cols()];
+            a.matmul_dequant_packed_into(&packed, rs, cs, &mut want);
+            // write mode over a dirty buffer must land the same bits
+            let mut scratch = vec![0i16; 1];
+            let mut got = vec![777.25f32; a.rows() * b.cols()];
+            a.matmul_dequant_packed_scratch_write(&packed, rs, cs, &mut scratch, &mut got);
+            if got != want {
+                return Err("scratch write mode differs".to_string());
+            }
+            let mut lanes: Vec<Vec<i16>> = (0..4).map(|_| Vec::new()).collect();
+            let mut got_l = vec![-3.5f32; a.rows() * b.cols()];
+            a.matmul_dequant_packed_lanes_write(&packed, rs, cs, &mut lanes, &mut got_l);
+            if got_l != want {
+                return Err("lanes write mode differs".to_string());
+            }
+            Ok(())
+        });
     }
 }

@@ -275,6 +275,21 @@ pub fn col_abs_max_into(src: &Matrix, out: &mut [f32]) {
     col_abs_max_sharded(src, out, &mut partials, shards);
 }
 
+/// [`col_abs_max_into`] with the per-shard partial lanes in an explicit
+/// caller-provided scratch buffer (resized here) — the compiled-plan hot
+/// path passes a slot-backed buffer so the reduction needs neither an
+/// allocation nor a string-keyed workspace lookup.
+pub fn col_abs_max_scratch(src: &Matrix, out: &mut [f32], scratch: &mut Vec<f32>) {
+    assert_eq!(out.len(), src.cols(), "col_abs_max out length mismatch");
+    let rows = src.rows();
+    let shards = pool::shards_for(rows, rows * src.cols());
+    if shards <= 1 {
+        return col_abs_max_rows(src, out, 0, rows);
+    }
+    scratch.resize((shards - 1) * src.cols(), 0.0);
+    col_abs_max_sharded(src, out, scratch, shards);
+}
+
 /// [`col_abs_max_into`] with the per-shard partial lanes drawn from the
 /// workspace — allocation-free at steady state.
 pub fn col_abs_max_ws(src: &Matrix, out: &mut [f32], ws: &mut super::Workspace) {

@@ -28,7 +28,7 @@ mod workspace;
 
 pub use i8mat::{I8Matrix, PackedWeights};
 pub use matrix::Matrix;
-pub use workspace::Workspace;
+pub use workspace::{Workspace, WsF32, WsF32Lanes, WsI16, WsI16Lanes, WsI32, WsI8, WsIdx, WsKey};
 
 /// Matmul kernel block sizes (tuned by the `bench_blocks` sweep).
 pub(crate) const BLOCK_K: usize = 64;

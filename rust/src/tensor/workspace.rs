@@ -3,16 +3,29 @@
 //! Every matmul / quantize / dequantize on the fine-tuning hot path needs
 //! transient buffers. Allocating them per call is what the §Perf profile
 //! shows as steady-state churn; the [`Workspace`] keeps them alive across
-//! steps instead:
+//! steps instead. Two access tiers share one arena:
 //!
-//! * buffers are **keyed** by a `&'static str` so each call site gets a
-//!   stable buffer back (`take_*` removes it from the arena, `put_*`
-//!   returns it — plain moves, no RefCell, no borrow gymnastics);
-//! * buffers are **grow-only**: a take that needs more capacity than the
-//!   pooled buffer reallocates once, after which the larger buffer stays;
-//! * outputs handed to a caller come back via [`Workspace::recycle`] into a
-//!   shared donor pool that keyed takes fall back on (best capacity fit),
-//!   so a consumer never needs to know the producer's key.
+//! * **String-keyed** (`take_*`/`put_*`): buffers keyed by a
+//!   `&'static str` so each call site gets a stable buffer back (plain
+//!   moves, no RefCell, no borrow gymnastics). A take scans the keyed pool
+//!   — fine on cold paths, but a per-call cost on hot loops.
+//! * **Slot-keyed** (`bind_*` once → `take_slot_*`/`put_slot_*` per call):
+//!   pre-resolved handles ([`WsF32`] and friends) that index straight into
+//!   a slot table — **O(1), no string comparison at all**. The compiled
+//!   execution plans (`quant::pipeline`, DESIGN.md §7) bind their slots
+//!   once per layer and run every subsequent forward through handles only;
+//!   [`Workspace::keyed_takes`] counts string-keyed takes so tests can pin
+//!   "zero string lookups" on the plan-driven path. Slots are
+//!   [`Workspace`]-tagged: using a handle against a different workspace, or
+//!   taking a slot that is already checked out (two plans claiming one
+//!   slot), trips a debug assertion.
+//!
+//! All buffers are **grow-only**: a take that needs more capacity than the
+//! pooled buffer reallocates once, after which the larger buffer stays.
+//! Outputs handed to a caller come back via [`Workspace::recycle`] into a
+//! shared **donor pool** (no key, no string — capacity best-fit) that both
+//! keyed misses and [`Workspace::take_donor_matrix`] draw from, so a
+//! consumer never needs to know the producer's key.
 //!
 //! After a warm-up step with fixed shapes, every take is served from the
 //! arena: the hot path performs **zero heap allocations** at steady state
@@ -20,20 +33,102 @@
 //! counting global allocator).
 
 use super::{I8Matrix, Matrix};
-
-/// Key under which [`Workspace::recycle`] parks donated buffers.
-const RECYCLED: &str = "__recycled";
+use std::any::Any;
+use std::sync::atomic::{AtomicU32, Ordering};
 
 /// Donor-pool saturation bound. The transformer layers donate more buffers
-/// per step than keyed takes consume (LayerNorm/injection/attention outputs
-/// are recycled too), so an uncapped pool would grow without bound across a
+/// per step than takes consume (LayerNorm/injection/attention outputs are
+/// recycled too), so an uncapped pool would grow without bound across a
 /// long run. Beyond this many parked donors, further donations are simply
 /// dropped — takes still find a donor (the working set is far smaller than
 /// the cap), so the steady-state zero-allocation property is unaffected.
 const MAX_DONORS: usize = 64;
 
-/// Keyed, grow-only scratch arena. See the module docs.
-#[derive(Debug, Default)]
+/// Tag source for workspace identity (see [`WsKey`]).
+static NEXT_WS_TAG: AtomicU32 = AtomicU32::new(1);
+
+/// Pre-resolved slot handle: an index into one workspace's slot table plus
+/// the tag of the workspace that issued it. Typed wrappers ([`WsF32`],
+/// [`WsI8`], …) prevent a handle from being used against the wrong pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WsKey {
+    idx: u32,
+    ws: u32,
+}
+
+macro_rules! slot_key {
+    ($(#[$doc:meta])* $name:ident) => {
+        $(#[$doc])*
+        #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+        pub struct $name(WsKey);
+    };
+}
+
+slot_key!(
+    /// Handle to an f32 slot.
+    WsF32
+);
+slot_key!(
+    /// Handle to an i8 slot.
+    WsI8
+);
+slot_key!(
+    /// Handle to an i16 slot.
+    WsI16
+);
+slot_key!(
+    /// Handle to an i32 slot.
+    WsI32
+);
+slot_key!(
+    /// Handle to an index (usize) slot.
+    WsIdx
+);
+slot_key!(
+    /// Handle to an f32 lane-set slot.
+    WsF32Lanes
+);
+slot_key!(
+    /// Handle to an i16 lane-set slot.
+    WsI16Lanes
+);
+
+/// One slot: a named parking spot for exactly one buffer. `None` while the
+/// buffer is checked out.
+struct Slot<T> {
+    name: &'static str,
+    buf: Option<T>,
+}
+
+/// Take the buffer out of slot `idx`. A slot that is already empty means
+/// two users claimed one slot (or a `put_slot` is missing) — debug-asserted,
+/// with a graceful fresh-default fallback in release builds.
+fn slot_take<T: Default>(slots: &mut [Slot<T>], idx: u32) -> T {
+    let e = &mut slots[idx as usize];
+    if let Some(b) = e.buf.take() {
+        return b;
+    }
+    if cfg!(debug_assertions) {
+        panic!(
+            "workspace slot '{}' (#{idx}) claimed while already taken — \
+             two plans sharing one slot id, or a missing put_slot",
+            e.name
+        );
+    }
+    T::default()
+}
+
+fn slot_put<T>(slots: &mut [Slot<T>], idx: u32, buf: T) {
+    let e = &mut slots[idx as usize];
+    debug_assert!(
+        e.buf.is_none(),
+        "double put into workspace slot '{}' (#{idx})",
+        e.name
+    );
+    e.buf = Some(buf);
+}
+
+/// Keyed + slot-keyed, grow-only scratch arena. See the module docs.
 pub struct Workspace {
     f32s: Vec<(&'static str, Vec<f32>)>,
     i8s: Vec<(&'static str, Vec<i8>)>,
@@ -51,17 +146,79 @@ pub struct Workspace {
     /// kernel and the K/V cache's per-layer backing buffers (see
     /// `infer::KvCache`), pooled so caches are reused across requests.
     f32_lanes: Vec<(&'static str, Vec<Vec<f32>>)>,
+    /// Unkeyed donated buffers ([`Workspace::recycle`]); served by capacity
+    /// best-fit to keyed misses and [`Workspace::take_donor_f32`].
+    donors: Vec<Vec<f32>>,
+    /// Slot tables (pre-resolved handles; see module docs).
+    slot_f32: Vec<Slot<Vec<f32>>>,
+    slot_i8: Vec<Slot<Vec<i8>>>,
+    slot_i16: Vec<Slot<Vec<i16>>>,
+    slot_i32: Vec<Slot<Vec<i32>>>,
+    slot_idx: Vec<Slot<Vec<usize>>>,
+    slot_f32_lanes: Vec<Slot<Vec<Vec<f32>>>>,
+    slot_i16_lanes: Vec<Slot<Vec<Vec<i16>>>>,
+    /// Compiled per-layer execution plans, keyed by the owner's plan id
+    /// (`quant::pipeline::PlanId`). Type-erased so the arena stays free of
+    /// upward dependencies.
+    plans: Vec<(u64, Box<dyn Any + Send>)>,
+    /// This workspace's identity tag (embedded in every issued [`WsKey`]).
+    tag: u32,
     /// Buffers that had to be freshly allocated (or regrown). Stops
     /// increasing once the arena is warm — the zero-alloc invariant.
     pub fresh_allocs: u64,
     /// Takes served entirely from pooled capacity.
     pub reuses: u64,
+    /// String-keyed takes (`take_*`, not `take_slot_*`/`take_donor_*`).
+    /// Stops increasing on a fully plan-driven hot loop — the zero
+    /// string-lookup invariant (`tests/zero_alloc.rs`).
+    pub keyed_takes: u64,
 }
 
-/// Take a buffer from `pool`: exact key match first, then the best-fitting
-/// donor from the recycled pool, else a fresh allocation. The returned
-/// buffer has length `len` and **unspecified contents** — callers that
-/// accumulate must `fill` it themselves.
+impl Default for Workspace {
+    fn default() -> Workspace {
+        Workspace {
+            f32s: Vec::new(),
+            i8s: Vec::new(),
+            i16s: Vec::new(),
+            i32s: Vec::new(),
+            idxs: Vec::new(),
+            i16_lanes: Vec::new(),
+            i32_lanes: Vec::new(),
+            f32_lanes: Vec::new(),
+            donors: Vec::new(),
+            slot_f32: Vec::new(),
+            slot_i8: Vec::new(),
+            slot_i16: Vec::new(),
+            slot_i32: Vec::new(),
+            slot_idx: Vec::new(),
+            slot_f32_lanes: Vec::new(),
+            slot_i16_lanes: Vec::new(),
+            plans: Vec::new(),
+            tag: NEXT_WS_TAG.fetch_add(1, Ordering::Relaxed),
+            fresh_allocs: 0,
+            reuses: 0,
+            keyed_takes: 0,
+        }
+    }
+}
+
+impl std::fmt::Debug for Workspace {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Workspace")
+            .field("tag", &self.tag)
+            .field("pooled", &self.pooled())
+            .field("fresh_allocs", &self.fresh_allocs)
+            .field("reuses", &self.reuses)
+            .field("keyed_takes", &self.keyed_takes)
+            .finish()
+    }
+}
+
+/// Take a buffer from the string-keyed `pool`: exact key match, else a
+/// fresh allocation (the f32 pool additionally falls back on the donor pool
+/// — see [`Workspace::take_f32`]). The returned buffer has length `len` and
+/// **unspecified contents** — callers that accumulate must `fill` it
+/// themselves.
 fn take_from<T: Clone + Default>(
     pool: &mut Vec<(&'static str, Vec<T>)>,
     fresh: &mut u64,
@@ -69,26 +226,7 @@ fn take_from<T: Clone + Default>(
     key: &'static str,
     len: usize,
 ) -> Vec<T> {
-    let pos = pool.iter().position(|(k, _)| *k == key).or_else(|| {
-        // Best-fit donor: smallest recycled buffer whose capacity suffices,
-        // else the largest recycled one (it will grow once and then stick).
-        let mut best_fit: Option<usize> = None;
-        let mut largest: Option<usize> = None;
-        for (i, (k, v)) in pool.iter().enumerate() {
-            if *k != RECYCLED {
-                continue;
-            }
-            let cap = v.capacity();
-            if cap >= len && best_fit.map_or(true, |b| cap < pool[b].1.capacity()) {
-                best_fit = Some(i);
-            }
-            if largest.map_or(true, |l| cap > pool[l].1.capacity()) {
-                largest = Some(i);
-            }
-        }
-        best_fit.or(largest)
-    });
-    match pos {
+    match pool.iter().position(|(k, _)| *k == key) {
         Some(i) => {
             let (_, mut v) = pool.swap_remove(i);
             if v.capacity() >= len {
@@ -106,14 +244,48 @@ fn take_from<T: Clone + Default>(
     }
 }
 
+/// Resize a slot-taken plain buffer to `len`, counting reuse vs regrowth.
+fn size_taken<T: Clone + Default>(
+    mut v: Vec<T>,
+    fresh: &mut u64,
+    reuses: &mut u64,
+    len: usize,
+) -> Vec<T> {
+    if v.capacity() >= len {
+        *reuses += 1;
+    } else {
+        *fresh += 1;
+    }
+    v.resize(len, T::default());
+    v
+}
+
 impl Workspace {
     pub fn new() -> Workspace {
         Workspace::default()
     }
 
+    /// Identity tag of this arena (embedded in issued slot handles).
+    pub fn tag(&self) -> u32 {
+        self.tag
+    }
+
+    #[inline]
+    fn check_key(&self, k: WsKey) {
+        debug_assert_eq!(
+            k.ws, self.tag,
+            "workspace slot handle used against a different Workspace than the one that bound it"
+        );
+    }
+
     /// f32 scratch of length `len`, contents unspecified.
     pub fn take_f32(&mut self, key: &'static str, len: usize) -> Vec<f32> {
-        take_from(&mut self.f32s, &mut self.fresh_allocs, &mut self.reuses, key, len)
+        self.keyed_takes += 1;
+        if let Some(i) = self.f32s.iter().position(|(k, _)| *k == key) {
+            let (_, v) = self.f32s.swap_remove(i);
+            return size_taken(v, &mut self.fresh_allocs, &mut self.reuses, len);
+        }
+        self.donor_f32(len)
     }
 
     pub fn put_f32(&mut self, key: &'static str, v: Vec<f32>) {
@@ -121,6 +293,7 @@ impl Workspace {
     }
 
     pub fn take_i8(&mut self, key: &'static str, len: usize) -> Vec<i8> {
+        self.keyed_takes += 1;
         take_from(&mut self.i8s, &mut self.fresh_allocs, &mut self.reuses, key, len)
     }
 
@@ -129,6 +302,7 @@ impl Workspace {
     }
 
     pub fn take_i16(&mut self, key: &'static str, len: usize) -> Vec<i16> {
+        self.keyed_takes += 1;
         take_from(&mut self.i16s, &mut self.fresh_allocs, &mut self.reuses, key, len)
     }
 
@@ -137,6 +311,7 @@ impl Workspace {
     }
 
     pub fn take_i32(&mut self, key: &'static str, len: usize) -> Vec<i32> {
+        self.keyed_takes += 1;
         take_from(&mut self.i32s, &mut self.fresh_allocs, &mut self.reuses, key, len)
     }
 
@@ -150,6 +325,7 @@ impl Workspace {
     /// (callers use the first `n`), so shard-count fluctuations never drop
     /// warmed lane buffers.
     pub fn take_i16_lanes(&mut self, key: &'static str, n: usize) -> Vec<Vec<i16>> {
+        self.keyed_takes += 1;
         take_lanes_from(&mut self.i16_lanes, &mut self.fresh_allocs, &mut self.reuses, key, n)
     }
 
@@ -159,6 +335,7 @@ impl Workspace {
 
     /// At least `n` i32 scratch lanes — see [`Workspace::take_i16_lanes`].
     pub fn take_i32_lanes(&mut self, key: &'static str, n: usize) -> Vec<Vec<i32>> {
+        self.keyed_takes += 1;
         take_lanes_from(&mut self.i32_lanes, &mut self.fresh_allocs, &mut self.reuses, key, n)
     }
 
@@ -168,6 +345,7 @@ impl Workspace {
 
     /// At least `n` f32 scratch lanes — see [`Workspace::take_i16_lanes`].
     pub fn take_f32_lanes(&mut self, key: &'static str, n: usize) -> Vec<Vec<f32>> {
+        self.keyed_takes += 1;
         take_lanes_from(&mut self.f32_lanes, &mut self.fresh_allocs, &mut self.reuses, key, n)
     }
 
@@ -177,7 +355,9 @@ impl Workspace {
 
     /// Cleared index scratch (length 0; push into it).
     pub fn take_idx(&mut self, key: &'static str) -> Vec<usize> {
-        let mut v = take_from(&mut self.idxs, &mut self.fresh_allocs, &mut self.reuses, key, 0);
+        self.keyed_takes += 1;
+        let mut v =
+            take_from(&mut self.idxs, &mut self.fresh_allocs, &mut self.reuses, key, 0);
         v.clear();
         v
     }
@@ -210,20 +390,255 @@ impl Workspace {
         self.put_i8(key, m.into_vec());
     }
 
-    /// Donate a matrix whose producer key the caller does not know; keyed
-    /// takes fall back on these donors. Donations beyond [`MAX_DONORS`]
-    /// parked entries are dropped (see the constant's docs).
+    // ---- donor pool (no keys, no strings) -------------------------------
+
+    /// Donate a matrix whose producer the caller does not know; keyed f32
+    /// misses and [`Workspace::take_donor_matrix`] fall back on these
+    /// donors. Donations beyond [`MAX_DONORS`] parked entries are dropped
+    /// (see the constant's docs).
     pub fn recycle(&mut self, m: Matrix) {
         self.recycle_f32(m.into_vec());
     }
 
     pub fn recycle_f32(&mut self, v: Vec<f32>) {
-        if self.f32s.iter().filter(|(k, _)| *k == RECYCLED).count() < MAX_DONORS {
-            self.put_f32(RECYCLED, v);
+        if self.donors.len() < MAX_DONORS {
+            self.donors.push(v);
         }
     }
 
-    /// Number of buffers currently parked in the arena (all types).
+    /// Best-fit donor take: the smallest parked donor whose capacity covers
+    /// `len`, else the largest one (it grows once and then sticks), else a
+    /// fresh allocation. Contents unspecified. No string comparison — this
+    /// is the plan-driven path's output-buffer source.
+    pub fn take_donor_f32(&mut self, len: usize) -> Vec<f32> {
+        self.donor_f32(len)
+    }
+
+    fn donor_f32(&mut self, len: usize) -> Vec<f32> {
+        let mut best: Option<usize> = None;
+        let mut largest: Option<usize> = None;
+        for (i, v) in self.donors.iter().enumerate() {
+            let cap = v.capacity();
+            if cap >= len && best.map_or(true, |b| cap < self.donors[b].capacity()) {
+                best = Some(i);
+            }
+            if largest.map_or(true, |l| cap > self.donors[l].capacity()) {
+                largest = Some(i);
+            }
+        }
+        match best.or(largest) {
+            Some(i) => {
+                let v = self.donors.swap_remove(i);
+                size_taken(v, &mut self.fresh_allocs, &mut self.reuses, len)
+            }
+            None => {
+                self.fresh_allocs += 1;
+                vec![0.0; len]
+            }
+        }
+    }
+
+    /// `rows × cols` matrix from the donor pool (see
+    /// [`Workspace::take_donor_f32`]); contents unspecified.
+    pub fn take_donor_matrix(&mut self, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_vec(rows, cols, self.donor_f32(rows * cols))
+    }
+
+    // ---- slot handles (pre-resolved, O(1), string-free) -----------------
+
+    /// Bind a new f32 slot named `name`, pre-sized to `cap` elements.
+    /// Binding is the cold path (it allocates); the returned handle makes
+    /// every subsequent take/put an O(1) table access.
+    pub fn bind_f32(&mut self, name: &'static str, cap: usize) -> WsF32 {
+        self.fresh_allocs += 1;
+        let idx = self.slot_f32.len() as u32;
+        self.slot_f32.push(Slot { name, buf: Some(Vec::with_capacity(cap)) });
+        WsF32(WsKey { idx, ws: self.tag })
+    }
+
+    pub fn bind_i8(&mut self, name: &'static str, cap: usize) -> WsI8 {
+        self.fresh_allocs += 1;
+        let idx = self.slot_i8.len() as u32;
+        self.slot_i8.push(Slot { name, buf: Some(Vec::with_capacity(cap)) });
+        WsI8(WsKey { idx, ws: self.tag })
+    }
+
+    pub fn bind_i16(&mut self, name: &'static str, cap: usize) -> WsI16 {
+        self.fresh_allocs += 1;
+        let idx = self.slot_i16.len() as u32;
+        self.slot_i16.push(Slot { name, buf: Some(Vec::with_capacity(cap)) });
+        WsI16(WsKey { idx, ws: self.tag })
+    }
+
+    pub fn bind_i32(&mut self, name: &'static str, cap: usize) -> WsI32 {
+        self.fresh_allocs += 1;
+        let idx = self.slot_i32.len() as u32;
+        self.slot_i32.push(Slot { name, buf: Some(Vec::with_capacity(cap)) });
+        WsI32(WsKey { idx, ws: self.tag })
+    }
+
+    pub fn bind_idx(&mut self, name: &'static str) -> WsIdx {
+        self.fresh_allocs += 1;
+        let idx = self.slot_idx.len() as u32;
+        self.slot_idx.push(Slot { name, buf: Some(Vec::new()) });
+        WsIdx(WsKey { idx, ws: self.tag })
+    }
+
+    /// Bind an f32 lane-set slot with `n` lanes, each pre-sized to `cap`.
+    pub fn bind_f32_lanes(&mut self, name: &'static str, n: usize, cap: usize) -> WsF32Lanes {
+        self.fresh_allocs += 1;
+        let mut lanes = Vec::with_capacity(n);
+        lanes.resize_with(n, || Vec::with_capacity(cap));
+        let idx = self.slot_f32_lanes.len() as u32;
+        self.slot_f32_lanes.push(Slot { name, buf: Some(lanes) });
+        WsF32Lanes(WsKey { idx, ws: self.tag })
+    }
+
+    pub fn bind_i16_lanes(&mut self, name: &'static str, n: usize, cap: usize) -> WsI16Lanes {
+        self.fresh_allocs += 1;
+        let mut lanes = Vec::with_capacity(n);
+        lanes.resize_with(n, || Vec::with_capacity(cap));
+        let idx = self.slot_i16_lanes.len() as u32;
+        self.slot_i16_lanes.push(Slot { name, buf: Some(lanes) });
+        WsI16Lanes(WsKey { idx, ws: self.tag })
+    }
+
+    /// Slot take of length `len`, contents unspecified (grow-only).
+    pub fn take_slot_f32(&mut self, key: WsF32, len: usize) -> Vec<f32> {
+        self.check_key(key.0);
+        let v = slot_take(&mut self.slot_f32, key.0.idx);
+        size_taken(v, &mut self.fresh_allocs, &mut self.reuses, len)
+    }
+
+    pub fn put_slot_f32(&mut self, key: WsF32, v: Vec<f32>) {
+        self.check_key(key.0);
+        slot_put(&mut self.slot_f32, key.0.idx, v);
+    }
+
+    pub fn take_slot_i8(&mut self, key: WsI8, len: usize) -> Vec<i8> {
+        self.check_key(key.0);
+        let v = slot_take(&mut self.slot_i8, key.0.idx);
+        size_taken(v, &mut self.fresh_allocs, &mut self.reuses, len)
+    }
+
+    pub fn put_slot_i8(&mut self, key: WsI8, v: Vec<i8>) {
+        self.check_key(key.0);
+        slot_put(&mut self.slot_i8, key.0.idx, v);
+    }
+
+    pub fn take_slot_i16(&mut self, key: WsI16, len: usize) -> Vec<i16> {
+        self.check_key(key.0);
+        let v = slot_take(&mut self.slot_i16, key.0.idx);
+        size_taken(v, &mut self.fresh_allocs, &mut self.reuses, len)
+    }
+
+    pub fn put_slot_i16(&mut self, key: WsI16, v: Vec<i16>) {
+        self.check_key(key.0);
+        slot_put(&mut self.slot_i16, key.0.idx, v);
+    }
+
+    pub fn take_slot_i32(&mut self, key: WsI32, len: usize) -> Vec<i32> {
+        self.check_key(key.0);
+        let v = slot_take(&mut self.slot_i32, key.0.idx);
+        size_taken(v, &mut self.fresh_allocs, &mut self.reuses, len)
+    }
+
+    pub fn put_slot_i32(&mut self, key: WsI32, v: Vec<i32>) {
+        self.check_key(key.0);
+        slot_put(&mut self.slot_i32, key.0.idx, v);
+    }
+
+    /// Cleared index scratch from a slot.
+    pub fn take_slot_idx(&mut self, key: WsIdx) -> Vec<usize> {
+        self.check_key(key.0);
+        let mut v = slot_take(&mut self.slot_idx, key.0.idx);
+        self.reuses += 1;
+        v.clear();
+        v
+    }
+
+    pub fn put_slot_idx(&mut self, key: WsIdx, v: Vec<usize>) {
+        self.check_key(key.0);
+        slot_put(&mut self.slot_idx, key.0.idx, v);
+    }
+
+    /// At least `n` f32 lanes from a slot (grow-only, like
+    /// [`Workspace::take_f32_lanes`]).
+    pub fn take_slot_f32_lanes(&mut self, key: WsF32Lanes, n: usize) -> Vec<Vec<f32>> {
+        self.check_key(key.0);
+        let mut v = slot_take(&mut self.slot_f32_lanes, key.0.idx);
+        if v.len() < n {
+            self.fresh_allocs += 1;
+            v.resize_with(n, Vec::new);
+        } else {
+            self.reuses += 1;
+        }
+        v
+    }
+
+    pub fn put_slot_f32_lanes(&mut self, key: WsF32Lanes, v: Vec<Vec<f32>>) {
+        self.check_key(key.0);
+        slot_put(&mut self.slot_f32_lanes, key.0.idx, v);
+    }
+
+    pub fn take_slot_i16_lanes(&mut self, key: WsI16Lanes, n: usize) -> Vec<Vec<i16>> {
+        self.check_key(key.0);
+        let mut v = slot_take(&mut self.slot_i16_lanes, key.0.idx);
+        if v.len() < n {
+            self.fresh_allocs += 1;
+            v.resize_with(n, Vec::new);
+        } else {
+            self.reuses += 1;
+        }
+        v
+    }
+
+    pub fn put_slot_i16_lanes(&mut self, key: WsI16Lanes, v: Vec<Vec<i16>>) {
+        self.check_key(key.0);
+        slot_put(&mut self.slot_i16_lanes, key.0.idx, v);
+    }
+
+    /// `rows × cols` matrix from an f32 slot, contents unspecified.
+    pub fn take_slot_matrix(&mut self, key: WsF32, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_vec(rows, cols, self.take_slot_f32(key, rows * cols))
+    }
+
+    pub fn put_slot_matrix(&mut self, key: WsF32, m: Matrix) {
+        self.put_slot_f32(key, m.into_vec());
+    }
+
+    pub fn take_slot_i8_matrix(&mut self, key: WsI8, rows: usize, cols: usize) -> I8Matrix {
+        I8Matrix::from_vec(rows, cols, self.take_slot_i8(key, rows * cols))
+    }
+
+    pub fn put_slot_i8_matrix(&mut self, key: WsI8, m: I8Matrix) {
+        self.put_slot_i8(key, m.into_vec());
+    }
+
+    // ---- compiled-plan table --------------------------------------------
+
+    /// Remove and return the compiled plan stored under `id`, if any. Plans
+    /// are checked out for the duration of a forward (so the plan and the
+    /// arena can be borrowed independently) and stored back afterwards.
+    pub fn take_plan(&mut self, id: u64) -> Option<Box<dyn Any + Send>> {
+        self.plans
+            .iter()
+            .position(|(pid, _)| *pid == id)
+            .map(|i| self.plans.swap_remove(i).1)
+    }
+
+    /// Store a compiled plan under `id` (one plan per id).
+    pub fn put_plan(&mut self, id: u64, plan: Box<dyn Any + Send>) {
+        debug_assert!(
+            self.plans.iter().all(|(pid, _)| *pid != id),
+            "plan id {id} stored twice"
+        );
+        self.plans.push((id, plan));
+    }
+
+    // ---- diagnostics ----------------------------------------------------
+
+    /// Number of buffers currently parked in the arena (all tiers).
     pub fn pooled(&self) -> usize {
         self.f32s.len()
             + self.i8s.len()
@@ -233,6 +648,14 @@ impl Workspace {
             + self.i16_lanes.len()
             + self.i32_lanes.len()
             + self.f32_lanes.len()
+            + self.donors.len()
+            + self.slot_f32.iter().filter(|s| s.buf.is_some()).count()
+            + self.slot_i8.iter().filter(|s| s.buf.is_some()).count()
+            + self.slot_i16.iter().filter(|s| s.buf.is_some()).count()
+            + self.slot_i32.iter().filter(|s| s.buf.is_some()).count()
+            + self.slot_idx.iter().filter(|s| s.buf.is_some()).count()
+            + self.slot_f32_lanes.iter().filter(|s| s.buf.is_some()).count()
+            + self.slot_i16_lanes.iter().filter(|s| s.buf.is_some()).count()
     }
 
     /// Total bytes of pooled capacity (diagnostics).
@@ -245,6 +668,14 @@ impl Workspace {
             + lane_bytes(&self.i16_lanes, 2)
             + lane_bytes(&self.i32_lanes, 4)
             + lane_bytes(&self.f32_lanes, 4)
+            + self.donors.iter().map(|v| v.capacity() * 4).sum::<usize>()
+            + slot_vec_bytes(&self.slot_f32, 4)
+            + slot_vec_bytes(&self.slot_i8, 1)
+            + slot_vec_bytes(&self.slot_i16, 2)
+            + slot_vec_bytes(&self.slot_i32, 4)
+            + slot_vec_bytes(&self.slot_idx, 8)
+            + slot_lane_bytes(&self.slot_f32_lanes, 4)
+            + slot_lane_bytes(&self.slot_i16_lanes, 2)
     }
 }
 
@@ -284,6 +715,24 @@ fn take_lanes_from<T>(
 fn lane_bytes<T>(pool: &[(&'static str, Vec<Vec<T>>)], elem: usize) -> usize {
     pool.iter()
         .map(|(_, lanes)| lanes.iter().map(|l| l.capacity() * elem).sum::<usize>())
+        .sum()
+}
+
+fn slot_vec_bytes<T>(slots: &[Slot<Vec<T>>], elem: usize) -> usize {
+    slots
+        .iter()
+        .filter_map(|s| s.buf.as_ref().map(|v| v.capacity() * elem))
+        .sum()
+}
+
+fn slot_lane_bytes<T>(slots: &[Slot<Vec<Vec<T>>>], elem: usize) -> usize {
+    slots
+        .iter()
+        .filter_map(|s| {
+            s.buf
+                .as_ref()
+                .map(|lanes| lanes.iter().map(|l| l.capacity() * elem).sum::<usize>())
+        })
         .sum()
 }
 
@@ -418,5 +867,84 @@ mod tests {
             ws.put_i8_matrix("b", b);
         }
         assert_eq!(ws.fresh_allocs, frozen);
+    }
+
+    #[test]
+    fn slot_take_put_is_string_free_and_reuses() {
+        let mut ws = Workspace::new();
+        let key = ws.bind_f32("slot.a", 64);
+        let qkey = ws.bind_i8("slot.q", 16);
+        let keyed = ws.keyed_takes;
+        // warm take: served from the pre-sized bind, no string lookup
+        let v = ws.take_slot_f32(key, 64);
+        assert_eq!(v.len(), 64);
+        ws.put_slot_f32(key, v);
+        let q = ws.take_slot_i8_matrix(qkey, 4, 4);
+        ws.put_slot_i8_matrix(qkey, q);
+        assert_eq!(ws.keyed_takes, keyed, "slot takes must not hit the string tier");
+        let frozen = ws.fresh_allocs;
+        for _ in 0..5 {
+            let v = ws.take_slot_f32(key, 64);
+            ws.put_slot_f32(key, v);
+        }
+        assert_eq!(ws.fresh_allocs, frozen, "steady slot takes must reuse");
+        // growth beyond the bound capacity is counted once, then sticks
+        let v = ws.take_slot_f32(key, 256);
+        ws.put_slot_f32(key, v);
+        assert_eq!(ws.fresh_allocs, frozen + 1);
+        let v = ws.take_slot_f32(key, 256);
+        ws.put_slot_f32(key, v);
+        assert_eq!(ws.fresh_allocs, frozen + 1);
+    }
+
+    #[test]
+    fn slot_lanes_are_grow_only() {
+        let mut ws = Workspace::new();
+        let key = ws.bind_f32_lanes("slot.lanes", 2, 8);
+        let mut lanes = ws.take_slot_f32_lanes(key, 2);
+        assert_eq!(lanes.len(), 2);
+        for l in &mut lanes {
+            l.resize(50, 0.0);
+        }
+        ws.put_slot_f32_lanes(key, lanes);
+        let lanes = ws.take_slot_f32_lanes(key, 1);
+        assert_eq!(lanes.len(), 2, "lane slot is grow-only");
+        ws.put_slot_f32_lanes(key, lanes);
+        let lanes = ws.take_slot_f32_lanes(key, 4);
+        assert_eq!(lanes.len(), 4);
+        assert!(lanes[..2].iter().all(|l| l.capacity() >= 50));
+        ws.put_slot_f32_lanes(key, lanes);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "claimed while already taken")]
+    fn double_slot_claim_is_detected() {
+        let mut ws = Workspace::new();
+        let key = ws.bind_f32("slot.dup", 4);
+        let _a = ws.take_slot_f32(key, 4);
+        // a second claim without a put — two plans sharing one slot
+        let _b = ws.take_slot_f32(key, 4);
+    }
+
+    #[test]
+    fn plan_table_roundtrip() {
+        let mut ws = Workspace::new();
+        assert!(ws.take_plan(7).is_none());
+        ws.put_plan(7, Box::new(42usize));
+        let p = ws.take_plan(7).expect("stored plan");
+        assert_eq!(*p.downcast::<usize>().unwrap(), 42);
+        assert!(ws.take_plan(7).is_none(), "take removes the plan");
+    }
+
+    #[test]
+    fn donor_take_is_string_free() {
+        let mut ws = Workspace::new();
+        ws.recycle(Matrix::zeros(6, 6));
+        let keyed = ws.keyed_takes;
+        let m = ws.take_donor_matrix(6, 6);
+        assert_eq!(ws.keyed_takes, keyed);
+        assert_eq!(ws.reuses, 1);
+        ws.recycle(m);
     }
 }

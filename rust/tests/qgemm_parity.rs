@@ -1,0 +1,354 @@
+//! Fused-plan parity suite (ISSUE 5 acceptance): the compiled
+//! `quant::pipeline` path every method forward now runs on must be
+//! **bitwise identical** to the pre-refactor reference pipeline — separate
+//! scaled-copy materialization, standalone per-token quantization, zeroed
+//! output + accumulating matmul, separate correction passes — for all six
+//! methods × {train, infer} × active thread widths {1, 4}, across random
+//! shapes and the outlier edge cases (empty set, all-outlier set).
+//!
+//! The reference pipelines below are reconstructed from each method's
+//! [`MethodSnapshot`] (which exposes the full frozen + per-step state), so
+//! stateful methods (Quaff momentum, Smooth_D dynamic factors) are tracked
+//! step-for-step alongside the fused implementation.
+
+use quaff::methods::{build_method, MethodConfig, MethodKind, MethodSnapshot, QuantMethod};
+use quaff::outlier::{ChannelStats, OutlierSet};
+use quaff::quant::{self, QuantizedWeights};
+use quaff::scaling::{self, MomentumScaler};
+use quaff::tensor::{kernels, pool, I8Matrix, Matrix, Workspace};
+use quaff::util::prng::Rng;
+
+/// Fresh-buffer per-token quantization (the legacy standalone pass).
+fn qpt(x: &Matrix) -> (I8Matrix, Vec<f32>) {
+    let mut q = I8Matrix::zeros(x.rows(), x.cols());
+    let mut d = Vec::with_capacity(x.rows());
+    quant::quantize_per_token_into(x, &mut q, &mut d);
+    (q, d)
+}
+
+/// Zeroed-output accumulating matmul (the legacy main-term contract).
+fn mm(qw: &QuantizedWeights, xi: &I8Matrix, dx: &[f32]) -> Matrix {
+    let mut y = Matrix::zeros(xi.rows(), qw.w_int.cols());
+    qw.matmul_into(xi, dx, y.data_mut());
+    y
+}
+
+/// The pre-refactor per-method pipelines, driven off snapshot state.
+enum RefPipe {
+    Fp32 {
+        w: Matrix,
+    },
+    Naive {
+        qw: QuantizedWeights,
+    },
+    LlmInt8 {
+        qw: QuantizedWeights,
+        sigma: f32,
+    },
+    SmoothS {
+        qw: QuantizedWeights,
+        inv_s: Vec<f32>,
+    },
+    SmoothD {
+        w_full: Matrix,
+        w_row_max: Vec<f32>,
+        alpha: f32,
+        last_s: Vec<f32>,
+    },
+    Quaff {
+        qw: QuantizedWeights,
+        w_o: Matrix,
+        w_row_max: Vec<f32>,
+        scaler: MomentumScaler,
+    },
+}
+
+impl RefPipe {
+    fn from_snapshot(s: MethodSnapshot) -> RefPipe {
+        match s {
+            MethodSnapshot::Fp32 { w } => RefPipe::Fp32 { w },
+            MethodSnapshot::Naive { w_int, deltas } => RefPipe::Naive {
+                qw: QuantizedWeights::from_parts(w_int, deltas),
+            },
+            MethodSnapshot::LlmInt8 { w_int, deltas, sigma, .. } => RefPipe::LlmInt8 {
+                qw: QuantizedWeights::from_parts(w_int, deltas),
+                sigma,
+            },
+            MethodSnapshot::SmoothStatic { w_int, deltas, s } => RefPipe::SmoothS {
+                qw: QuantizedWeights::from_parts(w_int, deltas),
+                inv_s: s.iter().map(|&v| 1.0 / v).collect(),
+            },
+            MethodSnapshot::SmoothDynamic { w_full, alpha, last_s } => {
+                let w_row_max: Vec<f32> = (0..w_full.rows())
+                    .map(|i| w_full.row(i).iter().fold(0.0f32, |m, &v| m.max(v.abs())))
+                    .collect();
+                RefPipe::SmoothD { w_full, w_row_max, alpha, last_s }
+            }
+            MethodSnapshot::Quaff {
+                w_int,
+                deltas,
+                w_o,
+                w_row_max,
+                channels,
+                s_o,
+                gamma,
+                momentum,
+            } => RefPipe::Quaff {
+                qw: QuantizedWeights::from_parts(w_int, deltas),
+                w_o,
+                w_row_max,
+                scaler: MomentumScaler::from_parts(gamma, OutlierSet::new(channels), s_o, momentum),
+            },
+        }
+    }
+
+    /// Frozen-state reference forward (the old `forward_infer` pipelines).
+    fn infer(&self, x: &Matrix) -> Matrix {
+        match self {
+            RefPipe::Fp32 { w } => x.matmul(w),
+            RefPipe::Naive { qw } => {
+                let (xi, dx) = qpt(x);
+                mm(qw, &xi, &dx)
+            }
+            RefPipe::LlmInt8 { qw, sigma } => {
+                let mut x_reg = x.clone();
+                for v in x_reg.data_mut() {
+                    if v.abs() > *sigma {
+                        *v = 0.0;
+                    }
+                }
+                let (xi, dx) = qpt(&x_reg);
+                let mut y = mm(qw, &xi, &dx);
+                for ti in 0..x.rows() {
+                    let xr = x.row(ti);
+                    let yr = y.row_mut(ti);
+                    for (c, &xv) in xr.iter().enumerate() {
+                        if xv.abs() <= *sigma {
+                            continue;
+                        }
+                        let wrow = qw.w_int.row(c);
+                        for ((o, &q), &d) in yr.iter_mut().zip(wrow).zip(qw.deltas.iter()) {
+                            *o += xv * q as f32 * d;
+                        }
+                    }
+                }
+                y
+            }
+            RefPipe::SmoothS { qw, inv_s } => {
+                let mut x_hat = x.clone();
+                x_hat.scale_cols(inv_s);
+                let (xi, dx) = qpt(&x_hat);
+                mm(qw, &xi, &dx)
+            }
+            RefPipe::SmoothD { w_full, last_s, .. } => smooth_d_ref(w_full, last_s, x),
+            RefPipe::Quaff { qw, w_o, scaler, .. } => {
+                quaff_ref(qw, w_o, &scaler.outliers, scaler.factors(), x)
+            }
+        }
+    }
+
+    /// Stateful reference forward (the old `forward` pipelines, including
+    /// per-step state updates).
+    fn train(&mut self, x: &Matrix) -> Matrix {
+        match self {
+            RefPipe::SmoothD { w_full, w_row_max, alpha, last_s } => {
+                let s = scaling::smoothquant_factors(&x.col_abs_max(), w_row_max, *alpha);
+                let y = smooth_d_ref(w_full, &s, x);
+                *last_s = s;
+                y
+            }
+            RefPipe::Quaff { qw, w_o, w_row_max, scaler } => {
+                if !scaler.outliers.is_empty() {
+                    let cin = qw.w_int.rows();
+                    let channels = scaler.outliers.channels.clone();
+                    let mut col_max = vec![0.0f32; cin];
+                    for &ch in &channels {
+                        let mut m = 0.0f32;
+                        for ti in 0..x.rows() {
+                            let a = x.get(ti, ch).abs();
+                            if a > m {
+                                m = a;
+                            }
+                        }
+                        col_max[ch] = m;
+                    }
+                    scaler.update(&col_max, w_row_max);
+                }
+                quaff_ref(qw, w_o, &scaler.outliers, scaler.factors(), x)
+            }
+            // LLM.int8's training path differs from its inference path
+            // (batch-column detection), so it gets its own reference below.
+            RefPipe::LlmInt8 { qw, sigma } => {
+                let mut col_max = vec![0.0f32; x.cols()];
+                kernels::col_abs_max_into(x, &mut col_max);
+                let ocols: Vec<usize> =
+                    (0..x.cols()).filter(|&c| col_max[c] > *sigma).collect();
+                let mut x_reg = x.clone();
+                for ti in 0..x.rows() {
+                    let row = x_reg.row_mut(ti);
+                    for &c in &ocols {
+                        row[c] = 0.0;
+                    }
+                }
+                let (xi, dx) = qpt(&x_reg);
+                let mut y = mm(qw, &xi, &dx);
+                if !ocols.is_empty() {
+                    let mut x_o = Matrix::zeros(x.rows(), ocols.len());
+                    kernels::select_cols_into(x, &ocols, &mut x_o);
+                    let mut w_o = Matrix::zeros(ocols.len(), qw.w_int.cols());
+                    quant::dequantize_rows_per_oc_into(&qw.w_int, &qw.deltas, &ocols, &mut w_o);
+                    let corr = x_o.matmul(&w_o);
+                    y.add_assign(&corr);
+                }
+                y
+            }
+            // The stateless methods train exactly as they infer.
+            _ => self.infer(x),
+        }
+    }
+}
+
+/// The legacy Smooth_D coupled step under factors `s`.
+fn smooth_d_ref(w_full: &Matrix, s: &[f32], x: &Matrix) -> Matrix {
+    let mut w_scaled = w_full.clone();
+    scaling::apply_row_scale(&mut w_scaled, s);
+    let qw = QuantizedWeights::quantize(&w_scaled);
+    let mut x_hat = x.clone();
+    scaling::apply_full_inverse_scale(&mut x_hat, s);
+    let (xi, dx) = qpt(&x_hat);
+    mm(&qw, &xi, &dx)
+}
+
+/// The legacy Quaff frozen-factor pipeline (Eqs. 5/9).
+fn quaff_ref(
+    qw: &QuantizedWeights,
+    w_o: &Matrix,
+    outliers: &OutlierSet,
+    s_o: &[f32],
+    x: &Matrix,
+) -> Matrix {
+    if outliers.is_empty() {
+        let (xi, dx) = qpt(x);
+        return mm(qw, &xi, &dx);
+    }
+    let mut x_hat = x.clone();
+    scaling::apply_targeted_inverse_scale(&mut x_hat, outliers, s_o);
+    let (xi, dx) = qpt(&x_hat);
+    let mut y = mm(qw, &xi, &dx);
+    let w_hat = scaling::build_outlier_correction_from_slice(w_o, s_o);
+    let (w_hat_int, d_what) = quant::quantize_per_oc(&w_hat);
+    let mut x_o_int = I8Matrix::zeros(x.rows(), outliers.len());
+    kernels::select_cols_i8_into(&xi, &outliers.channels, &mut x_o_int);
+    x_o_int.matmul_dequant_into(&w_hat_int, &dx, &d_what, y.data_mut());
+    y
+}
+
+/// Calibration statistics with planted hot channels (Smooth_S needs them).
+fn calib(rng: &mut Rng, cin: usize, hot: &[usize]) -> ChannelStats {
+    let mut stats = ChannelStats::new(cin);
+    for _ in 0..4 {
+        let mut x = Matrix::randn(8, cin, rng, 1.0);
+        for &c in hot {
+            for t in 0..8 {
+                let v = x.get(t, c);
+                x.set(t, c, v * 70.0);
+            }
+        }
+        stats.observe(&x, 30.0);
+    }
+    stats
+}
+
+fn hot_x(rng: &mut Rng, t: usize, cin: usize, hot: &[usize]) -> Matrix {
+    let mut x = Matrix::randn(t, cin, rng, 1.0);
+    for &c in hot {
+        for ti in 0..t {
+            let v = x.get(ti, c);
+            x.set(ti, c, v * 60.0);
+        }
+    }
+    x
+}
+
+const KINDS: [MethodKind; 7] = [
+    MethodKind::Fp32,
+    MethodKind::Naive,
+    MethodKind::LlmInt8,
+    MethodKind::SmoothStatic,
+    MethodKind::SmoothDynamic,
+    MethodKind::Quaff,
+    MethodKind::QuaffNoMomentum,
+];
+
+/// Fused forward (train + infer) vs the reference pipeline, 3 steps, for
+/// every method, at the current active width, over one shape + outlier set.
+fn check_case(rng: &mut Rng, t: usize, cin: usize, cout: usize, oset: OutlierSet) {
+    let hot = oset.channels.clone();
+    let stats = calib(rng, cin, &hot);
+    let w = Matrix::randn(cin, cout, rng, 0.3);
+    let cfg = MethodConfig::default();
+    for kind in KINDS {
+        let mut m = build_method(kind, w.clone(), &stats, &oset, &cfg);
+        let mut reference = RefPipe::from_snapshot(m.snapshot());
+        let mut ws = Workspace::new();
+        m.warm_plan(t, &mut ws);
+        for step in 0..3 {
+            let x = hot_x(rng, t, cin, &hot);
+            // frozen-state leg first (it must not advance either side)
+            let y_infer = m.forward_infer(&x, &mut ws);
+            let r_infer = reference.infer(&x);
+            assert_eq!(
+                y_infer.data(),
+                r_infer.data(),
+                "{} forward_infer diverged from reference at step {step} \
+                 (t={t}, cin={cin}, cout={cout}, |O|={}, threads={})",
+                m.name(),
+                oset.len(),
+                pool::active_threads()
+            );
+            ws.recycle(y_infer);
+            // stateful leg: both sides advance per-step state identically
+            let y_train = m.forward(&x, &mut ws);
+            let r_train = reference.train(&x);
+            assert_eq!(
+                y_train.data(),
+                r_train.data(),
+                "{} forward diverged from reference at step {step} \
+                 (t={t}, cin={cin}, cout={cout}, |O|={}, threads={})",
+                m.name(),
+                oset.len(),
+                pool::active_threads()
+            );
+            ws.recycle(y_train);
+        }
+    }
+}
+
+#[test]
+fn fused_plan_matches_reference_pipeline_bitwise() {
+    // An 8-wide pool regardless of QUAFF_THREADS, so the width-4 legs
+    // genuinely shard even on the serial CI leg.
+    pool::init(pool::ThreadConfig { threads: 8 });
+    let mut rng = Rng::new(0x9E44);
+    for &width in &[1usize, 4] {
+        pool::set_active_threads(width);
+        // random small shapes (serial kernels) with random outlier sets
+        for _ in 0..4 {
+            let t = 1 + rng.below(24);
+            let cin = 8 + rng.below(56);
+            let cout = 4 + rng.below(48);
+            let n_hot = rng.below(4);
+            let oset = OutlierSet::new(rng.sample_indices(cin, n_hot));
+            check_case(&mut rng, t, cin, cout, oset);
+        }
+        // outlier edge cases: empty set (Quaff degenerates to Naive) and
+        // the all-outlier set (every channel scaled + corrected)
+        check_case(&mut rng, 6, 16, 12, OutlierSet::new(Vec::new()));
+        check_case(&mut rng, 5, 12, 10, OutlierSet::new((0..12).collect()));
+        // one large case so the width-4 leg exercises the sharded fused
+        // quantize and matmul paths (work ≫ pool::MIN_SHARD_WORK)
+        let oset = OutlierSet::new(vec![5, 40, 100]);
+        check_case(&mut rng, 96, 128, 192, oset);
+    }
+    pool::set_active_threads(pool::global().threads());
+}

@@ -54,6 +54,27 @@ fn at_width<R>(width: usize, f: impl FnOnce() -> R) -> R {
     f()
 }
 
+/// Fresh-buffer wrappers over the `_into` quantizers (the removed
+/// allocating conveniences, kept local to this suite).
+fn qpt(x: &Matrix) -> (I8Matrix, Vec<f32>) {
+    let mut q = I8Matrix::zeros(x.rows(), x.cols());
+    let mut d = Vec::with_capacity(x.rows());
+    quant::quantize_per_token_into(x, &mut q, &mut d);
+    (q, d)
+}
+
+fn dqt(q: &I8Matrix, d: &[f32]) -> Matrix {
+    let mut out = Matrix::zeros(q.rows(), q.cols());
+    quant::dequantize_per_token_into(q, d, &mut out);
+    out
+}
+
+fn dqoc(w: &I8Matrix, d: &[f32]) -> Matrix {
+    let mut out = Matrix::zeros(w.rows(), w.cols());
+    quant::dequantize_per_oc_into(w, d, &mut out);
+    out
+}
+
 fn check_kernels(rng: &mut Rng) {
     let a = Matrix::randn(T, CIN, rng, 1.0);
     let b = Matrix::randn(CIN, COUT, rng, 1.0);
@@ -82,22 +103,22 @@ fn check_kernels(rng: &mut Rng) {
 
     // quantize / dequantize — on `wide`, whose work sits well above the
     // shard threshold so the 4-wide legs genuinely split
-    let (q1w, d1w) = at_width(1, || quant::quantize_per_token(&wide));
-    let (q4w, d4w) = at_width(4, || quant::quantize_per_token(&wide));
+    let (q1w, d1w) = at_width(1, || qpt(&wide));
+    let (q4w, d4w) = at_width(4, || qpt(&wide));
     assert_eq!(q1w.data(), q4w.data(), "quantize_per_token threads≠serial");
     assert_eq!(d1w, d4w);
     let (w1, wd1) = at_width(1, || quant::quantize_per_oc(&wide));
     let (w4, wd4) = at_width(4, || quant::quantize_per_oc(&wide));
     assert_eq!(w1.data(), w4.data(), "quantize_per_oc threads≠serial");
     assert_eq!(wd1, wd4);
-    let dq1 = at_width(1, || quant::dequantize_per_token(&q1w, &d1w));
-    let dq4 = at_width(4, || quant::dequantize_per_token(&q1w, &d1w));
+    let dq1 = at_width(1, || dqt(&q1w, &d1w));
+    let dq4 = at_width(4, || dqt(&q1w, &d1w));
     assert_eq!(dq1.data(), dq4.data(), "dequantize_per_token threads≠serial");
-    let do1 = at_width(1, || quant::dequantize_per_oc(&w1, &wd1));
-    let do4 = at_width(4, || quant::dequantize_per_oc(&w1, &wd1));
+    let do1 = at_width(1, || dqoc(&w1, &wd1));
+    let do4 = at_width(4, || dqoc(&w1, &wd1));
     assert_eq!(do1.data(), do4.data(), "dequantize_per_oc threads≠serial");
     // per-token quantization of the matmul input feeds the int8 leg below
-    let (q1, d1) = at_width(1, || quant::quantize_per_token(&a));
+    let (q1, d1) = at_width(1, || qpt(&a));
 
     // int8 matmuls (exact integer math, but the dequant epilogue is f32)
     let ai = I8Matrix::random(T, CIN, rng);

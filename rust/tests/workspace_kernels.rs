@@ -15,6 +15,15 @@ fn dirty(rows: usize, cols: usize) -> Matrix {
     Matrix::from_vec(rows, cols, vec![777.25; rows * cols])
 }
 
+/// Fresh-buffer per-token quantization (what the removed allocating
+/// wrapper did) — the clean-slate reference for the dirty-buffer legs.
+fn qpt(x: &Matrix) -> (I8Matrix, Vec<f32>) {
+    let mut q = I8Matrix::zeros(x.rows(), x.cols());
+    let mut d = Vec::with_capacity(x.rows());
+    quant::quantize_per_token_into(x, &mut q, &mut d);
+    (q, d)
+}
+
 #[test]
 fn matmul_into_bit_exact_on_dirty_buffers() {
     prop::check(
@@ -91,7 +100,7 @@ fn quantize_per_token_into_bit_exact() {
             x
         },
         |x| {
-            let (want_q, want_d) = quant::quantize_per_token(x);
+            let (want_q, want_d) = qpt(x);
             let mut got_q = I8Matrix::from_vec(
                 x.rows(),
                 x.cols(),
@@ -111,22 +120,24 @@ fn quantize_per_token_into_bit_exact() {
 }
 
 #[test]
-fn quantize_per_oc_ws_bit_exact() {
+fn quantize_per_oc_scratch_bit_exact() {
     prop::check(
-        "qoc_ws==qoc",
+        "qoc_scratch==qoc",
         0x54,
         32,
         |r| Matrix::randn(1 + r.below(48), 1 + r.below(32), r, 0.5),
         |w| {
             let (want_q, want_d) = quant::quantize_per_oc(w);
-            let mut ws = Workspace::new();
             let mut got_q = I8Matrix::from_vec(
                 w.rows(),
                 w.cols(),
                 vec![13i8; w.rows() * w.cols()],
             );
             let mut got_d = vec![9.0f32; 1];
-            quant::quantize_per_oc_ws(w, &mut got_q, &mut got_d, &mut ws);
+            // dirty, wrongly-sized scratch from an earlier (larger) call
+            let mut inv = vec![-2.0f32; 7];
+            let mut lanes = vec![11.5f32; 3];
+            quant::quantize_per_oc_scratch(w, &mut got_q, &mut got_d, &mut inv, &mut lanes);
             if got_q.data() != want_q.data() || got_d != want_d {
                 return Err("per-OC quantization differs".to_string());
             }
@@ -137,28 +148,33 @@ fn quantize_per_oc_ws_bit_exact() {
 
 #[test]
 fn dequantize_into_bit_exact_on_dirty_buffers() {
+    // Fresh zeroed output vs dirty recycled output: the `_into` kernels
+    // must fully overwrite, so both land identical bits.
     let mut r = Rng::new(0x55);
     for _ in 0..16 {
         let x = Matrix::randn(1 + r.below(16), 1 + r.below(48), &mut r, 1.0);
-        let (q, d) = quant::quantize_per_token(&x);
-        let want = quant::dequantize_per_token(&q, &d);
+        let (q, d) = qpt(&x);
+        let mut want = Matrix::zeros(q.rows(), q.cols());
+        quant::dequantize_per_token_into(&q, &d, &mut want);
         let mut got = dirty(q.rows(), q.cols());
         quant::dequantize_per_token_into(&q, &d, &mut got);
         assert_eq!(got.data(), want.data());
 
         let w = Matrix::randn(1 + r.below(32), 1 + r.below(24), &mut r, 0.5);
         let (wq, wd) = quant::quantize_per_oc(&w);
-        let want = quant::dequantize_per_oc(&wq, &wd);
+        let mut want = Matrix::zeros(wq.rows(), wq.cols());
+        quant::dequantize_per_oc_into(&wq, &wd, &mut want);
         let mut got = dirty(wq.rows(), wq.cols());
         quant::dequantize_per_oc_into(&wq, &wd, &mut got);
         assert_eq!(got.data(), want.data());
-
+        // full per-OC dequant row k must equal the selected-rows gather
         if wq.rows() >= 2 {
             let rows = [0usize, wq.rows() - 1];
-            let want = quant::dequantize_rows_per_oc(&wq, &wd, &rows);
             let mut got = dirty(2, wq.cols());
             quant::dequantize_rows_per_oc_into(&wq, &wd, &rows, &mut got);
-            assert_eq!(got.data(), want.data());
+            for (oi, &i) in rows.iter().enumerate() {
+                assert_eq!(got.row(oi), want.row(i));
+            }
         }
     }
 }

@@ -116,6 +116,46 @@ fn steady_state_linear_hot_path_is_allocation_free() {
         );
     }
 
+    // Plan-driven forward hot loop (ISSUE 5): after warm-up it must make
+    // zero heap allocations AND zero string-keyed workspace lookups — the
+    // compiled QgemmPlan's pre-resolved slot handles replace both. (The
+    // backward path is not plan-driven and keeps its keyed takes, so this
+    // phase measures forwards only.)
+    for kind in [
+        MethodKind::Quaff,
+        MethodKind::Naive,
+        MethodKind::SmoothStatic,
+        MethodKind::LlmInt8,
+        MethodKind::Fp32,
+    ] {
+        let mut m = build_method(kind, w.clone(), &stats, &oset, &cfg);
+        let mut ws = Workspace::new();
+        m.warm_plan(x.rows(), &mut ws);
+        for _ in 0..2 {
+            let y = m.forward(&x, &mut ws);
+            ws.recycle(y);
+        }
+        let keyed = ws.keyed_takes;
+        let before = ALLOC_CALLS.load(Ordering::Relaxed);
+        for _ in 0..10 {
+            let y = m.forward(&x, &mut ws);
+            ws.recycle(y);
+        }
+        let allocs = ALLOC_CALLS.load(Ordering::Relaxed) - before;
+        assert_eq!(
+            allocs,
+            0,
+            "{}: plan-driven forward made {allocs} heap allocations",
+            m.name()
+        );
+        assert_eq!(
+            ws.keyed_takes,
+            keyed,
+            "{}: plan-driven forward still performs string-keyed lookups",
+            m.name()
+        );
+    }
+
     // And through the QuantLinear wrapper the model actually calls.
     let mut lin = QuantLinear::new("blocks.0.attn.q_proj", cin, cout, &mut rng);
     lin.apply_method(MethodKind::Quaff, &stats, &oset, &cfg);

@@ -2,7 +2,8 @@
 //!
 //! Compares fresh benchmark records (`BENCH_kernels.json` from
 //! `bench_kernels`, `BENCH_threads.json` from `bench_threads`,
-//! `BENCH_infer.json` from `bench_infer`) against the
+//! `BENCH_infer.json` from `bench_infer`, `BENCH_qgemm.json` from
+//! `bench_qgemm`) against the
 //! committed `BENCH_baseline.json` and fails (exit 1) when any mean
 //! regresses beyond the tolerance, or when a baselined kernel disappeared
 //! from the fresh records. Always writes `BENCH_gate_diff.json` so CI can
@@ -159,6 +160,7 @@ fn parse_args() -> Result<Args, String> {
             "BENCH_kernels.json".to_string(),
             "BENCH_threads.json".to_string(),
             "BENCH_infer.json".to_string(),
+            "BENCH_qgemm.json".to_string(),
         ],
         tol: None,
         diff: "BENCH_gate_diff.json".to_string(),
