@@ -14,12 +14,12 @@
 #[path = "harness.rs"]
 mod harness;
 
-use harness::{bench, write_qgemm_json, QgemmRecord};
+use harness::{bench, write_qgemm_json, BenchMeta, QgemmRecord};
 use quaff::methods::{MethodSnapshot, QuantMethod, QuaffLinear};
 use quaff::outlier::OutlierSet;
 use quaff::quant::{self, QuantizedWeights};
 use quaff::scaling;
-use quaff::tensor::{kernels, pool, Matrix, Workspace};
+use quaff::tensor::{kernels, pool, simd, Matrix, Workspace};
 use quaff::util::prng::Rng;
 
 const CIN: usize = 256;
@@ -105,8 +105,11 @@ fn hot_x(rng: &mut Rng, t: usize, channels: &[usize]) -> Matrix {
 
 fn main() {
     pool::init(pool::ThreadConfig { threads: 8 });
+    let meta = BenchMeta::current();
     println!(
-        "== bench_qgemm: fused plan vs unfused reference, Quaff {CIN}x{COUT}, |O|={N_OUT} ==\n"
+        "== bench_qgemm: fused plan vs unfused reference, Quaff {CIN}x{COUT}, |O|={N_OUT} ==\n\
+         detected ISA: {} (tile {}, pool {} threads)\n",
+        meta.isa, meta.tile, meta.threads
     );
     let mut rng = Rng::new(0xF05E);
     let w = Matrix::randn(CIN, COUT, &mut rng, 0.3);
@@ -152,18 +155,63 @@ fn main() {
         }
     }
 
+    // ISA A/B leg (ISSUE 6 headline): the same fused forward, dispatched
+    // SIMD vs forced scalar, at the decode b1 and train shapes. Stored as
+    // extra records ("fused" = dispatched ISA, "unfused" = forced scalar),
+    // with a bitwise parity assert as the referee. Skipped when dispatch
+    // already resolves to scalar (e.g. the QUAFF_ISA=scalar CI leg).
+    if simd::active() != simd::Isa::Scalar {
+        pool::set_active_threads(1);
+        println!("-- ISA A/B: {} vs forced scalar, 1 thread --", meta.isa);
+        for (label, t) in [("decode b1", 1usize), ("train t64", TRAIN_T)] {
+            let x = hot_x(&mut rng, t, &channels);
+            let mut ws = Workspace::new();
+            let y_v = layer.forward_infer(&x, &mut ws);
+            let prev = simd::force(simd::Isa::Scalar);
+            let y_s = layer.forward_infer(&x, &mut ws);
+            assert_eq!(
+                y_v.data(),
+                y_s.data(),
+                "{} output differs from scalar at {label}",
+                prev.name()
+            );
+            ws.recycle(y_v);
+            ws.recycle(y_s);
+            let rs = bench(&format!("isa {label} th1 [scalar]"), 3, 0.4, || {
+                let y = layer.forward_infer(&x, &mut ws);
+                ws.recycle(std::hint::black_box(y));
+            });
+            simd::force(prev);
+            let rv = bench(&format!("isa {label} th1 [{}]", prev.name()), 3, 0.4, || {
+                let y = layer.forward_infer(&x, &mut ws);
+                ws.recycle(std::hint::black_box(y));
+            });
+            let rec = QgemmRecord {
+                name: format!("isa {label} th1"),
+                fused_ns_per_token: rv.mean_secs * 1e9 / t as f64,
+                unfused_ns_per_token: rs.mean_secs * 1e9 / t as f64,
+                fused_iters: rv.iters,
+                unfused_iters: rs.iters,
+            };
+            println!("  ↳ {} speedup over scalar: {:.2}x\n", prev.name(), rec.speedup());
+            records.push(rec);
+        }
+    }
+
     let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_qgemm.json");
-    match write_qgemm_json(&out, "e2e-small", &records) {
+    match write_qgemm_json(&out, "e2e-small", &meta, &records) {
         Ok(()) => println!("\nwrote {}", out.display()),
         Err(e) => eprintln!("could not write BENCH_qgemm.json: {e}"),
     }
 
-    // Acceptance bar (ISSUE 5): fused ≥ unfused throughput at every
-    // measured shape. Enforced here — the bench exits non-zero on a
-    // violation so the CI bench job fails even while the ±25% gate is in
-    // seeding mode. The 10% slack absorbs shared-runner timing noise; the
-    // fused path does strictly less work per token, so a genuine
-    // regression lands well below it.
+    // Acceptance bar: fused ≥ unfused throughput at every measured shape
+    // (ISSUE 5), and the dispatched ISA ≥ forced scalar on the A/B records
+    // (ISSUE 6 — "fused"/"unfused" hold the SIMD/scalar legs there).
+    // Enforced here — the bench exits non-zero on a violation so the CI
+    // bench job fails even while the ±25% gate is in seeding mode. The 10%
+    // slack absorbs shared-runner timing noise; both comparisons do
+    // strictly-less-work-or-equal per token, so a genuine regression lands
+    // well below it.
     let slow: Vec<&QgemmRecord> = records.iter().filter(|r| r.speedup() < 0.90).collect();
     if slow.is_empty() {
         println!("fused ≥ unfused at every measured shape ✓");

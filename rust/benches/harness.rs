@@ -163,6 +163,38 @@ pub fn write_infer_json(
     std::fs::write(path, json)
 }
 
+/// Machine context a bench record was measured under. Records from
+/// different ISAs are not comparable — `bench_gate` refuses to gate across
+/// an ISA change instead of flagging a phantom regression.
+#[allow(dead_code)]
+pub struct BenchMeta {
+    /// Dispatched microkernel ISA (`tensor::simd::active().name()`).
+    pub isa: String,
+    /// Microkernel tile shape, `"MRxNR"`.
+    pub tile: String,
+    /// Thread-pool width the process was launched with.
+    pub threads: usize,
+}
+
+impl BenchMeta {
+    /// Snapshot the current process: active ISA, tile constants, pool width.
+    #[allow(dead_code)]
+    pub fn current() -> BenchMeta {
+        BenchMeta {
+            isa: quaff::tensor::simd::active().name().to_string(),
+            tile: format!("{}x{}", quaff::tensor::simd::MR, quaff::tensor::simd::NR),
+            threads: quaff::tensor::pool::global().threads(),
+        }
+    }
+
+    fn to_json(&self) -> String {
+        format!(
+            "{{\"isa\": \"{}\", \"tile\": \"{}\", \"threads\": {}}}",
+            self.isa, self.tile, self.threads
+        )
+    }
+}
+
 /// One fused-vs-unfused qgemm measurement at a fixed batch/thread shape.
 #[allow(dead_code)]
 pub struct QgemmRecord {
@@ -184,11 +216,13 @@ impl QgemmRecord {
 /// Emit `BENCH_qgemm.json`: fused vs unfused ns/token per shape (each as a
 /// gate-comparable `ns_per_op` entry) plus per-shape speedups and their
 /// geometric mean — the record behind the "fused ≥ unfused throughput"
-/// acceptance bar.
+/// acceptance bar. `meta` stamps the measurement context (ISA / tile /
+/// threads) so `bench_gate` can refuse cross-ISA comparisons.
 #[allow(dead_code)]
 pub fn write_qgemm_json(
     path: &std::path::Path,
     preset: &str,
+    meta: &BenchMeta,
     records: &[QgemmRecord],
 ) -> std::io::Result<()> {
     let mut kernels = Vec::new();
@@ -215,8 +249,9 @@ pub fn write_qgemm_json(
         (log_sum / records.len() as f64).exp()
     };
     let json = format!(
-        "{{\n  \"bench\": \"qgemm\",\n  \"preset\": \"{preset}\",\n  \"kernels\": [\n{}\n  ],\n  \
-         \"fused_speedup_geomean\": {geomean:.4}\n}}\n",
+        "{{\n  \"bench\": \"qgemm\",\n  \"preset\": \"{preset}\",\n  \"meta\": {},\n  \
+         \"kernels\": [\n{}\n  ],\n  \"fused_speedup_geomean\": {geomean:.4}\n}}\n",
+        meta.to_json(),
         kernels.join(",\n")
     );
     std::fs::write(path, json)

@@ -341,9 +341,13 @@ impl QuantizedWeights {
     }
 
     /// Fused `out += Δ_x·(X_int·W_int)·Δ_W` via the packed fast path
-    /// (row-sharded internally for large launches).
+    /// (row-sharded internally for large launches). Test/diagnostics tier:
+    /// allocates its own staging lanes per call; hot paths use
+    /// [`Self::matmul_ws`] or the `quant::pipeline` plan slots.
     pub fn matmul_into(&self, x_int: &I8Matrix, dx: &[f32], out: &mut [f32]) {
-        x_int.matmul_dequant_packed_into(&self.packed, dx, &self.deltas, out);
+        let n_lanes = pool::active_threads().max(1);
+        let mut lanes: Vec<Vec<i16>> = (0..n_lanes).map(|_| Vec::new()).collect();
+        x_int.matmul_dequant_packed_lanes_into(&self.packed, dx, &self.deltas, &mut lanes, out);
     }
 
     /// [`Self::matmul_into`] with the per-shard widening scratch drawn from

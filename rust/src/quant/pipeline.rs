@@ -29,7 +29,11 @@
 //! * **Fused matmul epilogue** ([`QgemmPlan::matmul_write`]) — the packed
 //!   int8 matmul dequantizes and **writes** the f32 output directly
 //!   (`0.0 + Δ_x·acc·Δ_w`, bit-identical to the old zero-fill + accumulate
-//!   contract while eliminating the `take_matrix_zeroed` pass). Method
+//!   contract while eliminating the `take_matrix_zeroed` pass). The matmul
+//!   itself runs on the register-tiled, ISA-dispatched panel microkernels
+//!   (`tensor::simd`: AVX2 / NEON / scalar, selected at runtime), so every
+//!   method's forward inherits the SIMD path through this one choke point —
+//!   with bit-identical output on every ISA. Method
 //!   corrections (Quaff's `x̂·ŵ` term, LLM.int8's f32 slice) and the LoRA
 //!   delta then accumulate into that same buffer, in the legacy order:
 //!   main term → method correction → adapter delta. No bias term exists in
@@ -44,7 +48,7 @@
 use super::{step_size, QuantizedWeights, QMAX};
 use crate::tensor::pool::{self, shard_range, SplitMut};
 use crate::tensor::{
-    kernels, I8Matrix, Matrix, Workspace, WsF32, WsF32Lanes, WsI16, WsI16Lanes, WsI32, WsI8,
+    kernels, simd, I8Matrix, Matrix, Workspace, WsF32, WsF32Lanes, WsI16, WsI16Lanes, WsI32, WsI8,
     WsIdx,
 };
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -232,8 +236,8 @@ impl QgemmPlan {
             x_int: ws.bind_i8("qgemm.xint", m_hint * cin),
             dx: ws.bind_f32("qgemm.dx", m_hint),
             rows: ws.bind_f32_lanes("qgemm.rows", lanes, cin),
-            a16: ws.bind_i16("qgemm.a16", cin),
-            a16_lanes: ws.bind_i16_lanes("qgemm.a16.lanes", lanes, cin),
+            a16: ws.bind_i16("qgemm.a16", simd::packed_a16_len(cin)),
+            a16_lanes: ws.bind_i16_lanes("qgemm.a16.lanes", lanes, simd::packed_a16_len(cin)),
             aux_f32: [
                 ws.bind_f32("qgemm.aux_f32.0", 0),
                 ws.bind_f32("qgemm.aux_f32.1", 0),

@@ -258,7 +258,11 @@ impl Default for NativeBackend {
 
 impl ExecBackend for NativeBackend {
     fn platform(&self) -> String {
-        format!("native-cpu/{}t", crate::tensor::pool::active_threads())
+        format!(
+            "native-cpu/{}t/{}",
+            crate::tensor::pool::active_threads(),
+            crate::tensor::simd::active().name()
+        )
     }
 
     fn entry_points(&self) -> Vec<String> {

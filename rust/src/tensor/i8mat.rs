@@ -1,14 +1,24 @@
 //! INT8 matrix with i32-accumulating integer matmul — the CPU analogue of
 //! the INT8 tensor-core (paper, CUDA) / MXU-int8 (our Pallas port) path.
 //!
+//! The packed fused-dequant matmul runs on the register-tiled,
+//! ISA-dispatched microkernels in [`simd`](super::simd): weights are
+//! repacked once into [`simd::NR`]-column panels and each
+//! [`simd::MR`]-row activation block streams every panel through AVX2 /
+//! NEON / scalar kernels selected at runtime (`QUAFF_ISA` overrides).
+//! Integer accumulation is exact, and the f32 dequant epilogue is applied
+//! per element in the legacy order, so every ISA and tile remainder is
+//! bit-identical to the scalar reference (`tests/simd_parity.rs`).
+//!
 //! The matmuls are row-sharded across [`pool`](super::pool): each shard owns
-//! a fixed range of activation rows and its own widening-scratch **lane**,
+//! a fixed range of activation rows and its own staging-scratch **lane**,
 //! so shards never share mutable state and the result is bit-identical to
 //! the serial loop (integer accumulation is exact anyway). The `_lanes_into`
 //! variants take one scratch buffer per potential shard, typically drawn
 //! from the workspace's lane pools.
 
 use super::pool::{self, shard_range, SplitMut};
+use super::simd;
 use crate::util::prng::Rng;
 
 /// Dense row-major i8 matrix.
@@ -109,41 +119,42 @@ impl I8Matrix {
         out
     }
 
-    /// Pack a weight matrix into the transposed-and-widened form the fast
-    /// matmul consumes: column-major i16 (§Perf: the i8→i32 sign-extension
-    /// in the naive inner loop quarters the effective SIMD width; widening
-    /// to i16 once lets LLVM use 16-bit multiply-add pairs, and the
-    /// transpose turns the reduction into contiguous dot products).
+    /// Pack a weight matrix into the panel-blocked, i16-widened form the
+    /// microkernels consume (§Perf: the i8→i32 sign-extension in the naive
+    /// inner loop quarters the effective SIMD width; widening to i16 once
+    /// enables 16-bit multiply-add pairs). Columns are grouped into panels
+    /// of [`simd::NR`], elements k-pair-interleaved within each panel, and
+    /// k zero-padded to even — see `tensor::simd` for the layout diagram.
+    /// Built once at quantization time, reused across every token, and
+    /// identical for every ISA (dispatch never repacks).
     pub fn pack_transposed(&self) -> PackedWeights {
         let (k, n) = (self.rows, self.cols);
-        let mut data = vec![0i16; n * k];
+        let kpad = k + (k & 1);
+        let npanels = n.div_ceil(simd::NR);
+        let mut data = vec![0i16; npanels * kpad * simd::NR];
         for kk in 0..k {
             let row = &self.data[kk * n..(kk + 1) * n];
+            let (kp, r) = (kk / 2, kk & 1);
             for (j, &v) in row.iter().enumerate() {
-                data[j * k + kk] = v as i16;
+                let (p, jj) = (j / simd::NR, j % simd::NR);
+                data[p * kpad * simd::NR + kp * 2 * simd::NR + jj * 2 + r] = v as i16;
             }
         }
-        PackedWeights { k, n, data }
+        PackedWeights {
+            k,
+            n,
+            kpad,
+            npanels,
+            data,
+        }
     }
 
-    /// Fast fused dequantizing matmul against pre-packed weights:
-    /// `out[i,j] += Δ_row[i] · dot(self[i,:], packedᵀ[:,j]) · Δ_col[j]`.
-    /// The activation row is widened to i16 once per row. Allocates its own
-    /// scratch lanes; hot-path callers use [`Self::matmul_dequant_packed_lanes_into`].
-    pub fn matmul_dequant_packed_into(
-        &self,
-        packed: &PackedWeights,
-        row_scale: &[f32],
-        col_scale: &[f32],
-        out: &mut [f32],
-    ) {
-        let n_lanes = pool::active_threads().max(1);
-        let mut lanes: Vec<Vec<i16>> = (0..n_lanes).map(|_| Vec::new()).collect();
-        self.matmul_dequant_packed_lanes_into(packed, row_scale, col_scale, &mut lanes, out);
-    }
-
-    /// [`Self::matmul_dequant_packed_into`] with the i16 activation-widening
-    /// scratch provided by the caller (resized as needed) — strictly serial.
+    /// Fused dequantizing matmul against pre-packed panel weights,
+    /// `out[i,j] += Δ_row[i] · dot(self[i,:], packedᵀ[:,j]) · Δ_col[j]`,
+    /// with the i16 activation-staging scratch provided by the caller
+    /// (resized as needed) — strictly serial. Row-sharded callers use
+    /// [`Self::matmul_dequant_packed_lanes_into`]; the fused plan pipeline
+    /// (`quant::pipeline`) uses the `_write` variants.
     pub fn matmul_dequant_packed_scratch_into(
         &self,
         packed: &PackedWeights,
@@ -158,9 +169,10 @@ impl I8Matrix {
         );
     }
 
-    /// Row-sharded [`Self::matmul_dequant_packed_into`] with one widening
-    /// lane per potential shard (at most `lanes.len()` shards run; pass the
-    /// workspace's per-thread lanes). Bit-identical to the serial path.
+    /// Row-sharded [`Self::matmul_dequant_packed_scratch_into`] with one
+    /// staging lane per potential shard (at most `lanes.len()` shards run;
+    /// pass the workspace's per-thread lanes). Bit-identical to the serial
+    /// path.
     pub fn matmul_dequant_packed_lanes_into(
         &self,
         packed: &PackedWeights,
@@ -208,7 +220,7 @@ impl I8Matrix {
 
     /// **Write-mode** [`Self::matmul_dequant_packed_lanes_into`]: fully
     /// overwrites `out` (see [`Self::matmul_dequant_packed_scratch_write`]);
-    /// row-sharded with one widening lane per potential shard.
+    /// row-sharded with one staging lane per potential shard.
     pub fn matmul_dequant_packed_lanes_write(
         &self,
         packed: &PackedWeights,
@@ -309,7 +321,10 @@ impl I8Matrix {
 }
 
 /// Row-range core of [`I8Matrix::matmul_i32`]: output rows `r0..r1` into
-/// `orows` (relative sub-slice).
+/// `orows` (relative sub-slice). Register-tiled over [`simd::MR`]-row
+/// blocks so each streamed B row is reused across the tile; the k-major
+/// accumulation order per output element is unchanged (exact integer math —
+/// any tiling is identical anyway).
 fn i8_matmul_rows(
     ad: &[i8],
     bd: &[i8],
@@ -320,28 +335,44 @@ fn i8_matmul_rows(
     n: usize,
 ) {
     orows.fill(0);
-    for i in r0..r1 {
-        let arow = &ad[i * k..(i + 1) * k];
-        let orow = &mut orows[(i - r0) * n..(i - r0 + 1) * n];
-        for (kk, &a) in arow.iter().enumerate() {
-            if a == 0 {
-                continue;
-            }
-            let a = a as i32;
+    let mut i = r0;
+    while i < r1 {
+        let mr = (r1 - i).min(simd::MR);
+        for kk in 0..k {
             let brow = &bd[kk * n..(kk + 1) * n];
-            for (o, &b) in orow.iter_mut().zip(brow) {
-                *o += a * b as i32;
+            for r in 0..mr {
+                let a = ad[(i + r) * k + kk];
+                if a == 0 {
+                    continue;
+                }
+                let a = a as i32;
+                let orow = &mut orows[(i + r - r0) * n..(i + r - r0 + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b as i32;
+                }
             }
         }
+        i += mr;
     }
 }
 
 /// Row-range core of the packed fused dequantizing matmul: rows `r0..r1`
-/// of the activation into the relative sub-slice `orows`. `WRITE = false`
-/// accumulates (`+=`, the legacy contract); `WRITE = true` overwrites with
-/// `0.0 + term` — the explicit `0.0 +` keeps the write mode bit-identical
-/// to accumulating into a zero-filled buffer (a plain `=` could differ in
-/// the sign of a zero result, and LLVM cannot fold `+0.0 + x` away).
+/// of the activation into the relative sub-slice `orows`.
+///
+/// Rows are staged into `a16` as an i16-widened [`simd::MR`]-row block
+/// (k zero-padded to the pack's even `kpad`), then each weight panel is
+/// streamed once per block through the ISA-dispatched microkernel
+/// ([`simd::panel_dot_tile`]) — [`simd::active`] selects AVX2 / NEON /
+/// scalar at runtime. The integer accumulators are exact and identical for
+/// every ISA and tile remainder, and the f32 epilogue below is the same
+/// per-element scalar expression as the legacy loop, so the output is
+/// bit-identical across ISAs, tilings, and thread counts.
+///
+/// `WRITE = false` accumulates (`+=`, the legacy contract); `WRITE = true`
+/// overwrites with `0.0 + term` — the explicit `0.0 +` keeps the write mode
+/// bit-identical to accumulating into a zero-filled buffer (a plain `=`
+/// could differ in the sign of a zero result, and LLVM cannot fold
+/// `+0.0 + x` away).
 #[allow(clippy::too_many_arguments)]
 fn packed_matmul_rows_core<const WRITE: bool>(
     xd: &[i8],
@@ -355,27 +386,44 @@ fn packed_matmul_rows_core<const WRITE: bool>(
     k: usize,
 ) {
     let n = packed.n;
-    a16.resize(k, 0);
-    for i in r0..r1 {
-        let arow = &xd[i * k..(i + 1) * k];
-        for (dst, &v) in a16.iter_mut().zip(arow) {
-            *dst = v as i16;
-        }
-        let rs = row_scale[i];
-        let orow = &mut orows[(i - r0) * n..(i - r0 + 1) * n];
-        for j in 0..n {
-            let brow = &packed.data[j * k..(j + 1) * k];
-            let mut acc = 0i32;
-            for (&a, &b) in a16.iter().zip(brow) {
-                acc += a as i32 * b as i32;
+    let kpad = packed.kpad;
+    let isa = simd::active();
+    a16.resize(simd::MR * kpad, 0);
+    let mut i = r0;
+    while i < r1 {
+        let mr = (r1 - i).min(simd::MR);
+        for r in 0..mr {
+            let arow = &xd[(i + r) * k..(i + r + 1) * k];
+            let dst = &mut a16[r * kpad..(r + 1) * kpad];
+            for (d, &v) in dst.iter_mut().zip(arow) {
+                *d = v as i16;
             }
-            let term = rs * acc as f32 * col_scale[j];
-            if WRITE {
-                orow[j] = 0.0 + term;
-            } else {
-                orow[j] += term;
+            for d in dst[k..].iter_mut() {
+                *d = 0;
             }
         }
+        let stage = &a16[..];
+        let mut acc = [[0i32; simd::NR]; simd::MR];
+        for p in 0..packed.npanels {
+            let panel = &packed.data[p * kpad * simd::NR..(p + 1) * kpad * simd::NR];
+            simd::panel_dot_tile(isa, stage, kpad, mr, panel, &mut acc);
+            let j0 = p * simd::NR;
+            let jend = (j0 + simd::NR).min(n);
+            for r in 0..mr {
+                let rs = row_scale[i + r];
+                let orow = &mut orows[(i + r - r0) * n..(i + r - r0 + 1) * n];
+                let acc_row = &acc[r];
+                for (jj, j) in (j0..jend).enumerate() {
+                    let term = rs * acc_row[jj] as f32 * col_scale[j];
+                    if WRITE {
+                        orow[j] = 0.0 + term;
+                    } else {
+                        orow[j] += term;
+                    }
+                }
+            }
+        }
+        i += mr;
     }
 }
 
@@ -395,12 +443,20 @@ fn packed_matmul_rows(
     packed_matmul_rows_core::<false>(xd, packed, row_scale, col_scale, a16, orows, r0, r1, k);
 }
 
-/// Weights in transposed, i16-widened, column-contiguous form — built once
-/// at quantization time, consumed by the fast integer matmul.
+/// Weights in transposed, i16-widened, **panel-blocked** form — built once
+/// at quantization time by [`I8Matrix::pack_transposed`], consumed by the
+/// ISA-dispatched microkernels (see `tensor::simd` for the layout). Columns
+/// live in panels of [`simd::NR`]; `k` is zero-padded to the even `kpad`.
+/// The layout is never serialized (`quant::QuantizedWeights::from_parts`
+/// re-derives it), so it can evolve without a persistence migration.
 #[derive(Clone, Debug)]
 pub struct PackedWeights {
     k: usize,
     n: usize,
+    /// `k` rounded up to even — the pair-interleaved reduction depth.
+    kpad: usize,
+    /// Number of [`simd::NR`]-column panels (`ceil(n / NR)`).
+    npanels: usize,
     data: Vec<i16>,
 }
 
@@ -413,7 +469,8 @@ impl PackedWeights {
         self.n
     }
 
-    /// Storage bytes (2 per element — counted as transient packing state).
+    /// Storage bytes (2 per element, padding included — counted as
+    /// transient packing state).
     pub fn nbytes(&self) -> usize {
         self.data.len() * 2
     }
@@ -438,9 +495,18 @@ mod tests {
             let mut want = vec![0.0f32; a.rows() * b.cols()];
             a.matmul_dequant_into(b, rs, cs, &mut want);
             let packed = b.pack_transposed();
+            let mut a16 = Vec::new();
             let mut got = vec![0.0f32; a.rows() * b.cols()];
-            a.matmul_dequant_packed_into(&packed, rs, cs, &mut got);
-            prop::all_close(&got, &want, 1e-5, 1e-5)
+            a.matmul_dequant_packed_scratch_into(&packed, rs, cs, &mut a16, &mut got);
+            prop::all_close(&got, &want, 1e-5, 1e-5)?;
+            // and the sharded variant lands the same bits
+            let mut lanes: Vec<Vec<i16>> = (0..4).map(|_| Vec::new()).collect();
+            let mut got_l = vec![0.0f32; a.rows() * b.cols()];
+            a.matmul_dequant_packed_lanes_into(&packed, rs, cs, &mut lanes, &mut got_l);
+            if got_l != got {
+                return Err("lanes variant differs from serial".to_string());
+            }
+            Ok(())
         });
     }
 
@@ -494,7 +560,8 @@ mod tests {
         }, |(a, b, rs, cs)| {
             let packed = b.pack_transposed();
             let mut want = vec![0.0f32; a.rows() * b.cols()];
-            a.matmul_dequant_packed_into(&packed, rs, cs, &mut want);
+            let mut a16_ref = Vec::new();
+            a.matmul_dequant_packed_scratch_into(&packed, rs, cs, &mut a16_ref, &mut want);
             // write mode over a dirty buffer must land the same bits
             let mut scratch = vec![0i16; 1];
             let mut got = vec![777.25f32; a.rows() * b.cols()];

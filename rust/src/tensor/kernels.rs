@@ -15,6 +15,13 @@
 //! bit-identical to single-threaded ones for *any* thread count (asserted by
 //! `tests/thread_determinism.rs`). Small launches (decode shapes, tiny
 //! matrices) fall below [`pool::MIN_SHARD_WORK`] and stay serial.
+//!
+//! The f32 kernels here rely on LLVM auto-vectorization of the blocked
+//! loops. The **int8 matmul tier** does not: its panel microkernels live in
+//! [`simd`](super::simd) with explicit runtime ISA dispatch (AVX2 / NEON /
+//! scalar), reached through the packed `I8Matrix` matmuls — this file only
+//! keeps the int8 *gather* ([`select_cols_i8_into`]), which is pure data
+//! movement and ISA-independent.
 
 use super::pool::{self, shard_range, SplitMut};
 use super::{I8Matrix, Matrix, BLOCK_J, BLOCK_K};
@@ -321,17 +328,25 @@ pub fn select_cols_into(src: &Matrix, idx: &[usize], out: &mut Matrix) {
 }
 
 /// Gather columns `idx` of an i8 matrix (`x̂_int = [X̂_int]_{:,O}`).
+/// Register-tiled over [`simd::MR`](super::simd::MR)-row blocks so each
+/// gather index is resolved once per block instead of once per row.
 pub fn select_cols_i8_into(src: &I8Matrix, idx: &[usize], out: &mut I8Matrix) {
     assert_eq!(
         (out.rows(), out.cols()),
         (src.rows(), idx.len()),
         "select_cols_i8 out shape mismatch"
     );
-    for i in 0..src.rows() {
-        let row = src.row(i);
-        let orow = out.row_mut(i);
-        for (o, &j) in orow.iter_mut().zip(idx) {
-            *o = row[j];
+    let (m, k, n) = (src.rows(), src.cols(), idx.len());
+    assert!(idx.iter().all(|&j| j < k), "gather index out of range");
+    let (sd, od) = (src.data(), out.data_mut());
+    let mut i = 0;
+    while i < m {
+        let mr = (m - i).min(super::simd::MR);
+        for (c, &j) in idx.iter().enumerate() {
+            for r in 0..mr {
+                od[(i + r) * n + c] = sd[(i + r) * k + j];
+            }
         }
+        i += mr;
     }
 }

@@ -7,7 +7,10 @@
 //! elementwise/reduction ops the transformer and the quantizers need.
 //!
 //! Everything is cache-blocked and written so LLVM auto-vectorizes the
-//! inner loops, and the hot kernels are **row-sharded** across the
+//! inner loops; the packed int8 matmul additionally runs on explicit
+//! register-tiled microkernels with runtime ISA dispatch ([`simd`]:
+//! AVX2 / NEON / scalar, `QUAFF_ISA` to override — bit-identical across
+//! ISAs). The hot kernels are **row-sharded** across the
 //! hand-rolled [`pool`] thread pool (`QUAFF_THREADS` / available
 //! parallelism): shards own fixed disjoint output ranges and run the same
 //! row-range cores as the serial path, so threaded results are
@@ -24,6 +27,7 @@ mod i8mat;
 pub mod kernels;
 mod matrix;
 pub mod pool;
+pub mod simd;
 mod workspace;
 
 pub use i8mat::{I8Matrix, PackedWeights};

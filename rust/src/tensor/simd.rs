@@ -1,0 +1,357 @@
+//! Register-tiled int8→i32 panel microkernels with runtime ISA dispatch.
+//!
+//! The packed fused-dequant matmul (`i8mat`) funnels every forward of every
+//! method through one inner loop. This module holds that loop's
+//! microkernels: each computes the i32 dot products of one (or a tile of
+//! [`MR`]) i16-widened activation rows against one **column panel** of the
+//! panel-blocked [`PackedWeights`](super::PackedWeights) layout.
+//!
+//! # Panel layout
+//!
+//! Weights are repacked **once** at quantization time into panels of
+//! [`NR`] = 8 output columns. Within a panel, elements are stored in
+//! *k-pair-interleaved* order (k is padded to even, `kpad`, with zeros):
+//!
+//! ```text
+//! panel p (columns j0 = 8p .. 8p+7), one 16-element group per k-pair kp:
+//!   [ w(2kp, j0) w(2kp+1, j0) | w(2kp, j0+1) w(2kp+1, j0+1) | … | w(2kp, j0+7) w(2kp+1, j0+7) ]
+//! ```
+//!
+//! One group is exactly one 256-bit AVX2 lane: `_mm256_madd_epi16` against a
+//! broadcast activation pair `[a(2kp), a(2kp+1)]×8` yields the 8 per-column
+//! partial dots in one instruction. The same groups feed NEON (`vmlal_s16`
+//! on 4-column halves, one pairwise fold at the end) and the scalar
+//! reference (an 8-accumulator register tile) — the layout is
+//! ISA-independent, so the active ISA can change at runtime without
+//! repacking.
+//!
+//! # Bit-identity contract
+//!
+//! Every kernel here produces the **same i32 accumulators** as the scalar
+//! reference: i16×i16 products (|a|,|b| ≤ 128, so each ≤ 16384) accumulated
+//! in i32 never overflow for any realistic k, and integer addition is
+//! associative — reassociating across SIMD lanes or tile shapes cannot
+//! change the result. The f32 work (`rs * acc * col_scale[j]`) stays a
+//! per-element scalar epilogue in `i8mat`, so *every* ISA, tile remainder,
+//! and thread count is bitwise identical to the legacy serial loop. Pinned
+//! by `tests/simd_parity.rs`.
+//!
+//! # Dispatch
+//!
+//! The active ISA is detected once ([`detect_best`]) on first use:
+//! AVX2 on x86_64 (runtime `is_x86_feature_detected!`), NEON on aarch64
+//! (architecturally mandatory), scalar elsewhere. `QUAFF_ISA`
+//! (`scalar`/`avx2`/`neon`) overrides detection — unknown or unavailable
+//! values panic loudly rather than silently falling back — and
+//! [`force`] switches in-process (parity tests, A/B benches).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Columns per packed panel (output-channel tile width).
+pub const NR: usize = 8;
+
+/// Activation rows per microkernel tile.
+pub const MR: usize = 4;
+
+/// Length of the row-staging scratch the packed matmul needs for a given
+/// reduction depth `k`: [`MR`] rows of `k` rounded up to even.
+pub fn packed_a16_len(k: usize) -> usize {
+    MR * (k + (k & 1))
+}
+
+/// Instruction-set architecture of the packed-matmul microkernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Isa {
+    /// Portable reference (8-accumulator register tile, auto-vectorizable).
+    Scalar = 1,
+    /// x86_64 AVX2 (`_mm256_madd_epi16`).
+    Avx2 = 2,
+    /// aarch64 NEON (`vmlal_s16` + pairwise fold).
+    Neon = 3,
+}
+
+impl Isa {
+    /// Stable lowercase tag — the `QUAFF_ISA` vocabulary, also surfaced in
+    /// the runtime backend name and the bench metadata.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+}
+
+/// `0` = not yet initialized; otherwise an `Isa` discriminant.
+static ACTIVE: AtomicU8 = AtomicU8::new(0);
+
+fn decode(v: u8) -> Isa {
+    match v {
+        2 => Isa::Avx2,
+        3 => Isa::Neon,
+        _ => Isa::Scalar,
+    }
+}
+
+/// Is `isa` usable on this machine?
+pub fn available(isa: Isa) -> bool {
+    match isa {
+        Isa::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => is_x86_feature_detected!("avx2"),
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => true,
+        #[allow(unreachable_patterns)] // covers the foreign-arch variants
+        _ => false,
+    }
+}
+
+/// Best ISA this machine supports (ignores `QUAFF_ISA`).
+#[allow(unreachable_code)] // the aarch64 arm returns early
+pub fn detect_best() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return Isa::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return Isa::Neon;
+    }
+    Isa::Scalar
+}
+
+fn parse(tag: &str) -> Option<Isa> {
+    match tag.to_ascii_lowercase().as_str() {
+        "scalar" => Some(Isa::Scalar),
+        "avx2" => Some(Isa::Avx2),
+        "neon" => Some(Isa::Neon),
+        _ => None,
+    }
+}
+
+fn init_from_env() -> Isa {
+    match std::env::var("QUAFF_ISA") {
+        Ok(tag) if !tag.trim().is_empty() => {
+            let tag = tag.trim();
+            let isa = parse(tag).unwrap_or_else(|| {
+                panic!("QUAFF_ISA='{tag}' is not one of scalar/avx2/neon")
+            });
+            assert!(
+                available(isa),
+                "QUAFF_ISA='{tag}' requested but {} is not available on this machine",
+                isa.name()
+            );
+            isa
+        }
+        _ => detect_best(),
+    }
+}
+
+/// The active ISA: `QUAFF_ISA` if set, otherwise [`detect_best`], resolved
+/// once on first call and cached.
+pub fn active() -> Isa {
+    match ACTIVE.load(Ordering::Relaxed) {
+        0 => {
+            let isa = init_from_env();
+            ACTIVE.store(isa as u8, Ordering::Relaxed);
+            isa
+        }
+        v => decode(v),
+    }
+}
+
+/// Force the active ISA in-process (parity tests, A/B benches). Returns the
+/// previously active ISA so callers can restore it.
+///
+/// Panics if `isa` is not [`available`] on this machine. Not meant to be
+/// raced against in-flight matmuls — flip it between launches.
+pub fn force(isa: Isa) -> Isa {
+    assert!(available(isa), "cannot force unavailable ISA {}", isa.name());
+    let prev = active();
+    ACTIVE.store(isa as u8, Ordering::Relaxed);
+    prev
+}
+
+/// Scalar reference microkernel: dots of one widened activation row
+/// (`a.len()` = kpad, even) against one panel (`panel.len()` = kpad·NR).
+/// An 8-wide accumulator register tile reading the panel sequentially —
+/// every other kernel must reproduce these exact i32 values.
+pub fn panel_dot_scalar(a: &[i16], panel: &[i16], acc: &mut [i32; NR]) {
+    *acc = [0; NR];
+    for (kp, grp) in panel.chunks_exact(2 * NR).enumerate() {
+        let a0 = a[2 * kp] as i32;
+        let a1 = a[2 * kp + 1] as i32;
+        for (jj, d) in acc.iter_mut().enumerate() {
+            *d += a0 * grp[2 * jj] as i32 + a1 * grp[2 * jj + 1] as i32;
+        }
+    }
+}
+
+/// The broadcast activation k-pair `[a(2kp), a(2kp+1)]` as one i32 word
+/// (little-endian lane order: low half = even-k element).
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+fn pair_word(a: &[i16], kp: usize) -> i32 {
+    ((a[2 * kp] as u16 as u32) | ((a[2 * kp + 1] as u16 as u32) << 16)) as i32
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{pair_word, NR};
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller must have verified AVX2 is available (`super::available`).
+    /// `a.len()` must be even and `panel.len() == a.len() * NR`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn panel_dot(a: &[i16], panel: &[i16], acc: &mut [i32; NR]) {
+        let bp = panel.as_ptr();
+        let mut v = _mm256_setzero_si256();
+        for kp in 0..a.len() / 2 {
+            let av = _mm256_set1_epi32(pair_word(a, kp));
+            let bv = _mm256_loadu_si256(bp.add(kp * 2 * NR) as *const __m256i);
+            v = _mm256_add_epi32(v, _mm256_madd_epi16(av, bv));
+        }
+        _mm256_storeu_si256(acc.as_mut_ptr() as *mut __m256i, v);
+    }
+
+    /// Four activation rows (stride `kpad` in `a`) against one panel,
+    /// sharing each panel-group load across the row tile.
+    ///
+    /// # Safety
+    /// As [`panel_dot`]; additionally `a.len() >= 4 * kpad`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn panel_dot4(a: &[i16], kpad: usize, panel: &[i16], acc: &mut [[i32; NR]; 4]) {
+        let bp = panel.as_ptr();
+        let r0 = &a[..kpad];
+        let r1 = &a[kpad..2 * kpad];
+        let r2 = &a[2 * kpad..3 * kpad];
+        let r3 = &a[3 * kpad..4 * kpad];
+        let mut v0 = _mm256_setzero_si256();
+        let mut v1 = _mm256_setzero_si256();
+        let mut v2 = _mm256_setzero_si256();
+        let mut v3 = _mm256_setzero_si256();
+        for kp in 0..kpad / 2 {
+            let bv = _mm256_loadu_si256(bp.add(kp * 2 * NR) as *const __m256i);
+            v0 = _mm256_add_epi32(v0, _mm256_madd_epi16(_mm256_set1_epi32(pair_word(r0, kp)), bv));
+            v1 = _mm256_add_epi32(v1, _mm256_madd_epi16(_mm256_set1_epi32(pair_word(r1, kp)), bv));
+            v2 = _mm256_add_epi32(v2, _mm256_madd_epi16(_mm256_set1_epi32(pair_word(r2, kp)), bv));
+            v3 = _mm256_add_epi32(v3, _mm256_madd_epi16(_mm256_set1_epi32(pair_word(r3, kp)), bv));
+        }
+        _mm256_storeu_si256(acc[0].as_mut_ptr() as *mut __m256i, v0);
+        _mm256_storeu_si256(acc[1].as_mut_ptr() as *mut __m256i, v1);
+        _mm256_storeu_si256(acc[2].as_mut_ptr() as *mut __m256i, v2);
+        _mm256_storeu_si256(acc[3].as_mut_ptr() as *mut __m256i, v3);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::{pair_word, NR};
+    use std::arch::aarch64::*;
+
+    /// # Safety
+    /// NEON is architecturally mandatory on aarch64; `a.len()` must be even
+    /// and `panel.len() == a.len() * NR` (raw pointer loads).
+    pub unsafe fn panel_dot(a: &[i16], panel: &[i16], acc: &mut [i32; NR]) {
+        let bp = panel.as_ptr();
+        // Four widening accumulators keep the a0·w(2kp,·) / a1·w(2kp+1,·)
+        // partials in interleaved lane position; one pairwise fold at the
+        // end turns them into the 8 column dots.
+        let mut acc01 = vdupq_n_s32(0);
+        let mut acc23 = vdupq_n_s32(0);
+        let mut acc45 = vdupq_n_s32(0);
+        let mut acc67 = vdupq_n_s32(0);
+        for kp in 0..a.len() / 2 {
+            let av = vreinterpret_s16_s32(vdup_n_s32(pair_word(a, kp)));
+            let b0 = vld1q_s16(bp.add(kp * 2 * NR));
+            let b1 = vld1q_s16(bp.add(kp * 2 * NR + 8));
+            acc01 = vmlal_s16(acc01, vget_low_s16(b0), av);
+            acc23 = vmlal_s16(acc23, vget_high_s16(b0), av);
+            acc45 = vmlal_s16(acc45, vget_low_s16(b1), av);
+            acc67 = vmlal_s16(acc67, vget_high_s16(b1), av);
+        }
+        vst1q_s32(acc.as_mut_ptr(), vpaddq_s32(acc01, acc23));
+        vst1q_s32(acc.as_mut_ptr().add(4), vpaddq_s32(acc45, acc67));
+    }
+}
+
+/// ISA-dispatched single-row microkernel. `a.len()` must be even (the kpad
+/// contract) and `panel.len() == a.len() * NR`.
+#[inline]
+pub(crate) fn panel_dot(isa: Isa, a: &[i16], panel: &[i16], acc: &mut [i32; NR]) {
+    debug_assert_eq!(a.len() % 2, 0);
+    debug_assert_eq!(panel.len(), a.len() * NR);
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::panel_dot(a, panel, acc) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { arm::panel_dot(a, panel, acc) },
+        _ => panel_dot_scalar(a, panel, acc),
+    }
+}
+
+/// ISA-dispatched row-tile microkernel: `mr` (≤ [`MR`]) staged rows of
+/// stride `kpad` in `a` against one panel. Only `acc[..mr]` is written.
+#[inline]
+pub(crate) fn panel_dot_tile(
+    isa: Isa,
+    a: &[i16],
+    kpad: usize,
+    mr: usize,
+    panel: &[i16],
+    acc: &mut [[i32; NR]; MR],
+) {
+    #[cfg(target_arch = "x86_64")]
+    if isa == Isa::Avx2 && mr == MR {
+        unsafe { x86::panel_dot4(a, kpad, panel, acc) };
+        return;
+    }
+    for (r, acc_row) in acc.iter_mut().enumerate().take(mr) {
+        panel_dot(isa, &a[r * kpad..(r + 1) * kpad], panel, acc_row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_roundtrips_through_parse() {
+        for isa in [Isa::Scalar, Isa::Avx2, Isa::Neon] {
+            assert_eq!(parse(isa.name()), Some(isa));
+        }
+        assert_eq!(parse("sse9"), None);
+    }
+
+    #[test]
+    fn detect_best_is_available_and_active_is_stable() {
+        assert!(available(detect_best()));
+        assert!(available(Isa::Scalar));
+        let a = active();
+        assert_eq!(active(), a, "active ISA must be cached");
+    }
+
+    #[test]
+    fn scalar_kernel_matches_naive_dot() {
+        // 3 k-pairs, saturated corners included
+        let a: Vec<i16> = vec![127, -128, 5, 0, -127, 127];
+        let mut panel = vec![0i16; a.len() * NR];
+        for kk in 0..a.len() {
+            for jj in 0..NR {
+                panel[(kk / 2) * 2 * NR + jj * 2 + (kk & 1)] = ((kk * NR + jj) as i16) - 11;
+            }
+        }
+        let mut acc = [7i32; NR];
+        panel_dot_scalar(&a, &panel, &mut acc);
+        for (jj, &got) in acc.iter().enumerate() {
+            let want: i32 = (0..a.len())
+                .map(|kk| a[kk] as i32 * ((kk * NR + jj) as i32 - 11))
+                .sum();
+            assert_eq!(got, want, "column {jj}");
+        }
+    }
+}

@@ -1,0 +1,181 @@
+//! SIMD-vs-scalar bit-identity (ISSUE 6 acceptance): every dispatched
+//! microkernel ISA must produce **bitwise identical** f32 outputs to the
+//! scalar reference, across random shapes, tile remainders (k odd, n not a
+//! multiple of the panel width, m not a multiple of the row tile),
+//! zero-row/zero-col inputs, saturated ±127 inputs, and thread counts.
+//!
+//! The integer accumulators are exact (i16×i16→i32 never overflows at
+//! these depths, and integer addition is associative), and the f32 dequant
+//! epilogue is a fixed per-element scalar expression, so this holds as an
+//! equality — not a tolerance check.
+//!
+//! This file holds a single test: `tensor::simd::force` flips a
+//! process-global dispatch switch, so concurrent tests in the same binary
+//! would race it.
+
+use quaff::tensor::{pool, simd, I8Matrix};
+use quaff::util::prng::Rng;
+
+/// All ISAs this machine can run (scalar always; AVX2/NEON when detected).
+fn available_isas() -> Vec<simd::Isa> {
+    [simd::Isa::Scalar, simd::Isa::Avx2, simd::Isa::Neon]
+        .into_iter()
+        .filter(|&i| simd::available(i))
+        .collect()
+}
+
+struct Case {
+    label: String,
+    a: I8Matrix,
+    b: I8Matrix,
+    rs: Vec<f32>,
+    cs: Vec<f32>,
+}
+
+fn random_case(label: &str, rng: &mut Rng, m: usize, k: usize, n: usize) -> Case {
+    Case {
+        label: format!("{label} {m}x{k}x{n}"),
+        a: I8Matrix::random(m, k, rng),
+        b: I8Matrix::random(k, n, rng),
+        rs: (0..m).map(|_| rng.range(0.001, 0.1)).collect(),
+        cs: (0..n).map(|_| rng.range(0.001, 0.1)).collect(),
+    }
+}
+
+fn saturated_case(m: usize, k: usize, n: usize) -> Case {
+    // worst-case accumulator growth: every product is ±127·127
+    let a = I8Matrix::from_vec(
+        m,
+        k,
+        (0..m * k).map(|i| if i % 2 == 0 { 127 } else { -127 }).collect(),
+    );
+    let b = I8Matrix::from_vec(
+        k,
+        n,
+        (0..k * n).map(|i| if i % 3 == 0 { -127 } else { 127 }).collect(),
+    );
+    Case {
+        label: format!("saturated {m}x{k}x{n}"),
+        a,
+        b,
+        rs: vec![0.07; m],
+        cs: vec![0.05; n],
+    }
+}
+
+fn zero_case(m: usize, k: usize, n: usize) -> Case {
+    Case {
+        label: format!("zeros {m}x{k}x{n}"),
+        a: I8Matrix::zeros(m, k),
+        b: I8Matrix::zeros(k, n),
+        rs: vec![0.5; m],
+        cs: vec![0.5; n],
+    }
+}
+
+/// Outputs of every packed-matmul entry point plus the raw integer matmul,
+/// computed under whatever ISA is currently forced.
+struct Outputs {
+    write_serial: Vec<f32>,
+    write_sharded: Vec<f32>,
+    acc_serial: Vec<f32>,
+    acc_sharded: Vec<f32>,
+    i32_raw: Vec<i32>,
+}
+
+fn run_case(case: &Case) -> Outputs {
+    let (m, n) = (case.a.rows(), case.b.cols());
+    let packed = case.b.pack_transposed();
+    let (rs, cs) = (&case.rs[..], &case.cs[..]);
+    // dirty output + dirty scratch: write mode must fully overwrite
+    let mut write_serial = vec![777.25f32; m * n];
+    let mut scratch = vec![-5i16; 3];
+    case.a.matmul_dequant_packed_scratch_write(&packed, rs, cs, &mut scratch, &mut write_serial);
+    let mut write_sharded = vec![-3.5f32; m * n];
+    let mut lanes: Vec<Vec<i16>> = (0..4).map(|_| Vec::new()).collect();
+    case.a.matmul_dequant_packed_lanes_write(&packed, rs, cs, &mut lanes, &mut write_sharded);
+    // accumulate mode on a fixed non-trivial base
+    let base: Vec<f32> = (0..m * n).map(|i| (i % 13) as f32 * 0.25 - 1.5).collect();
+    let mut acc_serial = base.clone();
+    case.a.matmul_dequant_packed_scratch_into(&packed, rs, cs, &mut scratch, &mut acc_serial);
+    let mut acc_sharded = base;
+    case.a.matmul_dequant_packed_lanes_into(&packed, rs, cs, &mut lanes, &mut acc_sharded);
+    Outputs {
+        write_serial,
+        write_sharded,
+        acc_serial,
+        acc_sharded,
+        i32_raw: case.a.matmul_i32(&case.b),
+    }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Assert `got` is bitwise identical to `want` on every entry point, and
+/// that the serial and sharded write paths agree with each other.
+fn assert_identical(got: &Outputs, want: &Outputs, tag: &str) {
+    let pairs = [
+        ("write/serial", &got.write_serial, &want.write_serial),
+        ("write/sharded", &got.write_sharded, &want.write_sharded),
+        ("acc/serial", &got.acc_serial, &want.acc_serial),
+        ("acc/sharded", &got.acc_sharded, &want.acc_sharded),
+    ];
+    for (what, g, w) in pairs {
+        assert_eq!(bits(g), bits(w), "{what} {tag}");
+    }
+    assert_eq!(got.i32_raw, want.i32_raw, "matmul_i32 {tag}");
+    // write == zero-fill+accumulate contract holds under every ISA
+    let (s, sh) = (&got.write_serial, &got.write_sharded);
+    assert_eq!(bits(s), bits(sh), "serial==sharded {tag}");
+}
+
+#[test]
+fn every_isa_is_bitwise_identical_to_scalar() {
+    let isas = available_isas();
+    let initial = simd::active();
+    println!("simd_parity: active={}, testing {isas:?}", initial.name());
+
+    let mut rng = Rng::new(0x51D);
+    let mut cases = Vec::new();
+    // random shapes, deliberately off the MR=4 / NR=8 / k-even grid
+    for _ in 0..12 {
+        let (m, k, n) = (1 + rng.below(17), 1 + rng.below(97), 1 + rng.below(83));
+        cases.push(random_case("random", &mut rng, m, k, n));
+    }
+    // exact-grid and remainder corners
+    for (m, k, n) in [
+        (4, 2, 8),   // one full tile exactly
+        (8, 64, 16), // multiple full tiles
+        (5, 3, 9),   // +1 remainders in every dimension
+        (3, 7, 7),   // everything under one tile
+        (1, 1, 1),   // minimal
+        (1, 128, 8), // single row (decode shape), even k
+        (1, 127, 8), // single row, odd k (pair padding)
+        (9, 33, 1),  // single output column
+        (2, 1, 24),  // k=1: only the padded half of one k-pair
+    ] {
+        cases.push(random_case("corner", &mut rng, m, k, n));
+    }
+    cases.push(saturated_case(6, 200, 24));
+    cases.push(saturated_case(1, 333, 7));
+    cases.push(zero_case(3, 5, 11));
+
+    // scalar reference first, at 1 and 4 threads (sharded entry points
+    // shard only above the work threshold; both must match regardless)
+    for &threads in &[1usize, 4] {
+        pool::set_active_threads(threads);
+        simd::force(simd::Isa::Scalar);
+        let reference: Vec<Outputs> = cases.iter().map(run_case).collect();
+        for &isa in &isas {
+            simd::force(isa);
+            for (case, want) in cases.iter().zip(&reference) {
+                let got = run_case(case);
+                let tag = format!("{} [{} vs scalar, {threads}t]", case.label, isa.name());
+                assert_identical(&got, want, &tag);
+            }
+        }
+    }
+    simd::force(initial);
+}

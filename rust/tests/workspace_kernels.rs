@@ -196,7 +196,8 @@ fn packed_matmul_scratch_reuse_bit_exact() {
         |(a, b, rs, cs)| {
             let packed = b.pack_transposed();
             let mut want = vec![0.0f32; a.rows() * b.cols()];
-            a.matmul_dequant_packed_into(&packed, rs, cs, &mut want);
+            let mut lanes: Vec<Vec<i16>> = (0..4).map(|_| Vec::new()).collect();
+            a.matmul_dequant_packed_lanes_into(&packed, rs, cs, &mut lanes, &mut want);
             // dirty, oversized scratch from a previous (larger) call
             let mut scratch = vec![-5i16; a.cols() + 17];
             let mut got = vec![0.0f32; a.rows() * b.cols()];

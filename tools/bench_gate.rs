@@ -17,6 +17,13 @@
 //!   mode: it passes and prints how to promote the fresh numbers.
 //! * `--update` rewrites the baseline from the fresh records (run benches
 //!   on the reference runner class, then commit the result).
+//! * Records stamped with a `meta` block (ISA / tile / threads — see
+//!   `BENCH_qgemm.json`) carry their measurement context. The gate
+//!   **refuses to compare** (exit 2) when the baseline and fresh records
+//!   were measured under different microkernel ISAs: ns across ISAs is a
+//!   machine delta, not a regression — re-seed with `--update` on the
+//!   matching runner class instead. The stamp is propagated into the
+//!   baseline on `--update`; unstamped legacy records compare as before.
 //!
 //! See DESIGN.md §CI for the refresh workflow.
 
@@ -135,14 +142,33 @@ fn findings_to_json(findings: &[Finding], tol: f64, pass: bool) -> Json {
     ])
 }
 
-fn baseline_json(entries: &BTreeMap<String, f64>, tol: f64) -> Json {
-    Json::obj(vec![
-        ("tolerance", Json::num(tol)),
-        (
-            "entries",
-            Json::Obj(entries.iter().map(|(k, &v)| (k.clone(), Json::num(v))).collect()),
-        ),
-    ])
+fn baseline_json(entries: &BTreeMap<String, f64>, tol: f64, meta: Option<&Json>) -> Json {
+    let mut pairs = vec![("tolerance", Json::num(tol))];
+    if let Some(m) = meta {
+        pairs.push(("meta", m.clone()));
+    }
+    pairs.push((
+        "entries",
+        Json::Obj(entries.iter().map(|(k, &v)| (k.clone(), Json::num(v))).collect()),
+    ));
+    Json::obj(pairs)
+}
+
+/// The `isa` tag of a `meta` stamp object, if present.
+fn isa_of(meta: &Json) -> Option<String> {
+    meta.get("isa")?.as_str().map(str::to_string)
+}
+
+/// The `meta.isa` stamp of a bench record or baseline file, if present.
+fn meta_isa(j: &Json) -> Option<String> {
+    j.get("meta").and_then(isa_of)
+}
+
+/// Comparing ns across microkernel ISAs is a machine delta, not a
+/// regression — refuse when both sides are stamped and disagree.
+/// Unstamped (`None`) legacy records compare with anything.
+fn isa_conflict(baseline: Option<&str>, fresh: Option<&str>) -> bool {
+    matches!((baseline, fresh), (Some(b), Some(f)) if b != f)
 }
 
 struct Args {
@@ -199,10 +225,26 @@ fn main() -> ExitCode {
     // fresh records (missing files are tolerated here; the baseline check
     // below catches a silently-skipped bench)
     let mut fresh = BTreeMap::new();
+    let mut fresh_meta: Option<Json> = None;
     for path in &args.fresh {
         match std::fs::read_to_string(path) {
             Ok(text) => match Json::parse(&text) {
-                Ok(j) => fresh.extend(extract_entries(&j)),
+                Ok(j) => {
+                    if let Some(isa) = meta_isa(&j) {
+                        let prev = fresh_meta.as_ref().and_then(isa_of);
+                        if let Some(prev) = prev {
+                            if prev != isa {
+                                eprintln!(
+                                    "bench_gate: fresh records span multiple ISAs ({prev} vs \
+                                     {isa} in {path}) — run all benches in one environment"
+                                );
+                                return ExitCode::from(2);
+                            }
+                        }
+                        fresh_meta = j.get("meta").cloned();
+                    }
+                    fresh.extend(extract_entries(&j));
+                }
                 Err(e) => {
                     eprintln!("bench_gate: cannot parse {path}: {e}");
                     return ExitCode::from(2);
@@ -213,7 +255,7 @@ fn main() -> ExitCode {
     }
 
     // baseline
-    let (baseline, file_tol) = match std::fs::read_to_string(&args.baseline) {
+    let (baseline, file_tol, baseline_isa) = match std::fs::read_to_string(&args.baseline) {
         Ok(text) => match Json::parse(&text) {
             Ok(j) => {
                 let tol = j.get("tolerance").and_then(Json::as_f64);
@@ -225,7 +267,8 @@ fn main() -> ExitCode {
                         }
                     }
                 }
-                (map, tol)
+                let isa = meta_isa(&j);
+                (map, tol, isa)
             }
             Err(e) => {
                 eprintln!("bench_gate: cannot parse {}: {e}", args.baseline);
@@ -247,7 +290,7 @@ fn main() -> ExitCode {
             );
             return ExitCode::from(2);
         }
-        let out = baseline_json(&fresh, tol);
+        let out = baseline_json(&fresh, tol, fresh_meta.as_ref());
         if let Err(e) = std::fs::write(&args.baseline, format!("{}\n", out.to_string())) {
             eprintln!("bench_gate: cannot write {}: {e}", args.baseline);
             return ExitCode::from(2);
@@ -258,6 +301,18 @@ fn main() -> ExitCode {
             fresh.len()
         );
         return ExitCode::SUCCESS;
+    }
+
+    let fresh_isa = fresh_meta.as_ref().and_then(isa_of);
+    if !baseline.is_empty() && isa_conflict(baseline_isa.as_deref(), fresh_isa.as_deref()) {
+        eprintln!(
+            "bench_gate: ISA mismatch — baseline was measured under '{}', fresh records under \
+             '{}'. Cross-ISA ns deltas are machine differences, not regressions; refusing to \
+             compare. Re-seed on the matching runner class with `bench_gate --update`.",
+            baseline_isa.as_deref().unwrap_or("?"),
+            fresh_isa.as_deref().unwrap_or("?")
+        );
+        return ExitCode::from(2);
     }
 
     let findings = compare(&baseline, &fresh, tol);
@@ -365,9 +420,10 @@ mod tests {
     #[test]
     fn baseline_roundtrips_through_json() {
         let entries = map(&[("k/a/ns", 12.5), ("t/b/t4", 7.0)]);
-        let text = baseline_json(&entries, 0.25).to_string();
+        let text = baseline_json(&entries, 0.25, None).to_string();
         let j = Json::parse(&text).unwrap();
         assert_eq!(j.get("tolerance").and_then(Json::as_f64), Some(0.25));
+        assert_eq!(j.get("meta"), None, "no meta key when no stamp was supplied");
         let mut back = BTreeMap::new();
         if let Some(Json::Obj(m)) = j.get("entries") {
             for (k, v) in m {
@@ -375,5 +431,41 @@ mod tests {
             }
         }
         assert_eq!(back, entries);
+    }
+
+    #[test]
+    fn meta_isa_reads_the_stamp_and_tolerates_legacy_records() {
+        let stamped = Json::parse(
+            r#"{"bench":"qgemm","meta":{"isa":"avx2","tile":"4x8","threads":8},"kernels":[]}"#,
+        )
+        .unwrap();
+        assert_eq!(meta_isa(&stamped), Some("avx2".to_string()));
+        let legacy = Json::parse(r#"{"bench":"kernels","kernels":[]}"#).unwrap();
+        assert_eq!(meta_isa(&legacy), None);
+        let partial =
+            Json::parse(r#"{"bench":"qgemm","meta":{"threads":8},"kernels":[]}"#).unwrap();
+        assert_eq!(meta_isa(&partial), None);
+    }
+
+    #[test]
+    fn isa_conflict_only_when_both_stamped_and_different() {
+        assert!(isa_conflict(Some("avx2"), Some("scalar")));
+        assert!(!isa_conflict(Some("avx2"), Some("avx2")));
+        assert!(!isa_conflict(None, Some("avx2")), "unstamped baseline compares");
+        assert!(!isa_conflict(Some("avx2"), None), "unstamped fresh compares");
+        assert!(!isa_conflict(None, None));
+    }
+
+    #[test]
+    fn baseline_stores_the_meta_stamp_on_update() {
+        let entries = map(&[("q/fused decode b1 th1/ns_per_op", 900.0)]);
+        let meta = Json::parse(r#"{"isa":"avx2","tile":"4x8","threads":8}"#).unwrap();
+        let text = baseline_json(&entries, 0.25, Some(&meta)).to_string();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(meta_isa(&j), Some("avx2".to_string()));
+        assert_eq!(
+            j.get("meta").and_then(|m| m.get("tile")).and_then(Json::as_str),
+            Some("4x8")
+        );
     }
 }
