@@ -10,7 +10,7 @@
 #[path = "harness.rs"]
 mod harness;
 
-use harness::{write_infer_json, InferRecord};
+use harness::{write_infer_json, BenchMeta, InferRecord};
 use quaff::infer::{BatchEngine, GenerateConfig, Request};
 use quaff::methods::{MethodConfig, MethodKind};
 use quaff::model::{Model, ModelConfig};
@@ -177,7 +177,7 @@ fn main() {
     );
 
     let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_infer.json");
-    match write_infer_json(&out, "e2e-small", "Quaff", &records) {
+    match write_infer_json(&out, "e2e-small", "Quaff", &BenchMeta::current(), &records) {
         Ok(()) => println!("\nwrote {}", out.display()),
         Err(e) => eprintln!("could not write BENCH_infer.json: {e}"),
     }

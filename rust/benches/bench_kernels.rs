@@ -12,7 +12,7 @@
 #[path = "harness.rs"]
 mod harness;
 
-use harness::{bench, write_kernels_json, KernelPair};
+use harness::{bench, write_kernels_json, BenchMeta, KernelPair};
 use quaff::methods::{QuantMethod, QuaffLinear};
 use quaff::outlier::OutlierSet;
 use quaff::quant;
@@ -234,7 +234,7 @@ fn main() {
     println!("\nworkspace-vs-alloc geomean speedup: {:.2}x", geomean.exp());
 
     let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_kernels.json");
-    match write_kernels_json(&out, "e2e-small", &pairs) {
+    match write_kernels_json(&out, "e2e-small", &BenchMeta::current(), &pairs) {
         Ok(()) => println!("wrote {}", out.display()),
         Err(e) => eprintln!("could not write BENCH_kernels.json: {e}"),
     }

@@ -1,0 +1,187 @@
+//! Serving-tier load generator: replay thousands of synthetic clients
+//! with seeded mixed prompt/generation lengths and arrival times against
+//! `infer::Server`, and report request-latency percentiles (p50/p99),
+//! tokens/sec, mean decode-batch occupancy and the page-pool high-water
+//! mark.
+//!
+//! The schedule is **logical**: arrivals are expressed in pump rounds and
+//! every scheduling decision (admission, paging, preemption) is
+//! deterministic, so pages_hwm / preemptions are exact scenario
+//! invariants and only the wall-clock latency/throughput numbers vary by
+//! machine. Emits `BENCH_serve.json` (p50_ns / p99_ns / ns_per_op /
+//! pages_hwm as gate-comparable metrics) at the workspace root for
+//! `tools/bench_gate`.
+//!
+//!     cargo bench --bench bench_serve
+//!
+//! `QUAFF_SERVE_CLIENTS` overrides the client count (default 2000; CI
+//! uses a smaller scenario to keep the gate leg fast).
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{write_serve_json, BenchMeta, ServeRecord};
+use quaff::infer::{GenerateConfig, Request, Server, SubmitError};
+use quaff::methods::{MethodConfig, MethodKind};
+use quaff::model::{Model, ModelConfig};
+use quaff::outlier::{BudgetAllocator, BudgetPolicy, OutlierDetector};
+use quaff::tensor::pool;
+use quaff::util::prng::Rng;
+use std::time::Instant;
+
+const SLOTS: usize = 16;
+const PAGE_ROWS: usize = 16;
+const N_PAGES: usize = 40; // 640 pooled rows — oversubscribed vs 16×512
+const QUEUE_CAP: usize = 64;
+const WORKLOAD_SEED: u64 = 0x5E17E;
+
+/// One synthetic client: arrival round plus request shape.
+struct Client {
+    arrival: u64,
+    prompt: Vec<u32>,
+    max_new: usize,
+}
+
+/// Calibrate + quantize an opt-tiny model under Quaff (the serving-scale
+/// preset — the load generator measures scheduling, not matmul width).
+fn build_model() -> Model {
+    let cfg = ModelConfig::preset("opt-tiny").expect("preset");
+    let mut m = Model::new(cfg, 0xBE5C);
+    let mut r = Rng::new(0xCA11B);
+    m.start_calibration();
+    for _ in 0..2 {
+        let toks: Vec<Vec<u32>> = (0..2)
+            .map(|_| (0..32).map(|_| r.below(m.cfg.vocab) as u32).collect())
+            .collect();
+        let _ = m.forward(&toks, false);
+    }
+    let calib = m.finish_calibration();
+    let alloc = BudgetAllocator::new(BudgetPolicy::PaperNonUniform);
+    let det = OutlierDetector::new(20.0);
+    let _ = m.apply_method(
+        MethodKind::Quaff,
+        &calib,
+        &alloc,
+        &MethodConfig::default(),
+        &det,
+    );
+    m
+}
+
+/// Seeded open-loop workload: `n` clients with mixed prompt (4..24) and
+/// generation (2..12) lengths, arrivals spread over `n / 2` rounds
+/// (~2 arrivals/round — around the engine's service rate, so queueing and
+/// paging pressure are both exercised). Sorted by arrival.
+fn workload(n: usize, vocab: usize) -> Vec<Client> {
+    let mut rng = Rng::new(WORKLOAD_SEED);
+    let span = (n as u64 / 2).max(1);
+    let mut clients: Vec<Client> = (0..n)
+        .map(|_| {
+            let plen = 4 + rng.below(20) as usize;
+            let prompt = (0..plen).map(|_| rng.below(vocab) as u32).collect();
+            let max_new = 2 + rng.below(10) as usize;
+            Client {
+                arrival: rng.below(span),
+                prompt,
+                max_new,
+            }
+        })
+        .collect();
+    clients.sort_by_key(|c| c.arrival);
+    clients
+}
+
+/// Drive one scenario to completion and measure it end to end.
+fn run_scenario(name: &str, model: &Model, mut srv: Server, clients: &[Client]) -> ServeRecord {
+    let mut arrive: Vec<Option<Instant>> = vec![None; clients.len()];
+    let mut lat_ns: Vec<f64> = vec![0.0; clients.len()];
+    let mut generated = 0u64;
+    let mut queue_full_rounds = 0u64;
+    let mut next = 0usize;
+    let t0 = Instant::now();
+    loop {
+        while next < clients.len() && clients[next].arrival <= srv.now() {
+            let c = &clients[next];
+            // latency clock starts at arrival, so backpressure retries
+            // (QueueFull) stay inside the measured request latency
+            if arrive[next].is_none() {
+                arrive[next] = Some(Instant::now());
+            }
+            let req = Request {
+                id: next as u64,
+                prompt: c.prompt.clone(),
+                max_new: c.max_new,
+            };
+            match srv.submit(req) {
+                Ok(_) => next += 1,
+                Err(SubmitError::QueueFull) => {
+                    queue_full_rounds += 1;
+                    break;
+                }
+            }
+        }
+        let busy = srv.pump(model);
+        for c in srv.drain_finished() {
+            let since = arrive[c.id as usize].expect("finished before arriving?");
+            lat_ns[c.id as usize] = since.elapsed().as_secs_f64() * 1e9;
+            generated += c.tokens.len() as u64;
+        }
+        if !busy && next >= clients.len() {
+            break;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    lat_ns.sort_by(|a, b| a.total_cmp(b));
+    let pct = |p: usize| lat_ns[(lat_ns.len() - 1) * p / 100];
+    let stats = srv.engine().stats;
+    let rec = ServeRecord {
+        name: name.to_string(),
+        clients: clients.len(),
+        p50_ns: pct(50),
+        p99_ns: pct(99),
+        ns_per_token: wall * 1e9 / generated.max(1) as f64,
+        tokens_per_sec: generated as f64 / wall.max(1e-9),
+        mean_batch: stats.mean_batch(),
+        pages_hwm: srv.engine().pages_hwm(),
+        preemptions: stats.preemptions,
+    };
+    println!(
+        "{:<26} p50 {:>9.1} µs  p99 {:>9.1} µs  {:>9.0} tok/s  batch {:>5.2}  \
+         pages_hwm {:>3}  preempt {:>4}  qfull {:>4}",
+        rec.name,
+        rec.p50_ns / 1e3,
+        rec.p99_ns / 1e3,
+        rec.tokens_per_sec,
+        rec.mean_batch,
+        rec.pages_hwm,
+        rec.preemptions,
+        queue_full_rounds,
+    );
+    rec
+}
+
+fn main() {
+    let clients: usize = std::env::var("QUAFF_SERVE_CLIENTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2000);
+    println!(
+        "== bench_serve: opt-tiny under Quaff, {} clients, {} threads ==\n",
+        clients,
+        pool::active_threads()
+    );
+    let m = build_model();
+    let work = workload(clients, m.cfg.vocab);
+    let gen = GenerateConfig::greedy(16);
+
+    let contiguous = Server::new(&m, SLOTS, QUEUE_CAP, gen.clone());
+    let rec_a = run_scenario("mixed contiguous s16", &m, contiguous, &work);
+    let paged = Server::with_paging(&m, SLOTS, PAGE_ROWS, N_PAGES, QUEUE_CAP, gen);
+    let rec_b = run_scenario("mixed paged s16 p16", &m, paged, &work);
+
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_serve.json");
+    match write_serve_json(&out, "opt-tiny", &BenchMeta::current(), &[rec_a, rec_b]) {
+        Ok(()) => println!("\nwrote {}", out.display()),
+        Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
+    }
+}

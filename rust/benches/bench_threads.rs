@@ -11,7 +11,7 @@
 #[path = "harness.rs"]
 mod harness;
 
-use harness::{bench, write_threads_json, ThreadSweep};
+use harness::{bench, write_threads_json, BenchMeta, ThreadSweep};
 use quaff::quant;
 use quaff::tensor::{pool, I8Matrix, Matrix, Workspace};
 use quaff::util::prng::Rng;
@@ -109,7 +109,7 @@ fn main() {
     }
 
     let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_threads.json");
-    match write_threads_json(&out, "e2e-small", pool_threads, &sweeps) {
+    match write_threads_json(&out, "e2e-small", &BenchMeta::current(), pool_threads, &sweeps) {
         Ok(()) => println!("\nwrote {}", out.display()),
         Err(e) => eprintln!("could not write BENCH_threads.json: {e}"),
     }

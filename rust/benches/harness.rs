@@ -97,6 +97,7 @@ impl KernelPair {
 pub fn write_kernels_json(
     path: &std::path::Path,
     preset: &str,
+    meta: &BenchMeta,
     pairs: &[KernelPair],
 ) -> std::io::Result<()> {
     let mut kernels = Vec::new();
@@ -120,8 +121,9 @@ pub fn write_kernels_json(
         (log_sum / pairs.len() as f64).exp()
     };
     let json = format!(
-        "{{\n  \"bench\": \"kernels\",\n  \"preset\": \"{preset}\",\n  \"kernels\": [\n{}\n  ],\n  \
-         \"workspace_speedup_geomean\": {geomean:.4}\n}}\n",
+        "{{\n  \"bench\": \"kernels\",\n  \"preset\": \"{preset}\",\n  \"meta\": {},\n  \
+         \"kernels\": [\n{}\n  ],\n  \"workspace_speedup_geomean\": {geomean:.4}\n}}\n",
+        meta.to_json(),
         kernels.join(",\n")
     );
     std::fs::write(path, json)
@@ -143,6 +145,7 @@ pub fn write_infer_json(
     path: &std::path::Path,
     preset: &str,
     method: &str,
+    meta: &BenchMeta,
     records: &[InferRecord],
 ) -> std::io::Result<()> {
     let kernels: Vec<String> = records
@@ -157,7 +160,8 @@ pub fn write_infer_json(
         .collect();
     let json = format!(
         "{{\n  \"bench\": \"infer\",\n  \"preset\": \"{preset}\",\n  \"method\": \"{method}\",\n  \
-         \"kernels\": [\n{}\n  ]\n}}\n",
+         \"meta\": {},\n  \"kernels\": [\n{}\n  ]\n}}\n",
+        meta.to_json(),
         kernels.join(",\n")
     );
     std::fs::write(path, json)
@@ -283,6 +287,7 @@ impl ThreadSweep {
 pub fn write_threads_json(
     path: &std::path::Path,
     preset: &str,
+    meta: &BenchMeta,
     pool_threads: usize,
     sweeps: &[ThreadSweep],
 ) -> std::io::Result<()> {
@@ -311,8 +316,73 @@ pub fn write_threads_json(
         ));
     }
     let json = format!(
-        "{{\n  \"bench\": \"threads\",\n  \"preset\": \"{preset}\",\n  \
+        "{{\n  \"bench\": \"threads\",\n  \"preset\": \"{preset}\",\n  \"meta\": {},\n  \
          \"pool_threads\": {pool_threads},\n  \"kernels\": [\n{}\n  ]\n}}\n",
+        meta.to_json(),
+        kernels.join(",\n")
+    );
+    std::fs::write(path, json)
+}
+
+/// One load-generator scenario measured end to end by `bench_serve`:
+/// request-latency percentiles (arrival → completion, wall-clock) plus
+/// engine-side throughput and paging gauges.
+#[allow(dead_code)]
+pub struct ServeRecord {
+    /// Scenario leg, e.g. `"mixed slots16 page16"`.
+    pub name: String,
+    /// Synthetic clients replayed.
+    pub clients: usize,
+    /// Median request latency (ns).
+    pub p50_ns: f64,
+    /// 99th-percentile request latency (ns).
+    pub p99_ns: f64,
+    /// Mean ns per generated token (the gate-standard `ns_per_op`).
+    pub ns_per_token: f64,
+    /// Generated tokens per wall-clock second.
+    pub tokens_per_sec: f64,
+    /// Mean decode-batch occupancy.
+    pub mean_batch: f64,
+    /// Page-pool high-water mark (pages; deterministic per scenario).
+    pub pages_hwm: usize,
+    /// Preemptions taken (deterministic per scenario).
+    pub preemptions: u64,
+}
+
+/// Emit `BENCH_serve.json`: per-scenario p50/p99 latency, ns/token and
+/// page high-water mark — each a gate-comparable metric — plus ungated
+/// context (clients, mean batch, preemptions). `meta` stamps ISA / tile /
+/// threads like every other record.
+#[allow(dead_code)]
+pub fn write_serve_json(
+    path: &std::path::Path,
+    preset: &str,
+    meta: &BenchMeta,
+    records: &[ServeRecord],
+) -> std::io::Result<()> {
+    let kernels: Vec<String> = records
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"name\": \"{}\", \"clients\": {}, \"p50_ns\": {:.1}, \
+                 \"p99_ns\": {:.1}, \"ns_per_op\": {:.1}, \"tokens_per_sec\": {:.1}, \
+                 \"mean_batch\": {:.3}, \"pages_hwm\": {}, \"preemptions\": {}}}",
+                r.name,
+                r.clients,
+                r.p50_ns,
+                r.p99_ns,
+                r.ns_per_token,
+                r.tokens_per_sec,
+                r.mean_batch,
+                r.pages_hwm,
+                r.preemptions,
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"serve\",\n  \"preset\": \"{preset}\",\n  \"meta\": {},\n  \
+         \"kernels\": [\n{}\n  ]\n}}\n",
+        meta.to_json(),
         kernels.join(",\n")
     );
     std::fs::write(path, json)

@@ -1,19 +1,36 @@
 //! Batched serving engine: continuous batching of decode steps over a
-//! fixed set of [`KvCache`] slots.
+//! paged [`KvCache`], with preemption when the page pool runs dry.
 //!
-//! [`BatchEngine::run_requests`] admits queued requests into free slots,
-//! prefills each admission, then repeatedly runs **one stacked
-//! [`Model::decode_step`] for every active request** — the linear layers
-//! see an `(n_active × d)` batch and shard across the `tensor::pool`
-//! threads, while attention reads each slot's own cached prefix. Finished
-//! requests free their slot immediately and the next queued request is
-//! admitted mid-flight, so the decode batch stays as full as the queue
-//! allows.
+//! The engine is a **stepping core**: [`BatchEngine::try_admit`] places a
+//! request into a free slot (prefill + first sample), and each
+//! [`BatchEngine::step`] runs one scheduling round — readmit preempted
+//! requests, resolve every active request's pending token, then **one
+//! stacked [`Model::decode_step`] for all survivors** — emitting
+//! [`StepEvent`]s for tokens, completions and preemption traffic. The
+//! linear layers see an `(n_active × d)` batch and shard across the
+//! `tensor::pool` threads, while attention reads each slot's paged
+//! prefix. [`BatchEngine::run_requests`] keeps the original
+//! whole-queue-in, completions-out driver as a loop over those two calls;
+//! `infer::serve` builds the deadline/backpressure front-end on the same
+//! surface.
 //!
-//! Determinism: decoding is row-local (see `model::decode`), so a
-//! request's tokens are identical whether it runs alone or batched with
-//! arbitrary neighbours, at any thread count; each request samples from
-//! its own RNG stream seeded by `cfg.seed ^ request.id`.
+//! **Preemption is bitwise-invisible.** When [`KvCache::reserve`] fails
+//! mid-round, the youngest active requests are parked: their slot's pages
+//! go back to the pool ([`KvCache::reset_slot`]) and the request keeps
+//! only its prompt, resolved tokens and RNG state. Readmission re-prefills
+//! `prompt ++ tokens` — by the row-local decode invariant
+//! (`model::decode`) this rebuilds the exact K/V rows and returns the
+//! exact logits the skipped decode step would have produced, and sampling
+//! resumes from the saved RNG state. A preempted-and-resumed request is
+//! therefore byte-identical to one that never lost its slot
+//! (`tests/serve_parity.rs`).
+//!
+//! Determinism: decoding is row-local, so a request's tokens are
+//! identical whether it runs alone or batched with arbitrary neighbours,
+//! at any thread count, page size or arrival order; each request samples
+//! from its own RNG stream seeded by `cfg.seed ^ request.id`.
+
+use std::collections::VecDeque;
 
 use super::{sample_token, GenerateConfig, KvCache};
 use crate::model::Model;
@@ -33,6 +50,22 @@ pub struct Request {
     pub max_new: usize,
 }
 
+/// Why a request left the engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// The configured EOS token was sampled.
+    Eos,
+    /// The request's `max_new` cap (or the cache's position limit) was
+    /// reached.
+    Length,
+    /// Refused at admission: empty/over-long prompt or `max_new == 0`.
+    Rejected,
+    /// Explicitly cancelled ([`BatchEngine::cancel`] / `serve`).
+    Cancelled,
+    /// The serving front-end expired the request's deadline.
+    Deadline,
+}
+
 /// A finished request.
 #[derive(Clone, Debug)]
 pub struct Completion {
@@ -42,6 +75,8 @@ pub struct Completion {
     pub prompt_len: usize,
     /// Generated tokens (no prompt, no EOS).
     pub tokens: Vec<u32>,
+    /// Why generation stopped.
+    pub reason: FinishReason,
 }
 
 /// Aggregate throughput counters for one engine lifetime.
@@ -51,8 +86,13 @@ pub struct EngineStats {
     pub decode_steps: u64,
     /// Tokens produced by decode steps (sum of batch sizes).
     pub decode_tokens: u64,
-    /// Prompt tokens processed by prefills (including virtual tokens).
+    /// Prompt tokens processed by prefills (including virtual tokens and
+    /// readmission re-prefills).
     pub prefill_tokens: u64,
+    /// Requests parked because the page pool ran dry.
+    pub preemptions: u64,
+    /// Parked requests readmitted (re-prefilled).
+    pub resumes: u64,
 }
 
 impl EngineStats {
@@ -66,40 +106,146 @@ impl EngineStats {
     }
 }
 
+/// Scheduling traffic emitted by [`BatchEngine::step`].
+#[derive(Clone, Debug)]
+pub enum StepEvent {
+    /// A token was resolved into `tag`'s output stream.
+    Token {
+        /// Admission ticket of the request.
+        tag: u64,
+        /// The request's caller-chosen id.
+        id: u64,
+        /// The resolved token.
+        token: u32,
+    },
+    /// The request finished; its slot and pages are already free.
+    Finished {
+        /// Admission ticket of the request.
+        tag: u64,
+        /// The finished request.
+        completion: Completion,
+    },
+    /// The request was parked (pages reclaimed); it will be readmitted
+    /// automatically when a slot and pages free up.
+    Preempted {
+        /// Admission ticket of the request.
+        tag: u64,
+        /// The request's caller-chosen id.
+        id: u64,
+    },
+    /// A parked request was readmitted (re-prefilled).
+    Resumed {
+        /// Admission ticket of the request.
+        tag: u64,
+        /// The request's caller-chosen id.
+        id: u64,
+    },
+}
+
+/// Outcome of [`BatchEngine::try_admit`].
+#[derive(Debug)]
+pub enum Admission {
+    /// Admitted and prefilled; the tag identifies it in [`StepEvent`]s.
+    Admitted(u64),
+    /// Refused outright (degenerate request) — completes empty with
+    /// [`FinishReason::Rejected`].
+    Rejected(Completion),
+    /// No capacity right now (no free slot, not enough free pages, or
+    /// parked requests have readmission priority). Retry after a step.
+    Busy,
+}
+
 /// A request in flight.
 struct Active {
+    /// Admission ticket (unique per engine lifetime; ids need not be).
+    tag: u64,
+    id: u64,
     slot: usize,
-    req: usize,
+    /// Admission sequence — the preemption victim is always the youngest
+    /// (highest seq), so older requests drain first and progress is
+    /// guaranteed.
+    seq: u64,
+    /// Owned prompt, kept for readmission re-prefill.
+    prompt: Vec<u32>,
+    max_new: usize,
     rng: Rng,
     /// Last sampled token, not yet resolved into the output stream.
     next: u32,
     toks: Vec<u32>,
 }
 
-/// Throughput-oriented batch decoder over a fixed slot count. Owns its
-/// [`KvCache`] and [`Workspace`], so one engine instance serves many
-/// request queues without reallocating.
+/// A preempted request waiting for pages: everything needed to rebuild
+/// its cache state by re-prefilling `prompt ++ toks`.
+struct Parked {
+    tag: u64,
+    id: u64,
+    seq: u64,
+    prompt: Vec<u32>,
+    max_new: usize,
+    rng: Rng,
+    toks: Vec<u32>,
+}
+
+/// Throughput-oriented batch decoder over a fixed slot count and a shared
+/// page pool. Owns its [`KvCache`] and [`Workspace`], so one engine
+/// instance serves many request queues without reallocating.
 pub struct BatchEngine {
     cfg: GenerateConfig,
     kv: KvCache,
     ws: Workspace,
+    active: Vec<Active>,
+    parked: VecDeque<Parked>,
+    free_slots: Vec<usize>,
+    next_seq: u64,
     /// Lifetime throughput counters.
     pub stats: EngineStats,
 }
 
 impl BatchEngine {
-    /// An engine with `slots` concurrent decode lanes for `model`. Every
-    /// linear layer's execution plan is pre-compiled into the engine's
-    /// arena (sized for the full decode batch), so the first admitted
-    /// request already runs the fused plan-driven pipeline.
+    /// An engine with `slots` concurrent decode lanes for `model`, backed
+    /// by the contiguous-equivalent cache (one `max_seq` page per slot —
+    /// no preemption can ever trigger). Every linear layer's execution
+    /// plan is pre-compiled into the engine's arena (sized for the full
+    /// decode batch), so the first admitted request already runs the
+    /// fused plan-driven pipeline.
     pub fn new(model: &Model, slots: usize, cfg: GenerateConfig) -> BatchEngine {
         let mut ws = Workspace::new();
         let kv = KvCache::for_model(model, slots, &mut ws);
+        BatchEngine::from_parts(model, kv, ws, cfg)
+    }
+
+    /// An engine over an explicitly paged cache: `n_pages` shared pages
+    /// of `page_rows` rows for `slots` slots. With fewer pooled rows than
+    /// `slots · max_seq` the engine oversubscribes memory and preempts
+    /// under pressure — output streams are unchanged (see module docs).
+    pub fn with_paging(
+        model: &Model,
+        slots: usize,
+        page_rows: usize,
+        n_pages: usize,
+        cfg: GenerateConfig,
+    ) -> BatchEngine {
+        let mut ws = Workspace::new();
+        let kv = KvCache::for_model_paged(model, page_rows, n_pages, slots, &mut ws);
+        BatchEngine::from_parts(model, kv, ws, cfg)
+    }
+
+    fn from_parts(
+        model: &Model,
+        kv: KvCache,
+        mut ws: Workspace,
+        cfg: GenerateConfig,
+    ) -> BatchEngine {
+        let slots = kv.slots();
         model.warm_plans(slots.max(1), &mut ws);
         BatchEngine {
             cfg,
             kv,
             ws,
+            active: Vec::new(),
+            parked: VecDeque::new(),
+            free_slots: (0..slots).rev().collect(),
+            next_seq: 0,
             stats: EngineStats::default(),
         }
     }
@@ -107,6 +253,26 @@ impl BatchEngine {
     /// Number of concurrent decode slots.
     pub fn slots(&self) -> usize {
         self.kv.slots()
+    }
+
+    /// Requests currently holding a slot.
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Requests parked awaiting readmission.
+    pub fn parked_len(&self) -> usize {
+        self.parked.len()
+    }
+
+    /// Page-pool gauge `(in_use, total)` of the underlying cache.
+    pub fn pages(&self) -> (usize, usize) {
+        (self.kv.pages_in_use(), self.kv.pages_total())
+    }
+
+    /// Most pages ever simultaneously allocated.
+    pub fn pages_hwm(&self) -> usize {
+        self.kv.pages_hwm()
     }
 
     /// Fresh-allocation counter of the engine's arena. Stops moving once
@@ -129,79 +295,275 @@ impl BatchEngine {
         self.kv.nbytes()
     }
 
-    /// Run every request to completion, admitting from the queue as slots
-    /// free up. Completions are returned in request order. Degenerate
-    /// requests (empty/over-long prompt, `max_new == 0`) complete empty.
-    pub fn run_requests(&mut self, model: &Model, requests: &[Request]) -> Vec<Completion> {
-        let mut done: Vec<Option<Completion>> = requests.iter().map(|_| None).collect();
-        let mut free: Vec<usize> = (0..self.kv.slots()).rev().collect();
-        let mut queue = 0usize;
-        let mut active: Vec<Active> = Vec::new();
-        while queue < requests.len() || !active.is_empty() {
-            // admit into free slots
-            while let (Some(&slot), true) = (free.last(), queue < requests.len()) {
-                let req = queue;
-                queue += 1;
-                let r = &requests[req];
-                let overlong = model.n_virtual() + r.prompt.len() > model.cfg.max_seq;
-                if r.prompt.is_empty() || r.max_new == 0 || overlong {
-                    done[req] = Some(Completion {
-                        id: r.id,
-                        prompt_len: r.prompt.len(),
-                        tokens: Vec::new(),
-                    });
-                    continue;
-                }
-                free.pop();
-                self.kv.reset_slot(slot);
-                let logits = model.prefill(&r.prompt, slot, &mut self.kv, &mut self.ws);
-                self.stats.prefill_tokens += self.kv.len(slot) as u64;
-                let mut rng = Rng::new(self.cfg.seed ^ r.id);
-                let next = sample_token(logits.row(0), &self.cfg, &mut rng);
-                self.ws.recycle(logits);
-                active.push(Active {
-                    slot,
-                    req,
-                    rng,
-                    next,
-                    toks: Vec::new(),
+    /// Try to place `req` into a free slot: degenerate requests are
+    /// [`Admission::Rejected`] immediately; otherwise admission needs a
+    /// free slot, enough free pages for the whole prompt, and an empty
+    /// parked queue (preempted requests outrank new arrivals — they hold
+    /// the oldest seqs). On success the request is prefilled and its
+    /// first token sampled, ready for the next [`BatchEngine::step`].
+    pub fn try_admit(&mut self, model: &Model, req: &Request) -> Admission {
+        let rows = model.n_virtual() + req.prompt.len();
+        if req.prompt.is_empty() || req.max_new == 0 || rows > model.cfg.max_seq {
+            return Admission::Rejected(Completion {
+                id: req.id,
+                prompt_len: req.prompt.len(),
+                tokens: Vec::new(),
+                reason: FinishReason::Rejected,
+            });
+        }
+        if !self.parked.is_empty() || self.free_slots.is_empty() || !self.kv.can_admit(rows) {
+            return Admission::Busy;
+        }
+        let slot = self.free_slots.pop().expect("checked non-empty");
+        let seq = self.next_seq;
+        let tag = seq;
+        self.next_seq += 1;
+        self.kv.reset_slot(slot);
+        let logits = model.prefill(&req.prompt, slot, &mut self.kv, &mut self.ws);
+        self.stats.prefill_tokens += self.kv.len(slot) as u64;
+        let mut rng = Rng::new(self.cfg.seed ^ req.id);
+        let next = sample_token(logits.row(0), &self.cfg, &mut rng);
+        self.ws.recycle(logits);
+        self.active.push(Active {
+            tag,
+            id: req.id,
+            slot,
+            seq,
+            prompt: req.prompt.clone(),
+            max_new: req.max_new,
+            rng,
+            next,
+            toks: Vec::new(),
+        });
+        Admission::Admitted(tag)
+    }
+
+    /// One scheduling round: readmit parked requests while capacity
+    /// allows, resolve every active request's pending token (emitting
+    /// [`StepEvent::Token`] / [`StepEvent::Finished`]), then run one
+    /// stacked decode step for the survivors — parking the youngest
+    /// actives if the page pool can't back every +1 row. Returns `true`
+    /// while any request is still in flight.
+    pub fn step(&mut self, model: &Model, events: &mut Vec<StepEvent>) -> bool {
+        self.readmit(model, events);
+        self.resolve(model, events);
+        self.decode(model, events);
+        !self.active.is_empty() || !self.parked.is_empty()
+    }
+
+    /// Cancel an in-flight request by tag (active or parked), freeing its
+    /// slot and pages. Returns its partial completion, or `None` if the
+    /// tag is not in flight (already finished / never admitted).
+    pub fn cancel(&mut self, tag: u64, reason: FinishReason) -> Option<Completion> {
+        if let Some(i) = self.active.iter().position(|a| a.tag == tag) {
+            let a = self.active.remove(i);
+            self.kv.reset_slot(a.slot);
+            self.free_slots.push(a.slot);
+            return Some(Completion {
+                id: a.id,
+                prompt_len: a.prompt.len(),
+                tokens: a.toks,
+                reason,
+            });
+        }
+        if let Some(i) = self.parked.iter().position(|p| p.tag == tag) {
+            let p = self.parked.remove(i).expect("position is in range");
+            return Some(Completion {
+                id: p.id,
+                prompt_len: p.prompt.len(),
+                tokens: p.toks,
+                reason,
+            });
+        }
+        None
+    }
+
+    /// Readmit parked requests in park order (FIFO) while a slot and
+    /// enough pages for their full `prompt ++ toks` prefix are available.
+    /// The front parks the line: skipping over it would let short
+    /// requests starve a long one.
+    fn readmit(&mut self, model: &Model, events: &mut Vec<StepEvent>) {
+        while let Some(front) = self.parked.front() {
+            let rows = model.n_virtual() + front.prompt.len() + front.toks.len();
+            if self.free_slots.is_empty() || !self.kv.can_admit(rows) {
+                return;
+            }
+            let p = self.parked.pop_front().expect("front exists");
+            let slot = self.free_slots.pop().expect("checked non-empty");
+            self.kv.reset_slot(slot);
+            // Rebuild the cache by prefilling prompt ++ toks: row-local
+            // decode makes the rows and the returned last-position logits
+            // byte-identical to the state at preemption, so sampling from
+            // the saved RNG resumes the exact token stream the skipped
+            // decode step would have produced.
+            let mut seqtoks = p.prompt.clone();
+            seqtoks.extend_from_slice(&p.toks);
+            let logits = model.prefill(&seqtoks, slot, &mut self.kv, &mut self.ws);
+            self.stats.prefill_tokens += self.kv.len(slot) as u64;
+            self.stats.resumes += 1;
+            let mut rng = p.rng;
+            let next = sample_token(logits.row(0), &self.cfg, &mut rng);
+            self.ws.recycle(logits);
+            events.push(StepEvent::Resumed { tag: p.tag, id: p.id });
+            let a = Active {
+                tag: p.tag,
+                id: p.id,
+                slot,
+                seq: p.seq,
+                prompt: p.prompt,
+                max_new: p.max_new,
+                rng,
+                next,
+                toks: p.toks,
+            };
+            let at = self
+                .active
+                .binary_search_by_key(&a.seq, |x| x.seq)
+                .expect_err("seqs are unique");
+            self.active.insert(at, a);
+        }
+    }
+
+    /// Resolve every active request's pending token: EOS finishes without
+    /// emitting; otherwise the token joins the output stream and the
+    /// request finishes when its cap or the cache limit is reached.
+    fn resolve(&mut self, model: &Model, events: &mut Vec<StepEvent>) {
+        let mut i = 0;
+        while i < self.active.len() {
+            let a = &mut self.active[i];
+            let eos_hit = self.cfg.eos == Some(a.next);
+            if !eos_hit {
+                a.toks.push(a.next);
+                events.push(StepEvent::Token {
+                    tag: a.tag,
+                    id: a.id,
+                    token: a.next,
                 });
             }
-            // resolve the last sampled token of every active request
-            let mut still = Vec::with_capacity(active.len());
-            for mut a in active.drain(..) {
-                let r = &requests[a.req];
-                let eos_hit = self.cfg.eos == Some(a.next);
-                if !eos_hit {
-                    a.toks.push(a.next);
+            let exhausted = a.toks.len() >= a.max_new || self.kv.len(a.slot) >= model.cfg.max_seq;
+            if eos_hit || exhausted {
+                let a = self.active.remove(i);
+                self.kv.reset_slot(a.slot);
+                self.free_slots.push(a.slot);
+                events.push(StepEvent::Finished {
+                    tag: a.tag,
+                    completion: Completion {
+                        id: a.id,
+                        prompt_len: a.prompt.len(),
+                        tokens: a.toks,
+                        reason: if eos_hit {
+                            FinishReason::Eos
+                        } else {
+                            FinishReason::Length
+                        },
+                    },
+                });
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// One stacked decode step for every active request, preempting the
+    /// youngest actives when the page pool can't back a +1 row. The
+    /// oldest active can always reserve once everything younger is parked
+    /// (the pool holds ≥ `max_seq` rows by construction), so every round
+    /// with a non-empty active set makes progress — no deadlock.
+    fn decode(&mut self, model: &Model, events: &mut Vec<StepEvent>) {
+        // reserve phase: walk oldest-first; on failure, park from the
+        // youngest end until this request fits (or park it, if it *is*
+        // the youngest survivor)
+        let mut i = 0;
+        while i < self.active.len() {
+            let mut ok = self.kv.reserve(self.active[i].slot, 1);
+            while !ok && self.active.len() > i + 1 {
+                let victim = self.active.pop().expect("len > i+1 >= 1");
+                self.park(victim, events);
+                ok = self.kv.reserve(self.active[i].slot, 1);
+            }
+            if ok {
+                i += 1;
+            } else {
+                let victim = self.active.remove(i);
+                self.park(victim, events);
+            }
+        }
+        if self.active.is_empty() {
+            return;
+        }
+        let tokens: Vec<u32> = self.active.iter().map(|a| a.next).collect();
+        let slots: Vec<usize> = self.active.iter().map(|a| a.slot).collect();
+        let logits = model.decode_step(&tokens, &slots, &mut self.kv, &mut self.ws);
+        self.stats.decode_steps += 1;
+        self.stats.decode_tokens += self.active.len() as u64;
+        for (i, a) in self.active.iter_mut().enumerate() {
+            a.next = sample_token(logits.row(i), &self.cfg, &mut a.rng);
+        }
+        self.ws.recycle(logits);
+    }
+
+    /// Park an active request: pages back to the pool, slot freed, state
+    /// reduced to what readmission needs. `a.next` is *not* saved — it
+    /// equals `a.toks.last()` at the decode phase (resolve already ran)
+    /// and is regenerated by the readmission re-prefill.
+    fn park(&mut self, a: Active, events: &mut Vec<StepEvent>) {
+        self.kv.reset_slot(a.slot);
+        self.free_slots.push(a.slot);
+        self.stats.preemptions += 1;
+        events.push(StepEvent::Preempted { tag: a.tag, id: a.id });
+        // victims always carry the smallest seq in the parked set: parked
+        // requests outrank every active (admission is blocked while any
+        // request is parked), and victims come from the active set
+        if let Some(front) = self.parked.front() {
+            debug_assert!(a.seq < front.seq, "parked set must stay seq-sorted");
+        }
+        self.parked.push_front(Parked {
+            tag: a.tag,
+            id: a.id,
+            seq: a.seq,
+            prompt: a.prompt,
+            max_new: a.max_new,
+            rng: a.rng,
+            toks: a.toks,
+        });
+    }
+
+    /// Run every request to completion, admitting from the queue as
+    /// capacity frees up. Completions are returned in request order.
+    /// Degenerate requests (empty/over-long prompt, `max_new == 0`)
+    /// complete empty with [`FinishReason::Rejected`].
+    pub fn run_requests(&mut self, model: &Model, requests: &[Request]) -> Vec<Completion> {
+        let mut done: Vec<Option<Completion>> = requests.iter().map(|_| None).collect();
+        let mut tag_to_req: Vec<(u64, usize)> = Vec::with_capacity(requests.len());
+        let mut events: Vec<StepEvent> = Vec::new();
+        let mut queue = 0usize;
+        loop {
+            while queue < requests.len() {
+                match self.try_admit(model, &requests[queue]) {
+                    Admission::Admitted(tag) => {
+                        tag_to_req.push((tag, queue));
+                        queue += 1;
+                    }
+                    Admission::Rejected(c) => {
+                        done[queue] = Some(c);
+                        queue += 1;
+                    }
+                    Admission::Busy => break,
                 }
-                let exhausted =
-                    a.toks.len() >= r.max_new || self.kv.len(a.slot) >= model.cfg.max_seq;
-                if eos_hit || exhausted {
-                    done[a.req] = Some(Completion {
-                        id: r.id,
-                        prompt_len: r.prompt.len(),
-                        tokens: std::mem::take(&mut a.toks),
-                    });
-                    free.push(a.slot);
-                } else {
-                    still.push(a);
+            }
+            let more = self.step(model, &mut events);
+            for ev in events.drain(..) {
+                if let StepEvent::Finished { tag, completion } = ev {
+                    let (_, req) = *tag_to_req
+                        .iter()
+                        .find(|(t, _)| *t == tag)
+                        .expect("finished tag was admitted here");
+                    done[req] = Some(completion);
                 }
             }
-            active = still;
-            if active.is_empty() {
-                continue; // admit more, or fall out of the loop when drained
+            if !more && queue >= requests.len() {
+                break;
             }
-            // one stacked decode step for every active request
-            let tokens: Vec<u32> = active.iter().map(|a| a.next).collect();
-            let slots: Vec<usize> = active.iter().map(|a| a.slot).collect();
-            let logits = model.decode_step(&tokens, &slots, &mut self.kv, &mut self.ws);
-            self.stats.decode_steps += 1;
-            self.stats.decode_tokens += active.len() as u64;
-            for (i, a) in active.iter_mut().enumerate() {
-                a.next = sample_token(logits.row(i), &self.cfg, &mut a.rng);
-            }
-            self.ws.recycle(logits);
         }
         done.into_iter()
             .map(|c| c.expect("every request resolves to a completion"))

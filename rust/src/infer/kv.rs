@@ -1,39 +1,67 @@
-//! Per-block key/value cache for incremental decoding.
+//! Paged per-block key/value cache for incremental decoding.
 //!
 //! One [`KvCache`] holds the K and V activations of **every** decoder block
-//! for a fixed number of request *slots*. The backing buffers are f32 lanes
-//! drawn from a [`Workspace`] (two lanes per block: one K, one V), so
-//! caches are pooled across requests exactly like every other hot-path
-//! buffer: grow-only, reused on [`KvCache::release`]/[`KvCache::new`], and
-//! reset per request without freeing.
+//! for a fixed number of request *slots*. Storage is a pool of fixed-size
+//! **pages** (`page_rows` cache rows each) carved out of [`Workspace`] f32
+//! lanes (two lanes per block: one K, one V), with a per-slot **page
+//! table** mapping logical cache positions to physical pages:
 //!
-//! Layout: lane `2·layer` is K, lane `2·layer + 1` is V; within a lane,
-//! slot `s`'s row `p` (cache position `p`, counting PEFT virtual tokens)
-//! starts at `(s · max_seq + p) · d`.
+//! * in-flight requests share one page pool, so a short request holds
+//!   `ceil(rows / page_rows)` pages instead of reserving `max_seq` rows;
+//! * the same page table serves every layer — page `p` names rows
+//!   `[p·page_rows, (p+1)·page_rows)` in **each** of the `2·n_layers`
+//!   lanes, so allocating one page grows a slot in all blocks at once;
+//! * preemption/eviction is a page-table edit ([`KvCache::reset_slot`]
+//!   returns the slot's pages to the free list; nothing is copied or
+//!   freed) and readmission is a fresh [`KvCache::reserve`] + re-prefill.
+//!
+//! [`KvCache::new`]/[`KvCache::for_model`] build the **contiguous
+//! equivalent** — one `max_seq`-row page per slot — which behaves exactly
+//! like the pre-paging cache (every slot can always hold a full sequence).
+//! [`KvCache::paged`] picks the page geometry explicitly. Physical page
+//! placement never affects decoded values (the page table only relocates
+//! rows; their contents and read order are unchanged), so paged and
+//! contiguous decode are **bitwise identical** — pinned for every method,
+//! page size and thread width by `tests/serve_parity.rs`.
+//!
+//! Lane layout: lane `2·layer` is K, lane `2·layer + 1` is V; within a
+//! lane, physical page `p`'s row `r` starts at `(p · page_rows + r) · d`.
 
 use crate::model::Model;
 use crate::tensor::Workspace;
 
-/// Pooled, grow-only K/V storage for `slots` concurrent requests. See the
-/// module docs for the lane layout.
+/// Pooled, grow-only, paged K/V storage for `slots` concurrent requests.
+/// See the module docs for the page-table layout.
 pub struct KvCache {
-    /// `2 · n_layers` workspace lanes (K then V per layer). The pooled lane
-    /// set may carry extra lanes from a wider earlier take; only the first
-    /// `2 · n_layers` are used.
+    /// `2 · n_layers` workspace lanes (K then V per layer), each sized
+    /// `n_pages · page_rows · d`. The pooled lane set may carry extra
+    /// lanes from a wider earlier take; only the first `2 · n_layers` are
+    /// used.
     lanes: Vec<Vec<f32>>,
     n_layers: usize,
     d: usize,
     max_seq: usize,
+    page_rows: usize,
+    n_pages: usize,
     slots: usize,
+    /// Per-slot page table: physical page ids, in logical order. Cleared
+    /// (capacity retained) on [`KvCache::reset_slot`].
+    tables: Vec<Vec<usize>>,
     /// Cached rows per slot (counting virtual tokens). 0 = slot is free.
     lens: Vec<usize>,
+    /// Free physical pages (LIFO; seeded in descending order so pages
+    /// allocate ascending — deterministic placement for diagnostics).
+    free: Vec<usize>,
+    /// Most pages ever simultaneously allocated (capacity-planning signal
+    /// reported by `bench_serve`).
+    hwm: usize,
 }
 
 impl KvCache {
-    /// A cache for `slots` concurrent requests of a model with `n_layers`
-    /// blocks, width `d`, and `max_seq` positions. Backing buffers come
-    /// from `ws` (key `"infer.kv"`), so building a cache after a release
-    /// reuses the previous allocation.
+    /// The contiguous equivalent: one `max_seq`-row page per slot, so
+    /// every slot can always hold a full sequence (exactly the pre-paging
+    /// behaviour). Backing buffers come from `ws` (key `"infer.kv"`), so
+    /// building a cache after a release reuses the previous allocation.
     pub fn new(
         n_layers: usize,
         d: usize,
@@ -41,27 +69,74 @@ impl KvCache {
         slots: usize,
         ws: &mut Workspace,
     ) -> KvCache {
+        KvCache::paged(n_layers, d, max_seq, max_seq, slots, slots, ws)
+    }
+
+    /// A paged cache: `n_pages` shared pages of `page_rows` rows each for
+    /// `slots` concurrent requests. Requires `n_pages · page_rows ≥
+    /// max_seq` so a single request can always run to the cache limit —
+    /// without it a request could starve against its own pool.
+    pub fn paged(
+        n_layers: usize,
+        d: usize,
+        max_seq: usize,
+        page_rows: usize,
+        n_pages: usize,
+        slots: usize,
+        ws: &mut Workspace,
+    ) -> KvCache {
         assert!(n_layers > 0 && d > 0 && max_seq > 0 && slots > 0);
+        assert!(page_rows > 0 && n_pages > 0);
+        assert!(
+            n_pages * page_rows >= max_seq,
+            "page pool ({n_pages} pages x {page_rows} rows) cannot hold one \
+             max_seq ({max_seq}) request"
+        );
         let mut lanes = ws.take_f32_lanes("infer.kv", 2 * n_layers);
         for lane in lanes.iter_mut().take(2 * n_layers) {
-            lane.resize(slots * max_seq * d, 0.0);
+            lane.resize(n_pages * page_rows * d, 0.0);
         }
         KvCache {
             lanes,
             n_layers,
             d,
             max_seq,
+            page_rows,
+            n_pages,
             slots,
+            tables: vec![Vec::new(); slots],
             lens: vec![0; slots],
+            free: (0..n_pages).rev().collect(),
+            hwm: 0,
         }
     }
 
-    /// [`KvCache::new`] sized from a model's configuration.
+    /// [`KvCache::new`] (contiguous equivalent) sized from a model.
     pub fn for_model(model: &Model, slots: usize, ws: &mut Workspace) -> KvCache {
         KvCache::new(
             model.cfg.n_layers,
             model.cfg.d_model,
             model.cfg.max_seq,
+            slots,
+            ws,
+        )
+    }
+
+    /// [`KvCache::paged`] sized from a model's layer count / width /
+    /// sequence limit.
+    pub fn for_model_paged(
+        model: &Model,
+        page_rows: usize,
+        n_pages: usize,
+        slots: usize,
+        ws: &mut Workspace,
+    ) -> KvCache {
+        KvCache::paged(
+            model.cfg.n_layers,
+            model.cfg.d_model,
+            model.cfg.max_seq,
+            page_rows,
+            n_pages,
             slots,
             ws,
         )
@@ -82,41 +157,107 @@ impl KvCache {
         self.max_seq
     }
 
+    /// Rows per page.
+    pub fn page_rows(&self) -> usize {
+        self.page_rows
+    }
+
+    /// Total pages in the pool.
+    pub fn pages_total(&self) -> usize {
+        self.n_pages
+    }
+
+    /// Pages currently allocated to slots.
+    pub fn pages_in_use(&self) -> usize {
+        self.n_pages - self.free.len()
+    }
+
+    /// Most pages ever simultaneously allocated.
+    pub fn pages_hwm(&self) -> usize {
+        self.hwm
+    }
+
     /// Cached rows for `slot` (0 = free / reset).
     pub fn len(&self, slot: usize) -> usize {
         self.lens[slot]
     }
 
-    /// Free positions remaining in `slot`.
+    /// Free positions remaining in `slot` before the sequence limit (the
+    /// shared pool may run out earlier — see [`KvCache::reserve`]).
     pub fn remaining(&self, slot: usize) -> usize {
         self.max_seq - self.lens[slot]
     }
 
-    /// Mark `slot` empty (the rows are overwritten by the next prefill —
-    /// nothing is freed).
+    /// Rows `slot` can hold without another [`KvCache::reserve`].
+    pub fn capacity_rows(&self, slot: usize) -> usize {
+        self.tables[slot].len() * self.page_rows
+    }
+
+    /// Whether the free pool could back `rows` rows for a **reset** slot
+    /// (the admission check for a new request of `rows` prompt rows).
+    pub fn can_admit(&self, rows: usize) -> bool {
+        rows <= self.max_seq && self.free.len() * self.page_rows >= rows
+    }
+
+    /// Ensure `slot` can hold `n` more rows, allocating pages from the
+    /// free pool as needed. Returns `false` (with any partial allocation
+    /// retained for a later retry) when the pool is exhausted — the
+    /// caller preempts or waits. Idempotent once capacity covers the
+    /// request.
+    pub fn reserve(&mut self, slot: usize, n: usize) -> bool {
+        let need = self.lens[slot] + n;
+        assert!(need <= self.max_seq, "KvCache slot {slot} overflow");
+        while self.tables[slot].len() * self.page_rows < need {
+            match self.free.pop() {
+                Some(p) => self.tables[slot].push(p),
+                None => return false,
+            }
+            self.hwm = self.hwm.max(self.pages_in_use());
+        }
+        true
+    }
+
+    /// Mark `slot` empty and return its pages to the free pool — a pure
+    /// page-table edit (rows are overwritten by the next user; nothing is
+    /// copied or freed). Doubles as the preemption/eviction primitive.
     pub fn reset_slot(&mut self, slot: usize) {
+        let free = &mut self.free;
+        self.tables[slot].drain(..).for_each(|p| free.push(p));
         self.lens[slot] = 0;
     }
 
     /// Reset every slot.
     pub fn reset_all(&mut self) {
-        self.lens.fill(0);
+        for s in 0..self.slots {
+            self.reset_slot(s);
+        }
     }
 
     /// Bytes of K/V storage held (diagnostics / memory accounting).
     pub fn nbytes(&self) -> usize {
-        2 * self.n_layers * self.slots * self.max_seq * self.d * 4
+        2 * self.n_layers * self.n_pages * self.page_rows * self.d * 4
+    }
+
+    /// `slot`'s page table (physical page ids in logical-row order).
+    pub fn table(&self, slot: usize) -> &[usize] {
+        &self.tables[slot]
     }
 
     /// Record that `slot` gained `n` cached rows (called once per
-    /// prefill/decode step, after every layer wrote its K/V rows).
+    /// prefill/decode step, after every layer wrote its K/V rows). The
+    /// rows must have been [`KvCache::reserve`]d.
     pub(crate) fn advance(&mut self, slot: usize, n: usize) {
         let len = self.lens[slot] + n;
         assert!(len <= self.max_seq, "KvCache slot {slot} overflow");
+        assert!(
+            len <= self.capacity_rows(slot),
+            "KvCache slot {slot} advanced past its reserved pages"
+        );
         self.lens[slot] = len;
     }
 
-    /// Write one K row and one V row for `layer` at `(slot, pos)`.
+    /// Write one K row and one V row for `layer` at `(slot, pos)`. The
+    /// position must be covered by the slot's reserved pages.
     pub(crate) fn write_row(
         &mut self,
         layer: usize,
@@ -125,15 +266,21 @@ impl KvCache {
         k: &[f32],
         v: &[f32],
     ) {
-        assert!(layer < self.n_layers && slot < self.slots && pos < self.max_seq);
+        assert!(layer < self.n_layers && slot < self.slots);
+        assert!(
+            pos < self.capacity_rows(slot),
+            "KvCache write at unreserved position {pos} of slot {slot}"
+        );
         debug_assert_eq!(k.len(), self.d);
         debug_assert_eq!(v.len(), self.d);
-        let off = (slot * self.max_seq + pos) * self.d;
+        let page = self.tables[slot][pos / self.page_rows];
+        let off = (page * self.page_rows + pos % self.page_rows) * self.d;
         self.lanes[2 * layer][off..off + self.d].copy_from_slice(k);
         self.lanes[2 * layer + 1][off..off + self.d].copy_from_slice(v);
     }
 
-    /// Borrow `layer`'s full (K, V) lanes for attention reads.
+    /// Borrow `layer`'s full (K, V) lanes for attention reads (rows are
+    /// located through a slot's [`KvCache::table`]).
     pub(crate) fn lanes(&self, layer: usize) -> (&[f32], &[f32]) {
         (&self.lanes[2 * layer], &self.lanes[2 * layer + 1])
     }
@@ -149,16 +296,19 @@ mod tests {
         let mut kv = KvCache::new(2, 4, 8, 3, &mut ws);
         assert_eq!((kv.slots(), kv.max_seq()), (3, 8));
         assert_eq!(kv.len(1), 0);
+        assert!(kv.reserve(2, 1));
         kv.write_row(1, 2, 0, &[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0]);
         kv.advance(2, 1);
         assert_eq!(kv.len(2), 1);
         assert_eq!(kv.remaining(2), 7);
         let (k, v) = kv.lanes(1);
-        let off = (2 * 8) * 4;
+        let page = kv.table(2)[0];
+        let off = page * 8 * 4;
         assert_eq!(&k[off..off + 4], &[1.0, 2.0, 3.0, 4.0]);
         assert_eq!(&v[off..off + 4], &[5.0, 6.0, 7.0, 8.0]);
         kv.reset_slot(2);
         assert_eq!(kv.len(2), 0);
+        assert_eq!(kv.pages_in_use(), 0);
     }
 
     #[test]
@@ -178,5 +328,71 @@ mod tests {
         let mut ws = Workspace::new();
         let mut kv = KvCache::new(1, 2, 4, 1, &mut ws);
         kv.advance(0, 5);
+    }
+
+    #[test]
+    fn paged_pool_is_shared_and_reserve_backpressures() {
+        let mut ws = Workspace::new();
+        // 8 one-row pages over 3 slots, max_seq 8
+        let mut kv = KvCache::paged(1, 2, 8, 1, 8, 3, &mut ws);
+        assert!(kv.reserve(0, 5));
+        assert!(kv.reserve(1, 3));
+        assert_eq!(kv.pages_in_use(), 8);
+        assert!(!kv.reserve(2, 1), "exhausted pool must refuse");
+        assert!(!kv.can_admit(1));
+        // eviction is a page-table edit: slot 1's pages come straight back
+        kv.reset_slot(1);
+        assert_eq!(kv.pages_in_use(), 5);
+        assert!(kv.can_admit(3));
+        assert!(kv.reserve(2, 3));
+        assert_eq!(kv.pages_hwm(), 8);
+        kv.release(&mut ws);
+    }
+
+    #[test]
+    fn reserve_is_idempotent_within_capacity() {
+        let mut ws = Workspace::new();
+        let mut kv = KvCache::paged(1, 2, 8, 4, 2, 2, &mut ws);
+        assert!(kv.reserve(0, 3));
+        let used = kv.pages_in_use();
+        assert!(kv.reserve(0, 1), "row 3 is already covered by page 0");
+        assert_eq!(kv.pages_in_use(), used, "no page needed within capacity");
+        kv.advance(0, 4);
+        assert!(kv.reserve(0, 1), "row 4 crosses into a second page");
+        assert_eq!(kv.pages_in_use(), used + 1);
+        kv.release(&mut ws);
+    }
+
+    #[test]
+    fn paged_writes_land_in_their_table_pages() {
+        let mut ws = Workspace::new();
+        let mut kv = KvCache::paged(1, 2, 6, 2, 3, 2, &mut ws);
+        // slot 1 first so its rows land in page 0 — placement must not
+        // matter to reads
+        assert!(kv.reserve(1, 1));
+        kv.write_row(0, 1, 0, &[9.0, 9.5], &[-9.0, -9.5]);
+        kv.advance(1, 1);
+        assert!(kv.reserve(0, 3));
+        for pos in 0..3 {
+            let x = pos as f32;
+            kv.write_row(0, 0, pos, &[x, x + 0.5], &[-x, -x - 0.5]);
+        }
+        kv.advance(0, 3);
+        let (k, _v) = kv.lanes(0);
+        for pos in 0..3 {
+            let page = kv.table(0)[pos / 2];
+            let off = (page * 2 + pos % 2) * 2;
+            assert_eq!(&k[off..off + 2], &[pos as f32, pos as f32 + 0.5]);
+        }
+        let off = kv.table(1)[0] * 2 * 2;
+        assert_eq!(&k[off..off + 2], &[9.0, 9.5]);
+        kv.release(&mut ws);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot hold one max_seq")]
+    fn undersized_pool_is_rejected() {
+        let mut ws = Workspace::new();
+        let _ = KvCache::paged(1, 2, 16, 2, 4, 1, &mut ws);
     }
 }

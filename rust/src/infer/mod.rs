@@ -5,29 +5,41 @@
 //! same [`QuantMethod`](crate::methods::QuantMethod) kernels that run the
 //! teacher-forced training forward run generation, through three layers:
 //!
-//! * **[`KvCache`]** ([`kv`]) — pooled, grow-only per-block K/V storage
-//!   for many concurrent request slots, reset (not freed) per request.
+//! * **[`KvCache`]** ([`kv`]) — pooled, grow-only, **paged** per-block
+//!   K/V storage: fixed-size pages from the `Workspace` lane pools,
+//!   shared across many concurrent request slots through per-slot page
+//!   tables; preemption/eviction is a page-table edit.
 //! * **Decode entry points** (`model::decode`) — `Model::prefill` fills a
 //!   slot from a prompt; `Model::decode_step` extends many slots by one
 //!   token as one stacked batch, so the int8 linear kernels shard across
 //!   the `tensor::pool` threads. Both are frozen-state and row-local,
 //!   which makes cached decoding **bit-identical** to a naive full
-//!   re-forward for every quantization method (`tests/decode_parity.rs`).
+//!   re-forward for every quantization method (`tests/decode_parity.rs`)
+//!   and paged decoding bit-identical to contiguous
+//!   (`tests/serve_parity.rs`).
 //! * **Drivers** — [`generate_cached`] / [`generate_uncached`] for single
 //!   requests (greedy or temperature/top-k sampling via [`GenerateConfig`],
-//!   deterministic under a fixed seed), and [`BatchEngine`] ([`engine`])
-//!   for throughput-oriented serving of a whole request queue with
-//!   continuous batching.
+//!   deterministic under a fixed seed), [`BatchEngine`] ([`engine`]) for
+//!   continuous batching with page-pressure preemption, and [`Server`]
+//!   ([`serve`]) — the request front-end: bounded admission queue with
+//!   backpressure, logical-clock deadlines, cancellation, and streaming
+//!   token delivery via per-request [`TokenSink`]s.
 //!
-//! `benches/bench_infer.rs` records prefill/decode tokens-per-second at
-//! batch 1/4/16 into `BENCH_infer.json` for the CI perf gate;
+//! `benches/bench_infer.rs` records prefill/decode tokens-per-second and
+//! `benches/bench_serve.rs` replays a seeded multi-client workload
+//! (p50/p99 latency, tokens/sec, page high-water mark) into
+//! `BENCH_infer.json` / `BENCH_serve.json` for the CI perf gate;
 //! `examples/serve_batch.rs` demonstrates the serving path end to end.
 
 pub mod engine;
 pub mod kv;
+pub mod serve;
 
-pub use engine::{BatchEngine, Completion, EngineStats, Request};
+pub use engine::{
+    Admission, BatchEngine, Completion, EngineStats, FinishReason, Request, StepEvent,
+};
 pub use kv::KvCache;
+pub use serve::{Server, SubmitError, TokenSink};
 
 use crate::model::Model;
 use crate::tensor::Workspace;

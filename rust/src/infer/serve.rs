@@ -1,0 +1,299 @@
+//! Request front-end for the serving tier: bounded admission queue with
+//! backpressure, per-request deadlines and cancellation, and incremental
+//! token delivery — a synchronous core around [`BatchEngine`].
+//!
+//! [`Server::submit`] enqueues a request (refusing with
+//! [`SubmitError::QueueFull`] once `queue_cap` requests are waiting —
+//! backpressure the caller must handle by retrying later), and each
+//! [`Server::pump`] advances one scheduling round: expire deadlines,
+//! admit from the queue while the engine has slots *and* pages, run one
+//! [`BatchEngine::step`], and dispatch the resulting [`StepEvent`]s to
+//! each request's [`TokenSink`]. The core is deliberately synchronous and
+//! single-threaded — parallelism lives *inside* the stacked decode step
+//! (`tensor::pool`), where it is proven bit-identical to serial — so an
+//! async runtime can wrap `pump` in a timer loop without changing any
+//! result.
+//!
+//! **Time is logical.** Deadlines are measured in pump rounds
+//! ([`Server::now`]), not wall-clock, so a scenario (submission schedule
+//! + deadlines + seed) replays identically on any machine — which is what
+//! lets `tests/serve_parity.rs` assert completions byte-for-byte and
+//! `benches/bench_serve.rs` replay a fixed workload against the gate.
+//!
+//! **Arrival order does not change results.** A request's token stream
+//! depends only on its id, prompt and the engine seed (row-local decode +
+//! per-request RNG streams; see `model::decode` and `infer::engine`).
+//! Queueing, slot assignment, paging and preemption decide only *when* a
+//! request runs — never what it generates. Deadline expiry is the one
+//! exception (a request cut short at tick `t` keeps its prefix), which is
+//! why expiry happens at a deterministic point in the round.
+
+use std::collections::VecDeque;
+
+use super::engine::{Admission, BatchEngine, Completion, FinishReason, Request, StepEvent};
+use super::GenerateConfig;
+use crate::model::Model;
+
+/// Receiver for a request's incremental output. Implementations get every
+/// resolved token as it leaves the engine, then the final [`Completion`]
+/// (whose `tokens` repeat the streamed prefix). Default methods discard.
+pub trait TokenSink {
+    /// A token was resolved into the request's output stream.
+    fn on_token(&mut self, _token: u32) {}
+    /// The request finished (any [`FinishReason`], including expiry and
+    /// cancellation).
+    fn on_finish(&mut self, _completion: &Completion) {}
+}
+
+/// Why [`Server::submit`] refused a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The admission queue is at capacity — backpressure; retry after
+    /// pumping.
+    QueueFull,
+}
+
+/// Where a submitted request currently lives.
+enum State {
+    /// Waiting in the admission queue.
+    Queued,
+    /// Admitted to the engine under this tag.
+    Engine(u64),
+    /// Finished (completion delivered).
+    Done,
+}
+
+/// Per-request bookkeeping, indexed by ticket.
+struct Entry {
+    state: State,
+    /// Absolute logical deadline (pump round); `None` = no deadline.
+    deadline: Option<u64>,
+    sink: Option<Box<dyn TokenSink>>,
+}
+
+/// Bounded-queue serving front-end over one [`BatchEngine`]. See the
+/// module docs for semantics.
+pub struct Server {
+    engine: BatchEngine,
+    queue: VecDeque<(u64, Request)>,
+    queue_cap: usize,
+    entries: Vec<Entry>,
+    /// Engine tag → ticket, in admission order (tags strictly increase).
+    tags: Vec<(u64, u64)>,
+    finished: Vec<Completion>,
+    events: Vec<StepEvent>,
+    now: u64,
+}
+
+impl Server {
+    /// A server over the contiguous-equivalent cache: `slots` lanes, each
+    /// able to hold a full sequence, and room for `queue_cap` waiting
+    /// requests.
+    pub fn new(model: &Model, slots: usize, queue_cap: usize, cfg: GenerateConfig) -> Server {
+        Server::from_engine(BatchEngine::new(model, slots, cfg), queue_cap)
+    }
+
+    /// A server over a paged cache (`n_pages × page_rows` shared rows) —
+    /// the production shape: more slots than the pool could hold at full
+    /// length, relying on paging + preemption under pressure.
+    pub fn with_paging(
+        model: &Model,
+        slots: usize,
+        page_rows: usize,
+        n_pages: usize,
+        queue_cap: usize,
+        cfg: GenerateConfig,
+    ) -> Server {
+        Server::from_engine(
+            BatchEngine::with_paging(model, slots, page_rows, n_pages, cfg),
+            queue_cap,
+        )
+    }
+
+    fn from_engine(engine: BatchEngine, queue_cap: usize) -> Server {
+        assert!(queue_cap > 0, "a server needs a non-empty admission queue");
+        Server {
+            engine,
+            queue: VecDeque::new(),
+            queue_cap,
+            entries: Vec::new(),
+            tags: Vec::new(),
+            finished: Vec::new(),
+            events: Vec::new(),
+            now: 0,
+        }
+    }
+
+    /// Submit a request with no deadline and no sink. Returns a ticket
+    /// for [`Server::cancel`], or [`SubmitError::QueueFull`].
+    pub fn submit(&mut self, req: Request) -> Result<u64, SubmitError> {
+        self.submit_opts(req, None, None)
+    }
+
+    /// Submit with an optional **absolute** logical deadline (the request
+    /// is expired with [`FinishReason::Deadline`] at the first pump round
+    /// where `now ≥ deadline`, keeping any tokens generated so far) and
+    /// an optional per-request sink for incremental delivery.
+    pub fn submit_opts(
+        &mut self,
+        req: Request,
+        deadline: Option<u64>,
+        sink: Option<Box<dyn TokenSink>>,
+    ) -> Result<u64, SubmitError> {
+        if self.queue.len() >= self.queue_cap {
+            return Err(SubmitError::QueueFull);
+        }
+        let ticket = self.entries.len() as u64;
+        self.entries.push(Entry {
+            state: State::Queued,
+            deadline,
+            sink,
+        });
+        self.queue.push_back((ticket, req));
+        Ok(ticket)
+    }
+
+    /// Cancel a submitted request (queued or in flight). Its partial
+    /// completion (reason [`FinishReason::Cancelled`]) is delivered like
+    /// any other. Returns `false` if the ticket already finished.
+    pub fn cancel(&mut self, ticket: u64) -> bool {
+        let tag = match self.entries.get(ticket as usize).map(|e| &e.state) {
+            None | Some(State::Done) => return false,
+            Some(State::Queued) => None,
+            Some(State::Engine(t)) => Some(*t),
+        };
+        self.retire(ticket, tag, FinishReason::Cancelled);
+        true
+    }
+
+    /// One scheduling round. Returns `true` while any request is queued
+    /// or in flight — `while server.pump(&model) {}` drains everything
+    /// (see [`Server::run_until_idle`]).
+    pub fn pump(&mut self, model: &Model) -> bool {
+        self.now += 1;
+        self.expire();
+        // admit in submission order while the engine takes them; the
+        // front blocks the line (no overtaking — keeps admission fair and
+        // arrival-order reasoning simple)
+        while let Some((ticket, req)) = self.queue.pop_front() {
+            match self.engine.try_admit(model, &req) {
+                Admission::Admitted(tag) => {
+                    self.tags.push((tag, ticket));
+                    self.entries[ticket as usize].state = State::Engine(tag);
+                }
+                Admission::Rejected(c) => self.finish(ticket, c),
+                Admission::Busy => {
+                    self.queue.push_front((ticket, req));
+                    break;
+                }
+            }
+        }
+        let mut events = std::mem::take(&mut self.events);
+        let more = self.engine.step(model, &mut events);
+        for ev in events.drain(..) {
+            match ev {
+                StepEvent::Token { tag, token, .. } => {
+                    let ticket = self.ticket_of(tag);
+                    if let Some(sink) = self.entries[ticket as usize].sink.as_mut() {
+                        sink.on_token(token);
+                    }
+                }
+                StepEvent::Finished { tag, completion } => {
+                    let ticket = self.ticket_of(tag);
+                    self.finish(ticket, completion);
+                }
+                StepEvent::Preempted { .. } | StepEvent::Resumed { .. } => {}
+            }
+        }
+        self.events = events;
+        more || !self.queue.is_empty()
+    }
+
+    /// Pump until every submitted request has finished.
+    pub fn run_until_idle(&mut self, model: &Model) {
+        while self.pump(model) {}
+    }
+
+    /// Take all completions delivered since the last drain (finish
+    /// order).
+    pub fn drain_finished(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// Current logical time (pump rounds so far).
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Requests waiting in the admission queue.
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// The underlying engine (stats, page gauges).
+    pub fn engine(&self) -> &BatchEngine {
+        &self.engine
+    }
+
+    /// Expire every live request whose deadline has passed.
+    fn expire(&mut self) {
+        for ticket in 0..self.entries.len() as u64 {
+            let e = &self.entries[ticket as usize];
+            let tag = match (&e.state, e.deadline) {
+                (State::Done, _) | (_, None) => continue,
+                (_, Some(d)) if self.now < d => continue,
+                (State::Queued, Some(_)) => None,
+                (State::Engine(t), Some(_)) => Some(*t),
+            };
+            self.retire(ticket, tag, FinishReason::Deadline);
+        }
+    }
+
+    /// Pull a live request out of the queue (`tag == None`) or the engine
+    /// (`tag == Some`) and deliver its partial completion with `reason`.
+    fn retire(&mut self, ticket: u64, tag: Option<u64>, reason: FinishReason) {
+        let completion = match tag {
+            None => {
+                let qi = self
+                    .queue
+                    .iter()
+                    .position(|(t, _)| *t == ticket)
+                    .expect("queued entry is in the queue");
+                let (_, req) = self.queue.remove(qi).expect("position is in range");
+                Completion {
+                    id: req.id,
+                    prompt_len: req.prompt.len(),
+                    tokens: Vec::new(),
+                    reason,
+                }
+            }
+            Some(tag) => self
+                .engine
+                .cancel(tag, reason)
+                .expect("engine-state entry is in flight"),
+        };
+        self.finish(ticket, completion);
+    }
+
+    /// Deliver a completion: notify the sink, mark done, stash for
+    /// [`Server::drain_finished`].
+    fn finish(&mut self, ticket: u64, completion: Completion) {
+        let e = &mut self.entries[ticket as usize];
+        if let Some(sink) = e.sink.as_mut() {
+            sink.on_finish(&completion);
+        }
+        e.state = State::Done;
+        e.sink = None;
+        self.finished.push(completion);
+    }
+
+    /// Ticket behind an engine tag (tags strictly increase → binary
+    /// search).
+    fn ticket_of(&self, tag: u64) -> u64 {
+        let i = self
+            .tags
+            .binary_search_by_key(&tag, |&(t, _)| t)
+            .expect("event tag was admitted here");
+        self.tags[i].1
+    }
+}

@@ -22,7 +22,11 @@
 //! per-row arithmetic exactly, including the softmax evaluation order).
 //! Therefore prefill + N decode steps produce byte-identical logits to N
 //! full re-forwards over the growing sequence, for every quantization
-//! method and any `QUAFF_THREADS` width (`tests/decode_parity.rs`).
+//! method and any `QUAFF_THREADS` width (`tests/decode_parity.rs`). The
+//! same argument covers the cache's page geometry: [`attend_cached`]
+//! reads logical rows through the slot's page table, which relocates rows
+//! without changing their values or read order, so paged ≡ contiguous
+//! decode is also bitwise (`tests/serve_parity.rs`).
 
 use super::layers::{attention_forward, gelu_forward};
 use super::{Block, Model};
@@ -31,21 +35,27 @@ use crate::tensor::pool::{self, shard_range, SplitMut};
 use crate::tensor::{kernels, Matrix, Workspace};
 
 /// Causal attention for **one query row** against a slot's cached K/V rows
-/// `0..=pos`. `k_lane`/`v_lane` are row-major `[rows × d]` buffers; `base`
-/// is the index of the slot's row 0 inside the lane (`slot · max_seq` for a
-/// [`KvCache`] lane, 0 for a plain matrix). `scores` is caller scratch
-/// (resized here); `out_row` (length `d`) is fully overwritten.
+/// `0..=pos`. `k_lane`/`v_lane` are row-major `[rows × d]` buffers;
+/// `pages`/`page_rows` are the slot's page table ([`KvCache::table`]):
+/// logical row `j` lives at physical row
+/// `pages[j / page_rows] · page_rows + j % page_rows` (for a plain
+/// contiguous matrix pass `&[0]` with `page_rows = rows`). `scores` is
+/// caller scratch (resized here); `out_row` (length `d`) is fully
+/// overwritten.
 ///
 /// The arithmetic mirrors `layers::attention_forward` row `pos` exactly —
 /// same dot-product order, same max/exp/normalize sequence, same
-/// skip-zero context accumulation — so cached and uncached attention are
+/// skip-zero context accumulation. The page table only *relocates* rows;
+/// they are read in the same logical order with the same values, so
+/// cached ≡ uncached and paged ≡ contiguous attention are both
 /// bit-identical.
 #[allow(clippy::too_many_arguments)]
 pub fn attend_cached(
     q_row: &[f32],
     k_lane: &[f32],
     v_lane: &[f32],
-    base: usize,
+    pages: &[usize],
+    page_rows: usize,
     pos: usize,
     d: usize,
     n_heads: usize,
@@ -61,7 +71,8 @@ pub fn attend_cached(
         let off = h * dh;
         let qh = &q_row[off..off + dh];
         for (j, s) in scores.iter_mut().enumerate() {
-            let krow = &k_lane[(base + j) * d + off..(base + j) * d + off + dh];
+            let prow = pages[j / page_rows] * page_rows + j % page_rows;
+            let krow = &k_lane[prow * d + off..prow * d + off + dh];
             let mut acc = 0.0f32;
             for t in 0..dh {
                 acc += qh[t] * krow[t];
@@ -85,7 +96,8 @@ pub fn attend_cached(
             if pv == 0.0 {
                 continue;
             }
-            let vrow = &v_lane[(base + j) * d + off..(base + j) * d + off + dh];
+            let prow = pages[j / page_rows] * page_rows + j % page_rows;
+            let vrow = &v_lane[prow * d + off..prow * d + off + dh];
             for t in 0..dh {
                 orow[t] += pv * vrow[t];
             }
@@ -132,8 +144,9 @@ impl Block {
         let d = x.cols();
         let t = rows.len();
         let mut attn_out = ws.take_matrix("blk.dec.attn", t, d);
-        let max_seq = kv.max_seq();
-        let (k_lane, v_lane) = kv.lanes(layer);
+        let kvr: &KvCache = kv;
+        let page_rows = kvr.page_rows();
+        let (k_lane, v_lane) = kvr.lanes(layer);
         let work: usize = rows.iter().map(|&(_, p)| (p + 1) * d * 2).sum();
         let shards = pool::shards_for(t, work);
         if shards <= 1 {
@@ -143,7 +156,8 @@ impl Block {
                     q.row(r),
                     k_lane,
                     v_lane,
-                    slot * max_seq,
+                    kvr.table(slot),
+                    page_rows,
                     pos,
                     d,
                     self.n_heads,
@@ -168,7 +182,8 @@ impl Block {
                         q_ref.row(r),
                         k_lane,
                         v_lane,
-                        slot * max_seq,
+                        kvr.table(slot),
+                        page_rows,
                         pos,
                         d,
                         n_heads,
@@ -299,6 +314,11 @@ impl Model {
         assert_eq!(kv.len(slot), 0, "prefill requires a reset slot");
         let (mut x, _ptc) = self.embed(&[prompt.to_vec()]);
         let t = x.rows(); // n_virtual + prompt.len()
+        assert!(
+            kv.reserve(slot, t),
+            "page pool exhausted prefilling slot {slot} ({t} rows) — admit \
+             through KvCache::can_admit first"
+        );
         let rows: Vec<(usize, usize)> = (0..t).map(|p| (slot, p)).collect();
         for (l, blk) in self.blocks.iter().enumerate() {
             let nx = blk.forward_cached(&x, l, &rows, kv, ws);
@@ -345,6 +365,11 @@ impl Model {
             let pos = kv.len(slot);
             assert!(pos > 0, "decode_step on slot {slot} before prefill");
             assert!(pos < self.cfg.max_seq, "slot {slot} ran out of positions");
+            assert!(
+                kv.reserve(slot, 1),
+                "page pool exhausted extending slot {slot} — the scheduler \
+                 must reserve (and preempt on failure) before decode_step"
+            );
             let row = x.row_mut(i);
             let te = self.emb.tok.row(tok as usize);
             let pe = self.emb.pos.row(pos);

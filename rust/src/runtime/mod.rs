@@ -389,11 +389,13 @@ fn native_attn_decode(inputs: &[HostValue]) -> Result<Vec<HostValue>> {
     }
     let mut out = Matrix::zeros(1, d);
     let mut scores = Vec::new();
+    // contiguous K/V: a one-page identity table covering all rows
     crate::model::decode::attend_cached(
         q.row(0),
         k.data(),
         v.data(),
-        0,
+        &[0],
+        k.rows(),
         k.rows() - 1,
         d,
         n_heads,

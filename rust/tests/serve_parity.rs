@@ -1,0 +1,408 @@
+//! Serving-tier parity suite: the paged KV cache and the request
+//! front-end must be **bitwise invisible** to decoding.
+//!
+//! * paged ≡ contiguous: every method's batched token streams are
+//!   identical whether the cache is one contiguous lane per slot or a
+//!   shared page pool, at page sizes from one row to a whole sequence;
+//! * preemption round-trips: a request evicted under page pressure and
+//!   readmitted later produces byte-identical output (saved RNG + row
+//!   rebuild by re-prefill);
+//! * front-end determinism: the same seed and request set yield the same
+//!   completions regardless of arrival order, slot count, page size or
+//!   pump cadence;
+//! * deadlines, cancellation and queue backpressure behave as documented
+//!   and deliver deterministic partial prefixes.
+//!
+//! One `#[test]` body because it flips the process-global active thread
+//! width (`pool::set_active_threads`) between legs, like
+//! `decode_parity.rs`.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use quaff::infer::{
+    self, BatchEngine, Completion, FinishReason, GenerateConfig, KvCache, Request, Server,
+    SubmitError, TokenSink,
+};
+use quaff::methods::{MethodConfig, MethodKind};
+use quaff::model::{Model, ModelConfig};
+use quaff::outlier::{BudgetAllocator, BudgetPolicy, OutlierDetector};
+use quaff::peft::PeftKind;
+use quaff::tensor::{pool, Workspace};
+use quaff::util::prng::Rng;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 64,
+        max_seq: 64,
+        ln_eps: 1e-5,
+        inject_outliers: true,
+        lora_rank: 4,
+        lora_alpha: 8.0,
+        lora_dropout: 0.0,
+        n_virtual: 4,
+    }
+}
+
+/// Calibrate + convert a fresh tiny model to `kind` (optionally with a
+/// PEFT adapter attached before calibration).
+fn quantized_model(kind: MethodKind, peft: Option<PeftKind>, seed: u64) -> Model {
+    let mut m = Model::new(tiny_cfg(), seed);
+    if let Some(p) = peft {
+        m.attach_peft(p);
+    }
+    let mut r = Rng::new(seed ^ 0xC0FFEE);
+    m.start_calibration();
+    for _ in 0..3 {
+        let toks: Vec<Vec<u32>> = (0..2)
+            .map(|_| (0..10).map(|_| r.below(64) as u32).collect())
+            .collect();
+        let _ = m.forward(&toks, false);
+    }
+    let calib = m.finish_calibration();
+    let alloc = BudgetAllocator::new(BudgetPolicy::PaperNonUniform);
+    let det = OutlierDetector::new(20.0);
+    let _ = m.apply_method(kind, &calib, &alloc, &MethodConfig::default(), &det);
+    m
+}
+
+fn mixed_requests(n: usize, seed: u64, max_new: usize) -> Vec<Request> {
+    let mut r = Rng::new(seed);
+    (0..n)
+        .map(|i| Request {
+            id: i as u64,
+            prompt: (0..3 + 2 * i).map(|_| r.below(64) as u32).collect(),
+            max_new,
+        })
+        .collect()
+}
+
+/// Paged engines at several page sizes must reproduce the contiguous
+/// engine's streams exactly; the contiguous engine must match solo
+/// `generate_cached` (row-local batching).
+fn check_paged_matches_contiguous(m: &Model, label: &str) {
+    let requests = mixed_requests(4, 0x7A6E, 6);
+    let cfg = GenerateConfig::greedy(6);
+    let mut reference = BatchEngine::new(m, 3, cfg.clone());
+    let base = reference.run_requests(m, &requests);
+
+    let mut ws = Workspace::new();
+    let mut kv = KvCache::for_model(m, 1, &mut ws);
+    for (c, req) in base.iter().zip(&requests) {
+        assert_eq!(c.id, req.id);
+        let solo = infer::generate_cached(m, &req.prompt, &cfg, &mut kv, 0, &mut ws);
+        assert_eq!(c.tokens, solo, "{label}: contiguous batched vs solo");
+    }
+    kv.release(&mut ws);
+
+    // one row per page, a mid-size page, and pages larger than any prompt
+    for (page_rows, n_pages) in [(1usize, 96usize), (16, 8), (64, 2)] {
+        let mut paged = BatchEngine::with_paging(m, 3, page_rows, n_pages, cfg.clone());
+        let got = paged.run_requests(m, &requests);
+        for (a, b) in base.iter().zip(&got) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "{label}: paged p{page_rows} diverged");
+            assert_eq!(a.reason, b.reason, "{label}: paged p{page_rows} reason");
+        }
+        assert_eq!(paged.pages().0, 0, "{label}: pages leaked (p{page_rows})");
+        assert!(paged.pages_hwm() > 0 && paged.pages_hwm() <= n_pages);
+    }
+}
+
+/// Drive one server over `requests` submitted in `order`, returning the
+/// token streams sorted by request id.
+fn serve_run(
+    m: &Model,
+    requests: &[Request],
+    order: &[usize],
+    slots: usize,
+    paging: Option<(usize, usize)>,
+    cfg: &GenerateConfig,
+    pump_between: bool,
+) -> Vec<Vec<u32>> {
+    let cap = requests.len().max(1);
+    let mut srv = match paging {
+        None => Server::new(m, slots, cap, cfg.clone()),
+        Some((pr, np)) => Server::with_paging(m, slots, pr, np, cap, cfg.clone()),
+    };
+    for &i in order {
+        srv.submit(requests[i].clone()).expect("queue_cap covers the whole set");
+        if pump_between {
+            srv.pump(m);
+        }
+    }
+    srv.run_until_idle(m);
+    let mut done = srv.drain_finished();
+    assert_eq!(done.len(), requests.len());
+    assert_eq!(srv.engine().pages().0, 0, "pages leaked after drain");
+    done.sort_by_key(|c| c.id);
+    done.into_iter().map(|c| c.tokens).collect()
+}
+
+/// Same seed + request set ⇒ identical completions for every arrival
+/// order, slot count, page size and pump cadence — greedy and sampled.
+fn check_front_end_determinism(m: &Model) {
+    let requests = mixed_requests(6, 0xD1CE, 8);
+    let identity: Vec<usize> = (0..6).collect();
+    let reversed: Vec<usize> = (0..6).rev().collect();
+    let shuffled = vec![2usize, 5, 0, 3, 1, 4];
+    for cfg in [
+        GenerateConfig::greedy(8),
+        GenerateConfig::sampled(8, 1.0, 10, 31),
+    ] {
+        let base = serve_run(m, &requests, &identity, 5, None, &cfg, false);
+        let legs = [
+            (reversed.as_slice(), 5, None, false),
+            (shuffled.as_slice(), 2, Some((4usize, 16usize)), false),
+            (identity.as_slice(), 3, Some((16, 8)), true),
+            (reversed.as_slice(), 2, Some((1, 96)), true),
+        ];
+        for (order, slots, paging, pump_between) in legs {
+            let got = serve_run(m, &requests, order, slots, paging, &cfg, pump_between);
+            assert_eq!(
+                base, got,
+                "completions depend on arrival order / slots / paging"
+            );
+        }
+    }
+}
+
+/// A pool sized to force eviction mid-decode must still reproduce the
+/// ample-pool streams byte-for-byte (greedy and sampled), and every
+/// parked request must be readmitted.
+fn check_preemption_round_trip(m: &Model) {
+    let mut r = Rng::new(0xE71C);
+    let requests: Vec<Request> = (0..6)
+        .map(|i| Request {
+            id: i as u64,
+            prompt: (0..10).map(|_| r.below(64) as u32).collect(),
+            max_new: 20,
+        })
+        .collect();
+    for cfg in [
+        GenerateConfig::greedy(20),
+        GenerateConfig::sampled(20, 0.9, 8, 7),
+    ] {
+        let mut ample = BatchEngine::new(m, 4, cfg.clone());
+        let base = ample.run_requests(m, &requests);
+        assert_eq!(ample.stats.preemptions, 0, "contiguous cache cannot preempt");
+        // 16 pages × 4 rows = 64 pooled rows for 4 slots that peak at
+        // 30 rows each — eviction is unavoidable
+        let mut tight = BatchEngine::with_paging(m, 4, 4, 16, cfg.clone());
+        let got = tight.run_requests(m, &requests);
+        assert!(tight.stats.preemptions > 0, "pool was sized to force preemption");
+        assert!(tight.stats.resumes > 0, "parked requests must be readmitted");
+        for (a, b) in base.iter().zip(&got) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "preempted request {} diverged", a.id);
+            assert_eq!(a.reason, b.reason);
+        }
+        assert_eq!(tight.pages().0, 0, "pages leaked after the run");
+        assert!(tight.pages_hwm() <= 16);
+    }
+}
+
+/// EOS mid-stream finishes without emitting; degenerate requests are
+/// rejected with empty output.
+fn check_eos_and_rejection(m: &Model) {
+    let req = Request {
+        id: 0,
+        prompt: vec![9, 8, 7, 6],
+        max_new: 8,
+    };
+    let cfg = GenerateConfig::greedy(8);
+    let mut engine = BatchEngine::new(m, 1, cfg.clone());
+    let full = engine.run_requests(m, std::slice::from_ref(&req));
+    let stream = &full[0].tokens;
+    assert_eq!(full[0].reason, FinishReason::Length);
+    // pick the first token that does not repeat an earlier one, so the
+    // stream stops exactly there
+    let j = (1..stream.len())
+        .find(|&j| !stream[..j].contains(&stream[j]))
+        .unwrap_or(0);
+    let mut ecfg = cfg.clone();
+    ecfg.eos = Some(stream[j]);
+    let mut engine = BatchEngine::new(m, 1, ecfg);
+    let done = engine.run_requests(m, std::slice::from_ref(&req));
+    assert_eq!(done[0].reason, FinishReason::Eos);
+    assert_eq!(done[0].tokens, stream[..j], "EOS must keep the exact prefix");
+
+    let degenerate = [
+        Request {
+            id: 1,
+            prompt: vec![],
+            max_new: 4,
+        },
+        Request {
+            id: 2,
+            prompt: vec![1; 100], // longer than max_seq
+            max_new: 4,
+        },
+        Request {
+            id: 3,
+            prompt: vec![1, 2],
+            max_new: 0,
+        },
+    ];
+    let mut engine = BatchEngine::new(m, 1, cfg);
+    let done = engine.run_requests(m, &degenerate);
+    for c in &done {
+        assert_eq!(c.reason, FinishReason::Rejected);
+        assert!(c.tokens.is_empty());
+    }
+}
+
+/// Deadlines expire at a deterministic pump round keeping the exact
+/// stream prefix; cancellation works queued and in flight; a full queue
+/// refuses with `QueueFull` until pumped.
+fn check_deadline_cancel_backpressure(m: &Model) {
+    let cfg = GenerateConfig::greedy(30);
+    let req = Request {
+        id: 9,
+        prompt: vec![5, 4, 3, 2],
+        max_new: 30,
+    };
+    let mut reference = BatchEngine::new(m, 1, cfg.clone());
+    let full = reference.run_requests(m, std::slice::from_ref(&req));
+    let full_toks = &full[0].tokens;
+    assert_eq!(full_toks.len(), 30);
+
+    // expires mid-flight at round 4 → exactly 3 resolved tokens
+    let mut srv = Server::new(m, 1, 4, cfg.clone());
+    srv.submit_opts(req.clone(), Some(4), None).expect("queue empty");
+    srv.run_until_idle(m);
+    let done = srv.drain_finished();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].reason, FinishReason::Deadline);
+    assert_eq!(done[0].tokens.len(), 3, "logical deadlines are deterministic");
+    assert_eq!(done[0].tokens[..], full_toks[..3], "expiry must keep the prefix");
+
+    // already-passed deadline → expired while still queued, no tokens
+    let mut srv = Server::new(m, 1, 4, cfg.clone());
+    srv.submit_opts(req.clone(), Some(0), None).expect("queue empty");
+    srv.run_until_idle(m);
+    let done = srv.drain_finished();
+    assert_eq!(done[0].reason, FinishReason::Deadline);
+    assert!(done[0].tokens.is_empty());
+
+    // cancel: one queued behind a busy engine, one in flight
+    let mut srv = Server::new(m, 1, 4, cfg.clone());
+    let ta = srv.submit(req.clone()).expect("queue empty");
+    let tb = srv.submit(req.clone()).expect("within cap");
+    srv.pump(m);
+    assert!(srv.cancel(tb), "queued request is cancellable");
+    assert!(!srv.cancel(tb), "second cancel is a no-op");
+    assert!(srv.cancel(ta), "in-flight request is cancellable");
+    assert!(!srv.pump(m), "nothing left in flight");
+    let mut done = srv.drain_finished();
+    done.sort_by_key(|c| c.id);
+    assert_eq!(done.len(), 2);
+    for c in &done {
+        assert_eq!(c.reason, FinishReason::Cancelled);
+    }
+    let cancelled_active = done.iter().find(|c| !c.tokens.is_empty()).expect("partial");
+    assert_eq!(
+        cancelled_active.tokens[..],
+        full_toks[..cancelled_active.tokens.len()],
+        "cancelled stream must be a prefix of the full stream"
+    );
+
+    // backpressure: cap 1 → second submit refused until a pump drains
+    let mut srv = Server::new(m, 1, 1, cfg);
+    srv.submit(req.clone()).expect("queue empty");
+    assert_eq!(srv.submit(req.clone()).unwrap_err(), SubmitError::QueueFull);
+    srv.pump(m); // admits the queued request into the engine
+    srv.submit(req.clone()).expect("queue drained by the pump");
+    while srv.pump(m) {}
+}
+
+#[derive(Default)]
+struct TapState {
+    streamed: Vec<u32>,
+    finishes: usize,
+    final_tokens: Vec<u32>,
+}
+
+/// Records the incremental stream and the final completion.
+struct Tap(Rc<RefCell<TapState>>);
+
+impl TokenSink for Tap {
+    fn on_token(&mut self, token: u32) {
+        self.0.borrow_mut().streamed.push(token);
+    }
+    fn on_finish(&mut self, c: &Completion) {
+        let mut s = self.0.borrow_mut();
+        s.finishes += 1;
+        s.final_tokens = c.tokens.clone();
+    }
+}
+
+/// Incremental delivery equals the final completion token-for-token —
+/// including across a preemption (parked tokens are never re-streamed).
+fn check_token_sink_streams(m: &Model) {
+    let requests = mixed_requests(4, 0x51A7, 12);
+    let cfg = GenerateConfig::greedy(12);
+    // tight paged pool so at least admission contention is in play
+    let mut srv = Server::with_paging(m, 4, 4, 16, requests.len(), cfg);
+    let taps: Vec<Rc<RefCell<TapState>>> = requests
+        .iter()
+        .map(|req| {
+            let state = Rc::new(RefCell::new(TapState::default()));
+            let sink = Box::new(Tap(Rc::clone(&state)));
+            srv.submit_opts(req.clone(), None, Some(sink)).expect("within cap");
+            state
+        })
+        .collect();
+    srv.run_until_idle(m);
+    let mut done = srv.drain_finished();
+    done.sort_by_key(|c| c.id);
+    assert_eq!(done.len(), requests.len());
+    for (c, tap) in done.iter().zip(&taps) {
+        let s = tap.borrow();
+        assert_eq!(s.finishes, 1, "on_finish must fire exactly once");
+        assert_eq!(s.streamed, c.tokens, "streamed tokens != completion tokens");
+        assert_eq!(s.final_tokens, c.tokens);
+    }
+}
+
+#[test]
+fn serving_tier_is_bitwise_invisible() {
+    // 8-wide pool so the 4-wide legs genuinely shard even on serial CI legs
+    pool::init(pool::ThreadConfig { threads: 8 });
+    for width in [1usize, 4] {
+        pool::set_active_threads(width);
+        for kind in MethodKind::ALL {
+            let m = quantized_model(kind, None, 0x5E12 + width as u64);
+            check_paged_matches_contiguous(&m, &format!("{kind:?} @ {width}t"));
+        }
+        // virtual prompt tokens occupy cache rows — paging and admission
+        // must account for them
+        let m = quantized_model(MethodKind::Quaff, Some(PeftKind::Prompt), 0xADA + width as u64);
+        check_paged_matches_contiguous(&m, &format!("Quaff+Prompt @ {width}t"));
+    }
+
+    pool::set_active_threads(1);
+    let m = quantized_model(MethodKind::Quaff, None, 0xBEEF);
+    check_front_end_determinism(&m);
+    check_preemption_round_trip(&m);
+    check_eos_and_rejection(&m);
+    check_deadline_cancel_backpressure(&m);
+    check_token_sink_streams(&m);
+
+    // cross-width: a paged server's completions are identical at 1 and 4
+    // threads (sharded decode is bit-deterministic)
+    let requests = mixed_requests(5, 0xC405, 7);
+    let cfg = GenerateConfig::greedy(7);
+    let order: Vec<usize> = (0..5).collect();
+    pool::set_active_threads(1);
+    let t1 = serve_run(&m, &requests, &order, 3, Some((4, 16)), &cfg, false);
+    pool::set_active_threads(4);
+    let t4 = serve_run(&m, &requests, &order, 3, Some((4, 16)), &cfg, false);
+    assert_eq!(t1, t4, "serving diverged between 1 and 4 threads");
+    // leave the default width behind for any later in-process user
+    pool::set_active_threads(pool::global().threads());
+}

@@ -3,14 +3,14 @@
 //! Compares fresh benchmark records (`BENCH_kernels.json` from
 //! `bench_kernels`, `BENCH_threads.json` from `bench_threads`,
 //! `BENCH_infer.json` from `bench_infer`, `BENCH_qgemm.json` from
-//! `bench_qgemm`) against the
+//! `bench_qgemm`, `BENCH_serve.json` from `bench_serve`) against the
 //! committed `BENCH_baseline.json` and fails (exit 1) when any mean
 //! regresses beyond the tolerance, or when a baselined kernel disappeared
 //! from the fresh records. Always writes `BENCH_gate_diff.json` so CI can
 //! upload the comparison as an artifact.
 //!
 //! ```text
-//! bench_gate [--baseline F] [--fresh F1,F2] [--tol 0.25] [--diff F] [--update]
+//! bench_gate [--baseline F] [--fresh F1,F2] [--tol 0.25] [--diff F] [--update] [--meta]
 //! ```
 //!
 //! * An **empty baseline** (`"entries": {}`) puts the gate in *seeding*
@@ -24,6 +24,9 @@
 //!   machine delta, not a regression — re-seed with `--update` on the
 //!   matching runner class instead. The stamp is propagated into the
 //!   baseline on `--update`; unstamped legacy records compare as before.
+//! * `--meta` prints each fresh record's `{isa, tile, threads}` stamp and
+//!   exits non-zero when any record is missing or unstamped — CI uses it
+//!   to surface the measurement context instead of grepping raw JSON.
 //!
 //! See DESIGN.md §CI for the refresh workflow.
 
@@ -32,6 +35,19 @@ use std::collections::BTreeMap;
 use std::process::ExitCode;
 
 const DEFAULT_TOL: f64 = 0.25;
+
+/// Gate-comparable per-record metrics. `ns_per_op` is the common key; the
+/// serve record adds latency percentiles and the (deterministic) page-pool
+/// high-water mark. Context fields (`tokens_per_sec`, `mean_batch`, …) are
+/// deliberately not gated.
+const METRICS: [&str; 6] = [
+    "alloc_ns_per_op",
+    "workspace_ns_per_op",
+    "ns_per_op",
+    "p50_ns",
+    "p99_ns",
+    "pages_hwm",
+];
 
 #[derive(Debug, PartialEq)]
 enum Verdict {
@@ -60,7 +76,7 @@ fn extract_entries(j: &Json) -> Vec<(String, f64)> {
     };
     for k in kernels {
         let name = k.get("name").and_then(Json::as_str).unwrap_or("?");
-        for metric in ["alloc_ns_per_op", "workspace_ns_per_op", "ns_per_op"] {
+        for metric in METRICS {
             if let Some(v) = k.get(metric).and_then(Json::as_f64) {
                 out.push((format!("{bench}/{name}/{metric}"), v));
             }
@@ -171,12 +187,60 @@ fn isa_conflict(baseline: Option<&str>, fresh: Option<&str>) -> bool {
     matches!((baseline, fresh), (Some(b), Some(f)) if b != f)
 }
 
+/// The full `{isa, tile, threads}` stamp of a record, or why it's unusable.
+fn stamp_of(j: &Json) -> Result<(String, String, u64), String> {
+    let meta = j.get("meta").ok_or_else(|| "no meta stamp".to_string())?;
+    let field = |k: &str| {
+        meta.get(k)
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| format!("meta stamp has no '{k}'"))
+    };
+    let threads = meta
+        .get("threads")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| "meta stamp has no 'threads'".to_string())?;
+    Ok((field("isa")?, field("tile")?, threads as u64))
+}
+
+/// `--meta`: surface each fresh record's measurement stamp so the CI log
+/// shows which ISA / tile / thread count the numbers were taken under.
+/// Exits non-zero when any record is missing, unparseable or unstamped —
+/// an unstamped record would otherwise compare silently across machines.
+fn print_meta(paths: &[String]) -> ExitCode {
+    let mut bad = 0usize;
+    for path in paths {
+        let stamp = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read: {e}"))
+            .and_then(|text| Json::parse(&text).map_err(|e| format!("cannot parse: {e}")))
+            .and_then(|j| stamp_of(&j));
+        match stamp {
+            Ok((isa, tile, threads)) => {
+                println!("{path}: isa={isa} tile={tile} threads={threads}");
+            }
+            Err(e) => {
+                bad += 1;
+                eprintln!("bench_gate: {path}: {e}");
+            }
+        }
+    }
+    if bad == 0 {
+        return ExitCode::SUCCESS;
+    }
+    eprintln!(
+        "bench_gate: {bad} record(s) without a usable meta stamp — every bench must run and \
+         stamp its measurement context (see benches/harness.rs BenchMeta)."
+    );
+    ExitCode::from(2)
+}
+
 struct Args {
     baseline: String,
     fresh: Vec<String>,
     tol: Option<f64>,
     diff: String,
     update: bool,
+    meta: bool,
 }
 
 fn parse_args() -> Result<Args, String> {
@@ -187,10 +251,12 @@ fn parse_args() -> Result<Args, String> {
             "BENCH_threads.json".to_string(),
             "BENCH_infer.json".to_string(),
             "BENCH_qgemm.json".to_string(),
+            "BENCH_serve.json".to_string(),
         ],
         tol: None,
         diff: "BENCH_gate_diff.json".to_string(),
         update: false,
+        meta: false,
     };
     let mut it = std::env::args().skip(1);
     while let Some(a) = it.next() {
@@ -207,6 +273,7 @@ fn parse_args() -> Result<Args, String> {
             }
             "--diff" => args.diff = value("--diff")?,
             "--update" => args.update = true,
+            "--meta" => args.meta = true,
             other => return Err(format!("unknown argument '{other}'")),
         }
     }
@@ -221,6 +288,10 @@ fn main() -> ExitCode {
             return ExitCode::from(2);
         }
     };
+
+    if args.meta {
+        return print_meta(&args.fresh);
+    }
 
     // fresh records (missing files are tolerated here; the baseline check
     // below catches a silently-skipped bench)
@@ -415,6 +486,41 @@ mod tests {
         let e = extract_entries(&threads);
         assert!(e.contains(&("threads/mm/t1".to_string(), 9.0)));
         assert!(e.contains(&("threads/mm/t4".to_string(), 3.0)));
+    }
+
+    #[test]
+    fn extract_reads_serve_metrics_but_not_context_fields() {
+        let serve = Json::parse(
+            r#"{"bench":"serve","kernels":[
+                {"name":"mixed","clients":256,"p50_ns":100.0,"p99_ns":900.0,
+                 "ns_per_op":5.0,"tokens_per_sec":1.0,"mean_batch":3.2,
+                 "pages_hwm":40,"preemptions":7}]}"#,
+        )
+        .unwrap();
+        let e = extract_entries(&serve);
+        assert!(e.contains(&("serve/mixed/p50_ns".to_string(), 100.0)));
+        assert!(e.contains(&("serve/mixed/p99_ns".to_string(), 900.0)));
+        assert!(e.contains(&("serve/mixed/ns_per_op".to_string(), 5.0)));
+        assert!(e.contains(&("serve/mixed/pages_hwm".to_string(), 40.0)));
+        let gated_context = e
+            .iter()
+            .any(|(id, _)| id.contains("tokens_per_sec") || id.contains("preemptions"));
+        assert!(!gated_context, "context fields stay ungated");
+    }
+
+    #[test]
+    fn stamp_of_requires_all_three_fields() {
+        let full = Json::parse(
+            r#"{"bench":"serve","meta":{"isa":"avx2","tile":"4x8","threads":4},"kernels":[]}"#,
+        )
+        .unwrap();
+        assert_eq!(stamp_of(&full), Ok(("avx2".to_string(), "4x8".to_string(), 4)));
+        let unstamped = Json::parse(r#"{"bench":"kernels","kernels":[]}"#).unwrap();
+        assert!(stamp_of(&unstamped).unwrap_err().contains("no meta stamp"));
+        let partial =
+            Json::parse(r#"{"bench":"serve","meta":{"isa":"avx2","threads":4},"kernels":[]}"#)
+                .unwrap();
+        assert!(stamp_of(&partial).unwrap_err().contains("tile"));
     }
 
     #[test]
