@@ -57,6 +57,7 @@ fn main() {
                 id: i as u64,
                 prompt,
                 max_new: 24,
+                tenant: None,
             }
         })
         .collect();

@@ -62,6 +62,7 @@ fn measure(m: &Model, b: usize, budget_secs: f64) -> (InferRecord, InferRecord) 
             id: i as u64,
             prompt: prompt(&mut rng, m.cfg.vocab),
             max_new: DECODE_LEN,
+            tenant: None,
         })
         .collect();
     // prefill-only timing: engines with max_new = 1 spend ~all work in the
@@ -72,6 +73,7 @@ fn measure(m: &Model, b: usize, budget_secs: f64) -> (InferRecord, InferRecord) 
             id: r.id,
             prompt: r.prompt.clone(),
             max_new: 1,
+            tenant: None,
         })
         .collect();
     let cfg = GenerateConfig::greedy(DECODE_LEN);

@@ -74,14 +74,14 @@ fn build_model() -> Model {
 /// paging pressure are both exercised). Sorted by arrival.
 fn workload(n: usize, vocab: usize) -> Vec<Client> {
     let mut rng = Rng::new(WORKLOAD_SEED);
-    let span = (n as u64 / 2).max(1);
+    let span = (n / 2).max(1);
     let mut clients: Vec<Client> = (0..n)
         .map(|_| {
-            let plen = 4 + rng.below(20) as usize;
+            let plen = 4 + rng.below(20);
             let prompt = (0..plen).map(|_| rng.below(vocab) as u32).collect();
-            let max_new = 2 + rng.below(10) as usize;
+            let max_new = 2 + rng.below(10);
             Client {
-                arrival: rng.below(span),
+                arrival: rng.below(span) as u64,
                 prompt,
                 max_new,
             }
@@ -111,6 +111,7 @@ fn run_scenario(name: &str, model: &Model, mut srv: Server, clients: &[Client]) 
                 id: next as u64,
                 prompt: c.prompt.clone(),
                 max_new: c.max_new,
+                tenant: None,
             };
             match srv.submit(req) {
                 Ok(_) => next += 1,

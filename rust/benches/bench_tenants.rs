@@ -1,0 +1,262 @@
+//! Multi-tenant serving load generator: several adapter stacks (LoRA and
+//! soft prompts) resident over ONE shared quantized base, with seeded
+//! mixed-tenant client traffic replayed against `infer::Server`. Measures
+//! how ns/token and request latency scale with the resident tenant count,
+//! the latency of a hot adapter swap on a live registry, and the
+//! tenants-per-base density headline (f32 adapter bytes per tenant vs the
+//! quantized base's weight footprint).
+//!
+//! The schedule is logical like `bench_serve`: arrivals are pump rounds
+//! and every admission/paging decision is deterministic, so only the
+//! wall-clock numbers vary by machine. Emits `BENCH_tenants.json`
+//! (p50_ns / p99_ns / ns_per_op / pages_hwm as gate-comparable metrics)
+//! at the workspace root for `tools/bench_gate`.
+//!
+//!     cargo bench --bench bench_tenants
+//!
+//! `QUAFF_TENANT_CLIENTS` overrides the client count per leg (default
+//! 600; CI uses a smaller scenario to keep the gate leg fast).
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, write_tenants_json, BenchMeta, TenantRecord};
+use quaff::infer::{GenerateConfig, Request, Server, SubmitError};
+use quaff::methods::{MethodConfig, MethodKind};
+use quaff::model::{Model, ModelConfig};
+use quaff::outlier::{BudgetAllocator, BudgetPolicy, OutlierDetector};
+use quaff::peft::{LoraAdapter, PromptTuning, TenantAdapters};
+use quaff::tensor::pool;
+use quaff::util::prng::Rng;
+use std::time::Instant;
+
+const SLOTS: usize = 16;
+const PAGE_ROWS: usize = 16;
+const N_PAGES: usize = 40; // 640 pooled rows — oversubscribed vs 16×512
+const QUEUE_CAP: usize = 64;
+const WORKLOAD_SEED: u64 = 0x7E4A47;
+
+/// One synthetic client: arrival round, tenant tag and request shape.
+struct Client {
+    arrival: u64,
+    tenant: Option<u64>,
+    prompt: Vec<u32>,
+    max_new: usize,
+}
+
+/// Calibrate + quantize an opt-tiny model under Quaff — the same shared
+/// base every tenant decodes against (the load generator measures the
+/// per-row adapter epilogue and registry plumbing, not matmul width).
+fn build_model() -> Model {
+    let cfg = ModelConfig::preset("opt-tiny").expect("preset");
+    let mut m = Model::new(cfg, 0xBE5C);
+    let mut r = Rng::new(0xCA11B);
+    m.start_calibration();
+    for _ in 0..2 {
+        let toks: Vec<Vec<u32>> = (0..2)
+            .map(|_| (0..32).map(|_| r.below(m.cfg.vocab) as u32).collect())
+            .collect();
+        let _ = m.forward(&toks, false);
+    }
+    let calib = m.finish_calibration();
+    let alloc = BudgetAllocator::new(BudgetPolicy::PaperNonUniform);
+    let det = OutlierDetector::new(20.0);
+    let _ = m.apply_method(
+        MethodKind::Quaff,
+        &calib,
+        &alloc,
+        &MethodConfig::default(),
+        &det,
+    );
+    m
+}
+
+/// A per-block q/v LoRA stack. `B` starts at zero in a fresh adapter
+/// (delta ≡ 0), so it is perturbed to a seeded nonzero matrix — the
+/// epilogue must pay for a real delta, not skip a zero one.
+fn lora_stack(cfg: &ModelConfig, seed: u64) -> TenantAdapters {
+    use quaff::tensor::Matrix;
+    let mut rng = Rng::new(seed);
+    let rank = cfg.lora_rank.min(cfg.d_model / 2).max(1);
+    let d = cfg.d_model;
+    let mut t = TenantAdapters::empty(cfg.n_layers);
+    for b in &mut t.blocks {
+        let mut q = LoraAdapter::new(d, d, rank, cfg.lora_alpha, 0.0, &mut rng);
+        q.b.value = Matrix::randn(rank, d, &mut rng, 0.2);
+        let mut v = LoraAdapter::new(d, d, rank, cfg.lora_alpha, 0.0, &mut rng);
+        v.b.value = Matrix::randn(rank, d, &mut rng, 0.2);
+        b.q = Some(q);
+        b.v = Some(v);
+    }
+    t
+}
+
+/// The resident roster: tenant ids `1..=n`, every fourth a soft-prompt
+/// stack (its requests carry `n_virtual` extra rows), the rest LoRA.
+fn stack_for(cfg: &ModelConfig, tenant: u64) -> TenantAdapters {
+    if tenant % 4 == 0 {
+        let mut rng = Rng::new(0xB0B0 + tenant);
+        let mut t = TenantAdapters::empty(cfg.n_layers);
+        t.prompt = Some(PromptTuning::new(cfg.n_virtual, cfg.d_model, &mut rng));
+        t
+    } else {
+        lora_stack(cfg, 0xA110 + tenant)
+    }
+}
+
+/// Seeded open-loop workload: `n` clients with mixed prompt (4..24) and
+/// generation (2..12) lengths, arrivals spread over `n / 2` rounds, each
+/// client round-robined across the `tenants` resident stacks plus the
+/// untagged bare base. Sorted by arrival.
+fn workload(n: usize, vocab: usize, tenants: usize) -> Vec<Client> {
+    let mut rng = Rng::new(WORKLOAD_SEED);
+    let span = (n / 2).max(1);
+    let mut clients: Vec<Client> = (0..n)
+        .map(|i| {
+            let plen = 4 + rng.below(20);
+            let prompt = (0..plen).map(|_| rng.below(vocab) as u32).collect();
+            let max_new = 2 + rng.below(10);
+            let t = (i % (tenants + 1)) as u64;
+            Client {
+                arrival: rng.below(span) as u64,
+                tenant: (t != 0).then_some(t),
+                prompt,
+                max_new,
+            }
+        })
+        .collect();
+    clients.sort_by_key(|c| c.arrival);
+    clients
+}
+
+/// Install the roster, drive one scenario to completion, measure it.
+fn run_scenario(
+    name: &str,
+    model: &Model,
+    mut srv: Server,
+    tenants: usize,
+    clients: &[Client],
+) -> TenantRecord {
+    for t in 1..=tenants as u64 {
+        let prev = srv.install_tenant(t, stack_for(&model.cfg, t));
+        assert!(prev.is_none(), "fresh install must not replace");
+    }
+    let mut arrive: Vec<Option<Instant>> = vec![None; clients.len()];
+    let mut lat_ns: Vec<f64> = vec![0.0; clients.len()];
+    let mut generated = 0u64;
+    let mut next = 0usize;
+    let t0 = Instant::now();
+    loop {
+        while next < clients.len() && clients[next].arrival <= srv.now() {
+            let c = &clients[next];
+            if arrive[next].is_none() {
+                arrive[next] = Some(Instant::now());
+            }
+            let req = Request {
+                id: next as u64,
+                prompt: c.prompt.clone(),
+                max_new: c.max_new,
+                tenant: c.tenant,
+            };
+            match srv.submit(req) {
+                Ok(_) => next += 1,
+                Err(SubmitError::QueueFull) => break,
+            }
+        }
+        let busy = srv.pump(model);
+        for c in srv.drain_finished() {
+            let since = arrive[c.id as usize].expect("finished before arriving?");
+            lat_ns[c.id as usize] = since.elapsed().as_secs_f64() * 1e9;
+            generated += c.tokens.len() as u64;
+        }
+        if !busy && next >= clients.len() {
+            break;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    lat_ns.sort_by(|a, b| a.total_cmp(b));
+    let pct = |p: usize| lat_ns[(lat_ns.len() - 1) * p / 100];
+    let stats = srv.engine().stats;
+    let rec = TenantRecord {
+        name: name.to_string(),
+        clients: clients.len(),
+        tenants,
+        p50_ns: pct(50),
+        p99_ns: pct(99),
+        ns_per_token: wall * 1e9 / generated.max(1) as f64,
+        tokens_per_sec: generated as f64 / wall.max(1e-9),
+        mean_batch: stats.mean_batch(),
+        pages_hwm: srv.engine().pages_hwm(),
+        swaps: srv.engine().registry().swaps(),
+    };
+    println!(
+        "{:<26} p50 {:>9.1} µs  p99 {:>9.1} µs  {:>9.0} tok/s  batch {:>5.2}  pages_hwm {:>3}",
+        rec.name,
+        rec.p50_ns / 1e3,
+        rec.p99_ns / 1e3,
+        rec.tokens_per_sec,
+        rec.mean_batch,
+        rec.pages_hwm,
+    );
+    rec
+}
+
+fn main() {
+    let clients: usize = std::env::var("QUAFF_TENANT_CLIENTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(600);
+    println!(
+        "== bench_tenants: opt-tiny under Quaff, {} clients/leg, {} threads ==\n",
+        clients,
+        pool::active_threads()
+    );
+    let m = build_model();
+    let gen = GenerateConfig::greedy(16);
+
+    // ns/token vs resident tenant count, paged cache throughout
+    let mut records = Vec::new();
+    for tenants in [1usize, 4, 8] {
+        let work = workload(clients, m.cfg.vocab, tenants);
+        let srv = Server::with_paging(&m, SLOTS, PAGE_ROWS, N_PAGES, QUEUE_CAP, gen.clone());
+        let name = format!("mixed tenants{tenants} paged");
+        records.push(run_scenario(&name, &m, srv, tenants, &work));
+    }
+
+    // Hot-swap latency: replace a resident tenant's stack on a live
+    // server. `install_tenant` returns the displaced stack, so two stacks
+    // ping-pong with no per-iteration allocation.
+    let mut srv = Server::new(&m, SLOTS, QUEUE_CAP, gen);
+    srv.install_tenant(1, lora_stack(&m.cfg, 0x51));
+    let mut spare = Some(lora_stack(&m.cfg, 0x52));
+    println!();
+    let swap = bench("adapter hot-swap", 4, 0.2, || {
+        let prev = srv.install_tenant(1, spare.take().expect("displaced stack"));
+        spare = prev;
+    });
+
+    // Density headline: f32 adapter state per tenant vs the quantized
+    // base those tenants share.
+    let base_bytes = m.frozen_linear_bytes();
+    let adapter_bytes = lora_stack(&m.cfg, 0x51).adapter_bytes();
+    println!(
+        "\nbase {} KiB  adapter/tenant {} KiB  tenants/base {:.1}",
+        base_bytes / 1024,
+        adapter_bytes / 1024,
+        base_bytes as f64 / adapter_bytes.max(1) as f64
+    );
+
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_tenants.json");
+    match write_tenants_json(
+        &out,
+        "opt-tiny",
+        &BenchMeta::current(),
+        base_bytes,
+        adapter_bytes,
+        &swap,
+        &records,
+    ) {
+        Ok(()) => println!("\nwrote {}", out.display()),
+        Err(e) => eprintln!("could not write BENCH_tenants.json: {e}"),
+    }
+}

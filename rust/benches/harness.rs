@@ -387,3 +387,83 @@ pub fn write_serve_json(
     );
     std::fs::write(path, json)
 }
+
+/// One mixed-tenant serving scenario measured end to end by
+/// `bench_tenants`: the serve-style latency/throughput gauges plus the
+/// tenant mix the leg ran under.
+#[allow(dead_code)]
+pub struct TenantRecord {
+    /// Scenario leg, e.g. `"mixed tenants4 paged"`.
+    pub name: String,
+    /// Synthetic clients replayed.
+    pub clients: usize,
+    /// Distinct adapter stacks resident in the registry.
+    pub tenants: usize,
+    /// Median request latency (ns).
+    pub p50_ns: f64,
+    /// 99th-percentile request latency (ns).
+    pub p99_ns: f64,
+    /// Mean ns per generated token (the gate-standard `ns_per_op`).
+    pub ns_per_token: f64,
+    /// Generated tokens per wall-clock second.
+    pub tokens_per_sec: f64,
+    /// Mean decode-batch occupancy.
+    pub mean_batch: f64,
+    /// Page-pool high-water mark (pages; deterministic per scenario).
+    pub pages_hwm: usize,
+    /// Registry installs that replaced a resident stack during the leg.
+    pub swaps: u64,
+}
+
+/// Emit `BENCH_tenants.json`: per-tenant-count p50/p99 latency, ns/token
+/// and page high-water mark (each gate-comparable), the adapter hot-swap
+/// install latency as its own `ns_per_op` entry, and the tenants-per-base
+/// density headline — how many tenants' worth of f32 adapter state fits
+/// in one quantized base's weight footprint. `meta` stamps ISA / tile /
+/// threads like every other record.
+#[allow(dead_code)]
+pub fn write_tenants_json(
+    path: &std::path::Path,
+    preset: &str,
+    meta: &BenchMeta,
+    base_bytes: usize,
+    adapter_bytes: usize,
+    swap: &BenchResult,
+    records: &[TenantRecord],
+) -> std::io::Result<()> {
+    let mut kernels: Vec<String> = records
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"name\": \"{}\", \"clients\": {}, \"tenants\": {}, \"p50_ns\": {:.1}, \
+                 \"p99_ns\": {:.1}, \"ns_per_op\": {:.1}, \"tokens_per_sec\": {:.1}, \
+                 \"mean_batch\": {:.3}, \"pages_hwm\": {}, \"swaps\": {}}}",
+                r.name,
+                r.clients,
+                r.tenants,
+                r.p50_ns,
+                r.p99_ns,
+                r.ns_per_token,
+                r.tokens_per_sec,
+                r.mean_batch,
+                r.pages_hwm,
+                r.swaps,
+            )
+        })
+        .collect();
+    kernels.push(format!(
+        "    {{\"name\": \"{}\", \"ns_per_op\": {:.1}, \"iters\": {}}}",
+        swap.name,
+        swap.mean_secs * 1e9,
+        swap.iters
+    ));
+    let density = base_bytes as f64 / adapter_bytes.max(1) as f64;
+    let json = format!(
+        "{{\n  \"bench\": \"tenants\",\n  \"preset\": \"{preset}\",\n  \"meta\": {},\n  \
+         \"base_bytes\": {base_bytes},\n  \"adapter_bytes_per_tenant\": {adapter_bytes},\n  \
+         \"tenants_per_base\": {density:.1},\n  \"kernels\": [\n{}\n  ]\n}}\n",
+        meta.to_json(),
+        kernels.join(",\n")
+    );
+    std::fs::write(path, json)
+}

@@ -16,6 +16,22 @@
 //! and [`resumable_jobs`] + [`Coordinator::run_all`] pick up every
 //! interrupted job in a directory. Resume is **bit-identical** to the
 //! uninterrupted run (`tests/persist_resume.rs`).
+//!
+//! Job execution itself is factored into [`JobRun`] — an incremental
+//! start/step/finish state machine — so the same per-step body serves two
+//! drivers: [`run_job`] (run to completion, the original behaviour) and
+//! the [`Scheduler`], which **interleaves** several concurrent jobs
+//! round-robin over a bounded set of resident runs, preempting the
+//! least-recently-run job to a checkpoint when `max_resident` is
+//! exceeded and resuming it later. Because preemption is exactly the
+//! crash-safe persist path, an interleaved schedule produces
+//! byte-identical checkpoints and loss logs to running the same jobs
+//! sequentially (`tests/tenant_parity.rs`), and a finished run's adapter
+//! stack can be handed straight to the serving tier
+//! ([`Scheduler::take_adapters`] →
+//! [`crate::infer::AdapterRegistry`]) — train-while-serve lives in
+//! [`Scheduler::run_with`], which yields to a caller-supplied pump
+//! between rounds.
 
 pub mod bundle;
 pub mod checkpoint;
@@ -27,7 +43,8 @@ use crate::data::{
 };
 use crate::methods::MethodKind;
 use crate::metrics::{LatencyTimer, MemoryAccountant, MemoryBreakdown};
-use crate::peft::PeftKind;
+use crate::model::Model;
+use crate::peft::{PeftKind, TenantAdapters};
 use crate::persist;
 use crate::train::{eval as teval, Trainer};
 use crate::util::error::{Context, Result};
@@ -172,6 +189,219 @@ fn validate_resume(saved: &FinetuneJob, job: &FinetuneJob) -> Result<()> {
     Ok(())
 }
 
+/// One job's training run as an incremental state machine:
+/// [`JobRun::start`] prepares (or resumes) it, each [`JobRun::step`] runs
+/// exactly one optimizer step, and [`JobRun::finish`] evaluates and emits
+/// the [`JobReport`] plus the trained adapter stack. [`run_job`] drives a
+/// run to completion in one call; the [`Scheduler`] interleaves many.
+///
+/// The per-step body is *identical* no matter who drives it or how steps
+/// are spread over time: the data cursor fully determines the batch
+/// iterator's state, so re-seeking each step replays exactly the stream a
+/// single long-lived iterator would produce. That structural sharing is
+/// what makes interleaved scheduling bit-identical to sequential
+/// execution.
+pub struct JobRun {
+    job: FinetuneJob,
+    task: SynthTask,
+    ds: Dataset,
+    model: Model,
+    trainer: Trainer,
+    losses: Vec<f64>,
+    cursor: usize,
+    payload_bytes: usize,
+    resumed_from: Option<u64>,
+    timer: LatencyTimer,
+}
+
+impl JobRun {
+    /// Prepare a run: sample the dataset, then either resume from the
+    /// job's checkpoint (if one exists at its path) or prepare a fresh
+    /// bundle from the server. A job naming an unknown dataset is a
+    /// readable [`Err`], not a panic — bad task names come straight from
+    /// CLI flags.
+    pub fn start(server: &PreprocessServer, job: &FinetuneJob) -> Result<JobRun> {
+        let task = SynthTask::by_name(&job.dataset).with_context(|| {
+            format!(
+                "unknown dataset '{}' (known: {})",
+                job.dataset,
+                INSTRUCTION_SETS
+                    .iter()
+                    .chain(&REASONING_SETS)
+                    .chain(&LONGTEXT_SETS)
+                    .copied()
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })?;
+        let mut rng = Rng::new(job.seed);
+        let samples: Vec<Sample> = (0..job.train_pool + job.eval_samples)
+            .map(|_| task.sample(&mut rng))
+            .collect();
+        let ds = Dataset::from_samples(&job.dataset, samples, &mut rng);
+        // Resume from an existing checkpoint, or prepare a fresh bundle.
+        let mut resumed_from = None;
+        let (model, payload_bytes, trainer, losses, cursor) = match &job.checkpoint {
+            Some(spec) if persist::checkpoint_exists(&spec.path) => {
+                let loaded = persist::load_train_checkpoint(&spec.path)
+                    .with_context(|| format!("resume job {}", job.id))?;
+                validate_resume(&loaded.ckpt.job, job)?;
+                let ck = loaded.ckpt;
+                resumed_from = Some(ck.steps_done);
+                (ck.model, ck.payload_bytes, ck.trainer, ck.losses, ck.cursor)
+            }
+            _ => {
+                let bundle = server.prepare(job.method, job.peft);
+                let payload = bundle.payload_bytes;
+                (
+                    bundle.model,
+                    payload,
+                    Trainer::new(job.lr, job.max_len, job.grad_accum),
+                    Vec::new(),
+                    0,
+                )
+            }
+        };
+        Ok(JobRun {
+            job: job.clone(),
+            task,
+            ds,
+            model,
+            trainer,
+            losses,
+            cursor,
+            payload_bytes,
+            resumed_from,
+            timer: LatencyTimer::new(),
+        })
+    }
+
+    /// The job this run executes.
+    pub fn job(&self) -> &FinetuneJob {
+        &self.job
+    }
+
+    /// The job's id.
+    pub fn id(&self) -> u64 {
+        self.job.id
+    }
+
+    /// Optimizer steps completed so far (spans resumes).
+    pub fn steps_done(&self) -> u64 {
+        self.trainer.step_count
+    }
+
+    /// True once the job's target step count is reached (a resumed run
+    /// can be done immediately; it then just re-evaluates and reports).
+    pub fn is_done(&self) -> bool {
+        self.trainer.step_count >= self.job.steps
+    }
+
+    /// Run exactly one optimizer step (`grad_accum` micro-batches), then
+    /// write the job's periodic checkpoint if one is due.
+    pub fn step(&mut self) -> Result<()> {
+        let mut iter = self.ds.batches(self.job.batch_size);
+        iter.seek(self.cursor);
+        let mut micro = Vec::with_capacity(self.job.grad_accum);
+        for _ in 0..self.job.grad_accum {
+            micro.push(iter.next_batch());
+        }
+        self.cursor = iter.cursor();
+        let stats = self.trainer.step(&mut self.model, &micro);
+        self.timer.record(stats.seconds);
+        self.losses.push(stats.loss);
+        let due = match &self.job.checkpoint {
+            Some(spec) => {
+                spec.every > 0
+                    && (self.trainer.step_count % spec.every == 0
+                        || self.trainer.step_count == self.job.steps)
+            }
+            None => false,
+        };
+        if due {
+            let path = self.job.checkpoint.as_ref().expect("due implies spec").path.clone();
+            let step = self.trainer.step_count;
+            self.checkpoint_to(&path)
+                .with_context(|| format!("checkpoint job {} at step {}", self.job.id, step))?;
+        }
+        Ok(())
+    }
+
+    /// Write the full training state to `path` (crash-safe; same archive
+    /// the periodic policy writes). This is also the scheduler's
+    /// preemption primitive: a spilled run is exactly a checkpointed one.
+    pub fn checkpoint_to(&mut self, path: &Path) -> Result<usize> {
+        persist::save_train_checkpoint(
+            path,
+            &self.job,
+            &mut self.model,
+            &self.trainer,
+            self.cursor,
+            &self.losses,
+            self.payload_bytes,
+        )
+    }
+
+    /// Evaluate by task family and emit the report, handing back the
+    /// trained adapter stack (detached from the model) so the caller can
+    /// install it into a serving [`crate::infer::AdapterRegistry`].
+    pub fn finish(mut self) -> Result<(JobReport, TenantAdapters)> {
+        let final_loss = self.losses.last().copied().unwrap_or(f64::NAN);
+        let job = &self.job;
+        let test: Vec<Sample> = self.ds.test.iter().take(job.eval_samples).cloned().collect();
+        let mut metrics = BTreeMap::new();
+        let (_nll, ppl) = teval::eval_ppl(&mut self.model, &test, job.batch_size, job.max_len);
+        metrics.insert("ppl".to_string(), ppl);
+        match self.task.family {
+            TaskFamily::Mcq => {
+                metrics.insert(
+                    "acc".to_string(),
+                    teval::eval_mcq_accuracy(&mut self.model, &test, job.max_len),
+                );
+            }
+            TaskFamily::Lambada => {
+                metrics.insert(
+                    "acc".to_string(),
+                    teval::eval_token_accuracy(&mut self.model, &test, job.max_len),
+                );
+                metrics.insert(
+                    "exact".to_string(),
+                    teval::eval_exact_match(&mut self.model, &test, job.max_len),
+                );
+            }
+            TaskFamily::Instruction | TaskFamily::LongForm => {
+                metrics.insert(
+                    "acc".to_string(),
+                    teval::eval_token_accuracy(&mut self.model, &test, job.max_len),
+                );
+                let n_rouge = test.len().min(6);
+                metrics.insert(
+                    "rouge_l".to_string(),
+                    teval::eval_rouge(&mut self.model, &test[..n_rouge], 48),
+                );
+            }
+        }
+        let memory =
+            MemoryAccountant::account(&mut self.model, job.method, job.batch_size, job.max_len);
+        let report = JobReport {
+            id: job.id,
+            dataset: job.dataset.clone(),
+            method: job.method,
+            peft: job.peft,
+            steps: self.trainer.step_count,
+            final_loss,
+            losses: self.losses.clone(),
+            resumed_from: self.resumed_from,
+            metrics,
+            mean_step_secs: self.timer.mean(),
+            memory,
+            payload_bytes: self.payload_bytes,
+        };
+        let adapters = self.model.detach_adapters();
+        Ok((report, adapters))
+    }
+}
+
 /// Execute one job against a prepared bundle (the worker body; exposed so
 /// reports/benches can run cells synchronously without the queue). A job
 /// naming an unknown dataset is a readable [`Err`], not a panic — bad task
@@ -182,128 +412,11 @@ fn validate_resume(saved: &FinetuneJob, job: &FinetuneJob) -> Result<()> {
 /// PRNG streams, data cursor and loss log all continue mid-stream, so the
 /// completed run is bit-identical to one that was never interrupted.
 pub fn run_job(server: &PreprocessServer, job: &FinetuneJob) -> Result<JobReport> {
-    let task = SynthTask::by_name(&job.dataset).with_context(|| {
-        format!(
-            "unknown dataset '{}' (known: {})",
-            job.dataset,
-            INSTRUCTION_SETS
-                .iter()
-                .chain(&REASONING_SETS)
-                .chain(&LONGTEXT_SETS)
-                .copied()
-                .collect::<Vec<_>>()
-                .join(", ")
-        )
-    })?;
-    let mut rng = Rng::new(job.seed);
-    let samples: Vec<Sample> = (0..job.train_pool + job.eval_samples)
-        .map(|_| task.sample(&mut rng))
-        .collect();
-    let ds = Dataset::from_samples(&job.dataset, samples, &mut rng);
-
-    // Resume from an existing checkpoint, or prepare a fresh bundle.
-    let mut resumed_from = None;
-    let (mut model, payload_bytes, mut trainer, mut losses, cursor) = match &job.checkpoint {
-        Some(spec) if persist::checkpoint_exists(&spec.path) => {
-            let loaded = persist::load_train_checkpoint(&spec.path)
-                .with_context(|| format!("resume job {}", job.id))?;
-            validate_resume(&loaded.ckpt.job, job)?;
-            let ck = loaded.ckpt;
-            resumed_from = Some(ck.steps_done);
-            (ck.model, ck.payload_bytes, ck.trainer, ck.losses, ck.cursor)
-        }
-        _ => {
-            let bundle = server.prepare(job.method, job.peft);
-            let payload = bundle.payload_bytes;
-            (
-                bundle.model,
-                payload,
-                Trainer::new(job.lr, job.max_len, job.grad_accum),
-                Vec::new(),
-                0,
-            )
-        }
-    };
-    let mut timer = LatencyTimer::new();
-    let mut iter = ds.batches(job.batch_size);
-    iter.seek(cursor);
-    while trainer.step_count < job.steps {
-        let mut micro = Vec::with_capacity(job.grad_accum);
-        for _ in 0..job.grad_accum {
-            micro.push(iter.next_batch());
-        }
-        let stats = trainer.step(&mut model, &micro);
-        timer.record(stats.seconds);
-        losses.push(stats.loss);
-        if let Some(spec) = &job.checkpoint {
-            let due = spec.every > 0
-                && (trainer.step_count % spec.every == 0 || trainer.step_count == job.steps);
-            if due {
-                persist::save_train_checkpoint(
-                    &spec.path,
-                    job,
-                    &mut model,
-                    &trainer,
-                    iter.cursor(),
-                    &losses,
-                    payload_bytes,
-                )
-                .with_context(|| {
-                    format!("checkpoint job {} at step {}", job.id, trainer.step_count)
-                })?;
-            }
-        }
+    let mut run = JobRun::start(server, job)?;
+    while !run.is_done() {
+        run.step()?;
     }
-    let final_loss = losses.last().copied().unwrap_or(f64::NAN);
-    // evaluation by task family
-    let test: Vec<Sample> = ds.test.iter().take(job.eval_samples).cloned().collect();
-    let mut metrics = BTreeMap::new();
-    let (_nll, ppl) = teval::eval_ppl(&mut model, &test, job.batch_size, job.max_len);
-    metrics.insert("ppl".to_string(), ppl);
-    match task.family {
-        TaskFamily::Mcq => {
-            metrics.insert(
-                "acc".to_string(),
-                teval::eval_mcq_accuracy(&mut model, &test, job.max_len),
-            );
-        }
-        TaskFamily::Lambada => {
-            metrics.insert(
-                "acc".to_string(),
-                teval::eval_token_accuracy(&mut model, &test, job.max_len),
-            );
-            metrics.insert(
-                "exact".to_string(),
-                teval::eval_exact_match(&mut model, &test, job.max_len),
-            );
-        }
-        TaskFamily::Instruction | TaskFamily::LongForm => {
-            metrics.insert(
-                "acc".to_string(),
-                teval::eval_token_accuracy(&mut model, &test, job.max_len),
-            );
-            let n_rouge = test.len().min(6);
-            metrics.insert(
-                "rouge_l".to_string(),
-                teval::eval_rouge(&mut model, &test[..n_rouge], 48),
-            );
-        }
-    }
-    let memory = MemoryAccountant::account(&mut model, job.method, job.batch_size, job.max_len);
-    Ok(JobReport {
-        id: job.id,
-        dataset: job.dataset.clone(),
-        method: job.method,
-        peft: job.peft,
-        steps: trainer.step_count,
-        final_loss,
-        losses,
-        resumed_from,
-        metrics,
-        mean_step_secs: timer.mean(),
-        memory,
-        payload_bytes,
-    })
+    Ok(run.finish()?.0)
 }
 
 /// Scan `dir` for training checkpoints (`*.qckpt`) and return their
@@ -341,6 +454,233 @@ pub fn resumable_jobs(dir: &Path) -> Result<Vec<FinetuneJob>> {
         jobs.push(job);
     }
     Ok(jobs)
+}
+
+/// Scheduling policy for the interleaving [`Scheduler`].
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    /// Most [`JobRun`]s held in memory at once; admitting beyond this
+    /// preempts the least-recently-run resident to a checkpoint.
+    pub max_resident: usize,
+    /// Optimizer steps each job advances per round-robin visit.
+    pub quantum: u64,
+    /// Where to checkpoint a preempted job that has no [`CheckpointSpec`]
+    /// of its own (`<spill_dir>/job<id>.qckpt`). With `None`, preempting
+    /// a spec-less job is a readable error.
+    pub spill_dir: Option<PathBuf>,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> SchedulerConfig {
+        SchedulerConfig {
+            max_resident: 2,
+            quantum: 1,
+            spill_dir: None,
+        }
+    }
+}
+
+/// Where a submitted job currently lives in the scheduler.
+enum SchedSlot {
+    /// Submitted, never started.
+    Pending(FinetuneJob),
+    /// In memory, stepping.
+    Resident(Box<JobRun>),
+    /// Preempted to a checkpoint; the stored job's spec points at it.
+    Spilled(FinetuneJob),
+    /// Finished and reported.
+    Done(Box<JobReport>),
+    /// Transient marker while a slot changes state.
+    Moving,
+}
+
+/// Round-robin interleaver over concurrent [`FinetuneJob`]s sharing one
+/// [`PreprocessServer`] (and hence one `tensor::pool` thread team; each
+/// resident run owns its private `Workspace` inside its model).
+///
+/// Each [`Scheduler::step_round`] visits every unfinished job in
+/// submission order, makes it resident — preempting the least-recently-run
+/// resident through the crash-safe checkpoint path when `max_resident`
+/// would be exceeded — and advances it `quantum` optimizer steps.
+/// Because [`JobRun`] re-derives its batch iterator from the persisted
+/// cursor every step, and preemption/resume is exactly
+/// save/load_train_checkpoint (bit-identical by `tests/persist_resume.rs`),
+/// the interleaved execution produces **byte-identical checkpoints and
+/// loss logs** to running the same jobs back-to-back
+/// (`tests/tenant_parity.rs`).
+///
+/// Finished jobs hand their adapter stacks to
+/// [`Scheduler::take_adapters`] for installation into a serving
+/// [`crate::infer::AdapterRegistry`]; [`Scheduler::run_with`] yields to a
+/// caller callback between rounds (train-while-serve: pump a
+/// [`crate::infer::Server`] there).
+pub struct Scheduler<'a> {
+    server: &'a PreprocessServer,
+    cfg: SchedulerConfig,
+    slots: Vec<SchedSlot>,
+    /// Resident slot indices, least-recently-run first (eviction order).
+    lru: Vec<usize>,
+    /// Adapter stacks of finished jobs, keyed by job id.
+    adapters: BTreeMap<u64, TenantAdapters>,
+    rounds: u64,
+}
+
+impl<'a> Scheduler<'a> {
+    pub fn new(server: &'a PreprocessServer, cfg: SchedulerConfig) -> Scheduler<'a> {
+        assert!(cfg.max_resident >= 1, "scheduler needs at least one resident slot");
+        assert!(cfg.quantum >= 1, "scheduler quantum must be at least one step");
+        Scheduler {
+            server,
+            cfg,
+            slots: Vec::new(),
+            lru: Vec::new(),
+            adapters: BTreeMap::new(),
+            rounds: 0,
+        }
+    }
+
+    /// Enqueue a job; it first runs during the next round. Returns its
+    /// slot index (submission order, which [`Scheduler::reports`] keeps).
+    pub fn submit(&mut self, job: FinetuneJob) -> usize {
+        self.slots.push(SchedSlot::Pending(job));
+        self.slots.len() - 1
+    }
+
+    /// Rounds completed so far.
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    /// One round-robin pass: every unfinished job becomes resident and
+    /// advances up to `quantum` steps; jobs reaching their target are
+    /// finished (evaluated, reported, adapters banked). Returns `true`
+    /// while any job is unfinished.
+    pub fn step_round(&mut self) -> Result<bool> {
+        self.rounds += 1;
+        let mut any_open = false;
+        for i in 0..self.slots.len() {
+            if matches!(self.slots[i], SchedSlot::Done(_)) {
+                continue;
+            }
+            self.make_resident(i)?;
+            let done = {
+                let run = match &mut self.slots[i] {
+                    SchedSlot::Resident(r) => r,
+                    _ => unreachable!("make_resident leaves the slot resident"),
+                };
+                let mut q = 0;
+                while q < self.cfg.quantum && !run.is_done() {
+                    run.step()?;
+                    q += 1;
+                }
+                run.is_done()
+            };
+            if done {
+                self.lru.retain(|&j| j != i);
+                let run = match std::mem::replace(&mut self.slots[i], SchedSlot::Moving) {
+                    SchedSlot::Resident(r) => *r,
+                    _ => unreachable!("checked resident above"),
+                };
+                let (report, adapters) = run.finish()?;
+                self.adapters.insert(report.id, adapters);
+                self.slots[i] = SchedSlot::Done(Box::new(report));
+            } else {
+                // most-recently-run goes to the back of the eviction order
+                self.lru.retain(|&j| j != i);
+                self.lru.push(i);
+                any_open = true;
+            }
+        }
+        Ok(any_open)
+    }
+
+    /// Ensure slot `i` holds a resident run, evicting least-recently-run
+    /// residents through [`Scheduler::spill`] to respect `max_resident`.
+    fn make_resident(&mut self, i: usize) -> Result<()> {
+        if matches!(self.slots[i], SchedSlot::Resident(_)) {
+            return Ok(());
+        }
+        while self.lru.len() >= self.cfg.max_resident {
+            let victim = self.lru.remove(0);
+            self.spill(victim)?;
+        }
+        let job = match std::mem::replace(&mut self.slots[i], SchedSlot::Moving) {
+            SchedSlot::Pending(j) | SchedSlot::Spilled(j) => j,
+            _ => unreachable!("resident and done slots never reach here"),
+        };
+        let run = JobRun::start(self.server, &job)
+            .with_context(|| format!("admit job {}", job.id))?;
+        self.slots[i] = SchedSlot::Resident(Box::new(run));
+        self.lru.push(i);
+        Ok(())
+    }
+
+    /// Preempt resident slot `i`: checkpoint its full training state (to
+    /// the job's own spec path, or `spill_dir/job<id>.qckpt` for
+    /// spec-less jobs) and drop the in-memory run. Resume is
+    /// [`JobRun::start`]'s ordinary checkpoint path — bit-identical.
+    fn spill(&mut self, i: usize) -> Result<()> {
+        let run = match &self.slots[i] {
+            SchedSlot::Resident(r) => r,
+            _ => return Ok(()),
+        };
+        let (path, every) = match (&run.job().checkpoint, &self.cfg.spill_dir) {
+            (Some(spec), _) => (spec.path.clone(), spec.every),
+            (None, Some(dir)) => (dir.join(format!("job{}.qckpt", run.id())), 0),
+            (None, None) => bail!(
+                "cannot preempt job {}: it has no CheckpointSpec and the scheduler \
+                 has no spill_dir",
+                run.id()
+            ),
+        };
+        let mut run = match std::mem::replace(&mut self.slots[i], SchedSlot::Moving) {
+            SchedSlot::Resident(r) => r,
+            _ => unreachable!("checked resident above"),
+        };
+        run.checkpoint_to(&path)
+            .with_context(|| format!("spill job {} at step {}", run.id(), run.steps_done()))?;
+        let mut job = run.job().clone();
+        job.checkpoint = Some(CheckpointSpec { path, every });
+        self.slots[i] = SchedSlot::Spilled(job);
+        Ok(())
+    }
+
+    /// Run every submitted job to completion; reports in submission order.
+    pub fn run(&mut self) -> Result<Vec<JobReport>> {
+        self.run_with(|_| {})
+    }
+
+    /// [`Scheduler::run`], yielding to `on_round(rounds_so_far)` after
+    /// every round — the train-while-serve hook: pump a serving
+    /// [`crate::infer::Server`] there and install finished jobs' adapters
+    /// as they appear.
+    pub fn run_with(&mut self, mut on_round: impl FnMut(u64)) -> Result<Vec<JobReport>> {
+        loop {
+            let more = self.step_round()?;
+            on_round(self.rounds);
+            if !more {
+                break;
+            }
+        }
+        Ok(self.reports())
+    }
+
+    /// Reports of finished jobs, in submission order.
+    pub fn reports(&self) -> Vec<JobReport> {
+        self.slots
+            .iter()
+            .filter_map(|s| match s {
+                SchedSlot::Done(r) => Some((**r).clone()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Take the trained adapter stack of finished job `job_id` (once) —
+    /// ready to install into an [`crate::infer::AdapterRegistry`].
+    pub fn take_adapters(&mut self, job_id: u64) -> Option<TenantAdapters> {
+        self.adapters.remove(&job_id)
+    }
 }
 
 enum Msg {

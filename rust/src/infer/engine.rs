@@ -32,8 +32,10 @@
 
 use std::collections::VecDeque;
 
+use super::tenant::AdapterRegistry;
 use super::{sample_token, GenerateConfig, KvCache};
 use crate::model::Model;
+use crate::peft::TenantAdapters;
 use crate::tensor::Workspace;
 use crate::util::prng::Rng;
 
@@ -48,6 +50,12 @@ pub struct Request {
     /// Per-request generation cap (bounded by the engine config's
     /// `max_new` semantics: this field *is* the cap used).
     pub max_new: usize,
+    /// Tenant tag, resolved against the engine's [`AdapterRegistry`] at
+    /// admission. `None` decodes the base/model-attached path (the legacy
+    /// single-tenant behaviour, bit-identical). `Some(id)` decodes with
+    /// tenant `id`'s LoRA/prompt stack; an unknown id is
+    /// [`Admission::Rejected`].
+    pub tenant: Option<u64>,
 }
 
 /// Why a request left the engine.
@@ -168,6 +176,9 @@ struct Active {
     /// Owned prompt, kept for readmission re-prefill.
     prompt: Vec<u32>,
     max_new: usize,
+    /// Tenant tag carried through preemption; re-resolved against the
+    /// registry every round so removal cancels promptly.
+    tenant: Option<u64>,
     rng: Rng,
     /// Last sampled token, not yet resolved into the output stream.
     next: u32,
@@ -182,6 +193,7 @@ struct Parked {
     seq: u64,
     prompt: Vec<u32>,
     max_new: usize,
+    tenant: Option<u64>,
     rng: Rng,
     toks: Vec<u32>,
 }
@@ -193,6 +205,7 @@ pub struct BatchEngine {
     cfg: GenerateConfig,
     kv: KvCache,
     ws: Workspace,
+    registry: AdapterRegistry,
     active: Vec<Active>,
     parked: VecDeque<Parked>,
     free_slots: Vec<usize>,
@@ -242,6 +255,7 @@ impl BatchEngine {
             cfg,
             kv,
             ws,
+            registry: AdapterRegistry::new(),
             active: Vec::new(),
             parked: VecDeque::new(),
             free_slots: (0..slots).rev().collect(),
@@ -253,6 +267,19 @@ impl BatchEngine {
     /// Number of concurrent decode slots.
     pub fn slots(&self) -> usize {
         self.kv.slots()
+    }
+
+    /// The engine's tenant adapter registry (read side).
+    pub fn registry(&self) -> &AdapterRegistry {
+        &self.registry
+    }
+
+    /// The engine's tenant adapter registry (install/remove/hot-swap).
+    /// Changes take effect at the next [`BatchEngine::step`]; removing a
+    /// tenant finishes its in-flight requests with
+    /// [`FinishReason::Cancelled`] there.
+    pub fn registry_mut(&mut self) -> &mut AdapterRegistry {
+        &mut self.registry
     }
 
     /// Requests currently holding a slot.
@@ -295,14 +322,31 @@ impl BatchEngine {
         self.kv.nbytes()
     }
 
-    /// Try to place `req` into a free slot: degenerate requests are
+    /// Try to place `req` into a free slot: degenerate requests — and
+    /// requests tagged with a tenant the registry doesn't know — are
     /// [`Admission::Rejected`] immediately; otherwise admission needs a
     /// free slot, enough free pages for the whole prompt, and an empty
     /// parked queue (preempted requests outrank new arrivals — they hold
-    /// the oldest seqs). On success the request is prefilled and its
-    /// first token sampled, ready for the next [`BatchEngine::step`].
+    /// the oldest seqs). On success the request is prefilled (with its
+    /// tenant's adapter stack, if tagged) and its first token sampled,
+    /// ready for the next [`BatchEngine::step`].
     pub fn try_admit(&mut self, model: &Model, req: &Request) -> Admission {
-        let rows = model.n_virtual() + req.prompt.len();
+        let tenant = match req.tenant {
+            Some(id) => match self.registry.get(id) {
+                Some(t) => Some(t),
+                None => {
+                    return Admission::Rejected(Completion {
+                        id: req.id,
+                        prompt_len: req.prompt.len(),
+                        tokens: Vec::new(),
+                        reason: FinishReason::Rejected,
+                    })
+                }
+            },
+            None => None,
+        };
+        let nv = tenant.map_or(model.n_virtual(), |t| t.n_virtual());
+        let rows = nv + req.prompt.len();
         if req.prompt.is_empty() || req.max_new == 0 || rows > model.cfg.max_seq {
             return Admission::Rejected(Completion {
                 id: req.id,
@@ -319,7 +363,7 @@ impl BatchEngine {
         let tag = seq;
         self.next_seq += 1;
         self.kv.reset_slot(slot);
-        let logits = model.prefill(&req.prompt, slot, &mut self.kv, &mut self.ws);
+        let logits = model.prefill_tenant(&req.prompt, tenant, slot, &mut self.kv, &mut self.ws);
         self.stats.prefill_tokens += self.kv.len(slot) as u64;
         let mut rng = Rng::new(self.cfg.seed ^ req.id);
         let next = sample_token(logits.row(0), &self.cfg, &mut rng);
@@ -331,6 +375,7 @@ impl BatchEngine {
             seq,
             prompt: req.prompt.clone(),
             max_new: req.max_new,
+            tenant: req.tenant,
             rng,
             next,
             toks: Vec::new(),
@@ -381,10 +426,33 @@ impl BatchEngine {
     /// Readmit parked requests in park order (FIFO) while a slot and
     /// enough pages for their full `prompt ++ toks` prefix are available.
     /// The front parks the line: skipping over it would let short
-    /// requests starve a long one.
+    /// requests starve a long one. A parked request whose tenant has been
+    /// removed from the registry finishes here with
+    /// [`FinishReason::Cancelled`] instead of readmitting.
     fn readmit(&mut self, model: &Model, events: &mut Vec<StepEvent>) {
-        while let Some(front) = self.parked.front() {
-            let rows = model.n_virtual() + front.prompt.len() + front.toks.len();
+        loop {
+            let front = match self.parked.front() {
+                Some(f) => f,
+                None => return,
+            };
+            if front.tenant.is_some_and(|id| self.registry.get(id).is_none()) {
+                let p = self.parked.pop_front().expect("front exists");
+                events.push(StepEvent::Finished {
+                    tag: p.tag,
+                    completion: Completion {
+                        id: p.id,
+                        prompt_len: p.prompt.len(),
+                        tokens: p.toks,
+                        reason: FinishReason::Cancelled,
+                    },
+                });
+                continue;
+            }
+            let nv = match front.tenant {
+                Some(id) => self.registry.get(id).expect("checked installed").n_virtual(),
+                None => model.n_virtual(),
+            };
+            let rows = nv + front.prompt.len() + front.toks.len();
             if self.free_slots.is_empty() || !self.kv.can_admit(rows) {
                 return;
             }
@@ -398,7 +466,8 @@ impl BatchEngine {
             // decode step would have produced.
             let mut seqtoks = p.prompt.clone();
             seqtoks.extend_from_slice(&p.toks);
-            let logits = model.prefill(&seqtoks, slot, &mut self.kv, &mut self.ws);
+            let tenant = p.tenant.and_then(|id| self.registry.get(id));
+            let logits = model.prefill_tenant(&seqtoks, tenant, slot, &mut self.kv, &mut self.ws);
             self.stats.prefill_tokens += self.kv.len(slot) as u64;
             self.stats.resumes += 1;
             let mut rng = p.rng;
@@ -412,6 +481,7 @@ impl BatchEngine {
                 seq: p.seq,
                 prompt: p.prompt,
                 max_new: p.max_new,
+                tenant: p.tenant,
                 rng,
                 next,
                 toks: p.toks,
@@ -470,6 +540,32 @@ impl BatchEngine {
     /// (the pool holds ≥ `max_seq` rows by construction), so every round
     /// with a non-empty active set makes progress — no deadlock.
     fn decode(&mut self, model: &Model, events: &mut Vec<StepEvent>) {
+        // tenant sweep: a request whose tenant was removed since the last
+        // round must not decode against a missing stack — finish it with
+        // Cancelled, pages back to the pool. Removal never perturbs the
+        // co-batched survivors (row-local decode).
+        let mut i = 0;
+        while i < self.active.len() {
+            let gone = self.active[i]
+                .tenant
+                .is_some_and(|id| self.registry.get(id).is_none());
+            if gone {
+                let a = self.active.remove(i);
+                self.kv.reset_slot(a.slot);
+                self.free_slots.push(a.slot);
+                events.push(StepEvent::Finished {
+                    tag: a.tag,
+                    completion: Completion {
+                        id: a.id,
+                        prompt_len: a.prompt.len(),
+                        tokens: a.toks,
+                        reason: FinishReason::Cancelled,
+                    },
+                });
+            } else {
+                i += 1;
+            }
+        }
         // reserve phase: walk oldest-first; on failure, park from the
         // youngest end until this request fits (or park it, if it *is*
         // the youngest survivor)
@@ -493,7 +589,17 @@ impl BatchEngine {
         }
         let tokens: Vec<u32> = self.active.iter().map(|a| a.next).collect();
         let slots: Vec<usize> = self.active.iter().map(|a| a.slot).collect();
-        let logits = model.decode_step(&tokens, &slots, &mut self.kv, &mut self.ws);
+        let logits = if self.registry.is_empty() {
+            // no tenants installed: literally the pre-tenancy decode path
+            model.decode_step(&tokens, &slots, &mut self.kv, &mut self.ws)
+        } else {
+            let tenants: Vec<Option<&TenantAdapters>> = self
+                .active
+                .iter()
+                .map(|a| a.tenant.and_then(|id| self.registry.get(id)))
+                .collect();
+            model.decode_step_tenants(&tokens, &slots, &tenants, &mut self.kv, &mut self.ws)
+        };
         self.stats.decode_steps += 1;
         self.stats.decode_tokens += self.active.len() as u64;
         for (i, a) in self.active.iter_mut().enumerate() {
@@ -523,6 +629,7 @@ impl BatchEngine {
             seq: a.seq,
             prompt: a.prompt,
             max_new: a.max_new,
+            tenant: a.tenant,
             rng: a.rng,
             toks: a.toks,
         });

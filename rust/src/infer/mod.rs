@@ -23,7 +23,11 @@
 //!   continuous batching with page-pressure preemption, and [`Server`]
 //!   ([`serve`]) — the request front-end: bounded admission queue with
 //!   backpressure, logical-clock deadlines, cancellation, and streaming
-//!   token delivery via per-request [`TokenSink`]s.
+//!   token delivery via per-request [`TokenSink`]s. Requests may carry a
+//!   tenant tag resolved against an [`AdapterRegistry`] ([`tenant`]):
+//!   many tenants' LoRA/prompt stacks serve over one shared quantized
+//!   base, mixed freely within a decode batch
+//!   (`tests/tenant_parity.rs` proves mixing is bitwise-invisible).
 //!
 //! `benches/bench_infer.rs` records prefill/decode tokens-per-second and
 //! `benches/bench_serve.rs` replays a seeded multi-client workload
@@ -34,12 +38,14 @@
 pub mod engine;
 pub mod kv;
 pub mod serve;
+pub mod tenant;
 
 pub use engine::{
     Admission, BatchEngine, Completion, EngineStats, FinishReason, Request, StepEvent,
 };
 pub use kv::KvCache;
 pub use serve::{Server, SubmitError, TokenSink};
+pub use tenant::AdapterRegistry;
 
 use crate::model::Model;
 use crate::tensor::Workspace;

@@ -33,6 +33,7 @@ use std::collections::VecDeque;
 use super::engine::{Admission, BatchEngine, Completion, FinishReason, Request, StepEvent};
 use super::GenerateConfig;
 use crate::model::Model;
+use crate::peft::TenantAdapters;
 
 /// Receiver for a request's incremental output. Implementations get every
 /// resolved token as it leaves the engine, then the final [`Completion`]
@@ -233,6 +234,25 @@ impl Server {
     /// The underlying engine (stats, page gauges).
     pub fn engine(&self) -> &BatchEngine {
         &self.engine
+    }
+
+    /// The underlying engine, mutably (tenant registry administration).
+    pub fn engine_mut(&mut self) -> &mut BatchEngine {
+        &mut self.engine
+    }
+
+    /// Install (or hot-swap) tenant `id`'s adapter stack. Takes effect at
+    /// the next [`Server::pump`]; requests already decoding for other
+    /// tenants are bitwise-unaffected. Returns the replaced stack.
+    pub fn install_tenant(&mut self, id: u64, adapters: TenantAdapters) -> Option<TenantAdapters> {
+        self.engine.registry_mut().install(id, adapters)
+    }
+
+    /// Remove tenant `id`, returning its stack. In-flight requests of
+    /// that tenant finish with [`FinishReason::Cancelled`] at the next
+    /// pump; queued requests are rejected at admission.
+    pub fn remove_tenant(&mut self, id: u64) -> Option<TenantAdapters> {
+        self.engine.registry_mut().remove(id)
     }
 
     /// Expire every live request whose deadline has passed.

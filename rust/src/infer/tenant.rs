@@ -1,0 +1,92 @@
+//! Multi-tenant adapter registry — per-tenant PEFT stacks over one shared
+//! quantized base.
+//!
+//! The serving tier holds exactly one quantized [`crate::model::Model`]
+//! (loaded from a `DistributionBundle`; the f32 masters are never
+//! rematerialized). Each tenant contributes only its own tiny adapter
+//! stack — per-block LoRA pairs and/or a soft prompt
+//! ([`crate::peft::TenantAdapters`]) — and the [`AdapterRegistry`] maps a
+//! `u64` tenant id to that stack. [`crate::infer::BatchEngine`] resolves a
+//! request's tenant tag against the registry at admission and threads the
+//! resolved stack through `prefill_tenant` / `decode_step_tenants`, so one
+//! stacked decode batch can mix tenants while the shared int8 qgemm still
+//! runs once per layer.
+//!
+//! Installation (hot-swap) is a plain map insert: it takes effect at the
+//! **next** engine step and never perturbs co-batched tenants — every
+//! decode op is row-local, so another tenant's rows are untouched by a
+//! swap (`tests/tenant_parity.rs` proves this bitwise). Removing a tenant
+//! with live requests finishes those requests with
+//! [`crate::infer::FinishReason::Cancelled`] at the next step.
+
+use std::collections::BTreeMap;
+
+use crate::peft::TenantAdapters;
+
+/// Tenant id → adapter stack map shared by all requests of a
+/// [`crate::infer::BatchEngine`].
+///
+/// `BTreeMap`-backed so [`AdapterRegistry::ids`] (and hence every
+/// iteration the engine does) is deterministically ordered — part of the
+/// repo-wide bitwise-reproducibility contract.
+#[derive(Debug, Default)]
+pub struct AdapterRegistry {
+    tenants: BTreeMap<u64, TenantAdapters>,
+    swaps: u64,
+}
+
+impl AdapterRegistry {
+    /// Empty registry: every request decodes the base/model-attached path.
+    pub fn new() -> AdapterRegistry {
+        AdapterRegistry { tenants: BTreeMap::new(), swaps: 0 }
+    }
+
+    /// True when no tenants are installed — the engine then takes the
+    /// legacy `decode_step` fast path (no per-row adapter resolution).
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    /// Number of installed tenants.
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// Installed tenant ids, ascending.
+    pub fn ids(&self) -> Vec<u64> {
+        self.tenants.keys().copied().collect()
+    }
+
+    /// The adapter stack for tenant `id`, if installed.
+    pub fn get(&self, id: u64) -> Option<&TenantAdapters> {
+        self.tenants.get(&id)
+    }
+
+    /// Install (or hot-swap) tenant `id`'s adapter stack, returning the
+    /// previous stack if one was replaced. Takes effect at the next engine
+    /// step; co-batched tenants are unaffected.
+    pub fn install(&mut self, id: u64, adapters: TenantAdapters) -> Option<TenantAdapters> {
+        let prev = self.tenants.insert(id, adapters);
+        if prev.is_some() {
+            self.swaps += 1;
+        }
+        prev
+    }
+
+    /// Remove tenant `id`, returning its stack. The engine cancels the
+    /// tenant's in-flight requests at the next step.
+    pub fn remove(&mut self, id: u64) -> Option<TenantAdapters> {
+        self.tenants.remove(&id)
+    }
+
+    /// Number of hot-swaps (installs that replaced an existing stack).
+    pub fn swaps(&self) -> u64 {
+        self.swaps
+    }
+
+    /// Total adapter payload across tenants, in bytes — the marginal
+    /// serving cost of tenancy (the quantized base is shared).
+    pub fn adapter_bytes(&self) -> usize {
+        self.tenants.values().map(|t| t.adapter_bytes()).sum()
+    }
+}

@@ -31,6 +31,7 @@
 use super::layers::{attention_forward, gelu_forward};
 use super::{Block, Model};
 use crate::infer::KvCache;
+use crate::peft::{LoraAdapter, TenantAdapters};
 use crate::tensor::pool::{self, shard_range, SplitMut};
 use crate::tensor::{kernels, Matrix, Workspace};
 
@@ -114,7 +115,7 @@ impl Block {
         seq: usize,
         ws: &mut Workspace,
     ) -> Matrix {
-        let (q, k, v) = self.project_qkv(x, ws);
+        let (q, k, v) = self.project_qkv(x, &[], &[], ws);
         let (attn_out, _) = attention_forward(&q, &k, &v, batch, seq, self.n_heads);
         ws.recycle(q);
         ws.recycle(k);
@@ -127,15 +128,34 @@ impl Block {
     /// attends over the slot's cached prefix `0..=pos`. Attention is
     /// sharded over the stacked rows (disjoint output rows, one score lane
     /// per shard — bit-identical for any width).
+    ///
+    /// `tenants` carries each row's tenant adapter stack for multi-tenant
+    /// batches (empty = no per-row adapters, the single-tenant fast path):
+    /// the q/v projections then apply each tenant's LoRA delta to its own
+    /// rows only, in the qgemm epilogue (`QuantLinear::infer_rows`).
     pub(crate) fn forward_cached(
         &self,
         x: &Matrix,
         layer: usize,
         rows: &[(usize, usize)],
+        tenants: &[Option<&TenantAdapters>],
         kv: &mut KvCache,
         ws: &mut Workspace,
     ) -> Matrix {
-        let (q, k, v) = self.project_qkv(x, ws);
+        let (q, k, v) = if tenants.is_empty() {
+            self.project_qkv(x, &[], &[], ws)
+        } else {
+            debug_assert_eq!(tenants.len(), rows.len(), "one tenant entry per row");
+            let q_ads: Vec<Option<&LoraAdapter>> = tenants
+                .iter()
+                .map(|t| t.and_then(|t| t.blocks[layer].q.as_ref()))
+                .collect();
+            let v_ads: Vec<Option<&LoraAdapter>> = tenants
+                .iter()
+                .map(|t| t.and_then(|t| t.blocks[layer].v.as_ref()))
+                .collect();
+            self.project_qkv(x, &q_ads, &v_ads, ws)
+        };
         for (r, &(slot, pos)) in rows.iter().enumerate() {
             kv.write_row(layer, slot, pos, k.row(r), v.row(r));
         }
@@ -199,14 +219,30 @@ impl Block {
     }
 
     /// LN → injection → q/k/v projections → IA3 on k/v (shared head of the
-    /// inference forwards).
-    fn project_qkv(&self, x: &Matrix, ws: &mut Workspace) -> (Matrix, Matrix, Matrix) {
+    /// inference forwards). `q_ads`/`v_ads` are per-row tenant LoRA
+    /// adapters (empty slices = the single-tenant path, which runs the
+    /// plain `infer` call — literally the pre-tenancy code).
+    fn project_qkv(
+        &self,
+        x: &Matrix,
+        q_ads: &[Option<&LoraAdapter>],
+        v_ads: &[Option<&LoraAdapter>],
+        ws: &mut Workspace,
+    ) -> (Matrix, Matrix, Matrix) {
         let h1 = self.ln1.forward_infer(x, ws);
         let a_in = self.inj_attn.apply(&h1);
         ws.recycle(h1);
-        let q = self.q_proj.infer(&a_in, ws);
+        let q = if q_ads.is_empty() {
+            self.q_proj.infer(&a_in, ws)
+        } else {
+            self.q_proj.infer_rows(&a_in, q_ads, ws)
+        };
         let k0 = self.k_proj.infer(&a_in, ws);
-        let v0 = self.v_proj.infer(&a_in, ws);
+        let v0 = if v_ads.is_empty() {
+            self.v_proj.infer(&a_in, ws)
+        } else {
+            self.v_proj.infer_rows(&a_in, v_ads, ws)
+        };
         ws.recycle(a_in);
         let k = match &self.ia3_k {
             Some(ia3) => {
@@ -310,9 +346,28 @@ impl Model {
         kv: &mut KvCache,
         ws: &mut Workspace,
     ) -> Matrix {
+        self.prefill_tenant(prompt, None, slot, kv, ws)
+    }
+
+    /// [`Model::prefill`] with an explicit tenant adapter stack. `None`
+    /// runs the model's own adapters/prompt (bit-identical to `prefill`);
+    /// `Some(t)` embeds the tenant's soft prompt (replacing the model's
+    /// virtual tokens for this slot) and applies the tenant's LoRA deltas
+    /// to every prompt row, on top of any model-attached adapters.
+    pub fn prefill_tenant(
+        &self,
+        prompt: &[u32],
+        tenant: Option<&TenantAdapters>,
+        slot: usize,
+        kv: &mut KvCache,
+        ws: &mut Workspace,
+    ) -> Matrix {
         assert!(!prompt.is_empty(), "prefill requires a non-empty prompt");
         assert_eq!(kv.len(slot), 0, "prefill requires a reset slot");
-        let (mut x, _ptc) = self.embed(&[prompt.to_vec()]);
+        let mut x = match tenant {
+            None => self.embed(&[prompt.to_vec()]).0,
+            Some(t) => self.embed_tenant(prompt, t),
+        };
         let t = x.rows(); // n_virtual + prompt.len()
         assert!(
             kv.reserve(slot, t),
@@ -320,8 +375,12 @@ impl Model {
              through KvCache::can_admit first"
         );
         let rows: Vec<(usize, usize)> = (0..t).map(|p| (slot, p)).collect();
+        let tenants: Vec<Option<&TenantAdapters>> = match tenant {
+            None => Vec::new(),
+            Some(t) => vec![Some(t); rows.len()],
+        };
         for (l, blk) in self.blocks.iter().enumerate() {
-            let nx = blk.forward_cached(&x, l, &rows, kv, ws);
+            let nx = blk.forward_cached(&x, l, &rows, &tenants, kv, ws);
             ws.recycle(std::mem::replace(&mut x, nx));
         }
         kv.advance(slot, t);
@@ -347,7 +406,30 @@ impl Model {
         kv: &mut KvCache,
         ws: &mut Workspace,
     ) -> Matrix {
+        self.decode_step_tenants(tokens, slots, &[], kv, ws)
+    }
+
+    /// [`Model::decode_step`] with per-row tenant tags: `tenants[i]` is
+    /// slot `i`'s adapter stack (`None` = base/model-attached path). An
+    /// empty slice means no tenancy at all and is bit-identical to
+    /// `decode_step`. Mixed-tenant rows still run the quantized linears as
+    /// ONE stacked batch — the shared int8 qgemm executes once per layer;
+    /// only the per-tenant LoRA deltas are applied row-selectively in the
+    /// epilogue, which is bitwise-equal to each tenant decoding solo
+    /// (row-local ops, one accumulate per output row).
+    pub fn decode_step_tenants(
+        &self,
+        tokens: &[u32],
+        slots: &[usize],
+        tenants: &[Option<&TenantAdapters>],
+        kv: &mut KvCache,
+        ws: &mut Workspace,
+    ) -> Matrix {
         assert_eq!(tokens.len(), slots.len(), "one token per active slot");
+        assert!(
+            tenants.is_empty() || tenants.len() == tokens.len(),
+            "one tenant entry per active slot"
+        );
         let n = tokens.len();
         assert!(n > 0, "decode_step needs at least one active slot");
         // duplicate slots would stack two rows on one cache position and
@@ -379,7 +461,7 @@ impl Model {
             rows.push((slot, pos));
         }
         for (l, blk) in self.blocks.iter().enumerate() {
-            let nx = blk.forward_cached(&x, l, &rows, kv, ws);
+            let nx = blk.forward_cached(&x, l, &rows, tenants, kv, ws);
             ws.recycle(std::mem::replace(&mut x, nx));
         }
         for &slot in slots {

@@ -4,6 +4,7 @@
 use crate::methods::{build_method, MethodConfig, MethodKind, MethodSnapshot, QuantMethod};
 use crate::outlier::{ChannelStats, LayerKind, OutlierSet};
 use crate::peft::{LoraAdapter, LoraCache};
+use crate::quant::pipeline;
 use crate::tensor::{kernels, Matrix, Workspace};
 use crate::util::prng::Rng;
 
@@ -208,6 +209,55 @@ impl QuantLinear {
             let dy = lora.delta_infer(x, ws);
             y.add_assign(&dy);
             ws.recycle(dy);
+        }
+        y
+    }
+
+    /// Multi-tenant inference forward: the shared base (frozen quantized
+    /// qgemm, plus this layer's own adapter if attached) runs **once** for
+    /// the whole stacked batch, then `adapters[r]` — each row's tenant
+    /// adapter, resolved by the serving layer — is applied per row in the
+    /// epilogue. Rows sharing an adapter are gathered into one stacked
+    /// delta matmul and scattered back
+    /// (`quant::pipeline::{gather_rows, scatter_add_rows}`), so each
+    /// output row receives exactly one `+=` of exactly the delta row the
+    /// solo attached-adapter path would add — mixed-tenant batches are
+    /// bit-identical to solo decodes (`tests/tenant_parity.rs`). With all
+    /// entries `None` this is [`QuantLinear::infer`] plus a scan.
+    pub fn infer_rows(
+        &self,
+        x: &Matrix,
+        adapters: &[Option<&LoraAdapter>],
+        ws: &mut Workspace,
+    ) -> Matrix {
+        assert_eq!(adapters.len(), x.rows(), "one adapter entry per row");
+        let mut y = self.infer(x, ws);
+        // group rows by adapter identity (tiny n: the batch is the active
+        // decode set) so each tenant's delta runs as one stacked matmul
+        let mut groups: Vec<(&LoraAdapter, Vec<usize>)> = Vec::new();
+        for (r, a) in adapters.iter().enumerate() {
+            if let Some(a) = a {
+                match groups.iter_mut().find(|(g, _)| std::ptr::eq(*g, *a)) {
+                    Some((_, rows)) => rows.push(r),
+                    None => groups.push((a, vec![r])),
+                }
+            }
+        }
+        for (adapter, rows) in groups {
+            if rows.len() == x.rows() {
+                // single-tenant batch: whole-matrix delta, no gather — the
+                // exact arithmetic of the attached-adapter path above
+                let dy = adapter.delta_infer(x, ws);
+                y.add_assign(&dy);
+                ws.recycle(dy);
+            } else {
+                let mut xg = ws.take_matrix("lin.tenant.xg", rows.len(), x.cols());
+                pipeline::gather_rows(x, &rows, &mut xg);
+                let dy = adapter.delta_infer(&xg, ws);
+                pipeline::scatter_add_rows(&mut y, &dy, &rows);
+                ws.put_matrix("lin.tenant.xg", xg);
+                ws.recycle(dy);
+            }
         }
         y
     }

@@ -22,7 +22,10 @@ pub mod param;
 
 use crate::methods::{MethodConfig, MethodKind};
 use crate::outlier::{BudgetAllocator, ChannelStats, OutlierDetector, OutlierRegistry};
-use crate::peft::{Ia3Vector, LoraAdapter, PTuningCache, PTuningEncoder, PeftKind, PromptTuning};
+use crate::peft::{
+    Ia3Vector, LoraAdapter, PTuningCache, PTuningEncoder, PeftKind, PromptTuning,
+    TenantAdapters, TenantBlockAdapters,
+};
 use crate::tensor::{Matrix, Workspace};
 use crate::util::prng::Rng;
 use inject::{DiagGain, InjectConfig};
@@ -435,6 +438,44 @@ impl Model {
         }
     }
 
+    /// Detach the model's LoRA/Prompt adapter stack into a portable
+    /// [`TenantAdapters`], leaving a **bare shared base** (no per-layer
+    /// adapters, no virtual tokens). The frozen quantized weights are
+    /// untouched; the detached stack can be installed into an
+    /// `infer::AdapterRegistry` and applied per decode row, or re-attached
+    /// with [`Model::attach_adapters`]. Moving the adapters preserves
+    /// their bits exactly, so detached-then-per-row application is
+    /// bit-identical to the attached path (`tests/tenant_parity.rs`).
+    pub fn detach_adapters(&mut self) -> TenantAdapters {
+        let blocks = self
+            .blocks
+            .iter_mut()
+            .map(|b| TenantBlockAdapters {
+                q: b.q_proj.lora.take(),
+                v: b.v_proj.lora.take(),
+            })
+            .collect();
+        let prompt = self.prompt.take();
+        self.peft = None;
+        TenantAdapters { blocks, prompt }
+    }
+
+    /// Re-attach a detached adapter stack (inverse of
+    /// [`Model::detach_adapters`]): per-block LoRA adapters go back onto
+    /// q/v projections and the prompt block becomes the model's own.
+    pub fn attach_adapters(&mut self, t: TenantAdapters) {
+        assert_eq!(
+            t.blocks.len(),
+            self.blocks.len(),
+            "adapter stack depth does not match the model"
+        );
+        for (b, ba) in self.blocks.iter_mut().zip(t.blocks) {
+            b.q_proj.lora = ba.q;
+            b.v_proj.lora = ba.v;
+        }
+        self.prompt = t.prompt;
+    }
+
     /// Number of virtual tokens prepended by the active PEFT method.
     pub fn n_virtual(&self) -> usize {
         if self.prompt.is_some() || self.ptuning.is_some() {
@@ -479,6 +520,34 @@ impl Model {
             }
         }
         (x, ptc)
+    }
+
+    /// Embed one prompt with a *tenant's* virtual tokens instead of the
+    /// model's own — the per-tenant prefill path. Mirrors [`Model::embed`]
+    /// for a single sequence bit-for-bit: same virtual-row copy, same
+    /// `te + pe` arithmetic with token positions offset by the tenant's
+    /// virtual count.
+    fn embed_tenant(&self, prompt: &[u32], tenant: &TenantAdapters) -> Matrix {
+        let nv = tenant.n_virtual();
+        let s = prompt.len();
+        let d = self.cfg.d_model;
+        assert!(nv + s <= self.cfg.max_seq, "sequence too long: {} > {}", nv + s, self.cfg.max_seq);
+        let mut x = Matrix::zeros(nv + s, d);
+        if let Some(p) = &tenant.prompt {
+            let vb = p.virtual_block();
+            for vi in 0..nv {
+                x.row_mut(vi).copy_from_slice(vb.row(vi));
+            }
+        }
+        for (si, &t) in prompt.iter().enumerate() {
+            let row = x.row_mut(nv + si);
+            let te = self.emb.tok.row(t as usize);
+            let pe = self.emb.pos.row(nv + si);
+            for j in 0..d {
+                row[j] = te[j] + pe[j];
+            }
+        }
+        x
     }
 
     /// Full forward pass using the model's own scratch arena. Returns

@@ -200,6 +200,73 @@ impl PromptTuning {
     }
 }
 
+/// Per-block adapter pair for one tenant: LoRA deltas on the q/v
+/// projections — the only layers [`PeftKind::Lora`] adapts.
+pub struct TenantBlockAdapters {
+    pub q: Option<LoraAdapter>,
+    pub v: Option<LoraAdapter>,
+}
+
+/// One tenant's detachable adapter stack over a shared frozen base:
+/// per-block LoRA q/v adapters plus an optional prompt-tuning block.
+/// Detached from a fine-tuned model (`Model::detach_adapters`), installed
+/// into an `infer::AdapterRegistry`, and applied per decode row in the
+/// qgemm epilogue — many tenants share one quantized base with no f32
+/// weight rematerialization. The scope is LoRA + Prompt: IA3/P-Tuning
+/// reshape shared activations (diagonal gains / encoder forward), which
+/// is not row-local per tenant and therefore not batch-mixable.
+pub struct TenantAdapters {
+    /// One entry per model block, indexed by layer.
+    pub blocks: Vec<TenantBlockAdapters>,
+    /// Tenant-owned virtual token embeddings (prompt tuning). When set,
+    /// the tenant's requests carry `n_virtual()` virtual rows; the shared
+    /// base itself stays bare.
+    pub prompt: Option<PromptTuning>,
+}
+
+impl TenantAdapters {
+    /// An adapter-free stack for a model of `n_blocks` layers (a tenant
+    /// that decodes the bare base).
+    pub fn empty(n_blocks: usize) -> TenantAdapters {
+        TenantAdapters {
+            blocks: (0..n_blocks)
+                .map(|_| TenantBlockAdapters { q: None, v: None })
+                .collect(),
+            prompt: None,
+        }
+    }
+
+    /// Virtual tokens this tenant's requests prepend (0 without prompt
+    /// tuning).
+    pub fn n_virtual(&self) -> usize {
+        self.prompt.as_ref().map(|p| p.n_virtual()).unwrap_or(0)
+    }
+
+    /// Does the stack carry any adapter at all?
+    pub fn is_empty(&self) -> bool {
+        self.prompt.is_none() && self.blocks.iter().all(|b| b.q.is_none() && b.v.is_none())
+    }
+
+    /// Bytes of per-tenant adapter state (f32) — the marginal cost of one
+    /// more tenant on a shared base, reported by `bench_tenants`.
+    pub fn adapter_bytes(&self) -> usize {
+        let lora: usize = self
+            .blocks
+            .iter()
+            .map(|b| {
+                b.q.as_ref().map(|a| a.trainable_params()).unwrap_or(0)
+                    + b.v.as_ref().map(|a| a.trainable_params()).unwrap_or(0)
+            })
+            .sum();
+        let prompt = self
+            .prompt
+            .as_ref()
+            .map(|p| p.embeddings.numel())
+            .unwrap_or(0);
+        (lora + prompt) * 4
+    }
+}
+
 /// P-tuning: virtual tokens are produced by a 2-layer MLP "prompt encoder"
 /// over learnable seeds — `P = W2·tanh(W1·E)` (per virtual token).
 pub struct PTuningEncoder {

@@ -368,6 +368,36 @@ pub fn warm(ws: &mut Workspace, id: PlanId, cin: usize, cout: usize, m_hint: usi
     store_plan(ws, id, plan);
 }
 
+/// Gather `rows` of `src` into `dst` (fully overwritten;
+/// `dst.rows() == rows.len()`). The multi-tenant serving path uses this
+/// to stack one tenant's rows out of a mixed decode batch before running
+/// that tenant's adapter delta as one matmul
+/// (`QuantLinear::infer_rows`).
+pub fn gather_rows(src: &Matrix, rows: &[usize], dst: &mut Matrix) {
+    assert_eq!(dst.rows(), rows.len(), "gather destination row mismatch");
+    assert_eq!(dst.cols(), src.cols(), "gather destination col mismatch");
+    for (i, &r) in rows.iter().enumerate() {
+        dst.row_mut(i).copy_from_slice(src.row(r));
+    }
+}
+
+/// Scatter-accumulate `delta` into `out`: row `i` of `delta` is `+=`ed
+/// into row `rows[i]` of `out` — the adapter-delta leg of the epilogue
+/// contract (`⊕ adapter-delta`), applied to one tenant's row group of a
+/// mixed batch. Each output row receives exactly one accumulation of
+/// exactly the row the whole-batch `add_assign` would have added (the
+/// delta matmul is row-local), so gathered-then-scattered adapter
+/// application is bit-identical to the attached-adapter path.
+pub fn scatter_add_rows(out: &mut Matrix, delta: &Matrix, rows: &[usize]) {
+    assert_eq!(delta.rows(), rows.len(), "scatter delta row mismatch");
+    assert_eq!(delta.cols(), out.cols(), "scatter delta col mismatch");
+    for (i, &r) in rows.iter().enumerate() {
+        for (o, &d) in out.row_mut(r).iter_mut().zip(delta.row(i)) {
+            *o += d;
+        }
+    }
+}
+
 /// One-call fused pipeline for methods without a correction stage:
 /// scale→quantize → matmul+dequant, writing `out` directly.
 pub fn qgemm_into(
@@ -480,6 +510,24 @@ mod tests {
         let mut want = vec![0.0f32; t * cout];
         qw.matmul_into(&xi, &dx, &mut want);
         assert_eq!(got, want, "ZeroAbsAbove diverged from masking");
+    }
+
+    #[test]
+    fn gather_scatter_matches_whole_batch_accumulate() {
+        let mut r = Rng::new(0x93);
+        let x = Matrix::randn(6, 10, &mut r, 1.0);
+        let delta = Matrix::randn(6, 10, &mut r, 0.5);
+        // reference: whole-batch += (the attached-adapter epilogue)
+        let mut want = x.clone();
+        want.add_assign(&delta);
+        // per-group gather → scatter over an interleaved 2-"tenant" split
+        let mut got = x.clone();
+        for rows in [vec![0usize, 2, 4], vec![1usize, 3, 5]] {
+            let mut dg = Matrix::zeros(rows.len(), 10);
+            gather_rows(&delta, &rows, &mut dg);
+            scatter_add_rows(&mut got, &dg, &rows);
+        }
+        assert_eq!(got.data(), want.data(), "scatter-add diverged from +=");
     }
 
     #[test]

@@ -1,0 +1,314 @@
+//! Integration tests for the `bench_gate` binary itself — the gate guards
+//! every perf claim in CI, so its CLI behaviour is pinned here by driving
+//! the real executable over fixture JSON: seeding mode, the ±tolerance
+//! pass/fail verdicts, `--update` baseline promotion, `--meta` stamp
+//! printing, and the exit-2 refusals (unstamped records, cross-ISA
+//! comparisons, unparseable input).
+//!
+//! Exit-code contract: 0 = pass/seeding, 1 = regression, 2 = unusable
+//! input (refuse to compare rather than pass vacuously).
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+use quaff::util::json::Json;
+
+/// Fresh per-test fixture directory (tests in this binary run in
+/// parallel, so each gets its own).
+fn fixture_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("quaff_gate_cli_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create fixture dir");
+    dir
+}
+
+/// A stamped single-kernel bench record with the given mean.
+fn record(bench: &str, name: &str, ns: f64, isa: &str) -> String {
+    format!(
+        r#"{{"bench":"{bench}","meta":{{"isa":"{isa}","tile":"4x8","threads":4}},
+           "kernels":[{{"name":"{name}","ns_per_op":{ns},"p50_ns":{p50}}}]}}"#,
+        p50 = ns * 2.0
+    )
+}
+
+fn write(path: &Path, text: &str) {
+    std::fs::write(path, text).expect("write fixture");
+}
+
+/// Run the real gate binary with `args`, all paths absolute so the test
+/// is independent of the harness working directory.
+fn gate(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_bench_gate"))
+        .args(args)
+        .output()
+        .expect("spawn bench_gate")
+}
+
+fn stdout(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+fn stderr(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+/// An empty baseline puts the gate in seeding mode: exit 0, the fresh
+/// entries are recorded in the diff, and the output explains how to arm.
+#[test]
+fn empty_baseline_is_seeding_mode() {
+    let dir = fixture_dir("seed");
+    let baseline = dir.join("BENCH_baseline.json");
+    let fresh = dir.join("BENCH_serve.json");
+    let diff = dir.join("diff.json");
+    write(&baseline, r#"{"tolerance":0.25,"entries":{}}"#);
+    write(&fresh, &record("serve", "mixed", 100.0, "avx2"));
+    let out = gate(&[
+        "--baseline",
+        baseline.to_str().unwrap(),
+        "--fresh",
+        fresh.to_str().unwrap(),
+        "--diff",
+        diff.to_str().unwrap(),
+    ]);
+    assert_eq!(out.status.code(), Some(0), "seeding must pass: {}", stderr(&out));
+    assert!(stdout(&out).contains("seeding"), "stdout: {}", stdout(&out));
+    assert!(stdout(&out).contains("--update"), "must explain how to arm the gate");
+    let diff_json = Json::parse(&std::fs::read_to_string(&diff).unwrap()).unwrap();
+    assert_eq!(diff_json.get("pass"), Some(&Json::Bool(true)));
+    let findings = diff_json.get("findings").and_then(Json::as_arr).unwrap();
+    assert_eq!(findings.len(), 2, "ns_per_op + p50_ns recorded as new");
+    assert!(findings
+        .iter()
+        .all(|f| f.get("verdict").and_then(Json::as_str) == Some("new")));
+}
+
+/// Within ±25% the armed gate passes (exit 0); beyond it fails (exit 1)
+/// and names the regressed entry in stdout and the diff artifact.
+#[test]
+fn tolerance_splits_pass_from_fail() {
+    let dir = fixture_dir("tol");
+    let baseline = dir.join("BENCH_baseline.json");
+    let fresh = dir.join("BENCH_serve.json");
+    let diff = dir.join("diff.json");
+    write(
+        &baseline,
+        r#"{"tolerance":0.25,"entries":{"serve/mixed/ns_per_op":100.0,"serve/mixed/p50_ns":200.0}}"#,
+    );
+    let run = |ns: f64| {
+        write(&fresh, &record("serve", "mixed", ns, "avx2"));
+        gate(&[
+            "--baseline",
+            baseline.to_str().unwrap(),
+            "--fresh",
+            fresh.to_str().unwrap(),
+            "--diff",
+            diff.to_str().unwrap(),
+        ])
+    };
+
+    let ok = run(120.0); // +20% — inside the band
+    assert_eq!(ok.status.code(), Some(0), "{}", stderr(&ok));
+    assert!(stdout(&ok).contains("PASS"), "stdout: {}", stdout(&ok));
+
+    let fail = run(130.0); // +30% — regression
+    assert_eq!(fail.status.code(), Some(1), "a regression must exit 1");
+    assert!(stdout(&fail).contains("REGRESSED"));
+    assert!(stdout(&fail).contains("serve/mixed/ns_per_op"), "names the entry");
+    assert!(stdout(&fail).contains("FAIL"));
+    let diff_json = Json::parse(&std::fs::read_to_string(&diff).unwrap()).unwrap();
+    assert_eq!(diff_json.get("pass"), Some(&Json::Bool(false)));
+    assert!(
+        diff_json.get("findings").and_then(Json::as_arr).unwrap().iter().any(|f| {
+            f.get("id").and_then(Json::as_str) == Some("serve/mixed/ns_per_op")
+                && f.get("verdict").and_then(Json::as_str) == Some("regressed")
+        }),
+        "diff artifact carries the machine-readable verdict"
+    );
+
+    let improved = run(60.0); // -40% — faster is never a failure
+    assert_eq!(improved.status.code(), Some(0));
+    assert!(stdout(&improved).contains("improved"));
+
+    // a baselined entry with no fresh record is a silently-skipped bench
+    write(&fresh, &record("serve", "other", 100.0, "avx2"));
+    let missing = gate(&[
+        "--baseline",
+        baseline.to_str().unwrap(),
+        "--fresh",
+        fresh.to_str().unwrap(),
+        "--diff",
+        diff.to_str().unwrap(),
+    ]);
+    assert_eq!(missing.status.code(), Some(1), "missing records fail the gate");
+    assert!(stdout(&missing).contains("MISSING"));
+}
+
+/// `--update` rewrites the baseline from the fresh records, propagating
+/// the meta stamp; the rewritten baseline then passes against the same
+/// records. Updating from nothing is refused (would disarm the gate).
+#[test]
+fn update_promotes_fresh_records_with_stamp() {
+    let dir = fixture_dir("update");
+    let baseline = dir.join("BENCH_baseline.json");
+    let fresh = dir.join("BENCH_serve.json");
+    let diff = dir.join("diff.json");
+    write(&baseline, r#"{"tolerance":0.25,"entries":{}}"#);
+    write(&fresh, &record("serve", "mixed", 100.0, "avx2"));
+    let out = gate(&[
+        "--baseline",
+        baseline.to_str().unwrap(),
+        "--fresh",
+        fresh.to_str().unwrap(),
+        "--diff",
+        diff.to_str().unwrap(),
+        "--update",
+    ]);
+    assert_eq!(out.status.code(), Some(0), "{}", stderr(&out));
+    assert!(stdout(&out).contains("updated"));
+    let promoted = Json::parse(&std::fs::read_to_string(&baseline).unwrap()).unwrap();
+    let entries = match promoted.get("entries") {
+        Some(Json::Obj(m)) => m,
+        other => panic!("baseline has no entries object: {other:?}"),
+    };
+    assert_eq!(entries.get("serve/mixed/ns_per_op").and_then(Json::as_f64), Some(100.0));
+    assert_eq!(entries.get("serve/mixed/p50_ns").and_then(Json::as_f64), Some(200.0));
+    assert_eq!(
+        promoted.get("meta").and_then(|m| m.get("isa")).and_then(Json::as_str),
+        Some("avx2"),
+        "the measurement stamp must ride into the baseline"
+    );
+    // the promoted baseline is immediately green against the same records
+    let recheck = gate(&[
+        "--baseline",
+        baseline.to_str().unwrap(),
+        "--fresh",
+        fresh.to_str().unwrap(),
+        "--diff",
+        diff.to_str().unwrap(),
+    ]);
+    assert_eq!(recheck.status.code(), Some(0));
+    assert!(stdout(&recheck).contains("PASS"));
+
+    // --update with zero fresh entries would disarm the gate: refuse
+    let none = dir.join("does_not_exist.json");
+    let refused = gate(&[
+        "--baseline",
+        baseline.to_str().unwrap(),
+        "--fresh",
+        none.to_str().unwrap(),
+        "--diff",
+        diff.to_str().unwrap(),
+        "--update",
+    ]);
+    assert_eq!(refused.status.code(), Some(2));
+    assert!(stderr(&refused).contains("refusing"));
+}
+
+/// `--meta` prints each record's `{isa, tile, threads}` stamp; any
+/// missing or unstamped record exits 2 so CI can't compare blind.
+#[test]
+fn meta_prints_stamps_and_rejects_unstamped() {
+    let dir = fixture_dir("meta");
+    let stamped = dir.join("BENCH_serve.json");
+    let unstamped = dir.join("BENCH_legacy.json");
+    write(&stamped, &record("serve", "mixed", 100.0, "avx2"));
+    write(&unstamped, r#"{"bench":"legacy","kernels":[{"name":"k","ns_per_op":1.0}]}"#);
+
+    let ok = gate(&["--fresh", stamped.to_str().unwrap(), "--meta"]);
+    assert_eq!(ok.status.code(), Some(0), "{}", stderr(&ok));
+    assert!(stdout(&ok).contains("isa=avx2"));
+    assert!(stdout(&ok).contains("tile=4x8"));
+    assert!(stdout(&ok).contains("threads=4"));
+
+    let both = format!("{},{}", stamped.to_str().unwrap(), unstamped.to_str().unwrap());
+    let bad = gate(&["--fresh", &both, "--meta"]);
+    assert_eq!(bad.status.code(), Some(2), "unstamped records must refuse");
+    assert!(stderr(&bad).contains("no meta stamp"));
+    assert!(stdout(&bad).contains("isa=avx2"), "stamped records still print");
+
+    let gone = dir.join("missing.json");
+    let absent = gate(&["--fresh", gone.to_str().unwrap(), "--meta"]);
+    assert_eq!(absent.status.code(), Some(2), "a missing record is not a pass");
+}
+
+/// A stamped baseline and stamped fresh records measured under different
+/// ISAs refuse to compare (exit 2): cross-ISA ns deltas are machine
+/// differences, not regressions.
+#[test]
+fn cross_isa_comparison_is_refused() {
+    let dir = fixture_dir("isa");
+    let baseline = dir.join("BENCH_baseline.json");
+    let fresh = dir.join("BENCH_serve.json");
+    let diff = dir.join("diff.json");
+    write(
+        &baseline,
+        r#"{"tolerance":0.25,"meta":{"isa":"scalar","tile":"1x1","threads":1},
+           "entries":{"serve/mixed/ns_per_op":100.0}}"#,
+    );
+    write(&fresh, &record("serve", "mixed", 500.0, "avx2"));
+    let out = gate(&[
+        "--baseline",
+        baseline.to_str().unwrap(),
+        "--fresh",
+        fresh.to_str().unwrap(),
+        "--diff",
+        diff.to_str().unwrap(),
+    ]);
+    assert_eq!(out.status.code(), Some(2), "cross-ISA must refuse, not fail or pass");
+    assert!(stderr(&out).contains("ISA mismatch"));
+    assert!(stderr(&out).contains("--update"), "points at the re-seed workflow");
+
+    // two fresh records spanning ISAs are refused for the same reason
+    let fresh2 = dir.join("BENCH_other.json");
+    write(&fresh2, &record("other", "k", 10.0, "neon"));
+    let both = format!("{},{}", fresh.to_str().unwrap(), fresh2.to_str().unwrap());
+    let mixed = gate(&[
+        "--baseline",
+        baseline.to_str().unwrap(),
+        "--fresh",
+        &both,
+        "--diff",
+        diff.to_str().unwrap(),
+    ]);
+    assert_eq!(mixed.status.code(), Some(2));
+    assert!(stderr(&mixed).contains("multiple ISAs"));
+}
+
+/// Unparseable input exits 2 — a corrupt record or baseline must never
+/// read as "no regressions".
+#[test]
+fn corrupt_json_is_refused() {
+    let dir = fixture_dir("corrupt");
+    let baseline = dir.join("BENCH_baseline.json");
+    let fresh = dir.join("BENCH_serve.json");
+    let diff = dir.join("diff.json");
+    write(&baseline, r#"{"tolerance":0.25,"entries":{}}"#);
+    write(&fresh, "{not json");
+    let out = gate(&[
+        "--baseline",
+        baseline.to_str().unwrap(),
+        "--fresh",
+        fresh.to_str().unwrap(),
+        "--diff",
+        diff.to_str().unwrap(),
+    ]);
+    assert_eq!(out.status.code(), Some(2));
+    assert!(stderr(&out).contains("cannot parse"));
+
+    write(&fresh, &record("serve", "mixed", 100.0, "avx2"));
+    write(&baseline, "also {not json");
+    let out = gate(&[
+        "--baseline",
+        baseline.to_str().unwrap(),
+        "--fresh",
+        fresh.to_str().unwrap(),
+        "--diff",
+        diff.to_str().unwrap(),
+    ]);
+    assert_eq!(out.status.code(), Some(2));
+    assert!(stderr(&out).contains("cannot parse"));
+
+    let unknown = gate(&["--definitely-not-a-flag"]);
+    assert_eq!(unknown.status.code(), Some(2), "unknown flags are an argument error");
+    assert!(stderr(&unknown).contains("unknown argument"));
+}

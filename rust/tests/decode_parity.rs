@@ -123,6 +123,7 @@ fn check_engine_matches_solo(m: &Model) {
             id: i as u64,
             prompt: (0..3 + i).map(|_| r.below(64) as u32).collect(),
             max_new: 7,
+            tenant: None,
         })
         .collect();
     let cfg = GenerateConfig::greedy(7);

@@ -109,6 +109,7 @@ fn engine_memory_is_stable_across_same_shape_request_batches() {
             id: i as u64,
             prompt: vec![1, 2, 3, 1 + (i % 5) as u32],
             max_new: 8,
+            tenant: None,
         })
         .collect();
     let first = run_round(&mut engine, &model, &reqs);

@@ -240,6 +240,7 @@ fn saved_bundle_serves_identically_from_a_fresh_engine() {
             id: i,
             prompt: vec![2, 3 + i as u32, 5, 7],
             max_new: 6,
+            tenant: None,
         })
         .collect();
     let mut engine = BatchEngine::new(&bundle.model, 2, GenerateConfig::greedy(6));

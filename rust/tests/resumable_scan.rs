@@ -1,0 +1,134 @@
+//! `coordinator::resumable_jobs` over a messy checkpoint directory: valid
+//! checkpoints come back in deterministic (path-sorted) order wired to
+//! resume in place, a checkpoint whose current generation is corrupt but
+//! whose `.prev` survives is recovered silently, a checkpoint corrupt in
+//! its only generation surfaces as a readable `scan <path>` error, other
+//! archive kinds sharing the `.qckpt` extension are skipped, and files
+//! with other extensions are ignored outright.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use quaff::coordinator::{
+    resumable_jobs, run_job, CheckpointSpec, FinetuneJob, PreprocessServer, ServerConfig,
+};
+use quaff::methods::MethodKind;
+use quaff::peft::PeftKind;
+use quaff::persist;
+
+fn server_cfg() -> ServerConfig {
+    let mut cfg = ServerConfig::default();
+    cfg.preset = "opt-tiny".to_string();
+    cfg.calib_samples = 8;
+    cfg.calib_batch = 4;
+    cfg
+}
+
+fn tiny_job(id: u64, steps: u64, path: &Path) -> FinetuneJob {
+    let mut j = FinetuneJob::new(id, "gpqa", MethodKind::Quaff, PeftKind::Lora);
+    j.steps = steps;
+    j.batch_size = 2;
+    j.train_pool = 8;
+    j.eval_samples = 4;
+    j.max_len = 128;
+    j.checkpoint = Some(CheckpointSpec { path: path.to_path_buf(), every: 1 });
+    j
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("quaff_scan_{}_{tag}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).expect("create scan dir");
+    dir
+}
+
+/// Chop the second half off an archive — `tests/persist_resume.rs` pins
+/// that this is detected as truncation.
+fn truncate_archive(path: &Path) {
+    let intact = fs::read(path).expect("read archive");
+    fs::write(path, &intact[..intact.len() / 2]).expect("truncate archive");
+}
+
+#[test]
+fn scan_orders_recovers_skips_and_ignores() {
+    let dir = tmp_dir("mixed");
+    let server = PreprocessServer::new(server_cfg());
+
+    // z-named but lowest id: proves the order is path-sorted, not id-sorted
+    let a = dir.join("a_interrupted.qckpt");
+    run_job(&server, &tiny_job(30, 1, &a)).expect("write checkpoint a");
+    let z = dir.join("z_interrupted.qckpt");
+    run_job(&server, &tiny_job(10, 1, &z)).expect("write checkpoint z");
+
+    // two generations (steps 2, every 1), then a corrupt current gen: the
+    // scan must fall back to `.prev` instead of erroring
+    let r = dir.join("m_recovered.qckpt");
+    run_job(&server, &tiny_job(20, 2, &r)).expect("write checkpoint m");
+    assert!(persist::previous_generation(&r).exists(), "two saves retain a .prev");
+    truncate_archive(&r);
+
+    // a saved DistributionBundle shares the extension — skipped, not fatal
+    let mut bundle = server.prepare(MethodKind::Naive, PeftKind::Lora);
+    bundle.save(&dir.join("k_bundle.qckpt")).expect("save bundle");
+
+    // non-checkpoint extensions are ignored outright
+    fs::write(dir.join("notes.txt"), "not an archive").unwrap();
+    fs::write(dir.join("report.json"), "{}").unwrap();
+
+    let jobs = resumable_jobs(&dir).expect("mixed dir scans cleanly");
+    assert_eq!(
+        jobs.iter().map(|j| j.id).collect::<Vec<_>>(),
+        vec![30, 20, 10],
+        "jobs come back in path-sorted order (a_, m_, z_), not id order"
+    );
+    for (job, path) in jobs.iter().zip([&a, &r, &z]) {
+        let spec = job.checkpoint.as_ref().expect("wired to resume in place");
+        assert_eq!(&spec.path, path, "spec points at the scanned file");
+        assert_eq!(spec.every, 1);
+        assert_eq!(job.dataset, "gpqa", "recorded spec fields survive the round trip");
+    }
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_only_generation_is_a_readable_error() {
+    let dir = tmp_dir("corrupt");
+    let server = PreprocessServer::new(server_cfg());
+
+    let good = dir.join("a_good.qckpt");
+    run_job(&server, &tiny_job(1, 1, &good)).expect("write good checkpoint");
+    // one step → one generation, no `.prev` to recover from
+    let bad = dir.join("b_bad.qckpt");
+    run_job(&server, &tiny_job(2, 1, &bad)).expect("write bad checkpoint");
+    assert!(
+        !persist::previous_generation(&bad).exists(),
+        "a single save leaves no previous generation"
+    );
+    truncate_archive(&bad);
+
+    let err = resumable_jobs(&dir).expect_err("corrupt-only checkpoint must not scan");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("scan"), "error names the operation: {msg}");
+    assert!(msg.contains("b_bad.qckpt"), "error names the file: {msg}");
+    assert!(
+        msg.contains("unusable") && msg.contains("previous generation"),
+        "error explains both failed generations: {msg}"
+    );
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn empty_and_missing_directories() {
+    let dir = tmp_dir("empty");
+    assert!(resumable_jobs(&dir).expect("empty dir is fine").is_empty());
+
+    let gone = dir.join("never_created");
+    let err = resumable_jobs(&gone).expect_err("missing dir is an error, not a panic");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("scan"), "{msg}");
+    assert!(msg.contains("never_created"), "{msg}");
+
+    let _ = fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,309 @@
+//! Edge-case suite for the serving front-end and engine event stream:
+//! deadline boundaries (expiry exactly at the admission tick), cancel of
+//! tickets that already finished, queue backpressure with
+//! retry-after-drain, the **exact** `StepEvent` sequences the engine
+//! emits, and the `EngineStats::mean_batch` zero-decode-steps regression
+//! (a drained-before-decode server must report `0.0`, not NaN — NaN
+//! poisons `BENCH_serve.json` and the gate's JSON parse).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use quaff::infer::{
+    self, Admission, BatchEngine, Completion, EngineStats, FinishReason, GenerateConfig, KvCache,
+    Request, Server, StepEvent, SubmitError, TokenSink,
+};
+use quaff::methods::{MethodConfig, MethodKind};
+use quaff::model::{Model, ModelConfig};
+use quaff::outlier::{BudgetAllocator, BudgetPolicy, OutlierDetector};
+use quaff::tensor::Workspace;
+use quaff::util::prng::Rng;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 64,
+        max_seq: 64,
+        ln_eps: 1e-5,
+        inject_outliers: true,
+        lora_rank: 4,
+        lora_alpha: 8.0,
+        lora_dropout: 0.0,
+        n_virtual: 4,
+    }
+}
+
+fn quantized_model(seed: u64) -> Model {
+    let mut m = Model::new(tiny_cfg(), seed);
+    let mut r = Rng::new(seed ^ 0xC0FFEE);
+    m.start_calibration();
+    for _ in 0..3 {
+        let toks: Vec<Vec<u32>> = (0..2)
+            .map(|_| (0..10).map(|_| r.below(64) as u32).collect())
+            .collect();
+        let _ = m.forward(&toks, false);
+    }
+    let calib = m.finish_calibration();
+    let alloc = BudgetAllocator::new(BudgetPolicy::PaperNonUniform);
+    let det = OutlierDetector::new(20.0);
+    let _ = m.apply_method(MethodKind::Quaff, &calib, &alloc, &MethodConfig::default(), &det);
+    m
+}
+
+fn req(id: u64, max_new: usize) -> Request {
+    Request { id, prompt: vec![5, 4, 3, 2], max_new, tenant: None }
+}
+
+/// The reference stream for `req(id, _)` under greedy decoding.
+fn reference_stream(m: &Model, id: u64, n: usize) -> Vec<u32> {
+    let cfg = GenerateConfig::greedy(n);
+    let mut ws = Workspace::new();
+    let mut kv = KvCache::for_model(m, 1, &mut ws);
+    let toks = infer::generate_cached(m, &req(id, n).prompt, &cfg, &mut kv, 0, &mut ws);
+    kv.release(&mut ws);
+    toks
+}
+
+/// `EngineStats::mean_batch` with zero decode steps is `0.0`, not NaN —
+/// on the raw struct, on a freshly built engine, and on a server whose
+/// only request expires while still queued (drained before any decode).
+#[test]
+fn mean_batch_is_zero_not_nan_before_any_decode() {
+    let zero = EngineStats::default();
+    assert_eq!(zero.decode_steps, 0);
+    assert!(!zero.mean_batch().is_nan(), "0/0 must not reach the bench JSON");
+    assert_eq!(zero.mean_batch(), 0.0);
+
+    let m = quantized_model(0xED6E);
+    let engine = BatchEngine::new(&m, 2, GenerateConfig::greedy(4));
+    assert_eq!(engine.stats.mean_batch(), 0.0);
+
+    let mut srv = Server::new(&m, 1, 2, GenerateConfig::greedy(4));
+    srv.submit_opts(req(1, 4), Some(0), None).expect("queue empty");
+    srv.run_until_idle(&m);
+    let done = srv.drain_finished();
+    assert_eq!(done[0].reason, FinishReason::Deadline);
+    let stats = engine_stats(&srv);
+    assert_eq!(stats.decode_steps, 0, "expired-in-queue must never decode");
+    assert_eq!(stats.mean_batch(), 0.0, "drained-before-decode server reports 0.0");
+    assert!(!stats.mean_batch().is_nan());
+}
+
+fn engine_stats(srv: &Server) -> EngineStats {
+    srv.engine().stats
+}
+
+/// The exact event sequence for one request running to its cap: one
+/// `Token` per resolved token, `Finished` in the same round as the last
+/// token, nothing else — and the final round never runs a decode step.
+#[test]
+fn single_request_event_sequence_is_exact() {
+    let m = quantized_model(0xE4E1);
+    let stream = reference_stream(&m, 1, 3);
+    let mut engine = BatchEngine::new(&m, 1, GenerateConfig::greedy(3));
+    let tag = match engine.try_admit(&m, &req(1, 3)) {
+        Admission::Admitted(t) => t,
+        other => panic!("admission failed: {other:?}"),
+    };
+    let mut events = Vec::new();
+    assert!(engine.step(&m, &mut events), "two tokens still pending");
+    assert!(engine.step(&m, &mut events), "one token still pending");
+    assert!(!engine.step(&m, &mut events), "cap reached, engine idle");
+    let got: Vec<String> = events.iter().map(event_key).collect();
+    assert_eq!(
+        got,
+        vec![
+            format!("token:{tag}:{}", stream[0]),
+            format!("token:{tag}:{}", stream[1]),
+            format!("token:{tag}:{}", stream[2]),
+            format!("finished:{tag}:Length"),
+        ],
+        "exact StepEvent sequence for a run-to-cap request"
+    );
+    // the cap-reaching round resolves the pending token and finishes
+    // before decode: only the first two rounds ran a batched step
+    assert_eq!(engine.stats.decode_steps, 2);
+    assert_eq!(engine.stats.decode_tokens, 2);
+    assert_eq!(engine.stats.mean_batch(), 1.0);
+
+    // EOS mid-stream: no Token event for the stop token, Finished::Eos
+    // right where it was sampled. Pick the first position whose token
+    // does not repeat an earlier one so the stream stops exactly there.
+    let stream = reference_stream(&m, 1, 8);
+    let j = (1..stream.len())
+        .find(|&j| !stream[..j].contains(&stream[j]))
+        .unwrap_or(0);
+    let mut cfg = GenerateConfig::greedy(8);
+    cfg.eos = Some(stream[j]);
+    let mut engine = BatchEngine::new(&m, 1, cfg);
+    let tag = match engine.try_admit(&m, &req(1, 8)) {
+        Admission::Admitted(t) => t,
+        other => panic!("admission failed: {other:?}"),
+    };
+    let mut events = Vec::new();
+    while engine.step(&m, &mut events) {}
+    let got: Vec<String> = events.iter().map(event_key).collect();
+    let mut want: Vec<String> = stream[..j].iter().map(|t| format!("token:{tag}:{t}")).collect();
+    want.push(format!("finished:{tag}:Eos"));
+    assert_eq!(got, want, "EOS must finish without emitting the stop token");
+}
+
+/// Two co-batched requests resolve oldest-first every round, and each
+/// finishes immediately after its last token — the full interleaving is
+/// deterministic down to the event order.
+#[test]
+fn batched_event_interleaving_is_exact() {
+    let m = quantized_model(0xE4E2);
+    let sa = reference_stream(&m, 1, 2);
+    let sb = reference_stream(&m, 2, 2);
+    let mut engine = BatchEngine::new(&m, 2, GenerateConfig::greedy(2));
+    let ta = match engine.try_admit(&m, &req(1, 2)) {
+        Admission::Admitted(t) => t,
+        other => panic!("admission failed: {other:?}"),
+    };
+    let tb = match engine.try_admit(&m, &req(2, 2)) {
+        Admission::Admitted(t) => t,
+        other => panic!("admission failed: {other:?}"),
+    };
+    let mut events = Vec::new();
+    while engine.step(&m, &mut events) {}
+    let got: Vec<String> = events.iter().map(event_key).collect();
+    assert_eq!(
+        got,
+        vec![
+            format!("token:{ta}:{}", sa[0]),
+            format!("token:{tb}:{}", sb[0]),
+            format!("token:{ta}:{}", sa[1]),
+            format!("finished:{ta}:Length"),
+            format!("token:{tb}:{}", sb[1]),
+            format!("finished:{tb}:Length"),
+        ],
+        "admission order fixes the per-round resolve order"
+    );
+    assert_eq!(engine.stats.decode_steps, 1, "only the first round decodes");
+    assert_eq!(engine.stats.decode_tokens, 2);
+    assert_eq!(engine.stats.mean_batch(), 2.0);
+}
+
+fn event_key(e: &StepEvent) -> String {
+    match e {
+        StepEvent::Token { tag, token, .. } => format!("token:{tag}:{token}"),
+        StepEvent::Finished { tag, completion } => {
+            format!("finished:{tag}:{:?}", completion.reason)
+        }
+        StepEvent::Preempted { tag, .. } => format!("preempted:{tag}"),
+        StepEvent::Resumed { tag, .. } => format!("resumed:{tag}"),
+    }
+}
+
+/// Sink log: every callback in order, for exact-sequence assertions on
+/// the server surface.
+#[derive(Default)]
+struct Log(Rc<RefCell<Vec<String>>>);
+
+impl TokenSink for Log {
+    fn on_token(&mut self, token: u32) {
+        self.0.borrow_mut().push(format!("tok:{token}"));
+    }
+    fn on_finish(&mut self, c: &Completion) {
+        self.0.borrow_mut().push(format!("fin:{:?}:{}", c.reason, c.tokens.len()));
+    }
+}
+
+/// A deadline equal to the admission tick expires the request *before*
+/// it is admitted (expiry runs first in the round): zero tokens, sink
+/// sees exactly one `on_finish`. One tick later, exactly one token.
+#[test]
+fn deadline_at_admission_tick_expires_before_admission() {
+    let m = quantized_model(0xDEAD);
+    let full = reference_stream(&m, 9, 8);
+
+    // the first pump is round 1: deadline 1 == the tick that would have
+    // admitted it → expired while queued, never prefilled
+    let log = Rc::new(RefCell::new(Vec::new()));
+    let mut srv = Server::new(&m, 1, 2, GenerateConfig::greedy(8));
+    srv.submit_opts(req(9, 8), Some(1), Some(Box::new(Log(Rc::clone(&log)))))
+        .expect("queue empty");
+    srv.run_until_idle(&m);
+    let done = srv.drain_finished();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].reason, FinishReason::Deadline);
+    assert!(done[0].tokens.is_empty(), "expired at the admission tick → no tokens");
+    assert_eq!(*log.borrow(), vec!["fin:Deadline:0".to_string()]);
+    assert_eq!(srv.engine().stats.prefill_tokens, 0, "never admitted");
+    assert_eq!(srv.engine().stats.mean_batch(), 0.0);
+
+    // deadline 2: admitted and resolved exactly one token in round 1,
+    // expired at the top of round 2 with that exact one-token prefix
+    let log = Rc::new(RefCell::new(Vec::new()));
+    let mut srv = Server::new(&m, 1, 2, GenerateConfig::greedy(8));
+    srv.submit_opts(req(9, 8), Some(2), Some(Box::new(Log(Rc::clone(&log)))))
+        .expect("queue empty");
+    srv.run_until_idle(&m);
+    let done = srv.drain_finished();
+    assert_eq!(done[0].reason, FinishReason::Deadline);
+    assert_eq!(done[0].tokens[..], full[..1]);
+    assert_eq!(
+        *log.borrow(),
+        vec![format!("tok:{}", full[0]), "fin:Deadline:1".to_string()],
+        "one streamed token, then the expiry completion"
+    );
+}
+
+/// Cancelling a ticket that already finished — naturally, by expiry, or
+/// by an earlier cancel — returns `false` and delivers nothing twice.
+#[test]
+fn cancel_of_finished_ticket_is_refused() {
+    let m = quantized_model(0xCA7);
+    let mut srv = Server::new(&m, 1, 2, GenerateConfig::greedy(2));
+    let log = Rc::new(RefCell::new(Vec::new()));
+    let natural = srv
+        .submit_opts(req(1, 2), None, Some(Box::new(Log(Rc::clone(&log)))))
+        .expect("queue empty");
+    srv.run_until_idle(&m);
+    assert_eq!(srv.drain_finished()[0].reason, FinishReason::Length);
+    assert!(!srv.cancel(natural), "ran to its cap — nothing left to cancel");
+    assert!(!srv.cancel(9999), "unknown tickets are refused, not a panic");
+
+    let expired = srv.submit_opts(req(2, 2), Some(0), None).expect("queue empty");
+    srv.run_until_idle(&m);
+    assert_eq!(srv.drain_finished()[0].reason, FinishReason::Deadline);
+    assert!(!srv.cancel(expired), "deadline already finished this ticket");
+
+    let cancelled = srv.submit(req(3, 2)).expect("queue empty");
+    assert!(srv.cancel(cancelled), "first cancel wins");
+    assert!(!srv.cancel(cancelled), "second cancel is refused");
+    srv.run_until_idle(&m);
+    assert_eq!(srv.drain_finished()[0].reason, FinishReason::Cancelled);
+    // the finished tickets delivered exactly once each: one sink log
+    assert_eq!(log.borrow().len(), 3, "tok, tok, fin — and never again");
+}
+
+/// `QueueFull` backpressure: the refused request is retried after a pump
+/// drains the queue, and its stream is byte-identical to submitting it
+/// first — refusal leaves no trace.
+#[test]
+fn queue_full_retry_after_drain_is_traceless() {
+    let m = quantized_model(0x0F11);
+    let fa = reference_stream(&m, 1, 4);
+    let fb = reference_stream(&m, 2, 4);
+
+    let mut srv = Server::new(&m, 1, 1, GenerateConfig::greedy(4));
+    srv.submit(req(1, 4)).expect("queue empty");
+    assert_eq!(srv.submit(req(2, 4)).unwrap_err(), SubmitError::QueueFull);
+    assert_eq!(srv.queue_len(), 1, "the refused request must not occupy the queue");
+    srv.pump(&m); // admits request 1 into the engine, draining the queue
+    assert_eq!(srv.queue_len(), 0);
+    srv.submit(req(2, 4)).expect("queue drained by the pump");
+    srv.run_until_idle(&m);
+    let mut done = srv.drain_finished();
+    done.sort_by_key(|c| c.id);
+    assert_eq!(done.len(), 2, "exactly one completion per accepted submit");
+    assert_eq!(done[0].reason, FinishReason::Length);
+    assert_eq!(done[0].tokens, fa);
+    assert_eq!(done[1].reason, FinishReason::Length);
+    assert_eq!(done[1].tokens, fb, "a refused-then-retried request decodes identically");
+}

@@ -77,6 +77,7 @@ fn mixed_requests(n: usize, seed: u64, max_new: usize) -> Vec<Request> {
             id: i as u64,
             prompt: (0..3 + 2 * i).map(|_| r.below(64) as u32).collect(),
             max_new,
+            tenant: None,
         })
         .collect()
 }
@@ -181,6 +182,7 @@ fn check_preemption_round_trip(m: &Model) {
             id: i as u64,
             prompt: (0..10).map(|_| r.below(64) as u32).collect(),
             max_new: 20,
+            tenant: None,
         })
         .collect();
     for cfg in [
@@ -213,6 +215,7 @@ fn check_eos_and_rejection(m: &Model) {
         id: 0,
         prompt: vec![9, 8, 7, 6],
         max_new: 8,
+        tenant: None,
     };
     let cfg = GenerateConfig::greedy(8);
     let mut engine = BatchEngine::new(m, 1, cfg.clone());
@@ -236,16 +239,19 @@ fn check_eos_and_rejection(m: &Model) {
             id: 1,
             prompt: vec![],
             max_new: 4,
+            tenant: None,
         },
         Request {
             id: 2,
             prompt: vec![1; 100], // longer than max_seq
             max_new: 4,
+            tenant: None,
         },
         Request {
             id: 3,
             prompt: vec![1, 2],
             max_new: 0,
+            tenant: None,
         },
     ];
     let mut engine = BatchEngine::new(m, 1, cfg);
@@ -265,6 +271,7 @@ fn check_deadline_cancel_backpressure(m: &Model) {
         id: 9,
         prompt: vec![5, 4, 3, 2],
         max_new: 30,
+        tenant: None,
     };
     let mut reference = BatchEngine::new(m, 1, cfg.clone());
     let full = reference.run_requests(m, std::slice::from_ref(&req));

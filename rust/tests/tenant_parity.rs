@@ -1,0 +1,539 @@
+//! Tenant-isolation parity suite: multi-tenant serving and interleaved
+//! scheduling must be **bitwise invisible**.
+//!
+//! * mixed ≡ solo: a decode batch mixing several tenants' LoRA/prompt
+//!   stacks (plus untagged base requests) over ONE shared quantized base
+//!   produces, for every tenant, byte-identical token streams to that
+//!   tenant decoding alone with its adapters attached to the model — for
+//!   all six quantization methods, contiguous and paged caches, and
+//!   thread widths 1 and 4;
+//! * hot-swap isolation: installing a new tenant or swapping an existing
+//!   tenant's stack mid-stream never perturbs co-batched tenants;
+//!   removing a tenant cancels its in-flight requests (keeping the exact
+//!   prefix) and rejects new ones, again without touching neighbours;
+//! * interleaved ≡ sequential: the coordinator's round-robin
+//!   [`Scheduler`] — including forced preemption-to-checkpoint at
+//!   `max_resident: 1` — produces byte-identical checkpoint archives and
+//!   identical loss logs/metrics to running the same jobs back-to-back;
+//! * train-while-serve: pumping a server between scheduler rounds changes
+//!   neither the served completions nor the training trajectory, and a
+//!   finished job's adapters serve through the registry exactly as they
+//!   do attached to the model.
+//!
+//! One `#[test]` body because it flips the process-global active thread
+//! width (`pool::set_active_threads`), like `serve_parity.rs`.
+
+use quaff::coordinator::{
+    run_job, CheckpointSpec, FinetuneJob, PreprocessServer, Scheduler, SchedulerConfig,
+    ServerConfig,
+};
+use quaff::infer::{
+    self, Admission, BatchEngine, Completion, FinishReason, GenerateConfig, KvCache, Request,
+    Server, StepEvent,
+};
+use quaff::methods::{MethodConfig, MethodKind};
+use quaff::model::{Model, ModelConfig};
+use quaff::outlier::{BudgetAllocator, BudgetPolicy, OutlierDetector};
+use quaff::peft::{LoraAdapter, PeftKind, PromptTuning, TenantAdapters};
+use quaff::tensor::{pool, Matrix, Workspace};
+use quaff::util::prng::Rng;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 64,
+        max_seq: 64,
+        ln_eps: 1e-5,
+        inject_outliers: true,
+        lora_rank: 4,
+        lora_alpha: 8.0,
+        lora_dropout: 0.0,
+        n_virtual: 4,
+    }
+}
+
+/// Calibrate + convert a fresh tiny model to `kind`. No PEFT is attached,
+/// so the quantized base is identical across every leg — exactly the
+/// shared-base serving setup.
+fn quantized_model(kind: MethodKind, seed: u64) -> Model {
+    let mut m = Model::new(tiny_cfg(), seed);
+    let mut r = Rng::new(seed ^ 0xC0FFEE);
+    m.start_calibration();
+    for _ in 0..3 {
+        let toks: Vec<Vec<u32>> = (0..2)
+            .map(|_| (0..10).map(|_| r.below(64) as u32).collect())
+            .collect();
+        let _ = m.forward(&toks, false);
+    }
+    let calib = m.finish_calibration();
+    let alloc = BudgetAllocator::new(BudgetPolicy::PaperNonUniform);
+    let det = OutlierDetector::new(20.0);
+    let _ = m.apply_method(kind, &calib, &alloc, &MethodConfig::default(), &det);
+    m
+}
+
+/// A per-block q/v LoRA stack. `B` starts at zero in a fresh adapter
+/// (delta ≡ 0), so it is perturbed to a seed-determined nonzero matrix —
+/// otherwise every mixing assertion would be vacuously true.
+fn lora_stack(cfg: &ModelConfig, seed: u64) -> TenantAdapters {
+    let mut rng = Rng::new(seed);
+    let rank = cfg.lora_rank.min(cfg.d_model / 2).max(1);
+    let d = cfg.d_model;
+    let mut t = TenantAdapters::empty(cfg.n_layers);
+    for b in &mut t.blocks {
+        let mut q = LoraAdapter::new(d, d, rank, cfg.lora_alpha, 0.0, &mut rng);
+        q.b.value = Matrix::randn(rank, d, &mut rng, 0.2);
+        let mut v = LoraAdapter::new(d, d, rank, cfg.lora_alpha, 0.0, &mut rng);
+        v.b.value = Matrix::randn(rank, d, &mut rng, 0.2);
+        b.q = Some(q);
+        b.v = Some(v);
+    }
+    t
+}
+
+/// A soft-prompt-only stack (tenant-private virtual tokens).
+fn prompt_stack(cfg: &ModelConfig, seed: u64) -> TenantAdapters {
+    let mut rng = Rng::new(seed);
+    let mut t = TenantAdapters::empty(cfg.n_layers);
+    t.prompt = Some(PromptTuning::new(cfg.n_virtual, cfg.d_model, &mut rng));
+    t
+}
+
+/// The fixed tenant roster every leg uses: 1 = LoRA, 2 = soft prompt,
+/// 3 = a different LoRA; anything else decodes the bare base. Stacks are
+/// rebuilt from their seeds on every call (construction is deterministic),
+/// so solo references, the contiguous engine and the paged engine all see
+/// identical weights.
+fn stack_for(cfg: &ModelConfig, tenant: u64) -> Option<TenantAdapters> {
+    match tenant {
+        1 => Some(lora_stack(cfg, 0xA11CE)),
+        2 => Some(prompt_stack(cfg, 0xB0B)),
+        3 => Some(lora_stack(cfg, 0xCAB)),
+        _ => None,
+    }
+}
+
+/// Solo reference stream: attach the tenant's stack to the model itself
+/// (the pre-tenancy single-tenant path), run KV-cached greedy generation,
+/// detach. This is the oracle the mixed batch must reproduce bitwise.
+fn solo_stream(m: &mut Model, tenant: u64, prompt: &[u32], cfg: &GenerateConfig) -> Vec<u32> {
+    let mcfg = m.cfg.clone();
+    let mut ws = Workspace::new();
+    let mut kv = KvCache::for_model(m, 1, &mut ws);
+    let toks = match stack_for(&mcfg, tenant) {
+        Some(stack) => {
+            m.attach_adapters(stack);
+            let t = infer::generate_cached(m, prompt, cfg, &mut kv, 0, &mut ws);
+            let _ = m.detach_adapters();
+            t
+        }
+        None => infer::generate_cached(m, prompt, cfg, &mut kv, 0, &mut ws),
+    };
+    kv.release(&mut ws);
+    toks
+}
+
+/// Install the roster into an engine's registry.
+fn install_roster(engine: &mut BatchEngine, cfg: &ModelConfig) {
+    for t in [1u64, 2, 3] {
+        let prev = engine
+            .registry_mut()
+            .install(t, stack_for(cfg, t).expect("roster tenant"));
+        assert!(prev.is_none(), "fresh install must not replace");
+    }
+    assert_eq!(engine.registry().len(), 3);
+    assert_eq!(engine.registry().ids(), vec![1, 2, 3]);
+    assert!(engine.registry().adapter_bytes() > 0);
+}
+
+/// Mixed-tenant batched decode ≡ per-tenant solo decode, bitwise — on the
+/// contiguous cache and on paged caches including one sized to force
+/// preemption of tenant-tagged requests.
+fn check_mixed_matches_solo(m: &mut Model, label: &str) {
+    let gcfg = GenerateConfig::greedy(6);
+    let mcfg = m.cfg.clone();
+    let mut r = Rng::new(0x9E2);
+    let tenants = [Some(1u64), Some(2), Some(3), None];
+    let prompts: Vec<Vec<u32>> = (0..4)
+        .map(|i| (0..3 + i).map(|_| r.below(64) as u32).collect())
+        .collect();
+
+    let solo: Vec<Vec<u32>> = prompts
+        .iter()
+        .zip(tenants)
+        .map(|(p, t)| solo_stream(m, t.unwrap_or(0), p, &gcfg))
+        .collect();
+    for s in &solo {
+        assert_eq!(s.len(), 6, "{label}: solo reference must run to its cap");
+    }
+    assert!(
+        solo[..3].iter().any(|s| *s != solo[3]),
+        "{label}: adapters never changed a stream — the mixing test would be vacuous"
+    );
+
+    let requests: Vec<Request> = prompts
+        .iter()
+        .zip(tenants)
+        .enumerate()
+        .map(|(i, (p, tenant))| Request {
+            id: 100 + i as u64,
+            prompt: p.clone(),
+            max_new: 6,
+            tenant,
+        })
+        .collect();
+
+    // contiguous: all four tenants decode as one stacked batch
+    let mut engine = BatchEngine::new(m, 4, gcfg.clone());
+    install_roster(&mut engine, &mcfg);
+    let done = engine.run_requests(m, &requests);
+    for (i, c) in done.iter().enumerate() {
+        assert_eq!(c.id, requests[i].id);
+        assert_eq!(c.reason, FinishReason::Length, "{label}: req {i}");
+        assert_eq!(
+            c.tokens, solo[i],
+            "{label}: mixed-tenant batch diverged from solo (req {i}, tenant {:?})",
+            requests[i].tenant
+        );
+    }
+    assert!(engine.stats.decode_steps > 0);
+
+    // paged, ample and preemption-forcing pools
+    for (page_rows, n_pages) in [(4usize, 24usize), (4, 10)] {
+        let mut paged = BatchEngine::with_paging(m, 4, page_rows, n_pages, gcfg.clone());
+        install_roster(&mut paged, &mcfg);
+        let got = paged.run_requests(m, &requests);
+        for (i, c) in got.iter().enumerate() {
+            assert_eq!(
+                c.tokens, solo[i],
+                "{label}: paged ({page_rows}x{n_pages}) tenant batch diverged (req {i})"
+            );
+        }
+        assert_eq!(paged.pages().0, 0, "{label}: pages leaked");
+    }
+}
+
+/// Collect finished completions out of a raw event stream.
+fn finished(events: &[StepEvent]) -> Vec<Completion> {
+    events
+        .iter()
+        .filter_map(|e| match e {
+            StepEvent::Finished { completion, .. } => Some(completion.clone()),
+            _ => None,
+        })
+        .collect()
+}
+
+/// Hot-swapping one tenant's stack (and installing a brand-new tenant)
+/// mid-stream never perturbs a co-batched tenant; the swapped tenant
+/// keeps the exact pre-swap prefix.
+fn check_hot_swap_isolation(m: &mut Model) {
+    let gcfg = GenerateConfig::greedy(12);
+    let mcfg = m.cfg.clone();
+    let pa = vec![5u32, 9, 13, 2];
+    let pb = vec![7u32, 3, 1];
+    let solo_a = solo_stream(m, 1, &pa, &gcfg);
+    let solo_b = solo_stream(m, 2, &pb, &gcfg);
+    assert_eq!(solo_a.len(), 12);
+
+    let mut engine = BatchEngine::new(m, 2, gcfg);
+    install_roster(&mut engine, &mcfg);
+    let ra = Request { id: 1, prompt: pa, max_new: 12, tenant: Some(1) };
+    let rb = Request { id: 2, prompt: pb, max_new: 12, tenant: Some(2) };
+    assert!(matches!(engine.try_admit(m, &ra), Admission::Admitted(_)));
+    assert!(matches!(engine.try_admit(m, &rb), Admission::Admitted(_)));
+    let mut events = Vec::new();
+    for _ in 0..4 {
+        engine.step(m, &mut events);
+    }
+    // mid-stream: swap tenant 2's stack and install a brand-new tenant 9
+    assert!(engine.registry_mut().install(2, lora_stack(&mcfg, 0xD00D)).is_some());
+    assert_eq!(engine.registry().swaps(), 1);
+    assert!(engine.registry_mut().install(9, lora_stack(&mcfg, 0x91)).is_none());
+    while engine.step(m, &mut events) {}
+
+    let mut done = finished(&events);
+    done.sort_by_key(|c| c.id);
+    assert_eq!(done.len(), 2);
+    assert_eq!(
+        done[0].tokens, solo_a,
+        "hot-swapping tenant 2 perturbed co-batched tenant 1"
+    );
+    // 4 steps resolved 4 tokens, and the 5th was already sampled from
+    // pre-swap logits — the swap may only change the stream after that
+    assert_eq!(
+        done[1].tokens[..5],
+        solo_b[..5],
+        "tokens resolved before the swap must come from the old stack"
+    );
+}
+
+/// Removing a tenant cancels its in-flight requests at the next
+/// scheduling touchpoint — active AND parked — keeping the exact prefix,
+/// rejects new submissions, and leaves co-batched tenants bitwise
+/// untouched (here under paging pressure, so the survivor also proves the
+/// preempt-with-tenants round trip).
+fn check_removal_cancels_and_rejects(m: &mut Model) {
+    let gcfg = GenerateConfig::greedy(12);
+    let mcfg = m.cfg.clone();
+    let pa = vec![11u32, 4, 6, 2];
+    let pb = vec![8u32, 15, 9];
+    let solo_a = solo_stream(m, 1, &pa, &gcfg);
+    let solo_b = solo_stream(m, 2, &pb, &gcfg);
+
+    // 6 pages x 4 rows = 24 pooled rows; demand peaks at (4+12) + (7+12)
+    // = 35 rows, so the youngest request (rb) must get parked
+    let mut engine = BatchEngine::with_paging(m, 2, 4, 6, gcfg);
+    install_roster(&mut engine, &mcfg);
+    let ra = Request { id: 1, prompt: pa, max_new: 12, tenant: Some(1) };
+    let rb = Request { id: 2, prompt: pb, max_new: 12, tenant: Some(2) };
+    assert!(matches!(engine.try_admit(m, &ra), Admission::Admitted(_)));
+    assert!(matches!(engine.try_admit(m, &rb), Admission::Admitted(_)));
+    let mut events = Vec::new();
+    while engine.parked_len() == 0 {
+        assert!(engine.step(m, &mut events), "ran dry before any preemption");
+    }
+    let resolved_b = events
+        .iter()
+        .filter(|e| matches!(e, StepEvent::Token { id: 2, .. }))
+        .count();
+    // drop tenant 2 while its request sits parked
+    assert!(engine.registry_mut().remove(2).is_some());
+    // ...and new submissions for it are rejected outright
+    let late = Request { id: 3, prompt: vec![1, 2], max_new: 4, tenant: Some(2) };
+    match engine.try_admit(m, &late) {
+        Admission::Rejected(c) => assert_eq!(c.reason, FinishReason::Rejected),
+        other => panic!("unknown tenant must be rejected, got {other:?}"),
+    }
+    while engine.step(m, &mut events) {}
+
+    let mut done = finished(&events);
+    done.sort_by_key(|c| c.id);
+    assert_eq!(done.len(), 2);
+    assert_eq!(done[0].reason, FinishReason::Length);
+    assert_eq!(
+        done[0].tokens, solo_a,
+        "tenant removal perturbed the surviving tenant (under paging)"
+    );
+    assert_eq!(done[1].reason, FinishReason::Cancelled);
+    assert_eq!(done[1].tokens.len(), resolved_b);
+    assert_eq!(
+        done[1].tokens[..],
+        solo_b[..done[1].tokens.len()],
+        "cancelled tenant must keep its exact prefix"
+    );
+    assert_eq!(engine.pages().0, 0, "pages leaked after removal");
+}
+
+fn sched_server_cfg() -> ServerConfig {
+    let mut cfg = ServerConfig::default();
+    cfg.preset = "opt-tiny".to_string();
+    cfg.calib_samples = 8;
+    cfg.calib_batch = 4;
+    cfg
+}
+
+fn sched_job(id: u64, method: MethodKind, ckpt: Option<CheckpointSpec>) -> FinetuneJob {
+    let mut j = FinetuneJob::new(id, "gpqa", method, PeftKind::Lora);
+    j.steps = 3;
+    j.batch_size = 2;
+    j.train_pool = 8;
+    j.eval_samples = 4;
+    j.max_len = 128;
+    j.seed = 7 + id;
+    j.checkpoint = ckpt;
+    j
+}
+
+/// Interleaved round-robin scheduling — with `max_resident: 1`, so every
+/// visit preempts the previous resident through the checkpoint path —
+/// must produce byte-identical checkpoint archives and identical loss
+/// logs/metrics to sequential execution.
+fn check_scheduler_matches_sequential() {
+    let base = std::env::temp_dir().join(format!("quaff_tenant_sched_{}", std::process::id()));
+    let dir_seq = base.join("seq");
+    let dir_int = base.join("int");
+    let dir_spill = base.join("spill");
+    for d in [&dir_seq, &dir_int, &dir_spill] {
+        std::fs::create_dir_all(d).unwrap();
+    }
+    let server = PreprocessServer::new(sched_server_cfg());
+    let methods = [MethodKind::Quaff, MethodKind::Naive, MethodKind::Quaff];
+
+    // sequential baseline, checkpointing every step to its own archive
+    let seq: Vec<_> = methods
+        .iter()
+        .enumerate()
+        .map(|(i, &mk)| {
+            let id = 1 + i as u64;
+            let spec = CheckpointSpec { path: dir_seq.join(format!("job{id}.qckpt")), every: 1 };
+            run_job(&server, &sched_job(id, mk, Some(spec))).expect("sequential job")
+        })
+        .collect();
+
+    // interleaved: one resident slot → constant spill/resume traffic
+    let mut sched = Scheduler::new(
+        &server,
+        SchedulerConfig { max_resident: 1, quantum: 1, spill_dir: None },
+    );
+    for (i, &mk) in methods.iter().enumerate() {
+        let id = 1 + i as u64;
+        let spec = CheckpointSpec { path: dir_int.join(format!("job{id}.qckpt")), every: 1 };
+        sched.submit(sched_job(id, mk, Some(spec)));
+    }
+    let inter = sched.run().expect("interleaved schedule");
+    assert_eq!(inter.len(), seq.len());
+    assert!(sched.rounds() >= 3, "3-step jobs at quantum 1 need >= 3 rounds");
+    for (s, g) in seq.iter().zip(&inter) {
+        assert_eq!(s.id, g.id, "reports must keep submission order");
+        assert_eq!(s.steps, g.steps);
+        assert_eq!(s.losses, g.losses, "job {}: interleaving changed the loss log", s.id);
+        assert_eq!(s.final_loss, g.final_loss);
+        assert_eq!(s.metrics, g.metrics, "job {}: interleaving changed eval metrics", s.id);
+        let a = std::fs::read(dir_seq.join(format!("job{}.qckpt", s.id))).unwrap();
+        let b = std::fs::read(dir_int.join(format!("job{}.qckpt", s.id))).unwrap();
+        assert_eq!(a, b, "job {}: checkpoint archives differ byte-wise", s.id);
+        // the interleaved job's adapters come back for serving
+        let stack = sched.take_adapters(s.id).expect("finished job banks its adapters");
+        assert!(!stack.is_empty(), "LoRA job must hand back a non-empty stack");
+        assert_eq!(stack.blocks.len(), 3, "opt-tiny has 3 blocks");
+    }
+
+    // spec-less jobs preempt into spill_dir and still match sequentially
+    let mut sched = Scheduler::new(
+        &server,
+        SchedulerConfig { max_resident: 1, quantum: 2, spill_dir: Some(dir_spill.clone()) },
+    );
+    for (i, &mk) in methods.iter().enumerate() {
+        sched.submit(sched_job(1 + i as u64, mk, None));
+    }
+    let spilled = sched.run().expect("spill_dir schedule");
+    for (s, g) in seq.iter().zip(&spilled) {
+        assert_eq!(s.losses, g.losses, "job {}: spill_dir schedule diverged", s.id);
+        assert_eq!(s.metrics, g.metrics);
+    }
+    assert!(
+        std::fs::read_dir(&dir_spill).unwrap().count() > 0,
+        "max_resident: 1 over spec-less jobs must have spilled to spill_dir"
+    );
+
+    // no spec + no spill_dir: preemption is a readable error, not a panic
+    let mut sched = Scheduler::new(
+        &server,
+        SchedulerConfig { max_resident: 1, quantum: 1, spill_dir: None },
+    );
+    sched.submit(sched_job(1, MethodKind::Quaff, None));
+    sched.submit(sched_job(2, MethodKind::Quaff, None));
+    let err = sched.run().unwrap_err().to_string();
+    assert!(err.contains("cannot preempt job"), "{err}");
+    assert!(err.contains("spill_dir"), "{err}");
+
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+/// Pumping a live server between scheduler rounds changes neither the
+/// served streams nor the training trajectory, and the finished job's
+/// adapters serve identically through the registry and attached.
+fn check_train_while_serve() {
+    let m = quantized_model(MethodKind::Quaff, 0x77AA);
+    let gcfg = GenerateConfig::greedy(6);
+    let mut r = Rng::new(0x515);
+    let requests: Vec<Request> = (0..4)
+        .map(|i| Request {
+            id: i as u64,
+            prompt: (0..3 + i).map(|_| r.below(64) as u32).collect(),
+            max_new: 6,
+            tenant: None,
+        })
+        .collect();
+
+    // serve-alone baseline
+    let mut srv = Server::new(&m, 2, 8, gcfg.clone());
+    for req in &requests {
+        srv.submit(req.clone()).expect("within cap");
+    }
+    srv.run_until_idle(&m);
+    let mut base = srv.drain_finished();
+    base.sort_by_key(|c| c.id);
+
+    // train-alone baseline
+    let server = PreprocessServer::new(sched_server_cfg());
+    let job = sched_job(1, MethodKind::Quaff, None);
+    let alone = run_job(&server, &job).expect("train-alone baseline");
+
+    // combined: the scheduler yields to the server pump between rounds
+    let mut srv = Server::new(&m, 2, 8, gcfg.clone());
+    for req in &requests {
+        srv.submit(req.clone()).expect("within cap");
+    }
+    let mut sched = Scheduler::new(&server, SchedulerConfig::default());
+    sched.submit(job.clone());
+    let reports = sched
+        .run_with(|_| {
+            srv.pump(&m);
+        })
+        .expect("train-while-serve schedule");
+    srv.run_until_idle(&m);
+    let mut got = srv.drain_finished();
+    got.sort_by_key(|c| c.id);
+    assert_eq!(base.len(), got.len());
+    for (a, b) in base.iter().zip(&got) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "serving while training changed a stream");
+        assert_eq!(a.reason, b.reason);
+    }
+    assert_eq!(reports[0].losses, alone.losses, "serving changed the training trajectory");
+    assert_eq!(reports[0].metrics, alone.metrics);
+
+    // hand the trained stack to a serving registry over the same frozen
+    // base the job started from: registry path ≡ attached path, bitwise
+    let stack = sched.take_adapters(job.id).expect("adapters banked");
+    let mut serve_model = server.prepare(job.method, job.peft).model;
+    let _ = serve_model.detach_adapters(); // bare shared base
+    let prompt: Vec<u32> = vec![2, 19, 45, 7];
+    serve_model.attach_adapters(stack);
+    let mut ws = Workspace::new();
+    let mut kv = KvCache::for_model(&serve_model, 1, &mut ws);
+    let attached = infer::generate_cached(&serve_model, &prompt, &gcfg, &mut kv, 0, &mut ws);
+    kv.release(&mut ws);
+    let stack = serve_model.detach_adapters();
+    let mut engine = BatchEngine::new(&serve_model, 2, gcfg);
+    engine.registry_mut().install(42, stack);
+    let req = Request { id: 7, prompt, max_new: 6, tenant: Some(42) };
+    let done = engine.run_requests(&serve_model, std::slice::from_ref(&req));
+    assert_eq!(
+        done[0].tokens, attached,
+        "trained adapters serve differently through the registry than attached"
+    );
+
+    // base (untagged) requests on that engine are untouched by the tenant
+    let mut bare = BatchEngine::new(&serve_model, 2, GenerateConfig::greedy(6));
+    let base_req = Request { id: 8, prompt: vec![3, 31, 12], max_new: 6, tenant: None };
+    let want = bare.run_requests(&serve_model, std::slice::from_ref(&base_req));
+    let got = engine.run_requests(&serve_model, std::slice::from_ref(&base_req));
+    assert_eq!(want[0].tokens, got[0].tokens, "installed tenants must not touch base requests");
+}
+
+#[test]
+fn tenants_are_bitwise_isolated() {
+    // 8-wide pool so the 4-wide legs genuinely shard even on serial CI legs
+    pool::init(pool::ThreadConfig { threads: 8 });
+    for width in [1usize, 4] {
+        pool::set_active_threads(width);
+        for kind in MethodKind::ALL {
+            let mut m = quantized_model(kind, 0x7E17 + width as u64);
+            check_mixed_matches_solo(&mut m, &format!("{kind:?} @ {width}t"));
+        }
+    }
+
+    pool::set_active_threads(1);
+    let mut m = quantized_model(MethodKind::Quaff, 0x7E99);
+    check_hot_swap_isolation(&mut m);
+    check_removal_cancels_and_rejects(&mut m);
+    check_scheduler_matches_sequential();
+    check_train_while_serve();
+    pool::set_active_threads(pool::global().threads());
+}
