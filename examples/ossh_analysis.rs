@@ -1,118 +1,126 @@
-//! OSSH analysis walkthrough: the hypothesis-validation instruments on a
-//! live fine-tuning run — per-layer hit rates of the pre-identified outlier
-//! set (Fig. 3) and the decay of static scaling factors (Fig. 11), side by
-//! side, on one model.
+//! OSSH analysis walkthrough on the validation harness (DESIGN.md §11):
+//! fine-tune with drift telemetry armed on every `QuantLinear`, optionally
+//! break spatial stability on demand with the deterministic channel
+//! relocator, and write the versioned `OSSH_report.json` artifact.
 //!
-//!     cargo run --release --example ossh_analysis -- [steps]
+//!     cargo run --release --example ossh_analysis -- [steps] \
+//!         [--preset P] [--budget B] [--patience K] [--redetect] \
+//!         [--drift STEP] [--shift N] [--out PATH]
+//!
+//! * `--drift STEP` relocates every injected outlier channel after STEP
+//!   training steps — the synthetic adversarial drift of the stability
+//!   test tier (`tests/ossh_stability.rs`).
+//! * `--redetect` arms adaptive re-detection: when a layer's hit rate
+//!   stays under `--budget` for `--patience` consecutive checks, the
+//!   outlier set is re-detected and the live Quaff method's targeted
+//!   channels are hot-swapped.
+//! * `--out PATH` writes the report artifact (CI uploads it).
 
-use quaff::coordinator::{PreprocessServer, ServerConfig};
-use quaff::data::{Sample, SynthTask};
 use quaff::methods::MethodKind;
-use quaff::outlier::{HitRateTracker, LayerKind, OutlierDetector};
-use quaff::peft::PeftKind;
-use quaff::scaling::smoothquant_factors;
-use quaff::train::Trainer;
+use quaff::report::ossh::{write_report, OsshRun, OsshRunSpec};
+use quaff::util::cli::Args;
 use quaff::util::error::Result;
-use quaff::util::{pearson, prng::Rng};
 use std::collections::BTreeMap;
 
 fn main() -> Result<()> {
-    let steps: u64 = std::env::args()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
+    let args = Args::from_env();
+    let steps: u64 = args
+        .positional
+        .first()
+        .map(|s| s.parse().expect("steps must be a number"))
         .unwrap_or(24);
+    let preset = args.get_or("preset", "phi-mini").to_string();
+    let drift_at: Option<u64> = args.get("drift").map(|s| s.parse().expect("--drift: bad step"));
+    let shift: usize = args.get_parse("shift", 17);
 
-    let mut cfg = ServerConfig::default();
-    cfg.preset = "phi-mini".to_string();
-    let server = PreprocessServer::new(cfg.clone());
-    eprintln!("[ossh] preparing Quaff bundle (calibrate → detect → quantize) …");
-    let mut bundle = server.prepare(MethodKind::Quaff, PeftKind::Lora);
+    let mut spec = OsshRunSpec::tiny(MethodKind::Quaff);
+    spec.server.preset = preset.clone();
+    spec.server.calib_samples = 32;
+    spec.server.calib_batch = 8;
+    spec.steps = steps;
+    spec.batch = 4;
+    spec.max_len = 128;
+    spec.cfg.drift_budget = args.get_parse("budget", 0.45);
+    spec.cfg.patience = args.get_parse("patience", 2);
+    spec.cfg.redetect = args.flag("redetect");
+
+    eprintln!("[ossh] preparing Quaff bundle on '{preset}' (calibrate → detect → quantize) …");
+    let mut run = OsshRun::new(spec)?;
+    eprintln!(
+        "[ossh] fine-tuning {steps} steps with telemetry checks every step \
+         (budget {}, patience {}, redetect {}) …",
+        run.spec.cfg.drift_budget, run.spec.cfg.patience, run.spec.cfg.redetect
+    );
+    while !run.is_done() {
+        if drift_at == Some(run.steps_done()) {
+            eprintln!(
+                "[ossh] injecting synthetic drift: relocating every hot channel by {shift}"
+            );
+            run.inject_relocation(shift);
+        }
+        run.step()?;
+        let done = run.steps_done();
+        if done % 8 == 0 || done == steps {
+            eprintln!(
+                "  step {done:>3}  loss {:.3}",
+                run.losses().last().copied().unwrap_or(f64::NAN)
+            );
+        }
+    }
+
+    let report = run.report();
+    println!("\nper-layer-kind OSSH hit rate (mean over layers & iterations):");
+    for (kind, mean) in &report.summary.per_kind {
+        let bar = "█".repeat((mean * 40.0) as usize);
+        println!("  {kind:<10} {mean:.3} {bar}");
+    }
     println!(
-        "pre-identified outlier channels: {} total ({:.2}% overhead)",
-        bundle.registry.total_channels(),
-        bundle.outlier_overhead * 100.0
+        "\noverall: mean hit {:.3}, min hit {:.3}, {} drift events, {} re-detections",
+        report.summary.mean_hit,
+        report.summary.min_hit,
+        report.summary.drift_events,
+        report.summary.swaps
     );
 
-    // trackers
-    let detector = OutlierDetector::new(cfg.detector_tau);
-    let mut hits: BTreeMap<String, HitRateTracker> = bundle
-        .registry
-        .layers()
-        .map(|(n, s)| (n.clone(), HitRateTracker::new(n, s.clone())))
-        .collect();
-    // static factors snapshot (from the Quaff layers' own calibration-time
-    // scaling state expanded to the full axis at step 0)
-    let mut static_factors: BTreeMap<String, Vec<f32>> = BTreeMap::new();
-    let mut dynamic_series: BTreeMap<String, Vec<f32>> = BTreeMap::new();
-
-    let task = SynthTask::by_name("oig-chip2").unwrap();
-    let mut rng = Rng::new(99);
-    let mut trainer = Trainer::new(2e-3, 128, 1);
-    eprintln!("[ossh] fine-tuning {steps} steps with per-step detection …");
-    for step in 0..steps {
-        for b in &mut bundle.model.blocks {
-            for l in b.linears() {
-                l.start_calibration();
-            }
-        }
-        let samples: Vec<Sample> = (0..4).map(|_| task.sample(&mut rng)).collect();
-        let refs: Vec<&Sample> = samples.iter().collect();
-        let stats = trainer.step(&mut bundle.model, &[refs]);
-        for b in &mut bundle.model.blocks {
-            for l in b.linears() {
-                let s = l.take_stats().unwrap();
-                let cap = (l.cin() / 8).max(4);
-                let rt = detector.select(&s, cap);
-                hits.get_mut(&l.name).unwrap().record(&rt);
-                // SmoothQuant-style factors from the live batch (unit weight
-                // reference — we only need the *shape* across channels)
-                let ones = vec![1.0f32; l.cin()];
-                let dynamic = smoothquant_factors(&s.abs_max, &ones, 0.5);
-                let st = static_factors
-                    .entry(l.name.clone())
-                    .or_insert_with(|| dynamic.clone());
-                dynamic_series
-                    .entry(l.name.clone())
-                    .or_default()
-                    .push(pearson(st, &dynamic));
-            }
-        }
-        if step % 8 == 0 {
-            eprintln!("  step {step:>3}  loss {:.3}", stats.loss);
-        }
-    }
-
-    println!("\nper-layer-kind OSSH hit rate (mean over layers & iterations):");
-    let mut agg: BTreeMap<LayerKind, Vec<f64>> = BTreeMap::new();
-    for (name, tr) in &hits {
-        agg.entry(LayerKind::from_name(name)).or_default().push(tr.summary().0);
-    }
-    for (kind, v) in &agg {
-        let mean = v.iter().sum::<f64>() / v.len() as f64;
-        let bar = "█".repeat((mean * 40.0) as usize);
-        println!("  {:<10} {mean:.3} {bar}", kind.label());
-    }
-
-    println!("\nstatic-factor similarity decay (first → last iteration):");
-    let mut decay: BTreeMap<LayerKind, (f32, f32, usize)> = BTreeMap::new();
-    for (name, series) in &dynamic_series {
-        let e = decay.entry(LayerKind::from_name(name)).or_insert((0.0, 0.0, 0));
-        e.0 += series.first().copied().unwrap_or(0.0);
-        e.1 += series.last().copied().unwrap_or(0.0);
+    println!("\nstatic-factor similarity decay (first → last check):");
+    let mut decay: BTreeMap<&str, (f32, f32, usize)> = BTreeMap::new();
+    for l in &report.layers {
+        let (Some(&first), Some(&last)) =
+            (l.similarity_series.first(), l.similarity_series.last())
+        else {
+            continue;
+        };
+        let e = decay.entry(l.kind.as_str()).or_insert((0.0, 0.0, 0));
+        e.0 += first;
+        e.1 += last;
         e.2 += 1;
     }
     for (kind, (first, last, n)) in &decay {
-        println!(
-            "  {:<10} {:.3} → {:.3}",
-            kind.label(),
-            first / *n as f32,
-            last / *n as f32
-        );
+        println!("  {kind:<10} {:.3} → {:.3}", first / *n as f32, last / *n as f32);
+    }
+
+    for l in &report.layers {
+        for e in &l.swap_events {
+            println!(
+                "re-detection: step {} {} hit {:.2} → {} channels{}",
+                e.step,
+                l.layer,
+                e.hit_rate,
+                e.new_channels.len(),
+                if e.method_swapped { " (method hot-swapped)" } else { "" }
+            );
+        }
+    }
+
+    if let Some(out) = args.get("out") {
+        let bytes = write_report(std::path::Path::new(out), &report)?;
+        println!("\nwrote {out} ({bytes} bytes)");
     }
     println!(
         "\nReading: hit rates stay high (OSSH holds: indices are stable) while\n\
-         factor *magnitudes* drift (similarity decays) — exactly the regime where\n\
-         static scaling fails and Quaff's targeted momentum scaling wins."
+         factor *magnitudes* drift (similarity decays) — and when stability is\n\
+         broken on purpose (--drift), the harness detects the budget breach and\n\
+         re-targets the affected layers (--redetect)."
     );
     Ok(())
 }

@@ -1,0 +1,78 @@
+//! OSSH telemetry-overhead benchmark (ISSUE 9): one full training step of
+//! an [`quaff::report::ossh::OsshRun`] with the drift-telemetry harness
+//! off vs on (calibration taps armed every step, per-layer detection +
+//! hit-rate/Jaccard/similarity accounting after every step — the harness's
+//! worst-case cadence), plus the report rendering itself.
+//!
+//! Emits `BENCH_ossh.json` — registered in the `bench_gate` defaults so CI
+//! seeds a baseline from the first green run and gates regressions
+//! afterwards — and enforces the acceptance bar in-process: telemetry may
+//! cost at most 5 % over the telemetry-off step, or the bench exits
+//! non-zero and the CI bench job fails even while the ±25 % gate is in
+//! seeding mode.
+//!
+//! `QUAFF_OSSH_SECS` overrides the per-leg time budget (default 2.0; CI
+//! uses a reduced budget to keep the job fast).
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, write_ossh_json, BenchMeta};
+use quaff::methods::MethodKind;
+use quaff::report::ossh::{OsshRun, OsshRunSpec};
+
+fn main() {
+    let secs: f64 = std::env::var("QUAFF_OSSH_SECS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2.0);
+    let meta = BenchMeta::current();
+    println!(
+        "OSSH telemetry overhead — opt-tiny / Quaff, {} threads, {secs:.1}s per leg\n",
+        quaff::tensor::pool::global().threads()
+    );
+
+    // `step()` keeps working past the spec's nominal step count, so each
+    // leg is one long steady-state run (no re-preparation mid-bench).
+    let mut off_spec = OsshRunSpec::tiny(MethodKind::Quaff);
+    off_spec.telemetry = false;
+    let mut off_run = OsshRun::new(off_spec).expect("prepare telemetry-off run");
+    let off = bench("train_step telemetry_off", 3, secs, || {
+        off_run.step().expect("telemetry-off step");
+    });
+
+    let mut on_run =
+        OsshRun::new(OsshRunSpec::tiny(MethodKind::Quaff)).expect("prepare telemetry-on run");
+    let on = bench("train_step telemetry_on", 3, secs, || {
+        on_run.step().expect("telemetry-on step");
+    });
+
+    let render = bench("report render", 3, 0.3, || {
+        std::hint::black_box(on_run.report().to_bytes());
+    });
+
+    let overhead = on.mean_secs / off.mean_secs - 1.0;
+    println!(
+        "\ntelemetry overhead: {:.2}% ({} checks recorded)",
+        overhead * 100.0,
+        on_run.harness().checks()
+    );
+
+    let records = [off, on, render];
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_ossh.json");
+    match write_ossh_json(&out, "opt-tiny", &meta, overhead, &records) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write BENCH_ossh.json: {e}"),
+    }
+
+    // Acceptance bar (ISSUE 9): the observing tap plus the per-step
+    // accounting must stay within 5 % of the untapped step.
+    if overhead > 0.05 {
+        eprintln!(
+            "FAIL: telemetry overhead {:.2}% exceeds the 5% budget",
+            overhead * 100.0
+        );
+        std::process::exit(1);
+    }
+    println!("telemetry overhead within the 5% budget ✓");
+}

@@ -467,3 +467,35 @@ pub fn write_tenants_json(
     );
     std::fs::write(path, json)
 }
+
+/// Emit `BENCH_ossh.json`: ns per training step with the OSSH telemetry
+/// harness off vs on (each a gate-comparable `ns_per_op` entry) plus the
+/// measured overhead ratio — the record behind the "telemetry costs ≤5 %"
+/// acceptance bar, which `bench_ossh` itself enforces by exit code.
+#[allow(dead_code)]
+pub fn write_ossh_json(
+    path: &std::path::Path,
+    preset: &str,
+    meta: &BenchMeta,
+    overhead: f64,
+    records: &[BenchResult],
+) -> std::io::Result<()> {
+    let kernels: Vec<String> = records
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"name\": \"{}\", \"ns_per_op\": {:.1}, \"iters\": {}}}",
+                r.name,
+                r.mean_secs * 1e9,
+                r.iters
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"ossh\",\n  \"preset\": \"{preset}\",\n  \"meta\": {},\n  \
+         \"telemetry_overhead\": {overhead:.4},\n  \"kernels\": [\n{}\n  ]\n}}\n",
+        meta.to_json(),
+        kernels.join(",\n")
+    );
+    std::fs::write(path, json)
+}

@@ -147,8 +147,10 @@ impl JobReport {
 /// Verify that a checkpoint's recorded job spec matches the job asking to
 /// resume from it. `steps` (extendable), `id`, and the checkpoint policy
 /// itself may differ; everything that determines the training trajectory
-/// must match, or the resumed run would silently diverge.
-fn validate_resume(saved: &FinetuneJob, job: &FinetuneJob) -> Result<()> {
+/// must match, or the resumed run would silently diverge. Public so other
+/// run drivers (e.g. the OSSH validation harness, `report::ossh`) enforce
+/// the same compatibility contract when they resume their own checkpoints.
+pub fn validate_resume(saved: &FinetuneJob, job: &FinetuneJob) -> Result<()> {
     let mut diffs: Vec<&str> = Vec::new();
     if saved.dataset != job.dataset {
         diffs.push("dataset");

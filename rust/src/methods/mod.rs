@@ -177,6 +177,58 @@ impl MethodSnapshot {
             MethodSnapshot::SmoothDynamic { w_full, .. } => w_full.cols(),
         }
     }
+
+    /// Re-target a Quaff snapshot at a new outlier channel set — the
+    /// adaptive re-detection hot-swap (report::ossh). Channels retained
+    /// from the old set keep their exact `W_O` row and momentum factor, so
+    /// their arithmetic is bit-identical before and after the swap; newly
+    /// admitted channels take their row from the dequantized int8 store
+    /// (`w_int · Δ`, the best representation available without the f32
+    /// master, which a served bundle no longer holds) with a fresh factor
+    /// of 1.0. Returns `None` for non-Quaff snapshots — no other method
+    /// carries a targeted channel set to swap.
+    pub fn retarget_channels(&self, new_set: &OutlierSet) -> Option<MethodSnapshot> {
+        let MethodSnapshot::Quaff {
+            w_int,
+            deltas,
+            w_o,
+            w_row_max,
+            channels,
+            s_o,
+            gamma,
+            momentum,
+        } = self
+        else {
+            return None;
+        };
+        let cout = w_int.cols();
+        let mut new_w_o = Matrix::zeros(new_set.len(), cout);
+        let mut new_s_o = Vec::with_capacity(new_set.len());
+        for (i, &ch) in new_set.channels.iter().enumerate() {
+            assert!(ch < w_int.rows(), "retarget channel {ch} out of range");
+            if let Some(old_i) = channels.iter().position(|&c| c == ch) {
+                for j in 0..cout {
+                    new_w_o.set(i, j, w_o.get(old_i, j));
+                }
+                new_s_o.push(s_o[old_i]);
+            } else {
+                for j in 0..cout {
+                    new_w_o.set(i, j, w_int.get(ch, j) as f32 * deltas[j]);
+                }
+                new_s_o.push(1.0);
+            }
+        }
+        Some(MethodSnapshot::Quaff {
+            w_int: w_int.clone(),
+            deltas: deltas.clone(),
+            w_o: new_w_o,
+            w_row_max: w_row_max.clone(),
+            channels: new_set.channels.clone(),
+            s_o: new_s_o,
+            gamma: *gamma,
+            momentum: *momentum,
+        })
+    }
 }
 
 /// Rebuild a live method from a snapshot. The inverse of
@@ -574,6 +626,58 @@ mod tests {
                 ws.recycle(db);
             }
         }
+    }
+
+    #[test]
+    fn retarget_keeps_retained_rows_and_dequantizes_new_ones() {
+        let mut rng = Rng::new(0x0557);
+        let cin = 48;
+        let cout = 32;
+        let hot = vec![7, 30];
+        let (calib, oset) = make_calib(&mut rng, cin, &hot, 90.0, 6);
+        let w = Matrix::randn(cin, cout, &mut rng, 0.3);
+        let cfg = MethodConfig::default();
+        let mut m = build_method(MethodKind::Quaff, w, &calib, &oset, &cfg);
+        // advance momentum so retained factors are non-trivial
+        let mut ws = Workspace::new();
+        for _ in 0..2 {
+            let x = Matrix::randn(4, cin, &mut rng, 1.0);
+            let y = m.forward(&x, &mut ws);
+            ws.recycle(y);
+        }
+        let snap = m.snapshot();
+        let MethodSnapshot::Quaff { ref w_o, ref s_o, ref w_int, ref deltas, .. } = snap else {
+            panic!("quaff snapshot expected");
+        };
+        let (old_w_o, old_s_o) = (w_o.clone(), s_o.clone());
+        let (w_int, deltas) = (w_int.clone(), deltas.clone());
+        // keep channel 30 (old index 1), drop 7, admit 11
+        let new_set = OutlierSet::new(vec![11, 30]);
+        let re = snap.retarget_channels(&new_set).expect("quaff retargets");
+        let MethodSnapshot::Quaff { w_o, channels, s_o, .. } = &re else {
+            panic!("retarget stays quaff");
+        };
+        assert_eq!(channels, &vec![11, 30]);
+        assert_eq!(s_o.len(), 2);
+        // retained channel 30 → exact old row + factor (now at index 1)
+        for j in 0..cout {
+            assert_eq!(w_o.get(1, j), old_w_o.get(1, j));
+        }
+        assert_eq!(s_o[1], old_s_o[1]);
+        // new channel 11 → dequantized int8 row, fresh factor
+        for j in 0..cout {
+            assert_eq!(w_o.get(0, j), w_int.get(11, j) as f32 * deltas[j]);
+        }
+        assert_eq!(s_o[0], 1.0);
+        // the retargeted snapshot rebuilds into a live method
+        let rebuilt = method_from_snapshot(re);
+        assert_eq!((rebuilt.cin(), rebuilt.cout()), (cin, cout));
+        // non-Quaff snapshots refuse
+        let naive = MethodSnapshot::Naive {
+            w_int: w_int.clone(),
+            deltas: deltas.clone(),
+        };
+        assert!(naive.retarget_channels(&new_set).is_none());
     }
 
     #[test]

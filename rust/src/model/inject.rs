@@ -166,6 +166,32 @@ impl DiagGain {
     pub fn max_gain(&self) -> f32 {
         self.hot.iter().map(|&c| self.gains[c]).fold(1.0, f32::max)
     }
+
+    /// Deterministically relocate every hot channel by `shift` positions
+    /// (mod dim) — the synthetic adversarial drift used by the OSSH
+    /// stability tier to break spatial stability on demand. Unlike
+    /// [`DiagGain::tick`], this consumes no randomness, so a run with a
+    /// relocation at step `s` stays bit-reproducible. When two old
+    /// channels collide on one destination the larger gain wins.
+    pub fn relocate(&mut self, shift: usize) {
+        if self.hot.is_empty() {
+            return;
+        }
+        let dim = self.gains.len();
+        let moved: Vec<(usize, f32)> = self.hot.iter().map(|&c| (c, self.gains[c])).collect();
+        for &(c, _) in &moved {
+            self.gains[c] = 1.0;
+        }
+        let mut new_hot = Vec::with_capacity(moved.len());
+        for (c, g) in moved {
+            let dst = (c + shift) % dim;
+            self.gains[dst] = self.gains[dst].max(g);
+            new_hot.push(dst);
+        }
+        new_hot.sort_unstable();
+        new_hot.dedup();
+        self.hot = new_hot;
+    }
 }
 
 #[cfg(test)]
@@ -227,6 +253,37 @@ mod tests {
                 assert_eq!(gain, 1.0, "cold channel {c} has gain {gain}");
             }
         }
+    }
+
+    #[test]
+    fn relocate_shifts_every_hot_channel_without_randomness() {
+        let mut r = Rng::new(6);
+        let mut g = DiagGain::new(32, InjectConfig::stable(3), &mut r);
+        let hot0 = g.hot.clone();
+        let gains0: Vec<f32> = hot0.iter().map(|&c| g.gains[c]).collect();
+        let state_before = r.state();
+        g.relocate(5);
+        assert_eq!(r.state(), state_before, "relocate must not consume randomness");
+        let expect: Vec<usize> = {
+            let mut v: Vec<usize> = hot0.iter().map(|&c| (c + 5) % 32).collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(g.hot, expect);
+        for (&c0, &g0) in hot0.iter().zip(&gains0) {
+            assert_eq!(g.gains[(c0 + 5) % 32], g0);
+            if !g.hot.contains(&c0) {
+                assert_eq!(g.gains[c0], 1.0, "old channel {c0} must cool down");
+            }
+        }
+        // relocating twice by dim is a no-op on indices
+        let hot1 = g.hot.clone();
+        g.relocate(32);
+        assert_eq!(g.hot, hot1);
+        // identity injections stay inert
+        let mut id = DiagGain::identity(8);
+        id.relocate(3);
+        assert!(id.hot.is_empty());
     }
 
     #[test]

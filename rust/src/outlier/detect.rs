@@ -221,6 +221,129 @@ mod tests {
     }
 
     #[test]
+    fn tie_breaking_is_deterministic_under_equal_magnitudes() {
+        // Property: when every channel has identical votes and identical
+        // abs_max, selection falls through to the index tie-break and must
+        // pick the lowest indices — stably, on every call.
+        crate::util::prop::check(
+            "detect tie-break deterministic",
+            0xDE7EC7,
+            64,
+            |rng| {
+                let cin = 3 + rng.below(29);
+                let budget = 1 + rng.below(cin);
+                let amp = rng.range(10.0, 100.0);
+                (cin, budget, amp)
+            },
+            |&(cin, budget, amp)| {
+                // Plant an equal-magnitude hot group strictly smaller than
+                // half the axis so the per-sample median reference stays at
+                // the low-magnitude majority and every hot channel votes.
+                let hot_n = (cin / 3).max(1);
+                let mut data = vec![0.001_f32; cin];
+                for item in data.iter_mut().take(hot_n) {
+                    *item = amp;
+                }
+                let x = Matrix::from_vec(1, cin, data);
+                let mut stats = ChannelStats::new(cin);
+                stats.observe(&x, 2.0);
+                let det = OutlierDetector::new(2.0);
+                let a = det.select(&stats, budget);
+                let b = det.select(&stats, budget);
+                if a.channels != b.channels {
+                    return Err(format!("unstable selection: {:?} vs {:?}", a.channels, b.channels));
+                }
+                let expect: Vec<usize> = (0..hot_n.min(budget)).collect();
+                if a.channels != expect {
+                    return Err(format!(
+                        "tie-break not lowest-index-first: got {:?}, want {:?} (cin={cin}, budget={budget})",
+                        a.channels, expect
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn degenerate_activations_never_panic() {
+        // Property: all-zero, single-channel (cin=1) and single-token
+        // activations are all well-defined — empty or tiny sets, no panics.
+        crate::util::prop::check(
+            "detect degenerate shapes",
+            0x0551,
+            64,
+            |rng| {
+                let tokens = 1 + rng.below(8);
+                let tau = rng.range(2.0, 100.0);
+                (tokens, tau)
+            },
+            |&(tokens, tau)| {
+                let det = OutlierDetector::new(tau);
+                // All-zero activations: median reference floors at 1e-12,
+                // nothing dominates, empty set.
+                let zero = Matrix::zeros(tokens, 16);
+                let mut stats = ChannelStats::new(16);
+                stats.observe(&zero, tau);
+                if !det.select(&stats, 8).is_empty() {
+                    return Err("all-zero activations produced outliers".into());
+                }
+                if !det.detect_realtime(&zero, 8).is_empty() {
+                    return Err("all-zero realtime detection produced outliers".into());
+                }
+                // cin=1: the sole channel IS the median, can never dominate
+                // itself by tau > 1 — and nothing indexes out of range.
+                let one = Matrix::from_vec(tokens, 1, vec![3.5; tokens]);
+                let mut s1 = ChannelStats::new(1);
+                s1.observe(&one, tau);
+                let sel = det.select(&s1, 4);
+                if sel.len() > 1 {
+                    return Err(format!("cin=1 selected {} channels", sel.len()));
+                }
+                let rt = det.detect_realtime(&one, 4);
+                if rt.len() > 1 {
+                    return Err(format!("cin=1 realtime found {} channels", rt.len()));
+                }
+                // Single token, mixed magnitudes: still defined.
+                let single = Matrix::from_vec(1, 4, vec![0.01, 500.0, 0.02, 0.01]);
+                let rt2 = det.detect_realtime(&single, 4);
+                if rt2.len() > 1 {
+                    return Err("single-token detection over-selected".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn selection_is_repeatable_across_observation_replay() {
+        // Property: replaying the same observations into a fresh
+        // ChannelStats yields the identical selection (no hidden state).
+        crate::util::prop::check(
+            "detect replay stable",
+            0x5EED5,
+            32,
+            |rng| rng.next_u64(),
+            |&seed| {
+                let run = || {
+                    let mut rng = Rng::new(seed);
+                    let mut stats = ChannelStats::new(24);
+                    for _ in 0..6 {
+                        let x = planted(&mut rng, 8, 24, &[2, 17], 200.0);
+                        stats.observe(&x, 20.0);
+                    }
+                    OutlierDetector::new(20.0).select(&stats, 6).channels
+                };
+                let (a, b) = (run(), run());
+                if a != b {
+                    return Err(format!("replay diverged: {a:?} vs {b:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
     fn mean_max_tracks_average() {
         let mut stats = ChannelStats::new(2);
         let a = Matrix::from_vec(1, 2, vec![1.0, -2.0]);

@@ -27,6 +27,28 @@ impl HitRateTracker {
         }
     }
 
+    /// Rebuild a tracker from persisted state (the OSSH telemetry resume
+    /// path): the reference set plus the already-recorded series.
+    pub fn from_parts(layer: &str, predefined: OutlierSet, per_iter: Vec<f64>) -> Self {
+        HitRateTracker {
+            layer: layer.to_string(),
+            predefined,
+            per_iter,
+        }
+    }
+
+    /// The current reference set hits are scored against.
+    pub fn reference(&self) -> &OutlierSet {
+        &self.predefined
+    }
+
+    /// Replace the reference set — the adaptive re-detection hot-swap:
+    /// subsequent records score against the new set while the already
+    /// recorded series is kept intact.
+    pub fn set_reference(&mut self, set: OutlierSet) {
+        self.predefined = set;
+    }
+
     /// Record one fine-tuning iteration's dynamically-detected set.
     /// Iterations with no real-time outliers count as a perfect hit (there
     /// was nothing to miss) — matching the paper's per-layer averages that
@@ -82,15 +104,47 @@ impl SimilarityTracker {
         }
     }
 
+    /// Rebuild a tracker from persisted state (the OSSH telemetry resume
+    /// path).
+    pub fn from_parts(
+        layer: &str,
+        channels: Vec<usize>,
+        static_factors: Vec<f32>,
+        per_iter: Vec<f32>,
+    ) -> Self {
+        assert_eq!(channels.len(), static_factors.len());
+        SimilarityTracker {
+            layer: layer.to_string(),
+            channels,
+            static_factors,
+            per_iter,
+        }
+    }
+
     pub fn channels(&self) -> &[usize] {
         &self.channels
     }
 
+    /// The frozen static factors over [`SimilarityTracker::channels`].
+    pub fn static_factors(&self) -> &[f32] {
+        &self.static_factors
+    }
+
     /// Record one iteration's dynamic factors over the full channel axis;
-    /// the tracker gathers its subset.
+    /// the tracker gathers its subset. Tracked channels beyond the supplied
+    /// axis (a reference set wider than the live activation, e.g. after a
+    /// config change) are skipped pairwise rather than panicking, keeping
+    /// the correlation defined over the channels both sides actually have.
     pub fn record_full(&mut self, dynamic_all: &[f32]) {
-        let dyn_sub: Vec<f32> = self.channels.iter().map(|&c| dynamic_all[c]).collect();
-        self.per_iter.push(pearson(&self.static_factors, &dyn_sub));
+        let mut stat_sub = Vec::with_capacity(self.channels.len());
+        let mut dyn_sub = Vec::with_capacity(self.channels.len());
+        for (i, &c) in self.channels.iter().enumerate() {
+            if c < dynamic_all.len() {
+                stat_sub.push(self.static_factors[i]);
+                dyn_sub.push(dynamic_all[c]);
+            }
+        }
+        self.per_iter.push(pearson(&stat_sub, &dyn_sub));
     }
 
     /// The similarity time series (Fig. 11's per-layer curve).
@@ -188,6 +242,61 @@ mod tests {
         let mut t = SimilarityTracker::new("l", vec![0, 1, 2], vec![2.0, 2.0, 2.0]);
         t.record_full(&[5.0, 1.0, 3.0]);
         assert_eq!(t.series(), &[0.0]);
+    }
+
+    #[test]
+    fn reference_set_wider_than_axis_is_defined() {
+        // Reference-set-larger-than-cin edge: a tracker built over 6
+        // channels fed a 3-wide axis must not panic or emit NaN — the
+        // out-of-range channels are skipped pairwise.
+        let channels = vec![0, 1, 2, 3, 4, 5];
+        let stat = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut t = SimilarityTracker::new("l", channels, stat);
+        t.record_full(&[1.0, 2.0, 3.0]);
+        let s = t.series();
+        assert_eq!(s.len(), 1);
+        assert!(s[0].is_finite());
+        assert!((s[0] - 1.0).abs() < 1e-6); // in-range pairs correlate perfectly
+        // Entirely out-of-range axis → degenerate zero, still defined.
+        let mut t2 = SimilarityTracker::new("l", vec![10, 11], vec![1.0, 2.0]);
+        t2.record_full(&[0.5]);
+        assert_eq!(t2.series(), &[0.0]);
+    }
+
+    #[test]
+    fn hit_rate_reference_wider_than_axis_is_defined() {
+        // A predefined set referencing channels beyond cin still yields
+        // rates in [0, 1]: intersection is over indices, no indexing occurs.
+        let pre = OutlierSet::new((0..64).collect());
+        let mut t = HitRateTracker::new("l", pre);
+        t.record(&OutlierSet::new(vec![0, 1, 2]));
+        assert_eq!(t.summary().0, 1.0);
+        t.record(&OutlierSet::new(vec![100, 200]));
+        let (mean, std) = t.summary();
+        assert!((mean - 0.5).abs() < 1e-12);
+        assert!(std.is_finite());
+    }
+
+    #[test]
+    fn set_reference_swaps_scoring_and_keeps_series() {
+        let mut t = HitRateTracker::new("l", OutlierSet::new(vec![0, 1]));
+        t.record(&OutlierSet::new(vec![0, 1])); // 1.0 vs old reference
+        assert_eq!(t.reference().channels, vec![0, 1]);
+        t.set_reference(OutlierSet::new(vec![8, 9]));
+        t.record(&OutlierSet::new(vec![0, 1])); // 0.0 vs new reference
+        assert_eq!(t.series(), &[1.0, 0.0]);
+        assert_eq!(t.reference().channels, vec![8, 9]);
+    }
+
+    #[test]
+    fn from_parts_round_trips_state() {
+        let t = HitRateTracker::from_parts("l", OutlierSet::new(vec![3]), vec![1.0, 0.5]);
+        assert_eq!(t.iterations(), 2);
+        assert_eq!(t.series(), &[1.0, 0.5]);
+        let s = SimilarityTracker::from_parts("l", vec![0, 2], vec![1.0, 3.0], vec![0.9]);
+        assert_eq!(s.channels(), &[0, 2]);
+        assert_eq!(s.series(), &[0.9]);
+        assert_eq!(s.last(), Some(0.9));
     }
 
     #[test]

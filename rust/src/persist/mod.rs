@@ -879,6 +879,34 @@ pub fn load_bundle(path: &Path) -> Result<DistributionBundle> {
     })
 }
 
+// ----------------------------------------------------------- artifacts
+
+/// Persist a small auxiliary artifact (e.g. the OSSH telemetry state that
+/// rides alongside a training checkpoint) through the same versioned,
+/// CRC'd, crash-safe machinery as checkpoints and bundles. `kind` is the
+/// artifact's identity string, written into the meta section and enforced
+/// on load, so an artifact can never be mistaken for a checkpoint (or vice
+/// versa). `build` appends the caller's sections to the archive. Returns
+/// the archive size in bytes.
+pub fn save_artifact(path: &Path, kind: &str, build: impl FnOnce(&mut Writer)) -> Result<usize> {
+    let mut w = Writer::new(FORMAT_VERSION);
+    let mut meta = SectionWriter::new();
+    meta.put_str(kind);
+    w.section(sec::META, meta);
+    build(&mut w);
+    let bytes = w.finish();
+    write_atomic_rotating(path, &bytes)?;
+    Ok(bytes.len())
+}
+
+/// Load an artifact saved by [`save_artifact`], with the same `.prev`
+/// corrupt-tail recovery as checkpoints and strict version + kind checks.
+pub fn load_artifact(path: &Path, kind: &str) -> Result<Archive> {
+    let (ar, _, _) = read_archive_with_recovery(path)?;
+    check_header(&ar, kind)?;
+    Ok(ar)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1043,5 +1071,40 @@ mod tests {
         let (job2, steps) = peek_job(&path).unwrap();
         assert_eq!(job2.dataset, job.dataset);
         assert_eq!(steps, 0);
+    }
+
+    #[test]
+    fn artifact_roundtrip_enforces_kind_and_rotates() {
+        let path = tmp("telemetry.qart");
+        let n = save_artifact(&path, "test-artifact", |w| {
+            let mut s = SectionWriter::new();
+            s.put_u64(42);
+            s.put_f64s(&[1.0, f64::NAN, f64::INFINITY]);
+            w.section("payload", s);
+        })
+        .unwrap();
+        assert!(n > 0);
+        let ar = load_artifact(&path, "test-artifact").unwrap();
+        let mut s = ar.section("payload").unwrap();
+        assert_eq!(s.get_u64().unwrap(), 42);
+        let xs = s.get_f64s().unwrap();
+        assert_eq!(xs[0], 1.0);
+        assert!(xs[1].is_nan());
+        assert_eq!(xs[2], f64::INFINITY);
+        // wrong kind is refused with a readable error
+        let e = load_artifact(&path, "other-kind").unwrap_err().to_string();
+        assert!(e.contains("expected a 'other-kind'"), "{e}");
+        // a second save rotates the first generation to .prev, and a
+        // corrupted current generation falls back to it
+        save_artifact(&path, "test-artifact", |w| {
+            let mut s = SectionWriter::new();
+            s.put_u64(43);
+            w.section("payload", s);
+        })
+        .unwrap();
+        assert!(previous_generation(&path).exists());
+        fs::write(&path, b"garbage").unwrap();
+        let ar = load_artifact(&path, "test-artifact").unwrap();
+        assert_eq!(ar.section("payload").unwrap().get_u64().unwrap(), 42);
     }
 }

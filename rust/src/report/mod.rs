@@ -5,7 +5,7 @@
 //!
 //! `quaff report <id> [--steps N] [--budget-secs S] [--preset P]`
 
-mod ossh;
+pub mod ossh;
 mod perf_grid;
 
 use crate::coordinator::ServerConfig;

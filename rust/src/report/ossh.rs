@@ -1,22 +1,40 @@
 //! OSSH-validation instruments: hit-rate curves (Figs. 3, 8, 9, 10;
-//! Table 6), activation-stability traces (Fig. 2) and the Pearson
-//! similarity decay of static scaling (Fig. 11).
+//! Table 6), activation-stability traces (Fig. 2), the Pearson similarity
+//! decay of static scaling (Fig. 11) — and the **OSSH validation harness**
+//! (DESIGN.md §11): long-run drift telemetry over every `QuantLinear`
+//! during training, adaptive re-detection when a layer's hit rate stays
+//! under a configurable budget, and the versioned `OSSH_report.json`
+//! artifact.
+//!
+//! The harness rides the existing calibration tap ([`crate::model::linear::
+//! QuantLinear::start_calibration`]): the tap only *observes* activations —
+//! no RNG draws, no workspace perturbation — which is what makes
+//! telemetry-on runs bit-identical to telemetry-off runs
+//! (`tests/ossh_stability.rs` pins it for all six methods).
 
 use super::{f3, ReportOpts, Table};
-use crate::coordinator::{PreprocessServer, ServerConfig};
+use crate::coordinator::{
+    validate_resume, CheckpointSpec, FinetuneJob, PreprocessServer, ServerConfig,
+};
 use crate::data::{Sample, SynthTask};
-use crate::methods::MethodKind;
+use crate::methods::{method_from_snapshot, MethodKind};
 use crate::model::{Model, ModelConfig};
 use crate::outlier::{
-    BudgetAllocator, BudgetPolicy, HitRateTracker, LayerKind, OutlierDetector, OutlierSet,
-    SimilarityTracker,
+    BudgetAllocator, BudgetPolicy, ChannelStats, HitRateTracker, LayerKind, OutlierDetector,
+    OutlierRegistry, OutlierSet, SimilarityTracker,
 };
 use crate::peft::PeftKind;
+use crate::persist;
 use crate::quant;
 use crate::scaling::{self, MomentumScaler};
 use crate::train::Trainer;
+use crate::util::codec::SectionWriter;
+use crate::util::error::Result;
+use crate::util::json::Json;
 use crate::util::prng::Rng;
+use crate::{anyhow, bail};
 use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 
 fn batchify(task: &SynthTask, n: usize, rng: &mut Rng) -> Vec<Sample> {
     (0..n).map(|_| task.sample(rng)).collect()
@@ -381,4 +399,1004 @@ pub fn fig11(opts: &ReportOpts) -> String {
     let alloc = BudgetAllocator::new(BudgetPolicy::PaperNonUniform);
     let _ = alloc; // (budget allocator unused here; kept for parity with fig3)
     t.to_markdown()
+}
+
+// ===================================================================
+// OSSH validation harness (DESIGN.md §11)
+// ===================================================================
+
+/// Version stamp of the `OSSH_report.json` artifact (strict equality on
+/// read, like the binary archive format).
+pub const OSSH_REPORT_VERSION: u32 = 1;
+
+/// Artifact-kind string of the persisted harness state
+/// ([`OsshHarness::save_state`]), enforced by `persist::load_artifact`.
+const OSSH_STATE_KIND: &str = "ossh-telemetry";
+
+/// Drift-telemetry configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OsshConfig {
+    /// Run a telemetry check every N training steps (1 = every step).
+    pub check_every: u64,
+    /// Drift budget: a check with hit rate **strictly below** this value
+    /// counts against the layer's patience.
+    pub drift_budget: f64,
+    /// Number of *consecutive* below-budget checks that triggers adaptive
+    /// re-detection (when [`OsshConfig::redetect`] is on).
+    pub patience: u32,
+    /// Hot-swap the reference set (and, for Quaff layers, the live method's
+    /// targeted channels) when patience runs out. Off by default: plain
+    /// telemetry must never alter the training trajectory.
+    pub redetect: bool,
+    /// Real-time detection cap: `max(cin / cap_div, cap_min)` channels.
+    pub realtime_cap_div: usize,
+    pub realtime_cap_min: usize,
+}
+
+impl Default for OsshConfig {
+    fn default() -> Self {
+        OsshConfig {
+            check_every: 1,
+            drift_budget: 0.5,
+            patience: 2,
+            redetect: false,
+            realtime_cap_div: 8,
+            realtime_cap_min: 4,
+        }
+    }
+}
+
+/// One below-budget telemetry check.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DriftEvent {
+    pub step: u64,
+    pub layer: String,
+    pub hit_rate: f64,
+    /// How many consecutive below-budget checks this one makes.
+    pub consecutive: u32,
+}
+
+/// One adaptive re-detection: the reference set was hot-swapped.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SwapEvent {
+    pub step: u64,
+    pub layer: String,
+    /// Hit rate at the check that exhausted the patience.
+    pub hit_rate: f64,
+    pub old_channels: Vec<usize>,
+    pub new_channels: Vec<usize>,
+    /// Whether the live method's targeted channel set was re-pointed too
+    /// (Quaff layers; other methods carry no targeted set, so only the
+    /// telemetry reference moves).
+    pub method_swapped: bool,
+}
+
+/// Per-layer telemetry state.
+struct LayerTelemetry {
+    /// Hit rate vs the *current* reference (starts at the step-0 set;
+    /// adaptive re-detection moves it).
+    tracker: HitRateTracker,
+    /// The immutable step-0 reference — Jaccard curves are always measured
+    /// against it so stability stays comparable across swaps.
+    reference0: OutlierSet,
+    /// Jaccard(realtime, reference0) per check; empty-vs-empty counts 1.0.
+    jaccard: Vec<f64>,
+    /// Pearson similarity of SmoothQuant-style factors vs the first
+    /// check's statics, over the step-0 channels (the Fig. 11 measurement,
+    /// running live).
+    similarity: SimilarityTracker,
+    statics_ready: bool,
+    /// Consecutive below-budget checks.
+    below: u32,
+    drift_events: Vec<DriftEvent>,
+    swap_events: Vec<SwapEvent>,
+}
+
+/// The OSSH validation harness: instruments every `QuantLinear` of a
+/// training run through the calibration tap, accumulates stability curves,
+/// and (optionally) re-detects outliers when drift exhausts the budget.
+///
+/// Drive it manually with [`OsshHarness::begin_step`] /
+/// [`OsshHarness::end_step`] around `Trainer::step`, or let [`OsshRun`]
+/// own the whole loop.
+pub struct OsshHarness {
+    pub cfg: OsshConfig,
+    detector: OutlierDetector,
+    layers: BTreeMap<String, LayerTelemetry>,
+    /// Telemetry checks completed (across resumes).
+    checks: u64,
+}
+
+impl OsshHarness {
+    /// One telemetry slot per registry layer; the registry's sets are the
+    /// step-0 references.
+    pub fn new(cfg: OsshConfig, detector_tau: f32, registry: &OutlierRegistry) -> OsshHarness {
+        let mut layers = BTreeMap::new();
+        for (name, set) in registry.layers() {
+            layers.insert(
+                name.clone(),
+                LayerTelemetry {
+                    tracker: HitRateTracker::new(name, set.clone()),
+                    reference0: set.clone(),
+                    jaccard: Vec::new(),
+                    similarity: SimilarityTracker::new(name, Vec::new(), Vec::new()),
+                    statics_ready: false,
+                    below: 0,
+                    drift_events: Vec::new(),
+                    swap_events: Vec::new(),
+                },
+            );
+        }
+        OsshHarness {
+            cfg,
+            detector: OutlierDetector::new(detector_tau),
+            layers,
+            checks: 0,
+        }
+    }
+
+    /// Should step `step` be a telemetry check?
+    pub fn is_check_step(&self, step: u64) -> bool {
+        self.cfg.check_every > 0 && step % self.cfg.check_every == 0
+    }
+
+    /// Arm the calibration taps before the training step.
+    pub fn begin_step(&self, model: &mut Model) {
+        for b in &mut model.blocks {
+            for l in b.linears() {
+                l.start_calibration();
+            }
+        }
+    }
+
+    /// Harvest the taps after the training step: record hit-rate/Jaccard/
+    /// similarity points and, when re-detection triggers, hot-swap the
+    /// layer's targeted channel set through the `MethodSnapshot` seam.
+    pub fn end_step(&mut self, model: &mut Model, step: u64) {
+        for b in &mut model.blocks {
+            for l in b.linears() {
+                let Some(stats) = l.take_stats() else { continue };
+                let name = l.name.clone();
+                if let Some(new_set) = self.observe(&name, &stats, step) {
+                    let retargeted = l
+                        .method_snapshot()
+                        .and_then(|s| s.retarget_channels(&new_set));
+                    if let Some(snap) = retargeted {
+                        l.set_method(method_from_snapshot(snap));
+                        self.mark_method_swapped(&name);
+                    }
+                }
+            }
+        }
+        self.checks += 1;
+    }
+
+    /// The model-independent telemetry core — also the unit-test seam for
+    /// the budget boundary semantics. Records one check for `layer` from
+    /// its calibration stats; returns the re-detected reference set when
+    /// the drift budget ran out of patience (the caller applies it to the
+    /// live method).
+    pub fn observe(
+        &mut self,
+        layer: &str,
+        stats: &ChannelStats,
+        step: u64,
+    ) -> Option<OutlierSet> {
+        let lt = self.layers.get_mut(layer)?;
+        let cap = (stats.channels / self.cfg.realtime_cap_div.max(1)).max(self.cfg.realtime_cap_min);
+        let realtime = self.detector.select(stats, cap);
+        lt.tracker.record(&realtime);
+        let rate = *lt.tracker.series().last().expect("just recorded");
+        let inter = lt.reference0.intersection_size(&realtime);
+        let union = lt.reference0.len() + realtime.len() - inter;
+        lt.jaccard.push(if union == 0 {
+            1.0
+        } else {
+            inter as f64 / union as f64
+        });
+        // SmoothQuant-style factors over unit weight maxima: a pure
+        // function of the activation statistics, frozen on first check.
+        let ones = vec![1.0f32; stats.channels];
+        let factors = scaling::smoothquant_factors(&stats.abs_max, &ones, 0.5);
+        if !lt.statics_ready {
+            let channels: Vec<usize> = lt
+                .reference0
+                .channels
+                .iter()
+                .copied()
+                .filter(|&c| c < factors.len())
+                .collect();
+            let statics: Vec<f32> = channels.iter().map(|&c| factors[c]).collect();
+            lt.similarity = SimilarityTracker::new(layer, channels, statics);
+            lt.statics_ready = true;
+        }
+        lt.similarity.record_full(&factors);
+        if rate < self.cfg.drift_budget {
+            lt.below += 1;
+            lt.drift_events.push(DriftEvent {
+                step,
+                layer: layer.to_string(),
+                hit_rate: rate,
+                consecutive: lt.below,
+            });
+            if self.cfg.redetect && lt.below >= self.cfg.patience {
+                let budget = lt.tracker.reference().len().max(self.cfg.realtime_cap_min);
+                let new_set = self.detector.select(stats, budget);
+                lt.swap_events.push(SwapEvent {
+                    step,
+                    layer: layer.to_string(),
+                    hit_rate: rate,
+                    old_channels: lt.tracker.reference().channels.clone(),
+                    new_channels: new_set.channels.clone(),
+                    method_swapped: false,
+                });
+                lt.tracker.set_reference(new_set.clone());
+                lt.below = 0;
+                return Some(new_set);
+            }
+        } else {
+            lt.below = 0;
+        }
+        None
+    }
+
+    fn mark_method_swapped(&mut self, layer: &str) {
+        if let Some(ev) = self
+            .layers
+            .get_mut(layer)
+            .and_then(|lt| lt.swap_events.last_mut())
+        {
+            ev.method_swapped = true;
+        }
+    }
+
+    /// Telemetry checks completed so far.
+    pub fn checks(&self) -> u64 {
+        self.checks
+    }
+
+    /// All swap events across layers, in layer order.
+    pub fn swap_events(&self) -> Vec<&SwapEvent> {
+        self.layers
+            .values()
+            .flat_map(|lt| lt.swap_events.iter())
+            .collect()
+    }
+
+    /// All drift events across layers, in layer order.
+    pub fn drift_events(&self) -> Vec<&DriftEvent> {
+        self.layers
+            .values()
+            .flat_map(|lt| lt.drift_events.iter())
+            .collect()
+    }
+
+    /// Persist the full telemetry state (crash-safely, versioned, CRC'd)
+    /// so a checkpoint-resumed run continues its report byte-identically.
+    pub fn save_state(&self, path: &Path) -> Result<usize> {
+        persist::save_artifact(path, OSSH_STATE_KIND, |w| {
+            let mut c = SectionWriter::new();
+            c.put_u64(self.cfg.check_every);
+            c.put_f64(self.cfg.drift_budget);
+            c.put_u32(self.cfg.patience);
+            c.put_bool(self.cfg.redetect);
+            c.put_usize(self.cfg.realtime_cap_div);
+            c.put_usize(self.cfg.realtime_cap_min);
+            c.put_f32(self.detector.tau);
+            c.put_u64(self.checks);
+            w.section("ossh.cfg", c);
+            let mut s = SectionWriter::new();
+            s.put_u32(self.layers.len() as u32);
+            for (name, lt) in &self.layers {
+                s.put_str(name);
+                s.put_usizes(&lt.reference0.channels);
+                s.put_usizes(&lt.tracker.reference().channels);
+                s.put_f64s(lt.tracker.series());
+                s.put_f64s(&lt.jaccard);
+                s.put_bool(lt.statics_ready);
+                s.put_usizes(lt.similarity.channels());
+                s.put_f32s(lt.similarity.static_factors());
+                s.put_f32s(lt.similarity.series());
+                s.put_u32(lt.below);
+                s.put_u32(lt.drift_events.len() as u32);
+                for ev in &lt.drift_events {
+                    s.put_u64(ev.step);
+                    s.put_f64(ev.hit_rate);
+                    s.put_u32(ev.consecutive);
+                }
+                s.put_u32(lt.swap_events.len() as u32);
+                for ev in &lt.swap_events {
+                    s.put_u64(ev.step);
+                    s.put_f64(ev.hit_rate);
+                    s.put_usizes(&ev.old_channels);
+                    s.put_usizes(&ev.new_channels);
+                    s.put_bool(ev.method_swapped);
+                }
+            }
+            w.section("ossh.layers", s);
+        })
+    }
+
+    /// Restore a harness saved by [`OsshHarness::save_state`]. The caller's
+    /// config and detector must match what was saved — a silent mismatch
+    /// would fork the telemetry trajectory, so it is a hard error.
+    pub fn load_state(path: &Path, cfg: &OsshConfig, detector_tau: f32) -> Result<OsshHarness> {
+        let ar = persist::load_artifact(path, OSSH_STATE_KIND)?;
+        let mut c = ar.section("ossh.cfg")?;
+        let saved = OsshConfig {
+            check_every: c.get_u64()?,
+            drift_budget: c.get_f64()?,
+            patience: c.get_u32()?,
+            redetect: c.get_bool()?,
+            realtime_cap_div: c.get_usize()?,
+            realtime_cap_min: c.get_usize()?,
+        };
+        let saved_tau = c.get_f32()?;
+        let checks = c.get_u64()?;
+        if &saved != cfg || saved_tau.to_bits() != detector_tau.to_bits() {
+            bail!("OSSH telemetry state was recorded under a different config");
+        }
+        let mut s = ar.section("ossh.layers")?;
+        let n = s.get_u32()? as usize;
+        let mut layers = BTreeMap::new();
+        for _ in 0..n {
+            let name = s.get_str()?;
+            let reference0 = OutlierSet::new(s.get_usizes()?);
+            let current = OutlierSet::new(s.get_usizes()?);
+            let hits = s.get_f64s()?;
+            let jaccard = s.get_f64s()?;
+            let statics_ready = s.get_bool()?;
+            let sim_channels = s.get_usizes()?;
+            let sim_statics = s.get_f32s()?;
+            let sim_series = s.get_f32s()?;
+            let below = s.get_u32()?;
+            let n_drift = s.get_u32()? as usize;
+            let mut drift_events = Vec::with_capacity(n_drift);
+            for _ in 0..n_drift {
+                drift_events.push(DriftEvent {
+                    step: s.get_u64()?,
+                    layer: name.clone(),
+                    hit_rate: s.get_f64()?,
+                    consecutive: s.get_u32()?,
+                });
+            }
+            let n_swap = s.get_u32()? as usize;
+            let mut swap_events = Vec::with_capacity(n_swap);
+            for _ in 0..n_swap {
+                swap_events.push(SwapEvent {
+                    step: s.get_u64()?,
+                    layer: name.clone(),
+                    hit_rate: s.get_f64()?,
+                    old_channels: s.get_usizes()?,
+                    new_channels: s.get_usizes()?,
+                    method_swapped: s.get_bool()?,
+                });
+            }
+            layers.insert(
+                name.clone(),
+                LayerTelemetry {
+                    tracker: HitRateTracker::from_parts(&name, current, hits),
+                    reference0,
+                    jaccard,
+                    similarity: SimilarityTracker::from_parts(
+                        &name,
+                        sim_channels,
+                        sim_statics,
+                        sim_series,
+                    ),
+                    statics_ready,
+                    below,
+                    drift_events,
+                    swap_events,
+                },
+            );
+        }
+        Ok(OsshHarness {
+            cfg: cfg.clone(),
+            detector: OutlierDetector::new(detector_tau),
+            layers,
+            checks,
+        })
+    }
+
+    /// Assemble the versioned report artifact from the accumulated curves.
+    pub fn report(&self, method: MethodKind, preset: &str, steps: u64) -> OsshReport {
+        let mut layers = Vec::new();
+        let mut min_hit = f64::INFINITY;
+        let mut mean_sum = 0.0f64;
+        let mut mean_n = 0usize;
+        let mut n_drift = 0usize;
+        let mut n_swap = 0usize;
+        let mut per_kind: BTreeMap<&'static str, (f64, usize)> = BTreeMap::new();
+        for (name, lt) in &self.layers {
+            let (mean_hit, std_hit) = lt.tracker.summary();
+            if lt.tracker.iterations() > 0 {
+                mean_sum += mean_hit;
+                mean_n += 1;
+                for &r in lt.tracker.series() {
+                    min_hit = min_hit.min(r);
+                }
+                let e = per_kind.entry(LayerKind::from_name(name).label()).or_insert((0.0, 0));
+                e.0 += mean_hit;
+                e.1 += 1;
+            }
+            n_drift += lt.drift_events.len();
+            n_swap += lt.swap_events.len();
+            layers.push(LayerReport {
+                layer: name.clone(),
+                kind: LayerKind::from_name(name).label().to_string(),
+                reference0: lt.reference0.channels.clone(),
+                reference: lt.tracker.reference().channels.clone(),
+                hit_series: lt.tracker.series().to_vec(),
+                jaccard_series: lt.jaccard.clone(),
+                similarity_series: lt.similarity.series().to_vec(),
+                mean_hit,
+                std_hit,
+                drift_events: lt.drift_events.clone(),
+                swap_events: lt.swap_events.clone(),
+            });
+        }
+        let summary = OsshSummary {
+            mean_hit: if mean_n == 0 { 1.0 } else { mean_sum / mean_n as f64 },
+            min_hit: if min_hit.is_finite() { min_hit } else { 1.0 },
+            drift_events: n_drift,
+            swaps: n_swap,
+            per_kind: per_kind
+                .into_iter()
+                .map(|(k, (sum, n))| (k.to_string(), sum / n as f64))
+                .collect(),
+        };
+        OsshReport {
+            version: OSSH_REPORT_VERSION,
+            method: method.label().to_string(),
+            preset: preset.to_string(),
+            steps,
+            checks: self.checks,
+            drift_budget: self.cfg.drift_budget,
+            patience: self.cfg.patience,
+            layers,
+            summary,
+        }
+    }
+}
+
+// ------------------------------------------------------------- report
+
+/// Encode an `f64` for JSON, representing non-finite values as the string
+/// markers `"NaN"` / `"Infinity"` / `"-Infinity"` (plain JSON has no
+/// non-finite numbers; emitting them raw would produce unparseable text).
+pub fn json_f64(x: f64) -> Json {
+    if x.is_finite() {
+        Json::num(x)
+    } else if x.is_nan() {
+        Json::str("NaN")
+    } else if x > 0.0 {
+        Json::str("Infinity")
+    } else {
+        Json::str("-Infinity")
+    }
+}
+
+/// Inverse of [`json_f64`].
+pub fn f64_from_json(j: &Json) -> Result<f64> {
+    if let Some(x) = j.as_f64() {
+        return Ok(x);
+    }
+    match j.as_str() {
+        Some("NaN") => Ok(f64::NAN),
+        Some("Infinity") => Ok(f64::INFINITY),
+        Some("-Infinity") => Ok(f64::NEG_INFINITY),
+        _ => bail!("expected a number or a non-finite marker, got {}", j.to_string()),
+    }
+}
+
+/// Per-layer slice of the report artifact.
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    pub layer: String,
+    pub kind: String,
+    pub reference0: Vec<usize>,
+    pub reference: Vec<usize>,
+    pub hit_series: Vec<f64>,
+    pub jaccard_series: Vec<f64>,
+    pub similarity_series: Vec<f32>,
+    pub mean_hit: f64,
+    pub std_hit: f64,
+    pub drift_events: Vec<DriftEvent>,
+    pub swap_events: Vec<SwapEvent>,
+}
+
+/// Cross-layer roll-up.
+#[derive(Clone, Debug)]
+pub struct OsshSummary {
+    pub mean_hit: f64,
+    pub min_hit: f64,
+    pub drift_events: usize,
+    pub swaps: usize,
+    /// Mean hit rate per layer kind, sorted by kind label.
+    pub per_kind: Vec<(String, f64)>,
+}
+
+/// The versioned `OSSH_report.json` artifact: everything the stability
+/// analysis needs, rendered deterministically (object keys are sorted, so
+/// equal telemetry ⇒ byte-equal JSON — the property the thread-width and
+/// resume tests pin).
+#[derive(Clone, Debug)]
+pub struct OsshReport {
+    pub version: u32,
+    pub method: String,
+    pub preset: String,
+    pub steps: u64,
+    pub checks: u64,
+    pub drift_budget: f64,
+    pub patience: u32,
+    pub layers: Vec<LayerReport>,
+    pub summary: OsshSummary,
+}
+
+fn usizes_json(xs: &[usize]) -> Json {
+    Json::arr(xs.iter().map(|&x| Json::num(x as u32)))
+}
+
+fn usizes_from_json(j: &Json, what: &str) -> Result<Vec<usize>> {
+    let arr = j.as_arr().ok_or_else(|| anyhow!("{what} must be an array"))?;
+    arr.iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow!("{what} holds a non-index value")))
+        .collect()
+}
+
+fn f64s_json(xs: &[f64]) -> Json {
+    Json::arr(xs.iter().map(|&x| json_f64(x)))
+}
+
+fn f64s_from_json(j: &Json, what: &str) -> Result<Vec<f64>> {
+    let arr = j.as_arr().ok_or_else(|| anyhow!("{what} must be an array"))?;
+    arr.iter().map(f64_from_json).collect()
+}
+
+fn field<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
+    j.get(key).ok_or_else(|| anyhow!("OSSH report is missing '{key}'"))
+}
+
+fn field_f64(j: &Json, key: &str) -> Result<f64> {
+    f64_from_json(field(j, key)?)
+}
+
+fn field_usize(j: &Json, key: &str) -> Result<usize> {
+    field(j, key)?
+        .as_usize()
+        .ok_or_else(|| anyhow!("'{key}' must be a non-negative integer"))
+}
+
+impl OsshReport {
+    /// Deterministic JSON rendering (see the type docs).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::num(self.version)),
+            ("method", Json::str(self.method.clone())),
+            ("preset", Json::str(self.preset.clone())),
+            ("steps", Json::num(self.steps as u32)),
+            ("checks", Json::num(self.checks as u32)),
+            ("drift_budget", json_f64(self.drift_budget)),
+            ("patience", Json::num(self.patience)),
+            (
+                "layers",
+                Json::arr(self.layers.iter().map(|l| {
+                    Json::obj(vec![
+                        ("layer", Json::str(l.layer.clone())),
+                        ("kind", Json::str(l.kind.clone())),
+                        ("reference0", usizes_json(&l.reference0)),
+                        ("reference", usizes_json(&l.reference)),
+                        ("hit_series", f64s_json(&l.hit_series)),
+                        ("jaccard_series", f64s_json(&l.jaccard_series)),
+                        (
+                            "similarity_series",
+                            Json::arr(l.similarity_series.iter().map(|&x| json_f64(x as f64))),
+                        ),
+                        ("mean_hit", json_f64(l.mean_hit)),
+                        ("std_hit", json_f64(l.std_hit)),
+                        (
+                            "drift_events",
+                            Json::arr(l.drift_events.iter().map(|e| {
+                                Json::obj(vec![
+                                    ("step", Json::num(e.step as u32)),
+                                    ("hit_rate", json_f64(e.hit_rate)),
+                                    ("consecutive", Json::num(e.consecutive)),
+                                ])
+                            })),
+                        ),
+                        (
+                            "swap_events",
+                            Json::arr(l.swap_events.iter().map(|e| {
+                                Json::obj(vec![
+                                    ("step", Json::num(e.step as u32)),
+                                    ("hit_rate", json_f64(e.hit_rate)),
+                                    ("old_channels", usizes_json(&e.old_channels)),
+                                    ("new_channels", usizes_json(&e.new_channels)),
+                                    ("method_swapped", Json::Bool(e.method_swapped)),
+                                ])
+                            })),
+                        ),
+                    ])
+                })),
+            ),
+            (
+                "summary",
+                Json::obj(vec![
+                    ("mean_hit", json_f64(self.summary.mean_hit)),
+                    ("min_hit", json_f64(self.summary.min_hit)),
+                    ("drift_events", Json::num(self.summary.drift_events as u32)),
+                    ("swaps", Json::num(self.summary.swaps as u32)),
+                    (
+                        "per_kind",
+                        Json::obj(
+                            self.summary
+                                .per_kind
+                                .iter()
+                                .map(|(k, v)| (k.as_str(), json_f64(*v)))
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
+        ])
+    }
+
+    /// Parse a report previously rendered by [`OsshReport::to_json`].
+    /// Version mismatches and malformed documents produce readable errors.
+    pub fn from_json(text: &str) -> Result<OsshReport> {
+        let j = Json::parse(text).map_err(|e| anyhow!("OSSH report is not valid JSON: {e}"))?;
+        let version = field_usize(&j, "version")? as u32;
+        if version != OSSH_REPORT_VERSION {
+            bail!(
+                "unsupported OSSH report version {version} (this build reads {OSSH_REPORT_VERSION})"
+            );
+        }
+        let mut layers = Vec::new();
+        for l in field(&j, "layers")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("'layers' must be an array"))?
+        {
+            let layer = field(l, "layer")?
+                .as_str()
+                .ok_or_else(|| anyhow!("'layer' must be a string"))?
+                .to_string();
+            let mut drift_events = Vec::new();
+            for e in field(l, "drift_events")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("'drift_events' must be an array"))?
+            {
+                drift_events.push(DriftEvent {
+                    step: field_usize(e, "step")? as u64,
+                    layer: layer.clone(),
+                    hit_rate: field_f64(e, "hit_rate")?,
+                    consecutive: field_usize(e, "consecutive")? as u32,
+                });
+            }
+            let mut swap_events = Vec::new();
+            for e in field(l, "swap_events")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("'swap_events' must be an array"))?
+            {
+                swap_events.push(SwapEvent {
+                    step: field_usize(e, "step")? as u64,
+                    layer: layer.clone(),
+                    hit_rate: field_f64(e, "hit_rate")?,
+                    old_channels: usizes_from_json(field(e, "old_channels")?, "old_channels")?,
+                    new_channels: usizes_from_json(field(e, "new_channels")?, "new_channels")?,
+                    method_swapped: matches!(field(e, "method_swapped")?, Json::Bool(true)),
+                });
+            }
+            layers.push(LayerReport {
+                kind: field(l, "kind")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("'kind' must be a string"))?
+                    .to_string(),
+                reference0: usizes_from_json(field(l, "reference0")?, "reference0")?,
+                reference: usizes_from_json(field(l, "reference")?, "reference")?,
+                hit_series: f64s_from_json(field(l, "hit_series")?, "hit_series")?,
+                jaccard_series: f64s_from_json(field(l, "jaccard_series")?, "jaccard_series")?,
+                similarity_series: f64s_from_json(
+                    field(l, "similarity_series")?,
+                    "similarity_series",
+                )?
+                .into_iter()
+                .map(|x| x as f32)
+                .collect(),
+                mean_hit: field_f64(l, "mean_hit")?,
+                std_hit: field_f64(l, "std_hit")?,
+                drift_events,
+                swap_events,
+                layer,
+            });
+        }
+        let s = field(&j, "summary")?;
+        let per_kind = match field(s, "per_kind")? {
+            Json::Obj(map) => {
+                let mut v = Vec::new();
+                for (k, val) in map {
+                    v.push((k.clone(), f64_from_json(val)?));
+                }
+                v
+            }
+            _ => bail!("'per_kind' must be an object"),
+        };
+        Ok(OsshReport {
+            version,
+            method: field(&j, "method")?
+                .as_str()
+                .ok_or_else(|| anyhow!("'method' must be a string"))?
+                .to_string(),
+            preset: field(&j, "preset")?
+                .as_str()
+                .ok_or_else(|| anyhow!("'preset' must be a string"))?
+                .to_string(),
+            steps: field_usize(&j, "steps")? as u64,
+            checks: field_usize(&j, "checks")? as u64,
+            drift_budget: field_f64(&j, "drift_budget")?,
+            patience: field_usize(&j, "patience")? as u32,
+            layers,
+            summary: OsshSummary {
+                mean_hit: field_f64(s, "mean_hit")?,
+                min_hit: field_f64(s, "min_hit")?,
+                drift_events: field_usize(s, "drift_events")?,
+                swaps: field_usize(s, "swaps")?,
+                per_kind,
+            },
+        })
+    }
+
+    /// Render to the on-disk artifact bytes (trailing newline included).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = self.to_json().to_string().into_bytes();
+        out.push(b'\n');
+        out
+    }
+}
+
+/// Write the report artifact atomically (temp file + fsync + rename, the
+/// checkpoint machinery's write path).
+pub fn write_report(path: &Path, report: &OsshReport) -> Result<usize> {
+    let bytes = report.to_bytes();
+    persist::write_atomic_rotating(path, &bytes)?;
+    Ok(bytes.len())
+}
+
+/// Read a report artifact written by [`write_report`].
+pub fn read_report(path: &Path) -> Result<OsshReport> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("read {}: {e}", path.display()))?;
+    OsshReport::from_json(&text)
+}
+
+// ---------------------------------------------------------------- runs
+
+/// Everything that determines an OSSH validation run's trajectory. Two
+/// specs that agree on all fields produce bit-identical runs (any thread
+/// width, interrupted or not).
+#[derive(Clone, Debug)]
+pub struct OsshRunSpec {
+    pub server: ServerConfig,
+    pub ft_task: String,
+    pub method: MethodKind,
+    pub peft: PeftKind,
+    pub steps: u64,
+    pub batch: usize,
+    pub max_len: usize,
+    pub seed: u64,
+    pub lr: f32,
+    /// Arm the telemetry taps. Off ⇒ the harness never observes anything
+    /// (the baseline the non-perturbation test compares against).
+    pub telemetry: bool,
+    pub cfg: OsshConfig,
+    pub checkpoint: Option<CheckpointSpec>,
+}
+
+impl OsshRunSpec {
+    /// A fast test-scale spec (opt-tiny, 4 steps).
+    pub fn tiny(method: MethodKind) -> OsshRunSpec {
+        let mut server = ServerConfig::default();
+        server.preset = "opt-tiny".to_string();
+        server.calib_samples = 8;
+        server.calib_batch = 4;
+        OsshRunSpec {
+            server,
+            ft_task: "oig-chip2".to_string(),
+            method,
+            peft: PeftKind::Lora,
+            steps: 4,
+            batch: 2,
+            max_len: 64,
+            seed: 0x0551,
+            lr: 2e-3,
+            telemetry: true,
+            cfg: OsshConfig::default(),
+            checkpoint: None,
+        }
+    }
+
+    /// The job spec persisted into checkpoints; `validate_resume` compares
+    /// it against the resuming spec's, so a drifted spec cannot silently
+    /// fork a resumed trajectory.
+    fn job(&self) -> FinetuneJob {
+        let mut j = FinetuneJob::new(0, &self.ft_task, self.method, self.peft);
+        j.steps = self.steps;
+        j.batch_size = self.batch;
+        j.lr = self.lr;
+        j.seed = self.seed;
+        j.max_len = self.max_len;
+        j.checkpoint = self.checkpoint.clone();
+        j
+    }
+}
+
+/// Sibling path holding the harness state next to a training checkpoint.
+pub fn ossh_state_path(checkpoint: &Path) -> PathBuf {
+    let mut os = checkpoint.as_os_str().to_os_string();
+    os.push(".ossh");
+    PathBuf::from(os)
+}
+
+/// One OSSH validation run: a seeded training job with the telemetry
+/// harness wired around every optimizer step, periodic crash-safe
+/// checkpoints (model + trainer + telemetry state), and the report
+/// artifact at the end. The per-step data batch is derived statelessly
+/// from `(seed, step)`, so a resumed run replays the exact stream an
+/// uninterrupted run sees.
+pub struct OsshRun {
+    pub spec: OsshRunSpec,
+    model: Model,
+    trainer: Trainer,
+    harness: OsshHarness,
+    task: SynthTask,
+    losses: Vec<f64>,
+    payload_bytes: usize,
+}
+
+impl OsshRun {
+    /// Prepare a fresh run: calibrate + quantize through the preprocess
+    /// server, then seed the harness from the bundle's outlier registry.
+    pub fn new(spec: OsshRunSpec) -> Result<OsshRun> {
+        let task = SynthTask::by_name(&spec.ft_task)
+            .ok_or_else(|| anyhow!("unknown task '{}'", spec.ft_task))?;
+        let server = PreprocessServer::new(spec.server.clone());
+        let bundle = server.prepare(spec.method, spec.peft);
+        let harness = OsshHarness::new(spec.cfg.clone(), spec.server.detector_tau, &bundle.registry);
+        let trainer = Trainer::new(spec.lr, spec.max_len, 1);
+        Ok(OsshRun {
+            model: bundle.model,
+            payload_bytes: bundle.payload_bytes,
+            trainer,
+            harness,
+            task,
+            losses: Vec::new(),
+            spec,
+        })
+    }
+
+    /// Resume a run from its checkpoint (plus the telemetry-state sibling
+    /// when telemetry is on). The stored job spec must match `spec`'s.
+    pub fn resume(spec: OsshRunSpec) -> Result<OsshRun> {
+        let ck = spec
+            .checkpoint
+            .clone()
+            .ok_or_else(|| anyhow!("resume requires a checkpoint spec"))?;
+        let loaded = persist::load_train_checkpoint(&ck.path)?;
+        validate_resume(&loaded.ckpt.job, &spec.job())?;
+        let task = SynthTask::by_name(&spec.ft_task)
+            .ok_or_else(|| anyhow!("unknown task '{}'", spec.ft_task))?;
+        let harness = if spec.telemetry {
+            OsshHarness::load_state(
+                &ossh_state_path(&ck.path),
+                &spec.cfg,
+                spec.server.detector_tau,
+            )?
+        } else {
+            OsshHarness::new(spec.cfg.clone(), spec.server.detector_tau, &OutlierRegistry::new())
+        };
+        Ok(OsshRun {
+            model: loaded.ckpt.model,
+            trainer: loaded.ckpt.trainer,
+            harness,
+            task,
+            losses: loaded.ckpt.losses,
+            payload_bytes: loaded.ckpt.payload_bytes,
+            spec,
+        })
+    }
+
+    /// Steps completed so far.
+    pub fn steps_done(&self) -> u64 {
+        self.trainer.step_count
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.steps_done() >= self.spec.steps
+    }
+
+    /// Per-step losses (spans resumes).
+    pub fn losses(&self) -> &[f64] {
+        &self.losses
+    }
+
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+
+    /// Mutable model access (parameter inspection in the stability tests;
+    /// `Model::visit_params` needs `&mut`).
+    pub fn model_mut(&mut self) -> &mut Model {
+        &mut self.model
+    }
+
+    pub fn harness(&self) -> &OsshHarness {
+        &self.harness
+    }
+
+    /// Deterministically relocate every injected outlier channel by
+    /// `shift` — the synthetic adversarial drift of the stability tier.
+    /// Consumes no randomness, so the run stays reproducible.
+    pub fn inject_relocation(&mut self, shift: usize) {
+        for b in &mut self.model.blocks {
+            b.inj_attn.relocate(shift);
+            b.inj_o.relocate(shift);
+            b.inj_mlp.relocate(shift);
+            b.inj_down.relocate(shift);
+        }
+    }
+
+    /// Run one optimizer step with the telemetry check around it, saving a
+    /// checkpoint afterwards when the spec's cadence says so.
+    pub fn step(&mut self) -> Result<()> {
+        let step = self.trainer.step_count;
+        let check = self.spec.telemetry && self.harness.is_check_step(step);
+        if check {
+            self.harness.begin_step(&mut self.model);
+        }
+        // Stateless per-step data stream: resume ≡ uninterrupted.
+        let mut rng = Rng::new(self.spec.seed ^ (step + 1).wrapping_mul(0x9E3779B97F4A7C15));
+        let samples = batchify(&self.task, self.spec.batch, &mut rng);
+        let refs: Vec<&Sample> = samples.iter().collect();
+        let stats = self.trainer.step(&mut self.model, &[refs]);
+        self.losses.push(stats.loss);
+        if check {
+            self.harness.end_step(&mut self.model, step);
+        }
+        if let Some(ck) = self.spec.checkpoint.clone() {
+            if ck.every > 0 && (step + 1) % ck.every == 0 {
+                self.checkpoint(&ck)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn checkpoint(&mut self, ck: &CheckpointSpec) -> Result<()> {
+        persist::save_train_checkpoint(
+            &ck.path,
+            &self.spec.job(),
+            &mut self.model,
+            &self.trainer,
+            self.losses.len(),
+            &self.losses,
+            self.payload_bytes,
+        )?;
+        if self.spec.telemetry {
+            self.harness.save_state(&ossh_state_path(&ck.path))?;
+        }
+        Ok(())
+    }
+
+    /// Drive the run to completion.
+    pub fn run(&mut self) -> Result<()> {
+        while !self.is_done() {
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    /// The report artifact for the run so far.
+    pub fn report(&self) -> OsshReport {
+        self.harness
+            .report(self.spec.method, &self.spec.server.preset, self.steps_done())
+    }
 }

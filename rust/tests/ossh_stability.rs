@@ -1,0 +1,323 @@
+//! OSSH stability tier (DESIGN.md §11): the cross-method acceptance suite
+//! for the drift-telemetry harness.
+//!
+//! For every quantization method it pins four properties of
+//! [`quaff::report::ossh::OsshRun`]:
+//!
+//! (a) telemetry is **bit-identical across thread widths** — the
+//!     `OSSH_report.json` bytes from a 1-wide and a 4-wide run match;
+//! (b) telemetry is **non-perturbing** — losses and adapter parameters of a
+//!     telemetry-on run equal the telemetry-off run bitwise;
+//! (c) the **synthetic drift injector** (deterministic channel relocation)
+//!     triggers adaptive re-detection at exactly the budget boundary;
+//! (d) a run interrupted at a mid-telemetry checkpoint and resumed produces
+//!     a **byte-equal report continuation** of the uninterrupted run.
+//!
+//! The whole cross-method sweep is one `#[test]` because it flips the
+//! process-global active thread width between legs (the
+//! `tests/thread_determinism.rs` convention). The budget-boundary
+//! semantics (strict `<`, consecutive-check patience, counter reset on
+//! recovery) are pinned separately on crafted statistics, where every hit
+//! rate is exact by construction.
+
+use quaff::coordinator::CheckpointSpec;
+use quaff::methods::MethodKind;
+use quaff::outlier::{ChannelStats, OutlierRegistry, OutlierSet};
+use quaff::report::ossh::{ossh_state_path, OsshConfig, OsshHarness, OsshRun, OsshRunSpec};
+use quaff::tensor::{pool, Matrix};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("quaff_ossh_{tag}_{}", std::process::id()));
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Run `f` at the given active width, returning its output.
+fn at_width<R>(width: usize, f: impl FnOnce() -> R) -> R {
+    pool::set_active_threads(width);
+    f()
+}
+
+/// Everything a run leaves behind that the suite compares bitwise.
+struct RunTrace {
+    losses: Vec<f64>,
+    params: Vec<(String, Vec<f32>)>,
+    report: Vec<u8>,
+}
+
+fn trace(mut run: OsshRun) -> RunTrace {
+    let losses = run.losses().to_vec();
+    let report = run.report().to_bytes();
+    let mut params = Vec::new();
+    run.model_mut()
+        .visit_params(&mut |name, p| params.push((name.to_string(), p.value.data().to_vec())));
+    RunTrace {
+        losses,
+        params,
+        report,
+    }
+}
+
+fn complete(spec: OsshRunSpec) -> RunTrace {
+    let mut run = OsshRun::new(spec).expect("fresh run");
+    run.run().expect("run to completion");
+    trace(run)
+}
+
+fn assert_params_eq(a: &RunTrace, b: &RunTrace, what: &str) {
+    assert_eq!(a.losses, b.losses, "{what}: losses diverged");
+    assert_eq!(a.params.len(), b.params.len(), "{what}: param count");
+    for ((n1, v1), (n2, v2)) in a.params.iter().zip(&b.params) {
+        assert_eq!(n1, n2, "{what}: param order");
+        assert_eq!(v1, v2, "{what}: param {n1} diverged");
+    }
+}
+
+/// (a) + (b): telemetry must neither perturb the training trajectory nor
+/// depend on the thread width.
+fn check_transparent_and_width_stable(method: MethodKind) {
+    let mut off = OsshRunSpec::tiny(method);
+    off.telemetry = false;
+    let off4 = at_width(4, || complete(off));
+
+    let on1 = at_width(1, || complete(OsshRunSpec::tiny(method)));
+    let on4 = at_width(4, || complete(OsshRunSpec::tiny(method)));
+
+    let label = method.label();
+    assert_params_eq(&off4, &on4, &format!("{label} telemetry-on vs off"));
+    assert_params_eq(&on1, &on4, &format!("{label} width 1 vs 4"));
+    assert_eq!(
+        on1.report, on4.report,
+        "{label}: OSSH report bytes differ between 1 and 4 threads"
+    );
+    assert!(
+        !on4.report.is_empty() && on4.report != off4.report,
+        "{label}: telemetry-on report must actually record checks"
+    );
+}
+
+/// (d): interrupt at the mid-run checkpoint, resume, and compare the final
+/// report bytes against a run that never checkpointed at all.
+fn check_resume_continues_report(method: MethodKind, dir: &Path) {
+    let label = method.label();
+    let uninterrupted = complete(OsshRunSpec::tiny(method));
+
+    let ck = CheckpointSpec {
+        path: dir.join(format!("{label}.ckpt")),
+        every: 2,
+    };
+    let mut spec = OsshRunSpec::tiny(method);
+    spec.checkpoint = Some(ck.clone());
+    let mut first = OsshRun::new(spec.clone()).expect("fresh run");
+    first.step().expect("step 0");
+    first.step().expect("step 1");
+    assert!(!first.is_done());
+    assert!(ck.path.exists(), "{label}: checkpoint not written");
+    assert!(
+        ossh_state_path(&ck.path).exists(),
+        "{label}: telemetry state sibling not written"
+    );
+    drop(first); // the "crash"
+
+    let mut resumed = OsshRun::resume(spec).expect("resume");
+    assert_eq!(resumed.steps_done(), 2, "{label}: resume position");
+    resumed.run().expect("resumed run to completion");
+    let resumed = trace(resumed);
+
+    assert_params_eq(
+        &uninterrupted,
+        &resumed,
+        &format!("{label} resumed vs uninterrupted"),
+    );
+    assert_eq!(
+        uninterrupted.report, resumed.report,
+        "{label}: resumed OSSH report is not a byte-equal continuation"
+    );
+}
+
+/// (c): deterministic channel relocation mid-run must exhaust the drift
+/// budget and trigger adaptive re-detection — with the method's targeted
+/// channel set hot-swapped on Quaff layers — and must not fire earlier.
+fn check_drift_triggers_redetection() {
+    const INJECT_AT: u64 = 3;
+    const PATIENCE: u32 = 2;
+    let mut spec = OsshRunSpec::tiny(MethodKind::Quaff);
+    spec.steps = 8;
+    spec.cfg = OsshConfig {
+        check_every: 1,
+        drift_budget: 0.45,
+        patience: PATIENCE,
+        redetect: true,
+        realtime_cap_div: 8,
+        realtime_cap_min: 4,
+    };
+    let mut run = OsshRun::new(spec).expect("fresh run");
+    for _ in 0..INJECT_AT {
+        run.step().expect("healthy step");
+    }
+    assert!(
+        run.harness().swap_events().is_empty(),
+        "no re-detection may fire while outliers are spatially stable"
+    );
+    run.inject_relocation(17);
+    run.run().expect("post-drift steps");
+
+    let report = run.report();
+    let swaps: Vec<_> = report
+        .layers
+        .iter()
+        .flat_map(|l| l.swap_events.iter())
+        .collect();
+    assert!(!swaps.is_empty(), "relocation never triggered re-detection");
+    let first_swap = swaps.iter().map(|e| e.step).min().unwrap();
+    // Drift becomes visible at the first post-relocation check (step
+    // INJECT_AT), so patience runs out exactly PATIENCE - 1 checks later.
+    assert_eq!(
+        first_swap,
+        INJECT_AT + PATIENCE as u64 - 1,
+        "re-detection must fire exactly when the patience is exhausted"
+    );
+    assert!(
+        swaps.iter().any(|e| e.method_swapped),
+        "at least one Quaff layer must have its targeted channels re-pointed"
+    );
+    for e in &swaps {
+        assert!(e.hit_rate < 0.45, "swap recorded above the drift budget");
+        assert!(!e.new_channels.is_empty(), "re-detection produced no channels");
+    }
+    // Every swap was preceded by exactly `patience` consecutive
+    // below-budget checks on its layer.
+    for e in &swaps {
+        let layer = report.layers.iter().find(|l| l.layer == e.layer).unwrap();
+        for k in 0..PATIENCE as u64 {
+            let step = e.step - (PATIENCE as u64 - 1) + k;
+            assert!(
+                layer
+                    .drift_events
+                    .iter()
+                    .any(|d| d.step == step && d.consecutive == k as u32 + 1),
+                "missing consecutive drift record {k} before swap at step {}",
+                e.step
+            );
+        }
+    }
+    assert_eq!(report.summary.swaps, swaps.len());
+    assert!(report.summary.drift_events >= swaps.len() * PATIENCE as usize);
+}
+
+#[test]
+fn ossh_stability_suite() {
+    // An 8-wide pool regardless of QUAFF_THREADS so the 4-wide legs
+    // genuinely shard even on the serial CI leg.
+    pool::init(pool::ThreadConfig { threads: 8 });
+    let dir = tmp_dir("suite");
+    for method in MethodKind::ALL {
+        check_transparent_and_width_stable(method);
+        check_resume_continues_report(method, &dir);
+    }
+    check_drift_triggers_redetection();
+    let _ = fs::remove_dir_all(&dir);
+    pool::set_active_threads(pool::global().threads());
+}
+
+// ------------------------------------------------------------------
+// Budget-boundary semantics on crafted statistics (exact by construction)
+// ------------------------------------------------------------------
+
+/// Stats whose top channels are exactly `hot`: one observation with the
+/// hot channels at 100x the baseline, so the detector's vote threshold
+/// (tau * median) admits precisely those.
+fn planted_stats(cin: usize, hot: &[usize]) -> ChannelStats {
+    let mut vals = vec![1.0f32; cin];
+    for &c in hot {
+        vals[c] = 100.0;
+    }
+    let mut stats = ChannelStats::new(cin);
+    stats.observe(&Matrix::from_vec(1, cin, vals), 30.0);
+    stats
+}
+
+#[test]
+fn drift_budget_boundary_is_strict_with_consecutive_patience() {
+    // 32 channels, realtime cap = max(32/8, 4) = 4, reference {0,1,2,3}.
+    let mut registry = OutlierRegistry::new();
+    registry.insert("layer", OutlierSet::new(vec![0, 1, 2, 3]));
+    let cfg = OsshConfig {
+        check_every: 1,
+        drift_budget: 0.5,
+        patience: 3,
+        redetect: true,
+        realtime_cap_div: 8,
+        realtime_cap_min: 4,
+    };
+    let mut h = OsshHarness::new(cfg, 30.0, &registry);
+    let good = planted_stats(32, &[0, 1, 2, 3]); // rate 4/4 = 1.0
+    let bad = planted_stats(32, &[16, 17, 18, 19]); // rate 0/4 = 0.0
+    let boundary = planted_stats(32, &[0, 1, 16, 17]); // rate 2/4 = 0.5 exactly
+
+    // Two below-budget checks: patience 3 not yet exhausted.
+    assert!(h.observe("layer", &bad, 0).is_none());
+    assert!(h.observe("layer", &bad, 1).is_none());
+    assert_eq!(h.drift_events().len(), 2);
+    assert_eq!(h.drift_events()[1].consecutive, 2);
+
+    // Exactly on the budget: strictly-below means this is NOT a drift
+    // check, and it resets the consecutive counter.
+    assert!(h.observe("layer", &boundary, 2).is_none());
+    assert_eq!(
+        h.drift_events().len(),
+        2,
+        "a check exactly on the budget must not count as drift"
+    );
+
+    // The streak restarts: two more misses still do not fire...
+    assert!(h.observe("layer", &bad, 3).is_none());
+    assert!(h.observe("layer", &bad, 4).is_none());
+    assert!(h.swap_events().is_empty());
+    // ...and the third consecutive miss fires exactly at the boundary.
+    let new_set = h.observe("layer", &bad, 5).expect("patience exhausted");
+    assert_eq!(new_set.channels, vec![16, 17, 18, 19]);
+    let swaps = h.swap_events();
+    assert_eq!(swaps.len(), 1);
+    assert_eq!(swaps[0].step, 5);
+    assert_eq!(swaps[0].old_channels, vec![0, 1, 2, 3]);
+    assert_eq!(swaps[0].new_channels, vec![16, 17, 18, 19]);
+    assert!(!swaps[0].method_swapped, "observe() alone never touches methods");
+    assert_eq!(h.drift_events().last().unwrap().consecutive, 3);
+
+    // After the hot-swap the same activations are a perfect hit again.
+    assert!(h.observe("layer", &bad, 6).is_none());
+    assert_eq!(h.drift_events().len(), 5, "post-swap check must not drift");
+
+    // A recovery against the original reference also resets cleanly on a
+    // fresh harness: below-budget, recovery, below-budget never fires
+    // with patience 2 worth of misses interleaved.
+    let mut registry2 = OutlierRegistry::new();
+    registry2.insert("layer", OutlierSet::new(vec![0, 1, 2, 3]));
+    let mut h2 = OsshHarness::new(
+        OsshConfig {
+            patience: 2,
+            redetect: true,
+            ..OsshConfig::default()
+        },
+        30.0,
+        &registry2,
+    );
+    assert!(h2.observe("layer", &bad, 0).is_none());
+    assert!(h2.observe("layer", &good, 1).is_none());
+    assert!(h2.observe("layer", &bad, 2).is_none());
+    assert!(h2.swap_events().is_empty(), "recovery must reset the streak");
+    assert!(h2.observe("layer", &bad, 3).is_some());
+}
+
+#[test]
+fn observe_ignores_unknown_layers() {
+    let mut h = OsshHarness::new(OsshConfig::default(), 30.0, &OutlierRegistry::new());
+    let stats = planted_stats(16, &[3]);
+    assert!(h.observe("nope", &stats, 0).is_none());
+    assert!(h.drift_events().is_empty());
+    assert_eq!(h.report(MethodKind::Quaff, "opt-tiny", 0).layers.len(), 0);
+    assert_eq!(h.report(MethodKind::Quaff, "opt-tiny", 0).summary.mean_hit, 1.0);
+}

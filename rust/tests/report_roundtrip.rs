@@ -1,0 +1,293 @@
+//! Round-trip and corruption coverage for the OSSH report artifact
+//! (`OSSH_report.json`) and the persisted telemetry state
+//! ([`OsshHarness::save_state`]): serialize → parse → re-render must be
+//! byte-exact — including non-finite floats — while corrupt, truncated,
+//! mis-versioned, and wrong-kind inputs fail with readable errors instead
+//! of panicking.
+
+use quaff::methods::MethodKind;
+use quaff::outlier::{ChannelStats, OutlierRegistry, OutlierSet};
+use quaff::persist;
+use quaff::report::ossh::{
+    DriftEvent, LayerReport, OsshConfig, OsshHarness, OsshReport, OsshSummary, SwapEvent,
+    OSSH_REPORT_VERSION,
+};
+use quaff::tensor::Matrix;
+use quaff::util::prng::Rng;
+use std::fs;
+use std::path::PathBuf;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("quaff_ossh_rt_{tag}_{}", std::process::id()));
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// A hand-built report exercising every field, with non-finite values in
+/// every float slot that can hold one.
+fn sample_report() -> OsshReport {
+    OsshReport {
+        version: OSSH_REPORT_VERSION,
+        method: "Quaff".to_string(),
+        preset: "opt-tiny".to_string(),
+        steps: 6,
+        checks: 6,
+        drift_budget: 0.5,
+        patience: 2,
+        layers: vec![
+            LayerReport {
+                layer: "blocks.0.attn.q_proj".to_string(),
+                kind: "q_proj".to_string(),
+                reference0: vec![3, 17, 40],
+                reference: vec![3, 17, 41],
+                hit_series: vec![1.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY, 0.25],
+                jaccard_series: vec![1.0, 0.5, f64::NAN],
+                similarity_series: vec![0.75, f32::NAN, f32::INFINITY],
+                mean_hit: f64::NAN,
+                std_hit: f64::INFINITY,
+                drift_events: vec![DriftEvent {
+                    step: 2,
+                    layer: "blocks.0.attn.q_proj".to_string(),
+                    hit_rate: 0.25,
+                    consecutive: 1,
+                }],
+                swap_events: vec![SwapEvent {
+                    step: 3,
+                    layer: "blocks.0.attn.q_proj".to_string(),
+                    hit_rate: 0.0,
+                    old_channels: vec![3, 17, 40],
+                    new_channels: vec![5, 9],
+                    method_swapped: true,
+                }],
+            },
+            LayerReport {
+                layer: "blocks.0.mlp.down_proj".to_string(),
+                kind: "down_proj".to_string(),
+                reference0: Vec::new(),
+                reference: Vec::new(),
+                hit_series: Vec::new(),
+                jaccard_series: Vec::new(),
+                similarity_series: Vec::new(),
+                mean_hit: 0.0,
+                std_hit: 0.0,
+                drift_events: Vec::new(),
+                swap_events: Vec::new(),
+            },
+        ],
+        summary: OsshSummary {
+            mean_hit: 0.875,
+            min_hit: f64::NEG_INFINITY,
+            drift_events: 1,
+            swaps: 1,
+            per_kind: vec![("down_proj".to_string(), 1.0), ("q_proj".to_string(), 0.75)],
+        },
+    }
+}
+
+#[test]
+fn report_json_roundtrip_is_byte_exact_including_non_finite() {
+    let report = sample_report();
+    let bytes = report.to_bytes();
+    let text = String::from_utf8(bytes.clone()).unwrap();
+    let parsed = OsshReport::from_json(&text).expect("parse own rendering");
+    assert_eq!(
+        parsed.to_bytes(),
+        bytes,
+        "parse → re-render must reproduce the artifact byte-for-byte"
+    );
+    // The non-finite markers decode to actual non-finite floats.
+    let l = &parsed.layers[0];
+    assert!(l.hit_series[1].is_nan());
+    assert_eq!(l.hit_series[2], f64::INFINITY);
+    assert_eq!(l.hit_series[3], f64::NEG_INFINITY);
+    assert!(l.similarity_series[1].is_nan());
+    assert!(l.mean_hit.is_nan());
+    assert_eq!(parsed.summary.min_hit, f64::NEG_INFINITY);
+    assert!(l.swap_events[0].method_swapped);
+    assert_eq!(l.swap_events[0].layer, l.layer, "layer back-filled on parse");
+}
+
+#[test]
+fn report_file_roundtrip_and_corruption() {
+    let dir = tmp_dir("file");
+    let path = dir.join("OSSH_report.json");
+    let report = sample_report();
+    quaff::report::ossh::write_report(&path, &report).expect("write");
+    let back = quaff::report::ossh::read_report(&path).expect("read");
+    assert_eq!(back.to_bytes(), report.to_bytes());
+
+    fs::write(&path, b"not json{{{").unwrap();
+    let err = quaff::report::ossh::read_report(&path).unwrap_err().to_string();
+    assert!(err.contains("not valid JSON"), "unreadable error: {err}");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn report_version_mismatch_is_a_readable_error() {
+    let mut report = sample_report();
+    report.version = 99;
+    let text = String::from_utf8(report.to_bytes()).unwrap();
+    let err = OsshReport::from_json(&text).unwrap_err().to_string();
+    assert!(
+        err.contains("unsupported OSSH report version 99"),
+        "unreadable version error: {err}"
+    );
+}
+
+#[test]
+fn report_missing_fields_are_readable_errors() {
+    let err = OsshReport::from_json("{\"version\": 1}").unwrap_err().to_string();
+    assert!(err.contains("is missing"), "unreadable error: {err}");
+    let err = OsshReport::from_json("[1, 2]").unwrap_err().to_string();
+    assert!(err.contains("is missing"), "unreadable error: {err}");
+}
+
+#[test]
+fn truncated_report_never_parses_and_never_panics() {
+    let bytes = sample_report().to_bytes();
+    let text = String::from_utf8(bytes).unwrap();
+    // Any strict prefix of a JSON object is unbalanced: every cut must be
+    // rejected with an error, not a panic. (Cuts land mid-token, mid-string,
+    // and mid-number as the prefix grows.)
+    let mut rng = Rng::new(0xC07);
+    let mut cuts: Vec<usize> = (0..64).map(|_| 1 + rng.below(text.len() - 2)).collect();
+    cuts.extend([1, 2, text.len() / 2, text.len() - 2]);
+    for cut in cuts {
+        let prefix: String = text.chars().take(cut).collect();
+        assert!(
+            OsshReport::from_json(&prefix).is_err(),
+            "truncation at {cut} chars parsed successfully"
+        );
+    }
+}
+
+// ------------------------------------------------------- telemetry state
+
+fn planted_stats(cin: usize, hot: &[usize]) -> ChannelStats {
+    let mut vals = vec![1.0f32; cin];
+    for &c in hot {
+        vals[c] = 100.0;
+    }
+    let mut stats = ChannelStats::new(cin);
+    stats.observe(&Matrix::from_vec(1, cin, vals), 30.0);
+    stats
+}
+
+/// A harness with real accumulated telemetry: series on two layers, drift
+/// events, and one executed hot-swap.
+fn populated_harness(cfg: &OsshConfig) -> OsshHarness {
+    let mut registry = OutlierRegistry::new();
+    registry.insert("a", OutlierSet::new(vec![0, 1, 2, 3]));
+    registry.insert("b", OutlierSet::new(vec![4, 5]));
+    let mut h = OsshHarness::new(cfg.clone(), 30.0, &registry);
+    let good = planted_stats(32, &[0, 1, 2, 3]);
+    let bad = planted_stats(32, &[16, 17, 18, 19]);
+    assert!(h.observe("a", &good, 0).is_none());
+    assert!(h.observe("b", &good, 0).is_none());
+    assert!(h.observe("a", &bad, 1).is_none());
+    assert!(h.observe("a", &bad, 2).is_some(), "patience 2 must swap");
+    h
+}
+
+fn state_cfg() -> OsshConfig {
+    OsshConfig {
+        patience: 2,
+        redetect: true,
+        ..OsshConfig::default()
+    }
+}
+
+#[test]
+fn harness_state_roundtrip_is_byte_exact() {
+    let dir = tmp_dir("state");
+    let cfg = state_cfg();
+    let h = populated_harness(&cfg);
+    let p1 = dir.join("telemetry.ossh");
+    let p2 = dir.join("telemetry2.ossh");
+    h.save_state(&p1).expect("save");
+    let back = OsshHarness::load_state(&p1, &cfg, 30.0).expect("load");
+    back.save_state(&p2).expect("re-save");
+    assert_eq!(
+        fs::read(&p1).unwrap(),
+        fs::read(&p2).unwrap(),
+        "load → save must reproduce the state archive byte-for-byte"
+    );
+    // The restored harness carries the full history, not just the config.
+    assert_eq!(back.checks(), h.checks());
+    assert_eq!(back.swap_events(), h.swap_events());
+    assert_eq!(back.drift_events(), h.drift_events());
+    let (ra, rb) = (
+        back.report(MethodKind::Quaff, "opt-tiny", 3),
+        h.report(MethodKind::Quaff, "opt-tiny", 3),
+    );
+    assert_eq!(ra.to_bytes(), rb.to_bytes());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn harness_state_rejects_mismatched_config_and_detector() {
+    let dir = tmp_dir("cfg");
+    let cfg = state_cfg();
+    let h = populated_harness(&cfg);
+    let path = dir.join("telemetry.ossh");
+    h.save_state(&path).expect("save");
+
+    let mut other = cfg.clone();
+    other.drift_budget = 0.9;
+    let err = match OsshHarness::load_state(&path, &other, 30.0) {
+        Ok(_) => panic!("mismatched budget must be refused"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("different config"), "unreadable error: {err}");
+    let err = match OsshHarness::load_state(&path, &cfg, 25.0) {
+        Ok(_) => panic!("mismatched detector tau must be refused"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("different config"), "unreadable error: {err}");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn harness_state_rejects_corruption_and_wrong_kind() {
+    let dir = tmp_dir("corrupt");
+    let cfg = state_cfg();
+    let h = populated_harness(&cfg);
+    let path = dir.join("telemetry.ossh");
+    h.save_state(&path).expect("save");
+    let pristine = fs::read(&path).unwrap();
+
+    // Single-byte corruption anywhere must be caught (CRC / structure),
+    // never interpreted.
+    let mut rng = Rng::new(0xBADC);
+    for _ in 0..16 {
+        let mut bytes = pristine.clone();
+        let at = rng.below(bytes.len());
+        bytes[at] ^= 0x41;
+        fs::write(&path, &bytes).unwrap();
+        assert!(
+            OsshHarness::load_state(&path, &cfg, 30.0).is_err(),
+            "flipped byte {at} loaded successfully"
+        );
+    }
+    // Truncation likewise.
+    for cut in [0, 1, pristine.len() / 2, pristine.len() - 1] {
+        fs::write(&path, &pristine[..cut]).unwrap();
+        assert!(
+            OsshHarness::load_state(&path, &cfg, 30.0).is_err(),
+            "truncation to {cut} bytes loaded successfully"
+        );
+    }
+
+    // An archive of a different kind is refused by name.
+    let other = dir.join("other.bin");
+    persist::save_artifact(&other, "not-telemetry", |_w| {}).expect("save");
+    let err = match OsshHarness::load_state(&other, &cfg, 30.0) {
+        Ok(_) => panic!("wrong-kind archive must be refused"),
+        Err(e) => e.to_string(),
+    };
+    assert!(
+        err.contains("expected a 'ossh-telemetry'"),
+        "unreadable kind error: {err}"
+    );
+    let _ = fs::remove_dir_all(&dir);
+}

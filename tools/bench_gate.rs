@@ -4,7 +4,8 @@
 //! `bench_kernels`, `BENCH_threads.json` from `bench_threads`,
 //! `BENCH_infer.json` from `bench_infer`, `BENCH_qgemm.json` from
 //! `bench_qgemm`, `BENCH_serve.json` from `bench_serve`,
-//! `BENCH_tenants.json` from `bench_tenants`) against the
+//! `BENCH_tenants.json` from `bench_tenants`, `BENCH_ossh.json` from
+//! `bench_ossh`) against the
 //! committed `BENCH_baseline.json` and fails (exit 1) when any mean
 //! regresses beyond the tolerance, or when a baselined kernel disappeared
 //! from the fresh records. Always writes `BENCH_gate_diff.json` so CI can
@@ -254,6 +255,7 @@ fn parse_args() -> Result<Args, String> {
             "BENCH_qgemm.json".to_string(),
             "BENCH_serve.json".to_string(),
             "BENCH_tenants.json".to_string(),
+            "BENCH_ossh.json".to_string(),
         ],
         tol: None,
         diff: "BENCH_gate_diff.json".to_string(),
