@@ -1,0 +1,195 @@
+//! Self-speculative decoding benchmark: replay one seeded greedy
+//! workload through a plain `BatchEngine` and through speculative
+//! engines at every (draft depth × draft length) geometry, and report
+//! ns/token plus the draft/accept counters behind each speedup.
+//!
+//! Correctness is part of the measurement: speculative greedy decoding
+//! claims to be **bitwise identical** to plain greedy decoding, so every
+//! speculative leg's completions are compared token-for-token against the
+//! plain leg's. Any divergence aborts the run with a non-zero exit code
+//! before a record is written — a wrong-but-fast number can never enter
+//! the perf baseline. The schedule is deterministic, so spec_rounds /
+//! drafted / accepted / pages_hwm are exact leg invariants and only the
+//! wall-clock numbers vary by machine. Emits `BENCH_spec.json` (ns/token
+//! as the gate-comparable `ns_per_op`) at the workspace root for
+//! `tools/bench_gate`.
+//!
+//!     cargo bench --bench bench_spec
+//!
+//! `QUAFF_SPEC_CLIENTS` overrides the request count (default 48; CI
+//! replays fewer to keep the gate leg fast).
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{write_spec_json, BenchMeta, SpecRecord};
+use quaff::infer::{BatchEngine, Completion, GenerateConfig, Request, SpecConfig};
+use quaff::methods::{MethodConfig, MethodKind};
+use quaff::model::{Model, ModelConfig};
+use quaff::outlier::{BudgetAllocator, BudgetPolicy, OutlierDetector};
+use quaff::tensor::pool;
+use quaff::util::prng::Rng;
+use std::time::Instant;
+
+const SLOTS: usize = 4;
+const WORKLOAD_SEED: u64 = 0x5BEC;
+/// Draft lengths swept (tokens proposed per verify).
+const DRAFT_LENS: [usize; 3] = [2, 4, 8];
+
+/// Calibrate + quantize a llama-tiny model under Quaff — the deepest
+/// cheap preset (6 blocks), so quarter-depth and half-depth drafting are
+/// genuinely distinct geometries.
+fn build_model() -> Model {
+    let cfg = ModelConfig::preset("llama-tiny").expect("preset");
+    let mut m = Model::new(cfg, 0xD4AF);
+    let mut r = Rng::new(0x5CA1B);
+    m.start_calibration();
+    for _ in 0..2 {
+        let toks: Vec<Vec<u32>> = (0..2)
+            .map(|_| (0..32).map(|_| r.below(m.cfg.vocab) as u32).collect())
+            .collect();
+        let _ = m.forward(&toks, false);
+    }
+    let calib = m.finish_calibration();
+    let alloc = BudgetAllocator::new(BudgetPolicy::PaperNonUniform);
+    let det = OutlierDetector::new(20.0);
+    let _ = m.apply_method(
+        MethodKind::Quaff,
+        &calib,
+        &alloc,
+        &MethodConfig::default(),
+        &det,
+    );
+    m
+}
+
+/// Seeded decode-heavy workload: `n` requests with short mixed prompts
+/// (4..16) and long generations (24..56) — the regime speculative
+/// decoding targets. Every leg replays this exact list.
+fn workload(n: usize, vocab: usize) -> Vec<Request> {
+    let mut rng = Rng::new(WORKLOAD_SEED);
+    (0..n)
+        .map(|i| {
+            let plen = 4 + rng.below(12);
+            Request {
+                id: i as u64,
+                prompt: (0..plen).map(|_| rng.below(vocab) as u32).collect(),
+                max_new: 24 + rng.below(32),
+                tenant: None,
+            }
+        })
+        .collect()
+}
+
+/// Drive one engine over the workload and measure it end to end.
+fn run_leg(
+    name: &str,
+    model: &Model,
+    mut eng: BatchEngine,
+    reqs: &[Request],
+) -> (Vec<Completion>, SpecRecord) {
+    let t0 = Instant::now();
+    let done = eng.run_requests(model, reqs);
+    let wall = t0.elapsed().as_secs_f64();
+    let generated: u64 = done.iter().map(|c| c.tokens.len() as u64).sum();
+    let stats = eng.stats;
+    let rec = SpecRecord {
+        name: name.to_string(),
+        requests: reqs.len(),
+        ns_per_token: wall * 1e9 / generated.max(1) as f64,
+        tokens_per_sec: generated as f64 / wall.max(1e-9),
+        spec_rounds: stats.spec_rounds,
+        drafted: stats.spec_drafted,
+        accepted: stats.spec_accepted,
+        acceptance: stats.acceptance_rate(),
+        pages_hwm: eng.pages_hwm(),
+    };
+    println!(
+        "{:<14} {:>10.1} µs/tok  {:>8.0} tok/s  rounds {:>5}  drafted {:>5}  \
+         accepted {:>5}  accept {:>5.1}%  pages_hwm {:>3}",
+        rec.name,
+        rec.ns_per_token / 1e3,
+        rec.tokens_per_sec,
+        rec.spec_rounds,
+        rec.drafted,
+        rec.accepted,
+        rec.acceptance * 100.0,
+        rec.pages_hwm,
+    );
+    (done, rec)
+}
+
+/// Token-for-token comparison of a speculative leg against the plain
+/// leg. Returns the number of diverging requests (0 = bitwise clean).
+fn divergences(name: &str, plain: &[Completion], spec: &[Completion]) -> usize {
+    assert_eq!(plain.len(), spec.len(), "legs replay the same workload");
+    let mut bad = 0usize;
+    for (p, s) in plain.iter().zip(spec) {
+        if p.tokens != s.tokens || p.reason != s.reason {
+            eprintln!(
+                "DIVERGENCE [{name}] request {}: plain {:?} ({:?}) vs spec {:?} ({:?})",
+                p.id, p.tokens, p.reason, s.tokens, s.reason
+            );
+            bad += 1;
+        }
+    }
+    bad
+}
+
+fn main() {
+    let clients: usize = std::env::var("QUAFF_SPEC_CLIENTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(48);
+    println!(
+        "== bench_spec: llama-tiny under Quaff, {} requests, {} threads ==\n",
+        clients,
+        pool::active_threads()
+    );
+    let m = build_model();
+    let work = workload(clients, m.cfg.vocab);
+    let gen = GenerateConfig::greedy(64);
+    let n = m.cfg.n_layers;
+    // quarter-depth and half-depth drafts, per the paper's early-exit
+    // framing; max(1, ..) keeps shallow presets legal
+    let depths = [(n / 4).max(1), (n / 2).max(1)];
+
+    let (plain, rec_plain) = run_leg("plain", &m, BatchEngine::new(&m, SLOTS, gen.clone()), &work);
+    assert_eq!(rec_plain.spec_rounds, 0, "plain leg must not speculate");
+
+    let mut records = vec![rec_plain];
+    let mut bad = 0usize;
+    for d in depths {
+        for k in DRAFT_LENS {
+            let spec = SpecConfig {
+                draft_layers: d,
+                draft_len: k,
+            };
+            let name = format!("spec d{d} k{k}");
+            let eng = BatchEngine::with_spec(&m, SLOTS, gen.clone(), spec);
+            let (done, rec) = run_leg(&name, &m, eng, &work);
+            assert!(rec.spec_rounds > 0, "{name}: engine never speculated");
+            bad += divergences(&name, &plain, &done);
+            records.push(rec);
+        }
+    }
+
+    if bad > 0 {
+        eprintln!("\n{bad} request(s) diverged from plain greedy — refusing to write records");
+        std::process::exit(1);
+    }
+
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_spec.json");
+    match write_spec_json(&out, "llama-tiny", &BenchMeta::current(), &records) {
+        Ok(()) => {
+            println!(
+                "\nall legs bitwise-identical to plain greedy; wrote {}",
+                out.display()
+            );
+        }
+        Err(e) => {
+            eprintln!("could not write BENCH_spec.json: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -468,6 +468,72 @@ pub fn write_tenants_json(
     std::fs::write(path, json)
 }
 
+/// One self-speculative decoding leg measured end to end by `bench_spec`:
+/// ns/token for a fixed seeded workload plus the draft/accept counters
+/// behind the speedup (or lack of one) at that geometry.
+#[allow(dead_code)]
+pub struct SpecRecord {
+    /// Leg, e.g. `"plain"` or `"spec d3 k4"` (draft depth / draft length).
+    pub name: String,
+    /// Requests replayed (identical workload across every leg).
+    pub requests: usize,
+    /// Mean ns per generated token (the gate-standard `ns_per_op`).
+    pub ns_per_token: f64,
+    /// Generated tokens per wall-clock second.
+    pub tokens_per_sec: f64,
+    /// Draft/verify rounds taken (0 for the plain leg; deterministic).
+    pub spec_rounds: u64,
+    /// Draft tokens proposed across all rounds (deterministic).
+    pub drafted: u64,
+    /// Draft tokens accepted by full-model verify (deterministic).
+    pub accepted: u64,
+    /// `accepted / drafted` (0.0 before anything was drafted).
+    pub acceptance: f64,
+    /// Page-pool high-water mark (pages; deterministic per leg).
+    pub pages_hwm: usize,
+}
+
+/// Emit `BENCH_spec.json`: ns/token for the plain-greedy leg and every
+/// speculative (draft depth × draft length) leg of the same workload —
+/// each a gate-comparable `ns_per_op` entry — plus the deterministic
+/// draft/accept counters as ungated context. The records only exist if
+/// every speculative leg matched the plain stream bitwise: `bench_spec`
+/// exits non-zero on divergence before writing anything.
+#[allow(dead_code)]
+pub fn write_spec_json(
+    path: &std::path::Path,
+    preset: &str,
+    meta: &BenchMeta,
+    records: &[SpecRecord],
+) -> std::io::Result<()> {
+    let kernels: Vec<String> = records
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"name\": \"{}\", \"requests\": {}, \"ns_per_op\": {:.1}, \
+                 \"tokens_per_sec\": {:.1}, \"spec_rounds\": {}, \"drafted\": {}, \
+                 \"accepted\": {}, \"acceptance\": {:.4}, \"pages_hwm\": {}}}",
+                r.name,
+                r.requests,
+                r.ns_per_token,
+                r.tokens_per_sec,
+                r.spec_rounds,
+                r.drafted,
+                r.accepted,
+                r.acceptance,
+                r.pages_hwm,
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"spec\",\n  \"preset\": \"{preset}\",\n  \"meta\": {},\n  \
+         \"kernels\": [\n{}\n  ]\n}}\n",
+        meta.to_json(),
+        kernels.join(",\n")
+    );
+    std::fs::write(path, json)
+}
+
 /// Emit `BENCH_ossh.json`: ns per training step with the OSSH telemetry
 /// harness off vs on (each a gate-comparable `ns_per_op` entry) plus the
 /// measured overhead ratio — the record behind the "telemetry costs ≤5 %"

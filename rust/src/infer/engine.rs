@@ -29,11 +29,22 @@
 //! identical whether it runs alone or batched with arbitrary neighbours,
 //! at any thread count, page size or arrival order; each request samples
 //! from its own RNG stream seeded by `cfg.seed ^ request.id`.
+//!
+//! **Speculative decoding** ([`super::spec`]): an engine built with a
+//! [`SpecConfig`] replaces each greedy, tenant-free decode round with a
+//! draft/verify round — `draft_len` truncated-layer passes propose
+//! tokens into per-slot draft pages, ONE stacked full pass verifies them
+//! all, and the longest matching prefix is accepted
+//! ([`KvCache::truncate_to`] rolls the rest back). Token streams are
+//! **bit-identical** to plain greedy decode; only the number of full
+//! passes per token changes. Sampled configs and tenant-mixed batches
+//! fall back to the plain path automatically.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
+use super::spec::{accepted_prefix, SpecConfig};
 use super::tenant::AdapterRegistry;
-use super::{sample_token, GenerateConfig, KvCache};
+use super::{argmax, sample_token, GenerateConfig, KvCache};
 use crate::model::Model;
 use crate::peft::TenantAdapters;
 use crate::tensor::Workspace;
@@ -72,6 +83,9 @@ pub enum FinishReason {
     Cancelled,
     /// The serving front-end expired the request's deadline.
     Deadline,
+    /// Refused at admission: the request's tenant is already at its
+    /// `max_inflight` quota ([`BatchEngine::set_quota`]).
+    Quota,
 }
 
 /// A finished request.
@@ -101,6 +115,14 @@ pub struct EngineStats {
     pub preemptions: u64,
     /// Parked requests readmitted (re-prefilled).
     pub resumes: u64,
+    /// Speculative draft/verify rounds executed.
+    pub spec_rounds: u64,
+    /// Draft tokens proposed across all spec rounds.
+    pub spec_drafted: u64,
+    /// Draft tokens accepted by full-model verification. Every accepted
+    /// draft is one extra token emitted per full pass, so emitted tokens
+    /// per spec round = accepted + 1 (the pending/bonus token).
+    pub spec_accepted: u64,
 }
 
 impl EngineStats {
@@ -110,6 +132,16 @@ impl EngineStats {
             0.0
         } else {
             self.decode_tokens as f64 / self.decode_steps as f64
+        }
+    }
+
+    /// Fraction of drafted tokens the full model accepted (0.0 before
+    /// any spec round).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.spec_drafted == 0 {
+            0.0
+        } else {
+            self.spec_accepted as f64 / self.spec_drafted as f64
         }
     }
 }
@@ -210,6 +242,10 @@ pub struct BatchEngine {
     parked: VecDeque<Parked>,
     free_slots: Vec<usize>,
     next_seq: u64,
+    /// Speculative-decode geometry; `None` = plain decode only.
+    spec: Option<SpecConfig>,
+    /// Per-tenant `max_inflight` admission quotas (absent = unlimited).
+    quotas: BTreeMap<u64, usize>,
     /// Lifetime throughput counters.
     pub stats: EngineStats,
 }
@@ -224,7 +260,7 @@ impl BatchEngine {
     pub fn new(model: &Model, slots: usize, cfg: GenerateConfig) -> BatchEngine {
         let mut ws = Workspace::new();
         let kv = KvCache::for_model(model, slots, &mut ws);
-        BatchEngine::from_parts(model, kv, ws, cfg)
+        BatchEngine::from_parts(model, kv, ws, cfg, None)
     }
 
     /// An engine over an explicitly paged cache: `n_pages` shared pages
@@ -240,7 +276,51 @@ impl BatchEngine {
     ) -> BatchEngine {
         let mut ws = Workspace::new();
         let kv = KvCache::for_model_paged(model, page_rows, n_pages, slots, &mut ws);
-        BatchEngine::from_parts(model, kv, ws, cfg)
+        BatchEngine::from_parts(model, kv, ws, cfg, None)
+    }
+
+    /// [`BatchEngine::new`] with self-speculative decoding enabled:
+    /// greedy, tenant-free rounds draft `spec.draft_len` tokens through
+    /// the first `spec.draft_layers` blocks and verify them in one
+    /// stacked full pass — token streams stay bit-identical to plain
+    /// greedy decode (`tests/spec_parity.rs`).
+    pub fn with_spec(
+        model: &Model,
+        slots: usize,
+        cfg: GenerateConfig,
+        spec: SpecConfig,
+    ) -> BatchEngine {
+        let mut ws = Workspace::new();
+        // contiguous equivalent plus one spare page per slot: pages are
+        // max_seq rows, so one spare covers any draft_len — without it a
+        // fully occupied engine has zero free pages and every round would
+        // silently shrink to k = 0 (correct, but never speculative)
+        let c = &model.cfg;
+        let kv = KvCache::paged(
+            c.n_layers,
+            c.d_model,
+            c.max_seq,
+            c.max_seq,
+            2 * slots,
+            slots,
+            &mut ws,
+        );
+        BatchEngine::from_parts(model, kv, ws, cfg, Some(spec))
+    }
+
+    /// [`BatchEngine::with_paging`] with self-speculative decoding
+    /// enabled (see [`BatchEngine::with_spec`]).
+    pub fn with_paging_spec(
+        model: &Model,
+        slots: usize,
+        page_rows: usize,
+        n_pages: usize,
+        cfg: GenerateConfig,
+        spec: SpecConfig,
+    ) -> BatchEngine {
+        let mut ws = Workspace::new();
+        let kv = KvCache::for_model_paged(model, page_rows, n_pages, slots, &mut ws);
+        BatchEngine::from_parts(model, kv, ws, cfg, Some(spec))
     }
 
     fn from_parts(
@@ -248,9 +328,18 @@ impl BatchEngine {
         kv: KvCache,
         mut ws: Workspace,
         cfg: GenerateConfig,
+        spec: Option<SpecConfig>,
     ) -> BatchEngine {
         let slots = kv.slots();
-        model.warm_plans(slots.max(1), &mut ws);
+        if let Some(s) = spec {
+            s.validate(model.cfg.n_layers);
+        }
+        // the verify pass stacks up to draft_len + 1 rows per slot, so a
+        // spec engine warms its plans for that batch shape up front (the
+        // workspace is grow-only either way; this keeps the steady state
+        // zero-alloc from the first round)
+        let warm_rows = slots.max(1) * spec.map_or(1, |s| s.draft_len + 1);
+        model.warm_plans(warm_rows, &mut ws);
         BatchEngine {
             cfg,
             kv,
@@ -260,8 +349,39 @@ impl BatchEngine {
             parked: VecDeque::new(),
             free_slots: (0..slots).rev().collect(),
             next_seq: 0,
+            spec,
+            quotas: BTreeMap::new(),
             stats: EngineStats::default(),
         }
+    }
+
+    /// The engine's speculative-decode geometry, if enabled.
+    pub fn spec(&self) -> Option<SpecConfig> {
+        self.spec
+    }
+
+    /// Set (or clear, with `None`) tenant `tenant`'s admission quota:
+    /// while the tenant has `max_inflight` requests in flight (active or
+    /// parked), further admissions are refused with
+    /// [`FinishReason::Quota`]. Quotas never touch requests already in
+    /// flight, so a quota'd-out tenant's co-batched neighbours are
+    /// bitwise unaffected (`tests/tenant_parity.rs`).
+    pub fn set_quota(&mut self, tenant: u64, max_inflight: Option<usize>) {
+        match max_inflight {
+            Some(n) => {
+                self.quotas.insert(tenant, n);
+            }
+            None => {
+                self.quotas.remove(&tenant);
+            }
+        }
+    }
+
+    /// Tenant `tenant`'s requests currently in flight (active + parked).
+    pub fn tenant_inflight(&self, tenant: u64) -> usize {
+        let t = Some(tenant);
+        self.active.iter().filter(|a| a.tenant == t).count()
+            + self.parked.iter().filter(|p| p.tenant == t).count()
     }
 
     /// Number of concurrent decode slots.
@@ -354,6 +474,21 @@ impl BatchEngine {
                 tokens: Vec::new(),
                 reason: FinishReason::Rejected,
             });
+        }
+        // per-tenant quota: a tenant at its max_inflight is *rejected*
+        // (distinct reason, no retry hint) rather than Busy — capacity
+        // exists, the tenant's share of it doesn't
+        if let Some(id) = req.tenant {
+            if let Some(&max) = self.quotas.get(&id) {
+                if self.tenant_inflight(id) >= max {
+                    return Admission::Rejected(Completion {
+                        id: req.id,
+                        prompt_len: req.prompt.len(),
+                        tokens: Vec::new(),
+                        reason: FinishReason::Quota,
+                    });
+                }
+            }
         }
         if !self.parked.is_empty() || self.free_slots.is_empty() || !self.kv.can_admit(rows) {
             return Admission::Busy;
@@ -566,6 +701,15 @@ impl BatchEngine {
                 i += 1;
             }
         }
+        // speculative rounds need greedy sampling (acceptance compares
+        // argmaxes) and a tenant-free batch (the draft pass has no
+        // per-row adapter plumbing yet); anything else decodes plain
+        if let Some(spec) = self.spec {
+            if self.cfg.temperature <= 0.0 && self.registry.is_empty() {
+                self.spec_decode(model, spec, events);
+                return;
+            }
+        }
         // reserve phase: walk oldest-first; on failure, park from the
         // youngest end until this request fits (or park it, if it *is*
         // the youngest survivor)
@@ -604,6 +748,164 @@ impl BatchEngine {
         self.stats.decode_tokens += self.active.len() as u64;
         for (i, a) in self.active.iter_mut().enumerate() {
             a.next = sample_token(logits.row(i), &self.cfg, &mut a.rng);
+        }
+        self.ws.recycle(logits);
+    }
+
+    /// One speculative scheduling round (greedy, tenant-free): draft up
+    /// to `spec.draft_len` tokens per request through the first
+    /// `spec.draft_layers` blocks, verify every pending+draft token in
+    /// ONE stacked full pass, accept the longest draft prefix matching
+    /// the full model's argmaxes and roll the rejected rows back with a
+    /// page-table truncation. Emitted tokens pass the exact
+    /// resolve-equivalent EOS/length checks at the exact equivalent
+    /// cache lengths, so the token streams and completions are
+    /// bit-identical to plain greedy rounds (`tests/spec_parity.rs`).
+    fn spec_decode(&mut self, model: &Model, spec: SpecConfig, events: &mut Vec<StepEvent>) {
+        let max_seq = model.cfg.max_seq;
+        // reserve phase (oldest first): k+1 main rows + k draft rows per
+        // request, shrinking to k = 0 under pool pressure *before* any
+        // neighbour is parked — the k = 0 round needs exactly the plain
+        // path's one row, so the no-deadlock guarantee is unchanged
+        let mut ks: Vec<usize> = Vec::with_capacity(self.active.len());
+        let mut lens: Vec<usize> = Vec::with_capacity(self.active.len());
+        let mut i = 0;
+        while i < self.active.len() {
+            let slot = self.active[i].slot;
+            let len = self.kv.len(slot);
+            // resolve() just ran: toks.len() < max_new and len < max_seq
+            let remaining = self.active[i].max_new - self.active[i].toks.len();
+            let mut k = spec.draft_len.min(remaining).min(max_seq - 1 - len);
+            let mut ok;
+            loop {
+                ok = self.kv.reserve(slot, k + 1);
+                if ok && k > 0 {
+                    self.kv.begin_draft(slot);
+                    if !self.kv.draft_reserve(slot, k) {
+                        self.kv.end_draft(slot);
+                        ok = false;
+                    }
+                }
+                if ok || k == 0 {
+                    break;
+                }
+                // not enough pool for the speculative extras: return the
+                // over-reservation and retry as a plain one-row round
+                self.kv.truncate_to(slot, len);
+                k = 0;
+            }
+            while !ok && self.active.len() > i + 1 {
+                let victim = self.active.pop().expect("len > i+1 >= 1");
+                self.park(victim, events);
+                ok = self.kv.reserve(slot, 1);
+            }
+            if ok {
+                ks.push(k);
+                lens.push(len);
+                i += 1;
+            } else {
+                let victim = self.active.remove(i);
+                self.park(victim, events);
+            }
+        }
+        if self.active.is_empty() {
+            return;
+        }
+        debug_assert_eq!(ks.len(), self.active.len());
+        // draft phase: chains[i] = [pending, d1, d2, …] — each truncated
+        // pass proposes one more token per still-drafting request
+        let max_k = ks.iter().copied().max().unwrap_or(0);
+        let mut chains: Vec<Vec<u32>> = self.active.iter().map(|a| vec![a.next]).collect();
+        for j in 0..max_k {
+            let mut tokens = Vec::new();
+            let mut slots = Vec::new();
+            let mut who = Vec::new();
+            for (i, a) in self.active.iter().enumerate() {
+                if ks[i] > j {
+                    tokens.push(chains[i][j]);
+                    slots.push(a.slot);
+                    who.push(i);
+                }
+            }
+            if tokens.is_empty() {
+                break;
+            }
+            let logits =
+                model.draft_step(&tokens, &slots, spec.draft_layers, &mut self.kv, &mut self.ws);
+            for (r, &i) in who.iter().enumerate() {
+                chains[i].push(argmax(logits.row(r)));
+            }
+            self.ws.recycle(logits);
+        }
+        // draft K/V has served its purpose (draft-position attention);
+        // verify rewrites the accepted positions in the main table from
+        // the full model, so the draft pages go back to the pool here
+        for (i, a) in self.active.iter().enumerate() {
+            if ks[i] > 0 {
+                self.kv.end_draft(a.slot);
+            }
+        }
+        // verify phase: ONE stacked full pass over every request's
+        // pending token + drafts (k+1 rows each, slot-major)
+        let tokens: Vec<u32> = chains.iter().flatten().copied().collect();
+        let slots: Vec<usize> = self.active.iter().map(|a| a.slot).collect();
+        let counts: Vec<usize> = ks.iter().map(|&k| k + 1).collect();
+        let logits =
+            model.verify_step_tenants(&tokens, &slots, &counts, &[], &mut self.kv, &mut self.ws);
+        self.stats.decode_steps += 1;
+        self.stats.decode_tokens += tokens.len() as u64;
+        self.stats.spec_rounds += 1;
+        self.stats.spec_drafted += ks.iter().map(|&k| k as u64).sum::<u64>();
+        // accept phase: verify row j's argmax is the true token after j
+        // accepted drafts; emit the accepted ones now (each through the
+        // same EOS/length checks resolve() would apply, at the cache
+        // length plain decode would have), hold the first non-matching
+        // row's argmax as the next pending token, truncate the rest away
+        let mut ai = 0usize;
+        let mut row0 = 0usize;
+        for (oi, &k) in ks.iter().enumerate() {
+            let len0 = lens[oi];
+            let verified: Vec<u32> = (0..=k).map(|j| argmax(logits.row(row0 + j))).collect();
+            row0 += k + 1;
+            let m = accepted_prefix(&chains[oi][1..], &verified);
+            self.stats.spec_accepted += m as u64;
+            let mut finished: Option<FinishReason> = None;
+            for (j, &tok) in verified[..m].iter().enumerate() {
+                if self.cfg.eos == Some(tok) {
+                    finished = Some(FinishReason::Eos);
+                    break;
+                }
+                let a = &mut self.active[ai];
+                a.toks.push(tok);
+                events.push(StepEvent::Token {
+                    tag: a.tag,
+                    id: a.id,
+                    token: tok,
+                });
+                if a.toks.len() >= a.max_new || len0 + j + 1 >= max_seq {
+                    finished = Some(FinishReason::Length);
+                    break;
+                }
+            }
+            if let Some(reason) = finished {
+                let a = self.active.remove(ai);
+                self.kv.reset_slot(a.slot);
+                self.free_slots.push(a.slot);
+                events.push(StepEvent::Finished {
+                    tag: a.tag,
+                    completion: Completion {
+                        id: a.id,
+                        prompt_len: a.prompt.len(),
+                        tokens: a.toks,
+                        reason,
+                    },
+                });
+            } else {
+                let a = &mut self.active[ai];
+                a.next = verified[m];
+                self.kv.truncate_to(a.slot, len0 + m + 1);
+                ai += 1;
+            }
         }
         self.ws.recycle(logits);
     }

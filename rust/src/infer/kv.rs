@@ -49,6 +49,16 @@ pub struct KvCache {
     tables: Vec<Vec<usize>>,
     /// Cached rows per slot (counting virtual tokens). 0 = slot is free.
     lens: Vec<usize>,
+    /// Per-slot **draft** page table (speculative decoding). Draft rows
+    /// are packed relative to [`KvCache::draft_base`] and drawn from the
+    /// same free pool as main pages, so admission/preemption accounting
+    /// stays exact. Always empty outside a draft round.
+    draft_tables: Vec<Vec<usize>>,
+    /// Draft rows per slot (0 outside a draft round).
+    draft_lens: Vec<usize>,
+    /// Logical position draft row 0 maps to (= `lens[slot]` at
+    /// [`KvCache::begin_draft`] time).
+    draft_bases: Vec<usize>,
     /// Free physical pages (LIFO; seeded in descending order so pages
     /// allocate ascending — deterministic placement for diagnostics).
     free: Vec<usize>,
@@ -106,6 +116,9 @@ impl KvCache {
             slots,
             tables: vec![Vec::new(); slots],
             lens: vec![0; slots],
+            draft_tables: vec![Vec::new(); slots],
+            draft_lens: vec![0; slots],
+            draft_bases: vec![0; slots],
             free: (0..n_pages).rev().collect(),
             hwm: 0,
         }
@@ -220,10 +233,34 @@ impl KvCache {
     /// Mark `slot` empty and return its pages to the free pool — a pure
     /// page-table edit (rows are overwritten by the next user; nothing is
     /// copied or freed). Doubles as the preemption/eviction primitive.
+    /// Draft pages (if a draft round was in flight) are freed too.
     pub fn reset_slot(&mut self, slot: usize) {
         let free = &mut self.free;
         self.tables[slot].drain(..).for_each(|p| free.push(p));
+        self.draft_tables[slot].drain(..).for_each(|p| free.push(p));
         self.lens[slot] = 0;
+        self.draft_lens[slot] = 0;
+        self.draft_bases[slot] = 0;
+    }
+
+    /// Roll `slot` back to exactly `pos` cached rows, returning any pages
+    /// past `ceil(pos / page_rows)` to the free pool — the speculative-
+    /// decode rejection primitive. A pure page-table truncation: surviving
+    /// rows are untouched, so a subsequent decode from position `pos`
+    /// reads bitwise-identical K/V. `pages_hwm` is monotone (truncation
+    /// never lowers it).
+    pub fn truncate_to(&mut self, slot: usize, pos: usize) {
+        assert!(
+            pos <= self.lens[slot],
+            "KvCache truncate_to({pos}) past slot {slot} len {}",
+            self.lens[slot]
+        );
+        let keep = pos.div_ceil(self.page_rows);
+        while self.tables[slot].len() > keep {
+            let p = self.tables[slot].pop().expect("len > keep > 0");
+            self.free.push(p);
+        }
+        self.lens[slot] = pos;
     }
 
     /// Reset every slot.
@@ -231,6 +268,100 @@ impl KvCache {
         for s in 0..self.slots {
             self.reset_slot(s);
         }
+    }
+
+    /// Open a draft round for `slot`: draft row 0 will map to logical
+    /// position `len(slot)`. The previous draft round (if any) must have
+    /// been closed with [`KvCache::end_draft`].
+    pub fn begin_draft(&mut self, slot: usize) {
+        assert!(
+            self.draft_tables[slot].is_empty() && self.draft_lens[slot] == 0,
+            "KvCache slot {slot} already has an open draft round"
+        );
+        self.draft_bases[slot] = self.lens[slot];
+    }
+
+    /// Ensure `slot`'s draft table can hold `n` more draft rows, pulling
+    /// pages from the shared free pool. Returns `false` (partial
+    /// allocation retained) when the pool is exhausted — the caller
+    /// shrinks the draft or falls back to plain decode.
+    pub fn draft_reserve(&mut self, slot: usize, n: usize) -> bool {
+        let need = self.draft_lens[slot] + n;
+        assert!(
+            self.draft_bases[slot] + need <= self.max_seq,
+            "KvCache slot {slot} draft overflow"
+        );
+        while self.draft_tables[slot].len() * self.page_rows < need {
+            match self.free.pop() {
+                Some(p) => self.draft_tables[slot].push(p),
+                None => return false,
+            }
+            self.hwm = self.hwm.max(self.pages_in_use());
+        }
+        true
+    }
+
+    /// Draft rows currently cached for `slot`.
+    pub fn draft_len(&self, slot: usize) -> usize {
+        self.draft_lens[slot]
+    }
+
+    /// Logical position draft row 0 of `slot` maps to.
+    pub fn draft_base(&self, slot: usize) -> usize {
+        self.draft_bases[slot]
+    }
+
+    /// `slot`'s draft page table (physical page ids, rows packed relative
+    /// to [`KvCache::draft_base`]).
+    pub fn draft_table(&self, slot: usize) -> &[usize] {
+        &self.draft_tables[slot]
+    }
+
+    /// Close `slot`'s draft round, returning every draft page to the free
+    /// pool. Draft K/V is always discarded: the verify pass rewrites the
+    /// accepted positions into the main table from the full model.
+    pub fn end_draft(&mut self, slot: usize) {
+        let free = &mut self.free;
+        self.draft_tables[slot].drain(..).for_each(|p| free.push(p));
+        self.draft_lens[slot] = 0;
+    }
+
+    /// Record that `slot` gained `n` draft rows (rows must have been
+    /// [`KvCache::draft_reserve`]d).
+    pub(crate) fn draft_advance(&mut self, slot: usize, n: usize) {
+        let len = self.draft_lens[slot] + n;
+        assert!(
+            len <= self.draft_tables[slot].len() * self.page_rows,
+            "KvCache slot {slot} draft advanced past its reserved pages"
+        );
+        self.draft_lens[slot] = len;
+    }
+
+    /// Write one draft K row and V row for `layer` at absolute logical
+    /// position `pos` (which must be ≥ [`KvCache::draft_base`] and
+    /// covered by the slot's reserved draft pages).
+    pub(crate) fn draft_write_row(
+        &mut self,
+        layer: usize,
+        slot: usize,
+        pos: usize,
+        k: &[f32],
+        v: &[f32],
+    ) {
+        assert!(layer < self.n_layers && slot < self.slots);
+        let rel = pos
+            .checked_sub(self.draft_bases[slot])
+            .expect("draft write below draft_base");
+        assert!(
+            rel < self.draft_tables[slot].len() * self.page_rows,
+            "KvCache draft write at unreserved position {pos} of slot {slot}"
+        );
+        debug_assert_eq!(k.len(), self.d);
+        debug_assert_eq!(v.len(), self.d);
+        let page = self.draft_tables[slot][rel / self.page_rows];
+        let off = (page * self.page_rows + rel % self.page_rows) * self.d;
+        self.lanes[2 * layer][off..off + self.d].copy_from_slice(k);
+        self.lanes[2 * layer + 1][off..off + self.d].copy_from_slice(v);
     }
 
     /// Bytes of K/V storage held (diagnostics / memory accounting).
@@ -394,5 +525,121 @@ mod tests {
     fn undersized_pool_is_rejected() {
         let mut ws = Workspace::new();
         let _ = KvCache::paged(1, 2, 16, 2, 4, 1, &mut ws);
+    }
+
+    #[test]
+    fn truncate_to_zero_frees_everything() {
+        let mut ws = Workspace::new();
+        // 4-row pages, 4 pages, max_seq 16
+        let mut kv = KvCache::paged(1, 2, 16, 4, 4, 2, &mut ws);
+        assert!(kv.reserve(0, 10));
+        kv.advance(0, 10);
+        assert_eq!(kv.pages_in_use(), 3);
+        assert!(!kv.can_admit(8), "only 1 free page = 4 rows");
+        kv.truncate_to(0, 0);
+        assert_eq!(kv.len(0), 0);
+        assert_eq!(kv.pages_in_use(), 0);
+        assert!(kv.can_admit(16), "freed pages must reappear in can_admit");
+        assert_eq!(kv.pages_hwm(), 3, "hwm is monotone through truncation");
+        kv.release(&mut ws);
+    }
+
+    #[test]
+    fn truncate_to_mid_page_keeps_the_partial_page() {
+        let mut ws = Workspace::new();
+        let mut kv = KvCache::paged(1, 2, 16, 4, 4, 1, &mut ws);
+        assert!(kv.reserve(0, 11));
+        for pos in 0..11 {
+            let x = pos as f32;
+            kv.write_row(0, 0, pos, &[x, x + 0.5], &[-x, -x - 0.5]);
+        }
+        kv.advance(0, 11);
+        // 5 lands mid-page: rows 0..5 span pages 0 and 1; page 2 is freed
+        kv.truncate_to(0, 5);
+        assert_eq!(kv.len(0), 5);
+        assert_eq!(kv.table(0).len(), 2);
+        assert_eq!(kv.pages_in_use(), 2);
+        // surviving rows are untouched — rollback is a page-table edit
+        let (k, _v) = kv.lanes(0);
+        for pos in 0..5 {
+            let page = kv.table(0)[pos / 4];
+            let off = (page * 4 + pos % 4) * 2;
+            assert_eq!(&k[off..off + 2], &[pos as f32, pos as f32 + 0.5]);
+        }
+        kv.release(&mut ws);
+    }
+
+    #[test]
+    fn truncate_to_exact_page_boundary() {
+        let mut ws = Workspace::new();
+        let mut kv = KvCache::paged(1, 2, 16, 4, 4, 1, &mut ws);
+        assert!(kv.reserve(0, 9));
+        kv.advance(0, 9);
+        assert_eq!(kv.pages_in_use(), 3);
+        // 8 = exactly two full pages: the third page must be freed
+        kv.truncate_to(0, 8);
+        assert_eq!((kv.len(0), kv.table(0).len()), (8, 2));
+        assert_eq!(kv.pages_in_use(), 2);
+        // idempotent at the same boundary
+        kv.truncate_to(0, 8);
+        assert_eq!((kv.len(0), kv.table(0).len()), (8, 2));
+        assert_eq!(kv.pages_hwm(), 3);
+        kv.release(&mut ws);
+    }
+
+    #[test]
+    #[should_panic(expected = "truncate_to")]
+    fn truncate_past_len_panics() {
+        let mut ws = Workspace::new();
+        let mut kv = KvCache::paged(1, 2, 8, 2, 4, 1, &mut ws);
+        assert!(kv.reserve(0, 2));
+        kv.advance(0, 2);
+        kv.truncate_to(0, 3);
+    }
+
+    #[test]
+    fn draft_pages_share_the_pool_and_release_on_end() {
+        let mut ws = Workspace::new();
+        // 8 one-row pages, 2 slots
+        let mut kv = KvCache::paged(1, 2, 8, 1, 8, 2, &mut ws);
+        assert!(kv.reserve(0, 4));
+        kv.advance(0, 4);
+        kv.begin_draft(0);
+        assert_eq!(kv.draft_base(0), 4);
+        assert!(kv.draft_reserve(0, 3));
+        assert_eq!(kv.pages_in_use(), 7, "draft pages come from the pool");
+        kv.draft_write_row(0, 0, 4, &[1.0, 2.0], &[3.0, 4.0]);
+        kv.draft_advance(0, 1);
+        assert_eq!(kv.draft_len(0), 1);
+        // the draft row landed in the draft table, packed from rel 0
+        let (k, _v) = kv.lanes(0);
+        let off = kv.draft_table(0)[0] * 2; // page_rows = 1, d = 2
+        assert_eq!(&k[off..off + 2], &[1.0, 2.0]);
+        // drafting cannot starve admission silently: reserve refuses
+        assert!(!kv.reserve(1, 2), "1 free page cannot back 2 rows");
+        kv.end_draft(0);
+        assert_eq!(kv.draft_len(0), 0);
+        assert_eq!(kv.pages_in_use(), 4, "draft pages returned to the pool");
+        assert!(kv.reserve(1, 2));
+        assert_eq!(kv.pages_hwm(), 7);
+        kv.release(&mut ws);
+    }
+
+    #[test]
+    fn reset_slot_frees_draft_pages_too() {
+        let mut ws = Workspace::new();
+        let mut kv = KvCache::paged(1, 2, 8, 2, 4, 1, &mut ws);
+        assert!(kv.reserve(0, 3));
+        kv.advance(0, 3);
+        kv.begin_draft(0);
+        assert!(kv.draft_reserve(0, 2));
+        assert_eq!(kv.pages_in_use(), 3);
+        kv.reset_slot(0);
+        assert_eq!((kv.len(0), kv.draft_len(0)), (0, 0));
+        assert_eq!(kv.pages_in_use(), 0);
+        // a fresh draft round starts clean
+        kv.begin_draft(0);
+        assert_eq!(kv.draft_base(0), 0);
+        kv.release(&mut ws);
     }
 }

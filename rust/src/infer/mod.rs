@@ -18,9 +18,12 @@
 //!   and paged decoding bit-identical to contiguous
 //!   (`tests/serve_parity.rs`).
 //! * **Drivers** — [`generate_cached`] / [`generate_uncached`] for single
-//!   requests (greedy or temperature/top-k sampling via [`GenerateConfig`],
-//!   deterministic under a fixed seed), [`BatchEngine`] ([`engine`]) for
-//!   continuous batching with page-pressure preemption, and [`Server`]
+//!   requests (greedy or temperature/top-k/top-p sampling via
+//!   [`GenerateConfig`], deterministic under a fixed seed),
+//!   [`BatchEngine`] ([`engine`]) for continuous batching with
+//!   page-pressure preemption — optionally **self-speculative** under a
+//!   [`SpecConfig`] ([`spec`]): truncated-layer drafting + one stacked
+//!   full verify pass, bit-identical to plain greedy — and [`Server`]
 //!   ([`serve`]) — the request front-end: bounded admission queue with
 //!   backpressure, logical-clock deadlines, cancellation, and streaming
 //!   token delivery via per-request [`TokenSink`]s. Requests may carry a
@@ -38,13 +41,15 @@
 pub mod engine;
 pub mod kv;
 pub mod serve;
+pub mod spec;
 pub mod tenant;
 
 pub use engine::{
     Admission, BatchEngine, Completion, EngineStats, FinishReason, Request, StepEvent,
 };
 pub use kv::KvCache;
-pub use serve::{Server, SubmitError, TokenSink};
+pub use serve::{Clock, Server, SubmitError, TokenSink, WallClock};
+pub use spec::SpecConfig;
 pub use tenant::AdapterRegistry;
 
 use crate::model::Model;
@@ -63,6 +68,12 @@ pub struct GenerateConfig {
     /// Restrict sampling to the `top_k` most likely tokens (0 = full
     /// vocabulary). Ignored under greedy decoding.
     pub top_k: usize,
+    /// Nucleus (top-p) cutoff: keep the smallest descending-probability
+    /// prefix whose cumulative mass reaches `top_p`, renormalize, sample.
+    /// `>= 1.0` disables the filter (the exact pre-nucleus code paths
+    /// run); composes with `top_k` (the nucleus is taken inside the top-k
+    /// candidate set); ignored under greedy decoding.
+    pub top_p: f32,
     /// Seed for the sampling RNG (`util::prng`): a fixed seed yields a
     /// fixed token stream.
     pub seed: u64,
@@ -75,6 +86,7 @@ impl Default for GenerateConfig {
             eos: None,
             temperature: 0.0,
             top_k: 0,
+            top_p: 1.0,
             seed: 0,
         }
     }
@@ -99,6 +111,17 @@ impl GenerateConfig {
             ..GenerateConfig::default()
         }
     }
+
+    /// Nucleus (top-p) sampling for up to `max_new` tokens.
+    pub fn nucleus(max_new: usize, temperature: f32, top_p: f32, seed: u64) -> GenerateConfig {
+        GenerateConfig {
+            max_new,
+            temperature,
+            top_p,
+            seed,
+            ..GenerateConfig::default()
+        }
+    }
 }
 
 /// Greedy argmax keeping the **last** maximal element on ties — the one
@@ -118,16 +141,60 @@ pub fn argmax(row: &[f32]) -> u32 {
 
 /// Sample one token from a logits row under `cfg`: greedy when
 /// `temperature <= 0`, else softmax over the `top_k` largest logits at the
-/// given temperature. Fully deterministic given the RNG state: candidates
-/// are walked in a fixed order (index order for the full vocabulary,
-/// descending-logit order under top-k), so a fixed seed yields a fixed
-/// stream.
+/// given temperature, optionally nucleus-filtered to the smallest
+/// descending-probability prefix reaching `top_p` cumulative mass. Fully
+/// deterministic given the RNG state: exactly one uniform is drawn per
+/// non-greedy call and candidates are walked in a fixed order (index
+/// order for the full vocabulary, descending-logit order under
+/// top-k/top-p), so a fixed seed yields a fixed stream. The degenerate
+/// settings take the degenerate paths: `temperature <= 0` is argmax
+/// (never touches the RNG), `top_p >= 1.0` runs the exact pre-nucleus
+/// branches, `top_k = 0` imposes no candidate cut.
 pub fn sample_token(logits: &[f32], cfg: &GenerateConfig, rng: &mut Rng) -> u32 {
     if cfg.temperature <= 0.0 {
         return argmax(logits);
     }
     let inv_t = 1.0 / cfg.temperature;
     let u = rng.uniform();
+    if cfg.top_p < 1.0 {
+        // nucleus (top-p): rank candidates by descending logit (ties by
+        // index — same comparator as top-k), pre-filtered to the top_k
+        // set when one is configured, keep the smallest prefix whose
+        // cumulative probability reaches top_p, renormalize, and walk the
+        // kept prefix in the same descending order.
+        let desc = |a: &usize, b: &usize| logits[*b].total_cmp(&logits[*a]).then(a.cmp(b));
+        let mut idx: Vec<usize> = (0..logits.len()).collect();
+        if cfg.top_k > 0 && cfg.top_k < logits.len() {
+            idx.select_nth_unstable_by(cfg.top_k - 1, desc);
+            idx.truncate(cfg.top_k);
+        }
+        idx.sort_unstable_by(desc);
+        let mx = logits[idx[0]];
+        let sum: f32 = idx.iter().map(|&j| ((logits[j] - mx) * inv_t).exp()).sum();
+        let inv = 1.0 / sum;
+        // ≥ 1 candidate always survives, so top_p <= 0 degenerates to
+        // the single most-likely token
+        let mut kept = idx.len();
+        let mut acc = 0.0f32;
+        for (r, &j) in idx.iter().enumerate() {
+            acc += ((logits[j] - mx) * inv_t).exp() * inv;
+            if acc >= cfg.top_p {
+                kept = r + 1;
+                break;
+            }
+        }
+        idx.truncate(kept);
+        let nsum: f32 = idx.iter().map(|&j| ((logits[j] - mx) * inv_t).exp()).sum();
+        let ninv = 1.0 / nsum;
+        let mut acc = 0.0f32;
+        for &j in &idx {
+            acc += ((logits[j] - mx) * inv_t).exp() * ninv;
+            if u < acc {
+                return j as u32;
+            }
+        }
+        return *idx.last().expect("nucleus keeps >= 1 candidate") as u32; // rounding slack
+    }
     if cfg.top_k == 0 || cfg.top_k >= logits.len() {
         // full vocabulary: no ranking needed — softmax and walk in index
         // order (any fixed order samples the same categorical)
@@ -263,6 +330,74 @@ mod tests {
             assert_eq!(ta, tb, "same RNG state must sample the same token");
             // top-3 of an increasing ramp = the last three indices
             assert!((13..16).contains(&(ta as usize)), "token {ta} outside top-k");
+        }
+    }
+
+    #[test]
+    fn greedy_ignores_top_p_and_never_touches_the_rng() {
+        let logits = [0.0f32, 3.0, 1.0];
+        let mut cfg = GenerateConfig::greedy(4);
+        cfg.top_p = 0.01;
+        let mut rng = Rng::new(5);
+        let before = rng.uniform();
+        let mut rng = Rng::new(5);
+        for _ in 0..8 {
+            assert_eq!(sample_token(&logits, &cfg, &mut rng), 1);
+        }
+        assert_eq!(rng.uniform(), before, "greedy must not consume the RNG");
+    }
+
+    #[test]
+    fn nucleus_keeps_the_smallest_sufficient_prefix() {
+        // probabilities at temperature 1: [8, 4, 2, 1] / 15
+        let logits: Vec<f32> = [8.0f32, 4.0, 2.0, 1.0].iter().map(|p| p.ln()).collect();
+        let mut rng = Rng::new(11);
+        // p(0) ≈ 0.533 alone reaches 0.5 — the nucleus is exactly {0}
+        let tight = GenerateConfig::nucleus(1, 1.0, 0.5, 0);
+        for _ in 0..64 {
+            assert_eq!(sample_token(&logits, &tight, &mut rng), 0);
+        }
+        // p(0) + p(1) ≈ 0.8 reaches 0.79 — the nucleus is exactly {0, 1}
+        let wide = GenerateConfig::nucleus(1, 1.0, 0.79, 0);
+        let mut seen = [0usize; 4];
+        for _ in 0..400 {
+            seen[sample_token(&logits, &wide, &mut rng) as usize] += 1;
+        }
+        assert_eq!(seen[2] + seen[3], 0, "outside the nucleus: {seen:?}");
+        assert!(seen[0] > 0 && seen[1] > 0, "whole nucleus reachable: {seen:?}");
+    }
+
+    #[test]
+    fn nucleus_is_seed_deterministic_and_composes_with_top_k() {
+        let logits: Vec<f32> = (0..12).map(|i| (i as f32) * 0.4).collect();
+        let mut cfg = GenerateConfig::nucleus(1, 0.9, 0.95, 0);
+        cfg.top_k = 3; // nucleus taken inside the top-3 candidate set
+        let mut a = Rng::new(21);
+        let mut b = Rng::new(21);
+        for _ in 0..64 {
+            let ta = sample_token(&logits, &cfg, &mut a);
+            let tb = sample_token(&logits, &cfg, &mut b);
+            assert_eq!(ta, tb, "same RNG state must sample the same token");
+            assert!((9..12).contains(&(ta as usize)), "token {ta} outside top-k");
+        }
+    }
+
+    #[test]
+    fn top_p_one_runs_the_pre_nucleus_paths() {
+        // the comparison below is only meaningful because top_p = 1.0 is
+        // the *disabled* branch: both configs must walk the identical
+        // full-vocab index-order path drawing the identical uniform
+        let logits: Vec<f32> = (0..8).map(|i| ((i * 7) % 5) as f32 * 0.6).collect();
+        let base = GenerateConfig::sampled(1, 1.3, 0, 0);
+        let mut explicit = base.clone();
+        explicit.top_p = 1.0;
+        let mut a = Rng::new(33);
+        let mut b = Rng::new(33);
+        for _ in 0..64 {
+            assert_eq!(
+                sample_token(&logits, &base, &mut a),
+                sample_token(&logits, &explicit, &mut b),
+            );
         }
     }
 

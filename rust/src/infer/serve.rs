@@ -14,11 +14,17 @@
 //! async runtime can wrap `pump` in a timer loop without changing any
 //! result.
 //!
-//! **Time is logical.** Deadlines are measured in pump rounds
-//! ([`Server::now`]), not wall-clock, so a scenario (submission schedule
-//! + deadlines + seed) replays identically on any machine — which is what
-//! lets `tests/serve_parity.rs` assert completions byte-for-byte and
+//! **Time is logical by default.** Deadlines are measured against
+//! [`Server::now`], which (absent a clock) advances by exactly one per
+//! pump round — so a scenario (submission schedule + deadlines + seed)
+//! replays identically on any machine, which is what lets
+//! `tests/serve_parity.rs` assert completions byte-for-byte and
 //! `benches/bench_serve.rs` replay a fixed workload against the gate.
+//! Deployments that want real-time deadlines plug a [`Clock`] in with
+//! [`Server::set_clock`] — [`WallClock`] reads elapsed milliseconds from
+//! [`std::time::Instant`] — and submit deadlines in that clock's unit.
+//! `now` is clamped monotone non-decreasing regardless of the source, so
+//! a misbehaving clock can revive nothing and expire nothing twice.
 //!
 //! **Arrival order does not change results.** A request's token stream
 //! depends only on its id, prompt and the engine seed (row-local decode +
@@ -44,6 +50,40 @@ pub trait TokenSink {
     /// The request finished (any [`FinishReason`], including expiry and
     /// cancellation).
     fn on_finish(&mut self, _completion: &Completion) {}
+}
+
+/// Pluggable time source for [`Server`] deadlines. `reading` returns the
+/// current absolute time in whatever unit the deployment's deadlines use;
+/// the server clamps successive readings monotone non-decreasing, so a
+/// clock that jumps backwards merely stalls `now` rather than reviving
+/// expired requests. Without a clock installed, time is *logical*: one
+/// tick per pump round.
+pub trait Clock {
+    /// Current absolute reading (same unit as submitted deadlines).
+    fn reading(&mut self) -> u64;
+}
+
+/// Wall-clock [`Clock`]: milliseconds elapsed since construction, read
+/// from [`std::time::Instant`] (monotonic by construction). Install with
+/// [`Server::set_clock`] and submit deadlines in absolute milliseconds.
+pub struct WallClock {
+    start: std::time::Instant,
+}
+
+impl WallClock {
+    /// A clock whose reading is `0` now and counts milliseconds upward.
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> WallClock {
+        WallClock {
+            start: std::time::Instant::now(),
+        }
+    }
+}
+
+impl Clock for WallClock {
+    fn reading(&mut self) -> u64 {
+        self.start.elapsed().as_millis() as u64
+    }
 }
 
 /// Why [`Server::submit`] refused a request.
@@ -84,6 +124,8 @@ pub struct Server {
     finished: Vec<Completion>,
     events: Vec<StepEvent>,
     now: u64,
+    /// Time source; `None` = logical time (one tick per pump).
+    clock: Option<Box<dyn Clock>>,
 }
 
 impl Server {
@@ -111,7 +153,9 @@ impl Server {
         )
     }
 
-    fn from_engine(engine: BatchEngine, queue_cap: usize) -> Server {
+    /// A server over an engine built elsewhere — e.g. a speculative one
+    /// ([`BatchEngine::with_spec`]) or one with pre-set tenant quotas.
+    pub fn from_engine(engine: BatchEngine, queue_cap: usize) -> Server {
         assert!(queue_cap > 0, "a server needs a non-empty admission queue");
         Server {
             engine,
@@ -122,7 +166,26 @@ impl Server {
             finished: Vec::new(),
             events: Vec::new(),
             now: 0,
+            clock: None,
         }
+    }
+
+    /// Install a time source for deadline expiry (e.g. [`WallClock`]).
+    /// From the next [`Server::pump`] on, `now` follows the clock's
+    /// readings (clamped monotone non-decreasing) instead of advancing by
+    /// one per round. Deadlines already submitted are reinterpreted in
+    /// the new clock's unit — install the clock before submitting.
+    pub fn set_clock(&mut self, clock: Box<dyn Clock>) {
+        self.clock = Some(clock);
+    }
+
+    /// Cap tenant `id` at `max_inflight` simultaneously admitted requests
+    /// (`None` removes the cap). Requests over quota are rejected at
+    /// admission with [`FinishReason::Quota`] — a distinct reason so
+    /// callers can tell policy from capacity ([`SubmitError::QueueFull`]
+    /// / engine `Busy`). Forwarded to [`BatchEngine::set_quota`].
+    pub fn set_quota(&mut self, id: u64, max_inflight: Option<usize>) {
+        self.engine.set_quota(id, max_inflight);
     }
 
     /// Submit a request with no deadline and no sink. Returns a ticket
@@ -171,7 +234,12 @@ impl Server {
     /// or in flight — `while server.pump(&model) {}` drains everything
     /// (see [`Server::run_until_idle`]).
     pub fn pump(&mut self, model: &Model) -> bool {
-        self.now += 1;
+        self.now = match self.clock.as_mut() {
+            // logical time: one tick per round, deterministic replay
+            None => self.now + 1,
+            // external time, clamped monotone so `now` never runs back
+            Some(clock) => self.now.max(clock.reading()),
+        };
         self.expire();
         // admit in submission order while the engine takes them; the
         // front blocks the line (no overtaking — keeps admission fair and
@@ -221,7 +289,8 @@ impl Server {
         std::mem::take(&mut self.finished)
     }
 
-    /// Current logical time (pump rounds so far).
+    /// Current time: pump rounds so far under logical time, or the last
+    /// clamped [`Clock`] reading when one is installed.
     pub fn now(&self) -> u64 {
         self.now
     }

@@ -1,0 +1,130 @@
+//! Self-speculative decoding: truncated-layer drafting with a batched
+//! full-model verify, **bit-identical** to plain greedy decode.
+//!
+//! One spec round per [`BatchEngine`](super::BatchEngine) scheduling step
+//! replaces the plain stacked decode:
+//!
+//! 1. **Draft.** Each request runs `draft_len` cheap forward passes
+//!    through only the first `draft_layers` blocks (the final LayerNorm +
+//!    lm head applied to the mid-layer representation), proposing one
+//!    token per pass. Draft K/V rows land in a dedicated per-slot draft
+//!    page table ([`KvCache::begin_draft`](super::KvCache::begin_draft))
+//!    drawn from the *same* shared page pool, so admission and preemption
+//!    accounting stay exact while drafting.
+//! 2. **Verify.** The pending token plus all `k` drafts run through the
+//!    **full** model as one stacked `k+1`-row pass
+//!    (`Model::verify_step_tenants`) writing the *main* page table. Row
+//!    `j`'s argmax is the full model's next token after the first `j`
+//!    drafts.
+//! 3. **Accept.** The longest prefix of drafts matching the full model's
+//!    argmaxes is accepted; the first non-matching verify row supplies
+//!    the next pending token (a "bonus" token when every draft matched).
+//!    Rejected rows are rolled back with
+//!    [`KvCache::truncate_to`](super::KvCache::truncate_to) — a pure
+//!    page-table truncation.
+//!
+//! **Why greedy acceptance is bitwise-lossless.** Every emitted token is
+//! an argmax of *full-model* verify logits, and the verify pass is the
+//! row-local [`Model::decode_step`](crate::model::Model::decode_step)
+//! arithmetic stacked `k+1` rows deep — bitwise equal to `k+1` sequential
+//! decode steps (`model::decode` docs). Draft tokens only *select which
+//! positions get verified this round*; a wrong draft costs a rolled-back
+//! row, never a changed token. Induction over rounds gives exact equality
+//! with plain cached greedy decode — pinned for all six methods ×
+//! {contiguous, paged} × thread widths by `tests/spec_parity.rs`.
+//!
+//! Sampled paths (`temperature > 0`) and tenant-mixed batches fall back
+//! to plain decode — speculative sampling needs a rejection-sampling
+//! acceptance rule to stay distribution-exact, which is follow-up work.
+
+/// Speculative-decode geometry: how deep the draft model is and how many
+/// tokens it proposes per verify.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpecConfig {
+    /// Blocks the draft pass runs (`1..=n_layers`). Smaller is cheaper
+    /// per draft but accepts fewer tokens per verify.
+    pub draft_layers: usize,
+    /// Draft tokens proposed per verify round (`>= 1`). A request with
+    /// less cache or budget headroom drafts fewer; `k = 0` rounds
+    /// degenerate to the plain single-row decode.
+    pub draft_len: usize,
+}
+
+impl SpecConfig {
+    /// Panics unless `draft_layers ∈ 1..=n_layers` and `draft_len >= 1`.
+    pub fn validate(&self, n_layers: usize) {
+        assert!(
+            self.draft_layers >= 1 && self.draft_layers <= n_layers,
+            "SpecConfig.draft_layers must be in 1..={n_layers}, got {}",
+            self.draft_layers
+        );
+        assert!(self.draft_len >= 1, "SpecConfig.draft_len must be >= 1");
+    }
+}
+
+/// Longest accepted draft prefix: the number of leading positions where
+/// the drafted token equals the full model's verified token for the same
+/// position. `verified[j]` is the full-model argmax *after* consuming
+/// drafts `0..j`, so draft `j` is acceptable iff it equals `verified[j]`
+/// and every earlier draft was accepted. `verified` has one extra row
+/// (the bonus position); only the first `drafts.len()` entries are
+/// consulted.
+pub fn accepted_prefix(drafts: &[u32], verified: &[u32]) -> usize {
+    debug_assert!(verified.len() > drafts.len(), "verify emits k+1 rows");
+    drafts
+        .iter()
+        .zip(verified)
+        .take_while(|(d, v)| d == v)
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accepted_prefix_is_the_longest_matching_prefix() {
+        assert_eq!(accepted_prefix(&[], &[9]), 0);
+        assert_eq!(accepted_prefix(&[7], &[7, 9]), 1);
+        assert_eq!(accepted_prefix(&[7], &[8, 9]), 0);
+        assert_eq!(accepted_prefix(&[1, 2, 3], &[1, 2, 3, 4]), 3);
+        assert_eq!(accepted_prefix(&[1, 9, 3], &[1, 2, 3, 4]), 1);
+        // a later match after a mismatch must NOT count: position 2's
+        // verify row was conditioned on the rejected draft
+        assert_eq!(accepted_prefix(&[9, 2, 3], &[1, 2, 3, 4]), 0);
+    }
+
+    #[test]
+    fn validate_accepts_the_full_range() {
+        SpecConfig {
+            draft_layers: 1,
+            draft_len: 1,
+        }
+        .validate(4);
+        SpecConfig {
+            draft_layers: 4,
+            draft_len: 8,
+        }
+        .validate(4);
+    }
+
+    #[test]
+    #[should_panic(expected = "draft_layers")]
+    fn validate_rejects_zero_depth() {
+        SpecConfig {
+            draft_layers: 0,
+            draft_len: 2,
+        }
+        .validate(4);
+    }
+
+    #[test]
+    #[should_panic(expected = "draft_len")]
+    fn validate_rejects_zero_len() {
+        SpecConfig {
+            draft_layers: 2,
+            draft_len: 0,
+        }
+        .validate(4);
+    }
+}

@@ -106,6 +106,77 @@ pub fn attend_cached(
     }
 }
 
+/// [`attend_cached`] with a **split** row lookup for speculative drafting:
+/// logical rows `0..base` resolve through the slot's main page table
+/// (`pages`) and rows `base..=pos` through its draft table
+/// (`draft_pages`, packed relative to `base`). The dot-product / softmax /
+/// context arithmetic is byte-for-byte the same as [`attend_cached`] —
+/// only row *location* differs — so draft attention over an accepted
+/// prefix reads exactly the values the full model wrote there.
+#[allow(clippy::too_many_arguments)]
+pub fn attend_cached_split(
+    q_row: &[f32],
+    k_lane: &[f32],
+    v_lane: &[f32],
+    pages: &[usize],
+    draft_pages: &[usize],
+    page_rows: usize,
+    base: usize,
+    pos: usize,
+    d: usize,
+    n_heads: usize,
+    scores: &mut Vec<f32>,
+    out_row: &mut [f32],
+) {
+    let locate = |j: usize| -> usize {
+        if j < base {
+            pages[j / page_rows] * page_rows + j % page_rows
+        } else {
+            let rel = j - base;
+            draft_pages[rel / page_rows] * page_rows + rel % page_rows
+        }
+    };
+    let dh = d / n_heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    out_row.fill(0.0);
+    scores.clear();
+    scores.resize(pos + 1, 0.0);
+    for h in 0..n_heads {
+        let off = h * dh;
+        let qh = &q_row[off..off + dh];
+        for (j, s) in scores.iter_mut().enumerate() {
+            let prow = locate(j);
+            let krow = &k_lane[prow * d + off..prow * d + off + dh];
+            let mut acc = 0.0f32;
+            for t in 0..dh {
+                acc += qh[t] * krow[t];
+            }
+            *s = acc * scale;
+        }
+        let mx = scores.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+        let mut sum = 0.0f32;
+        for s in scores.iter_mut() {
+            *s = (*s - mx).exp();
+            sum += *s;
+        }
+        let inv = 1.0 / sum;
+        for s in scores.iter_mut() {
+            *s *= inv;
+        }
+        let orow = &mut out_row[off..off + dh];
+        for (j, &pv) in scores.iter().enumerate() {
+            if pv == 0.0 {
+                continue;
+            }
+            let prow = locate(j);
+            let vrow = &v_lane[prow * d + off..prow * d + off + dh];
+            for t in 0..dh {
+                orow[t] += pv * vrow[t];
+            }
+        }
+    }
+}
+
 impl Block {
     /// Full-sequence inference forward: frozen state, no backward caches.
     pub(crate) fn forward_infer(
@@ -214,6 +285,56 @@ impl Block {
             });
             ws.put_f32_lanes("infer.attn.lanes", lanes);
         }
+        ws.recycle(q);
+        self.finish_infer(x, attn_out, ws)
+    }
+
+    /// Draft-cache-filling forward for speculative decoding: row `r` of
+    /// `x` belongs to `rows[r] = (slot, pos)` with `pos ≥
+    /// draft_base(slot)`. K/V land in the slot's **draft** page table
+    /// ([`KvCache::draft_write_row`]); attention reads the accepted prefix
+    /// through the main table and this round's draft rows through the
+    /// draft table ([`attend_cached_split`]). Attention runs serially —
+    /// draft batches are one row per spec-active slot at truncated depth,
+    /// and attention values are row-local and width-independent anyway.
+    pub(crate) fn forward_draft(
+        &self,
+        x: &Matrix,
+        layer: usize,
+        rows: &[(usize, usize)],
+        kv: &mut KvCache,
+        ws: &mut Workspace,
+    ) -> Matrix {
+        let (q, k, v) = self.project_qkv(x, &[], &[], ws);
+        for (r, &(slot, pos)) in rows.iter().enumerate() {
+            kv.draft_write_row(layer, slot, pos, k.row(r), v.row(r));
+        }
+        ws.recycle(k);
+        ws.recycle(v);
+        let d = x.cols();
+        let t = rows.len();
+        let mut attn_out = ws.take_matrix("blk.dec.attn", t, d);
+        let kvr: &KvCache = kv;
+        let page_rows = kvr.page_rows();
+        let (k_lane, v_lane) = kvr.lanes(layer);
+        let mut scores = ws.take_f32("infer.attn.scores", 0);
+        for (r, &(slot, pos)) in rows.iter().enumerate() {
+            attend_cached_split(
+                q.row(r),
+                k_lane,
+                v_lane,
+                kvr.table(slot),
+                kvr.draft_table(slot),
+                page_rows,
+                kvr.draft_base(slot),
+                pos,
+                d,
+                self.n_heads,
+                &mut scores,
+                attn_out.row_mut(r),
+            );
+        }
+        ws.put_f32("infer.attn.scores", scores);
         ws.recycle(q);
         self.finish_infer(x, attn_out, ws)
     }
@@ -426,16 +547,48 @@ impl Model {
         ws: &mut Workspace,
     ) -> Matrix {
         assert_eq!(tokens.len(), slots.len(), "one token per active slot");
+        let counts = vec![1usize; slots.len()];
+        self.verify_step_tenants(tokens, slots, &counts, tenants, kv, ws)
+    }
+
+    /// Stacked **multi-row** cached forward — the speculative-decode
+    /// verify pass, and the general form [`Model::decode_step_tenants`]
+    /// is the `counts = [1, 1, …]` case of. Slot `slots[i]` consumes the
+    /// next `counts[i]` tokens of `tokens` (slot-major flattening) at
+    /// consecutive cache positions `len(slot)..len(slot)+counts[i]`, all
+    /// rows run the quantized linears as ONE stacked batch, and row `r`'s
+    /// logits are the full model's next-token distribution after its
+    /// token. K/V for every row is written to the **main** table before
+    /// any attention read (same-pass rows at earlier positions are
+    /// visible), so verifying `k+1` stacked positions is bitwise equal to
+    /// `k+1` sequential [`Model::decode_step`] calls — the whole
+    /// speculative-decoding parity argument rests on this one row-local
+    /// pass (`tests/spec_parity.rs`).
+    pub fn verify_step_tenants(
+        &self,
+        tokens: &[u32],
+        slots: &[usize],
+        counts: &[usize],
+        tenants: &[Option<&TenantAdapters>],
+        kv: &mut KvCache,
+        ws: &mut Workspace,
+    ) -> Matrix {
+        assert_eq!(counts.len(), slots.len(), "one row count per active slot");
         assert!(
-            tenants.is_empty() || tenants.len() == tokens.len(),
+            tenants.is_empty() || tenants.len() == slots.len(),
             "one tenant entry per active slot"
         );
         let n = tokens.len();
-        assert!(n > 0, "decode_step needs at least one active slot");
+        assert!(n > 0, "decode needs at least one active row");
+        assert_eq!(
+            counts.iter().sum::<usize>(),
+            n,
+            "row counts must sum to the token count"
+        );
         // duplicate slots would stack two rows on one cache position and
         // silently corrupt the prefix — reject them even in release builds
-        // (n is the active batch, so the quadratic scan is noise next to
-        // the block forwards)
+        // (the quadratic scan over the active batch is noise next to the
+        // block forwards)
         assert!(
             slots.iter().all(|s| slots.iter().filter(|t| *t == s).count() == 1),
             "duplicate slot in decode batch"
@@ -443,15 +596,95 @@ impl Model {
         let d = self.cfg.d_model;
         let mut x = ws.take_matrix("infer.dec.x", n, d);
         let mut rows = Vec::with_capacity(n);
-        for (i, (&tok, &slot)) in tokens.iter().zip(slots).enumerate() {
-            let pos = kv.len(slot);
-            assert!(pos > 0, "decode_step on slot {slot} before prefill");
-            assert!(pos < self.cfg.max_seq, "slot {slot} ran out of positions");
+        let mut r = 0usize;
+        for (i, &slot) in slots.iter().enumerate() {
+            let c = counts[i];
+            assert!(c > 0, "decode needs at least one token per slot");
+            let pos0 = kv.len(slot);
+            assert!(pos0 > 0, "decode_step on slot {slot} before prefill");
             assert!(
-                kv.reserve(slot, 1),
+                pos0 + c <= self.cfg.max_seq,
+                "slot {slot} ran out of positions"
+            );
+            assert!(
+                kv.reserve(slot, c),
                 "page pool exhausted extending slot {slot} — the scheduler \
                  must reserve (and preempt on failure) before decode_step"
             );
+            for j in 0..c {
+                let pos = pos0 + j;
+                let row = x.row_mut(r);
+                let te = self.emb.tok.row(tokens[r] as usize);
+                let pe = self.emb.pos.row(pos);
+                for t in 0..d {
+                    row[t] = te[t] + pe[t];
+                }
+                rows.push((slot, pos));
+                r += 1;
+            }
+        }
+        // expand per-slot tenant stacks to per-row entries
+        let row_tenants: Vec<Option<&TenantAdapters>> = if tenants.is_empty() {
+            Vec::new()
+        } else {
+            let mut v = Vec::with_capacity(n);
+            for (i, &c) in counts.iter().enumerate() {
+                for _ in 0..c {
+                    v.push(tenants[i]);
+                }
+            }
+            v
+        };
+        for (l, blk) in self.blocks.iter().enumerate() {
+            let nx = blk.forward_cached(&x, l, &rows, &row_tenants, kv, ws);
+            ws.recycle(std::mem::replace(&mut x, nx));
+        }
+        for (i, &slot) in slots.iter().enumerate() {
+            kv.advance(slot, counts[i]);
+        }
+        let h = self.final_ln.forward_infer(&x, ws);
+        ws.recycle(x);
+        let mut logits = ws.take_matrix("infer.logits", n, self.lm_head.cols());
+        kernels::matmul_into(&h, &self.lm_head, &mut logits);
+        ws.recycle(h);
+        logits
+    }
+
+    /// One speculative **draft** step: feed `tokens[i]` to slot
+    /// `slots[i]` at its next draft position, running only the first
+    /// `draft_layers` blocks, then the final LayerNorm + lm head on the
+    /// mid-layer representation. K/V rows land in each slot's draft page
+    /// table; the main cache is untouched. Requires an open draft round
+    /// ([`KvCache::begin_draft`]) with the step's row already
+    /// [`KvCache::draft_reserve`]d. Returns `(slots.len() × vocab)` draft
+    /// logits — proposals only; acceptance is decided by the full-model
+    /// verify pass, so draft quality affects speed, never output.
+    pub fn draft_step(
+        &self,
+        tokens: &[u32],
+        slots: &[usize],
+        draft_layers: usize,
+        kv: &mut KvCache,
+        ws: &mut Workspace,
+    ) -> Matrix {
+        assert_eq!(tokens.len(), slots.len(), "one token per drafting slot");
+        let n = tokens.len();
+        assert!(n > 0, "draft_step needs at least one drafting slot");
+        assert!(
+            draft_layers >= 1 && draft_layers <= self.blocks.len(),
+            "draft_layers must be in 1..=n_layers"
+        );
+        assert!(
+            slots.iter().all(|s| slots.iter().filter(|t| *t == s).count() == 1),
+            "duplicate slot in draft batch"
+        );
+        let d = self.cfg.d_model;
+        let mut x = ws.take_matrix("infer.dec.x", n, d);
+        let mut rows = Vec::with_capacity(n);
+        for (i, (&tok, &slot)) in tokens.iter().zip(slots).enumerate() {
+            let pos = kv.len(slot) + kv.draft_len(slot);
+            assert!(pos > 0, "draft_step on slot {slot} before prefill");
+            assert!(pos < self.cfg.max_seq, "slot {slot} ran out of positions");
             let row = x.row_mut(i);
             let te = self.emb.tok.row(tok as usize);
             let pe = self.emb.pos.row(pos);
@@ -460,12 +693,12 @@ impl Model {
             }
             rows.push((slot, pos));
         }
-        for (l, blk) in self.blocks.iter().enumerate() {
-            let nx = blk.forward_cached(&x, l, &rows, tenants, kv, ws);
+        for (l, blk) in self.blocks.iter().take(draft_layers).enumerate() {
+            let nx = blk.forward_draft(&x, l, &rows, kv, ws);
             ws.recycle(std::mem::replace(&mut x, nx));
         }
         for &slot in slots {
-            kv.advance(slot, 1);
+            kv.draft_advance(slot, 1);
         }
         let h = self.final_ln.forward_infer(&x, ws);
         ws.recycle(x);

@@ -2,16 +2,21 @@
 //! deadline boundaries (expiry exactly at the admission tick), cancel of
 //! tickets that already finished, queue backpressure with
 //! retry-after-drain, the **exact** `StepEvent` sequences the engine
-//! emits, and the `EngineStats::mean_batch` zero-decode-steps regression
+//! emits, the `EngineStats::mean_batch` zero-decode-steps regression
 //! (a drained-before-decode server must report `0.0`, not NaN — NaN
-//! poisons `BENCH_serve.json` and the gate's JSON parse).
+//! poisons `BENCH_serve.json` and the gate's JSON parse), and the
+//! pluggable [`Clock`] seam: an external time source drives deadline
+//! expiry in its own unit, `now` is clamped monotone non-decreasing
+//! against misbehaving clocks, and the time source never changes a
+//! single token (logical time stays the default — every other test in
+//! this file runs without a clock installed).
 
 use std::cell::RefCell;
 use std::rc::Rc;
 
 use quaff::infer::{
-    self, Admission, BatchEngine, Completion, EngineStats, FinishReason, GenerateConfig, KvCache,
-    Request, Server, StepEvent, SubmitError, TokenSink,
+    self, Admission, BatchEngine, Clock, Completion, EngineStats, FinishReason, GenerateConfig,
+    KvCache, Request, Server, StepEvent, SubmitError, TokenSink, WallClock,
 };
 use quaff::methods::{MethodConfig, MethodKind};
 use quaff::model::{Model, ModelConfig};
@@ -280,6 +285,67 @@ fn cancel_of_finished_ticket_is_refused() {
     assert_eq!(srv.drain_finished()[0].reason, FinishReason::Cancelled);
     // the finished tickets delivered exactly once each: one sink log
     assert_eq!(log.borrow().len(), 3, "tok, tok, fin — and never again");
+}
+
+/// Scripted [`Clock`]: a preset sequence of readings, holding the last
+/// one once exhausted.
+struct ScriptClock(Vec<u64>, usize);
+
+impl Clock for ScriptClock {
+    fn reading(&mut self) -> u64 {
+        let i = self.1.min(self.0.len() - 1);
+        self.1 += 1;
+        self.0[i]
+    }
+}
+
+/// An installed clock drives deadline expiry by *readings* instead of
+/// pump rounds: the request decodes while the clock holds below the
+/// deadline, expires at the first reading past it keeping the exact
+/// prefix, and a clock that jumps backwards cannot rewind `now`.
+#[test]
+fn external_clock_expires_by_reading_and_stays_monotone() {
+    let m = quantized_model(0xC10C);
+    let full = reference_stream(&m, 9, 8);
+    let mut srv = Server::new(&m, 1, 2, GenerateConfig::greedy(8));
+    srv.set_clock(Box::new(ScriptClock(vec![10, 10, 10, 25, 20], 0)));
+    srv.submit_opts(req(9, 8), Some(20), None).expect("queue empty");
+    assert!(srv.pump(&m), "admitted and decoding");
+    assert_eq!(srv.now(), 10, "now follows the clock reading, not the round count");
+    assert!(srv.pump(&m));
+    assert!(srv.pump(&m));
+    assert_eq!(srv.now(), 10, "a holding clock holds now");
+    // three rounds below the deadline resolved exactly three tokens;
+    // reading 25 ≥ deadline 20 expires before any admission or decode
+    assert!(!srv.pump(&m), "deadline passed at reading 25");
+    assert_eq!(srv.now(), 25);
+    let done = srv.drain_finished();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].reason, FinishReason::Deadline);
+    assert_eq!(done[0].tokens[..], full[..3], "reading-driven expiry keeps the prefix");
+    // the next reading runs backwards (20 < 25): now must not rewind
+    srv.pump(&m);
+    assert_eq!(srv.now(), 25, "now is clamped monotone non-decreasing");
+}
+
+/// [`WallClock`] readings are monotone milliseconds, and installing a
+/// real time source never changes a single generated token.
+#[test]
+fn wall_clock_is_monotone_and_leaves_streams_alone() {
+    let mut c = WallClock::new();
+    let a = c.reading();
+    let b = c.reading();
+    assert!(b >= a, "Instant-backed readings are monotone");
+
+    let m = quantized_model(0x3A11);
+    let full = reference_stream(&m, 1, 6);
+    let mut srv = Server::new(&m, 1, 2, GenerateConfig::greedy(6));
+    srv.set_clock(Box::new(WallClock::new()));
+    srv.submit(req(1, 6)).expect("queue empty");
+    srv.run_until_idle(&m);
+    let done = srv.drain_finished();
+    assert_eq!(done[0].reason, FinishReason::Length);
+    assert_eq!(done[0].tokens, full, "the time source must never change tokens");
 }
 
 /// `QueueFull` backpressure: the refused request is retried after a pump

@@ -1,0 +1,360 @@
+//! Speculative-decoding parity suite: self-speculative greedy decode must
+//! be **bit-identical** to plain cached greedy decode.
+//!
+//! * spec ≡ plain: every method's batched greedy token streams (and
+//!   finish reasons) are identical with speculation on, for contiguous
+//!   and paged caches, at draft depths from one block to the full stack
+//!   and draft lengths beyond the remaining budget;
+//! * full-depth drafts always accept: when `draft_layers == n_layers` the
+//!   draft pass *is* the full model, so verification must accept every
+//!   draft (acceptance rate exactly 1.0) — a closed-loop check that the
+//!   draft cache path reproduces the main cache path bitwise;
+//! * preemption round-trips: a pool sized to force parking mid-run still
+//!   reproduces the plain streams byte-for-byte, with spec rounds active;
+//! * EOS mid-round stops exactly where plain greedy stops;
+//! * fallbacks: sampled configs and tenant-mixed batches decode plain
+//!   (zero spec rounds) with unchanged streams;
+//! * counters are consistent with emitted tokens, step by step.
+//!
+//! One `#[test]` body because it flips the process-global active thread
+//! width (`pool::set_active_threads`) between legs, like
+//! `decode_parity.rs` and `serve_parity.rs`.
+
+use quaff::infer::{
+    Admission, BatchEngine, FinishReason, GenerateConfig, Request, SpecConfig, StepEvent,
+};
+use quaff::methods::{MethodConfig, MethodKind};
+use quaff::model::{Model, ModelConfig};
+use quaff::outlier::{BudgetAllocator, BudgetPolicy, OutlierDetector};
+use quaff::peft::{LoraAdapter, PeftKind, TenantAdapters};
+use quaff::tensor::{pool, Matrix};
+use quaff::util::prng::Rng;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 64,
+        max_seq: 64,
+        ln_eps: 1e-5,
+        inject_outliers: true,
+        lora_rank: 4,
+        lora_alpha: 8.0,
+        lora_dropout: 0.0,
+        n_virtual: 4,
+    }
+}
+
+/// Calibrate + convert a fresh tiny model to `kind`.
+fn quantized_model(kind: MethodKind, peft: Option<PeftKind>, seed: u64) -> Model {
+    let mut m = Model::new(tiny_cfg(), seed);
+    if let Some(p) = peft {
+        m.attach_peft(p);
+    }
+    let mut r = Rng::new(seed ^ 0xC0FFEE);
+    m.start_calibration();
+    for _ in 0..3 {
+        let toks: Vec<Vec<u32>> = (0..2)
+            .map(|_| (0..10).map(|_| r.below(64) as u32).collect())
+            .collect();
+        let _ = m.forward(&toks, false);
+    }
+    let calib = m.finish_calibration();
+    let alloc = BudgetAllocator::new(BudgetPolicy::PaperNonUniform);
+    let det = OutlierDetector::new(20.0);
+    let _ = m.apply_method(kind, &calib, &alloc, &MethodConfig::default(), &det);
+    m
+}
+
+/// A per-block q/v LoRA stack with nonzero `B` (delta ≢ 0), so the
+/// tenant-fallback leg actually exercises adapted decoding.
+fn lora_stack(cfg: &ModelConfig, seed: u64) -> TenantAdapters {
+    let mut rng = Rng::new(seed);
+    let rank = cfg.lora_rank.min(cfg.d_model / 2).max(1);
+    let d = cfg.d_model;
+    let mut t = TenantAdapters::empty(cfg.n_layers);
+    for b in &mut t.blocks {
+        let mut q = LoraAdapter::new(d, d, rank, cfg.lora_alpha, 0.0, &mut rng);
+        q.b.value = Matrix::randn(rank, d, &mut rng, 0.2);
+        let mut v = LoraAdapter::new(d, d, rank, cfg.lora_alpha, 0.0, &mut rng);
+        v.b.value = Matrix::randn(rank, d, &mut rng, 0.2);
+        b.q = Some(q);
+        b.v = Some(v);
+    }
+    t
+}
+
+fn mixed_requests(n: usize, seed: u64, max_new: usize) -> Vec<Request> {
+    let mut r = Rng::new(seed);
+    (0..n)
+        .map(|i| Request {
+            id: i as u64,
+            prompt: (0..3 + 2 * i).map(|_| r.below(64) as u32).collect(),
+            max_new,
+            tenant: None,
+        })
+        .collect()
+}
+
+/// Sanity bounds every spec engine must satisfy after a run.
+fn check_counters(eng: &BatchEngine, spec: SpecConfig, label: &str) {
+    let s = &eng.stats;
+    assert!(s.spec_rounds > 0, "{label}: speculation never engaged");
+    assert!(
+        s.spec_drafted <= s.spec_rounds * spec.draft_len as u64,
+        "{label}: drafted more than draft_len per round"
+    );
+    assert!(
+        s.spec_accepted <= s.spec_drafted,
+        "{label}: accepted more drafts than proposed"
+    );
+    let rate = s.acceptance_rate();
+    assert!((0.0..=1.0).contains(&rate), "{label}: acceptance rate {rate}");
+    assert_eq!(eng.pages().0, 0, "{label}: pages leaked after the run");
+}
+
+/// Spec engines (contiguous and paged, several geometries) must
+/// reproduce the plain engine's greedy streams exactly.
+fn check_spec_matches_plain(m: &Model, spec: SpecConfig, label: &str) {
+    let requests = mixed_requests(4, 0x57EC, 10);
+    let cfg = GenerateConfig::greedy(10);
+    let mut plain = BatchEngine::new(m, 3, cfg.clone());
+    let base = plain.run_requests(m, &requests);
+    assert_eq!(plain.stats.spec_rounds, 0, "plain engine must never draft");
+
+    let mut spec_eng = BatchEngine::with_spec(m, 3, cfg.clone(), spec);
+    let got = spec_eng.run_requests(m, &requests);
+    for (a, b) in base.iter().zip(&got) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "{label}: contiguous spec diverged");
+        assert_eq!(a.reason, b.reason, "{label}: contiguous spec reason");
+    }
+    check_counters(&spec_eng, spec, label);
+
+    // ample paged pool: same streams, spec active
+    let mut paged = BatchEngine::with_paging_spec(m, 3, 8, 24, cfg.clone(), spec);
+    let got = paged.run_requests(m, &requests);
+    for (a, b) in base.iter().zip(&got) {
+        assert_eq!(a.tokens, b.tokens, "{label}: paged spec diverged");
+        assert_eq!(a.reason, b.reason, "{label}: paged spec reason");
+    }
+    check_counters(&paged, spec, &format!("{label} paged"));
+}
+
+/// With `draft_layers == n_layers` the draft pass runs the full model, so
+/// every draft must verify: acceptance is exactly 100% — which also pins
+/// the draft page table + split attention path bitwise against the main
+/// path (any divergence would reject a draft).
+fn check_full_depth_always_accepts(m: &Model) {
+    let spec = SpecConfig {
+        draft_layers: tiny_cfg().n_layers,
+        draft_len: 4,
+    };
+    let requests = mixed_requests(3, 0xF0D, 12);
+    let cfg = GenerateConfig::greedy(12);
+    let mut eng = BatchEngine::with_spec(m, 3, cfg, spec);
+    let _ = eng.run_requests(m, &requests);
+    assert!(eng.stats.spec_drafted > 0, "full-depth run never drafted");
+    assert_eq!(
+        eng.stats.spec_accepted, eng.stats.spec_drafted,
+        "a full-depth draft disagreed with its own verification — the \
+         draft cache path is not bitwise-equal to the main path"
+    );
+}
+
+/// A pool sized to force parking mid-run must still reproduce the plain
+/// ample-pool streams byte-for-byte while speculation is active.
+fn check_spec_preemption_round_trip(m: &Model, spec: SpecConfig) {
+    let mut r = Rng::new(0xE71C);
+    let requests: Vec<Request> = (0..6)
+        .map(|i| Request {
+            id: i as u64,
+            prompt: (0..10).map(|_| r.below(64) as u32).collect(),
+            max_new: 20,
+            tenant: None,
+        })
+        .collect();
+    let cfg = GenerateConfig::greedy(20);
+    let mut ample = BatchEngine::new(m, 4, cfg.clone());
+    let base = ample.run_requests(m, &requests);
+    // 16 pages × 4 rows = 64 pooled rows for 4 slots peaking at 30 main
+    // rows each plus draft pages — eviction is unavoidable
+    let mut tight = BatchEngine::with_paging_spec(m, 4, 4, 16, cfg, spec);
+    let got = tight.run_requests(m, &requests);
+    assert!(tight.stats.preemptions > 0, "pool was sized to force preemption");
+    assert!(tight.stats.resumes > 0, "parked requests must be readmitted");
+    assert!(tight.stats.spec_rounds > 0, "speculation must survive pressure");
+    for (a, b) in base.iter().zip(&got) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "preempted spec request {} diverged", a.id);
+        assert_eq!(a.reason, b.reason);
+    }
+    assert_eq!(tight.pages().0, 0, "pages leaked after the run");
+    assert!(tight.pages_hwm() <= 16);
+}
+
+/// An EOS that lands inside a speculative round must stop the stream at
+/// exactly the plain-greedy prefix, with the same reason.
+fn check_eos_mid_round(m: &Model, spec: SpecConfig) {
+    let req = Request {
+        id: 0,
+        prompt: vec![9, 8, 7, 6],
+        max_new: 16,
+        tenant: None,
+    };
+    let cfg = GenerateConfig::greedy(16);
+    let mut plain = BatchEngine::new(m, 1, cfg.clone());
+    let full = plain.run_requests(m, std::slice::from_ref(&req));
+    let stream = &full[0].tokens;
+    // pick the first token that does not repeat an earlier one, so the
+    // stream stops exactly there
+    let j = (1..stream.len())
+        .find(|&j| !stream[..j].contains(&stream[j]))
+        .unwrap_or(0);
+    let mut ecfg = cfg;
+    ecfg.eos = Some(stream[j]);
+    let mut plain = BatchEngine::new(m, 1, ecfg.clone());
+    let base = plain.run_requests(m, std::slice::from_ref(&req));
+    assert_eq!(base[0].reason, FinishReason::Eos);
+    let mut spec_eng = BatchEngine::with_spec(m, 1, ecfg, spec);
+    let got = spec_eng.run_requests(m, std::slice::from_ref(&req));
+    assert_eq!(got[0].reason, FinishReason::Eos, "EOS lost under speculation");
+    assert_eq!(got[0].tokens, base[0].tokens, "EOS prefix diverged");
+}
+
+/// Sampled configs and tenant-tagged batches must fall back to plain
+/// decode (zero spec rounds) with unchanged streams.
+fn check_fallbacks(m: &Model, spec: SpecConfig) {
+    let requests = mixed_requests(3, 0xFA11, 8);
+    let cfg = GenerateConfig::sampled(8, 0.9, 8, 17);
+    let mut plain = BatchEngine::new(m, 3, cfg.clone());
+    let base = plain.run_requests(m, &requests);
+    let mut spec_eng = BatchEngine::with_spec(m, 3, cfg, spec);
+    let got = spec_eng.run_requests(m, &requests);
+    assert_eq!(spec_eng.stats.spec_rounds, 0, "sampled configs must not draft");
+    for (a, b) in base.iter().zip(&got) {
+        assert_eq!(a.tokens, b.tokens, "sampled fallback diverged");
+    }
+
+    // a non-empty tenant registry disables speculation for the batch
+    let tm = quantized_model(MethodKind::Quaff, None, 0x7E4A);
+    let t_requests: Vec<Request> = mixed_requests(2, 0x7E4B, 6)
+        .into_iter()
+        .map(|mut r| {
+            r.tenant = Some(1);
+            r
+        })
+        .collect();
+    let gcfg = GenerateConfig::greedy(6);
+    let mut plain = BatchEngine::new(&tm, 2, gcfg.clone());
+    plain.registry_mut().install(1, lora_stack(&tiny_cfg(), 0xA11CE));
+    let base = plain.run_requests(&tm, &t_requests);
+    let mut spec_eng = BatchEngine::with_spec(&tm, 2, gcfg, spec);
+    spec_eng.registry_mut().install(1, lora_stack(&tiny_cfg(), 0xA11CE));
+    let got = spec_eng.run_requests(&tm, &t_requests);
+    assert_eq!(spec_eng.stats.spec_rounds, 0, "tenant batches must not draft");
+    for (a, b) in base.iter().zip(&got) {
+        assert_eq!(a.tokens, b.tokens, "tenant fallback diverged");
+        assert_eq!(a.reason, b.reason);
+    }
+}
+
+/// Drive a spec engine step by step and check the acceptance counters
+/// against the actual event stream: a step emits at most one resolved
+/// pending token plus that round's accepted drafts, and the totals add
+/// up to the full stream.
+fn check_counters_match_events(m: &Model, spec: SpecConfig) {
+    let req = Request {
+        id: 0,
+        prompt: vec![3, 1, 4, 1, 5],
+        max_new: 18,
+        tenant: None,
+    };
+    let cfg = GenerateConfig::greedy(18);
+    let mut eng = BatchEngine::with_spec(m, 1, cfg, spec);
+    match eng.try_admit(m, &req) {
+        Admission::Admitted(_) => {}
+        other => panic!("admission failed: {other:?}"),
+    }
+    let mut events = Vec::new();
+    let mut emitted = 0u64;
+    loop {
+        let before = eng.stats;
+        let more = eng.step(m, &mut events);
+        let after = eng.stats;
+        let step_tokens = events
+            .drain(..)
+            .filter(|e| matches!(e, StepEvent::Token { .. }))
+            .count() as u64;
+        emitted += step_tokens;
+        let accepted = after.spec_accepted - before.spec_accepted;
+        let rounds = after.spec_rounds - before.spec_rounds;
+        assert!(rounds <= 1, "one spec round per step");
+        assert!(
+            step_tokens <= 1 + accepted,
+            "a step emitted {step_tokens} tokens but accepted only {accepted} drafts"
+        );
+        if !more {
+            break;
+        }
+    }
+    assert_eq!(emitted, 18, "event stream does not cover the completion");
+    assert!(eng.stats.spec_rounds > 0);
+}
+
+#[test]
+fn speculative_decode_is_bitwise_plain_greedy() {
+    // 8-wide pool so the 4-wide legs genuinely shard even on serial CI legs
+    pool::init(pool::ThreadConfig { threads: 8 });
+    let shallow = SpecConfig {
+        draft_layers: 1,
+        draft_len: 3,
+    };
+    for width in [1usize, 4] {
+        pool::set_active_threads(width);
+        for kind in MethodKind::ALL {
+            let m = quantized_model(kind, None, 0x5BEC + width as u64);
+            check_spec_matches_plain(&m, shallow, &format!("{kind:?} @ {width}t"));
+        }
+    }
+
+    pool::set_active_threads(1);
+    let m = quantized_model(MethodKind::Quaff, None, 0xBEEF);
+    // draft lengths past the remaining budget exercise the per-request
+    // clamp; depth n/2 is the bench default
+    for spec in [
+        SpecConfig {
+            draft_layers: 1,
+            draft_len: 8,
+        },
+        SpecConfig {
+            draft_layers: 1,
+            draft_len: 16,
+        },
+    ] {
+        check_spec_matches_plain(&m, spec, &format!("clamp k={}", spec.draft_len));
+    }
+    check_full_depth_always_accepts(&m);
+    check_spec_preemption_round_trip(&m, shallow);
+    check_eos_mid_round(&m, shallow);
+    check_fallbacks(&m, shallow);
+    check_counters_match_events(&m, shallow);
+
+    // cross-width: a spec engine's completions are identical at 1 and 4
+    // threads (sharded verify is bit-deterministic)
+    let requests = mixed_requests(4, 0xC405, 9);
+    let cfg = GenerateConfig::greedy(9);
+    pool::set_active_threads(1);
+    let mut e1 = BatchEngine::with_paging_spec(&m, 3, 4, 24, cfg.clone(), shallow);
+    let t1 = e1.run_requests(&m, &requests);
+    pool::set_active_threads(4);
+    let mut e4 = BatchEngine::with_paging_spec(&m, 3, 4, 24, cfg, shallow);
+    let t4 = e4.run_requests(&m, &requests);
+    for (a, b) in t1.iter().zip(&t4) {
+        assert_eq!(a.tokens, b.tokens, "spec decode diverged between 1 and 4 threads");
+    }
+    // leave the default width behind for any later in-process user
+    pool::set_active_threads(pool::global().threads());
+}

@@ -11,6 +11,10 @@
 //!   tenant's stack mid-stream never perturbs co-batched tenants;
 //!   removing a tenant cancels its in-flight requests (keeping the exact
 //!   prefix) and rejects new ones, again without touching neighbours;
+//! * admission quotas: a tenant at its `max_inflight` cap is refused with
+//!   the distinct [`FinishReason::Quota`] reason, co-batched neighbours'
+//!   streams stay bitwise identical to solo, and the quota releases as
+//!   the tenant's requests finish;
 //! * interleaved ≡ sequential: the coordinator's round-robin
 //!   [`Scheduler`] — including forced preemption-to-checkpoint at
 //!   `max_resident: 1` — produces byte-identical checkpoint archives and
@@ -328,6 +332,80 @@ fn check_removal_cancels_and_rejects(m: &mut Model) {
     assert_eq!(engine.pages().0, 0, "pages leaked after removal");
 }
 
+/// Per-tenant admission quotas: a tenant at `max_inflight` is refused
+/// with the distinct [`FinishReason::Quota`] reason (never `Busy` — the
+/// caller must not retry), the co-batched neighbours' streams stay
+/// bitwise identical to their solo references, and the quota releases as
+/// the tenant's requests finish.
+fn check_quota_isolation(m: &mut Model) {
+    let gcfg = GenerateConfig::greedy(8);
+    let mcfg = m.cfg.clone();
+    let pa = vec![5u32, 9, 13, 2];
+    let pb = vec![7u32, 3, 1];
+    let pc = vec![2u32, 12, 4, 4, 1];
+    let solo_a = solo_stream(m, 1, &pa, &gcfg);
+    let solo_b = solo_stream(m, 2, &pb, &gcfg);
+    let solo_c = solo_stream(m, 3, &pc, &gcfg);
+
+    let mut engine = BatchEngine::new(m, 3, gcfg.clone());
+    install_roster(&mut engine, &mcfg);
+    engine.set_quota(2, Some(1));
+    let ra = Request { id: 1, prompt: pa, max_new: 8, tenant: Some(1) };
+    let rb = Request { id: 2, prompt: pb.clone(), max_new: 8, tenant: Some(2) };
+    let rc = Request { id: 3, prompt: pc, max_new: 8, tenant: Some(3) };
+    assert!(matches!(engine.try_admit(m, &ra), Admission::Admitted(_)));
+    assert!(matches!(engine.try_admit(m, &rb), Admission::Admitted(_)));
+    assert_eq!(engine.tenant_inflight(2), 1);
+    // tenant 2 is at its cap: refused with the distinct Quota reason,
+    // even though slots and pages are still available
+    let rb2 = Request { id: 4, prompt: vec![1, 2, 3], max_new: 4, tenant: Some(2) };
+    match engine.try_admit(m, &rb2) {
+        Admission::Rejected(c) => {
+            assert_eq!(c.reason, FinishReason::Quota, "quota must not masquerade");
+            assert!(c.tokens.is_empty());
+        }
+        other => panic!("over-quota must be Rejected(Quota), got {other:?}"),
+    }
+    // unquota'd tenants admit right past the refusal
+    assert!(matches!(engine.try_admit(m, &rc), Admission::Admitted(_)));
+    let mut events = Vec::new();
+    while engine.step(m, &mut events) {}
+    let mut done = finished(&events);
+    done.sort_by_key(|c| c.id);
+    assert_eq!(done.len(), 3);
+    assert_eq!(done[0].tokens, solo_a, "quota refusal perturbed tenant 1");
+    assert_eq!(
+        done[1].tokens, solo_b,
+        "quota refusal perturbed tenant 2's admitted request"
+    );
+    assert_eq!(done[2].tokens, solo_c, "quota refusal perturbed tenant 3");
+    // the quota releases with the request: tenant 2 admits again...
+    assert_eq!(engine.tenant_inflight(2), 0);
+    assert!(matches!(engine.try_admit(m, &rb2), Admission::Admitted(_)));
+    // ...and clearing the quota lifts the cap entirely
+    engine.set_quota(2, None);
+    let rb3 = Request { id: 5, prompt: pb, max_new: 4, tenant: Some(2) };
+    assert!(matches!(engine.try_admit(m, &rb3), Admission::Admitted(_)));
+    while engine.step(m, &mut events) {}
+
+    // server passthrough: the front-end forwards quotas to its engine and
+    // delivers the Quota completion through the normal finished channel
+    let mut srv = Server::new(m, 2, 4, gcfg);
+    install_roster(srv.engine_mut(), &mcfg);
+    srv.set_quota(2, Some(1));
+    let q1 = Request { id: 10, prompt: vec![6, 2, 8], max_new: 4, tenant: Some(2) };
+    let q2 = Request { id: 11, prompt: vec![6, 2, 9], max_new: 4, tenant: Some(2) };
+    srv.submit(q1).expect("queue empty");
+    srv.submit(q2).expect("within cap");
+    srv.run_until_idle(m);
+    let mut done = srv.drain_finished();
+    done.sort_by_key(|c| c.id);
+    assert_eq!(done.len(), 2);
+    assert_eq!(done[0].reason, FinishReason::Length, "first submit runs to cap");
+    assert_eq!(done[1].reason, FinishReason::Quota, "second submit is quota'd out");
+    assert!(done[1].tokens.is_empty());
+}
+
 fn sched_server_cfg() -> ServerConfig {
     let mut cfg = ServerConfig::default();
     cfg.preset = "opt-tiny".to_string();
@@ -533,6 +611,7 @@ fn tenants_are_bitwise_isolated() {
     let mut m = quantized_model(MethodKind::Quaff, 0x7E99);
     check_hot_swap_isolation(&mut m);
     check_removal_cancels_and_rejects(&mut m);
+    check_quota_isolation(&mut m);
     check_scheduler_matches_sequential();
     check_train_while_serve();
     pool::set_active_threads(pool::global().threads());

@@ -5,7 +5,7 @@
 //! `BENCH_infer.json` from `bench_infer`, `BENCH_qgemm.json` from
 //! `bench_qgemm`, `BENCH_serve.json` from `bench_serve`,
 //! `BENCH_tenants.json` from `bench_tenants`, `BENCH_ossh.json` from
-//! `bench_ossh`) against the
+//! `bench_ossh`, `BENCH_spec.json` from `bench_spec`) against the
 //! committed `BENCH_baseline.json` and fails (exit 1) when any mean
 //! regresses beyond the tolerance, or when a baselined kernel disappeared
 //! from the fresh records. Always writes `BENCH_gate_diff.json` so CI can
@@ -256,6 +256,7 @@ fn parse_args() -> Result<Args, String> {
             "BENCH_serve.json".to_string(),
             "BENCH_tenants.json".to_string(),
             "BENCH_ossh.json".to_string(),
+            "BENCH_spec.json".to_string(),
         ],
         tol: None,
         diff: "BENCH_gate_diff.json".to_string(),
